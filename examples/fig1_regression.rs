@@ -1,0 +1,77 @@
+//! Fig 1 — linear regression, normalized testing loss vs sampling rate
+//! (paper §4.1), clean and outlier-contaminated variants.
+//!
+//! Paper setup: y = 2x + 1 + U(-5,5), 1000 train / 10000 test; outlier
+//! variant adds U(-20,20) to 20 training points. Reported value is the
+//! test loss normalized by the full-training (ratio=1) loss, so 1.0 ==
+//! "as good as training on everything".
+//!
+//! Run:  cargo run --release --example fig1_regression [-- --full]
+//! `--full` uses the paper's 10000-point test set and a denser ratio
+//! grid; the default is a fast profile with the same shape.
+
+use anyhow::Result;
+
+use obftf::config::TrainConfig;
+use obftf::experiments::{dump_rows, full_training_loss, render_table, sweep};
+use obftf::runtime::Manifest;
+use obftf::sampling::Method;
+
+fn main() -> Result<()> {
+    let full = std::env::args().any(|a| a == "--full");
+    let manifest = Manifest::load(&obftf::artifacts_dir())?;
+
+    let methods = [
+        Method::Uniform,
+        Method::SelectiveBackprop,
+        Method::MinK,
+        Method::Obftf,
+        Method::ObftfProx,
+    ];
+    // paper: clean sweep ≤ 0.15, outlier sweep 0.01..0.5
+    let (clean_ratios, outlier_ratios): (Vec<f64>, Vec<f64>) = if full {
+        (
+            vec![0.01, 0.02, 0.05, 0.10, 0.15],
+            vec![0.01, 0.05, 0.10, 0.15, 0.25, 0.35, 0.50],
+        )
+    } else {
+        (vec![0.02, 0.05, 0.10, 0.15], vec![0.05, 0.15, 0.30, 0.50])
+    };
+
+    for (dataset, ratios) in [
+        ("regression", &clean_ratios),
+        ("regression_outliers", &outlier_ratios),
+    ] {
+        let base = TrainConfig {
+            model: "linreg".into(),
+            dataset: Some(dataset.into()),
+            epochs: if full { 60 } else { 30 },
+            lr: 0.01,
+            seed: 1,
+            eval_every: 0,
+            n_test: Some(if full { 10000 } else { 2000 }),
+            ..Default::default()
+        };
+        eprintln!("fig1 [{dataset}]: full-training baseline...");
+        let baseline = full_training_loss(&base, &manifest)?;
+        eprintln!("fig1 [{dataset}]: baseline loss {baseline:.4}; sweeping {} configs", methods.len() * ratios.len());
+        let cells = sweep(&base, &methods, ratios, &manifest, |c| {
+            eprintln!(
+                "  {}/{:.2} -> loss {:.4}",
+                c.method.as_str(),
+                c.ratio,
+                c.report.final_eval.loss
+            );
+        })?;
+        let title = format!(
+            "Fig 1 [{}]: normalized test loss (1.0 = full training, baseline {:.4})",
+            dataset, baseline
+        );
+        println!(
+            "{}",
+            render_table(&title, &cells, ratios, |r| r.final_eval.loss / baseline)
+        );
+        print!("{}", dump_rows(&format!("fig1:{dataset}"), &cells));
+    }
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Table 3 — ImageNet(-proxy) val accuracy: {uniform, max-prob, ours} ×
+//! ratios {0.10, 0.15, 0.20, 0.25, 0.30, 0.45} × {ResNet50-role CNN,
+//! MobileNetV2-role CNN-lite} (paper §4.3).
+//!
+//! The claim to reproduce: OBFTF ≥ uniform everywhere (margin largest at
+//! small ratios, shrinking toward 0.45), and max-prob *collapses* — the
+//! high-loss tail (label noise) monopolizes its backward budget.
+//!
+//! Run:  cargo run --release --example table3_imagenet [-- --full]
+
+use anyhow::Result;
+
+use obftf::config::TrainConfig;
+use obftf::experiments::{dump_rows, render_table, sweep};
+use obftf::runtime::Manifest;
+use obftf::sampling::Method;
+
+fn main() -> Result<()> {
+    let full = std::env::args().any(|a| a == "--full");
+    let manifest = Manifest::load(&obftf::artifacts_dir())?;
+
+    // "Ours" in the paper is Eq. 6; we report both the solver-backed
+    // variant (obftf) and the appendix's production approximation
+    // (obftf_prox) — the latter is what scales to the paper's batch 4096.
+    let methods = [Method::Uniform, Method::MaxProb, Method::Obftf, Method::ObftfProx];
+    let ratios: Vec<f64> = if full {
+        vec![0.10, 0.15, 0.20, 0.25, 0.30, 0.45]
+    } else {
+        vec![0.10, 0.20, 0.45]
+    };
+
+    for model in ["cnn", "cnn_lite"] {
+        let base = TrainConfig {
+            model: model.into(),
+            dataset: Some("imagenet_proxy".into()),
+            epochs: if full { 8 } else { 4 },
+            // per-model lr found by the ratio=1 calibration sweep
+            // (EXPERIMENTS.md tab3 notes): the lite model needs a hotter
+            // schedule, matching the paper's per-model training setups
+            lr: if model == "cnn" { 0.1 } else { 0.3 },
+            seed: 3,
+            eval_every: 0,
+            n_train: Some(if full { 16384 } else { 4096 }),
+            n_test: Some(if full { 4096 } else { 1024 }),
+            // ImageNet's label noise / hard-tail is what breaks max-prob
+            label_noise: 0.05,
+            ..Default::default()
+        };
+        eprintln!(
+            "table3 [{model}]: sweeping {} configs ({} epochs each)...",
+            methods.len() * ratios.len(),
+            base.epochs
+        );
+        let cells = sweep(&base, &methods, &ratios, &manifest, |c| {
+            eprintln!(
+                "  {}/{:.2} -> acc {:.4}",
+                c.method.as_str(),
+                c.ratio,
+                c.report.final_eval.metric
+            );
+        })?;
+        let role = if model == "cnn" { "ResNet50-role" } else { "MobileNetV2-role" };
+        println!(
+            "{}",
+            render_table(
+                &format!("Table 3 [{model} = {role}]: val accuracy"),
+                &cells,
+                &ratios,
+                |r| r.final_eval.metric
+            )
+        );
+        print!("{}", dump_rows(&format!("table3:{model}"), &cells));
+    }
+    Ok(())
+}

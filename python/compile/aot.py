@@ -1,0 +1,167 @@
+"""AOT lowering driver: jax/pallas (L2/L1) → HLO text + manifest.json.
+
+This is the ONLY place python touches the pipeline; it runs at build time
+(``make artifacts``) and never again. The interchange format is HLO
+*text*, not a serialized ``HloModuleProto``: jax ≥ 0.5 emits protos with
+64-bit instruction ids which the xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs, per model × executable × flavour:
+
+    artifacts/{model}_{exe}.{flavour}.hlo.txt
+
+plus ``artifacts/manifest.json`` describing shapes/dtypes/param layout so
+the rust runtime can validate and marshal buffers without guessing.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--models mlp,cnn]
+                          [--flavours pallas,jnp] [--report]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels.matmul import vmem_bytes
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_one(mdl: M.ModelDef, exe: str, flavour: str, batch: int = M.BATCH) -> str:
+    fn = M.build(mdl, exe, flavour)
+    args = M.example_args(mdl, exe, batch=batch)
+    lowered = jax.jit(fn).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def _dtype_tag(dt) -> str:
+    import numpy as np
+
+    return {np.dtype("float32"): "f32", np.dtype("int32"): "i32"}[np.dtype(dt)]
+
+
+def manifest_entry(mdl: M.ModelDef, flavours) -> dict:
+    return {
+        "task": mdl.task,
+        "x_shape": list(mdl.x_shape),
+        "num_classes": mdl.num_classes,
+        "y_dtype": "i32" if mdl.task == "classification" else "f32",
+        "params": [
+            {"name": p.name, "shape": list(p.shape)} for p in mdl.params
+        ],
+        "executables": {
+            **{
+                f"{exe}:{fl}": f"{mdl.name}_{exe}.{fl}.hlo.txt"
+                for exe in M.EXECUTABLES
+                for fl in flavours
+            },
+            **{
+                f"train_step_b{bb}:{fl}": f"{mdl.name}_train_step_b{bb}.{fl}.hlo.txt"
+                for bb in M.GATHER_SIZES
+                for fl in flavours
+            },
+        },
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default=",".join(M.MODELS))
+    ap.add_argument("--flavours", default="pallas,jnp")
+    ap.add_argument(
+        "--report",
+        action="store_true",
+        help="print the L1 VMEM/MXU block report (DESIGN.md §Perf) and exit",
+    )
+    args = ap.parse_args()
+
+    models = [M.MODELS[m] for m in args.models.split(",") if m]
+    flavours = [f for f in args.flavours.split(",") if f]
+    for fl in flavours:
+        if fl not in ("pallas", "jnp"):
+            raise SystemExit(f"unknown flavour {fl!r}")
+
+    if args.report:
+        print("L1 block report (per-grid-step VMEM, f32):")
+        for name, dims in (
+            ("mlp L1 784x256", (M.BATCH, 256, 784)),
+            ("mlp L2 256x256", (M.BATCH, 256, 256)),
+            ("mlp head 256x10", (M.BATCH, 10, 256)),
+            ("cnn head 128x100", (M.BATCH, 100, 128)),
+        ):
+            m, n, k = dims
+            print(f"  {name:<20} vmem={vmem_bytes(m, n, k) / 1024:.1f} KiB")
+        return 0
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"version": 1, "batch": M.BATCH, "models": {}}
+    t_all = time.time()
+    for mdl in models:
+        manifest["models"][mdl.name] = manifest_entry(mdl, flavours)
+        for exe in M.EXECUTABLES:
+            lowered_flavours = flavours if exe != "init" else flavours[:1]
+            for fl in flavours:
+                fname = f"{mdl.name}_{exe}.{fl}.hlo.txt"
+                path = os.path.join(args.out_dir, fname)
+                if fl not in lowered_flavours:
+                    # init is flavour-independent (no kernels on its path);
+                    # reuse the first flavour's lowering for the others.
+                    src = os.path.join(
+                        args.out_dir, f"{mdl.name}_{exe}.{lowered_flavours[0]}.hlo.txt"
+                    )
+                    with open(src) as f:
+                        text = f.read()
+                    with open(path, "w") as f:
+                        f.write(text)
+                    continue
+                t0 = time.time()
+                text = lower_one(mdl, exe, fl)
+                with open(path, "w") as f:
+                    f.write(text)
+                print(
+                    f"lowered {fname:<40} {len(text) / 1024:8.1f} KiB"
+                    f"  {time.time() - t0:5.1f}s",
+                    file=sys.stderr,
+                )
+        # sub-batch backward variants (see model.GATHER_SIZES)
+        for bb in M.GATHER_SIZES:
+            for fl in flavours:
+                fname = f"{mdl.name}_train_step_b{bb}.{fl}.hlo.txt"
+                path = os.path.join(args.out_dir, fname)
+                text = lower_one(mdl, "train_step", fl, batch=bb)
+                with open(path, "w") as f:
+                    f.write(text)
+                print(
+                    f"lowered {fname:<40} {len(text) / 1024:8.1f} KiB",
+                    file=sys.stderr,
+                )
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(
+        f"wrote {mpath} ({len(models)} models × {len(M.EXECUTABLES)} exes ×"
+        f" {len(flavours)} flavours) in {time.time() - t_all:.1f}s",
+        file=sys.stderr,
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,11 @@
+"""L1: Pallas kernels for the OBFTF compute hot-spots.
+
+Modules:
+  matmul — tiled matmul / fused matmul+bias+activation (MXU-shaped blocks)
+  losses — per-example softmax-xent and MSE, forward + hand-written backward
+  update — elementwise SGD parameter update
+  ref    — pure-jnp oracles for all of the above (test ground truth and
+           the `jnp` artifact flavour)
+"""
+
+from . import losses, matmul, ref, update  # noqa: F401

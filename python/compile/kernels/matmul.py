@@ -1,0 +1,140 @@
+"""L1 Pallas kernels: tiled matmul and fused matmul+bias+activation.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid is (M/bm, N/bn,
+K/bk); each grid step moves one (bm, bk) block of ``x`` and one (bk, bn)
+block of ``w`` from HBM into VMEM (expressed by the BlockSpec index maps)
+and feeds the MXU with an f32 ``dot``. The output block is accumulated in
+VMEM across the K axis of the grid and the epilogue (bias + activation)
+runs once, on the last K step, while the block is still resident.
+
+Kernels are lowered with ``interpret=True`` — the CPU PJRT plugin cannot
+execute Mosaic custom-calls — so wallclock here is *not* a TPU proxy; the
+optimization target is BlockSpec structure (VMEM footprint, MXU-aligned
+tiles), estimated in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-aligned default tile edge. Actual block edges are the largest
+# divisor of each dim that is <= this (shapes in this repo are chosen so
+# divisors are reasonable: 128, 256, 784 -> 112, 100, 10, ...).
+_TILE = 128
+
+
+def _block(dim: int, target: int = _TILE) -> int:
+    """Largest divisor of ``dim`` that is ``<= target``.
+
+    Degenerate dims (primes just above ``target``) would tile into 1-wide
+    blocks; fall back to a single whole-axis block instead, which keeps
+    the grid small and the VMEM footprint bounded (dim ≤ 8·target).
+    """
+    if dim <= 0:
+        raise ValueError(f"dim must be positive, got {dim}")
+    best = 1
+    for cand in range(min(dim, target), 0, -1):
+        if dim % cand == 0:
+            best = cand
+            break
+    if best < 8 and dim > best and dim <= 8 * target:
+        return dim
+    return best
+
+
+def vmem_bytes(m: int, n: int, k: int, itemsize: int = 4) -> int:
+    """Per-grid-step VMEM footprint of the matmul kernel for given dims.
+
+    Used by the perf pass (and ``aot.py --report``) to check blocks fit
+    the ~16 MiB/core VMEM budget with headroom for double buffering.
+    """
+    bm, bn, bk = _block(m), _block(n), _block(k)
+    return (bm * bk + bk * bn + bm * bn) * itemsize
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, nk: int):
+    """Accumulating matmul body; zero the block on the first K step."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+
+def _matmul_bias_act_kernel(x_ref, w_ref, b_ref, o_ref, *, nk: int, act: str):
+    """Accumulating matmul with a fused bias+activation epilogue."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _epilogue():
+        out = o_ref[...] + b_ref[...]
+        if act == "relu":
+            out = jnp.maximum(out, 0.0)
+        o_ref[...] = out
+
+
+def matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Tiled Pallas ``x @ w`` for 2-D f32 operands.
+
+    Shapes: ``x [m, k]``, ``w [k, n]`` → ``[m, n]``.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2:
+        raise ValueError(f"matmul shape mismatch: {x.shape} @ {w.shape}")
+    bm, bn, bk = _block(m), _block(n), _block(k)
+    nk = k // bk
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk),
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+def matmul_bias_act(
+    x: jax.Array, w: jax.Array, b: jax.Array, act: str = "none"
+) -> jax.Array:
+    """Fused tiled Pallas ``act(x @ w + b)``.
+
+    Shapes: ``x [m, k]``, ``w [k, n]``, ``b [n]`` → ``[m, n]``.
+    ``act`` is ``"none"`` or ``"relu"`` (static).
+    """
+    if act not in ("none", "relu"):
+        raise ValueError(f"unknown activation {act!r}")
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2 or b.shape != (n,):
+        raise ValueError(f"shape mismatch: {x.shape} @ {w.shape} + {b.shape}")
+    bm, bn, bk = _block(m), _block(n), _block(k)
+    nk = k // bk
+    # Bias enters as [1, n] so its BlockSpec can tile the n axis alongside
+    # the output block.
+    b2 = b.reshape(1, n)
+    return pl.pallas_call(
+        functools.partial(_matmul_bias_act_kernel, nk=nk, act=act),
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+            pl.BlockSpec((1, bn), lambda i, j, l: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w, b2)

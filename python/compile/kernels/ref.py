@@ -1,0 +1,103 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the ground truth the L1 kernels are tested against (pytest +
+hypothesis sweeps in ``python/tests/test_kernels.py``). They are also the
+building blocks of the ``jnp`` artifact flavour emitted by ``aot.py`` —
+the ablation axis DESIGN.md §4 calls ``abl-kernel``.
+
+Everything here is shape-polymorphic, differentiable jnp code with no
+Pallas dependency.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Dense / matmul
+# ---------------------------------------------------------------------------
+
+
+def matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Plain ``x @ w`` in f32 accumulation."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def matmul_bias_act(
+    x: jax.Array, w: jax.Array, b: jax.Array, act: str = "none"
+) -> jax.Array:
+    """Fused ``act(x @ w + b)``; ``act`` is ``"none"`` or ``"relu"``."""
+    out = jnp.dot(x, w, preferred_element_type=jnp.float32) + b[None, :]
+    if act == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif act != "none":
+        raise ValueError(f"unknown activation {act!r}")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Per-example losses
+# ---------------------------------------------------------------------------
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Per-example softmax cross-entropy.
+
+    Args:
+      logits: ``[n, c]`` f32.
+      labels: ``[n]`` i32 class indices in ``[0, c)``.
+
+    Returns:
+      ``[n]`` f32 losses ``logsumexp(logits_i) - logits_i[labels_i]``.
+    """
+    m = jnp.max(logits, axis=1, keepdims=True)
+    lse = m[:, 0] + jnp.log(jnp.sum(jnp.exp(logits - m), axis=1))
+    picked = jnp.take_along_axis(logits, labels[:, None].astype(jnp.int32), axis=1)[:, 0]
+    return lse - picked
+
+
+def softmax_xent_grad(
+    logits: jax.Array, labels: jax.Array, dloss: jax.Array
+) -> jax.Array:
+    """VJP of :func:`softmax_xent` w.r.t. ``logits``.
+
+    ``dlogits = (softmax(logits) - onehot(labels)) * dloss[:, None]``.
+    """
+    p = jax.nn.softmax(logits, axis=1)
+    onehot = jax.nn.one_hot(labels, logits.shape[1], dtype=logits.dtype)
+    return (p - onehot) * dloss[:, None]
+
+
+def mse(pred: jax.Array, target: jax.Array) -> jax.Array:
+    """Per-example squared error; ``pred``/``target`` are ``[n]`` f32."""
+    d = pred - target
+    return d * d
+
+
+def mse_grad(pred: jax.Array, target: jax.Array, dloss: jax.Array) -> jax.Array:
+    """VJP of :func:`mse` w.r.t. ``pred``: ``2 (pred - target) * dloss``."""
+    return 2.0 * (pred - target) * dloss
+
+
+# ---------------------------------------------------------------------------
+# Optimizer update
+# ---------------------------------------------------------------------------
+
+
+def sgd_update(w: jax.Array, g: jax.Array, lr: jax.Array) -> jax.Array:
+    """``w - lr * g`` (lr is a scalar or ``[1]`` array)."""
+    return w - jnp.reshape(lr, ()) * g
+
+
+# ---------------------------------------------------------------------------
+# Masked reductions (used by the masked train step)
+# ---------------------------------------------------------------------------
+
+
+def masked_mean(values: jax.Array, mask: jax.Array) -> jax.Array:
+    """``sum(values * mask) / max(sum(mask), 1)`` — the "one backward"
+    objective: the mean loss over the *selected* subset only."""
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(values * mask) / denom

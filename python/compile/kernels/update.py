@@ -1,0 +1,62 @@
+"""L1 Pallas kernel: SGD parameter update ``w - lr * g``.
+
+Works for parameters of any rank: the L2 wrapper flattens, pads to a
+block multiple, runs the 1-D tiled kernel, and slices back. The learning
+rate rides along as a ``[1]`` array whose BlockSpec pins every grid step
+to the same block (broadcast).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 1-D tile for the elementwise update; large enough that grid overhead is
+# negligible, small enough that padding waste is bounded.
+_UPDATE_BLOCK = 512
+
+
+def _sgd_kernel(w_ref, g_ref, lr_ref, o_ref):
+    o_ref[...] = w_ref[...] - lr_ref[0] * g_ref[...]
+
+
+def _sgd_flat(w: jax.Array, g: jax.Array, lr: jax.Array) -> jax.Array:
+    (n,) = w.shape
+    assert n % _UPDATE_BLOCK == 0
+    return pl.pallas_call(
+        _sgd_kernel,
+        grid=(n // _UPDATE_BLOCK,),
+        in_specs=[
+            pl.BlockSpec((_UPDATE_BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((_UPDATE_BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((_UPDATE_BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(w, g, lr)
+
+
+def sgd_update(w: jax.Array, g: jax.Array, lr: jax.Array) -> jax.Array:
+    """``w - lr * g`` for an arbitrary-shape f32 parameter tensor.
+
+    Args:
+      w: parameter tensor, any shape.
+      g: gradient, same shape as ``w``.
+      lr: scalar or ``[1]`` f32 learning rate.
+    """
+    if w.shape != g.shape:
+        raise ValueError(f"shape mismatch: w {w.shape} vs g {g.shape}")
+    lr1 = jnp.reshape(lr, (1,)).astype(jnp.float32)
+    flat = w.reshape(-1)
+    gflat = g.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % _UPDATE_BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+        gflat = jnp.pad(gflat, (0, pad))
+    out = _sgd_flat(flat, gflat, lr1)
+    if pad:
+        out = out[:n]
+    return out.reshape(w.shape)

@@ -1,0 +1,158 @@
+"""L2 building blocks: differentiable layers over the L1 Pallas kernels.
+
+``pallas_call`` is not differentiable by default, so every Pallas-backed
+op used under ``jax.grad`` is wrapped in a ``custom_vjp`` whose backward
+pass is *also* built from Pallas kernels (the matmul transposes reuse the
+same tiled kernel; the loss backwards are hand-written kernels in
+``kernels.losses``). This mirrors the paper's production setting where
+both the "ten forward" and the "one backward" run the same optimized
+kernels.
+
+Each public layer takes a ``flavour`` argument:
+  * ``"pallas"`` — L1 kernels (interpret-mode on CPU, MXU-shaped on TPU);
+  * ``"jnp"``    — the pure-jnp oracle path (XLA-native fusion), the
+    ablation/perf baseline (DESIGN.md `abl-kernel`).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import losses as klosses
+from .kernels import matmul as kmatmul
+from .kernels import ref as kref
+from .kernels import update as kupdate
+
+FLAVOURS = ("pallas", "jnp")
+
+
+def _check_flavour(flavour: str) -> None:
+    if flavour not in FLAVOURS:
+        raise ValueError(f"unknown flavour {flavour!r}; expected one of {FLAVOURS}")
+
+
+# ---------------------------------------------------------------------------
+# Dense layer: act(x @ w + b), pallas fwd + pallas bwd via custom_vjp
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _dense_pallas(x, w, b, act):
+    return kmatmul.matmul_bias_act(x, w, b, act)
+
+
+def _dense_pallas_fwd(x, w, b, act):
+    out = kmatmul.matmul_bias_act(x, w, b, act)
+    # Residuals: inputs plus the post-activation output (the relu mask is
+    # recovered from out > 0, avoiding a pre-activation save).
+    return out, (x, w, out)
+
+
+def _dense_pallas_bwd(act, res, dy):
+    x, w, out = res
+    if act == "relu":
+        dy = dy * (out > 0.0).astype(dy.dtype)
+    dx = kmatmul.matmul(dy, w.T)
+    dw = kmatmul.matmul(x.T, dy)
+    db = jnp.sum(dy, axis=0)
+    return dx, dw, db
+
+
+_dense_pallas.defvjp(_dense_pallas_fwd, _dense_pallas_bwd)
+
+
+def dense(x, w, b, act: str = "none", *, flavour: str = "pallas"):
+    """Differentiable fused dense layer ``act(x @ w + b)``."""
+    _check_flavour(flavour)
+    if flavour == "pallas":
+        return _dense_pallas(x, w, b, act)
+    return kref.matmul_bias_act(x, w, b, act)
+
+
+# ---------------------------------------------------------------------------
+# Per-example softmax cross-entropy
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def _xent_pallas(logits, labels):
+    return klosses.softmax_xent(logits, labels)
+
+
+def _xent_pallas_fwd(logits, labels):
+    return klosses.softmax_xent(logits, labels), (logits, labels)
+
+
+def _xent_pallas_bwd(res, dloss):
+    logits, labels = res
+    dlogits = klosses.softmax_xent_grad(logits, labels, dloss)
+    return dlogits, None
+
+
+_xent_pallas.defvjp(_xent_pallas_fwd, _xent_pallas_bwd)
+
+
+def softmax_xent(logits, labels, *, flavour: str = "pallas"):
+    """Differentiable per-example cross-entropy ``[n, c]`` × ``[n]`` → ``[n]``."""
+    _check_flavour(flavour)
+    if flavour == "pallas":
+        return _xent_pallas(logits, labels)
+    return kref.softmax_xent(logits, labels)
+
+
+# ---------------------------------------------------------------------------
+# Per-example squared error
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def _mse_pallas(pred, target):
+    return klosses.mse(pred, target)
+
+
+def _mse_pallas_fwd(pred, target):
+    return klosses.mse(pred, target), (pred, target)
+
+
+def _mse_pallas_bwd(res, dloss):
+    pred, target = res
+    return klosses.mse_grad(pred, target, dloss), None
+
+
+_mse_pallas.defvjp(_mse_pallas_fwd, _mse_pallas_bwd)
+
+
+def mse(pred, target, *, flavour: str = "pallas"):
+    """Differentiable per-example squared error ``[n]`` × ``[n]`` → ``[n]``."""
+    _check_flavour(flavour)
+    if flavour == "pallas":
+        return _mse_pallas(pred, target)
+    return kref.mse(pred, target)
+
+
+# ---------------------------------------------------------------------------
+# SGD update (no grad needed — applied outside the autodiff region)
+# ---------------------------------------------------------------------------
+
+
+def sgd_update(w, g, lr, *, flavour: str = "pallas"):
+    """``w - lr * g`` for one parameter tensor."""
+    _check_flavour(flavour)
+    if flavour == "pallas":
+        return kupdate.sgd_update(w, g, lr)
+    return kref.sgd_update(w, g, lr)
+
+
+def sgd_update_tree(params, grads, lr, *, flavour: str = "pallas"):
+    """Apply :func:`sgd_update` across a parameter pytree."""
+    return jax.tree_util.tree_map(
+        lambda w, g: sgd_update(w, g, lr, flavour=flavour), params, grads
+    )
+
+
+def masked_mean(values, mask):
+    """Mean over the selected subset: ``Σ mask·v / max(Σ mask, 1)``."""
+    return kref.masked_mean(values, mask)

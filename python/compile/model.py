@@ -1,0 +1,349 @@
+"""L2: the paper's models and their AOT-exported executables.
+
+Four models (DESIGN.md §4):
+
+  * ``linreg``   — 1-feature linear regression (paper §4.1, Fig 1);
+  * ``mlp``      — 784-256-256-10 MLP (paper §4.2, Fig 2 / MNIST);
+  * ``cnn``      — conv stack on 16×16×3, 100 classes (Table 3,
+                   ResNet50-role proxy);
+  * ``cnn_lite`` — smaller conv stack (Table 3, MobileNetV2-role proxy).
+
+Every model exports six executables (lowered by ``aot.py``), each in two
+kernel flavours (``pallas`` / ``jnp``):
+
+  init(seed)                          -> (params...,)
+  fwd_loss(params..., x, y)           -> (loss[n],)            # ten forward
+  train_step(params..., x, y, m, lr)  -> (params'..., sel_loss) # one backward
+  grads(params..., x, y, m)           -> (grads..., sel_loss)
+  apply(params..., grads..., lr)      -> (params'...,)
+  eval(params..., x, y, m)            -> (sum_loss, sum_metric, count)
+
+``m`` is the 0/1 f32 selection mask produced by the rust L3 sampler; the
+backward objective is the *masked mean* loss — exactly the paper's
+Algorithm 1 line 8 ("train the model using the selected data").
+Convolutions stay at the L2 (lax) level; all dense layers, per-example
+losses and SGD updates go through the L1 Pallas kernels (see
+``compile.layers``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+
+# Global training/eval batch size baked into the artifacts. The rust
+# loader pads the final partial batch and masks it out in eval.
+BATCH = 128
+
+
+# ---------------------------------------------------------------------------
+# Model definitions
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    name: str
+    shape: tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelDef:
+    """A model: shapes, parameter inventory, and the forward computation."""
+
+    name: str
+    task: str  # "classification" | "regression"
+    x_shape: tuple  # without the batch dim
+    num_classes: int  # 0 for regression
+    params: tuple  # tuple[ParamSpec, ...]
+    predict: Callable  # (params_tuple, x, flavour) -> logits [n,c] | pred [n]
+
+    @property
+    def y_dtype(self):
+        return jnp.int32 if self.task == "classification" else jnp.float32
+
+    @property
+    def n_params(self) -> int:
+        return len(self.params)
+
+    def per_example_loss(self, params, x, y, flavour):
+        out = self.predict(params, x, flavour)
+        if self.task == "classification":
+            return layers.softmax_xent(out, y, flavour=flavour)
+        return layers.mse(out, y, flavour=flavour)
+
+    def metric_terms(self, params, x, y, flavour):
+        """Per-example (loss, metric): metric is 1.0-if-correct for
+        classification, squared error for regression."""
+        out = self.predict(params, x, flavour)
+        if self.task == "classification":
+            loss = layers.softmax_xent(out, y, flavour=flavour)
+            correct = (jnp.argmax(out, axis=1).astype(jnp.int32) == y).astype(
+                jnp.float32
+            )
+            return loss, correct
+        loss = layers.mse(out, y, flavour=flavour)
+        return loss, loss
+
+    def init_params(self, key):
+        out = []
+        for spec in self.params:
+            key, sub = jax.random.split(key)
+            if len(spec.shape) == 1:  # biases
+                out.append(jnp.zeros(spec.shape, jnp.float32))
+            else:
+                # He initialization (relu nets); fan_in = prod(shape[:-1]).
+                fan_in = 1
+                for d in spec.shape[:-1]:
+                    fan_in *= d
+                scale = jnp.sqrt(2.0 / fan_in)
+                out.append(scale * jax.random.normal(sub, spec.shape, jnp.float32))
+        return tuple(out)
+
+
+# --- linreg -----------------------------------------------------------------
+
+LINREG_D = 1  # paper §4.1: y = 2x + 1 + noise
+
+
+def _linreg_predict(params, x, flavour):
+    w, b = params
+    return layers.dense(x, w, b, "none", flavour=flavour)[:, 0]
+
+
+LINREG = ModelDef(
+    name="linreg",
+    task="regression",
+    x_shape=(LINREG_D,),
+    num_classes=0,
+    params=(ParamSpec("w", (LINREG_D, 1)), ParamSpec("b", (1,))),
+    predict=_linreg_predict,
+)
+
+
+# --- mlp (MNIST-role) --------------------------------------------------------
+
+MLP_DIMS = (784, 256, 256, 10)  # paper §4.2 training settings
+
+
+def _mlp_predict(params, x, flavour):
+    w1, b1, w2, b2, w3, b3 = params
+    h = layers.dense(x, w1, b1, "relu", flavour=flavour)
+    h = layers.dense(h, w2, b2, "relu", flavour=flavour)
+    return layers.dense(h, w3, b3, "none", flavour=flavour)
+
+
+MLP = ModelDef(
+    name="mlp",
+    task="classification",
+    x_shape=(MLP_DIMS[0],),
+    num_classes=MLP_DIMS[-1],
+    params=(
+        ParamSpec("w1", (MLP_DIMS[0], MLP_DIMS[1])),
+        ParamSpec("b1", (MLP_DIMS[1],)),
+        ParamSpec("w2", (MLP_DIMS[1], MLP_DIMS[2])),
+        ParamSpec("b2", (MLP_DIMS[2],)),
+        ParamSpec("w3", (MLP_DIMS[2], MLP_DIMS[3])),
+        ParamSpec("b3", (MLP_DIMS[3],)),
+    ),
+    predict=_mlp_predict,
+)
+
+
+# --- cnn / cnn_lite (ImageNet-role) ------------------------------------------
+
+IMG_HW = 16
+IMG_C = 3
+IMG_CLASSES = 100
+
+
+def _conv(x, k, stride):
+    return jax.lax.conv_general_dilated(
+        x,
+        k,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _cnn_predict_generic(params, x, flavour, convs: Sequence[int]):
+    """Conv stack (stride schedule in ``convs``) + GAP + pallas dense head."""
+    i = 0
+    h = x
+    for stride in convs:
+        k = params[i]
+        bias = params[i + 1]
+        h = jnp.maximum(_conv(h, k, stride) + bias[None, None, None, :], 0.0)
+        i += 2
+    h = jnp.mean(h, axis=(1, 2))  # global average pool -> [n, c_last]
+    w, b = params[i], params[i + 1]
+    return layers.dense(h, w, b, "none", flavour=flavour)
+
+
+def _make_cnn(name: str, widths: Sequence[int], strides: Sequence[int]) -> ModelDef:
+    specs = []
+    cin = IMG_C
+    for li, (cout, _s) in enumerate(zip(widths, strides)):
+        specs.append(ParamSpec(f"k{li+1}", (3, 3, cin, cout)))
+        specs.append(ParamSpec(f"cb{li+1}", (cout,)))
+        cin = cout
+    specs.append(ParamSpec("wh", (cin, IMG_CLASSES)))
+    specs.append(ParamSpec("bh", (IMG_CLASSES,)))
+    predict = functools.partial(_cnn_predict_generic, convs=tuple(strides))
+
+    def _predict(params, x, flavour, _p=predict):
+        return _p(params, x, flavour)
+
+    return ModelDef(
+        name=name,
+        task="classification",
+        x_shape=(IMG_HW, IMG_HW, IMG_C),
+        num_classes=IMG_CLASSES,
+        params=tuple(specs),
+        predict=_predict,
+    )
+
+
+CNN = _make_cnn("cnn", widths=(32, 64, 128), strides=(1, 2, 2))
+CNN_LITE = _make_cnn("cnn_lite", widths=(16, 32), strides=(2, 2))
+
+MODELS = {m.name: m for m in (LINREG, MLP, CNN, CNN_LITE)}
+
+
+# ---------------------------------------------------------------------------
+# Executable builders — flat-argument closures suitable for jit + lowering
+# ---------------------------------------------------------------------------
+
+
+def build_init(model: ModelDef):
+    def init(seed):
+        key = jax.random.PRNGKey(seed)
+        return model.init_params(key)
+
+    return init
+
+
+def build_fwd_loss(model: ModelDef, flavour: str):
+    p = model.n_params
+
+    def fwd_loss(*args):
+        params, x, y = args[:p], args[p], args[p + 1]
+        return (model.per_example_loss(params, x, y, flavour),)
+
+    return fwd_loss
+
+
+def _masked_loss_fn(model: ModelDef, flavour: str):
+    def fn(params, x, y, mask):
+        loss = model.per_example_loss(params, x, y, flavour)
+        return layers.masked_mean(loss, mask)
+
+    return fn
+
+
+def build_train_step(model: ModelDef, flavour: str):
+    p = model.n_params
+    loss_fn = _masked_loss_fn(model, flavour)
+
+    def train_step(*args):
+        params = args[:p]
+        x, y, mask, lr = args[p], args[p + 1], args[p + 2], args[p + 3]
+        sel_loss, grads = jax.value_and_grad(loss_fn)(params, x, y, mask)
+        new_params = layers.sgd_update_tree(params, grads, lr, flavour=flavour)
+        return tuple(new_params) + (sel_loss,)
+
+    return train_step
+
+
+def build_grads(model: ModelDef, flavour: str):
+    p = model.n_params
+    loss_fn = _masked_loss_fn(model, flavour)
+
+    def grads_fn(*args):
+        params = args[:p]
+        x, y, mask = args[p], args[p + 1], args[p + 2]
+        sel_loss, grads = jax.value_and_grad(loss_fn)(params, x, y, mask)
+        return tuple(grads) + (sel_loss,)
+
+    return grads_fn
+
+
+def build_apply(model: ModelDef, flavour: str):
+    p = model.n_params
+
+    def apply_fn(*args):
+        params, grads, lr = args[:p], args[p : 2 * p], args[2 * p]
+        return tuple(layers.sgd_update_tree(params, grads, lr, flavour=flavour))
+
+    return apply_fn
+
+
+def build_eval(model: ModelDef, flavour: str):
+    p = model.n_params
+
+    def eval_fn(*args):
+        params = args[:p]
+        x, y, mask = args[p], args[p + 1], args[p + 2]
+        loss, metric = model.metric_terms(params, x, y, flavour)
+        return (
+            jnp.sum(loss * mask),
+            jnp.sum(metric * mask),
+            jnp.sum(mask),
+        )
+
+    return eval_fn
+
+
+EXECUTABLES = ("init", "fwd_loss", "train_step", "grads", "apply", "eval")
+
+# Sub-batch train_step variants: the coordinator gathers the selected
+# rows into the smallest compiled size ≥ b so the backward pass costs
+# O(b), not O(n) — the paper's "one backward" savings made real on
+# wallclock, not just in example counts. (The masked full-batch
+# train_step remains the numerically-identical fallback.)
+GATHER_SIZES = (16, 32, 64)
+
+_BUILDERS = {
+    "fwd_loss": build_fwd_loss,
+    "train_step": build_train_step,
+    "grads": build_grads,
+    "apply": build_apply,
+    "eval": build_eval,
+}
+
+
+def build(model: ModelDef, exe: str, flavour: str):
+    """Return the python callable for executable ``exe`` of ``model``."""
+    if exe == "init":
+        return build_init(model)
+    return _BUILDERS[exe](model, flavour)
+
+
+def example_args(model: ModelDef, exe: str, batch: int = BATCH):
+    """ShapeDtypeStructs matching each executable's flat signature."""
+    f32 = jnp.float32
+    ps = [jax.ShapeDtypeStruct(s.shape, f32) for s in model.params]
+    x = jax.ShapeDtypeStruct((batch,) + model.x_shape, f32)
+    y = jax.ShapeDtypeStruct((batch,), model.y_dtype)
+    mask = jax.ShapeDtypeStruct((batch,), f32)
+    lr = jax.ShapeDtypeStruct((), f32)
+    if exe == "init":
+        return [jax.ShapeDtypeStruct((), jnp.int32)]
+    if exe == "fwd_loss":
+        return ps + [x, y]
+    if exe == "train_step":
+        return ps + [x, y, mask, lr]
+    if exe == "grads":
+        return ps + [x, y, mask]
+    if exe == "apply":
+        return ps + ps + [lr]
+    if exe == "eval":
+        return ps + [x, y, mask]
+    raise ValueError(f"unknown executable {exe!r}")

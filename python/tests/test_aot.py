@@ -1,0 +1,80 @@
+"""AOT pipeline tests: HLO text emission and manifest schema.
+
+These validate the python→rust interchange contract without needing the
+rust side: the emitted HLO text must parse back through the XLA client,
+and the manifest must describe exactly the artifacts on disk.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_to_hlo_text_roundtrip_smoke():
+    lowered = jax.jit(lambda a, b: (a @ b + 1.0,)).lower(
+        jax.ShapeDtypeStruct((4, 4), jnp.float32),
+        jax.ShapeDtypeStruct((4, 4), jnp.float32),
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "f32[4,4]" in text
+
+
+def test_lower_one_linreg_fwd_loss_mentions_shapes():
+    text = aot.lower_one(M.LINREG, "fwd_loss", "jnp")
+    assert "HloModule" in text
+    assert f"f32[{M.BATCH}" in text
+
+
+def test_manifest_entry_schema():
+    e = aot.manifest_entry(M.MLP, ["pallas", "jnp"])
+    assert e["task"] == "classification"
+    assert e["x_shape"] == [784]
+    assert e["y_dtype"] == "i32"
+    assert [p["name"] for p in e["params"]] == ["w1", "b1", "w2", "b2", "w3", "b3"]
+    assert e["executables"]["fwd_loss:pallas"] == "mlp_fwd_loss.pallas.hlo.txt"
+    # 6 core executables + the sub-batch train_step variants, × 2 flavours
+    assert len(e["executables"]) == (len(M.EXECUTABLES) + len(M.GATHER_SIZES)) * 2
+    assert e["executables"]["train_step_b16:jnp"] == "mlp_train_step_b16.jnp.hlo.txt"
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_manifest_matches_disk():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["version"] == 1
+    assert manifest["batch"] == M.BATCH
+    for name, entry in manifest["models"].items():
+        assert name in M.MODELS
+        for key, fname in entry["executables"].items():
+            path = os.path.join(ART, fname)
+            assert os.path.exists(path), f"{key} -> {fname} missing"
+            with open(path) as f:
+                head = f.read(64)
+            assert "HloModule" in head, fname
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_manifest_param_shapes_match_models():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        manifest = json.load(f)
+    for name, entry in manifest["models"].items():
+        mdl = M.MODELS[name]
+        got = [(p["name"], tuple(p["shape"])) for p in entry["params"]]
+        want = [(p.name, p.shape) for p in mdl.params]
+        assert got == want

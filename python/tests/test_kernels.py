@@ -1,0 +1,215 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes (and loss/label distributions); assert_allclose
+against ``kernels.ref``. This is the CORE correctness signal for the
+Pallas layer — if these pass, the ``pallas`` artifact flavour computes
+the same numbers as the ``jnp`` flavour.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import losses as klosses
+from compile.kernels import matmul as kmatmul
+from compile.kernels import ref
+from compile.kernels import update as kupdate
+
+jax.config.update("jax_platform_name", "cpu")
+
+# Dims are drawn from realistic divisor structures (the models use 128,
+# 256, 784, 100, 10, 1) plus awkward primes to exercise _block fallback.
+DIMS = st.sampled_from([1, 2, 3, 5, 7, 8, 10, 16, 100, 128, 256])
+SMALL_DIMS = st.sampled_from([1, 2, 3, 5, 8, 10, 16, 32])
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIMS, k=SMALL_DIMS, n=SMALL_DIMS, seed=st.integers(0, 2**31 - 1))
+def test_matmul_matches_ref(m, k, n, seed):
+    r = _rng(seed)
+    x = r.standard_normal((m, k)).astype(np.float32)
+    w = r.standard_normal((k, n)).astype(np.float32)
+    got = kmatmul.matmul(jnp.asarray(x), jnp.asarray(w))
+    want = ref.matmul(jnp.asarray(x), jnp.asarray(w))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=DIMS,
+    k=SMALL_DIMS,
+    n=SMALL_DIMS,
+    act=st.sampled_from(["none", "relu"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_bias_act_matches_ref(m, k, n, act, seed):
+    r = _rng(seed)
+    x = r.standard_normal((m, k)).astype(np.float32)
+    w = r.standard_normal((k, n)).astype(np.float32)
+    b = r.standard_normal((n,)).astype(np.float32)
+    got = kmatmul.matmul_bias_act(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), act)
+    want = ref.matmul_bias_act(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), act)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_shape_mismatch_raises():
+    with pytest.raises(ValueError):
+        kmatmul.matmul(jnp.ones((4, 3)), jnp.ones((2, 4)))
+
+
+def test_matmul_bias_act_unknown_act_raises():
+    with pytest.raises(ValueError):
+        kmatmul.matmul_bias_act(jnp.ones((4, 4)), jnp.ones((4, 4)), jnp.ones((4,)), "gelu")
+
+
+def test_block_picks_largest_divisor():
+    assert kmatmul._block(784) == 112
+    assert kmatmul._block(256) == 128
+    assert kmatmul._block(128) == 128
+    assert kmatmul._block(100) == 100
+    assert kmatmul._block(13) == 13
+    assert kmatmul._block(257) == 257  # prime > target: single block
+    with pytest.raises(ValueError):
+        kmatmul._block(0)
+
+
+def test_vmem_bytes_within_budget():
+    # Every dense shape used by the models must fit VMEM comfortably
+    # (≤ 4 MiB per grid step leaves headroom for double buffering).
+    for m, n, k in [(128, 256, 784), (128, 256, 256), (128, 10, 256), (128, 100, 128)]:
+        assert kmatmul.vmem_bytes(m, n, k) <= 4 * 1024 * 1024
+
+
+# ---------------------------------------------------------------------------
+# softmax cross-entropy
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=DIMS, c=st.sampled_from([2, 3, 10, 100]), seed=st.integers(0, 2**31 - 1))
+def test_softmax_xent_matches_ref(n, c, seed):
+    r = _rng(seed)
+    logits = (5 * r.standard_normal((n, c))).astype(np.float32)
+    labels = r.integers(0, c, size=(n,)).astype(np.int32)
+    got = klosses.softmax_xent(jnp.asarray(logits), jnp.asarray(labels))
+    want = ref.softmax_xent(jnp.asarray(logits), jnp.asarray(labels))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=DIMS, c=st.sampled_from([2, 10, 100]), seed=st.integers(0, 2**31 - 1))
+def test_softmax_xent_grad_matches_ref(n, c, seed):
+    r = _rng(seed)
+    logits = (3 * r.standard_normal((n, c))).astype(np.float32)
+    labels = r.integers(0, c, size=(n,)).astype(np.int32)
+    dloss = r.standard_normal((n,)).astype(np.float32)
+    got = klosses.softmax_xent_grad(
+        jnp.asarray(logits), jnp.asarray(labels), jnp.asarray(dloss)
+    )
+    want = ref.softmax_xent_grad(
+        jnp.asarray(logits), jnp.asarray(labels), jnp.asarray(dloss)
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_softmax_xent_is_nonnegative_and_extreme_logits_stable():
+    logits = jnp.asarray([[1000.0, -1000.0], [-1000.0, 1000.0]], jnp.float32)
+    labels = jnp.asarray([0, 0], jnp.int32)
+    loss = klosses.softmax_xent(logits, labels)
+    assert np.all(np.isfinite(np.asarray(loss)))
+    np.testing.assert_allclose(loss[0], 0.0, atol=1e-6)
+    assert float(loss[1]) > 100.0
+
+
+# ---------------------------------------------------------------------------
+# mse
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=DIMS, seed=st.integers(0, 2**31 - 1))
+def test_mse_matches_ref(n, seed):
+    r = _rng(seed)
+    pred = r.standard_normal((n,)).astype(np.float32)
+    tgt = r.standard_normal((n,)).astype(np.float32)
+    got = klosses.mse(jnp.asarray(pred), jnp.asarray(tgt))
+    want = ref.mse(jnp.asarray(pred), jnp.asarray(tgt))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=DIMS, seed=st.integers(0, 2**31 - 1))
+def test_mse_grad_matches_ref(n, seed):
+    r = _rng(seed)
+    pred = r.standard_normal((n,)).astype(np.float32)
+    tgt = r.standard_normal((n,)).astype(np.float32)
+    dl = r.standard_normal((n,)).astype(np.float32)
+    got = klosses.mse_grad(jnp.asarray(pred), jnp.asarray(tgt), jnp.asarray(dl))
+    want = ref.mse_grad(jnp.asarray(pred), jnp.asarray(tgt), jnp.asarray(dl))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# sgd update
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    shape=st.sampled_from([(1,), (7,), (512,), (513,), (16, 16), (3, 3, 3, 8), (784, 256)]),
+    lr=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sgd_update_matches_ref(shape, lr, seed):
+    r = _rng(seed)
+    w = r.standard_normal(shape).astype(np.float32)
+    g = r.standard_normal(shape).astype(np.float32)
+    got = kupdate.sgd_update(jnp.asarray(w), jnp.asarray(g), jnp.float32(lr))
+    want = ref.sgd_update(jnp.asarray(w), jnp.asarray(g), jnp.float32(lr))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_sgd_update_shape_mismatch_raises():
+    with pytest.raises(ValueError):
+        kupdate.sgd_update(jnp.ones((4,)), jnp.ones((5,)), jnp.float32(0.1))
+
+
+def test_sgd_update_zero_lr_identity():
+    w = jnp.arange(600, dtype=jnp.float32)
+    g = jnp.ones((600,), jnp.float32)
+    out = kupdate.sgd_update(w, g, jnp.float32(0.0))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(w))
+
+
+# ---------------------------------------------------------------------------
+# masked mean
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=DIMS, p=st.floats(0.0, 1.0), seed=st.integers(0, 2**31 - 1))
+def test_masked_mean(n, p, seed):
+    r = _rng(seed)
+    v = r.standard_normal((n,)).astype(np.float32)
+    m = (r.random((n,)) < p).astype(np.float32)
+    got = float(ref.masked_mean(jnp.asarray(v), jnp.asarray(m)))
+    k = m.sum()
+    want = float((v * m).sum() / max(k, 1.0))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_masked_mean_empty_mask_is_zero():
+    v = jnp.ones((8,), jnp.float32)
+    m = jnp.zeros((8,), jnp.float32)
+    assert float(ref.masked_mean(v, m)) == 0.0

@@ -1,0 +1,168 @@
+"""L2 model tests: shapes, flavour equivalence, executable contracts."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+N = M.BATCH
+
+
+def _batch(mdl, seed=0):
+    kx, ky, km = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(kx, (N,) + mdl.x_shape, jnp.float32)
+    if mdl.task == "classification":
+        y = jax.random.randint(ky, (N,), 0, mdl.num_classes, jnp.int32)
+    else:
+        y = jax.random.normal(ky, (N,), jnp.float32)
+    mask = (jax.random.uniform(km, (N,)) < 0.3).astype(jnp.float32)
+    return x, y, mask
+
+
+@pytest.fixture(scope="module", params=sorted(M.MODELS))
+def mdl(request):
+    return M.MODELS[request.param]
+
+
+def test_init_shapes(mdl):
+    params = M.build(mdl, "init", "pallas")(jnp.int32(7))
+    assert len(params) == mdl.n_params
+    for p, spec in zip(params, mdl.params):
+        assert p.shape == spec.shape, spec.name
+        assert p.dtype == jnp.float32
+    # biases start at zero; weights do not
+    for p, spec in zip(params, mdl.params):
+        if len(spec.shape) == 1:
+            assert float(jnp.abs(p).max()) == 0.0
+        else:
+            assert float(jnp.abs(p).max()) > 0.0
+
+
+def test_init_deterministic_per_seed(mdl):
+    a = M.build(mdl, "init", "pallas")(jnp.int32(3))
+    b = M.build(mdl, "init", "pallas")(jnp.int32(3))
+    c = M.build(mdl, "init", "pallas")(jnp.int32(4))
+    for pa, pb in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb))
+    assert any(
+        not np.array_equal(np.asarray(pa), np.asarray(pc))
+        for pa, pc in zip(a, c)
+        if pa.ndim > 1
+    )
+
+
+def test_fwd_loss_shape_and_flavour_equivalence(mdl):
+    params = mdl.init_params(jax.random.PRNGKey(0))
+    x, y, _ = _batch(mdl)
+    lp = M.build(mdl, "fwd_loss", "pallas")(*params, x, y)[0]
+    lj = M.build(mdl, "fwd_loss", "jnp")(*params, x, y)[0]
+    assert lp.shape == (N,)
+    assert np.all(np.isfinite(np.asarray(lp)))
+    if mdl.task == "classification":
+        assert float(lp.min()) >= 0.0
+    np.testing.assert_allclose(lp, lj, rtol=3e-5, atol=3e-5)
+
+
+def test_train_step_flavour_equivalence(mdl):
+    params = mdl.init_params(jax.random.PRNGKey(0))
+    x, y, mask = _batch(mdl)
+    tp = M.build(mdl, "train_step", "pallas")(*params, x, y, mask, jnp.float32(0.05))
+    tj = M.build(mdl, "train_step", "jnp")(*params, x, y, mask, jnp.float32(0.05))
+    assert len(tp) == mdl.n_params + 1
+    for a, b in zip(tp, tj):
+        np.testing.assert_allclose(a, b, rtol=5e-4, atol=5e-5)
+
+
+def test_train_step_reduces_selected_loss(mdl):
+    """A few masked steps must reduce the masked mean loss (descent)."""
+    params = mdl.init_params(jax.random.PRNGKey(1))
+    x, y, mask = _batch(mdl, seed=5)
+    step = jax.jit(M.build(mdl, "train_step", "jnp"))
+    lr = jnp.float32(0.05 if mdl.task == "classification" else 0.01)
+    first = None
+    for _ in range(10):
+        out = step(*params, x, y, mask, lr)
+        params, loss = out[:-1], float(out[-1])
+        if first is None:
+            first = loss
+    assert loss < first, f"{mdl.name}: loss did not descend ({first} -> {loss})"
+
+
+def test_grads_then_apply_equals_train_step(mdl):
+    """grads + apply (the data-parallel path) == fused train_step."""
+    params = mdl.init_params(jax.random.PRNGKey(2))
+    x, y, mask = _batch(mdl, seed=9)
+    lr = jnp.float32(0.1)
+    fused = M.build(mdl, "train_step", "jnp")(*params, x, y, mask, lr)
+    gout = M.build(mdl, "grads", "jnp")(*params, x, y, mask)
+    grads, gloss = gout[:-1], gout[-1]
+    applied = M.build(mdl, "apply", "jnp")(*params, *grads, lr)
+    np.testing.assert_allclose(float(gloss), float(fused[-1]), rtol=1e-6)
+    for a, b in zip(applied, fused[:-1]):
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-7)
+
+
+def test_eval_masked_sums(mdl):
+    params = mdl.init_params(jax.random.PRNGKey(3))
+    x, y, mask = _batch(mdl, seed=11)
+    sum_loss, sum_metric, count = M.build(mdl, "eval", "jnp")(*params, x, y, mask)
+    per = M.build(mdl, "fwd_loss", "jnp")(*params, x, y)[0]
+    np.testing.assert_allclose(
+        float(sum_loss), float(jnp.sum(per * mask)), rtol=1e-5
+    )
+    assert float(count) == float(jnp.sum(mask))
+    if mdl.task == "classification":
+        assert 0.0 <= float(sum_metric) <= float(count)
+
+
+def test_eval_zero_mask(mdl):
+    params = mdl.init_params(jax.random.PRNGKey(3))
+    x, y, _ = _batch(mdl)
+    out = M.build(mdl, "eval", "jnp")(*params, x, y, jnp.zeros((N,), jnp.float32))
+    assert [float(v) for v in out] == [0.0, 0.0, 0.0]
+
+
+def test_example_args_match_build_signature(mdl):
+    """Every executable must trace successfully with its declared args."""
+    for exe in M.EXECUTABLES:
+        fn = M.build(mdl, exe, "jnp")
+        args = M.example_args(mdl, exe)
+        jax.eval_shape(fn, *args)  # raises on mismatch
+
+
+def test_train_step_traces_at_gather_sizes(mdl):
+    """Sub-batch variants (GATHER_SIZES) must trace for every model."""
+    for bb in M.GATHER_SIZES:
+        fn = M.build(mdl, "train_step", "jnp")
+        args = M.example_args(mdl, "train_step", batch=bb)
+        jax.eval_shape(fn, *args)
+
+
+def test_gathered_subbatch_equals_masked_fullbatch(mdl):
+    """Masked mean over gathered rows == masked mean over the full batch
+    (the numerical-identity contract of train_step_selected)."""
+    params = mdl.init_params(jax.random.PRNGKey(4))
+    x, y, _ = _batch(mdl, seed=13)
+    lr = jnp.float32(0.05)
+    # select 16 rows
+    sel = jnp.arange(16) * 7 % N
+    full_mask = jnp.zeros((N,), jnp.float32).at[sel].set(1.0)
+    full = M.build(mdl, "train_step", "jnp")(*params, x, y, full_mask, lr)
+
+    gx = x[sel]
+    gy = y[sel]
+    gmask = jnp.ones((16,), jnp.float32)
+    gathered = M.build(mdl, "train_step", "jnp")(*params, gx, gy, gmask, lr)
+    for a, b in zip(full, gathered):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+
+def test_unknown_executable_raises(mdl):
+    with pytest.raises(KeyError):
+        M.build(mdl, "predict_proba", "jnp")
+    with pytest.raises(ValueError):
+        M.example_args(mdl, "predict_proba")

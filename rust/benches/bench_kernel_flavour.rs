@@ -1,0 +1,58 @@
+//! `abl-kernel` (DESIGN.md §4): pallas vs jnp artifact flavour.
+//!
+//! The pallas flavour lowers interpret-mode Pallas kernels (scalarized
+//! HLO while-loops on CPU — the faithful L1 structure); the jnp flavour
+//! lets XLA fuse natively. On a real TPU the pallas path would use the
+//! MXU directly; on this CPU substrate the gap quantifies the cost of
+//! interpret-mode fidelity (EXPERIMENTS.md §Perf).
+
+use obftf::data::{HostTensor, Rng};
+use obftf::runtime::{Flavour, Manifest, Session};
+use obftf::util::benchkit::{black_box, Bench};
+
+fn main() {
+    let dir = obftf::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping bench_kernel_flavour: run `make artifacts` first");
+        return;
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    let mut bench = Bench::heavy();
+    let n = manifest.batch;
+
+    for model in ["linreg", "mlp"] {
+        let entry = manifest.model(model).unwrap();
+        let stride: usize = entry.x_shape.iter().product();
+        let mut rng = Rng::seed_from(3);
+        let mut shape = vec![n];
+        shape.extend_from_slice(&entry.x_shape);
+        let x = HostTensor::f32(
+            shape,
+            (0..n * stride).map(|_| rng.normal() as f32 * 0.4).collect(),
+        )
+        .unwrap();
+        let y = if entry.is_classification() {
+            HostTensor::i32(
+                vec![n],
+                (0..n).map(|_| rng.below(entry.num_classes) as i32).collect(),
+            )
+            .unwrap()
+        } else {
+            HostTensor::f32(vec![n], (0..n).map(|_| rng.normal() as f32).collect())
+                .unwrap()
+        };
+        let mask: Vec<f32> = (0..n).map(|i| if i % 4 == 0 { 1.0 } else { 0.0 }).collect();
+
+        for flavour in [Flavour::Jnp, Flavour::Pallas] {
+            let mut s = Session::new(&manifest, model, flavour).unwrap();
+            s.init(1).unwrap();
+            bench.run(&format!("fwd_loss/{model}/{}", flavour.as_str()), || {
+                black_box(s.fwd_loss(&x, &y).unwrap());
+            });
+            bench.run(&format!("train_step/{model}/{}", flavour.as_str()), || {
+                black_box(s.train_step(&x, &y, &mask, 0.01).unwrap());
+            });
+        }
+    }
+    println!("{}", bench.table("kernel flavour: pallas (interpret) vs jnp (XLA-fused)"));
+}

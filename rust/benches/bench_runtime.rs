@@ -1,0 +1,94 @@
+//! Runtime-layer micro-benches: the plumbing between the coordinator
+//! and PJRT — host↔literal conversion, single-exec latency, the
+//! engine's channel round-trip, prefetcher throughput, and checkpoint
+//! serialization. These locate L3 overhead that isn't XLA compute.
+
+use obftf::checkpoint::Checkpoint;
+use obftf::data::stream::{Prefetcher, ResamplingStream};
+use obftf::data::{HostTensor, Rng};
+use obftf::runtime::{session, Engine, Flavour, Manifest, Session};
+use obftf::testkit::TempDir;
+use obftf::util::benchkit::{black_box, Bench};
+
+fn main() {
+    let dir = obftf::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping bench_runtime: run `make artifacts` first");
+        return;
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    let mut bench = Bench::new();
+    let n = manifest.batch;
+
+    // host tensor -> literal -> host tensor conversion cost (784-wide batch)
+    let mut rng = Rng::seed_from(11);
+    let t = HostTensor::f32(
+        vec![n, 784],
+        (0..n * 784).map(|_| rng.normal() as f32).collect(),
+    )
+    .unwrap();
+    bench.run("to_literal/128x784", || {
+        black_box(session::to_literal(&t).unwrap());
+    });
+    let lit = session::to_literal(&t).unwrap();
+    bench.run("from_literal/128x784", || {
+        black_box(session::from_literal(&lit).unwrap());
+    });
+
+    // single-executable latency floor (linreg = smallest model)
+    let mut s = Session::new(&manifest, "linreg", Flavour::Jnp).unwrap();
+    s.init(0).unwrap();
+    let x = HostTensor::f32(vec![n, 1], (0..n).map(|i| i as f32 / n as f32).collect())
+        .unwrap();
+    let y = HostTensor::f32(vec![n], vec![0.5; n]).unwrap();
+    bench.run("exec/linreg/fwd_loss", || {
+        black_box(s.fwd_loss(&x, &y).unwrap());
+    });
+
+    // engine round-trip overhead: same op through the worker channel
+    let engine = Engine::new(&manifest, "linreg", Flavour::Jnp, 1).unwrap();
+    engine.init_broadcast(0).unwrap();
+    bench.run("engine/roundtrip/fwd_loss", || {
+        black_box(
+            engine
+                .fwd_loss_sharded(vec![(x.clone(), y.clone())])
+                .unwrap(),
+        );
+    });
+
+    // prefetcher throughput (mnist-proxy batches)
+    let spec = obftf::data::mnist_proxy::MnistProxySpec {
+        n_train: 2048,
+        n_test: 16,
+        ..Default::default()
+    };
+    let (train, _) = spec.build(5);
+    let pf = Prefetcher::spawn(Box::new(ResamplingStream::new(train, 9, 0.0)), n, 4);
+    bench.run("prefetch/mnist_batch", || {
+        black_box(pf.next());
+    });
+
+    // checkpoint save/load (mlp-sized params)
+    let mut ms = Session::new(&manifest, "mlp", Flavour::Jnp).unwrap();
+    ms.init(0).unwrap();
+    let params = ms.params_to_host().unwrap();
+    let named: Vec<(String, HostTensor)> = manifest
+        .model("mlp")
+        .unwrap()
+        .params
+        .iter()
+        .map(|p| p.name.clone())
+        .zip(params)
+        .collect();
+    let ck = Checkpoint { step: 1, epoch: 1, params: named };
+    let tmp = TempDir::new("bench-ck").unwrap();
+    let path = tmp.file("mlp.ck");
+    bench.run("checkpoint/save/mlp", || {
+        ck.save(&path).unwrap();
+    });
+    bench.run("checkpoint/load/mlp", || {
+        black_box(Checkpoint::load(&path).unwrap());
+    });
+
+    println!("{}", bench.table("runtime plumbing"));
+}

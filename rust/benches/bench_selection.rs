@@ -1,0 +1,33 @@
+//! `sel-micro` (DESIGN.md §4): selection-policy latency vs batch size
+//! and budget. The L3 perf target: OBFTF's solver must cost less than
+//! one fwd_loss execution at n = 128 (see EXPERIMENTS.md §Perf).
+
+use obftf::data::rng::Rng;
+use obftf::sampling::{budget_for, Method};
+use obftf::util::benchkit::{black_box, Bench};
+
+fn main() {
+    let mut bench = Bench::new();
+    let mut rng = Rng::seed_from(0x5e1ec7);
+
+    for &n in &[128usize, 256, 512, 1024] {
+        let losses: Vec<f32> =
+            (0..n).map(|_| (rng.normal() * 0.8).exp() as f32).collect();
+        let valid = vec![1.0f32; n];
+        for &ratio in &[0.1f64, 0.25, 0.5] {
+            let b = budget_for(ratio, n);
+            for m in Method::ALL {
+                // cap the expensive exact solver to realistic batch sizes
+                if m == Method::Obftf && n > 512 {
+                    continue;
+                }
+                let mut sampler = m.build(1.0);
+                let mut r = Rng::seed_from(7);
+                bench.run(&format!("select/{}/n{}/b{}", m.as_str(), n, b), || {
+                    black_box(sampler.select(&losses, &valid, b, &mut r));
+                });
+            }
+        }
+    }
+    println!("{}", bench.table("selection policies"));
+}

@@ -1,0 +1,55 @@
+//! `table3` throughput harness: CNN (ResNet50-role) and CNN-lite
+//! (MobileNetV2-role) step latency — the paper's "higher accuracy vs
+//! higher computational efficiency" model pairing, measured on this
+//! substrate. Also benches the sharded data-parallel step (the paper's
+//! 32-GPU sync setup, scaled to worker threads).
+
+use obftf::config::TrainConfig;
+use obftf::coordinator::{ParallelTrainer, Trainer};
+use obftf::data::BatchIter;
+use obftf::runtime::Manifest;
+use obftf::sampling::Method;
+use obftf::util::benchkit::Bench;
+
+fn main() {
+    let dir = obftf::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping bench_table3: run `make artifacts` first");
+        return;
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    let mut bench = Bench::heavy();
+
+    for model in ["cnn", "cnn_lite"] {
+        let cfg = TrainConfig {
+            model: model.into(),
+            method: Method::Obftf,
+            sampling_ratio: 0.25,
+            epochs: 1,
+            lr: 0.05,
+            n_train: Some(512),
+            n_test: Some(128),
+            ..Default::default()
+        };
+        let (train, _) = obftf::coordinator::trainer::build_datasets(&cfg).unwrap();
+        let batches: Vec<_> = BatchIter::new(&train, manifest.batch, None).collect();
+
+        let mut t = Trainer::with_manifest(&cfg, &manifest).unwrap();
+        let mut i = 0;
+        bench.run(&format!("table3-step/{model}/serial"), || {
+            t.step_batch(&batches[i % batches.len()]).unwrap();
+            i += 1;
+        });
+
+        // data-parallel variant (leader/worker over threads)
+        let mut pcfg = cfg.clone();
+        pcfg.workers = 2;
+        let mut pt = ParallelTrainer::with_manifest(&pcfg, &manifest).unwrap();
+        let mut j = 0;
+        bench.run(&format!("table3-step/{model}/workers2"), || {
+            pt.step_batch(&batches[j % batches.len()]).unwrap();
+            j += 1;
+        });
+    }
+    println!("{}", bench.table("table3: cnn / cnn_lite end-to-end step"));
+}

@@ -1,0 +1,215 @@
+//! Checkpointing: durable parameter snapshots for the continuous-
+//! training setting (crash/resume without losing the stream position).
+//!
+//! Format (little-endian, versioned):
+//! ```text
+//!   magic  "OBTF"    4 bytes
+//!   version u32      (=1)
+//!   step    u64
+//!   epoch   u64
+//!   n_tensors u32
+//!   per tensor: name_len u32, name bytes, rank u32, dims u64...,
+//!               dtype u8 (0=f32, 1=i32), data bytes
+//! ```
+//! Writes go to `<path>.tmp` then `rename` — a crash mid-write never
+//! corrupts the previous checkpoint.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::tensor::{HostTensor, TensorData};
+
+const MAGIC: &[u8; 4] = b"OBTF";
+const VERSION: u32 = 1;
+
+/// A parameter snapshot plus training position.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub step: u64,
+    pub epoch: u64,
+    /// `(name, tensor)` in manifest parameter order.
+    pub params: Vec<(String, HostTensor)>,
+}
+
+impl Checkpoint {
+    /// Serialize to `path` atomically (tmp file + rename).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let tmp = path.with_extension("tmp");
+        {
+            let mut f = std::io::BufWriter::new(
+                std::fs::File::create(&tmp).with_context(|| format!("creating {tmp:?}"))?,
+            );
+            f.write_all(MAGIC)?;
+            f.write_all(&VERSION.to_le_bytes())?;
+            f.write_all(&self.step.to_le_bytes())?;
+            f.write_all(&self.epoch.to_le_bytes())?;
+            f.write_all(&(self.params.len() as u32).to_le_bytes())?;
+            for (name, t) in &self.params {
+                f.write_all(&(name.len() as u32).to_le_bytes())?;
+                f.write_all(name.as_bytes())?;
+                f.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+                for &d in &t.shape {
+                    f.write_all(&(d as u64).to_le_bytes())?;
+                }
+                match &t.data {
+                    TensorData::F32(v) => {
+                        f.write_all(&[0u8])?;
+                        for x in v {
+                            f.write_all(&x.to_le_bytes())?;
+                        }
+                    }
+                    TensorData::I32(v) => {
+                        f.write_all(&[1u8])?;
+                        for x in v {
+                            f.write_all(&x.to_le_bytes())?;
+                        }
+                    }
+                }
+            }
+            f.flush()?;
+        }
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming {tmp:?} -> {path:?}"))?;
+        Ok(())
+    }
+
+    /// Load and validate from `path`.
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?,
+        );
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{path:?} is not an obftf checkpoint (bad magic)");
+        }
+        let version = read_u32(&mut f)?;
+        if version != VERSION {
+            bail!("unsupported checkpoint version {version}");
+        }
+        let step = read_u64(&mut f)?;
+        let epoch = read_u64(&mut f)?;
+        let n = read_u32(&mut f)? as usize;
+        if n > 10_000 {
+            bail!("implausible tensor count {n} (corrupt checkpoint?)");
+        }
+        let mut params = Vec::with_capacity(n);
+        for _ in 0..n {
+            let name_len = read_u32(&mut f)? as usize;
+            if name_len > 4096 {
+                bail!("implausible name length {name_len}");
+            }
+            let mut name = vec![0u8; name_len];
+            f.read_exact(&mut name)?;
+            let name = String::from_utf8(name).context("non-utf8 tensor name")?;
+            let rank = read_u32(&mut f)? as usize;
+            if rank > 16 {
+                bail!("implausible rank {rank}");
+            }
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                shape.push(read_u64(&mut f)? as usize);
+            }
+            let count: usize = shape.iter().product();
+            if count > 1 << 30 {
+                bail!("implausible tensor size {count}");
+            }
+            let mut dtype = [0u8; 1];
+            f.read_exact(&mut dtype)?;
+            let tensor = match dtype[0] {
+                0 => {
+                    let mut v = vec![0f32; count];
+                    for x in v.iter_mut() {
+                        let mut b = [0u8; 4];
+                        f.read_exact(&mut b)?;
+                        *x = f32::from_le_bytes(b);
+                    }
+                    HostTensor { shape, data: TensorData::F32(v) }
+                }
+                1 => {
+                    let mut v = vec![0i32; count];
+                    for x in v.iter_mut() {
+                        let mut b = [0u8; 4];
+                        f.read_exact(&mut b)?;
+                        *x = i32::from_le_bytes(b);
+                    }
+                    HostTensor { shape, data: TensorData::I32(v) }
+                }
+                d => bail!("unknown dtype tag {d}"),
+            };
+            params.push((name, tensor));
+        }
+        Ok(Checkpoint { step, epoch, params })
+    }
+}
+
+fn read_u32(f: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(f: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    f.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Checkpoint {
+        Checkpoint {
+            step: 123,
+            epoch: 4,
+            params: vec![
+                ("w".into(), HostTensor::f32(vec![2, 2], vec![1.0, -2.5, 3.0, 0.0]).unwrap()),
+                ("labels".into(), HostTensor::i32(vec![3], vec![7, -1, 0]).unwrap()),
+            ],
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = crate::testkit::TempDir::new("ck").unwrap();
+        let p = dir.path().join("ck.bin");
+        let ck = toy();
+        ck.save(&p).unwrap();
+        let got = Checkpoint::load(&p).unwrap();
+        assert_eq!(got, ck);
+    }
+
+    #[test]
+    fn atomic_overwrite_keeps_latest() {
+        let dir = crate::testkit::TempDir::new("ck").unwrap();
+        let p = dir.path().join("ck.bin");
+        let mut ck = toy();
+        ck.save(&p).unwrap();
+        ck.step = 999;
+        ck.save(&p).unwrap();
+        assert_eq!(Checkpoint::load(&p).unwrap().step, 999);
+        assert!(!p.with_extension("tmp").exists());
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = crate::testkit::TempDir::new("ck").unwrap();
+        let p = dir.path().join("junk.bin");
+        std::fs::write(&p, b"NOPE0000000000000000").unwrap();
+        let err = Checkpoint::load(&p).unwrap_err().to_string();
+        assert!(err.contains("bad magic"));
+    }
+
+    #[test]
+    fn truncated_file_rejected() {
+        let dir = crate::testkit::TempDir::new("ck").unwrap();
+        let p = dir.path().join("ck.bin");
+        toy().save(&p).unwrap();
+        let full = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &full[..full.len() / 2]).unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+    }
+}

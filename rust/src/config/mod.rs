@@ -1,0 +1,252 @@
+//! Configuration system: TOML files + programmatic defaults, validated
+//! before anything heavy starts. The CLI (`rust/src/main.rs`) overlays
+//! flag overrides on top of a loaded file.
+//!
+//! Offline note: the `toml`/`serde` crates are unavailable; parsing goes
+//! through [`crate::util::toml_min`], and unknown keys are rejected so
+//! typos fail loudly exactly as `deny_unknown_fields` would.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::sampling::Method;
+use crate::util::toml_min::{self, TomlValue};
+
+/// Everything a training run needs. A TOML file only has to mention
+/// what it changes from [`TrainConfig::default`].
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Model name from the manifest: linreg | mlp | cnn | cnn_lite.
+    pub model: String,
+    /// Kernel flavour: pallas (paper-faithful L1 kernels) | jnp.
+    pub flavour: String,
+    /// Dataset: regression | regression_outliers | mnist_proxy |
+    /// imagenet_proxy (defaults to the model's conventional pairing).
+    pub dataset: Option<String>,
+    /// Selection method.
+    pub method: Method,
+    /// Sampling ratio r: the per-batch backward budget is `round(r·n)`.
+    pub sampling_ratio: f64,
+    /// Selective-backprop γ.
+    pub gamma: f32,
+    pub epochs: usize,
+    pub lr: f32,
+    pub seed: u64,
+    /// Evaluate on the test split every `eval_every` epochs (0 = only at
+    /// the end).
+    pub eval_every: usize,
+    /// Data-parallel workers (1 = single-process trainer).
+    pub workers: usize,
+    /// Override dataset sizes (None = generator defaults).
+    pub n_train: Option<usize>,
+    pub n_test: Option<usize>,
+    /// Label-noise fraction for the classification proxies.
+    pub label_noise: f32,
+    /// Checkpoint path (written at the end of each epoch when set).
+    pub checkpoint: Option<String>,
+    /// Metrics CSV output path.
+    pub metrics_out: Option<String>,
+    /// Streaming mode: train on a resampling stream for `stream_steps`
+    /// steps instead of epochs (0 = epoch mode).
+    pub stream_steps: usize,
+    /// Prefetch depth for streaming mode.
+    pub prefetch_depth: usize,
+    /// Concept-drift magnitude for the streaming source.
+    pub drift: f32,
+    /// Status service bind address for streaming jobs (e.g.
+    /// "127.0.0.1:7878"); None = no service.
+    pub status_addr: Option<String>,
+    /// Reuse per-instance losses recorded from earlier forward passes
+    /// (the paper's production premise: inference already computed
+    /// them). When a batch is fully covered by fresh cache entries the
+    /// fwd_loss execution is skipped.
+    pub reuse_losses: bool,
+    /// Max cache age in steps (0 = auto: one epoch's worth of steps).
+    pub loss_max_age: u64,
+    /// Force the masked full-batch backward instead of the gathered
+    /// sub-batch backward (identical numerics, O(n) vs O(b) cost; kept
+    /// as the perf-ablation knob — EXPERIMENTS.md §Perf).
+    pub masked_backward: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            model: "mlp".to_string(),
+            flavour: "jnp".to_string(),
+            dataset: None,
+            method: Method::Obftf,
+            sampling_ratio: 0.25,
+            gamma: 1.0,
+            epochs: 5,
+            lr: 0.1,
+            seed: 42,
+            eval_every: 1,
+            workers: 1,
+            n_train: None,
+            n_test: None,
+            label_noise: 0.0,
+            checkpoint: None,
+            metrics_out: None,
+            stream_steps: 0,
+            prefetch_depth: 4,
+            drift: 0.0,
+            status_addr: None,
+            reuse_losses: false,
+            loss_max_age: 0,
+            masked_backward: false,
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn from_toml_file(path: &Path) -> Result<TrainConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path:?}"))?;
+        Self::from_toml_str(&text).with_context(|| format!("parsing config {path:?}"))
+    }
+
+    pub fn from_toml_str(text: &str) -> Result<TrainConfig> {
+        let map = toml_min::parse(text)?;
+        let mut cfg = TrainConfig::default();
+        for (key, val) in &map {
+            cfg.apply_kv(key, val)
+                .with_context(|| format!("config key {key:?}"))?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    fn apply_kv(&mut self, key: &str, val: &TomlValue) -> Result<()> {
+        match key {
+            "model" => self.model = val.as_str()?.to_string(),
+            "flavour" => self.flavour = val.as_str()?.to_string(),
+            "dataset" => self.dataset = Some(val.as_str()?.to_string()),
+            "method" => self.method = val.as_str()?.parse()?,
+            "sampling_ratio" => self.sampling_ratio = val.as_f64()?,
+            "gamma" => self.gamma = val.as_f32()?,
+            "epochs" => self.epochs = val.as_usize()?,
+            "lr" => self.lr = val.as_f32()?,
+            "seed" => self.seed = val.as_u64()?,
+            "eval_every" => self.eval_every = val.as_usize()?,
+            "workers" => self.workers = val.as_usize()?,
+            "n_train" => self.n_train = Some(val.as_usize()?),
+            "n_test" => self.n_test = Some(val.as_usize()?),
+            "label_noise" => self.label_noise = val.as_f32()?,
+            "checkpoint" => self.checkpoint = Some(val.as_str()?.to_string()),
+            "metrics_out" => self.metrics_out = Some(val.as_str()?.to_string()),
+            "stream_steps" => self.stream_steps = val.as_usize()?,
+            "prefetch_depth" => self.prefetch_depth = val.as_usize()?,
+            "drift" => self.drift = val.as_f32()?,
+            "status_addr" => self.status_addr = Some(val.as_str()?.to_string()),
+            "masked_backward" => self.masked_backward = val.as_bool()?,
+            "reuse_losses" => self.reuse_losses = val.as_bool()?,
+            "loss_max_age" => self.loss_max_age = val.as_u64()?,
+            other => bail!("unknown config key {other:?}"),
+        }
+        Ok(())
+    }
+
+    /// The dataset to use (explicit or conventional pairing).
+    pub fn dataset_name(&self) -> String {
+        self.dataset
+            .clone()
+            .unwrap_or_else(|| crate::data::default_dataset_for(&self.model).to_string())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !(0.0..=1.0).contains(&self.sampling_ratio) {
+            bail!("sampling_ratio {} outside [0, 1]", self.sampling_ratio);
+        }
+        if self.lr <= 0.0 || !self.lr.is_finite() {
+            bail!("lr must be positive and finite, got {}", self.lr);
+        }
+        if self.workers == 0 {
+            bail!("workers must be ≥ 1");
+        }
+        if self.epochs == 0 && self.stream_steps == 0 {
+            bail!("either epochs or stream_steps must be > 0");
+        }
+        if !(0.0..1.0).contains(&self.label_noise) {
+            bail!("label_noise {} outside [0, 1)", self.label_noise);
+        }
+        if self.gamma <= 0.0 {
+            bail!("gamma must be positive");
+        }
+        if self.prefetch_depth == 0 {
+            bail!("prefetch_depth must be ≥ 1");
+        }
+        match self.flavour.as_str() {
+            "pallas" | "jnp" => {}
+            other => bail!("unknown flavour {other:?}"),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        TrainConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn toml_partial_file_overlays_defaults() {
+        let cfg = TrainConfig::from_toml_str(
+            r#"
+model = "linreg"
+method = "mink"
+sampling_ratio = 0.1
+epochs = 2
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.model, "linreg");
+        assert_eq!(cfg.method, Method::MinK);
+        assert_eq!(cfg.sampling_ratio, 0.1);
+        assert_eq!(cfg.lr, 0.1); // default preserved
+        assert_eq!(cfg.dataset_name(), "regression");
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let err = TrainConfig::from_toml_str("modle = \"mlp\"\n").unwrap_err();
+        assert!(format!("{err:#}").contains("unknown config key"));
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        let mut cfg = TrainConfig::default();
+        cfg.sampling_ratio = 1.5;
+        assert!(cfg.validate().is_err());
+        let mut cfg = TrainConfig::default();
+        cfg.lr = -0.1;
+        assert!(cfg.validate().is_err());
+        let mut cfg = TrainConfig::default();
+        cfg.workers = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = TrainConfig::default();
+        cfg.epochs = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = TrainConfig::default();
+        cfg.flavour = "cuda".into();
+        assert!(cfg.validate().is_err());
+        assert!(TrainConfig::from_toml_str("method = \"bogus\"").is_err());
+    }
+
+    #[test]
+    fn stream_mode_allows_zero_epochs() {
+        let cfg = TrainConfig::from_toml_str("epochs = 0\nstream_steps = 100").unwrap();
+        assert_eq!(cfg.stream_steps, 100);
+    }
+
+    #[test]
+    fn wrong_type_rejected() {
+        assert!(TrainConfig::from_toml_str("epochs = \"five\"").is_err());
+        assert!(TrainConfig::from_toml_str("model = 3").is_err());
+    }
+}

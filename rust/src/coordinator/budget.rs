@@ -1,0 +1,89 @@
+//! Compute-budget accounting: the paper's "ten forward, one backward"
+//! economics made observable.
+//!
+//! Every deployed instance gets a forward pass anyway (inference); the
+//! scheme's win is the backward passes *not* run. A backward is ~2× a
+//! forward for dense nets, so total cost ≈ fwd + 2·bwd (in
+//! forward-equivalents) versus 3·fwd for full training.
+
+/// Running totals of forwarded/backwarded examples.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BudgetTracker {
+    pub forward_examples: u64,
+    pub backward_examples: u64,
+    /// Forwards the trainer actually *executed* (≤ `forward_examples`
+    /// when the loss cache served the rest — the "inference already
+    /// paid" discount).
+    pub forward_executed: u64,
+    pub steps: u64,
+}
+
+impl BudgetTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_step(&mut self, forward: usize, backward: usize) {
+        self.forward_examples += forward as u64;
+        self.backward_examples += backward as u64;
+        self.steps += 1;
+    }
+
+    pub fn record_forward_executed(&mut self, n: usize) {
+        self.forward_executed += n as u64;
+    }
+
+    /// Realized sampling ratio (backward / forward).
+    pub fn realized_ratio(&self) -> f64 {
+        if self.forward_examples == 0 {
+            0.0
+        } else {
+            self.backward_examples as f64 / self.forward_examples as f64
+        }
+    }
+
+    /// Training cost in forward-equivalents, assuming backward ≈ 2×
+    /// forward: `fwd + 2·bwd`.
+    pub fn cost_forward_equivalents(&self) -> u64 {
+        self.forward_examples + 2 * self.backward_examples
+    }
+
+    /// Fraction of full-training cost saved: `1 − (f + 2b) / (3f)`.
+    pub fn saved_fraction(&self) -> f64 {
+        if self.forward_examples == 0 {
+            return 0.0;
+        }
+        1.0 - self.cost_forward_equivalents() as f64 / (3.0 * self.forward_examples as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratios_and_savings() {
+        let mut b = BudgetTracker::new();
+        b.record_step(128, 32);
+        b.record_step(128, 32);
+        assert_eq!(b.steps, 2);
+        assert!((b.realized_ratio() - 0.25).abs() < 1e-12);
+        assert_eq!(b.cost_forward_equivalents(), 256 + 128);
+        // saved = 1 - (256+128)/(3·256) = 1 - 0.5 = 0.5
+        assert!((b.saved_fraction() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_tracker_is_zero() {
+        let b = BudgetTracker::new();
+        assert_eq!(b.realized_ratio(), 0.0);
+        assert_eq!(b.saved_fraction(), 0.0);
+    }
+
+    #[test]
+    fn full_ratio_saves_nothing() {
+        let mut b = BudgetTracker::new();
+        b.record_step(100, 100);
+        assert!(b.saved_fraction().abs() < 1e-12);
+    }
+}

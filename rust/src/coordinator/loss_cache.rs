@@ -1,0 +1,155 @@
+//! Per-instance loss cache — the paper's production premise made
+//! concrete.
+//!
+//! The abstract's key insight: deployed systems "continuously perform
+//! forward passes on data instances during inference", so the training
+//! subsystem can *record a constant amount of information per instance*
+//! (the loss) from those passes instead of re-running its own forward.
+//! [`LossCache`] is that record: per-example losses stamped with the
+//! step that produced them. When every valid row of a batch has a
+//! fresh-enough entry, the trainer skips the fwd_loss execution
+//! entirely — the "ten forward" become free — at the cost of selecting
+//! on slightly stale losses (the staleness/accuracy trade-off is the
+//! `loss_max_age` knob, ablated in EXPERIMENTS.md).
+
+/// Fixed-capacity per-example loss store, keyed by dataset index.
+#[derive(Clone, Debug)]
+pub struct LossCache {
+    losses: Vec<f32>,
+    /// Step at which each loss was recorded (`u64::MAX` = never).
+    stamp: Vec<u64>,
+    /// Max allowed age in steps (0 = any age accepted).
+    max_age: u64,
+    hits: u64,
+    misses: u64,
+}
+
+impl LossCache {
+    /// `capacity` = training-set size; `max_age` in steps (0 = ∞).
+    pub fn new(capacity: usize, max_age: u64) -> Self {
+        LossCache {
+            losses: vec![0.0; capacity],
+            stamp: vec![u64::MAX; capacity],
+            max_age,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.losses.len()
+    }
+
+    /// `(hits, misses)` at the batch granularity.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
+
+    fn fresh(&self, id: usize, now: u64) -> bool {
+        if id >= self.stamp.len() || self.stamp[id] == u64::MAX {
+            return false;
+        }
+        self.max_age == 0 || now.saturating_sub(self.stamp[id]) <= self.max_age
+    }
+
+    /// If every valid row has a fresh loss, return the cached loss
+    /// vector (padding rows filled with 0.0) — the "forward for free"
+    /// path. Counts a hit/miss per call.
+    pub fn lookup_batch(
+        &mut self,
+        ids: &[usize],
+        valid: &[f32],
+        now: u64,
+    ) -> Option<Vec<f32>> {
+        let all_fresh = ids
+            .iter()
+            .zip(valid)
+            .filter(|(_, &m)| m > 0.0)
+            .all(|(&id, _)| self.fresh(id, now));
+        if !all_fresh {
+            self.misses += 1;
+            return None;
+        }
+        self.hits += 1;
+        Some(
+            ids.iter()
+                .zip(valid)
+                .map(|(&id, &m)| if m > 0.0 { self.losses[id] } else { 0.0 })
+                .collect(),
+        )
+    }
+
+    /// Record freshly computed losses for a batch.
+    pub fn record_batch(&mut self, ids: &[usize], valid: &[f32], losses: &[f32], now: u64) {
+        for ((&id, &m), &l) in ids.iter().zip(valid).zip(losses) {
+            if m > 0.0 && id < self.losses.len() {
+                self.losses[id] = l;
+                self.stamp[id] = now;
+            }
+        }
+    }
+
+    /// Update entries for a subset of rows (e.g. the selected rows whose
+    /// post-step loss the backward pass reported).
+    pub fn invalidate(&mut self, ids: &[usize]) {
+        for &id in ids {
+            if id < self.stamp.len() {
+                self.stamp[id] = u64::MAX;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn miss_until_recorded_then_hit() {
+        let mut c = LossCache::new(8, 0);
+        let ids = [0, 1, 2, usize::MAX];
+        let valid = [1.0, 1.0, 1.0, 0.0];
+        assert!(c.lookup_batch(&ids, &valid, 0).is_none());
+        c.record_batch(&ids, &valid, &[0.5, 0.6, 0.7, 9.9], 0);
+        let got = c.lookup_batch(&ids, &valid, 1).unwrap();
+        assert_eq!(got, vec![0.5, 0.6, 0.7, 0.0]); // padding zeroed
+        assert_eq!(c.stats(), (1, 1));
+    }
+
+    #[test]
+    fn staleness_expires_entries() {
+        let mut c = LossCache::new(4, 10);
+        let ids = [0, 1];
+        let valid = [1.0, 1.0];
+        c.record_batch(&ids, &valid, &[1.0, 2.0], 0);
+        assert!(c.lookup_batch(&ids, &valid, 10).is_some());
+        assert!(c.lookup_batch(&ids, &valid, 11).is_none());
+    }
+
+    #[test]
+    fn partial_coverage_is_a_miss() {
+        let mut c = LossCache::new(4, 0);
+        c.record_batch(&[0], &[1.0], &[1.0], 0);
+        assert!(c.lookup_batch(&[0, 1], &[1.0, 1.0], 1).is_none());
+        // but if the uncovered row is padding, it's a hit
+        assert!(c.lookup_batch(&[0, 1], &[1.0, 0.0], 1).is_some());
+    }
+
+    #[test]
+    fn invalidate_forces_refresh() {
+        let mut c = LossCache::new(4, 0);
+        let ids = [2, 3];
+        let valid = [1.0, 1.0];
+        c.record_batch(&ids, &valid, &[1.0, 2.0], 0);
+        c.invalidate(&[3]);
+        assert!(c.lookup_batch(&ids, &valid, 1).is_none());
+    }
+
+    #[test]
+    fn out_of_range_ids_never_fresh() {
+        let mut c = LossCache::new(2, 0);
+        assert!(c.lookup_batch(&[5], &[1.0], 0).is_none());
+        c.record_batch(&[5], &[1.0], &[1.0], 0); // silently ignored
+        assert!(c.lookup_batch(&[5], &[1.0], 1).is_none());
+    }
+}

@@ -1,0 +1,23 @@
+//! L3 coordinator: the paper's system contribution.
+//!
+//! * [`trainer`]  — the single-process OBFTF training loop
+//!   (Algorithm 1: forward all → select → backward selected);
+//! * [`parallel`] — leader/worker sync data-parallel variant;
+//! * [`pipeline`] — streaming (continuous-training) mode with bounded
+//!   prefetch and backpressure accounting;
+//! * [`budget`]   — forward/backward compute accounting (the paper's
+//!   "ten forward, one backward" economics);
+//! * [`service`]  — tokio status/control plane for long-running jobs.
+
+pub mod budget;
+pub mod loss_cache;
+pub mod parallel;
+pub mod pipeline;
+pub mod service;
+pub mod trainer;
+
+pub use budget::BudgetTracker;
+pub use loss_cache::LossCache;
+pub use parallel::ParallelTrainer;
+pub use pipeline::StreamingTrainer;
+pub use trainer::{EvalResult, TrainReport, Trainer};

@@ -1,0 +1,223 @@
+//! Leader/worker sync data-parallel trainer (the paper's 32-GPU setup,
+//! scaled to worker threads with private PJRT clients).
+//!
+//! Dataflow per step — identical numerics to the serial [`Trainer`]:
+//!
+//! ```text
+//!   leader: shard batch ── x,y ──▶ workers: fwd_loss   (parallel)
+//!   leader: gather losses, run selection (global batch order)
+//!   leader: shard mask ── x,y,m ──▶ workers: grads     (parallel)
+//!   leader: weighted-average grads (k_w / K), broadcast apply
+//! ```
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::TrainConfig;
+use crate::coordinator::budget::BudgetTracker;
+use crate::coordinator::trainer::{build_datasets, EvalResult, TrainReport};
+use crate::data::dataset::{Batch, BatchIter, InMemoryDataset};
+use crate::data::rng::Rng;
+use crate::data::shard::{gather_losses, shard_batch, shard_mask};
+use crate::metrics::{EvalRecord, Recorder, StepRecord};
+use crate::runtime::engine::weighted_average_grads;
+use crate::runtime::{Engine, Flavour, Manifest};
+use crate::sampling::{budget_for, selection_mask, Sampler};
+
+/// Data-parallel trainer over an [`Engine`] worker pool.
+pub struct ParallelTrainer {
+    pub cfg: TrainConfig,
+    engine: Engine,
+    sampler: Box<dyn Sampler>,
+    train: InMemoryDataset,
+    test: InMemoryDataset,
+    rng: Rng,
+    pub recorder: Recorder,
+    pub budget: BudgetTracker,
+    batch_size: usize,
+    step: u64,
+    epoch: usize,
+}
+
+impl ParallelTrainer {
+    pub fn from_config(cfg: &TrainConfig) -> Result<ParallelTrainer> {
+        let manifest = Manifest::load(&crate::artifacts_dir())?;
+        Self::with_manifest(cfg, &manifest)
+    }
+
+    pub fn with_manifest(cfg: &TrainConfig, manifest: &Manifest) -> Result<ParallelTrainer> {
+        cfg.validate()?;
+        let flavour: Flavour = cfg.flavour.parse()?;
+        let engine = Engine::new(manifest, &cfg.model, flavour, cfg.workers)
+            .context("building worker engine")?;
+        engine.init_broadcast(cfg.seed as i32)?;
+        let (train, test) = build_datasets(cfg)?;
+        let sampler = cfg.method.build(cfg.gamma);
+        // IMPORTANT: same rng derivation as Trainer so parallel == serial
+        let mut rng = Rng::seed_from(cfg.seed ^ 0x747261696e657221);
+        let _shuffle_stream = rng.split();
+        Ok(ParallelTrainer {
+            cfg: cfg.clone(),
+            engine,
+            sampler,
+            train,
+            test,
+            rng,
+            recorder: Recorder::new(),
+            budget: BudgetTracker::new(),
+            batch_size: manifest.batch,
+            step: 0,
+            epoch: 0,
+        })
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.engine.n_workers()
+    }
+
+    /// One data-parallel Algorithm-1 iteration.
+    pub fn step_batch(&mut self, batch: &Batch) -> Result<StepRecord> {
+        let n = batch.batch_size();
+        let shards = shard_batch(batch, self.engine.n_workers())?;
+
+        // (1) sharded forward
+        let t0 = Instant::now();
+        let fwd_in: Vec<_> = shards
+            .iter()
+            .map(|s| (s.batch.x.clone(), s.batch.y.clone()))
+            .collect();
+        let per_shard = self.engine.fwd_loss_sharded(fwd_in)?;
+        let losses = gather_losses(&shards, &per_shard, n);
+        let fwd_us = t0.elapsed().as_micros() as u64;
+
+        // (2) global selection on the leader
+        let t1 = Instant::now();
+        let b = budget_for(self.cfg.sampling_ratio, batch.real);
+        let selected = self.sampler.select(&losses, &batch.valid_mask, b, &mut self.rng);
+        let mask = selection_mask(&selected, n);
+        let sel_us = t1.elapsed().as_micros() as u64;
+
+        // (3) sharded backward + leader reduce + broadcast apply
+        let t2 = Instant::now();
+        let mut counts = Vec::with_capacity(shards.len());
+        let grads_in: Vec<_> = shards
+            .iter()
+            .map(|s| {
+                let local = shard_mask(s, &mask);
+                counts.push(local.iter().filter(|&&m| m > 0.0).count());
+                (s.batch.x.clone(), s.batch.y.clone(), local)
+            })
+            .collect();
+        let per_worker = self.engine.grads_sharded(grads_in)?;
+        let (avg, sel_loss) = weighted_average_grads(&per_worker, &counts)?;
+        self.engine.apply_broadcast(&avg, self.cfg.lr)?;
+        let bwd_us = t2.elapsed().as_micros() as u64;
+
+        let batch_loss = {
+            let mut s = 0.0f64;
+            let mut c = 0.0f64;
+            for (l, m) in losses.iter().zip(&batch.valid_mask) {
+                s += (*l as f64) * (*m as f64);
+                c += *m as f64;
+            }
+            (s / c.max(1.0)) as f32
+        };
+
+        self.budget.record_step(batch.real, selected.len());
+        let rec = StepRecord {
+            step: self.step,
+            epoch: self.epoch,
+            sel_loss,
+            batch_loss,
+            n_forward: batch.real,
+            n_selected: selected.len(),
+            fwd_us,
+            sel_us,
+            bwd_us,
+        };
+        self.recorder.record_step(rec);
+        self.step += 1;
+        Ok(rec)
+    }
+
+    pub fn run_epoch(&mut self) -> Result<()> {
+        let mut shuffle_rng = self.rng.split();
+        let batches: Vec<Batch> =
+            BatchIter::new(&self.train, self.batch_size, Some(&mut shuffle_rng)).collect();
+        for b in &batches {
+            self.step_batch(b)?;
+        }
+        self.epoch += 1;
+        Ok(())
+    }
+
+    /// Sharded evaluation over the test split.
+    pub fn evaluate(&mut self) -> Result<EvalResult> {
+        let batches: Vec<Batch> = BatchIter::new(&self.test, self.batch_size, None).collect();
+        let mut sums = (0.0f64, 0.0f64, 0.0f64);
+        for b in &batches {
+            let shards = shard_batch(b, self.engine.n_workers())?;
+            let ev_in: Vec<_> = shards
+                .iter()
+                .map(|s| {
+                    (
+                        s.batch.x.clone(),
+                        s.batch.y.clone(),
+                        s.batch.valid_mask.clone(),
+                    )
+                })
+                .collect();
+            let (l, m, c) = self.engine.eval_sharded(ev_in)?;
+            sums.0 += l;
+            sums.1 += m;
+            sums.2 += c;
+        }
+        let count = sums.2.max(1.0);
+        Ok(EvalResult { loss: sums.0 / count, metric: sums.1 / count })
+    }
+
+    /// Fetch current parameters (e.g. to compare against the serial
+    /// trainer in tests).
+    pub fn params_to_host(&self) -> Result<Vec<crate::data::HostTensor>> {
+        self.engine.params_to_host()
+    }
+
+    pub fn run(&mut self) -> Result<TrainReport> {
+        for e in 0..self.cfg.epochs {
+            self.run_epoch()?;
+            let is_last = e + 1 == self.cfg.epochs;
+            if is_last
+                || (self.cfg.eval_every > 0 && (e + 1) % self.cfg.eval_every == 0)
+            {
+                let ev = self.evaluate()?;
+                self.recorder.record_eval(EvalRecord {
+                    step: self.step,
+                    epoch: self.epoch,
+                    loss: ev.loss,
+                    metric: ev.metric,
+                });
+            }
+        }
+        let final_eval = match self.recorder.evals.last() {
+            Some(e) => EvalResult { loss: e.loss, metric: e.metric },
+            None => self.evaluate()?,
+        };
+        let (fwd, bwd) = self.recorder.totals();
+        Ok(TrainReport {
+            model: self.cfg.model.clone(),
+            method: self.cfg.method.as_str().to_string(),
+            sampling_ratio: self.cfg.sampling_ratio,
+            epochs: self.epoch,
+            steps: self.step,
+            final_eval,
+            evals: self.recorder.evals.clone(),
+            forward_examples: fwd,
+            backward_examples: bwd,
+            realized_ratio: self.budget.realized_ratio(),
+            saved_fraction: self.budget.saved_fraction(),
+            steps_per_sec: self.recorder.throughput(),
+            latency_summary: self.recorder.latency_summary(),
+        })
+    }
+}

@@ -1,0 +1,188 @@
+//! Status/control plane for long-running training jobs.
+//!
+//! A production continuous-training subsystem must be observable while
+//! it runs. [`StatusBoard`] is a cheap shared snapshot the trainer
+//! updates each step; [`serve`] exposes it as one-line JSON over TCP on
+//! a dedicated acceptor thread (`nc host port` or `obftf status` reads
+//! it). Offline note: tokio is not in the vendored dependency set, so
+//! the event loop is a std-net acceptor thread — same wire protocol.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Live snapshot of a training run.
+#[derive(Clone, Debug, Default)]
+pub struct Status {
+    pub model: String,
+    pub method: String,
+    pub step: u64,
+    pub sel_loss: f32,
+    pub batch_loss: f32,
+    pub realized_ratio: f64,
+    pub steps_per_sec: f64,
+    pub producer_blocked_ms: u64,
+    pub done: bool,
+}
+
+impl Status {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("model", Json::Str(self.model.clone()))
+            .set("method", Json::Str(self.method.clone()))
+            .set("step", Json::Num(self.step as f64))
+            .set("sel_loss", Json::Num(self.sel_loss as f64))
+            .set("batch_loss", Json::Num(self.batch_loss as f64))
+            .set("realized_ratio", Json::Num(self.realized_ratio))
+            .set("steps_per_sec", Json::Num(self.steps_per_sec))
+            .set("producer_blocked_ms", Json::Num(self.producer_blocked_ms as f64))
+            .set("done", Json::Bool(self.done));
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<Status> {
+        Ok(Status {
+            model: j.need("model")?.as_str()?.to_string(),
+            method: j.need("method")?.as_str()?.to_string(),
+            step: j.need("step")?.as_f64()? as u64,
+            sel_loss: j.need("sel_loss")?.as_f64()? as f32,
+            batch_loss: j.need("batch_loss")?.as_f64()? as f32,
+            realized_ratio: j.need("realized_ratio")?.as_f64()?,
+            steps_per_sec: j.need("steps_per_sec")?.as_f64()?,
+            producer_blocked_ms: j.need("producer_blocked_ms")?.as_f64()? as u64,
+            done: j.need("done")?.as_bool()?,
+        })
+    }
+}
+
+/// Shared, cheaply-clonable handle to the live status.
+#[derive(Clone, Default)]
+pub struct StatusBoard {
+    inner: Arc<Mutex<Status>>,
+}
+
+impl StatusBoard {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn update(&self, f: impl FnOnce(&mut Status)) {
+        let mut s = self.inner.lock().expect("status lock");
+        f(&mut s);
+    }
+
+    pub fn snapshot(&self) -> Status {
+        self.inner.lock().expect("status lock").clone()
+    }
+}
+
+/// Handle to a running status server; dropping stops the acceptor.
+pub struct StatusServer {
+    pub addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Drop for StatusServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // poke the listener so accept() returns
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Serve the board as one JSON line per connection. Bind with port 0 to
+/// let the OS choose; the chosen address is in the returned handle.
+pub fn serve(board: StatusBoard, addr: &str) -> Result<StatusServer> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    let local = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let tstop = stop.clone();
+    let handle = std::thread::Builder::new()
+        .name("obftf-status".into())
+        .spawn(move || {
+            for conn in listener.incoming() {
+                if tstop.load(Ordering::Relaxed) {
+                    return;
+                }
+                let Ok(mut sock) = conn else { continue };
+                let line = board.snapshot().to_json().to_string_compact();
+                let _ = sock.write_all(line.as_bytes());
+                let _ = sock.write_all(b"\n");
+            }
+        })
+        .context("spawn status thread")?;
+    Ok(StatusServer { addr: local, stop, handle: Some(handle) })
+}
+
+/// Blocking one-shot client: read the status line from `addr`.
+pub fn read_status(addr: &str) -> Result<Status> {
+    let mut sock = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+    let mut buf = String::new();
+    sock.read_to_string(&mut buf)?;
+    let j = json::parse(buf.trim())?;
+    Status::from_json(&j)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn board_update_and_snapshot() {
+        let b = StatusBoard::new();
+        b.update(|s| {
+            s.step = 7;
+            s.sel_loss = 0.5;
+        });
+        let snap = b.snapshot();
+        assert_eq!(snap.step, 7);
+        assert_eq!(snap.sel_loss, 0.5);
+    }
+
+    #[test]
+    fn status_json_roundtrip() {
+        let s = Status {
+            model: "mlp".into(),
+            method: "obftf".into(),
+            step: 42,
+            sel_loss: 1.25,
+            batch_loss: 2.5,
+            realized_ratio: 0.25,
+            steps_per_sec: 10.0,
+            producer_blocked_ms: 3,
+            done: true,
+        };
+        let j = s.to_json();
+        let got = Status::from_json(&json::parse(&j.to_string_compact()).unwrap()).unwrap();
+        assert_eq!(got.step, 42);
+        assert_eq!(got.model, "mlp");
+        assert!(got.done);
+    }
+
+    #[test]
+    fn serve_and_read_roundtrip() {
+        let board = StatusBoard::new();
+        board.update(|s| {
+            s.model = "mlp".into();
+            s.step = 42;
+        });
+        let server = serve(board.clone(), "127.0.0.1:0").unwrap();
+        let got = read_status(&server.addr.to_string()).unwrap();
+        assert_eq!(got.step, 42);
+        assert_eq!(got.model, "mlp");
+        // live update visible on next connection
+        board.update(|s| s.step = 43);
+        let got = read_status(&server.addr.to_string()).unwrap();
+        assert_eq!(got.step, 43);
+        drop(server); // must not hang
+    }
+}

@@ -1,0 +1,425 @@
+//! The single-process OBFTF training loop (paper Algorithm 1).
+//!
+//! Per batch: **forward** every example (line 4–5), **select** the
+//! backward subset with the configured policy (line 6–7), **backward**
+//! only the selection (line 8). Everything is timed and recorded; the
+//! compute accounting lives in [`super::budget`].
+
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::checkpoint::Checkpoint;
+use crate::config::TrainConfig;
+use crate::data::dataset::{Batch, BatchIter, InMemoryDataset};
+use crate::data::rng::Rng;
+use crate::metrics::{EvalRecord, Recorder, StepRecord};
+use crate::runtime::{Flavour, Manifest, Session};
+use crate::sampling::{budget_for, selection_mask, Sampler};
+use crate::coordinator::budget::BudgetTracker;
+
+/// Final evaluation numbers.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalResult {
+    pub loss: f64,
+    /// Accuracy for classification, MSE for regression.
+    pub metric: f64,
+}
+
+/// What a training run returns.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub model: String,
+    pub method: String,
+    pub sampling_ratio: f64,
+    pub epochs: usize,
+    pub steps: u64,
+    pub final_eval: EvalResult,
+    pub evals: Vec<EvalRecord>,
+    pub forward_examples: u64,
+    pub backward_examples: u64,
+    pub realized_ratio: f64,
+    pub saved_fraction: f64,
+    pub steps_per_sec: f64,
+    pub latency_summary: String,
+}
+
+impl TrainReport {
+    /// JSON rendering for the CLI / logs (no serde offline).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut j = Json::obj();
+        j.set("model", Json::Str(self.model.clone()))
+            .set("method", Json::Str(self.method.clone()))
+            .set("sampling_ratio", Json::Num(self.sampling_ratio))
+            .set("epochs", Json::Num(self.epochs as f64))
+            .set("steps", Json::Num(self.steps as f64))
+            .set("final_loss", Json::Num(self.final_eval.loss))
+            .set("final_metric", Json::Num(self.final_eval.metric))
+            .set("forward_examples", Json::Num(self.forward_examples as f64))
+            .set("backward_examples", Json::Num(self.backward_examples as f64))
+            .set("realized_ratio", Json::Num(self.realized_ratio))
+            .set("saved_fraction", Json::Num(self.saved_fraction))
+            .set("steps_per_sec", Json::Num(self.steps_per_sec))
+            .set("latency", Json::Str(self.latency_summary.clone()))
+            .set(
+                "evals",
+                Json::Arr(
+                    self.evals
+                        .iter()
+                        .map(|e| {
+                            let mut o = Json::obj();
+                            o.set("step", Json::Num(e.step as f64))
+                                .set("epoch", Json::Num(e.epoch as f64))
+                                .set("loss", Json::Num(e.loss))
+                                .set("metric", Json::Num(e.metric));
+                            o
+                        })
+                        .collect(),
+                ),
+            );
+        j
+    }
+}
+
+/// Build the (train, test) datasets a config names, honouring size and
+/// label-noise overrides.
+pub fn build_datasets(cfg: &TrainConfig) -> Result<(InMemoryDataset, InMemoryDataset)> {
+    use crate::data::{imagenet_proxy::ImagenetProxySpec, mnist_proxy::MnistProxySpec,
+                      regression::RegressionSpec};
+    let name = cfg.dataset_name();
+    let seed = cfg.seed;
+    Ok(match name.as_str() {
+        "regression" | "regression_outliers" => {
+            let mut spec = if name == "regression_outliers" {
+                RegressionSpec::with_outliers()
+            } else {
+                RegressionSpec::default()
+            };
+            if let Some(n) = cfg.n_train {
+                spec.n_train = n;
+            }
+            if let Some(n) = cfg.n_test {
+                spec.n_test = n;
+            }
+            spec.build(seed)
+        }
+        "mnist_proxy" => {
+            let mut spec = MnistProxySpec::default();
+            if let Some(n) = cfg.n_train {
+                spec.n_train = n;
+            }
+            if let Some(n) = cfg.n_test {
+                spec.n_test = n;
+            }
+            spec.label_noise = cfg.label_noise;
+            spec.build(seed)
+        }
+        "imagenet_proxy" => {
+            let mut spec = ImagenetProxySpec::default();
+            if let Some(n) = cfg.n_train {
+                spec.n_train = n;
+            }
+            if let Some(n) = cfg.n_test {
+                spec.n_test = n;
+            }
+            spec.label_noise = cfg.label_noise;
+            spec.build(seed)
+        }
+        other => anyhow::bail!("unknown dataset {other:?}"),
+    })
+}
+
+/// The single-process trainer.
+pub struct Trainer {
+    pub cfg: TrainConfig,
+    session: Session,
+    sampler: Box<dyn Sampler>,
+    train: InMemoryDataset,
+    test: InMemoryDataset,
+    rng: Rng,
+    pub recorder: Recorder,
+    pub budget: BudgetTracker,
+    /// Per-instance loss cache (`cfg.reuse_losses`): losses recorded
+    /// from earlier forwards stand in for re-execution — the paper's
+    /// "inference already ran the forward" premise.
+    cache: Option<crate::coordinator::loss_cache::LossCache>,
+    step: u64,
+    epoch: usize,
+}
+
+impl Trainer {
+    /// Build everything from a config: manifest, session (compiles the
+    /// six executables), datasets, sampler — and initialize parameters.
+    pub fn from_config(cfg: &TrainConfig) -> Result<Trainer> {
+        cfg.validate()?;
+        let manifest = Manifest::load(&crate::artifacts_dir())?;
+        Self::with_manifest(cfg, &manifest)
+    }
+
+    /// Same, with an explicit manifest (tests point this elsewhere).
+    pub fn with_manifest(cfg: &TrainConfig, manifest: &Manifest) -> Result<Trainer> {
+        cfg.validate()?;
+        let flavour: Flavour = cfg.flavour.parse()?;
+        let mut session = Session::new(manifest, &cfg.model, flavour)
+            .with_context(|| format!("building session for model {}", cfg.model))?;
+        session.init(cfg.seed as i32)?;
+        let (train, test) = build_datasets(cfg)?;
+        // dataset/model shape compatibility check up front
+        if train.x_shape != session.entry().x_shape {
+            anyhow::bail!(
+                "dataset {} features {:?} incompatible with model {} ({:?})",
+                cfg.dataset_name(),
+                train.x_shape,
+                cfg.model,
+                session.entry().x_shape
+            );
+        }
+        let sampler = cfg.method.build(cfg.gamma);
+        let mut rng = Rng::seed_from(cfg.seed ^ 0x747261696e657221);
+        let _shuffle_stream = rng.split();
+        let cache = if cfg.reuse_losses {
+            let max_age = if cfg.loss_max_age > 0 {
+                cfg.loss_max_age
+            } else {
+                // auto: two epochs' worth of steps — a shuffled epoch
+                // mixes rows stamped across the whole previous epoch,
+                // so a one-epoch window expires mid-epoch; two epochs
+                // yields the intended refresh-every-other-pass cadence
+                2 * train.len().div_ceil(manifest.batch) as u64
+            };
+            Some(crate::coordinator::loss_cache::LossCache::new(train.len(), max_age))
+        } else {
+            None
+        };
+        Ok(Trainer {
+            cfg: cfg.clone(),
+            session,
+            sampler,
+            train,
+            test,
+            rng,
+            recorder: Recorder::new(),
+            budget: BudgetTracker::new(),
+            cache,
+            step: 0,
+            epoch: 0,
+        })
+    }
+
+    /// `(hits, misses)` of the loss cache at batch granularity.
+    pub fn cache_stats(&self) -> (u64, u64) {
+        self.cache.as_ref().map(|c| c.stats()).unwrap_or((0, 0))
+    }
+
+    pub fn session(&self) -> &Session {
+        &self.session
+    }
+
+    pub fn step_count(&self) -> u64 {
+        self.step
+    }
+
+    pub fn train_len(&self) -> usize {
+        self.train.len()
+    }
+
+    /// One Algorithm-1 iteration on a prepared batch.
+    pub fn step_batch(&mut self, batch: &Batch) -> Result<StepRecord> {
+        // (1) ten forward: per-example losses — from the cache when the
+        // paper's inference-already-forwarded premise applies, else by
+        // executing fwd_loss and recording into the cache
+        let t0 = Instant::now();
+        let cached = self
+            .cache
+            .as_mut()
+            .and_then(|c| c.lookup_batch(&batch.ids, &batch.valid_mask, self.step));
+        let losses = match cached {
+            Some(l) => l,
+            None => {
+                let l = self.session.fwd_loss(&batch.x, &batch.y)?;
+                if let Some(c) = self.cache.as_mut() {
+                    c.record_batch(&batch.ids, &batch.valid_mask, &l, self.step);
+                }
+                self.budget.record_forward_executed(batch.real);
+                l
+            }
+        };
+        let fwd_us = t0.elapsed().as_micros() as u64;
+
+        // (2) selection
+        let t1 = Instant::now();
+        let b = budget_for(self.cfg.sampling_ratio, batch.real);
+        let selected =
+            self.sampler
+                .select(&losses, &batch.valid_mask, b, &mut self.rng);
+        let mask = selection_mask(&selected, batch.batch_size());
+        let sel_us = t1.elapsed().as_micros() as u64;
+
+        // (3) one backward on the selection: gathered sub-batch by
+        // default (O(b) backward), masked full batch when forced
+        let t2 = Instant::now();
+        let sel_loss = if self.cfg.masked_backward {
+            self.session.train_step(&batch.x, &batch.y, &mask, self.cfg.lr)?
+        } else {
+            self.session
+                .train_step_selected(&batch.x, &batch.y, &selected, self.cfg.lr)?
+        };
+        let bwd_us = t2.elapsed().as_micros() as u64;
+
+        let batch_loss = {
+            let mut s = 0.0f64;
+            let mut c = 0.0f64;
+            for (l, m) in losses.iter().zip(&batch.valid_mask) {
+                s += (*l as f64) * (*m as f64);
+                c += *m as f64;
+            }
+            (s / c.max(1.0)) as f32
+        };
+
+        self.budget.record_step(batch.real, selected.len());
+        let rec = StepRecord {
+            step: self.step,
+            epoch: self.epoch,
+            sel_loss,
+            batch_loss,
+            n_forward: batch.real,
+            n_selected: selected.len(),
+            fwd_us,
+            sel_us,
+            bwd_us,
+        };
+        self.recorder.record_step(rec);
+        self.step += 1;
+        Ok(rec)
+    }
+
+    /// One epoch over the training set (shuffled).
+    pub fn run_epoch(&mut self) -> Result<()> {
+        let mut shuffle_rng = self.rng.split();
+        let batch = self.session.batch();
+        // collect batches eagerly to release the &self.train borrow
+        let batches: Vec<Batch> =
+            BatchIter::new(&self.train, batch, Some(&mut shuffle_rng)).collect();
+        for b in &batches {
+            self.step_batch(b)?;
+        }
+        self.epoch += 1;
+        Ok(())
+    }
+
+    /// Full evaluation over the test split.
+    pub fn evaluate(&mut self) -> Result<EvalResult> {
+        let batch = self.session.batch();
+        let batches: Vec<Batch> = BatchIter::new(&self.test, batch, None).collect();
+        let mut sums = (0.0f64, 0.0f64, 0.0f64);
+        for b in &batches {
+            let (l, m, c) = self.session.eval_batch(&b.x, &b.y, &b.valid_mask)?;
+            sums.0 += l;
+            sums.1 += m;
+            sums.2 += c;
+        }
+        let count = sums.2.max(1.0);
+        Ok(EvalResult { loss: sums.0 / count, metric: sums.1 / count })
+    }
+
+    fn maybe_checkpoint(&self) -> Result<()> {
+        if let Some(path) = &self.cfg.checkpoint {
+            self.save_checkpoint(Path::new(path))?;
+        }
+        Ok(())
+    }
+
+    /// Snapshot parameters + position to `path`.
+    pub fn save_checkpoint(&self, path: &Path) -> Result<()> {
+        let params = self.session.params_to_host()?;
+        let named: Vec<(String, _)> = self
+            .session
+            .entry()
+            .params
+            .iter()
+            .map(|p| p.name.clone())
+            .zip(params)
+            .collect();
+        Checkpoint { step: self.step, epoch: self.epoch as u64, params: named }.save(path)
+    }
+
+    /// Restore parameters + position from `path`.
+    pub fn load_checkpoint(&mut self, path: &Path) -> Result<()> {
+        let ck = Checkpoint::load(path)?;
+        let expected: Vec<&str> = self
+            .session
+            .entry()
+            .params
+            .iter()
+            .map(|p| p.name.as_str())
+            .collect();
+        let got: Vec<&str> = ck.params.iter().map(|(n, _)| n.as_str()).collect();
+        if expected != got {
+            anyhow::bail!(
+                "checkpoint params {got:?} do not match model {} ({expected:?})",
+                self.cfg.model
+            );
+        }
+        let tensors: Vec<_> = ck.params.into_iter().map(|(_, t)| t).collect();
+        self.session.load_params(&tensors)?;
+        self.step = ck.step;
+        self.epoch = ck.epoch as usize;
+        Ok(())
+    }
+
+    /// Run the configured number of epochs; eval per `eval_every`;
+    /// checkpoint per epoch when configured.
+    pub fn run(&mut self) -> Result<TrainReport> {
+        for e in 0..self.cfg.epochs {
+            self.run_epoch()?;
+            let is_last = e + 1 == self.cfg.epochs;
+            if is_last
+                || (self.cfg.eval_every > 0 && (e + 1) % self.cfg.eval_every == 0)
+            {
+                let ev = self.evaluate()?;
+                self.recorder.record_eval(EvalRecord {
+                    step: self.step,
+                    epoch: self.epoch,
+                    loss: ev.loss,
+                    metric: ev.metric,
+                });
+            }
+            self.maybe_checkpoint()?;
+        }
+        self.report()
+    }
+
+    /// Assemble the report from recorded state (used by run() and the
+    /// streaming/parallel drivers); writes the metrics CSVs when
+    /// configured.
+    pub fn report(&mut self) -> Result<TrainReport> {
+        if let Some(out) = &self.cfg.metrics_out {
+            let out = PathBuf::from(out);
+            self.recorder.write_steps_csv(&out)?;
+            let evals = out.with_extension("evals.csv");
+            self.recorder.write_evals_csv(&evals)?;
+        }
+        let final_eval = match self.recorder.evals.last() {
+            Some(e) => EvalResult { loss: e.loss, metric: e.metric },
+            None => self.evaluate()?,
+        };
+        let (fwd, bwd) = self.recorder.totals();
+        Ok(TrainReport {
+            model: self.cfg.model.clone(),
+            method: self.cfg.method.as_str().to_string(),
+            sampling_ratio: self.cfg.sampling_ratio,
+            epochs: self.epoch,
+            steps: self.step,
+            final_eval,
+            evals: self.recorder.evals.clone(),
+            forward_examples: fwd,
+            backward_examples: bwd,
+            realized_ratio: self.budget.realized_ratio(),
+            saved_fraction: self.budget.saved_fraction(),
+            steps_per_sec: self.recorder.throughput(),
+            latency_summary: self.recorder.latency_summary(),
+        })
+    }
+}

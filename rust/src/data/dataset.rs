@@ -1,0 +1,235 @@
+//! In-memory datasets and fixed-size batch iteration.
+//!
+//! The AOT executables are compiled for a fixed batch size (the manifest's
+//! `batch`); the final partial batch of an epoch is padded and its padding
+//! rows masked out (`Batch::valid_mask`), so no data is dropped and eval
+//! statistics stay exact.
+
+use anyhow::{bail, Result};
+
+use super::rng::Rng;
+use super::tensor::HostTensor;
+
+/// Targets: regression uses f32, classification uses i32 class ids.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Targets {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Targets {
+    pub fn len(&self) -> usize {
+        match self {
+            Targets::F32(v) => v.len(),
+            Targets::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A dense, in-memory labelled dataset with fixed feature shape.
+#[derive(Clone, Debug)]
+pub struct InMemoryDataset {
+    /// Per-example feature shape (without the leading batch dim).
+    pub x_shape: Vec<usize>,
+    /// Flattened features, `len = n * prod(x_shape)`.
+    pub xs: Vec<f32>,
+    pub ys: Targets,
+}
+
+impl InMemoryDataset {
+    pub fn new(x_shape: Vec<usize>, xs: Vec<f32>, ys: Targets) -> Result<Self> {
+        let stride: usize = x_shape.iter().product();
+        if stride == 0 {
+            bail!("x_shape must be non-empty and non-zero: {x_shape:?}");
+        }
+        if xs.len() % stride != 0 || xs.len() / stride != ys.len() {
+            bail!(
+                "inconsistent dataset: {} features / stride {} vs {} targets",
+                xs.len(),
+                stride,
+                ys.len()
+            );
+        }
+        Ok(InMemoryDataset { x_shape, xs, ys })
+    }
+
+    pub fn len(&self) -> usize {
+        self.ys.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn feature_stride(&self) -> usize {
+        self.x_shape.iter().product()
+    }
+
+    /// Assemble a padded fixed-size batch from `indices` (may be fewer
+    /// than `batch`; the remainder is zero-padded and masked out).
+    pub fn gather_batch(&self, indices: &[usize], batch: usize) -> Result<Batch> {
+        if indices.len() > batch {
+            bail!("gather_batch: {} indices > batch {batch}", indices.len());
+        }
+        let stride = self.feature_stride();
+        let mut xs = vec![0.0f32; batch * stride];
+        for (row, &i) in indices.iter().enumerate() {
+            if i >= self.len() {
+                bail!("index {i} out of range (len {})", self.len());
+            }
+            xs[row * stride..(row + 1) * stride]
+                .copy_from_slice(&self.xs[i * stride..(i + 1) * stride]);
+        }
+        let mut x_shape = vec![batch];
+        x_shape.extend_from_slice(&self.x_shape);
+        let x = HostTensor::f32(x_shape, xs)?;
+        let y = match &self.ys {
+            Targets::F32(v) => {
+                let mut out = vec![0.0f32; batch];
+                for (row, &i) in indices.iter().enumerate() {
+                    out[row] = v[i];
+                }
+                HostTensor::f32(vec![batch], out)?
+            }
+            Targets::I32(v) => {
+                let mut out = vec![0i32; batch];
+                for (row, &i) in indices.iter().enumerate() {
+                    out[row] = v[i];
+                }
+                HostTensor::i32(vec![batch], out)?
+            }
+        };
+        let mut mask = vec![0.0f32; batch];
+        for m in mask.iter_mut().take(indices.len()) {
+            *m = 1.0;
+        }
+        let mut ids = vec![usize::MAX; batch];
+        ids[..indices.len()].copy_from_slice(indices);
+        Ok(Batch { x, y, valid_mask: mask, real: indices.len(), ids })
+    }
+}
+
+/// A fixed-size batch ready for the PJRT executables.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub x: HostTensor,
+    pub y: HostTensor,
+    /// 1.0 for real rows, 0.0 for padding.
+    pub valid_mask: Vec<f32>,
+    /// Number of real (unpadded) rows.
+    pub real: usize,
+    /// Source-dataset index per row (`usize::MAX` for padding) — the
+    /// stable example identity the loss cache keys on (the paper's
+    /// "record a constant amount of information per instance").
+    pub ids: Vec<usize>,
+}
+
+impl Batch {
+    pub fn batch_size(&self) -> usize {
+        self.valid_mask.len()
+    }
+}
+
+/// Epoch iterator: shuffles indices (optionally) and yields padded
+/// fixed-size batches covering the whole dataset.
+pub struct BatchIter<'a> {
+    ds: &'a InMemoryDataset,
+    order: Vec<usize>,
+    pos: usize,
+    batch: usize,
+}
+
+impl<'a> BatchIter<'a> {
+    pub fn new(ds: &'a InMemoryDataset, batch: usize, rng: Option<&mut Rng>) -> Self {
+        assert!(batch > 0, "batch must be positive");
+        let mut order: Vec<usize> = (0..ds.len()).collect();
+        if let Some(r) = rng {
+            r.shuffle(&mut order);
+        }
+        BatchIter { ds, order, pos: 0, batch }
+    }
+
+    pub fn num_batches(&self) -> usize {
+        self.ds.len().div_ceil(self.batch)
+    }
+}
+
+impl<'a> Iterator for BatchIter<'a> {
+    type Item = Batch;
+
+    fn next(&mut self) -> Option<Batch> {
+        if self.pos >= self.order.len() {
+            return None;
+        }
+        let end = (self.pos + self.batch).min(self.order.len());
+        let idx = &self.order[self.pos..end];
+        self.pos = end;
+        Some(
+            self.ds
+                .gather_batch(idx, self.batch)
+                .expect("indices from internal order are valid"),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy(n: usize) -> InMemoryDataset {
+        let xs: Vec<f32> = (0..n * 2).map(|i| i as f32).collect();
+        let ys = Targets::I32((0..n as i32).collect());
+        InMemoryDataset::new(vec![2], xs, ys).unwrap()
+    }
+
+    #[test]
+    fn gather_pads_and_masks() {
+        let ds = toy(5);
+        let b = ds.gather_batch(&[0, 3], 4).unwrap();
+        assert_eq!(b.real, 2);
+        assert_eq!(b.valid_mask, vec![1.0, 1.0, 0.0, 0.0]);
+        assert_eq!(b.x.as_f32().unwrap(), &[0.0, 1.0, 6.0, 7.0, 0.0, 0.0, 0.0, 0.0]);
+        assert_eq!(b.y.as_i32().unwrap(), &[0, 3, 0, 0]);
+    }
+
+    #[test]
+    fn gather_rejects_bad_index() {
+        let ds = toy(3);
+        assert!(ds.gather_batch(&[5], 4).is_err());
+        assert!(ds.gather_batch(&[0, 1, 2], 2).is_err());
+    }
+
+    #[test]
+    fn epoch_covers_every_example_once() {
+        let ds = toy(10);
+        let mut rng = Rng::seed_from(1);
+        let it = BatchIter::new(&ds, 4, Some(&mut rng));
+        assert_eq!(it.num_batches(), 3);
+        let mut seen: Vec<i32> = vec![];
+        for b in it {
+            let ys = b.y.as_i32().unwrap();
+            seen.extend_from_slice(&ys[..b.real]);
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn unshuffled_is_sequential() {
+        let ds = toy(6);
+        let it = BatchIter::new(&ds, 4, None);
+        let batches: Vec<Batch> = it.collect();
+        assert_eq!(batches[0].y.as_i32().unwrap()[..4], [0, 1, 2, 3]);
+        assert_eq!(batches[1].real, 2);
+    }
+
+    #[test]
+    fn inconsistent_construction_rejected() {
+        assert!(InMemoryDataset::new(vec![2], vec![0.0; 5], Targets::I32(vec![0, 1])).is_err());
+        assert!(InMemoryDataset::new(vec![0], vec![], Targets::I32(vec![])).is_err());
+    }
+}

@@ -1,0 +1,194 @@
+//! ImageNet-proxy generator (Table 3 substitution — see DESIGN.md §3).
+//!
+//! 100-class synthetic 16×16×3 images: each class owns a low-frequency
+//! 2-D pattern (random per-channel sinusoid mixture) plus a class color
+//! bias; examples add pixel noise whose magnitude varies by class. This
+//! gives a CNN-learnable signal with the heavy-tailed loss distribution
+//! that Table 3's phenomenon (max-prob collapse, OBFTF ≥ uniform at low
+//! ratios) depends on.
+
+use super::dataset::{InMemoryDataset, Targets};
+use super::rng::Rng;
+
+pub const IMG_HW: usize = 16;
+pub const IMG_C: usize = 3;
+pub const IMG_CLASSES: usize = 100;
+pub const IMG_DIM: usize = IMG_HW * IMG_HW * IMG_C;
+
+/// Per-class pattern parameters.
+#[derive(Clone, Debug)]
+struct ClassPattern {
+    /// Frequencies and phases per channel: (fx, fy, phase, amplitude).
+    waves: Vec<(f32, f32, f32, f32)>,
+    /// Constant per-channel color bias.
+    color: [f32; IMG_C],
+    /// Noise sigma for this class.
+    sigma: f32,
+}
+
+/// Configuration for the ImageNet-proxy generator.
+#[derive(Clone, Debug)]
+pub struct ImagenetProxySpec {
+    pub n_train: usize,
+    pub n_test: usize,
+    /// Base noise; per-class σ is drawn from `U(0.5, 1.5) · noise`.
+    pub noise: f32,
+    /// Fraction of training labels flipped.
+    pub label_noise: f32,
+}
+
+impl Default for ImagenetProxySpec {
+    fn default() -> Self {
+        ImagenetProxySpec {
+            n_train: 16384,
+            n_test: 4096,
+            noise: 0.6,
+            label_noise: 0.0,
+        }
+    }
+}
+
+impl ImagenetProxySpec {
+    fn patterns(&self, rng: &mut Rng) -> Vec<ClassPattern> {
+        (0..IMG_CLASSES)
+            .map(|_| ClassPattern {
+                waves: (0..IMG_C)
+                    .map(|_| {
+                        (
+                            rng.uniform_in(0.5, 3.0) as f32,
+                            rng.uniform_in(0.5, 3.0) as f32,
+                            rng.uniform_in(0.0, std::f64::consts::TAU) as f32,
+                            rng.uniform_in(0.4, 1.0) as f32,
+                        )
+                    })
+                    .collect(),
+                color: [
+                    rng.uniform_in(-0.5, 0.5) as f32,
+                    rng.uniform_in(-0.5, 0.5) as f32,
+                    rng.uniform_in(-0.5, 0.5) as f32,
+                ],
+                sigma: self.noise * rng.uniform_in(0.5, 1.5) as f32,
+            })
+            .collect()
+    }
+
+    fn render(&self, p: &ClassPattern, rng: &mut Rng, out: &mut Vec<f32>) {
+        // NHWC layout to match the jax model (`[n, 16, 16, 3]`).
+        for y in 0..IMG_HW {
+            for x in 0..IMG_HW {
+                for c in 0..IMG_C {
+                    let (fx, fy, ph, amp) = p.waves[c];
+                    let u = x as f32 / IMG_HW as f32;
+                    let v = y as f32 / IMG_HW as f32;
+                    let val = amp
+                        * (std::f32::consts::TAU * (fx * u + fy * v) + ph).sin()
+                        + p.color[c]
+                        + p.sigma * rng.normal() as f32;
+                    out.push(val);
+                }
+            }
+        }
+    }
+
+    fn generate(
+        &self,
+        n: usize,
+        patterns: &[ClassPattern],
+        label_noise: f32,
+        rng: &mut Rng,
+    ) -> InMemoryDataset {
+        // flip decisions on their own stream (see mnist_proxy::generate)
+        let mut flip_rng = rng.split();
+        let mut xs = Vec::with_capacity(n * IMG_DIM);
+        let mut ys = Vec::with_capacity(n);
+        for _ in 0..n {
+            let class = rng.below(IMG_CLASSES);
+            self.render(&patterns[class], rng, &mut xs);
+            let label = if label_noise > 0.0 && flip_rng.bernoulli(label_noise as f64) {
+                let mut l = flip_rng.below(IMG_CLASSES - 1);
+                if l >= class {
+                    l += 1;
+                }
+                l as i32
+            } else {
+                class as i32
+            };
+            ys.push(label);
+        }
+        InMemoryDataset::new(vec![IMG_HW, IMG_HW, IMG_C], xs, Targets::I32(ys))
+            .expect("generator produces consistent shapes")
+    }
+
+    /// Generate (train, test) with shared class patterns.
+    pub fn build(&self, seed: u64) -> (InMemoryDataset, InMemoryDataset) {
+        let mut rng = Rng::seed_from(seed ^ 0x696d675f70726f78); // "img_prox"
+        let patterns = self.patterns(&mut rng);
+        let mut train_rng = rng.split();
+        let mut test_rng = rng.split();
+        let train = self.generate(self.n_train, &patterns, self.label_noise, &mut train_rng);
+        let test = self.generate(self.n_test, &patterns, 0.0, &mut test_rng);
+        (train, test)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_label_range() {
+        let spec = ImagenetProxySpec { n_train: 128, n_test: 32, ..Default::default() };
+        let (tr, te) = spec.build(0);
+        assert_eq!(tr.len(), 128);
+        assert_eq!(te.len(), 32);
+        assert_eq!(tr.x_shape, vec![IMG_HW, IMG_HW, IMG_C]);
+        assert_eq!(tr.xs.len(), 128 * IMG_DIM);
+        if let Targets::I32(ys) = &tr.ys {
+            assert!(ys.iter().all(|&y| (0..IMG_CLASSES as i32).contains(&y)));
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let spec = ImagenetProxySpec { n_train: 16, n_test: 4, ..Default::default() };
+        let (a, _) = spec.build(9);
+        let (b, _) = spec.build(9);
+        assert_eq!(a.xs, b.xs);
+    }
+
+    #[test]
+    fn class_signal_exceeds_noise_floor() {
+        // two samples of the same class should correlate more than two of
+        // different classes, on average
+        let spec = ImagenetProxySpec {
+            n_train: 400,
+            n_test: 4,
+            noise: 0.3,
+            ..Default::default()
+        };
+        let (tr, _) = spec.build(3);
+        let Targets::I32(ys) = &tr.ys else { panic!() };
+        let dot = |i: usize, j: usize| -> f64 {
+            (0..IMG_DIM)
+                .map(|d| tr.xs[i * IMG_DIM + d] as f64 * tr.xs[j * IMG_DIM + d] as f64)
+                .sum()
+        };
+        let mut same = vec![];
+        let mut diff = vec![];
+        for i in 0..60 {
+            for j in (i + 1)..60 {
+                if ys[i] == ys[j] {
+                    same.push(dot(i, j));
+                } else {
+                    diff.push(dot(i, j));
+                }
+            }
+        }
+        if same.is_empty() {
+            return; // extremely unlikely with 60 draws over 100 classes; skip
+        }
+        let ms = same.iter().sum::<f64>() / same.len() as f64;
+        let md = diff.iter().sum::<f64>() / diff.len() as f64;
+        assert!(ms > md, "same-class corr {ms} <= diff-class {md}");
+    }
+}

@@ -1,0 +1,202 @@
+//! MNIST-proxy generator (Fig 2 substitution — see DESIGN.md §3).
+//!
+//! We have no MNIST files in this environment; the selection methods
+//! only consume the per-example **loss distribution**, so we synthesize
+//! a 10-class, 784-feature dataset with the same phenomenology at the
+//! same tensor shapes:
+//!
+//! * each class has a random dense template ("prototype digit");
+//! * examples are `template + σ_class · noise`, with per-class σ spread
+//!   so some classes stay hard longer (loss heterogeneity — what makes
+//!   loss-aware selection matter);
+//! * optional label noise injects outliers (mislabelled examples keep a
+//!   persistently high loss, the failure mode of max-prob selection).
+
+use super::dataset::{InMemoryDataset, Targets};
+use super::rng::Rng;
+
+pub const MNIST_DIM: usize = 784;
+pub const MNIST_CLASSES: usize = 10;
+
+/// Configuration for the MNIST-proxy generator.
+#[derive(Clone, Debug)]
+pub struct MnistProxySpec {
+    pub n_train: usize,
+    pub n_test: usize,
+    /// Base observation noise; per-class σ is `noise · (0.6 + 0.15·class)`.
+    pub noise: f32,
+    /// Fraction of training labels flipped to a random other class.
+    pub label_noise: f32,
+    /// Template magnitude (separation between class means).
+    pub template_scale: f32,
+}
+
+impl Default for MnistProxySpec {
+    fn default() -> Self {
+        MnistProxySpec {
+            n_train: 8192,
+            n_test: 2048,
+            noise: 1.0,
+            label_noise: 0.0,
+            template_scale: 0.35,
+        }
+    }
+}
+
+impl MnistProxySpec {
+    fn class_sigma(&self, class: usize) -> f32 {
+        self.noise * (0.6 + 0.15 * class as f32)
+    }
+
+    fn templates(&self, rng: &mut Rng) -> Vec<Vec<f32>> {
+        (0..MNIST_CLASSES)
+            .map(|_| {
+                (0..MNIST_DIM)
+                    .map(|_| self.template_scale * rng.normal() as f32)
+                    .collect()
+            })
+            .collect()
+    }
+
+    fn generate(
+        &self,
+        n: usize,
+        templates: &[Vec<f32>],
+        label_noise: f32,
+        rng: &mut Rng,
+    ) -> InMemoryDataset {
+        // Separate stream for flip decisions so the feature/class draws
+        // stay identical between clean and noisy generations of the same
+        // seed (label noise is then a pure label perturbation).
+        let mut flip_rng = rng.split();
+        let mut xs = Vec::with_capacity(n * MNIST_DIM);
+        let mut ys = Vec::with_capacity(n);
+        for _ in 0..n {
+            let class = rng.below(MNIST_CLASSES);
+            let sigma = self.class_sigma(class);
+            let t = &templates[class];
+            for &tv in t.iter() {
+                xs.push(tv + sigma * rng.normal() as f32);
+            }
+            let label = if label_noise > 0.0 && flip_rng.bernoulli(label_noise as f64) {
+                // flip to a uniformly random *different* class
+                let mut l = flip_rng.below(MNIST_CLASSES - 1);
+                if l >= class {
+                    l += 1;
+                }
+                l as i32
+            } else {
+                class as i32
+            };
+            ys.push(label);
+        }
+        InMemoryDataset::new(vec![MNIST_DIM], xs, Targets::I32(ys))
+            .expect("generator produces consistent shapes")
+    }
+
+    /// Generate (train, test). Label noise only contaminates training.
+    pub fn build(&self, seed: u64) -> (InMemoryDataset, InMemoryDataset) {
+        let mut rng = Rng::seed_from(seed ^ 0x6d6e6973745f7078); // "mnist_px"
+        let templates = self.templates(&mut rng);
+        let mut train_rng = rng.split();
+        let mut test_rng = rng.split();
+        let train = self.generate(self.n_train, &templates, self.label_noise, &mut train_rng);
+        let test = self.generate(self.n_test, &templates, 0.0, &mut test_rng);
+        (train, test)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_labels() {
+        let spec = MnistProxySpec { n_train: 256, n_test: 64, ..Default::default() };
+        let (tr, te) = spec.build(0);
+        assert_eq!(tr.len(), 256);
+        assert_eq!(te.len(), 64);
+        assert_eq!(tr.x_shape, vec![MNIST_DIM]);
+        if let Targets::I32(ys) = &tr.ys {
+            assert!(ys.iter().all(|&y| (0..10).contains(&y)));
+            // all 10 classes present with 256 draws (whp)
+            let mut seen = [false; 10];
+            for &y in ys {
+                seen[y as usize] = true;
+            }
+            assert!(seen.iter().filter(|&&s| s).count() >= 8);
+        }
+    }
+
+    #[test]
+    fn label_noise_flips_some_labels() {
+        let clean = MnistProxySpec { n_train: 512, n_test: 16, ..Default::default() };
+        let noisy = MnistProxySpec { label_noise: 0.2, ..clean.clone() };
+        let (a, _) = clean.build(7);
+        let (b, _) = noisy.build(7);
+        let (Targets::I32(ya), Targets::I32(yb)) = (&a.ys, &b.ys) else {
+            panic!()
+        };
+        let flipped = ya.iter().zip(yb).filter(|(p, q)| p != q).count();
+        // ~20% of 512 = ~102; allow wide tolerance
+        assert!((50..200).contains(&flipped), "flipped={flipped}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let spec = MnistProxySpec { n_train: 64, n_test: 16, ..Default::default() };
+        let (a, _) = spec.build(5);
+        let (b, _) = spec.build(5);
+        assert_eq!(a.xs, b.xs);
+        assert_eq!(a.ys, b.ys);
+    }
+
+    #[test]
+    fn classes_are_separable_by_template_distance() {
+        // nearest-template classification on clean data should beat chance
+        let spec = MnistProxySpec {
+            n_train: 200,
+            n_test: 16,
+            noise: 0.5,
+            ..Default::default()
+        };
+        let (tr, _) = spec.build(1);
+        // estimate per-class means from the data itself
+        let Targets::I32(ys) = &tr.ys else { panic!() };
+        let mut means = vec![vec![0.0f64; MNIST_DIM]; 10];
+        let mut counts = [0usize; 10];
+        for (i, &y) in ys.iter().enumerate() {
+            counts[y as usize] += 1;
+            for d in 0..MNIST_DIM {
+                means[y as usize][d] += tr.xs[i * MNIST_DIM + d] as f64;
+            }
+        }
+        for (m, &c) in means.iter_mut().zip(&counts) {
+            if c > 0 {
+                for v in m.iter_mut() {
+                    *v /= c as f64;
+                }
+            }
+        }
+        let mut correct = 0;
+        for (i, &y) in ys.iter().enumerate() {
+            let mut best = (f64::INFINITY, 0usize);
+            for (c, m) in means.iter().enumerate() {
+                let d2: f64 = (0..MNIST_DIM)
+                    .map(|d| {
+                        let diff = tr.xs[i * MNIST_DIM + d] as f64 - m[d];
+                        diff * diff
+                    })
+                    .sum();
+                if d2 < best.0 {
+                    best = (d2, c);
+                }
+            }
+            if best.1 == y as usize {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / ys.len() as f64;
+        assert!(acc > 0.5, "nearest-mean accuracy {acc}");
+    }
+}

@@ -1,0 +1,77 @@
+//! Data substrate: deterministic RNG, host tensors, synthetic dataset
+//! generators (the paper's three workloads), batching, sharding and the
+//! streaming/prefetch pipeline.
+//!
+//! | paper workload | generator | DESIGN.md id |
+//! |---|---|---|
+//! | §4.1 linear regression (± outliers) | [`regression::RegressionSpec`] | fig1a/fig1b |
+//! | §4.2 MNIST | [`mnist_proxy::MnistProxySpec`] | fig2 |
+//! | §4.3 ImageNet | [`imagenet_proxy::ImagenetProxySpec`] | tab3 |
+
+pub mod dataset;
+pub mod imagenet_proxy;
+pub mod mnist_proxy;
+pub mod regression;
+pub mod rng;
+pub mod shard;
+pub mod stream;
+pub mod tensor;
+
+pub use dataset::{Batch, BatchIter, InMemoryDataset, Targets};
+pub use rng::Rng;
+pub use tensor::{HostTensor, TensorData};
+
+use anyhow::{bail, Result};
+
+/// Build the (train, test) datasets named by a config string.
+///
+/// Recognized names: `regression`, `regression_outliers`, `mnist_proxy`,
+/// `imagenet_proxy`. Sizes can be overridden by the caller afterwards by
+/// regenerating with an explicit spec.
+pub fn build_named(name: &str, seed: u64) -> Result<(InMemoryDataset, InMemoryDataset)> {
+    match name {
+        "regression" => Ok(regression::RegressionSpec::default().build(seed)),
+        "regression_outliers" => Ok(regression::RegressionSpec::with_outliers().build(seed)),
+        "mnist_proxy" => Ok(mnist_proxy::MnistProxySpec::default().build(seed)),
+        "imagenet_proxy" => Ok(imagenet_proxy::ImagenetProxySpec::default().build(seed)),
+        other => bail!(
+            "unknown dataset {other:?}; expected regression | regression_outliers | \
+             mnist_proxy | imagenet_proxy"
+        ),
+    }
+}
+
+/// The dataset conventionally paired with each model.
+pub fn default_dataset_for(model: &str) -> &'static str {
+    match model {
+        "linreg" => "regression",
+        "mlp" => "mnist_proxy",
+        "cnn" | "cnn_lite" => "imagenet_proxy",
+        _ => "mnist_proxy",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_named_all_variants() {
+        for name in ["regression", "regression_outliers", "mnist_proxy", "imagenet_proxy"] {
+            // Use tiny spec sizes by building through the specs directly
+            // where large; here we just check dispatch works.
+            if name.starts_with("regression") {
+                let (tr, te) = build_named(name, 1).unwrap();
+                assert!(tr.len() > 0 && te.len() > 0);
+            }
+        }
+        assert!(build_named("cifar", 0).is_err());
+    }
+
+    #[test]
+    fn default_pairings() {
+        assert_eq!(default_dataset_for("linreg"), "regression");
+        assert_eq!(default_dataset_for("mlp"), "mnist_proxy");
+        assert_eq!(default_dataset_for("cnn"), "imagenet_proxy");
+    }
+}

@@ -1,0 +1,128 @@
+//! Paper §4.1 synthetic regression workloads (Fig 1).
+//!
+//! Clean:   `y = 2x + 1 + U(-5, 5)`, 1000 train / 10000 test points.
+//! Outlier: same, plus an extra `U(-20, 20)` on 20 designated training
+//! points — the robustness stressor that destabilizes the min-k and
+//! selective-backprop baselines in Fig 1 (right).
+
+use super::dataset::{InMemoryDataset, Targets};
+use super::rng::Rng;
+
+/// Configuration for the Fig 1 generator. Defaults match the paper.
+#[derive(Clone, Debug)]
+pub struct RegressionSpec {
+    pub n_train: usize,
+    pub n_test: usize,
+    /// Ground-truth slope/intercept (`y = slope·x + intercept + noise`).
+    pub slope: f32,
+    pub intercept: f32,
+    /// Observation noise `U(-noise, noise)`.
+    pub noise: f32,
+    /// Number of outlier points in the *training* split.
+    pub n_outliers: usize,
+    /// Outlier perturbation `U(-outlier_mag, outlier_mag)`.
+    pub outlier_mag: f32,
+    /// Covariate range `x ~ U(-x_range, x_range)`.
+    pub x_range: f32,
+}
+
+impl Default for RegressionSpec {
+    fn default() -> Self {
+        RegressionSpec {
+            n_train: 1000,
+            n_test: 10000,
+            slope: 2.0,
+            intercept: 1.0,
+            noise: 5.0,
+            n_outliers: 0,
+            outlier_mag: 20.0,
+            x_range: 10.0,
+        }
+    }
+}
+
+impl RegressionSpec {
+    /// The paper's outlier variant: 20 points get `+U(-20, 20)`.
+    pub fn with_outliers() -> Self {
+        RegressionSpec { n_outliers: 20, ..Default::default() }
+    }
+
+    fn generate(&self, n: usize, n_outliers: usize, rng: &mut Rng) -> InMemoryDataset {
+        let mut xs = Vec::with_capacity(n);
+        let mut ys = Vec::with_capacity(n);
+        for _ in 0..n {
+            let x = rng.uniform_in(-self.x_range as f64, self.x_range as f64) as f32;
+            let eps = rng.uniform_in(-self.noise as f64, self.noise as f64) as f32;
+            xs.push(x);
+            ys.push(self.slope * x + self.intercept + eps);
+        }
+        if n_outliers > 0 {
+            let idx = rng.choose_k(n, n_outliers.min(n));
+            for i in idx {
+                ys[i] += rng.uniform_in(-self.outlier_mag as f64, self.outlier_mag as f64) as f32;
+            }
+        }
+        InMemoryDataset::new(vec![1], xs, Targets::F32(ys))
+            .expect("generator produces consistent shapes")
+    }
+
+    /// Generate the (train, test) splits. Outliers only contaminate the
+    /// training split, matching the paper's setup.
+    pub fn build(&self, seed: u64) -> (InMemoryDataset, InMemoryDataset) {
+        let mut rng = Rng::seed_from(seed);
+        let mut train_rng = rng.split();
+        let mut test_rng = rng.split();
+        let train = self.generate(self.n_train, self.n_outliers, &mut train_rng);
+        let test = self.generate(self.n_test, 0, &mut test_rng);
+        (train, test)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_match_paper() {
+        let (tr, te) = RegressionSpec::default().build(0);
+        assert_eq!(tr.len(), 1000);
+        assert_eq!(te.len(), 10000);
+        assert_eq!(tr.x_shape, vec![1]);
+    }
+
+    #[test]
+    fn clean_data_fits_line_within_noise() {
+        let (tr, _) = RegressionSpec::default().build(1);
+        if let Targets::F32(ys) = &tr.ys {
+            for (x, y) in tr.xs.iter().zip(ys) {
+                let resid = y - (2.0 * x + 1.0);
+                assert!(resid.abs() <= 5.0 + 1e-4, "residual {resid}");
+            }
+        } else {
+            panic!("regression targets must be f32");
+        }
+    }
+
+    #[test]
+    fn outlier_variant_has_large_residuals() {
+        let (tr, _) = RegressionSpec::with_outliers().build(2);
+        if let Targets::F32(ys) = &tr.ys {
+            let big = tr
+                .xs
+                .iter()
+                .zip(ys)
+                .filter(|(x, y)| (*y - (2.0 * *x + 1.0)).abs() > 5.0 + 1e-4)
+                .count();
+            assert!(big > 0 && big <= 20, "expected ≤20 contaminated points, got {big}");
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let (a, _) = RegressionSpec::default().build(3);
+        let (b, _) = RegressionSpec::default().build(3);
+        assert_eq!(a.xs, b.xs);
+        let (c, _) = RegressionSpec::default().build(4);
+        assert_ne!(a.xs, c.xs);
+    }
+}

@@ -1,0 +1,175 @@
+//! Batch sharding for the leader/worker data-parallel runtime.
+//!
+//! The paper trains sync data-parallel on 32 GPUs: the global batch is
+//! split across workers, each worker runs forward (and later backward)
+//! on its shard, and the leader owns selection + the parameter update.
+//! [`shard_batch`] produces per-worker sub-batches whose row ranges are
+//! recorded so per-example losses can be scattered back into global
+//! batch order.
+
+use anyhow::{bail, Result};
+
+use super::dataset::Batch;
+use super::tensor::{HostTensor, TensorData};
+
+/// One worker's shard: the rows `range` of the global batch, padded back
+/// up to the full batch size the executables were compiled for.
+#[derive(Clone, Debug)]
+pub struct Shard {
+    pub batch: Batch,
+    /// Global-batch row range covered by this shard.
+    pub start: usize,
+    pub len: usize,
+}
+
+fn slice_rows(t: &HostTensor, start: usize, len: usize, total_rows: usize) -> HostTensor {
+    let stride = t.element_count() / total_rows;
+    let mut shape = t.shape.clone();
+    shape[0] = total_rows; // shards keep the compiled batch size
+    match &t.data {
+        TensorData::F32(v) => {
+            let mut out = vec![0.0f32; total_rows * stride];
+            out[..len * stride].copy_from_slice(&v[start * stride..(start + len) * stride]);
+            HostTensor { shape, data: TensorData::F32(out) }
+        }
+        TensorData::I32(v) => {
+            let mut out = vec![0i32; total_rows * stride];
+            out[..len * stride].copy_from_slice(&v[start * stride..(start + len) * stride]);
+            HostTensor { shape, data: TensorData::I32(out) }
+        }
+    }
+}
+
+/// Split a global batch into `workers` shards. Each shard is padded to
+/// the full compiled batch size; `valid_mask` masks the padding. Rows are
+/// dealt contiguously (worker w gets `[w·ceil, …)`), and empty shards are
+/// allowed when `workers > rows` (their masks are all-zero).
+pub fn shard_batch(b: &Batch, workers: usize) -> Result<Vec<Shard>> {
+    if workers == 0 {
+        bail!("workers must be > 0");
+    }
+    let n = b.batch_size();
+    let per = n.div_ceil(workers);
+    let mut out = Vec::with_capacity(workers);
+    for w in 0..workers {
+        let start = (w * per).min(n);
+        let end = ((w + 1) * per).min(n);
+        let len = end - start;
+        let x = slice_rows(&b.x, start, len, n);
+        let y = slice_rows(&b.y, start, len, n);
+        let mut valid = vec![0.0f32; n];
+        valid[..len].copy_from_slice(&b.valid_mask[start..end]);
+        let mut ids = vec![usize::MAX; n];
+        ids[..len].copy_from_slice(&b.ids[start..end]);
+        let real = valid.iter().filter(|&&m| m > 0.0).count();
+        out.push(Shard {
+            batch: Batch { x, y, valid_mask: valid, real, ids },
+            start,
+            len,
+        });
+    }
+    Ok(out)
+}
+
+/// Scatter per-shard loss vectors back into global batch order.
+pub fn gather_losses(shards: &[Shard], per_shard: &[Vec<f32>], n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n];
+    for (s, losses) in shards.iter().zip(per_shard) {
+        out[s.start..s.start + s.len].copy_from_slice(&losses[..s.len]);
+    }
+    out
+}
+
+/// Restrict a global 0/1 selection mask to one shard's local row space.
+pub fn shard_mask(shard: &Shard, global_mask: &[f32]) -> Vec<f32> {
+    let n = shard.batch.batch_size();
+    let mut local = vec![0.0f32; n];
+    local[..shard.len]
+        .copy_from_slice(&global_mask[shard.start..shard.start + shard.len]);
+    local
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::{InMemoryDataset, Targets};
+
+    fn batch(n: usize) -> Batch {
+        let ds = InMemoryDataset::new(
+            vec![2],
+            (0..n * 2).map(|i| i as f32).collect(),
+            Targets::I32((0..n as i32).collect()),
+        )
+        .unwrap();
+        ds.gather_batch(&(0..n).collect::<Vec<_>>(), n).unwrap()
+    }
+
+    #[test]
+    fn shards_cover_batch_disjointly() {
+        let b = batch(8);
+        let shards = shard_batch(&b, 3).unwrap();
+        assert_eq!(shards.len(), 3);
+        let total: usize = shards.iter().map(|s| s.len).sum();
+        assert_eq!(total, 8);
+        assert_eq!(shards[0].start, 0);
+        assert_eq!(shards[1].start, 3);
+        assert_eq!(shards[2].start, 6);
+        assert_eq!(shards[2].len, 2);
+        // shard rows keep the compiled batch size with padding masked out
+        for s in &shards {
+            assert_eq!(s.batch.batch_size(), 8);
+            assert_eq!(s.batch.real, s.len);
+        }
+    }
+
+    #[test]
+    fn shard_content_matches_rows() {
+        let b = batch(6);
+        let shards = shard_batch(&b, 2).unwrap();
+        let x1 = shards[1].batch.x.as_f32().unwrap();
+        // rows 3..6 of global batch: features 6..12
+        assert_eq!(&x1[..6], &[6.0, 7.0, 8.0, 9.0, 10.0, 11.0]);
+        assert!(x1[6..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn gather_losses_restores_global_order() {
+        let b = batch(7);
+        let shards = shard_batch(&b, 3).unwrap();
+        let per: Vec<Vec<f32>> = shards
+            .iter()
+            .map(|s| {
+                (0..s.batch.batch_size())
+                    .map(|i| {
+                        if i < s.len {
+                            (s.start + i) as f32
+                        } else {
+                            999.0
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        let got = gather_losses(&shards, &per, 7);
+        assert_eq!(got, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn shard_mask_localizes() {
+        let b = batch(6);
+        let shards = shard_batch(&b, 2).unwrap();
+        let global = vec![1.0, 0.0, 1.0, 0.0, 1.0, 1.0];
+        assert_eq!(shard_mask(&shards[0], &global)[..3], [1.0, 0.0, 1.0]);
+        assert_eq!(shard_mask(&shards[1], &global)[..3], [0.0, 1.0, 1.0]);
+        assert!(shard_mask(&shards[1], &global)[3..].iter().all(|&m| m == 0.0));
+    }
+
+    #[test]
+    fn more_workers_than_rows() {
+        let b = batch(2);
+        let shards = shard_batch(&b, 4).unwrap();
+        assert_eq!(shards.iter().map(|s| s.len).sum::<usize>(), 2);
+        assert!(shards[2].len == 0 && shards[3].len == 0);
+        assert!(shard_batch(&b, 0).is_err());
+    }
+}

@@ -1,0 +1,124 @@
+//! Host-side tensors: the interchange type between the L3 coordinator
+//! and the PJRT runtime.
+//!
+//! The `xla` crate's `Literal`/`PjRtBuffer` are `Rc`-backed and cannot
+//! cross threads; `HostTensor` is the plain-`Vec` representation that
+//! flows through channels between the leader and worker threads. The
+//! conversion to/from `Literal` lives in `runtime::session`.
+
+use anyhow::{bail, Result};
+
+/// Element storage for a host tensor (models use f32 data, i32 labels).
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// A dense host tensor with row-major layout.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {shape:?} wants {n} elements, got {}", data.len());
+        }
+        Ok(HostTensor { shape, data: TensorData::F32(data) })
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {shape:?} wants {n} elements, got {}", data.len());
+        }
+        Ok(HostTensor { shape, data: TensorData::I32(data) })
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        HostTensor { shape: vec![], data: TensorData::F32(vec![v]) }
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        HostTensor { shape: vec![], data: TensorData::I32(vec![v]) }
+    }
+
+    pub fn zeros_f32(shape: Vec<usize>) -> Self {
+        let n: usize = shape.iter().product();
+        HostTensor { shape, data: TensorData::F32(vec![0.0; n]) }
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_f32(&self) -> bool {
+        matches!(self.data, TensorData::F32(_))
+    }
+
+    /// Borrow as f32 slice; errors on dtype mismatch.
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            TensorData::I32(_) => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            TensorData::F32(_) => bail!("tensor is f32, expected i32"),
+        }
+    }
+
+    /// Scalar f32 value (shape [] or [1]).
+    pub fn scalar_value(&self) -> Result<f32> {
+        let v = self.as_f32()?;
+        if v.len() != 1 {
+            bail!("expected scalar, shape {:?}", self.shape);
+        }
+        Ok(v[0])
+    }
+
+    /// Size in bytes (all supported dtypes are 4 bytes).
+    pub fn size_bytes(&self) -> usize {
+        self.element_count() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_shape_check() {
+        assert!(HostTensor::f32(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(HostTensor::f32(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let t = HostTensor::scalar_f32(4.5);
+        assert_eq!(t.scalar_value().unwrap(), 4.5);
+        assert_eq!(t.element_count(), 1);
+    }
+
+    #[test]
+    fn dtype_mismatch_errors() {
+        let t = HostTensor::i32(vec![2], vec![1, 2]).unwrap();
+        assert!(t.as_f32().is_err());
+        assert!(t.as_i32().is_ok());
+    }
+
+    #[test]
+    fn zeros_and_sizes() {
+        let t = HostTensor::zeros_f32(vec![4, 4]);
+        assert_eq!(t.element_count(), 16);
+        assert_eq!(t.size_bytes(), 64);
+        assert!(t.as_f32().unwrap().iter().all(|&x| x == 0.0));
+    }
+}

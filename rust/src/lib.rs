@@ -1,0 +1,64 @@
+//! # obftf — One Backward from Ten Forward
+//!
+//! Production reproduction of *“One Backward from Ten Forward,
+//! Subsampling for Large-Scale Deep Learning”* (Dong et al., 2021) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the streaming training coordinator: data
+//!   ingestion, batching, the paper's loss-aware *selection* algorithms
+//!   (the system contribution), the subset-approximation solver, the
+//!   leader/worker data-parallel runtime, metrics, checkpoints, CLI.
+//! * **L2 (`python/compile/model.py`)** — the models (linreg / MLP /
+//!   CNN), AOT-lowered to HLO text at build time.
+//! * **L1 (`python/compile/kernels/`)** — Pallas kernels for the dense
+//!   layers, per-example losses and SGD updates.
+//!
+//! Python never runs at training time: `make artifacts` lowers
+//! everything once; this crate loads `artifacts/*.hlo.txt` through the
+//! PJRT C API (the `xla` crate) and owns the entire request path.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use obftf::config::TrainConfig;
+//! use obftf::coordinator::Trainer;
+//!
+//! let mut cfg = TrainConfig::default();
+//! cfg.model = "mlp".into();
+//! cfg.method = obftf::sampling::Method::Obftf;
+//! cfg.sampling_ratio = 0.25;
+//! cfg.epochs = 3;
+//! let mut trainer = Trainer::from_config(&cfg).unwrap();
+//! let report = trainer.run().unwrap();
+//! println!("final eval: {:?}", report.final_eval);
+//! ```
+
+pub mod checkpoint;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod metrics;
+pub mod runtime;
+pub mod sampling;
+pub mod solver;
+pub mod testkit;
+pub mod util;
+
+pub use config::TrainConfig;
+pub use coordinator::Trainer;
+pub use sampling::Method;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Locate the artifacts directory: `$OBFTF_ARTIFACTS`, else `artifacts/`
+/// relative to the crate root (works from `cargo run`/`test`/`bench`).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(dir) = std::env::var("OBFTF_ARTIFACTS") {
+        return std::path::PathBuf::from(dir);
+    }
+    let mut p = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    p.push("artifacts");
+    p
+}

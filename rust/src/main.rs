@@ -1,0 +1,287 @@
+//! `obftf` — launcher CLI for the One-Backward-from-Ten-Forward stack.
+//!
+//! Subcommands:
+//!   train            run a training job from a TOML config + overrides
+//!   eval             evaluate a checkpoint on a dataset's test split
+//!   inspect          dump the artifact manifest / compiled-shape info
+//!   bench-selection  micro-benchmark the selection policies off-line
+//!   status           read the live status of a running streaming job
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Result};
+
+use obftf::config::TrainConfig;
+use obftf::coordinator::{ParallelTrainer, StreamingTrainer, Trainer};
+use obftf::data::rng::Rng;
+use obftf::runtime::Manifest;
+use obftf::sampling::Method;
+use obftf::util::cli::{ArgParser, Parsed};
+
+fn train_parser() -> ArgParser {
+    ArgParser::new("train", "run a training job")
+        .flag("config", "TOML config file (flags override it)")
+        .flag("model", "linreg | mlp | cnn | cnn_lite")
+        .flag("flavour", "pallas | jnp kernel flavour")
+        .flag("dataset", "regression[_outliers] | mnist_proxy | imagenet_proxy")
+        .flag("method", "uniform | selective_backprop | mink | max_prob | obftf | obftf_prox | obftf_dp | frank_wolfe")
+        .flag("ratio", "sampling ratio in [0,1]")
+        .flag("epochs", "training epochs")
+        .flag("lr", "learning rate")
+        .flag("seed", "rng seed")
+        .flag("workers", "data-parallel workers (1 = serial)")
+        .flag("n-train", "training set size override")
+        .flag("n-test", "test set size override")
+        .flag("label-noise", "label noise fraction")
+        .flag("checkpoint", "checkpoint path (written per epoch)")
+        .flag("metrics-out", "per-step metrics CSV path")
+        .flag("stream-steps", "streaming mode: number of stream steps")
+        .flag("drift", "streaming concept-drift magnitude")
+        .flag("status-addr", "bind a status endpoint (streaming mode)")
+        .bool_flag("masked-backward", "use the masked full-batch backward (perf ablation)")
+        .bool_flag("reuse-losses", "reuse cached per-instance losses (skip fwd when fresh)")
+        .flag("loss-max-age", "loss cache max age in steps (0 = one epoch)")
+}
+
+fn build_config(p: &Parsed) -> Result<TrainConfig> {
+    let mut cfg = match p.get("config") {
+        Some(path) => TrainConfig::from_toml_file(Path::new(path))?,
+        None => TrainConfig::default(),
+    };
+    if let Some(v) = p.get("model") {
+        cfg.model = v.to_string();
+    }
+    if let Some(v) = p.get("flavour") {
+        cfg.flavour = v.to_string();
+    }
+    if let Some(v) = p.get("dataset") {
+        cfg.dataset = Some(v.to_string());
+    }
+    if let Some(v) = p.get("method") {
+        cfg.method = v.parse()?;
+    }
+    if let Some(v) = p.get_parse::<f64>("ratio")? {
+        cfg.sampling_ratio = v;
+    }
+    if let Some(v) = p.get_parse::<usize>("epochs")? {
+        cfg.epochs = v;
+    }
+    if let Some(v) = p.get_parse::<f32>("lr")? {
+        cfg.lr = v;
+    }
+    if let Some(v) = p.get_parse::<u64>("seed")? {
+        cfg.seed = v;
+    }
+    if let Some(v) = p.get_parse::<usize>("workers")? {
+        cfg.workers = v;
+    }
+    if let Some(v) = p.get_parse::<usize>("n-train")? {
+        cfg.n_train = Some(v);
+    }
+    if let Some(v) = p.get_parse::<usize>("n-test")? {
+        cfg.n_test = Some(v);
+    }
+    if let Some(v) = p.get_parse::<f32>("label-noise")? {
+        cfg.label_noise = v;
+    }
+    if let Some(v) = p.get("checkpoint") {
+        cfg.checkpoint = Some(v.to_string());
+    }
+    if let Some(v) = p.get("metrics-out") {
+        cfg.metrics_out = Some(v.to_string());
+    }
+    if let Some(v) = p.get_parse::<usize>("stream-steps")? {
+        cfg.stream_steps = v;
+        if v > 0 {
+            cfg.epochs = 0;
+        }
+    }
+    if let Some(v) = p.get_parse::<f32>("drift")? {
+        cfg.drift = v;
+    }
+    if let Some(v) = p.get("status-addr") {
+        cfg.status_addr = Some(v.to_string());
+    }
+    if p.get_bool("masked-backward") {
+        cfg.masked_backward = true;
+    }
+    if p.get_bool("reuse-losses") {
+        cfg.reuse_losses = true;
+    }
+    if let Some(v) = p.get_parse::<u64>("loss-max-age")? {
+        cfg.loss_max_age = v;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_train(args: &[String]) -> Result<()> {
+    let p = train_parser().parse(args)?;
+    let cfg = build_config(&p)?;
+    eprintln!(
+        "obftf train: model={} method={} ratio={} flavour={} workers={} dataset={}",
+        cfg.model,
+        cfg.method,
+        cfg.sampling_ratio,
+        cfg.flavour,
+        cfg.workers,
+        cfg.dataset_name()
+    );
+    let report = if cfg.stream_steps > 0 {
+        let mut st = StreamingTrainer::from_config(&cfg)?;
+        match &cfg.status_addr {
+            Some(addr) => {
+                use obftf::coordinator::service::{serve, StatusBoard};
+                let board = StatusBoard::new();
+                let server = serve(board.clone(), addr)?;
+                eprintln!("status endpoint: {}", server.addr);
+                board.update(|s| {
+                    s.model = cfg.model.clone();
+                    s.method = cfg.method.as_str().to_string();
+                });
+                let report = st.run_with_board(&board)?;
+                board.update(|s| {
+                    s.done = true;
+                    s.step = report.steps;
+                });
+                report
+            }
+            None => st.run()?,
+        }
+    } else if cfg.workers > 1 {
+        ParallelTrainer::from_config(&cfg)?.run()?
+    } else {
+        Trainer::from_config(&cfg)?.run()?
+    };
+    println!("{}", report.to_json().to_string_pretty());
+    Ok(())
+}
+
+fn cmd_eval(args: &[String]) -> Result<()> {
+    let parser = ArgParser::new("eval", "evaluate a checkpoint")
+        .flag("checkpoint", "checkpoint file to load (required)")
+        .flag("model", "model name (default mlp)")
+        .flag("flavour", "pallas | jnp (default jnp)")
+        .flag("dataset", "dataset override")
+        .flag("seed", "dataset generation seed");
+    let p = parser.parse(args)?;
+    let Some(ck) = p.get("checkpoint") else {
+        bail!("--checkpoint is required\n\n{}", parser.usage());
+    };
+    let mut cfg = TrainConfig {
+        model: p.get("model").unwrap_or("mlp").to_string(),
+        flavour: p.get("flavour").unwrap_or("jnp").to_string(),
+        dataset: p.get("dataset").map(|s| s.to_string()),
+        epochs: 1,
+        ..Default::default()
+    };
+    if let Some(seed) = p.get_parse::<u64>("seed")? {
+        cfg.seed = seed;
+    }
+    cfg.validate()?;
+    let mut trainer = Trainer::from_config(&cfg)?;
+    trainer.load_checkpoint(&PathBuf::from(ck))?;
+    let ev = trainer.evaluate()?;
+    println!("{{\"loss\": {}, \"metric\": {}}}", ev.loss, ev.metric);
+    Ok(())
+}
+
+fn cmd_inspect() -> Result<()> {
+    let manifest = Manifest::load(&obftf::artifacts_dir())?;
+    println!("artifacts dir: {:?}", manifest.dir);
+    println!("compiled batch size: {}", manifest.batch);
+    for (name, entry) in &manifest.models {
+        let nparam: usize = entry
+            .params
+            .iter()
+            .map(|p| p.shape.iter().product::<usize>())
+            .sum();
+        println!(
+            "model {name}: task={} x_shape={:?} classes={} params={} ({} tensors) artifacts={}",
+            entry.task,
+            entry.x_shape,
+            entry.num_classes,
+            nparam,
+            entry.params.len(),
+            entry.executables.len()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_bench_selection(args: &[String]) -> Result<()> {
+    use std::time::Instant;
+    let parser = ArgParser::new("bench-selection", "micro-benchmark selection policies")
+        .flag("n", "batch size (default 128)")
+        .flag("ratio", "sampling ratio (default 0.25)")
+        .flag("iters", "iterations per method (default 200)");
+    let p = parser.parse(args)?;
+    let n = p.get_parse::<usize>("n")?.unwrap_or(128);
+    let ratio = p.get_parse::<f64>("ratio")?.unwrap_or(0.25);
+    let iters = p.get_parse::<usize>("iters")?.unwrap_or(200);
+
+    let mut rng = Rng::seed_from(7);
+    let losses: Vec<f32> = (0..n).map(|_| (rng.normal() * 0.8).exp() as f32).collect();
+    let valid = vec![1.0f32; n];
+    let b = obftf::sampling::budget_for(ratio, n);
+    println!("n={n} b={b} iters={iters}");
+    for m in Method::ALL {
+        let mut sampler = m.build(1.0);
+        let t0 = Instant::now();
+        let mut selected_total = 0usize;
+        for _ in 0..iters {
+            selected_total += sampler.select(&losses, &valid, b, &mut rng).len();
+        }
+        let per = t0.elapsed().as_secs_f64() / iters as f64;
+        println!(
+            "{:<20} {:>10.1} µs/select  avg selected {:.1}",
+            m.as_str(),
+            per * 1e6,
+            selected_total as f64 / iters as f64
+        );
+    }
+    Ok(())
+}
+
+fn usage() -> String {
+    "obftf — One Backward from Ten Forward (Dong et al. 2021)\n\n\
+     USAGE:\n  obftf <SUBCOMMAND> [FLAGS]\n\n\
+     SUBCOMMANDS:\n\
+     \x20 train            run a training job (--help for flags)\n\
+     \x20 eval             evaluate a checkpoint\n\
+     \x20 inspect          dump the artifact manifest\n\
+     \x20 bench-selection  micro-benchmark the selection policies\n\
+     \x20 status <addr>    read a running job's status endpoint\n"
+        .to_string()
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        eprintln!("{}", usage());
+        std::process::exit(2);
+    };
+    let rest = &argv[1..];
+    match cmd.as_str() {
+        "train" => cmd_train(rest),
+        "eval" => cmd_eval(rest),
+        "inspect" => cmd_inspect(),
+        "bench-selection" => cmd_bench_selection(rest),
+        "status" => {
+            let parser =
+                ArgParser::new("status", "read a status endpoint").positional("addr", "host:port");
+            let p = parser.parse(rest)?;
+            let s = obftf::coordinator::service::read_status(p.positional(0).unwrap())?;
+            println!("{}", s.to_json().to_string_pretty());
+            Ok(())
+        }
+        "--help" | "-h" | "help" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown subcommand {other:?}\n\n{}", usage());
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,142 @@
+//! Log-bucketed latency histogram with percentile queries.
+//!
+//! Buckets grow geometrically (×2 from 1µs), so p50/p90/p99 over
+//! microsecond-to-second latencies cost 64 counters and no allocation
+//! on the record path.
+
+/// Geometric-bucket histogram for durations in nanoseconds.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    counts: [u64; 64],
+    total: u64,
+    sum_ns: u64,
+    max_ns: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram { counts: [0; 64], total: 0, sum_ns: 0, max_ns: 0 }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    fn bucket(ns: u64) -> usize {
+        // bucket k covers [2^k, 2^{k+1}) microseconds-ish; work in ns
+        // with bucket 0 = [0, 1024ns)
+        (64 - ns.max(1).leading_zeros() as usize).min(63)
+    }
+
+    #[inline]
+    pub fn record_ns(&mut self, ns: u64) {
+        self.counts[Self::bucket(ns)] += 1;
+        self.total += 1;
+        self.sum_ns += ns;
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    pub fn record(&mut self, d: std::time::Duration) {
+        self.record_ns(d.as_nanos() as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 / self.total as f64
+        }
+    }
+
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns
+    }
+
+    /// Upper bound of the bucket containing quantile `q` ∈ [0, 1].
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let rank = (q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (k, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank.max(1) {
+                return 1u64 << k; // bucket upper bound
+            }
+        }
+        self.max_ns
+    }
+
+    /// `(p50, p90, p99)` in microseconds — the summary line format.
+    pub fn summary_us(&self) -> (f64, f64, f64) {
+        (
+            self.quantile_ns(0.50) as f64 / 1000.0,
+            self.quantile_ns(0.90) as f64 / 1000.0,
+            self.quantile_ns(0.99) as f64 / 1000.0,
+        )
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum_ns += other.sum_ns;
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile_ns(0.5), 0);
+        assert_eq!(h.mean_ns(), 0.0);
+    }
+
+    #[test]
+    fn quantiles_are_monotone_and_bracket_values() {
+        let mut h = Histogram::new();
+        for i in 1..=1000u64 {
+            h.record_ns(i * 1000); // 1µs .. 1ms
+        }
+        let p50 = h.quantile_ns(0.5);
+        let p90 = h.quantile_ns(0.9);
+        let p99 = h.quantile_ns(0.99);
+        assert!(p50 <= p90 && p90 <= p99);
+        // p50 of uniform 1µs..1ms is ~500µs; bucket bound within ×2
+        assert!((250_000..=1_050_000).contains(&p50), "p50={p50}");
+        assert!(h.max_ns() == 1_000_000);
+    }
+
+    #[test]
+    fn mean_is_exact() {
+        let mut h = Histogram::new();
+        h.record_ns(100);
+        h.record_ns(300);
+        assert_eq!(h.mean_ns(), 200.0);
+    }
+
+    #[test]
+    fn merge_adds_counts() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        a.record_ns(10_000);
+        b.record_ns(20_000);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.max_ns(), 20_000);
+    }
+}

@@ -1,0 +1,9 @@
+//! Metrics substrate: per-step records, latency histograms, throughput
+//! and CSV/JSON export — the observability a production training
+//! subsystem needs.
+
+pub mod hist;
+pub mod recorder;
+
+pub use hist::Histogram;
+pub use recorder::{EvalRecord, Recorder, StepRecord};

@@ -1,0 +1,187 @@
+//! Step/eval recording and CSV/JSON export.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::hist::Histogram;
+
+/// One training step's record.
+#[derive(Clone, Copy, Debug)]
+pub struct StepRecord {
+    pub step: u64,
+    pub epoch: usize,
+    /// Mean loss over the *selected* subset (what the backward saw).
+    pub sel_loss: f32,
+    /// Mean loss over the full batch (from the forward pass).
+    pub batch_loss: f32,
+    pub n_forward: usize,
+    pub n_selected: usize,
+    pub fwd_us: u64,
+    pub sel_us: u64,
+    pub bwd_us: u64,
+}
+
+/// One evaluation's record.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalRecord {
+    pub step: u64,
+    pub epoch: usize,
+    pub loss: f64,
+    /// Accuracy for classification, MSE for regression.
+    pub metric: f64,
+}
+
+/// Accumulates step + eval records and latency histograms.
+#[derive(Default)]
+pub struct Recorder {
+    pub steps: Vec<StepRecord>,
+    pub evals: Vec<EvalRecord>,
+    pub fwd_hist: Histogram,
+    pub sel_hist: Histogram,
+    pub bwd_hist: Histogram,
+    start: Option<std::time::Instant>,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Recorder { start: Some(std::time::Instant::now()), ..Default::default() }
+    }
+
+    pub fn record_step(&mut self, rec: StepRecord) {
+        self.fwd_hist.record_ns(rec.fwd_us * 1000);
+        self.sel_hist.record_ns(rec.sel_us * 1000);
+        self.bwd_hist.record_ns(rec.bwd_us * 1000);
+        self.steps.push(rec);
+    }
+
+    pub fn record_eval(&mut self, rec: EvalRecord) {
+        self.evals.push(rec);
+    }
+
+    /// Total examples forwarded / selected (the paper's compute story).
+    pub fn totals(&self) -> (u64, u64) {
+        let fwd: u64 = self.steps.iter().map(|s| s.n_forward as u64).sum();
+        let sel: u64 = self.steps.iter().map(|s| s.n_selected as u64).sum();
+        (fwd, sel)
+    }
+
+    /// Steps per second since construction.
+    pub fn throughput(&self) -> f64 {
+        match self.start {
+            Some(t0) => {
+                let dt = t0.elapsed().as_secs_f64();
+                if dt > 0.0 {
+                    self.steps.len() as f64 / dt
+                } else {
+                    0.0
+                }
+            }
+            None => 0.0,
+        }
+    }
+
+    /// Write per-step records as CSV (one header + one row per step).
+    pub fn write_steps_csv(&self, path: &Path) -> Result<()> {
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {path:?}"))?;
+        writeln!(
+            f,
+            "step,epoch,sel_loss,batch_loss,n_forward,n_selected,fwd_us,sel_us,bwd_us"
+        )?;
+        for s in &self.steps {
+            writeln!(
+                f,
+                "{},{},{},{},{},{},{},{},{}",
+                s.step,
+                s.epoch,
+                s.sel_loss,
+                s.batch_loss,
+                s.n_forward,
+                s.n_selected,
+                s.fwd_us,
+                s.sel_us,
+                s.bwd_us
+            )?;
+        }
+        Ok(())
+    }
+
+    /// Write eval records as CSV.
+    pub fn write_evals_csv(&self, path: &Path) -> Result<()> {
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {path:?}"))?;
+        writeln!(f, "step,epoch,loss,metric")?;
+        for e in &self.evals {
+            writeln!(f, "{},{},{},{}", e.step, e.epoch, e.loss, e.metric)?;
+        }
+        Ok(())
+    }
+
+    /// One-line latency summary for logs.
+    pub fn latency_summary(&self) -> String {
+        let (f50, f90, f99) = self.fwd_hist.summary_us();
+        let (s50, s90, s99) = self.sel_hist.summary_us();
+        let (b50, b90, b99) = self.bwd_hist.summary_us();
+        format!(
+            "fwd p50/p90/p99 {f50:.0}/{f90:.0}/{f99:.0}µs  \
+             sel {s50:.0}/{s90:.0}/{s99:.0}µs  \
+             bwd {b50:.0}/{b90:.0}/{b99:.0}µs"
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn step(i: u64) -> StepRecord {
+        StepRecord {
+            step: i,
+            epoch: 0,
+            sel_loss: 1.0,
+            batch_loss: 2.0,
+            n_forward: 128,
+            n_selected: 32,
+            fwd_us: 100,
+            sel_us: 10,
+            bwd_us: 200,
+        }
+    }
+
+    #[test]
+    fn totals_accumulate() {
+        let mut r = Recorder::new();
+        for i in 0..5 {
+            r.record_step(step(i));
+        }
+        assert_eq!(r.totals(), (640, 160));
+        assert_eq!(r.fwd_hist.count(), 5);
+    }
+
+    #[test]
+    fn csv_export_roundtrip() {
+        let mut r = Recorder::new();
+        r.record_step(step(0));
+        r.record_eval(EvalRecord { step: 0, epoch: 0, loss: 0.5, metric: 0.9 });
+        let dir = crate::testkit::TempDir::new("recorder").unwrap();
+        let sp = dir.path().join("steps.csv");
+        let ep = dir.path().join("evals.csv");
+        r.write_steps_csv(&sp).unwrap();
+        r.write_evals_csv(&ep).unwrap();
+        let steps = std::fs::read_to_string(&sp).unwrap();
+        assert!(steps.lines().count() == 2);
+        assert!(steps.contains("0,0,1,2,128,32,100,10,200"));
+        let evals = std::fs::read_to_string(&ep).unwrap();
+        assert!(evals.contains("0,0,0.5,0.9"));
+    }
+
+    #[test]
+    fn latency_summary_formats() {
+        let mut r = Recorder::new();
+        r.record_step(step(0));
+        let s = r.latency_summary();
+        assert!(s.contains("fwd") && s.contains("sel") && s.contains("bwd"));
+    }
+}

@@ -1,0 +1,372 @@
+//! Multi-worker execution engine: the leader/worker data-parallel
+//! substrate (the paper trains sync data-parallel on 32 GPUs; here each
+//! worker is a thread owning its own PJRT CPU client + compiled
+//! executables — the `xla` handles are `Rc`-backed and cannot be
+//! shared).
+//!
+//! Protocol per step (see `coordinator::parallel`):
+//!   1. leader shards the global batch;
+//!   2. workers run `fwd_loss` on their shard concurrently;
+//!   3. leader runs selection over the gathered global loss vector;
+//!   4. workers run `grads` with their shard's slice of the mask;
+//!   5. leader averages gradients (weighted by per-shard selected
+//!      counts) and broadcasts `apply` — every worker's parameters stay
+//!      bit-identical to the serial trainer.
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::{Flavour, Manifest};
+use super::session::Session;
+use crate::data::tensor::HostTensor;
+
+/// Requests the leader can send to a worker.
+enum Req {
+    Init { seed: i32 },
+    LoadParams { params: Vec<HostTensor> },
+    FwdLoss { x: HostTensor, y: HostTensor },
+    Grads { x: HostTensor, y: HostTensor, mask: Vec<f32> },
+    Apply { grads: Vec<HostTensor>, lr: f32 },
+    Eval { x: HostTensor, y: HostTensor, mask: Vec<f32> },
+    ParamsToHost,
+    Shutdown,
+}
+
+/// Worker replies.
+enum Rep {
+    Ok,
+    Losses(Vec<f32>),
+    Grads(Vec<HostTensor>, f32),
+    EvalSums(f64, f64, f64),
+    Params(Vec<HostTensor>),
+    Err(String),
+}
+
+struct WorkerHandle {
+    tx: mpsc::Sender<Req>,
+    rx: mpsc::Receiver<Rep>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// A pool of PJRT worker threads for one model × flavour.
+pub struct Engine {
+    workers: Vec<WorkerHandle>,
+    n_params: usize,
+}
+
+impl Engine {
+    /// Spawn `n_workers` threads, each compiling its own copy of the
+    /// model's executables. Fails fast if any worker fails to build.
+    pub fn new(
+        manifest: &Manifest,
+        model: &str,
+        flavour: Flavour,
+        n_workers: usize,
+    ) -> Result<Engine> {
+        if n_workers == 0 {
+            bail!("engine needs at least one worker");
+        }
+        let n_params = manifest.model(model)?.n_params();
+        let mut workers = Vec::with_capacity(n_workers);
+        for w in 0..n_workers {
+            let (req_tx, req_rx) = mpsc::channel::<Req>();
+            let (rep_tx, rep_rx) = mpsc::channel::<Rep>();
+            let manifest = manifest.clone();
+            let model = model.to_string();
+            let handle = std::thread::Builder::new()
+                .name(format!("obftf-worker-{w}"))
+                .spawn(move || worker_main(manifest, model, flavour, req_rx, rep_tx))
+                .context("spawn worker thread")?;
+            // first reply signals readiness (session compiled) or error
+            let ready = rep_rx
+                .recv()
+                .map_err(|_| anyhow!("worker {w} died during startup"))?;
+            if let Rep::Err(e) = ready {
+                bail!("worker {w} failed to start: {e}");
+            }
+            workers.push(WorkerHandle { tx: req_tx, rx: rep_rx, handle: Some(handle) });
+        }
+        Ok(Engine { workers, n_params })
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn send(&self, w: usize, req: Req) -> Result<()> {
+        self.workers[w]
+            .tx
+            .send(req)
+            .map_err(|_| anyhow!("worker {w} channel closed (thread died?)"))
+    }
+
+    fn recv(&self, w: usize) -> Result<Rep> {
+        self.workers[w]
+            .rx
+            .recv()
+            .map_err(|_| anyhow!("worker {w} died mid-request"))
+    }
+
+    fn expect_ok(&self, w: usize) -> Result<()> {
+        match self.recv(w)? {
+            Rep::Ok => Ok(()),
+            Rep::Err(e) => bail!("worker {w}: {e}"),
+            _ => bail!("worker {w}: protocol violation"),
+        }
+    }
+
+    /// Initialize worker 0 from `seed`, then broadcast the parameters so
+    /// every worker starts bit-identical.
+    pub fn init_broadcast(&self, seed: i32) -> Result<Vec<HostTensor>> {
+        self.send(0, Req::Init { seed })?;
+        self.expect_ok(0)?;
+        self.send(0, Req::ParamsToHost)?;
+        let params = match self.recv(0)? {
+            Rep::Params(p) => p,
+            Rep::Err(e) => bail!("worker 0: {e}"),
+            _ => bail!("worker 0: protocol violation"),
+        };
+        self.broadcast_params(&params)?;
+        Ok(params)
+    }
+
+    /// Load the same parameters into every worker.
+    pub fn broadcast_params(&self, params: &[HostTensor]) -> Result<()> {
+        for w in 0..self.workers.len() {
+            self.send(w, Req::LoadParams { params: params.to_vec() })?;
+        }
+        for w in 0..self.workers.len() {
+            self.expect_ok(w)?;
+        }
+        Ok(())
+    }
+
+    /// Run `fwd_loss` on per-worker shards concurrently.
+    /// `shards[w]` = (x, y); returns per-worker loss vectors.
+    pub fn fwd_loss_sharded(
+        &self,
+        shards: Vec<(HostTensor, HostTensor)>,
+    ) -> Result<Vec<Vec<f32>>> {
+        if shards.len() != self.workers.len() {
+            bail!("{} shards for {} workers", shards.len(), self.workers.len());
+        }
+        for (w, (x, y)) in shards.into_iter().enumerate() {
+            self.send(w, Req::FwdLoss { x, y })?;
+        }
+        let mut out = Vec::with_capacity(self.workers.len());
+        for w in 0..self.workers.len() {
+            match self.recv(w)? {
+                Rep::Losses(l) => out.push(l),
+                Rep::Err(e) => bail!("worker {w}: {e}"),
+                _ => bail!("worker {w}: protocol violation"),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Run `grads` on per-worker shards concurrently; returns each
+    /// worker's (grads, selected-loss).
+    pub fn grads_sharded(
+        &self,
+        shards: Vec<(HostTensor, HostTensor, Vec<f32>)>,
+    ) -> Result<Vec<(Vec<HostTensor>, f32)>> {
+        if shards.len() != self.workers.len() {
+            bail!("{} shards for {} workers", shards.len(), self.workers.len());
+        }
+        for (w, (x, y, mask)) in shards.into_iter().enumerate() {
+            self.send(w, Req::Grads { x, y, mask })?;
+        }
+        let mut out = Vec::with_capacity(self.workers.len());
+        for w in 0..self.workers.len() {
+            match self.recv(w)? {
+                Rep::Grads(g, l) => out.push((g, l)),
+                Rep::Err(e) => bail!("worker {w}: {e}"),
+                _ => bail!("worker {w}: protocol violation"),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Broadcast one `apply` with the averaged gradients.
+    pub fn apply_broadcast(&self, grads: &[HostTensor], lr: f32) -> Result<()> {
+        if grads.len() != self.n_params {
+            bail!("apply_broadcast got {} grads, expected {}", grads.len(), self.n_params);
+        }
+        for w in 0..self.workers.len() {
+            self.send(w, Req::Apply { grads: grads.to_vec(), lr })?;
+        }
+        for w in 0..self.workers.len() {
+            self.expect_ok(w)?;
+        }
+        Ok(())
+    }
+
+    /// Sharded eval; returns summed `(loss, metric, count)`.
+    pub fn eval_sharded(
+        &self,
+        shards: Vec<(HostTensor, HostTensor, Vec<f32>)>,
+    ) -> Result<(f64, f64, f64)> {
+        if shards.len() != self.workers.len() {
+            bail!("{} shards for {} workers", shards.len(), self.workers.len());
+        }
+        for (w, (x, y, mask)) in shards.into_iter().enumerate() {
+            self.send(w, Req::Eval { x, y, mask })?;
+        }
+        let mut sums = (0.0, 0.0, 0.0);
+        for w in 0..self.workers.len() {
+            match self.recv(w)? {
+                Rep::EvalSums(a, b, c) => {
+                    sums.0 += a;
+                    sums.1 += b;
+                    sums.2 += c;
+                }
+                Rep::Err(e) => bail!("worker {w}: {e}"),
+                _ => bail!("worker {w}: protocol violation"),
+            }
+        }
+        Ok(sums)
+    }
+
+    /// Fetch parameters from worker 0 (all workers are identical).
+    pub fn params_to_host(&self) -> Result<Vec<HostTensor>> {
+        self.send(0, Req::ParamsToHost)?;
+        match self.recv(0)? {
+            Rep::Params(p) => Ok(p),
+            Rep::Err(e) => bail!("worker 0: {e}"),
+            _ => bail!("worker 0: protocol violation"),
+        }
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        for w in &self.workers {
+            let _ = w.tx.send(Req::Shutdown);
+        }
+        for w in &mut self.workers {
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+fn worker_main(
+    manifest: Manifest,
+    model: String,
+    flavour: Flavour,
+    rx: mpsc::Receiver<Req>,
+    tx: mpsc::Sender<Rep>,
+) {
+    let mut session = match Session::new(&manifest, &model, flavour) {
+        Ok(s) => {
+            let _ = tx.send(Rep::Ok);
+            s
+        }
+        Err(e) => {
+            let _ = tx.send(Rep::Err(format!("{e:#}")));
+            return;
+        }
+    };
+    while let Ok(req) = rx.recv() {
+        let rep = match req {
+            Req::Shutdown => return,
+            Req::Init { seed } => session.init(seed).map(|_| Rep::Ok),
+            Req::LoadParams { params } => session.load_params(&params).map(|_| Rep::Ok),
+            Req::FwdLoss { x, y } => session.fwd_loss(&x, &y).map(Rep::Losses),
+            Req::Grads { x, y, mask } => {
+                session.grads(&x, &y, &mask).map(|(g, l)| Rep::Grads(g, l))
+            }
+            Req::Apply { grads, lr } => session.apply(&grads, lr).map(|_| Rep::Ok),
+            Req::Eval { x, y, mask } => {
+                session.eval_batch(&x, &y, &mask).map(|(a, b, c)| Rep::EvalSums(a, b, c))
+            }
+            Req::ParamsToHost => session.params_to_host().map(Rep::Params),
+        };
+        let msg = match rep {
+            Ok(r) => r,
+            Err(e) => Rep::Err(format!("{e:#}")),
+        };
+        if tx.send(msg).is_err() {
+            return; // leader gone
+        }
+    }
+}
+
+/// Average per-worker gradients weighted by selected counts so that the
+/// result equals the serial global masked mean:
+/// `g = Σ_w k_w·g_w / Σ_w k_w` (workers with `k_w = 0` contribute 0).
+pub fn weighted_average_grads(
+    per_worker: &[(Vec<HostTensor>, f32)],
+    counts: &[usize],
+) -> Result<(Vec<HostTensor>, f32)> {
+    if per_worker.is_empty() || per_worker.len() != counts.len() {
+        bail!("mismatched grads/counts");
+    }
+    let total: usize = counts.iter().sum();
+    if total == 0 {
+        bail!("no selected examples across workers");
+    }
+    let n_params = per_worker[0].0.len();
+    let mut avg: Vec<HostTensor> = per_worker[0]
+        .0
+        .iter()
+        .map(|t| HostTensor::zeros_f32(t.shape.clone()))
+        .collect();
+    let mut loss = 0.0f64;
+    for ((grads, l), &k) in per_worker.iter().zip(counts) {
+        if k == 0 {
+            continue;
+        }
+        if grads.len() != n_params {
+            bail!("worker grad count mismatch");
+        }
+        let wgt = k as f64 / total as f64;
+        loss += wgt * *l as f64;
+        for (a, g) in avg.iter_mut().zip(grads) {
+            let gv = g.as_f32()?;
+            let crate::data::tensor::TensorData::F32(av) = &mut a.data else {
+                bail!("non-f32 gradient");
+            };
+            for (x, &y) in av.iter_mut().zip(gv) {
+                *x += wgt as f32 * y;
+            }
+        }
+    }
+    Ok((avg, loss as f32))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tensor::HostTensor;
+
+    #[test]
+    fn weighted_average_matches_manual() {
+        let g1 = vec![HostTensor::f32(vec![2], vec![1.0, 2.0]).unwrap()];
+        let g2 = vec![HostTensor::f32(vec![2], vec![3.0, 4.0]).unwrap()];
+        let (avg, loss) =
+            weighted_average_grads(&[(g1, 1.0), (g2, 3.0)], &[1, 3]).unwrap();
+        let v = avg[0].as_f32().unwrap();
+        // weights 0.25 / 0.75
+        assert!((v[0] - (0.25 + 2.25)).abs() < 1e-6);
+        assert!((v[1] - (0.5 + 3.0)).abs() < 1e-6);
+        assert!((loss - 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_count_workers_are_skipped() {
+        let g1 = vec![HostTensor::f32(vec![1], vec![5.0]).unwrap()];
+        let g2 = vec![HostTensor::f32(vec![1], vec![100.0]).unwrap()];
+        let (avg, _) = weighted_average_grads(&[(g1, 1.0), (g2, 9.0)], &[2, 0]).unwrap();
+        assert_eq!(avg[0].as_f32().unwrap(), &[5.0]);
+    }
+
+    #[test]
+    fn all_zero_counts_error() {
+        let g1 = vec![HostTensor::f32(vec![1], vec![5.0]).unwrap()];
+        assert!(weighted_average_grads(&[(g1, 0.0)], &[0]).is_err());
+    }
+}

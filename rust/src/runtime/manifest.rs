@@ -1,0 +1,313 @@
+//! `artifacts/manifest.json` — the python→rust interchange contract.
+//!
+//! `aot.py` emits one entry per model describing tensor shapes, dtypes
+//! and the parameter layout, plus the HLO-text filename for every
+//! (executable, flavour) pair. The runtime refuses to start on a
+//! missing/inconsistent manifest rather than guessing shapes.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Kernel flavour of an artifact set (DESIGN.md `abl-kernel`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Flavour {
+    /// L1 Pallas kernels (interpret-mode), the paper-faithful path.
+    Pallas,
+    /// Pure-jnp lowering (XLA-native fusion), the fast CPU path.
+    Jnp,
+}
+
+impl Flavour {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Flavour::Pallas => "pallas",
+            Flavour::Jnp => "jnp",
+        }
+    }
+}
+
+impl std::str::FromStr for Flavour {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "pallas" => Ok(Flavour::Pallas),
+            "jnp" => Ok(Flavour::Jnp),
+            other => bail!("unknown flavour {other:?}; expected pallas | jnp"),
+        }
+    }
+}
+
+/// The six executables every model exports.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Exe {
+    Init,
+    FwdLoss,
+    TrainStep,
+    Grads,
+    Apply,
+    Eval,
+}
+
+impl Exe {
+    pub const ALL: [Exe; 6] =
+        [Exe::Init, Exe::FwdLoss, Exe::TrainStep, Exe::Grads, Exe::Apply, Exe::Eval];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Exe::Init => "init",
+            Exe::FwdLoss => "fwd_loss",
+            Exe::TrainStep => "train_step",
+            Exe::Grads => "grads",
+            Exe::Apply => "apply",
+            Exe::Eval => "eval",
+        }
+    }
+}
+
+/// One parameter tensor's spec.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+/// One model's manifest entry.
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub task: String,
+    pub x_shape: Vec<usize>,
+    pub num_classes: usize,
+    pub y_dtype: String,
+    pub params: Vec<ParamEntry>,
+    /// `"{exe}:{flavour}"` → HLO text filename.
+    pub executables: BTreeMap<String, String>,
+}
+
+impl ModelEntry {
+    pub fn is_classification(&self) -> bool {
+        self.task == "classification"
+    }
+
+    /// Artifact filename for `(exe, flavour)`.
+    pub fn artifact(&self, exe: Exe, flavour: Flavour) -> Result<&str> {
+        let key = format!("{}:{}", exe.as_str(), flavour.as_str());
+        self.executables
+            .get(&key)
+            .map(String::as_str)
+            .with_context(|| format!("manifest has no executable {key:?}"))
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.params.len()
+    }
+
+    fn from_json(j: &Json) -> Result<ModelEntry> {
+        let params = j
+            .need("params")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                Ok(ParamEntry {
+                    name: p.need("name")?.as_str()?.to_string(),
+                    shape: p.need("shape")?.as_usize_vec()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let executables = j
+            .need("executables")?
+            .as_obj()?
+            .iter()
+            .map(|(k, v)| Ok((k.clone(), v.as_str()?.to_string())))
+            .collect::<Result<BTreeMap<_, _>>>()?;
+        Ok(ModelEntry {
+            task: j.need("task")?.as_str()?.to_string(),
+            x_shape: j.need("x_shape")?.as_usize_vec()?,
+            num_classes: j.need("num_classes")?.as_usize()?,
+            y_dtype: j.need("y_dtype")?.as_str()?.to_string(),
+            params,
+            executables,
+        })
+    }
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub version: usize,
+    pub batch: usize,
+    pub models: BTreeMap<String, ModelEntry>,
+    /// Directory the manifest was loaded from.
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load and validate `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("cannot read {path:?} — run `make artifacts` (or set OBFTF_ARTIFACTS)")
+        })?;
+        let j = json::parse(&text).context("manifest.json does not parse")?;
+        let models = j
+            .need("models")?
+            .as_obj()?
+            .iter()
+            .map(|(name, entry)| {
+                Ok((
+                    name.clone(),
+                    ModelEntry::from_json(entry)
+                        .with_context(|| format!("model {name}"))?,
+                ))
+            })
+            .collect::<Result<BTreeMap<_, _>>>()?;
+        let m = Manifest {
+            version: j.need("version")?.as_usize()?,
+            batch: j.need("batch")?.as_usize()?,
+            models,
+            dir: dir.to_path_buf(),
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Structural validation + artifact-file existence check.
+    pub fn validate(&self) -> Result<()> {
+        if self.version != 1 {
+            bail!("unsupported manifest version {}", self.version);
+        }
+        if self.batch == 0 {
+            bail!("manifest batch size is 0");
+        }
+        if self.models.is_empty() {
+            bail!("manifest lists no models");
+        }
+        for (name, entry) in &self.models {
+            if entry.task != "classification" && entry.task != "regression" {
+                bail!("model {name}: unknown task {:?}", entry.task);
+            }
+            if entry.is_classification() && entry.num_classes < 2 {
+                bail!("model {name}: classification with {} classes", entry.num_classes);
+            }
+            if entry.params.is_empty() {
+                bail!("model {name}: no parameters");
+            }
+            for (key, fname) in &entry.executables {
+                let p = self.dir.join(fname);
+                if !p.exists() {
+                    bail!(
+                        "model {name}: artifact {key} -> {fname} missing from {:?}",
+                        self.dir
+                    );
+                }
+            }
+            for exe in Exe::ALL {
+                for fl in [Flavour::Pallas, Flavour::Jnp] {
+                    entry.artifact(exe, fl).with_context(|| format!("model {name}"))?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models.get(name).with_context(|| {
+            format!(
+                "model {name:?} not in manifest (have: {})",
+                self.models.keys().cloned().collect::<Vec<_>>().join(", ")
+            )
+        })
+    }
+
+    pub fn artifact_path(&self, model: &str, exe: Exe, flavour: Flavour) -> Result<PathBuf> {
+        Ok(self.dir.join(self.model(model)?.artifact(exe, flavour)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::TempDir;
+
+    fn write_toy_manifest(dir: &Path, drop_artifact: Option<&str>) {
+        let mut exes = String::new();
+        for exe in Exe::ALL {
+            for fl in ["pallas", "jnp"] {
+                let fname = format!("m_{}.{fl}.hlo.txt", exe.as_str());
+                if Some(fname.as_str()) != drop_artifact {
+                    std::fs::write(dir.join(&fname), "HloModule m").unwrap();
+                }
+                exes.push_str(&format!(
+                    "\"{}:{fl}\": \"{fname}\",",
+                    exe.as_str()
+                ));
+            }
+        }
+        exes.pop(); // trailing comma
+        let doc = format!(
+            r#"{{
+  "version": 1,
+  "batch": 8,
+  "models": {{
+    "m": {{
+      "task": "regression",
+      "x_shape": [1],
+      "num_classes": 0,
+      "y_dtype": "f32",
+      "params": [{{"name": "w", "shape": [1, 1]}}],
+      "executables": {{{exes}}}
+    }}
+  }}
+}}"#
+        );
+        std::fs::write(dir.join("manifest.json"), doc).unwrap();
+    }
+
+    #[test]
+    fn load_validate_roundtrip() {
+        let dir = TempDir::new("manifest").unwrap();
+        write_toy_manifest(dir.path(), None);
+        let m = Manifest::load(dir.path()).unwrap();
+        assert_eq!(m.batch, 8);
+        let e = m.model("m").unwrap();
+        assert_eq!(e.artifact(Exe::Init, Flavour::Jnp).unwrap(), "m_init.jnp.hlo.txt");
+        assert_eq!(e.params[0], ParamEntry { name: "w".into(), shape: vec![1, 1] });
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn missing_artifact_fails_validation() {
+        let dir = TempDir::new("manifest").unwrap();
+        write_toy_manifest(dir.path(), Some("m_eval.jnp.hlo.txt"));
+        assert!(Manifest::load(dir.path()).is_err());
+    }
+
+    #[test]
+    fn missing_manifest_has_actionable_error() {
+        let dir = TempDir::new("manifest").unwrap();
+        let err = Manifest::load(dir.path()).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "err: {err}");
+    }
+
+    #[test]
+    fn flavour_parse() {
+        use std::str::FromStr;
+        assert_eq!(Flavour::from_str("pallas").unwrap(), Flavour::Pallas);
+        assert_eq!(Flavour::from_str("jnp").unwrap(), Flavour::Jnp);
+        assert!(Flavour::from_str("cuda").is_err());
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        let dir = crate::artifacts_dir();
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.models.contains_key("mlp"));
+            assert_eq!(m.batch, 128);
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: load the AOT artifacts (`artifacts/*.hlo.txt` + the
+//! manifest) and execute them from the rust hot path.
+//!
+//! * [`manifest`] — the python→rust interchange contract;
+//! * [`session`]  — single-threaded model session with resident params;
+//! * [`engine`]   — leader/worker thread pool for data-parallel steps.
+
+pub mod engine;
+pub mod manifest;
+pub mod session;
+
+pub use engine::Engine;
+pub use manifest::{Exe, Flavour, Manifest, ModelEntry, ParamEntry};
+pub use session::{compile_hlo, from_literal, to_literal, Session, SessionStats};

@@ -1,0 +1,63 @@
+//! Max-prob baseline (paper Table 3 "Max prob."): keep the `b` examples
+//! with the *highest* loss — the deterministic "biggest losers" rule.
+//!
+//! Fast early progress, but collapses on noisy data: mislabelled or
+//! outlier examples have persistently high loss and monopolize the
+//! backward budget (the Table 3 accuracy collapse this repo reproduces).
+
+use super::{valid_indices, Sampler};
+use crate::data::rng::Rng;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MaxProb;
+
+impl Sampler for MaxProb {
+    fn select(
+        &mut self,
+        losses: &[f32],
+        valid: &[f32],
+        budget: usize,
+        _rng: &mut Rng,
+    ) -> Vec<usize> {
+        debug_assert_eq!(losses.len(), valid.len());
+        let mut vi = valid_indices(valid);
+        let b = budget.min(vi.len());
+        if b == 0 {
+            return vec![];
+        }
+        vi.sort_by(|&a, &c| losses[c].partial_cmp(&losses[a]).unwrap());
+        vi.truncate(b);
+        vi
+    }
+
+    fn name(&self) -> &'static str {
+        "max_prob"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn picks_highest_losses() {
+        let losses = vec![5.0, 1.0, 3.0, 0.5, 4.0];
+        let valid = vec![1.0f32; 5];
+        let mut rng = Rng::seed_from(0);
+        let mut got = MaxProb.select(&losses, &valid, 2, &mut rng);
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 4]);
+    }
+
+    #[test]
+    fn outliers_monopolize_budget() {
+        let mut losses = vec![1.0f32; 10];
+        losses[2] = 500.0;
+        losses[8] = 900.0;
+        let valid = vec![1.0f32; 10];
+        let mut rng = Rng::seed_from(0);
+        let mut got = MaxProb.select(&losses, &valid, 2, &mut rng);
+        got.sort_unstable();
+        assert_eq!(got, vec![2, 8]);
+    }
+}

@@ -1,0 +1,69 @@
+//! Min-k loss selection (Shah, Wu & Sanghavi 2020; paper baseline
+//! `minK`): keep the `b` examples with the *lowest* loss.
+//!
+//! Robust to outliers (they never get selected) but slow to converge —
+//! the instability band the paper shows in Fig 1/2.
+
+use super::{valid_indices, Sampler};
+use crate::data::rng::Rng;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MinK;
+
+impl Sampler for MinK {
+    fn select(
+        &mut self,
+        losses: &[f32],
+        valid: &[f32],
+        budget: usize,
+        _rng: &mut Rng,
+    ) -> Vec<usize> {
+        debug_assert_eq!(losses.len(), valid.len());
+        let mut vi = valid_indices(valid);
+        let b = budget.min(vi.len());
+        if b == 0 {
+            return vec![];
+        }
+        vi.sort_by(|&a, &c| losses[a].partial_cmp(&losses[c]).unwrap());
+        vi.truncate(b);
+        vi
+    }
+
+    fn name(&self) -> &'static str {
+        "mink"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn picks_lowest_losses() {
+        let losses = vec![5.0, 1.0, 3.0, 0.5, 4.0];
+        let valid = vec![1.0f32; 5];
+        let mut rng = Rng::seed_from(0);
+        let mut got = MinK.select(&losses, &valid, 2, &mut rng);
+        got.sort_unstable();
+        assert_eq!(got, vec![1, 3]);
+    }
+
+    #[test]
+    fn excludes_outliers_entirely() {
+        let mut losses = vec![1.0f32; 10];
+        losses[7] = 1000.0; // outlier
+        let valid = vec![1.0f32; 10];
+        let mut rng = Rng::seed_from(0);
+        let got = MinK.select(&losses, &valid, 9, &mut rng);
+        assert!(!got.contains(&7));
+    }
+
+    #[test]
+    fn budget_larger_than_valid_rows() {
+        let losses = vec![1.0, 2.0, 3.0];
+        let valid = vec![1.0, 1.0, 0.0];
+        let mut rng = Rng::seed_from(0);
+        let got = MinK.select(&losses, &valid, 5, &mut rng);
+        assert_eq!(got.len(), 2);
+    }
+}

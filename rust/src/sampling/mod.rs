@@ -1,0 +1,226 @@
+//! Batch selection policies ("which examples earn a backward pass").
+//!
+//! Every policy implements [`Sampler`]: given the per-example losses
+//! recorded from the forward pass (the paper's "constant amount of
+//! information per instance"), a validity mask (padding rows are never
+//! selectable) and a budget `b`, return the indices that participate in
+//! the backward pass.
+//!
+//! | [`Method`] | paper | semantics |
+//! |---|---|---|
+//! | `Uniform` | §4 baseline | Bernoulli(ratio) per example |
+//! | `SelectiveBackprop` | [38] | keep w.p. `tanh(γ·L)`, budget-calibrated |
+//! | `MinK` | [39] | `b` lowest-loss examples |
+//! | `MaxProb` | Table 3 baseline | `b` highest-loss examples |
+//! | `Obftf` | §3.3 (ours) | sparse subset approx, exact B&B solver |
+//! | `ObftfProx` | appendix | strided pick over loss-sorted order |
+//! | `ObftfDp` | (ablation) | subset approx via ε-DP solver |
+//! | `FrankWolfe` | §3.3 future work | subset approx via FW relaxation |
+
+pub mod max_prob;
+pub mod mink;
+pub mod obftf;
+pub mod obftf_prox;
+pub mod selective_backprop;
+pub mod uniform;
+
+use std::str::FromStr;
+
+use anyhow::bail;
+
+use crate::data::rng::Rng;
+
+pub use max_prob::MaxProb;
+pub use mink::MinK;
+pub use obftf::{Obftf, SolverKind};
+pub use obftf_prox::ObftfProx;
+pub use selective_backprop::SelectiveBackprop;
+pub use uniform::Uniform;
+
+/// A batch-selection policy. `&mut self` lets stateful policies (e.g.
+/// history-based extensions) evolve across steps.
+pub trait Sampler: Send {
+    /// Return the selected indices (subset of valid rows, unsorted ok).
+    ///
+    /// * `losses` — per-example losses, length = compiled batch size;
+    /// * `valid`  — 1.0 for real rows, 0.0 for padding;
+    /// * `budget` — target number of selected examples (see
+    ///   [`budget_for`]); policies may return fewer (never more than
+    ///   the number of valid rows).
+    fn select(&mut self, losses: &[f32], valid: &[f32], budget: usize, rng: &mut Rng)
+        -> Vec<usize>;
+
+    fn name(&self) -> &'static str;
+}
+
+/// The configured selection method.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    Uniform,
+    SelectiveBackprop,
+    MinK,
+    MaxProb,
+    Obftf,
+    ObftfProx,
+    ObftfDp,
+    FrankWolfe,
+}
+
+impl Method {
+    pub const ALL: [Method; 8] = [
+        Method::Uniform,
+        Method::SelectiveBackprop,
+        Method::MinK,
+        Method::MaxProb,
+        Method::Obftf,
+        Method::ObftfProx,
+        Method::ObftfDp,
+        Method::FrankWolfe,
+    ];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Method::Uniform => "uniform",
+            Method::SelectiveBackprop => "selective_backprop",
+            Method::MinK => "mink",
+            Method::MaxProb => "max_prob",
+            Method::Obftf => "obftf",
+            Method::ObftfProx => "obftf_prox",
+            Method::ObftfDp => "obftf_dp",
+            Method::FrankWolfe => "frank_wolfe",
+        }
+    }
+
+    /// Instantiate the sampler. `gamma` only affects SelectiveBackprop.
+    pub fn build(&self, gamma: f32) -> Box<dyn Sampler> {
+        match self {
+            Method::Uniform => Box::new(Uniform),
+            Method::SelectiveBackprop => Box::new(SelectiveBackprop::new(gamma)),
+            Method::MinK => Box::new(MinK),
+            Method::MaxProb => Box::new(MaxProb),
+            Method::Obftf => Box::new(Obftf::new(SolverKind::BranchBound)),
+            Method::ObftfProx => Box::new(ObftfProx),
+            Method::ObftfDp => Box::new(Obftf::new(SolverKind::Dp)),
+            Method::FrankWolfe => Box::new(Obftf::new(SolverKind::FrankWolfe)),
+        }
+    }
+}
+
+impl FromStr for Method {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        for m in Method::ALL {
+            if m.as_str() == s {
+                return Ok(m);
+            }
+        }
+        bail!(
+            "unknown method {s:?}; expected one of {}",
+            Method::ALL.map(|m| m.as_str()).join(" | ")
+        )
+    }
+}
+
+impl std::fmt::Display for Method {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Indices of valid (non-padding) rows.
+pub fn valid_indices(valid: &[f32]) -> Vec<usize> {
+    valid
+        .iter()
+        .enumerate()
+        .filter(|(_, &m)| m > 0.0)
+        .map(|(i, _)| i)
+        .collect()
+}
+
+/// The per-batch budget `b = round(ratio · n_valid)`, clamped to
+/// `[1, n_valid]` (the paper guarantees at least one selected example).
+pub fn budget_for(ratio: f64, n_valid: usize) -> usize {
+    if n_valid == 0 {
+        return 0;
+    }
+    (((ratio * n_valid as f64).round() as usize).max(1)).min(n_valid)
+}
+
+/// Convert selected indices into the f32 0/1 mask the `train_step`
+/// executable consumes.
+pub fn selection_mask(indices: &[usize], n: usize) -> Vec<f32> {
+    let mut mask = vec![0.0f32; n];
+    for &i in indices {
+        debug_assert!(i < n);
+        mask[i] = 1.0;
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_roundtrip_strings() {
+        for m in Method::ALL {
+            assert_eq!(Method::from_str(m.as_str()).unwrap(), m);
+        }
+        assert!(Method::from_str("bogus").is_err());
+    }
+
+    #[test]
+    fn budget_bounds() {
+        assert_eq!(budget_for(0.0, 100), 1); // at least one
+        assert_eq!(budget_for(0.25, 128), 32);
+        assert_eq!(budget_for(1.0, 128), 128);
+        assert_eq!(budget_for(2.0, 10), 10); // clamped
+        assert_eq!(budget_for(0.5, 0), 0);
+    }
+
+    #[test]
+    fn mask_from_indices() {
+        let m = selection_mask(&[0, 3], 5);
+        assert_eq!(m, vec![1.0, 0.0, 0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn valid_indices_skips_padding() {
+        assert_eq!(valid_indices(&[1.0, 0.0, 1.0]), vec![0, 2]);
+    }
+
+    #[test]
+    fn all_methods_build_and_select() {
+        let losses: Vec<f32> = (0..16).map(|i| i as f32 / 4.0).collect();
+        let valid = vec![1.0f32; 16];
+        let mut rng = Rng::seed_from(0);
+        for m in Method::ALL {
+            let mut s = m.build(1.0);
+            let sel = s.select(&losses, &valid, 4, &mut rng);
+            assert!(!sel.is_empty(), "{m} selected nothing");
+            assert!(sel.iter().all(|&i| i < 16));
+            let mut u = sel.clone();
+            u.sort_unstable();
+            u.dedup();
+            assert_eq!(u.len(), sel.len(), "{m} returned duplicates");
+        }
+    }
+
+    #[test]
+    fn no_method_selects_padding() {
+        let losses: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let valid = vec![1.0, 1.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0];
+        let mut rng = Rng::seed_from(1);
+        for m in Method::ALL {
+            let mut s = m.build(1.0);
+            for trial in 0..10 {
+                let sel = s.select(&losses, &valid, 3, &mut rng);
+                assert!(
+                    sel.iter().all(|&i| i < 4),
+                    "{m} trial {trial} selected padding row: {sel:?}"
+                );
+            }
+        }
+    }
+}

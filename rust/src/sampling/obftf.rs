@@ -1,0 +1,205 @@
+//! OBFTF — the paper's method (§3.3, Algorithm 1).
+//!
+//! Per batch: (1) compute the batch mean loss; (2) noise it with
+//! `N(mean, std/√b)` exactly as the reference implementation
+//! (`np.random.normal(np.mean(loss), np.std(loss)/np.sqrt(N1))`) — the
+//! jitter decorrelates consecutive steps' targets; (3) solve the sparse
+//! subset approximation problem Eq. 6 for the `b` examples whose mean
+//! loss best matches the target.
+//!
+//! The paper calls OR-tools CBC; we dispatch to our own solver stack
+//! ([`SolverKind`]): exact branch-and-bound (default), ε-approximate DP,
+//! or the Frank–Wolfe relaxation.
+
+use super::{valid_indices, Sampler};
+use crate::data::rng::Rng;
+use crate::solver::bnb::BranchBound;
+use crate::solver::dp::DpApprox;
+use crate::solver::frank_wolfe::FrankWolfe;
+use crate::solver::{SubsetProblem, SubsetSolver};
+
+/// Which subset-approximation solver backs OBFTF.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SolverKind {
+    BranchBound,
+    Dp,
+    FrankWolfe,
+}
+
+/// The OBFTF sampler.
+///
+/// **Composition degeneracy** (found empirically; DESIGN.md
+/// `abl-solver`): Eq. 6 constrains only the subset *mean*, which many
+/// subsets satisfy. Driving the solver to exact optimality returns
+/// arbitrary optimal compositions — often "b−1 easy examples + one
+/// extreme outlier" — whose *gradients* are terrible at small budgets
+/// (the paper's batch 4096 / b≈410 hides this; our batch-128 / b≈13
+/// regime exposes it). The fix: solve to within `tolerance_frac` of the
+/// statistical noise floor `std/√b` instead of to optimality. The B&B's
+/// incumbent (a quantile-strided, swap-polished subset) then wins
+/// whenever it is statistically indistinguishable from exact, keeping a
+/// distribution-matched composition. Set `tolerance_frac = 0` to study
+/// the degenerate exact behaviour.
+#[derive(Clone, Copy, Debug)]
+pub struct Obftf {
+    pub solver: SolverKind,
+    /// Scale on the target-noise term (1.0 = paper; 0.0 = deterministic
+    /// batch mean, used by the ablation benches).
+    pub noise_scale: f64,
+    /// Solve tolerance as a fraction of `std/√b` (see above).
+    pub tolerance_frac: f64,
+}
+
+impl Obftf {
+    pub fn new(solver: SolverKind) -> Self {
+        Obftf { solver, noise_scale: 1.0, tolerance_frac: 0.1 }
+    }
+
+    pub fn deterministic(solver: SolverKind) -> Self {
+        Obftf { solver, noise_scale: 0.0, tolerance_frac: 0.1 }
+    }
+
+    /// Exact-optimality variant (the composition-degenerate one).
+    pub fn exact(solver: SolverKind) -> Self {
+        Obftf { solver, noise_scale: 1.0, tolerance_frac: 0.0 }
+    }
+
+    fn run_solver(&self, p: &SubsetProblem, noise_floor: f64) -> Vec<usize> {
+        match self.solver {
+            SolverKind::BranchBound => {
+                let bnb = BranchBound {
+                    tolerance: (self.tolerance_frac * noise_floor).max(1e-12),
+                    ..Default::default()
+                };
+                bnb.solve(p).indices
+            }
+            SolverKind::Dp => DpApprox::default().solve(p).indices,
+            SolverKind::FrankWolfe => FrankWolfe::default().solve(p).indices,
+        }
+    }
+}
+
+impl Sampler for Obftf {
+    fn select(
+        &mut self,
+        losses: &[f32],
+        valid: &[f32],
+        budget: usize,
+        rng: &mut Rng,
+    ) -> Vec<usize> {
+        debug_assert_eq!(losses.len(), valid.len());
+        let vi = valid_indices(valid);
+        let b = budget.min(vi.len());
+        if b == 0 {
+            return vec![];
+        }
+        let vals: Vec<f32> = vi.iter().map(|&i| losses[i]).collect();
+        let n = vals.len() as f64;
+        let mean = vals.iter().map(|&v| v as f64).sum::<f64>() / n;
+        let var = vals
+            .iter()
+            .map(|&v| (v as f64 - mean) * (v as f64 - mean))
+            .sum::<f64>()
+            / n;
+        // Target jitter: the appendix noises the target with
+        // `N(mean, std/√N1)` where `N1` is an undefined global in the
+        // paper's listing. We read it as the *batch* size — the standard
+        // error of the batch-mean estimate itself — which is the
+        // statistically coherent interpretation and stays proportionate
+        // at small batches (reading it as the subset size makes the
+        // jitter dominate the signal at b ≈ 13; see EXPERIMENTS.md).
+        let target_jitter = var.sqrt() / n.sqrt();
+        // Solve tolerance is measured against the subset mean's own
+        // granularity, std/√b.
+        let subset_floor = var.sqrt() / (b as f64).sqrt();
+        let target = mean + self.noise_scale * target_jitter * rng.normal();
+
+        let p = SubsetProblem::new(&vals, b, target)
+            .expect("losses validated finite upstream");
+        let local = self.run_solver(&p, subset_floor);
+        local.into_iter().map(|q| vi[q]).collect()
+    }
+
+    fn name(&self) -> &'static str {
+        match self.solver {
+            SolverKind::BranchBound => "obftf",
+            SolverKind::Dp => "obftf_dp",
+            SolverKind::FrankWolfe => "frank_wolfe",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lognormal_losses(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::seed_from(seed);
+        (0..n).map(|_| (rng.normal() * 0.8).exp() as f32).collect()
+    }
+
+    #[test]
+    fn selected_mean_tracks_batch_mean() {
+        let losses = lognormal_losses(128, 5);
+        let valid = vec![1.0f32; 128];
+        let batch_mean = losses.iter().sum::<f32>() / 128.0;
+        let mut rng = Rng::seed_from(7);
+        for kind in [SolverKind::BranchBound, SolverKind::Dp, SolverKind::FrankWolfe] {
+            let mut s = Obftf::deterministic(kind);
+            let sel = s.select(&losses, &valid, 32, &mut rng);
+            assert_eq!(sel.len(), 32, "{kind:?}");
+            let m = sel.iter().map(|&i| losses[i]).sum::<f32>() / 32.0;
+            assert!(
+                (m - batch_mean).abs() < 0.02,
+                "{kind:?}: selected mean {m} vs batch mean {batch_mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn robust_to_outliers_unlike_max_prob() {
+        // one catastrophic outlier: OBFTF must not select it (its value
+        // alone would blow the subset mean far past the batch mean)
+        let mut losses = vec![1.0f32; 64];
+        losses[10] = 10_000.0;
+        let valid = vec![1.0f32; 64];
+        let mut rng = Rng::seed_from(9);
+        let mut s = Obftf::deterministic(SolverKind::BranchBound);
+        let sel = s.select(&losses, &valid, 8, &mut rng);
+        assert!(!sel.contains(&10), "OBFTF selected the outlier");
+    }
+
+    #[test]
+    fn noise_makes_selection_vary_across_steps() {
+        let losses = lognormal_losses(64, 21);
+        let valid = vec![1.0f32; 64];
+        let mut rng = Rng::seed_from(3);
+        let mut s = Obftf::new(SolverKind::BranchBound);
+        let a = s.select(&losses, &valid, 16, &mut rng);
+        let b = s.select(&losses, &valid, 16, &mut rng);
+        assert_ne!(a, b, "noised targets should vary the selection");
+    }
+
+    #[test]
+    fn deterministic_mode_is_stable() {
+        let losses = lognormal_losses(64, 22);
+        let valid = vec![1.0f32; 64];
+        let mut s = Obftf::deterministic(SolverKind::BranchBound);
+        let a = s.select(&losses, &valid, 16, &mut Rng::seed_from(1));
+        let b = s.select(&losses, &valid, 16, &mut Rng::seed_from(99));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn respects_validity_mask() {
+        let losses = lognormal_losses(32, 23);
+        let mut valid = vec![1.0f32; 32];
+        for v in valid.iter_mut().skip(16) {
+            *v = 0.0;
+        }
+        let mut rng = Rng::seed_from(4);
+        let mut s = Obftf::new(SolverKind::Dp);
+        let sel = s.select(&losses, &valid, 8, &mut rng);
+        assert!(sel.iter().all(|&i| i < 16));
+    }
+}

@@ -1,0 +1,86 @@
+//! OBFTF-prox (paper appendix `"OBFTF_prox"`): the O(n log n)
+//! approximation of the subset problem — sort by loss descending, then
+//! take a strided slice.
+//!
+//! A stride of `n/(b+1)` over the sorted order is a quantile sketch of
+//! the loss distribution, so the selected subset's mean tracks the batch
+//! mean without solving anything. The verbatim paper rule:
+//! `ind_sorted[floor(i · n/(b+1))]` for `i = 1..=b`.
+
+use super::{valid_indices, Sampler};
+use crate::data::rng::Rng;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ObftfProx;
+
+impl Sampler for ObftfProx {
+    fn select(
+        &mut self,
+        losses: &[f32],
+        valid: &[f32],
+        budget: usize,
+        _rng: &mut Rng,
+    ) -> Vec<usize> {
+        debug_assert_eq!(losses.len(), valid.len());
+        let mut vi = valid_indices(valid);
+        let n = vi.len();
+        let b = budget.min(n);
+        if b == 0 {
+            return vec![];
+        }
+        vi.sort_by(|&a, &c| losses[c].partial_cmp(&losses[a]).unwrap());
+        let stride = n as f64 / (b + 1) as f64;
+        let mut out = Vec::with_capacity(b);
+        for i in 1..=b {
+            let q = ((i as f64 * stride).floor() as usize).min(n - 1);
+            out.push(vi[q]);
+        }
+        out.sort_unstable();
+        out.dedup(); // stride < 1 can repeat positions when b ≈ n
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "obftf_prox"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strided_pick_spans_the_loss_range() {
+        let losses: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        let valid = vec![1.0f32; 100];
+        let mut rng = Rng::seed_from(0);
+        let got = ObftfProx.select(&losses, &valid, 9, &mut rng);
+        assert_eq!(got.len(), 9);
+        // neither extreme should be over-represented: mean of selected
+        // losses tracks the batch mean (49.5)
+        let mean: f32 = got.iter().map(|&i| losses[i]).sum::<f32>() / 9.0;
+        assert!((39.5..59.5).contains(&mean), "selected mean {mean}");
+    }
+
+    #[test]
+    fn skips_the_single_largest_loss() {
+        // stride starts at i=1, so the max-loss example (an outlier) is
+        // skipped unless b ≈ n — the robustness property.
+        let mut losses = vec![1.0f32; 20];
+        losses[4] = 1e6;
+        let valid = vec![1.0f32; 20];
+        let mut rng = Rng::seed_from(0);
+        let got = ObftfProx.select(&losses, &valid, 4, &mut rng);
+        assert!(!got.contains(&4));
+    }
+
+    #[test]
+    fn handles_budget_close_to_n() {
+        let losses: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let valid = vec![1.0f32; 8];
+        let mut rng = Rng::seed_from(0);
+        let got = ObftfProx.select(&losses, &valid, 8, &mut rng);
+        assert!(!got.is_empty());
+        assert!(got.len() <= 8);
+    }
+}

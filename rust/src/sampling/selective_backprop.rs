@@ -1,0 +1,145 @@
+//! Selective-Backprop baseline (Jiang et al. 2019; paper appendix
+//! `"prob"`).
+//!
+//! Keep example `i` with probability
+//! `(1 − e^{−2γL_i}) / (1 + e^{−2γL_i}) = tanh(γ·L_i)`
+//! — higher loss, higher chance of a backward pass.
+//!
+//! The raw rule's realized count depends on the loss scale, which makes
+//! cross-method comparisons at a fixed sampling ratio unfair; with
+//! `calibrate = true` (default) the probabilities are rescaled so their
+//! sum equals the budget (expected count = b) while preserving the
+//! loss-proportional *shape*. Set `calibrate = false` for the verbatim
+//! paper rule.
+
+use super::{valid_indices, Sampler};
+use crate::data::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct SelectiveBackprop {
+    pub gamma: f32,
+    pub calibrate: bool,
+}
+
+impl SelectiveBackprop {
+    pub fn new(gamma: f32) -> Self {
+        SelectiveBackprop { gamma, calibrate: true }
+    }
+
+    pub fn raw(gamma: f32) -> Self {
+        SelectiveBackprop { gamma, calibrate: false }
+    }
+}
+
+impl Sampler for SelectiveBackprop {
+    fn select(
+        &mut self,
+        losses: &[f32],
+        valid: &[f32],
+        budget: usize,
+        rng: &mut Rng,
+    ) -> Vec<usize> {
+        debug_assert_eq!(losses.len(), valid.len());
+        let vi = valid_indices(valid);
+        if vi.is_empty() || budget == 0 {
+            return vec![];
+        }
+        let mut probs: Vec<f64> = vi
+            .iter()
+            .map(|&i| ((self.gamma * losses[i]) as f64).tanh().max(0.0))
+            .collect();
+        if self.calibrate {
+            let sum: f64 = probs.iter().sum();
+            if sum > 1e-12 {
+                let scale = budget as f64 / sum;
+                for p in probs.iter_mut() {
+                    *p = (*p * scale).min(1.0);
+                }
+            } else {
+                // all losses ≈ 0: degenerate to uniform at the budget rate
+                let r = budget as f64 / vi.len() as f64;
+                for p in probs.iter_mut() {
+                    *p = r;
+                }
+            }
+        }
+        let mut out: Vec<usize> = vi
+            .iter()
+            .zip(&probs)
+            .filter(|(_, &p)| rng.bernoulli(p))
+            .map(|(&i, _)| i)
+            .collect();
+        if out.is_empty() {
+            out.push(vi[rng.below(vi.len())]);
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "selective_backprop"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefers_high_loss_examples() {
+        // half the batch has loss 0.01, half loss 5.0
+        let mut losses = vec![0.01f32; 64];
+        losses.extend(vec![5.0f32; 64]);
+        let valid = vec![1.0f32; 128];
+        let mut rng = Rng::seed_from(11);
+        let mut s = SelectiveBackprop::new(1.0);
+        let mut low = 0usize;
+        let mut high = 0usize;
+        for _ in 0..50 {
+            for i in s.select(&losses, &valid, 32, &mut rng) {
+                if i < 64 {
+                    low += 1;
+                } else {
+                    high += 1;
+                }
+            }
+        }
+        assert!(high > 10 * low, "high {high} low {low}");
+    }
+
+    #[test]
+    fn calibrated_count_tracks_budget() {
+        let losses: Vec<f32> = (0..256).map(|i| 0.1 + i as f32 / 64.0).collect();
+        let valid = vec![1.0f32; 256];
+        let mut rng = Rng::seed_from(13);
+        let mut s = SelectiveBackprop::new(1.0);
+        let total: usize = (0..30)
+            .map(|_| s.select(&losses, &valid, 64, &mut rng).len())
+            .sum();
+        let mean = total as f64 / 30.0;
+        assert!((52.0..76.0).contains(&mean), "mean count {mean}");
+    }
+
+    #[test]
+    fn raw_rule_matches_tanh_probability_scale() {
+        // gamma large → p ≈ 1 for any positive loss → selects ~everything
+        let losses = vec![3.0f32; 64];
+        let valid = vec![1.0f32; 64];
+        let mut rng = Rng::seed_from(17);
+        let mut s = SelectiveBackprop::raw(10.0);
+        let sel = s.select(&losses, &valid, 4, &mut rng);
+        assert!(sel.len() > 56, "selected {}", sel.len());
+    }
+
+    #[test]
+    fn zero_losses_degenerate_to_uniform() {
+        let losses = vec![0.0f32; 100];
+        let valid = vec![1.0f32; 100];
+        let mut rng = Rng::seed_from(19);
+        let mut s = SelectiveBackprop::new(1.0);
+        let counts: Vec<usize> = (0..20)
+            .map(|_| s.select(&losses, &valid, 25, &mut rng).len())
+            .collect();
+        let mean = counts.iter().sum::<usize>() as f64 / 20.0;
+        assert!((15.0..35.0).contains(&mean), "mean {mean}");
+    }
+}

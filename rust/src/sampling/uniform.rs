@@ -1,0 +1,76 @@
+//! Uniform subsampling baseline (paper §4, appendix `"uniform"`).
+//!
+//! Bernoulli(ratio) per example, exactly as the paper's reference code:
+//! the realized count varies around the budget; at least one example is
+//! always selected ("guarantee at least one data is sampled out").
+
+use super::{valid_indices, Sampler};
+use crate::data::rng::Rng;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Uniform;
+
+impl Sampler for Uniform {
+    fn select(
+        &mut self,
+        losses: &[f32],
+        valid: &[f32],
+        budget: usize,
+        rng: &mut Rng,
+    ) -> Vec<usize> {
+        debug_assert_eq!(losses.len(), valid.len());
+        let vi = valid_indices(valid);
+        if vi.is_empty() || budget == 0 {
+            return vec![];
+        }
+        let ratio = budget as f64 / vi.len() as f64;
+        let mut out: Vec<usize> =
+            vi.iter().copied().filter(|_| rng.bernoulli(ratio)).collect();
+        if out.is_empty() {
+            out.push(vi[rng.below(vi.len())]);
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "uniform"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn realized_count_tracks_ratio() {
+        let losses = vec![0.0f32; 1000];
+        let valid = vec![1.0f32; 1000];
+        let mut rng = Rng::seed_from(2);
+        let mut s = Uniform;
+        let total: usize = (0..20)
+            .map(|_| s.select(&losses, &valid, 250, &mut rng).len())
+            .sum();
+        let mean = total as f64 / 20.0;
+        assert!((200.0..300.0).contains(&mean), "mean count {mean}");
+    }
+
+    #[test]
+    fn never_empty_for_positive_budget() {
+        let losses = vec![0.0f32; 8];
+        let valid = vec![1.0f32; 8];
+        let mut rng = Rng::seed_from(3);
+        let mut s = Uniform;
+        for _ in 0..100 {
+            assert!(!s.select(&losses, &valid, 1, &mut rng).is_empty());
+        }
+    }
+
+    #[test]
+    fn ignores_loss_values() {
+        // same rng stream, different losses → identical selection
+        let valid = vec![1.0f32; 32];
+        let a = Uniform.select(&vec![0.0; 32], &valid, 8, &mut Rng::seed_from(7));
+        let b = Uniform.select(&vec![9.9; 32], &valid, 8, &mut Rng::seed_from(7));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,317 @@
+//! Exact branch-and-bound solver for the sparse subset approximation
+//! problem — the production replacement for the paper's CBC MIP call.
+//!
+//! Values are sorted ascending; at each node (`pos`, `taken`, partial
+//! sum) the reachable sum interval is bounded by prefix sums (take the
+//! `r` smallest vs `r` largest remaining values), giving an admissible
+//! lower bound on the objective for pruning. The incumbent is seeded
+//! with a [`local_swap`]-improved strided start so pruning bites
+//! immediately; a node budget bounds worst-case latency (on budget
+//! exhaustion the incumbent — already a high-quality heuristic answer —
+//! is returned, flagged via [`BnbStats::exhausted`]).
+
+use std::cell::Cell;
+
+use super::{local_swap, trivial, Selection, SubsetProblem, SubsetSolver};
+
+/// Exact branch-and-bound solver with a node budget.
+#[derive(Clone, Copy, Debug)]
+pub struct BranchBound {
+    /// Maximum number of search nodes before falling back to the
+    /// incumbent (default 200k ≈ well under a fwd_loss execution).
+    pub node_budget: usize,
+    /// Stop early once the objective is below this (absolute) tolerance.
+    pub tolerance: f64,
+}
+
+impl Default for BranchBound {
+    fn default() -> Self {
+        BranchBound { node_budget: 200_000, tolerance: 1e-12 }
+    }
+}
+
+/// Statistics from the last `solve` call (thread-local to keep the
+/// `SubsetSolver` interface object-safe and `&self`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BnbStats {
+    pub nodes: usize,
+    pub exhausted: bool,
+}
+
+thread_local! {
+    static LAST_STATS: Cell<BnbStats> = Cell::new(BnbStats::default());
+}
+
+impl BranchBound {
+    /// Stats for the most recent solve on this thread.
+    pub fn last_stats() -> BnbStats {
+        LAST_STATS.with(|s| s.get())
+    }
+}
+
+struct Search<'a> {
+    vals: &'a [f64],   // sorted ascending
+    pre: &'a [f64],    // prefix sums, pre[i] = Σ vals[..i]
+    b: usize,
+    target_sum: f64,
+    tolerance: f64,
+    node_budget: usize,
+    nodes: usize,
+    best_err: f64,
+    best: Vec<usize>,   // positions into `vals`
+    current: Vec<usize>,
+}
+
+impl<'a> Search<'a> {
+    /// Admissible bound on |sum − T| from (pos, taken, cur).
+    fn bound(&self, pos: usize, taken: usize, cur: f64) -> f64 {
+        let r = self.b - taken;
+        let n = self.vals.len();
+        debug_assert!(pos + r <= n);
+        let lo = cur + (self.pre[pos + r] - self.pre[pos]);
+        let hi = cur + (self.pre[n] - self.pre[n - r]);
+        if self.target_sum < lo {
+            lo - self.target_sum
+        } else if self.target_sum > hi {
+            self.target_sum - hi
+        } else {
+            0.0
+        }
+    }
+
+    fn rec(&mut self, pos: usize, taken: usize, cur: f64) {
+        if self.best_err <= self.tolerance || self.nodes >= self.node_budget {
+            return;
+        }
+        self.nodes += 1;
+        if taken == self.b {
+            let err = (cur - self.target_sum).abs();
+            if err < self.best_err {
+                self.best_err = err;
+                self.best = self.current.clone();
+            }
+            return;
+        }
+        let n = self.vals.len();
+        let r = self.b - taken;
+        if n - pos == r {
+            // forced: take all remaining
+            let mut sum = cur;
+            for q in pos..n {
+                self.current.push(q);
+                sum += self.vals[q];
+            }
+            let err = (sum - self.target_sum).abs();
+            if err < self.best_err {
+                self.best_err = err;
+                self.best = self.current.clone();
+            }
+            self.current.truncate(self.current.len() - r);
+            return;
+        }
+
+        // child bounds decide exploration order (best-first locally)
+        let take_bound = self.bound(pos + 1, taken + 1, cur + self.vals[pos]);
+        let skip_bound = self.bound(pos + 1, taken, cur);
+        let explore = |s: &mut Self, take_first: bool| {
+            let order = if take_first { [true, false] } else { [false, true] };
+            for take in order {
+                if take {
+                    if take_bound < s.best_err {
+                        s.current.push(pos);
+                        s.rec(pos + 1, taken + 1, cur + s.vals[pos]);
+                        s.current.pop();
+                    }
+                } else if skip_bound < s.best_err {
+                    s.rec(pos + 1, taken, cur);
+                }
+            }
+        };
+        explore(self, take_bound <= skip_bound);
+    }
+}
+
+impl SubsetSolver for BranchBound {
+    fn solve(&self, p: &SubsetProblem) -> Selection {
+        if let Some(t) = trivial(p) {
+            LAST_STATS.with(|s| s.set(BnbStats::default()));
+            return t;
+        }
+        let n = p.losses.len();
+        let b = p.budget;
+
+        // sort positions by loss ascending
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &c| p.losses[a].partial_cmp(&p.losses[c]).unwrap());
+        let vals: Vec<f64> = order.iter().map(|&i| p.losses[i] as f64).collect();
+        let mut pre = vec![0.0f64; n + 1];
+        for i in 0..n {
+            pre[i + 1] = pre[i] + vals[i];
+        }
+
+        // incumbent: strided pick over sorted order, improved by swaps
+        let stride = n as f64 / b as f64;
+        let seed: Vec<usize> = (0..b)
+            .map(|i| ((i as f64 + 0.5) * stride) as usize)
+            .map(|q| order[q.min(n - 1)])
+            .collect();
+        let incumbent = local_swap(p, seed, 32);
+
+        let mut search = Search {
+            vals: &vals,
+            pre: &pre,
+            b,
+            target_sum: p.target_mean * b as f64,
+            tolerance: self.tolerance * b as f64, // bound works in sum space
+            node_budget: self.node_budget,
+            nodes: 0,
+            best_err: incumbent.objective * b as f64,
+            best: vec![],
+            current: Vec::with_capacity(b),
+        };
+        search.rec(0, 0, 0.0);
+
+        let exhausted = search.nodes >= self.node_budget;
+        LAST_STATS.with(|s| s.set(BnbStats { nodes: search.nodes, exhausted }));
+
+        if search.best.is_empty() {
+            // incumbent was never beaten
+            return incumbent;
+        }
+        let indices: Vec<usize> = search.best.iter().map(|&q| order[q]).collect();
+        let sel = Selection::from_indices(p, indices);
+        if sel.objective <= incumbent.objective {
+            sel
+        } else {
+            incumbent
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "bnb"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+    use crate::solver::brute::BruteForce;
+    use crate::testkit::propcheck;
+
+    #[test]
+    fn exact_on_simple_instance() {
+        let losses = [0.5, 1.5, 2.5, 3.5, 10.0];
+        let p = SubsetProblem::new(&losses, 2, 2.0).unwrap();
+        let s = BranchBound::default().solve(&p);
+        assert!(s.objective < 1e-9, "obj {}", s.objective);
+    }
+
+    #[test]
+    fn matches_brute_force_on_random_instances() {
+        let mut rng = Rng::seed_from(17);
+        for trial in 0..60 {
+            let n = 6 + rng.below(12);
+            let b = 1 + rng.below(n - 1);
+            let losses: Vec<f32> =
+                (0..n).map(|_| (rng.uniform() * 5.0) as f32).collect();
+            let mean = losses.iter().sum::<f32>() as f64 / n as f64;
+            let target = mean * (0.6 + 0.8 * rng.uniform());
+            let p = SubsetProblem::new(&losses, b, target).unwrap();
+            let exact = BruteForce.solve(&p);
+            let got = BranchBound::default().solve(&p);
+            assert!(
+                got.objective <= exact.objective + 1e-9,
+                "trial {trial}: bnb {} > brute {}",
+                got.objective,
+                exact.objective
+            );
+        }
+    }
+
+    #[test]
+    fn node_budget_falls_back_to_incumbent() {
+        let mut rng = Rng::seed_from(3);
+        let losses: Vec<f32> = (0..256).map(|_| rng.uniform() as f32).collect();
+        let p = SubsetProblem::new(&losses, 64, 0.5).unwrap();
+        let tight = BranchBound { node_budget: 50, tolerance: 0.0 };
+        let s = tight.solve(&p);
+        assert_eq!(s.indices.len(), 64);
+        // incumbent quality: strided + swaps should already be good
+        assert!(s.objective < 0.05, "objective {}", s.objective);
+    }
+
+    #[test]
+    fn selection_has_exact_budget_and_unique_indices() {
+        let mut rng = Rng::seed_from(5);
+        let losses: Vec<f32> = (0..128).map(|_| (rng.normal().abs()) as f32).collect();
+        let p = SubsetProblem::new(&losses, 32, 0.8).unwrap();
+        let s = BranchBound::default().solve(&p);
+        assert_eq!(s.indices.len(), 32);
+        let mut u = s.indices.clone();
+        u.dedup();
+        assert_eq!(u.len(), 32);
+        assert!(s.indices.iter().all(|&i| i < 128));
+    }
+
+    #[test]
+    fn prop_matches_oracle() {
+        propcheck(
+            "bnb-matches-oracle",
+            64,
+            |rng| {
+                let n = 4 + rng.below(10);
+                let losses: Vec<f32> =
+                    (0..n).map(|_| (rng.uniform() * 10.0) as f32).collect();
+                let b = ((n as f64 * rng.uniform_in(0.1, 0.9)) as usize).clamp(1, n - 1);
+                let mean = losses.iter().sum::<f32>() as f64 / n as f64;
+                let target = mean * rng.uniform_in(0.2, 1.8);
+                (losses, b, target)
+            },
+            |(losses, b, target)| {
+                let p = SubsetProblem::new(losses, *b, *target).unwrap();
+                let exact = BruteForce.solve(&p);
+                let got = BranchBound::default().solve(&p);
+                if got.objective > exact.objective + 1e-9 {
+                    return Err(format!("bnb {} > oracle {}", got.objective, exact.objective));
+                }
+                if got.indices.len() != *b {
+                    return Err(format!("budget {} != {b}", got.indices.len()));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_budget_and_bounds_hold() {
+        propcheck(
+            "bnb-budget-bounds",
+            64,
+            |rng| {
+                let n = 2 + rng.below(62);
+                let losses: Vec<f32> =
+                    (0..n).map(|_| rng.uniform_in(-5.0, 5.0) as f32).collect();
+                let b = rng.below(n + 1);
+                let target = rng.uniform_in(-6.0, 6.0);
+                (losses, b, target)
+            },
+            |(losses, b, target)| {
+                let p = SubsetProblem::new(losses, *b, *target).unwrap();
+                let s = BranchBound::default().solve(&p);
+                if s.indices.len() != *b {
+                    return Err(format!("budget {} != {b}", s.indices.len()));
+                }
+                let mut u = s.indices.clone();
+                u.dedup();
+                if u.len() != *b {
+                    return Err("duplicate indices".into());
+                }
+                if !s.indices.iter().all(|&i| i < losses.len()) {
+                    return Err("index out of range".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,98 @@
+//! Exact enumeration oracle: every C(n, b) subset.
+//!
+//! Exponential — only for tests and tiny instances (`n ≤ 24` guarded by
+//! an assert). The proptest suite in `bnb.rs`/`dp.rs` validates the real
+//! solvers against this oracle.
+
+use super::{trivial, Selection, SubsetProblem, SubsetSolver};
+
+/// Exhaustive subset enumeration (test oracle).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BruteForce;
+
+impl SubsetSolver for BruteForce {
+    fn solve(&self, p: &SubsetProblem) -> Selection {
+        if let Some(t) = trivial(p) {
+            return t;
+        }
+        let n = p.losses.len();
+        assert!(n <= 24, "BruteForce is an oracle for n ≤ 24, got n = {n}");
+        let b = p.budget;
+        let target_sum = p.target_mean * b as f64;
+
+        let mut best_err = f64::INFINITY;
+        let mut best: u32 = 0;
+        // iterate combinations via Gosper's hack over b-bit masks
+        let mut mask: u32 = (1u32 << b) - 1;
+        let limit: u32 = 1u32 << n;
+        while mask < limit {
+            let mut sum = 0.0f64;
+            let mut m = mask;
+            while m != 0 {
+                let i = m.trailing_zeros() as usize;
+                sum += p.losses[i] as f64;
+                m &= m - 1;
+            }
+            let err = (sum - target_sum).abs();
+            if err < best_err {
+                best_err = err;
+                best = mask;
+            }
+            // Gosper's hack: next mask with the same popcount
+            let c = mask & mask.wrapping_neg();
+            let r = mask + c;
+            if r >= limit || c == 0 {
+                break;
+            }
+            mask = (((r ^ mask) >> 2) / c) | r;
+        }
+        let indices: Vec<usize> = (0..n).filter(|&i| best >> i & 1 == 1).collect();
+        Selection::from_indices(p, indices)
+    }
+
+    fn name(&self) -> &'static str {
+        "brute"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finds_exact_subset() {
+        let losses = [0.5, 1.5, 2.5, 3.5, 10.0];
+        let p = SubsetProblem::new(&losses, 2, 2.0).unwrap();
+        let s = BruteForce.solve(&p);
+        assert!(s.objective < 1e-9);
+        assert_eq!(s.indices, vec![1, 2]); // mean(1.5, 2.5) = 2.0
+    }
+
+    #[test]
+    fn budget_one_picks_closest() {
+        let losses = [0.1, 0.9, 2.0];
+        let p = SubsetProblem::new(&losses, 1, 1.0).unwrap();
+        let s = BruteForce.solve(&p);
+        assert_eq!(s.indices, vec![1]);
+    }
+
+    #[test]
+    fn full_and_empty_budget() {
+        let losses = [1.0, 3.0];
+        let p = SubsetProblem::new(&losses, 2, 2.0).unwrap();
+        let s = BruteForce.solve(&p);
+        assert_eq!(s.indices, vec![0, 1]);
+        assert!(s.objective < 1e-9);
+        let p0 = SubsetProblem::new(&losses, 0, 2.0).unwrap();
+        assert!(BruteForce.solve(&p0).indices.is_empty());
+    }
+
+    #[test]
+    fn b_equals_n_minus_one() {
+        let losses = [1.0, 2.0, 3.0, 4.0];
+        let p = SubsetProblem::new(&losses, 3, 2.0).unwrap();
+        let s = BruteForce.solve(&p);
+        assert_eq!(s.indices, vec![0, 1, 2]); // mean 2.0 exactly
+        assert!(s.objective < 1e-9);
+    }
+}

@@ -1,0 +1,292 @@
+//! ε-approximate dynamic program over a discretized loss grid.
+//!
+//! Losses are scaled onto an integer grid of `grid` buckets spanning
+//! `[min_loss, max_loss]`; a cardinality-constrained subset-sum DP over
+//! bitset rows (`feasible[count]` ⊆ {0..S}) then finds, for subset size
+//! `b`, the achievable scaled sum closest to the scaled target. The
+//! discretization error is at most `b · bucket_width / b = bucket_width`
+//! on the subset *mean*, i.e. `(max−min)/grid` — deterministic, unlike
+//! the node-budgeted branch-and-bound.
+//!
+//! Memory: `(b+1)` bitset rows of `b·grid` bits plus a `u32` choice
+//! table for reconstruction; with the default `grid = 4096` and
+//! `b ≤ 128` this stays under ~300 MiB worst case and ~17 MiB for the
+//! paper's n = 128 batches. Runtime is `O(n · b · S / 64)` word ops.
+
+use super::{local_swap, trivial, Selection, SubsetProblem, SubsetSolver};
+
+/// DP solver with a configurable discretization grid.
+#[derive(Clone, Copy, Debug)]
+pub struct DpApprox {
+    /// Number of grid buckets for the loss range (ε = range/grid).
+    pub grid: usize,
+    /// Post-process with a few local swap passes in continuous space to
+    /// shave off the discretization error.
+    pub polish: bool,
+}
+
+impl Default for DpApprox {
+    fn default() -> Self {
+        DpApprox { grid: 4096, polish: true }
+    }
+}
+
+struct Bitset {
+    words: Vec<u64>,
+    bits: usize,
+}
+
+impl Bitset {
+    fn new(bits: usize) -> Self {
+        Bitset { words: vec![0; bits.div_ceil(64)], bits }
+    }
+
+    #[inline]
+    fn get(&self, i: usize) -> bool {
+        self.words[i / 64] >> (i % 64) & 1 == 1
+    }
+
+    #[inline]
+    fn set(&mut self, i: usize) {
+        self.words[i / 64] |= 1 << (i % 64);
+    }
+
+    /// `out = self << k`, clipped to `bits`.
+    fn shifted_into(&self, k: usize, out: &mut Vec<u64>) {
+        let nw = self.words.len();
+        out.clear();
+        out.resize(nw, 0);
+        let wshift = k / 64;
+        let bshift = k % 64;
+        if bshift == 0 {
+            for i in (wshift..nw).rev() {
+                out[i] = self.words[i - wshift];
+            }
+        } else {
+            for i in (wshift..nw).rev() {
+                let lo = self.words[i - wshift] << bshift;
+                let hi = if i > wshift {
+                    self.words[i - wshift - 1] >> (64 - bshift)
+                } else {
+                    0
+                };
+                out[i] = lo | hi;
+            }
+        }
+        // clip stray bits above `bits`
+        let extra = nw * 64 - self.bits;
+        if extra > 0 {
+            let m = u64::MAX >> extra;
+            if let Some(last) = out.last_mut() {
+                *last &= m;
+            }
+        }
+    }
+}
+
+impl SubsetSolver for DpApprox {
+    fn solve(&self, p: &SubsetProblem) -> Selection {
+        if let Some(t) = trivial(p) {
+            return t;
+        }
+        let b = p.budget;
+
+        let lo = p.losses.iter().cloned().fold(f32::INFINITY, f32::min) as f64;
+        let hi = p.losses.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+        let range = (hi - lo).max(1e-12);
+        // Clamp the grid so the scaled sum space `b·(grid-1)` stays near
+        // 2^16: the DP is O(n·b·S/64) words with an O(b·S) u32 choice
+        // table, and an unclamped 4096-grid at b=128 would mean a 270 MB
+        // table and seconds of work. The coarser ε at large b is repaid
+        // by the post-polish swap pass (perf log: EXPERIMENTS.md §Perf).
+        let grid = self.grid.max(2).min(((1usize << 16) / b.max(1)).max(64));
+        let scale = (grid - 1) as f64 / range;
+
+        // scaled integer weights; max scaled sum
+        let w: Vec<usize> = p
+            .losses
+            .iter()
+            .map(|&c| ((c as f64 - lo) * scale).round() as usize)
+            .collect();
+        let smax = b * (grid - 1);
+
+        // feasible[count] = bitset of reachable scaled sums with `count` items
+        let mut feasible: Vec<Bitset> = (0..=b).map(|_| Bitset::new(smax + 1)).collect();
+        feasible[0].set(0);
+        // choice[count][sum] = item that reached (count, sum) first
+        let mut choice: Vec<Vec<u32>> = (0..=b).map(|_| vec![u32::MAX; smax + 1]).collect();
+
+        let mut shifted: Vec<u64> = Vec::new();
+        for (item, &wi) in w.iter().enumerate() {
+            let top = b.min(item + 1);
+            for count in (1..=top).rev() {
+                // new = feasible[count-1] << wi, minus already-feasible
+                feasible[count - 1].shifted_into(wi, &mut shifted);
+                let row = &mut feasible[count];
+                for wd in 0..row.words.len() {
+                    let added = shifted[wd] & !row.words[wd];
+                    if added != 0 {
+                        row.words[wd] |= added;
+                        let mut bits = added;
+                        while bits != 0 {
+                            let bit = bits.trailing_zeros() as usize;
+                            choice[count][wd * 64 + bit] = item as u32;
+                            bits &= bits - 1;
+                        }
+                    }
+                }
+            }
+        }
+
+        // pick the feasible sum at count b closest to the scaled target
+        let target_scaled = ((p.target_mean - lo) * b as f64 * scale).round() as i64;
+        let mut best_sum = None;
+        let mut best_d = i64::MAX;
+        for s in 0..=smax {
+            if feasible[b].get(s) {
+                let d = (s as i64 - target_scaled).abs();
+                if d < best_d {
+                    best_d = d;
+                    best_sum = Some(s);
+                }
+            }
+        }
+        let Some(mut s) = best_sum else {
+            // can only happen if b > 0 and no subset exists — impossible
+            // for b ≤ n; keep a defensive fallback.
+            return local_swap(p, (0..b).collect(), 8);
+        };
+
+        // walk the choice chain back
+        let mut indices = Vec::with_capacity(b);
+        for count in (1..=b).rev() {
+            let item = choice[count][s];
+            debug_assert_ne!(item, u32::MAX, "broken DP chain");
+            indices.push(item as usize);
+            s -= w[item as usize];
+        }
+        debug_assert_eq!(s, 0);
+
+        let sel = Selection::from_indices(p, indices);
+        if self.polish {
+            let polished = local_swap(p, sel.indices.clone(), 4);
+            if polished.objective < sel.objective {
+                return polished;
+            }
+        }
+        sel
+    }
+
+    fn name(&self) -> &'static str {
+        "dp"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+    use crate::solver::brute::BruteForce;
+    use crate::testkit::propcheck;
+
+    #[test]
+    fn bitset_shift() {
+        let mut bs = Bitset::new(130);
+        bs.set(0);
+        bs.set(5);
+        bs.set(64);
+        let mut out = Vec::new();
+        let check = |v: &Vec<u64>, i: usize| v[i / 64] >> (i % 64) & 1 == 1;
+        bs.shifted_into(3, &mut out);
+        assert!(check(&out, 3) && check(&out, 8) && check(&out, 67));
+        assert!(!check(&out, 0) && !check(&out, 5) && !check(&out, 64));
+        // shift by multiple of 64
+        bs.shifted_into(64, &mut out);
+        assert!(check(&out, 64) && check(&out, 69) && check(&out, 128));
+    }
+
+    #[test]
+    fn exact_when_grid_resolves_values() {
+        let losses = [0.0, 1.0, 2.0, 3.0, 4.0];
+        let p = SubsetProblem::new(&losses, 2, 2.0).unwrap();
+        let s = DpApprox::default().solve(&p);
+        assert!(s.objective < 1e-9, "obj {}", s.objective);
+        assert_eq!(s.indices.len(), 2);
+    }
+
+    #[test]
+    fn identical_losses_degenerate_range() {
+        let losses = [1.5f32; 16];
+        let p = SubsetProblem::new(&losses, 5, 1.5).unwrap();
+        let s = DpApprox::default().solve(&p);
+        assert_eq!(s.indices.len(), 5);
+        assert!(s.objective < 1e-6);
+    }
+
+    #[test]
+    fn within_epsilon_of_oracle_on_random_instances() {
+        let mut rng = Rng::seed_from(23);
+        for _ in 0..40 {
+            let n = 6 + rng.below(12);
+            let b = 1 + rng.below(n - 1);
+            let losses: Vec<f32> = (0..n).map(|_| (rng.uniform() * 4.0) as f32).collect();
+            let mean = losses.iter().sum::<f32>() as f64 / n as f64;
+            let p = SubsetProblem::new(&losses, b, mean).unwrap();
+            let exact = BruteForce.solve(&p);
+            let got = DpApprox { grid: 4096, polish: false }.solve(&p);
+            let eps = 2.0 * 4.0 / 4095.0; // 2·range/grid on the mean (item+target rounding)
+            assert!(
+                got.objective <= exact.objective + eps + 1e-9,
+                "dp {} vs oracle {} (eps {eps})",
+                got.objective,
+                exact.objective
+            );
+        }
+    }
+
+    #[test]
+    fn large_instance_runs_fast_and_valid() {
+        let mut rng = Rng::seed_from(31);
+        let losses: Vec<f32> = (0..512).map(|_| rng.normal().abs() as f32).collect();
+        let p = SubsetProblem::new(&losses, 128, 0.7).unwrap();
+        let s = DpApprox::default().solve(&p);
+        assert_eq!(s.indices.len(), 128);
+        assert!(s.objective < 1e-2, "obj {}", s.objective);
+    }
+
+    #[test]
+    fn prop_dp_epsilon_guarantee() {
+        propcheck(
+            "dp-epsilon",
+            48,
+            |rng| {
+                let n = 4 + rng.below(10);
+                let losses: Vec<f32> =
+                    (0..n).map(|_| (rng.uniform() * 8.0) as f32).collect();
+                let b = ((n as f64 * rng.uniform_in(0.1, 0.9)) as usize).clamp(1, n - 1);
+                (losses, b)
+            },
+            |(losses, b)| {
+                let n = losses.len();
+                let mean = losses.iter().sum::<f32>() as f64 / n as f64;
+                let p = SubsetProblem::new(losses, *b, mean).unwrap();
+                let exact = BruteForce.solve(&p);
+                let dp = DpApprox { grid: 2048, polish: false };
+                let got = dp.solve(&p);
+                let lo = losses.iter().cloned().fold(f32::INFINITY, f32::min) as f64;
+                let hi = losses.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+                let eps = 2.0 * (hi - lo).max(1e-12) / 2047.0 + 1e-7;
+                if got.objective > exact.objective + eps {
+                    return Err(format!(
+                        "dp {} oracle {} eps {eps}",
+                        got.objective, exact.objective
+                    ));
+                }
+                if got.indices.len() != *b {
+                    return Err(format!("budget {} != {b}", got.indices.len()));
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,172 @@
+//! Frank–Wolfe solver over the continuous relaxation — the "fast and
+//! accurate algorithms" the paper defers to future work (§3.3).
+//!
+//! Relaxation: minimize `f(z) = ((c·z)/b − t)²` over the capped simplex
+//! `{0 ≤ z ≤ 1, Σz = b}`. The linear minimization oracle over that
+//! polytope is simply "pick the b smallest (or largest) gradient
+//! coordinates", and the exact line search for a quadratic is closed
+//! form, so each iteration is `O(n log n)`. The fractional solution is
+//! rounded to the top-b coordinates and repaired with local swaps.
+
+use super::{local_swap, trivial, Selection, SubsetProblem, SubsetSolver};
+
+/// Frank–Wolfe + rounding + swap repair.
+#[derive(Clone, Copy, Debug)]
+pub struct FrankWolfe {
+    pub iters: usize,
+    /// Local swap passes after rounding (0 = raw rounding).
+    pub repair_passes: usize,
+}
+
+impl Default for FrankWolfe {
+    fn default() -> Self {
+        // repair_passes is the number of *single-swap* improvement steps
+        // (see `local_swap`); rounding an FW vertex mixture typically
+        // needs tens of swaps to close the last gap to the target mean.
+        FrankWolfe { iters: 32, repair_passes: 64 }
+    }
+}
+
+impl SubsetSolver for FrankWolfe {
+    fn solve(&self, p: &SubsetProblem) -> Selection {
+        if let Some(t) = trivial(p) {
+            return t;
+        }
+        let n = p.losses.len();
+        let b = p.budget;
+        let c: Vec<f64> = p.losses.iter().map(|&v| v as f64).collect();
+
+        // order by loss ascending; LMO vertices are prefixes/suffixes
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &q| c[a].partial_cmp(&c[q]).unwrap());
+
+        // start: uniform fractional point z = b/n
+        let mut z = vec![b as f64 / n as f64; n];
+        let mut cz: f64 = c.iter().map(|ci| ci * b as f64 / n as f64).sum();
+
+        for _ in 0..self.iters {
+            let a = cz / b as f64 - p.target_mean;
+            if a.abs() < 1e-15 {
+                break;
+            }
+            // gradient ∝ a·c; LMO: minimize Σ grad_i s_i over capped simplex
+            // → if a > 0 pick the b smallest c, else the b largest.
+            let verts: Vec<usize> = if a > 0.0 {
+                order[..b].to_vec()
+            } else {
+                order[n - b..].to_vec()
+            };
+            let cs: f64 = verts.iter().map(|&i| c[i]).sum();
+            let d = (cs - cz) / b as f64;
+            if d.abs() < 1e-18 {
+                break;
+            }
+            // f(γ) = (a + γ d)² → γ* = −a/d clamped to [0, 1]
+            let gamma = (-a / d).clamp(0.0, 1.0);
+            if gamma <= 0.0 {
+                break;
+            }
+            // z ← (1−γ)z + γ·vertex
+            for zi in z.iter_mut() {
+                *zi *= 1.0 - gamma;
+            }
+            for &i in &verts {
+                z[i] += gamma;
+            }
+            cz = (1.0 - gamma) * cz + gamma * cs;
+        }
+
+        // round: take top-b fractional coordinates (stable on ties)
+        let mut by_z: Vec<usize> = (0..n).collect();
+        by_z.sort_by(|&a, &q| z[q].partial_cmp(&z[a]).unwrap().then(a.cmp(&q)));
+        let rounded: Vec<usize> = by_z[..b].to_vec();
+
+        if self.repair_passes > 0 {
+            local_swap(p, rounded, self.repair_passes)
+        } else {
+            Selection::from_indices(p, rounded)
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "frank_wolfe"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+    use crate::solver::bnb::BranchBound;
+    use crate::testkit::propcheck;
+
+    #[test]
+    fn near_exact_on_simple_instance() {
+        let losses = [0.5, 1.5, 2.5, 3.5, 10.0];
+        let p = SubsetProblem::new(&losses, 2, 2.0).unwrap();
+        let s = FrankWolfe::default().solve(&p);
+        assert!(s.objective < 1e-6, "obj {}", s.objective);
+    }
+
+    #[test]
+    fn close_to_exact_on_batch_sized_instances() {
+        let mut rng = Rng::seed_from(41);
+        let mut worse = 0;
+        for _ in 0..20 {
+            let losses: Vec<f32> =
+                (0..128).map(|_| rng.normal().abs() as f32).collect();
+            let mean = losses.iter().sum::<f32>() as f64 / 128.0;
+            let p = SubsetProblem::new(&losses, 32, mean).unwrap();
+            let fw = FrankWolfe::default().solve(&p);
+            let ex = BranchBound::default().solve(&p);
+            if fw.objective > ex.objective + 1e-3 {
+                worse += 1;
+            }
+        }
+        // FW+repair should be within 1e-3 of exact on ≥ 80% of instances
+        assert!(worse <= 4, "FW was far from exact on {worse}/20 instances");
+    }
+
+    #[test]
+    fn extreme_targets_saturate_sensibly() {
+        let losses = [1.0f32, 2.0, 3.0, 4.0];
+        // target far above any achievable mean → picks the largest b values
+        let p = SubsetProblem::new(&losses, 2, 100.0).unwrap();
+        let s = FrankWolfe::default().solve(&p);
+        assert_eq!(s.indices, vec![2, 3]);
+        // far below → smallest
+        let p = SubsetProblem::new(&losses, 2, -100.0).unwrap();
+        let s = FrankWolfe::default().solve(&p);
+        assert_eq!(s.indices, vec![0, 1]);
+    }
+
+    #[test]
+    fn prop_valid_selection() {
+        propcheck(
+            "fw-valid-selection",
+            48,
+            |rng| {
+                let n = 2 + rng.below(78);
+                let losses: Vec<f32> =
+                    (0..n).map(|_| (rng.uniform() * 10.0) as f32).collect();
+                let b = rng.below(n + 1);
+                let tfrac = rng.uniform_in(0.0, 2.0);
+                (losses, b, tfrac)
+            },
+            |(losses, b, tfrac)| {
+                let mean = losses.iter().sum::<f32>() as f64 / losses.len() as f64;
+                let p = SubsetProblem::new(losses, *b, mean * tfrac).unwrap();
+                let s = FrankWolfe::default().solve(&p);
+                if s.indices.len() != *b {
+                    return Err(format!("budget {} != {b}", s.indices.len()));
+                }
+                let mut u = s.indices.clone();
+                u.dedup();
+                if u.len() != *b {
+                    return Err("duplicate indices".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

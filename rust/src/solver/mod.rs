@@ -1,0 +1,188 @@
+//! Sparse subset approximation solvers (paper Eq. 6).
+//!
+//! Problem: given per-example losses `c[0..n]`, a budget `b` and a
+//! target mean `t`, choose `z ⊆ {0..n}` with `|z| = b` minimizing
+//!
+//! ```text
+//!     | (1/b) · Σ_{i∈z} c_i  −  t |
+//! ```
+//!
+//! The paper solves this with OR-tools CBC per batch; CBC is not
+//! available on the rust hot path, so this module implements the solver
+//! stack from scratch:
+//!
+//! * [`brute::BruteForce`] — exact enumeration, test oracle (n ≤ ~24);
+//! * [`bnb::BranchBound`] — exact branch-and-bound with prefix-sum
+//!   bounds and a node budget (the production solver);
+//! * [`dp::DpApprox`] — ε-approximate DP over a discretized loss grid
+//!   (pseudo-polynomial, deterministic worst case);
+//! * [`frank_wolfe::FrankWolfe`] — continuous relaxation + rounding +
+//!   local swap repair (the paper's "future work" fast path);
+//! * [`local_swap`] — greedy swap improver shared by the heuristics.
+
+pub mod bnb;
+pub mod brute;
+pub mod dp;
+pub mod frank_wolfe;
+
+use anyhow::{bail, Result};
+
+/// One subset-approximation instance.
+#[derive(Clone, Copy, Debug)]
+pub struct SubsetProblem<'a> {
+    /// Per-example losses (must be finite).
+    pub losses: &'a [f32],
+    /// Subset size `b` (`0 ≤ b ≤ n`).
+    pub budget: usize,
+    /// Target mean (the paper uses a noised batch mean; see
+    /// `sampling::obftf`).
+    pub target_mean: f64,
+}
+
+impl<'a> SubsetProblem<'a> {
+    pub fn new(losses: &'a [f32], budget: usize, target_mean: f64) -> Result<Self> {
+        if budget > losses.len() {
+            bail!("budget {budget} > n {}", losses.len());
+        }
+        if losses.iter().any(|l| !l.is_finite()) {
+            bail!("losses must be finite");
+        }
+        Ok(SubsetProblem { losses, budget, target_mean })
+    }
+
+    /// `|mean(indices) − target|`; the quantity being minimized.
+    pub fn objective(&self, indices: &[usize]) -> f64 {
+        if self.budget == 0 {
+            return 0.0;
+        }
+        let sum: f64 = indices.iter().map(|&i| self.losses[i] as f64).sum();
+        (sum / self.budget as f64 - self.target_mean).abs()
+    }
+}
+
+/// A solver's answer: the chosen indices (sorted) and its objective.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Selection {
+    pub indices: Vec<usize>,
+    pub objective: f64,
+}
+
+impl Selection {
+    pub fn from_indices(p: &SubsetProblem, mut indices: Vec<usize>) -> Self {
+        indices.sort_unstable();
+        let objective = p.objective(&indices);
+        Selection { indices, objective }
+    }
+}
+
+/// Common interface across the solver stack.
+pub trait SubsetSolver {
+    fn solve(&self, p: &SubsetProblem) -> Selection;
+    fn name(&self) -> &'static str;
+}
+
+/// Handle the `b == 0` / `b == n` trivial cases shared by all solvers.
+pub(crate) fn trivial(p: &SubsetProblem) -> Option<Selection> {
+    if p.budget == 0 {
+        return Some(Selection { indices: vec![], objective: 0.0 });
+    }
+    if p.budget == p.losses.len() {
+        return Some(Selection::from_indices(p, (0..p.losses.len()).collect()));
+    }
+    None
+}
+
+/// Greedy local search: repeatedly apply the best single swap
+/// (selected ↔ unselected) that reduces the objective. With the
+/// complement sorted by loss, the best partner for a needed delta is
+/// found by binary search, so each pass is `O(n log n)`.
+pub fn local_swap(p: &SubsetProblem, start: Vec<usize>, max_passes: usize) -> Selection {
+    if let Some(t) = trivial(p) {
+        return t;
+    }
+    let n = p.losses.len();
+    let b = p.budget;
+    let mut selected = vec![false; n];
+    let mut indices = start;
+    for &i in &indices {
+        selected[i] = true;
+    }
+    let mut sum: f64 = indices.iter().map(|&i| p.losses[i] as f64).sum();
+    let target_sum = p.target_mean * b as f64;
+
+    // complement sorted by loss value for binary-search partner lookup
+    for _pass in 0..max_passes {
+        let mut comp: Vec<usize> = (0..n).filter(|&i| !selected[i]).collect();
+        comp.sort_by(|&a, &c| p.losses[a].partial_cmp(&p.losses[c]).unwrap());
+        let comp_vals: Vec<f64> = comp.iter().map(|&i| p.losses[i] as f64).collect();
+
+        let mut best: Option<(usize, usize, f64)> = None; // (sel_pos, comp_pos, new_err)
+        let cur_err = (sum - target_sum).abs();
+        for (si, &i) in indices.iter().enumerate() {
+            // ideal replacement value v* = losses[i] + (target_sum - sum)
+            let ideal = p.losses[i] as f64 + (target_sum - sum);
+            let pos = comp_vals.partition_point(|&v| v < ideal);
+            for cand in [pos.wrapping_sub(1), pos] {
+                if cand < comp.len() {
+                    let new_sum = sum - p.losses[i] as f64 + comp_vals[cand];
+                    let err = (new_sum - target_sum).abs();
+                    if err + 1e-15 < best.map_or(cur_err, |(_, _, e)| e) {
+                        best = Some((si, cand, err));
+                    }
+                }
+            }
+        }
+        match best {
+            Some((si, ci, _)) => {
+                let old = indices[si];
+                let new = comp[ci];
+                selected[old] = false;
+                selected[new] = true;
+                sum += comp_vals[ci] - p.losses[old] as f64;
+                indices[si] = new;
+            }
+            None => break,
+        }
+    }
+    Selection::from_indices(p, indices)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn problem_validation() {
+        assert!(SubsetProblem::new(&[1.0, 2.0], 3, 0.0).is_err());
+        assert!(SubsetProblem::new(&[1.0, f32::NAN], 1, 0.0).is_err());
+        assert!(SubsetProblem::new(&[1.0, 2.0], 1, 1.5).is_ok());
+    }
+
+    #[test]
+    fn objective_is_mean_distance() {
+        let losses = [1.0, 2.0, 3.0, 4.0];
+        let p = SubsetProblem::new(&losses, 2, 2.0).unwrap();
+        assert_eq!(p.objective(&[0, 1]), 0.5); // mean 1.5
+        assert_eq!(p.objective(&[1, 2]), 0.5); // mean 2.5
+        assert_eq!(p.objective(&[0, 2]), 0.0); // mean 2.0
+    }
+
+    #[test]
+    fn local_swap_improves_to_exact() {
+        let losses = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let p = SubsetProblem::new(&losses, 2, 3.0).unwrap();
+        // start from the worst pair {1, 2} (mean 1.5)
+        let s = local_swap(&p, vec![0, 1], 10);
+        assert!(s.objective < 1e-9, "objective {}", s.objective);
+        assert_eq!(s.indices.len(), 2);
+    }
+
+    #[test]
+    fn local_swap_trivial_budgets() {
+        let losses = [1.0, 2.0];
+        let p0 = SubsetProblem::new(&losses, 0, 1.0).unwrap();
+        assert!(local_swap(&p0, vec![], 4).indices.is_empty());
+        let p2 = SubsetProblem::new(&losses, 2, 1.0).unwrap();
+        assert_eq!(local_swap(&p2, vec![0, 1], 4).indices, vec![0, 1]);
+    }
+}

@@ -1,0 +1,137 @@
+//! Test substrates (offline: no `proptest` / `tempfile`).
+//!
+//! * [`TempDir`] — unique scratch directory, removed on drop;
+//! * [`propcheck`] — seeded randomized property harness: runs `cases`
+//!   generated inputs through a property, reporting the failing seed so
+//!   a failure reproduces deterministically.
+//!
+//! Exposed as a normal module (not `#[cfg(test)]`) so integration tests
+//! and benches can use it; it has no cost unless called.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::data::rng::Rng;
+
+static COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// A scratch directory removed on drop.
+pub struct TempDir {
+    path: PathBuf,
+}
+
+impl TempDir {
+    pub fn new(tag: &str) -> std::io::Result<TempDir> {
+        let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+        let path = std::env::temp_dir().join(format!(
+            "obftf-{tag}-{}-{}-{n}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_nanos())
+                .unwrap_or(0)
+        ));
+        std::fs::create_dir_all(&path)?;
+        Ok(TempDir { path })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn file(&self, name: &str) -> PathBuf {
+        self.path.join(name)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+/// Seeded property check: generate `cases` inputs with `gen`, assert
+/// `prop` on each. On failure, panics with the per-case seed so the
+/// exact case can be replayed with `propcheck_one`.
+pub fn propcheck<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut generate: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let base = 0x0bf7f_5eedu64;
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64 * 0x9E3779B97F4A7C15);
+        let mut rng = Rng::seed_from(seed);
+        let input = generate(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property {name:?} failed on case {case} (seed {seed:#x}):\n  input: {input:?}\n  {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single propcheck case by seed.
+pub fn propcheck_one<T: std::fmt::Debug>(
+    seed: u64,
+    mut generate: impl FnMut(&mut Rng) -> T,
+    prop: impl FnOnce(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::seed_from(seed);
+    let input = generate(&mut rng);
+    if let Err(msg) = prop(&input) {
+        panic!("replayed case (seed {seed:#x}) failed:\n  input: {input:?}\n  {msg}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tempdir_creates_and_removes() {
+        let p;
+        {
+            let d = TempDir::new("t").unwrap();
+            p = d.path().to_path_buf();
+            std::fs::write(d.file("x.txt"), "hi").unwrap();
+            assert!(p.exists());
+        }
+        assert!(!p.exists());
+    }
+
+    #[test]
+    fn tempdirs_are_unique() {
+        let a = TempDir::new("u").unwrap();
+        let b = TempDir::new("u").unwrap();
+        assert_ne!(a.path(), b.path());
+    }
+
+    #[test]
+    fn propcheck_passes_good_property() {
+        propcheck(
+            "sum-nonneg",
+            50,
+            |rng| (0..8).map(|_| rng.uniform()).collect::<Vec<f64>>(),
+            |xs| {
+                if xs.iter().sum::<f64>() >= 0.0 {
+                    Ok(())
+                } else {
+                    Err("negative sum".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn propcheck_reports_failures() {
+        propcheck(
+            "always-fails",
+            3,
+            |rng| rng.below(10),
+            |_| Err("nope".into()),
+        );
+    }
+}

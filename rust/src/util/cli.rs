@@ -1,0 +1,231 @@
+//! Minimal CLI argument substrate (offline: no `clap`).
+//!
+//! `ArgSpec` describes the flags of one subcommand; [`ArgParser::parse`]
+//! handles `--flag value`, `--flag=value`, boolean flags, required
+//! positionals, `--help`, and unknown-flag errors with suggestions.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// One flag's spec.
+#[derive(Clone, Debug)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// Boolean flags take no value.
+    pub is_bool: bool,
+}
+
+/// A subcommand's argument parser.
+#[derive(Clone, Debug, Default)]
+pub struct ArgParser {
+    pub command: &'static str,
+    pub about: &'static str,
+    flags: Vec<FlagSpec>,
+    positionals: Vec<(&'static str, &'static str)>,
+}
+
+/// Parsed arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    bools: BTreeMap<String, bool>,
+    positionals: Vec<String>,
+}
+
+impl ArgParser {
+    pub fn new(command: &'static str, about: &'static str) -> Self {
+        ArgParser { command, about, flags: vec![], positionals: vec![] }
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec { name, help, is_bool: false });
+        self
+    }
+
+    pub fn bool_flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec { name, help, is_bool: true });
+        self
+    }
+
+    pub fn positional(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positionals.push((name, help));
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("obftf {} — {}\n\nUSAGE:\n  obftf {}", self.command, self.about, self.command);
+        for (p, _) in &self.positionals {
+            s.push_str(&format!(" <{p}>"));
+        }
+        s.push_str(" [FLAGS]\n\nFLAGS:\n");
+        for f in &self.flags {
+            let arg = if f.is_bool {
+                format!("--{}", f.name)
+            } else {
+                format!("--{} <v>", f.name)
+            };
+            s.push_str(&format!("  {arg:<24} {}\n", f.help));
+        }
+        for (p, h) in &self.positionals {
+            s.push_str(&format!("  <{p}>{:<20} {h}\n", ""));
+        }
+        s
+    }
+
+    fn find(&self, name: &str) -> Option<&FlagSpec> {
+        self.flags.iter().find(|f| f.name == name)
+    }
+
+    /// Parse `args` (without the program/subcommand prefix).
+    pub fn parse(&self, args: &[String]) -> Result<Parsed> {
+        let mut out = Parsed::default();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                bail!("{}", self.usage());
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let Some(spec) = self.find(name) else {
+                    let suggestion = self
+                        .flags
+                        .iter()
+                        .map(|f| f.name)
+                        .min_by_key(|cand| levenshtein(cand, name))
+                        .map(|c| format!(" (did you mean --{c}?)"))
+                        .unwrap_or_default();
+                    bail!("unknown flag --{name}{suggestion}\n\n{}", self.usage());
+                };
+                if spec.is_bool {
+                    if inline_val.is_some() {
+                        bail!("--{name} takes no value");
+                    }
+                    out.bools.insert(name.to_string(), true);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| anyhow::anyhow!("--{name} needs a value"))?
+                        }
+                    };
+                    out.values.insert(name.to_string(), val);
+                }
+            } else {
+                out.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        if out.positionals.len() < self.positionals.len() {
+            bail!(
+                "missing positional <{}>\n\n{}",
+                self.positionals[out.positionals.len()].0,
+                self.usage()
+            );
+        }
+        Ok(out)
+    }
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(String::as_str)
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        self.bools.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("--{name}: {e}")),
+        }
+    }
+
+    pub fn positional(&self, idx: usize) -> Option<&str> {
+        self.positionals.get(idx).map(String::as_str)
+    }
+}
+
+fn levenshtein(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0; b.len() + 1];
+    for (i, ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, cb) in b.iter().enumerate() {
+            let cost = usize::from(ca != cb);
+            cur[j + 1] = (prev[j + 1] + 1).min(cur[j] + 1).min(prev[j] + cost);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn parser() -> ArgParser {
+        ArgParser::new("train", "run a job")
+            .flag("model", "model name")
+            .flag("ratio", "sampling ratio")
+            .bool_flag("verbose", "log more")
+    }
+
+    #[test]
+    fn parses_flags_and_values() {
+        let p = parser().parse(&argv(&["--model", "mlp", "--ratio=0.25", "--verbose"])).unwrap();
+        assert_eq!(p.get("model"), Some("mlp"));
+        assert_eq!(p.get_parse::<f64>("ratio").unwrap(), Some(0.25));
+        assert!(p.get_bool("verbose"));
+        assert_eq!(p.get("missing"), None);
+    }
+
+    #[test]
+    fn unknown_flag_suggests() {
+        let err = parser().parse(&argv(&["--moodel", "x"])).unwrap_err().to_string();
+        assert!(err.contains("did you mean --model"), "{err}");
+    }
+
+    #[test]
+    fn missing_value_and_positionals() {
+        assert!(parser().parse(&argv(&["--model"])).is_err());
+        let p = ArgParser::new("status", "read status").positional("addr", "host:port");
+        assert!(p.parse(&argv(&[])).is_err());
+        let got = p.parse(&argv(&["127.0.0.1:9"])).unwrap();
+        assert_eq!(got.positional(0), Some("127.0.0.1:9"));
+    }
+
+    #[test]
+    fn help_contains_flags() {
+        let err = parser().parse(&argv(&["--help"])).unwrap_err().to_string();
+        assert!(err.contains("--model") && err.contains("--ratio"));
+    }
+
+    #[test]
+    fn bad_parse_type_errors() {
+        let p = parser().parse(&argv(&["--ratio", "abc"])).unwrap();
+        assert!(p.get_parse::<f64>("ratio").is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! From-scratch substrates the offline dependency set forces us to own
+//! (DESIGN.md §3): JSON, a TOML subset, CLI parsing, and a bench
+//! harness. Small, tested, and sufficient for this system's needs —
+//! not general-purpose replacements.
+
+pub mod benchkit;
+pub mod cli;
+pub mod json;
+pub mod toml_min;

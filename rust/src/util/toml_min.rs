@@ -1,0 +1,199 @@
+//! Minimal TOML substrate for config files (offline: no `toml` crate).
+//!
+//! Supports the subset our configs use: flat `key = value` lines,
+//! `#` comments, basic strings, integers, floats, booleans. Unknown
+//! syntax (tables, arrays, datetimes, multi-line strings) is rejected
+//! loudly rather than mis-parsed.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// A parsed TOML scalar.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            other => bail!("expected string, got {other:?}"),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            TomlValue::Float(f) => Ok(*f),
+            TomlValue::Int(i) => Ok(*i as f64),
+            other => bail!("expected number, got {other:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Ok(*i as usize),
+            other => bail!("expected non-negative integer, got {other:?}"),
+        }
+    }
+
+    pub fn as_u64(&self) -> Result<u64> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Ok(*i as u64),
+            other => bail!("expected non-negative integer, got {other:?}"),
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<f32> {
+        Ok(self.as_f64()? as f32)
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            other => bail!("expected bool, got {other:?}"),
+        }
+    }
+}
+
+/// Parse a flat TOML document into key → value.
+pub fn parse(input: &str) -> Result<BTreeMap<String, TomlValue>> {
+    let mut out = BTreeMap::new();
+    for (lineno, raw) in input.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') {
+            bail!("line {}: tables are not supported (flat config only)", lineno + 1);
+        }
+        let Some(eq) = line.find('=') else {
+            bail!("line {}: expected `key = value`, got {raw:?}", lineno + 1);
+        };
+        let key = line[..eq].trim();
+        if key.is_empty()
+            || !key
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+        {
+            bail!("line {}: invalid key {key:?}", lineno + 1);
+        }
+        let val = parse_value(line[eq + 1..].trim())
+            .with_context(|| format!("line {}: value for {key:?}", lineno + 1))?;
+        if out.insert(key.to_string(), val).is_some() {
+            bail!("line {}: duplicate key {key:?}", lineno + 1);
+        }
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a '#' inside a string must not start a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str) -> Result<TomlValue> {
+    if text.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(stripped) = text.strip_prefix('"') {
+        let Some(end) = stripped.rfind('"') else {
+            bail!("unterminated string");
+        };
+        if end != stripped.len() - 1 {
+            bail!("trailing characters after string");
+        }
+        let body = &stripped[..end];
+        let mut s = String::new();
+        let mut chars = body.chars();
+        while let Some(c) = chars.next() {
+            if c == '\\' {
+                match chars.next() {
+                    Some('n') => s.push('\n'),
+                    Some('t') => s.push('\t'),
+                    Some('"') => s.push('"'),
+                    Some('\\') => s.push('\\'),
+                    other => bail!("bad escape \\{other:?}"),
+                }
+            } else {
+                s.push(c);
+            }
+        }
+        return Ok(TomlValue::Str(s));
+    }
+    match text {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    let clean = text.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("cannot parse value {text:?} (strings need quotes)")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_flat_config() {
+        let doc = r#"
+# a config
+model = "mlp"          # inline comment
+sampling_ratio = 0.25
+epochs = 5
+seed = 1_000
+stream = false
+path = "out#1.csv"
+"#;
+        let m = parse(doc).unwrap();
+        assert_eq!(m["model"].as_str().unwrap(), "mlp");
+        assert_eq!(m["sampling_ratio"].as_f64().unwrap(), 0.25);
+        assert_eq!(m["epochs"].as_usize().unwrap(), 5);
+        assert_eq!(m["seed"].as_u64().unwrap(), 1000);
+        assert!(!m["stream"].as_bool().unwrap());
+        assert_eq!(m["path"].as_str().unwrap(), "out#1.csv");
+    }
+
+    #[test]
+    fn rejects_tables_and_junk() {
+        assert!(parse("[section]\nx = 1").is_err());
+        assert!(parse("just words").is_err());
+        assert!(parse("x = ").is_err());
+        assert!(parse("x = unquoted").is_err());
+        assert!(parse("x = 1\nx = 2").is_err());
+        assert!(parse("bad key = 1").is_err());
+    }
+
+    #[test]
+    fn escapes_in_strings() {
+        let m = parse(r#"s = "a\nb\t\"c\"""#).unwrap();
+        assert_eq!(m["s"].as_str().unwrap(), "a\nb\t\"c\"");
+    }
+
+    #[test]
+    fn numeric_coercions() {
+        let m = parse("a = 2\nb = 2.5\nc = -3").unwrap();
+        assert_eq!(m["a"].as_f64().unwrap(), 2.0);
+        assert_eq!(m["b"].as_f32().unwrap(), 2.5);
+        assert!(m["c"].as_usize().is_err());
+        assert!(m["b"].as_usize().is_err());
+    }
+}

@@ -1,0 +1,99 @@
+//! Checkpoint/resume durability: the continuous-training story.
+
+use obftf::config::TrainConfig;
+use obftf::coordinator::Trainer;
+use obftf::runtime::Manifest;
+use obftf::sampling::Method;
+use obftf::testkit::TempDir;
+
+fn manifest() -> Option<Manifest> {
+    let dir = obftf::artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        Some(Manifest::load(&dir).expect("manifest loads"))
+    } else {
+        eprintln!("skipping: artifacts not built");
+        None
+    }
+}
+
+fn cfg() -> TrainConfig {
+    TrainConfig {
+        model: "linreg".to_string(),
+        method: Method::ObftfProx,
+        sampling_ratio: 0.25,
+        epochs: 1,
+        lr: 0.01,
+        n_train: Some(384),
+        n_test: Some(256),
+        seed: 3,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn save_then_load_restores_exact_eval() {
+    let Some(m) = manifest() else { return };
+    let dir = TempDir::new("resume").unwrap();
+    let ck = dir.file("model.ck");
+
+    let mut a = Trainer::with_manifest(&cfg(), &m).unwrap();
+    a.run_epoch().unwrap();
+    let eval_a = a.evaluate().unwrap();
+    a.save_checkpoint(&ck).unwrap();
+
+    let mut b = Trainer::with_manifest(&cfg(), &m).unwrap();
+    b.load_checkpoint(&ck).unwrap();
+    let eval_b = b.evaluate().unwrap();
+
+    assert_eq!(eval_a.loss, eval_b.loss, "restored eval must be bit-identical");
+    assert_eq!(b.step_count(), a.step_count(), "step position restored");
+}
+
+#[test]
+fn training_continues_after_resume() {
+    let Some(m) = manifest() else { return };
+    let dir = TempDir::new("resume2").unwrap();
+    let ck = dir.file("model.ck");
+
+    let mut a = Trainer::with_manifest(&cfg(), &m).unwrap();
+    a.run_epoch().unwrap();
+    a.save_checkpoint(&ck).unwrap();
+    let loss_at_ck = a.evaluate().unwrap().loss;
+
+    let mut b = Trainer::with_manifest(&cfg(), &m).unwrap();
+    b.load_checkpoint(&ck).unwrap();
+    b.run_epoch().unwrap();
+    let after = b.evaluate().unwrap().loss;
+    assert!(after <= loss_at_ck * 1.05, "resumed training regressed: {loss_at_ck} -> {after}");
+    assert!(b.step_count() > a.step_count());
+}
+
+#[test]
+fn wrong_model_checkpoint_rejected() {
+    let Some(m) = manifest() else { return };
+    let dir = TempDir::new("resume3").unwrap();
+    let ck = dir.file("linreg.ck");
+    let a = Trainer::with_manifest(&cfg(), &m).unwrap();
+    a.save_checkpoint(&ck).unwrap();
+
+    let mut mlp_cfg = cfg();
+    mlp_cfg.model = "mlp".to_string();
+    mlp_cfg.dataset = None;
+    let mut b = Trainer::with_manifest(&mlp_cfg, &m).unwrap();
+    let err = b.load_checkpoint(&ck).unwrap_err().to_string();
+    assert!(err.contains("do not match"), "err: {err}");
+}
+
+#[test]
+fn checkpoint_written_per_epoch_when_configured() {
+    let Some(m) = manifest() else { return };
+    let dir = TempDir::new("resume4").unwrap();
+    let ck = dir.file("auto.ck");
+    let mut c = cfg();
+    c.checkpoint = Some(ck.to_string_lossy().to_string());
+    c.epochs = 2;
+    Trainer::with_manifest(&c, &m).unwrap().run().unwrap();
+    let loaded = obftf::checkpoint::Checkpoint::load(&ck).unwrap();
+    assert_eq!(loaded.epoch, 2);
+    assert!(loaded.step > 0);
+}

@@ -1,0 +1,174 @@
+//! Failure injection: the runtime must fail *loudly and early* on
+//! corrupted artifacts, broken manifests, and bad checkpoints — and
+//! stay usable after recoverable errors.
+
+use obftf::runtime::{Engine, Flavour, Manifest, Session};
+use obftf::testkit::TempDir;
+
+fn manifest() -> Option<Manifest> {
+    let dir = obftf::artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        Some(Manifest::load(&dir).expect("manifest loads"))
+    } else {
+        eprintln!("skipping: artifacts not built");
+        None
+    }
+}
+
+/// Clone the real artifacts dir into a temp dir (symlink-free copy of
+/// just the files one model needs) so we can corrupt things safely.
+fn clone_artifacts(model: &str) -> Option<(TempDir, Manifest)> {
+    let m = manifest()?;
+    let dir = TempDir::new("corrupt").unwrap();
+    // copy the manifest and this model's artifacts, but keep ALL models
+    // in the json (validate() will fail on missing files for others, so
+    // rewrite a single-model manifest instead)
+    let entry = m.model(model).unwrap();
+    for fname in entry.executables.values() {
+        std::fs::copy(m.dir.join(fname), dir.path().join(fname)).unwrap();
+    }
+    // single-model manifest json
+    let text = std::fs::read_to_string(m.dir.join("manifest.json")).unwrap();
+    let j = obftf::util::json::parse(&text).unwrap();
+    let mut out = obftf::util::json::Json::obj();
+    out.set("version", j.need("version").unwrap().clone());
+    out.set("batch", j.need("batch").unwrap().clone());
+    let mut models = obftf::util::json::Json::obj();
+    models.set(model, j.need("models").unwrap().need(model).unwrap().clone());
+    out.set("models", models);
+    std::fs::write(dir.file("manifest.json"), out.to_string_pretty()).unwrap();
+    let cloned = Manifest::load(dir.path()).unwrap();
+    Some((dir, cloned))
+}
+
+#[test]
+fn corrupted_hlo_artifact_fails_compile_with_context() {
+    let Some((dir, m)) = clone_artifacts("linreg") else { return };
+    let fname = m.model("linreg").unwrap().artifact(
+        obftf::runtime::Exe::FwdLoss,
+        Flavour::Jnp,
+    ).unwrap().to_string();
+    std::fs::write(dir.file(&fname), "HloModule garbage\n%%%not hlo%%%").unwrap();
+    let err = match Session::new(&m, "linreg", Flavour::Jnp) {
+        Err(e) => format!("{e:#}"),
+        Ok(_) => panic!("corrupted artifact must not compile"),
+    };
+    assert!(err.contains("fwd_loss"), "error should name the executable: {err}");
+}
+
+#[test]
+fn truncated_hlo_artifact_fails() {
+    let Some((dir, m)) = clone_artifacts("linreg") else { return };
+    let fname = m
+        .model("linreg")
+        .unwrap()
+        .artifact(obftf::runtime::Exe::TrainStep, Flavour::Jnp)
+        .unwrap()
+        .to_string();
+    let full = std::fs::read_to_string(dir.file(&fname)).unwrap();
+    std::fs::write(dir.file(&fname), &full[..full.len() / 3]).unwrap();
+    assert!(Session::new(&m, "linreg", Flavour::Jnp).is_err());
+}
+
+#[test]
+fn engine_startup_fails_fast_on_bad_artifacts() {
+    let Some((dir, m)) = clone_artifacts("linreg") else { return };
+    let fname = m
+        .model("linreg")
+        .unwrap()
+        .artifact(obftf::runtime::Exe::Init, Flavour::Jnp)
+        .unwrap()
+        .to_string();
+    std::fs::write(dir.file(&fname), "not hlo at all").unwrap();
+    let err = match Engine::new(&m, "linreg", Flavour::Jnp, 2) {
+        Err(e) => format!("{e:#}"),
+        Ok(_) => panic!("engine must fail fast"),
+    };
+    assert!(err.contains("failed to start"), "{err}");
+}
+
+#[test]
+fn manifest_with_garbage_json_rejected() {
+    let dir = TempDir::new("badjson").unwrap();
+    std::fs::write(dir.file("manifest.json"), "{ not json !!!").unwrap();
+    let err = match Manifest::load(dir.path()) {
+        Err(e) => format!("{e:#}"),
+        Ok(_) => panic!("garbage manifest must not load"),
+    };
+    assert!(err.contains("parse"), "{err}");
+}
+
+#[test]
+fn manifest_missing_required_keys_rejected() {
+    let dir = TempDir::new("badkeys").unwrap();
+    std::fs::write(dir.file("manifest.json"), r#"{"version": 1}"#).unwrap();
+    let err = match Manifest::load(dir.path()) {
+        Err(e) => format!("{e:#}"),
+        Ok(_) => panic!(),
+    };
+    assert!(err.contains("missing key"), "{err}");
+}
+
+#[test]
+fn checkpoint_dtype_tag_corruption_detected() {
+    use obftf::checkpoint::Checkpoint;
+    use obftf::data::HostTensor;
+    let dir = TempDir::new("ckcorrupt").unwrap();
+    let p = dir.file("x.ck");
+    Checkpoint {
+        step: 1,
+        epoch: 1,
+        params: vec![("w".into(), HostTensor::f32(vec![2], vec![1.0, 2.0]).unwrap())],
+    }
+    .save(&p)
+    .unwrap();
+    let mut bytes = std::fs::read(&p).unwrap();
+    // flip the dtype tag byte (directly after name + rank + dims)
+    let tag_pos = 4 + 4 + 8 + 8 + 4 + (4 + 1) + 4 + 8;
+    bytes[tag_pos] = 77;
+    std::fs::write(&p, &bytes).unwrap();
+    let err = match Checkpoint::load(&p) {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("corrupt dtype tag must fail"),
+    };
+    assert!(err.contains("dtype"), "{err}");
+}
+
+#[test]
+fn session_survives_a_rejected_request_sequence() {
+    let Some(m) = manifest() else { return };
+    use obftf::data::HostTensor;
+    let mut s = Session::new(&m, "linreg", Flavour::Jnp).unwrap();
+    s.init(1).unwrap();
+    let n = m.batch;
+    let x = HostTensor::f32(vec![n, 1], vec![0.1; n]).unwrap();
+    let y = HostTensor::f32(vec![n], vec![0.2; n]).unwrap();
+    // storm of invalid calls
+    for _ in 0..5 {
+        let _ = s.fwd_loss(&y, &x); // swapped shapes
+        let _ = s.train_step(&x, &y, &[1.0], 0.1); // bad mask
+        let _ = s.apply(&[], 0.1); // bad arity
+    }
+    // still healthy
+    let losses = s.fwd_loss(&x, &y).unwrap();
+    assert_eq!(losses.len(), n);
+    let l = s.train_step(&x, &y, &vec![1.0; n], 0.01).unwrap();
+    assert!(l.is_finite());
+}
+
+#[test]
+fn engine_rejects_mismatched_shard_counts() {
+    let Some(m) = manifest() else { return };
+    let engine = Engine::new(&m, "linreg", Flavour::Jnp, 2).unwrap();
+    engine.init_broadcast(1).unwrap();
+    use obftf::data::HostTensor;
+    let n = m.batch;
+    let x = HostTensor::f32(vec![n, 1], vec![0.0; n]).unwrap();
+    let y = HostTensor::f32(vec![n], vec![0.0; n]).unwrap();
+    // 1 shard for 2 workers: must be rejected, engine stays usable
+    assert!(engine.fwd_loss_sharded(vec![(x.clone(), y.clone())]).is_err());
+    let ok = engine
+        .fwd_loss_sharded(vec![(x.clone(), y.clone()), (x, y)])
+        .unwrap();
+    assert_eq!(ok.len(), 2);
+}

@@ -1,0 +1,200 @@
+//! End-to-end integration: the full L3→L2→L1 stack on real artifacts.
+//!
+//! Requires `make artifacts` (skipped gracefully otherwise).
+
+use obftf::config::TrainConfig;
+use obftf::coordinator::Trainer;
+use obftf::runtime::Manifest;
+use obftf::sampling::Method;
+
+fn manifest() -> Option<Manifest> {
+    let dir = obftf::artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        Some(Manifest::load(&dir).expect("manifest loads"))
+    } else {
+        eprintln!("skipping: artifacts not built");
+        None
+    }
+}
+
+fn small_cfg(model: &str, method: Method) -> TrainConfig {
+    TrainConfig {
+        model: model.to_string(),
+        method,
+        sampling_ratio: 0.25,
+        epochs: 2,
+        lr: if model == "linreg" { 0.01 } else { 0.05 },
+        n_train: Some(512),
+        n_test: Some(256),
+        seed: 7,
+        eval_every: 1,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn mlp_obftf_loss_decreases_end_to_end() {
+    let Some(m) = manifest() else { return };
+    let cfg = small_cfg("mlp", Method::Obftf);
+    let mut t = Trainer::with_manifest(&cfg, &m).unwrap();
+    let report = t.run().unwrap();
+    assert_eq!(report.evals.len(), 2);
+    let first = report.evals.first().unwrap().loss;
+    let last = report.evals.last().unwrap().loss;
+    assert!(
+        last < first,
+        "eval loss should decrease over epochs: {first} -> {last}"
+    );
+    // accuracy above chance (10 classes) after 2 epochs
+    assert!(report.final_eval.metric > 0.15, "metric {}", report.final_eval.metric);
+    // budget accounting: realized ratio near the configured 0.25
+    assert!((report.realized_ratio - 0.25).abs() < 0.08, "{}", report.realized_ratio);
+    assert!(report.saved_fraction > 0.3);
+}
+
+#[test]
+fn every_method_trains_one_epoch_on_linreg() {
+    let Some(m) = manifest() else { return };
+    for method in Method::ALL {
+        let mut cfg = small_cfg("linreg", method);
+        cfg.epochs = 1;
+        let mut t = Trainer::with_manifest(&cfg, &m)
+            .unwrap_or_else(|e| panic!("{method}: {e:#}"));
+        let report = t.run().unwrap_or_else(|e| panic!("{method}: {e:#}"));
+        assert!(report.final_eval.loss.is_finite(), "{method}");
+        assert!(report.steps > 0, "{method}");
+        assert!(report.backward_examples > 0, "{method}");
+        assert!(
+            report.backward_examples < report.forward_examples,
+            "{method} must subsample"
+        );
+    }
+}
+
+#[test]
+fn metrics_csv_written_when_configured() {
+    let Some(m) = manifest() else { return };
+    let dir = obftf::testkit::TempDir::new("metrics").unwrap();
+    let out = dir.file("steps.csv");
+    let mut cfg = small_cfg("linreg", Method::ObftfProx);
+    cfg.epochs = 1;
+    cfg.metrics_out = Some(out.to_string_lossy().to_string());
+    Trainer::with_manifest(&cfg, &m).unwrap().run().unwrap();
+    let text = std::fs::read_to_string(&out).unwrap();
+    assert!(text.starts_with("step,epoch,sel_loss"));
+    assert!(text.lines().count() > 1);
+    let evals = std::fs::read_to_string(out.with_extension("evals.csv")).unwrap();
+    assert!(evals.lines().count() >= 2);
+}
+
+#[test]
+fn sampling_ratio_one_matches_full_batch_training() {
+    let Some(m) = manifest() else { return };
+    // ratio = 1.0 with mink (deterministic, selects everything) must
+    // behave like plain mini-batch GD: every example gets a backward.
+    let mut cfg = small_cfg("linreg", Method::MinK);
+    cfg.sampling_ratio = 1.0;
+    cfg.epochs = 1;
+    let mut t = Trainer::with_manifest(&cfg, &m).unwrap();
+    let report = t.run().unwrap();
+    assert_eq!(report.forward_examples, report.backward_examples);
+    assert!((report.realized_ratio - 1.0).abs() < 1e-9);
+    assert!(report.saved_fraction.abs() < 1e-9);
+}
+
+#[test]
+fn pallas_and_jnp_flavours_agree_bitwise_on_linreg() {
+    let Some(m) = manifest() else { return };
+    let run = |flavour: &str| {
+        let mut cfg = small_cfg("linreg", Method::Obftf);
+        cfg.flavour = flavour.to_string();
+        cfg.epochs = 1;
+        let mut t = Trainer::with_manifest(&cfg, &m).unwrap();
+        t.run().unwrap().final_eval.loss
+    };
+    let a = run("pallas");
+    let b = run("jnp");
+    assert_eq!(a, b, "pallas {a} vs jnp {b}");
+}
+
+#[test]
+fn loss_reuse_skips_forward_executions() {
+    let Some(m) = manifest() else { return };
+    let mut cfg = small_cfg("mlp", Method::ObftfProx);
+    cfg.epochs = 4;
+    cfg.reuse_losses = true; // auto max_age = 1 epoch
+    let mut t = Trainer::with_manifest(&cfg, &m).unwrap();
+    let report = t.run().unwrap();
+    let (hits, misses) = t.cache_stats();
+    assert!(hits > 0, "cache never hit");
+    assert!(misses > 0, "first epoch must miss");
+    // with auto max_age = 1 epoch, roughly alternate epochs are served
+    // from cache → executed forwards well below logical forwards
+    assert!(
+        t.budget.forward_executed < t.budget.forward_examples,
+        "executed {} !< logical {}",
+        t.budget.forward_executed,
+        t.budget.forward_examples
+    );
+    assert!(
+        t.budget.forward_executed <= t.budget.forward_examples * 3 / 4,
+        "expected ≥25% forwards served from cache (executed {} of {})",
+        t.budget.forward_executed,
+        t.budget.forward_examples
+    );
+    // staleness must not break training
+    assert!(report.final_eval.metric > 0.15, "metric {}", report.final_eval.metric);
+}
+
+#[test]
+fn loss_reuse_off_executes_every_forward() {
+    let Some(m) = manifest() else { return };
+    let mut cfg = small_cfg("linreg", Method::Uniform);
+    cfg.epochs = 2;
+    let mut t = Trainer::with_manifest(&cfg, &m).unwrap();
+    t.run().unwrap();
+    assert_eq!(t.budget.forward_executed, t.budget.forward_examples);
+    assert_eq!(t.cache_stats(), (0, 0));
+}
+
+#[test]
+fn gathered_backward_matches_masked_backward() {
+    let Some(m) = manifest() else { return };
+    let run = |masked: bool| {
+        let mut cfg = small_cfg("mlp", Method::ObftfProx);
+        cfg.epochs = 1;
+        cfg.masked_backward = masked;
+        let mut t = Trainer::with_manifest(&cfg, &m).unwrap();
+        t.run().unwrap().final_eval
+    };
+    let gathered = run(false);
+    let masked = run(true);
+    // identical selections (same rng), identical masked-mean objective →
+    // numerically equal training trajectories
+    assert!(
+        (gathered.loss - masked.loss).abs() < 1e-6 * masked.loss.abs().max(1.0),
+        "gathered {} vs masked {}",
+        gathered.loss,
+        masked.loss
+    );
+    assert!((gathered.metric - masked.metric).abs() < 1e-3);
+}
+
+#[test]
+fn incompatible_model_dataset_rejected_up_front() {
+    let Some(m) = manifest() else { return };
+    let mut cfg = small_cfg("mlp", Method::Uniform);
+    cfg.dataset = Some("regression".to_string()); // 1 feature vs 784
+    let err = match Trainer::with_manifest(&cfg, &m) {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("expected shape-mismatch error"),
+    };
+    assert!(err.contains("incompatible"), "err: {err}");
+}
+
+#[test]
+fn unknown_model_rejected() {
+    let Some(m) = manifest() else { return };
+    let cfg = small_cfg("transformer", Method::Uniform);
+    assert!(Trainer::with_manifest(&cfg, &m).is_err());
+}

@@ -1,0 +1,172 @@
+//! Runtime contract tests: every model in the manifest compiles, its
+//! executables honour the declared shapes, and shape violations are
+//! rejected before reaching XLA.
+
+use obftf::data::{HostTensor, Rng};
+use obftf::runtime::{Flavour, Manifest, Session};
+
+fn manifest() -> Option<Manifest> {
+    let dir = obftf::artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        Some(Manifest::load(&dir).expect("manifest loads"))
+    } else {
+        eprintln!("skipping: artifacts not built");
+        None
+    }
+}
+
+fn batch_for(m: &Manifest, model: &str, seed: u64) -> (HostTensor, HostTensor, Vec<f32>) {
+    let entry = m.model(model).unwrap();
+    let n = m.batch;
+    let stride: usize = entry.x_shape.iter().product();
+    let mut rng = Rng::seed_from(seed);
+    let xs: Vec<f32> = (0..n * stride).map(|_| rng.normal() as f32 * 0.5).collect();
+    let mut shape = vec![n];
+    shape.extend_from_slice(&entry.x_shape);
+    let x = HostTensor::f32(shape, xs).unwrap();
+    let y = if entry.is_classification() {
+        HostTensor::i32(
+            vec![n],
+            (0..n).map(|_| rng.below(entry.num_classes) as i32).collect(),
+        )
+        .unwrap()
+    } else {
+        HostTensor::f32(vec![n], (0..n).map(|_| rng.normal() as f32).collect()).unwrap()
+    };
+    (x, y, vec![1.0; n])
+}
+
+#[test]
+fn every_model_compiles_inits_and_forwards() {
+    let Some(m) = manifest() else { return };
+    for (name, entry) in &m.models {
+        let mut s = Session::new(&m, name, Flavour::Jnp)
+            .unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        s.init(42).unwrap();
+        let params = s.params_to_host().unwrap();
+        assert_eq!(params.len(), entry.n_params(), "{name}");
+        for (p, spec) in params.iter().zip(&entry.params) {
+            assert_eq!(p.shape, spec.shape, "{name}/{}", spec.name);
+        }
+        let (x, y, mask) = batch_for(&m, name, 5);
+        let losses = s.fwd_loss(&x, &y).unwrap();
+        assert_eq!(losses.len(), m.batch, "{name}");
+        assert!(losses.iter().all(|l| l.is_finite()), "{name}");
+        if entry.is_classification() {
+            assert!(losses.iter().all(|&l| l >= 0.0), "{name}: xent must be ≥ 0");
+        }
+        // one train step moves parameters
+        let before = s.params_to_host().unwrap();
+        let sel_loss = s.train_step(&x, &y, &mask, 0.01).unwrap();
+        assert!(sel_loss.is_finite(), "{name}");
+        let after = s.params_to_host().unwrap();
+        let moved = before
+            .iter()
+            .zip(&after)
+            .any(|(a, b)| a.as_f32().unwrap() != b.as_f32().unwrap());
+        assert!(moved, "{name}: train_step did not update params");
+    }
+}
+
+#[test]
+fn grads_plus_apply_equals_train_step() {
+    let Some(m) = manifest() else { return };
+    let (x, y, mask) = batch_for(&m, "mlp", 9);
+
+    let mut fused = Session::new(&m, "mlp", Flavour::Jnp).unwrap();
+    fused.init(1).unwrap();
+    let fused_loss = fused.train_step(&x, &y, &mask, 0.1).unwrap();
+    let fused_params = fused.params_to_host().unwrap();
+
+    let mut split = Session::new(&m, "mlp", Flavour::Jnp).unwrap();
+    split.init(1).unwrap();
+    let (grads, split_loss) = split.grads(&x, &y, &mask).unwrap();
+    split.apply(&grads, 0.1).unwrap();
+    let split_params = split.params_to_host().unwrap();
+
+    assert!((fused_loss - split_loss).abs() < 1e-6);
+    for (a, b) in fused_params.iter().zip(&split_params) {
+        let (va, vb) = (a.as_f32().unwrap(), b.as_f32().unwrap());
+        for (p, q) in va.iter().zip(vb) {
+            assert!((p - q).abs() < 1e-6, "fused {p} vs split {q}");
+        }
+    }
+}
+
+#[test]
+fn shape_violations_rejected_before_xla() {
+    let Some(m) = manifest() else { return };
+    let mut s = Session::new(&m, "linreg", Flavour::Jnp).unwrap();
+    s.init(0).unwrap();
+    let n = m.batch;
+    let good_x = HostTensor::f32(vec![n, 1], vec![0.0; n]).unwrap();
+    let good_y = HostTensor::f32(vec![n], vec![0.0; n]).unwrap();
+
+    // wrong batch dim
+    let bad_x = HostTensor::f32(vec![n + 1, 1], vec![0.0; n + 1]).unwrap();
+    assert!(s.fwd_loss(&bad_x, &good_y).is_err());
+    // wrong y dtype
+    let bad_y = HostTensor::i32(vec![n], vec![0; n]).unwrap();
+    assert!(s.fwd_loss(&good_x, &bad_y).is_err());
+    // wrong mask length
+    assert!(s.train_step(&good_x, &good_y, &vec![1.0; n - 1], 0.1).is_err());
+    // wrong grads arity for apply
+    assert!(s.apply(&[], 0.1).is_err());
+    // still usable after rejected calls
+    assert!(s.fwd_loss(&good_x, &good_y).is_ok());
+}
+
+#[test]
+fn uninitialized_session_refuses_to_run() {
+    let Some(m) = manifest() else { return };
+    let mut s = Session::new(&m, "linreg", Flavour::Jnp).unwrap();
+    let n = m.batch;
+    let x = HostTensor::f32(vec![n, 1], vec![0.0; n]).unwrap();
+    let y = HostTensor::f32(vec![n], vec![0.0; n]).unwrap();
+    let err = s.fwd_loss(&x, &y).unwrap_err().to_string();
+    assert!(err.contains("init"), "err: {err}");
+}
+
+#[test]
+fn init_is_deterministic_per_seed_across_sessions() {
+    let Some(m) = manifest() else { return };
+    let mut a = Session::new(&m, "mlp", Flavour::Jnp).unwrap();
+    let mut b = Session::new(&m, "mlp", Flavour::Jnp).unwrap();
+    a.init(123).unwrap();
+    b.init(123).unwrap();
+    let pa = a.params_to_host().unwrap();
+    let pb = b.params_to_host().unwrap();
+    for (x, y) in pa.iter().zip(&pb) {
+        assert_eq!(x.as_f32().unwrap(), y.as_f32().unwrap());
+    }
+    let mut c = Session::new(&m, "mlp", Flavour::Jnp).unwrap();
+    c.init(124).unwrap();
+    let pc = c.params_to_host().unwrap();
+    assert!(pa
+        .iter()
+        .zip(&pc)
+        .any(|(x, y)| x.as_f32().unwrap() != y.as_f32().unwrap()));
+}
+
+#[test]
+fn eval_zero_mask_returns_zero_sums() {
+    let Some(m) = manifest() else { return };
+    let mut s = Session::new(&m, "mlp", Flavour::Jnp).unwrap();
+    s.init(0).unwrap();
+    let (x, y, _) = batch_for(&m, "mlp", 2);
+    let (l, mt, c) = s.eval_batch(&x, &y, &vec![0.0; m.batch]).unwrap();
+    assert_eq!((l, mt, c), (0.0, 0.0, 0.0));
+}
+
+#[test]
+fn session_stats_count_executions() {
+    let Some(m) = manifest() else { return };
+    let mut s = Session::new(&m, "linreg", Flavour::Jnp).unwrap();
+    s.init(0).unwrap();
+    let (x, y, _) = batch_for(&m, "linreg", 3);
+    let n0 = s.stats().executions;
+    s.fwd_loss(&x, &y).unwrap();
+    s.fwd_loss(&x, &y).unwrap();
+    assert_eq!(s.stats().executions, n0 + 2);
+    assert!(s.stats().compile_ns > 0);
+}

@@ -1,0 +1,121 @@
+//! The leader/worker data-parallel trainer must be *numerically
+//! identical* to the serial trainer: same shuffles, same selections,
+//! same weighted-averaged gradients, bit-equal parameters.
+
+use obftf::config::TrainConfig;
+use obftf::coordinator::{ParallelTrainer, Trainer};
+use obftf::data::TensorData;
+use obftf::runtime::Manifest;
+use obftf::sampling::Method;
+
+fn manifest() -> Option<Manifest> {
+    let dir = obftf::artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        Some(Manifest::load(&dir).expect("manifest loads"))
+    } else {
+        eprintln!("skipping: artifacts not built");
+        None
+    }
+}
+
+fn cfg(model: &str, workers: usize) -> TrainConfig {
+    TrainConfig {
+        model: model.to_string(),
+        method: Method::Obftf,
+        sampling_ratio: 0.25,
+        epochs: 1,
+        lr: if model == "linreg" { 0.01 } else { 0.05 },
+        n_train: Some(384),
+        n_test: Some(256),
+        seed: 11,
+        workers,
+        ..Default::default()
+    }
+}
+
+fn assert_params_equal(a: &[obftf::data::HostTensor], b: &[obftf::data::HostTensor], tol: f32) {
+    assert_eq!(a.len(), b.len());
+    for (i, (ta, tb)) in a.iter().zip(b).enumerate() {
+        assert_eq!(ta.shape, tb.shape, "param {i} shape");
+        match (&ta.data, &tb.data) {
+            (TensorData::F32(va), TensorData::F32(vb)) => {
+                for (j, (x, y)) in va.iter().zip(vb).enumerate() {
+                    assert!(
+                        (x - y).abs() <= tol * x.abs().max(1.0),
+                        "param {i}[{j}]: serial {x} vs parallel {y}"
+                    );
+                }
+            }
+            _ => panic!("params must be f32"),
+        }
+    }
+}
+
+#[test]
+fn parallel_equals_serial_linreg() {
+    let Some(m) = manifest() else { return };
+    let serial_cfg = cfg("linreg", 1);
+    let mut serial = Trainer::with_manifest(&serial_cfg, &m).unwrap();
+    serial.run_epoch().unwrap();
+    let sp = serial.session().params_to_host().unwrap();
+
+    let par_cfg = cfg("linreg", 3);
+    let mut par = ParallelTrainer::with_manifest(&par_cfg, &m).unwrap();
+    assert_eq!(par.n_workers(), 3);
+    par.run_epoch().unwrap();
+    let pp = par.params_to_host().unwrap();
+
+    // weighted grad averaging reorders float sums; allow tiny drift
+    assert_params_equal(&sp, &pp, 1e-5);
+}
+
+#[test]
+fn parallel_equals_serial_mlp_eval() {
+    let Some(m) = manifest() else { return };
+    let mut serial = Trainer::with_manifest(&cfg("mlp", 1), &m).unwrap();
+    serial.run_epoch().unwrap();
+    let se = serial.evaluate().unwrap();
+
+    let mut par = ParallelTrainer::with_manifest(&cfg("mlp", 2), &m).unwrap();
+    par.run_epoch().unwrap();
+    let pe = par.evaluate().unwrap();
+
+    assert!(
+        (se.loss - pe.loss).abs() < 1e-3 * se.loss.abs().max(1.0),
+        "serial loss {} vs parallel {}",
+        se.loss,
+        pe.loss
+    );
+    assert!(
+        (se.metric - pe.metric).abs() < 0.02,
+        "serial metric {} vs parallel {}",
+        se.metric,
+        pe.metric
+    );
+}
+
+#[test]
+fn sharded_eval_counts_every_example_once() {
+    let Some(m) = manifest() else { return };
+    // test-set size NOT divisible by batch or workers: padding must be
+    // masked out in every shard
+    let mut c = cfg("linreg", 3);
+    c.n_test = Some(300);
+    let mut par = ParallelTrainer::with_manifest(&c, &m).unwrap();
+    let e1 = par.evaluate().unwrap();
+    let e2 = par.evaluate().unwrap();
+    assert_eq!(e1.loss, e2.loss, "eval must be deterministic");
+    assert!(e1.loss.is_finite());
+}
+
+#[test]
+fn worker_count_exceeding_batch_still_works() {
+    let Some(m) = manifest() else { return };
+    // 128-row batches over 5 workers → uneven shards incl. padding-only
+    let mut c = cfg("linreg", 5);
+    c.n_train = Some(130); // second batch has only 2 real rows
+    let mut par = ParallelTrainer::with_manifest(&c, &m).unwrap();
+    par.run_epoch().unwrap();
+    let e = par.evaluate().unwrap();
+    assert!(e.loss.is_finite());
+}

@@ -1,0 +1,108 @@
+//! Streaming pipeline integration: continuous training with bounded
+//! prefetch, drift, and the status service.
+
+use obftf::config::TrainConfig;
+use obftf::coordinator::service::{read_status, serve, StatusBoard};
+use obftf::coordinator::StreamingTrainer;
+use obftf::runtime::Manifest;
+use obftf::sampling::Method;
+
+fn manifest() -> Option<Manifest> {
+    let dir = obftf::artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        Some(Manifest::load(&dir).expect("manifest loads"))
+    } else {
+        eprintln!("skipping: artifacts not built");
+        None
+    }
+}
+
+fn cfg(steps: usize) -> TrainConfig {
+    TrainConfig {
+        model: "linreg".to_string(),
+        method: Method::Obftf,
+        sampling_ratio: 0.25,
+        epochs: 0,
+        stream_steps: steps,
+        lr: 0.01,
+        n_train: Some(512),
+        n_test: Some(256),
+        seed: 19,
+        eval_every: 2,
+        prefetch_depth: 3,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn streaming_runs_exact_step_count() {
+    let Some(m) = manifest() else { return };
+    let mut st = StreamingTrainer::with_manifest(&cfg(25), &m).unwrap();
+    let report = st.run().unwrap();
+    assert_eq!(report.steps, 25);
+    assert!(report.final_eval.loss.is_finite());
+    assert!(!report.evals.is_empty());
+    // every stream batch is full-size
+    assert_eq!(report.forward_examples, 25 * m.batch as u64);
+}
+
+#[test]
+fn backpressure_engages_when_training_is_slow() {
+    let Some(m) = manifest() else { return };
+    let mut st = StreamingTrainer::with_manifest(&cfg(20), &m).unwrap();
+    st.run().unwrap();
+    // the linreg step is fast but still slower than synthetic generation;
+    // with depth 3 the producer must have blocked at least once
+    assert!(
+        st.producer_blocked_ns() > 0,
+        "expected nonzero producer stall (backpressure)"
+    );
+}
+
+#[test]
+fn drift_changes_the_loss_trajectory() {
+    let Some(m) = manifest() else { return };
+    let run = |drift: f32| {
+        let mut c = cfg(30);
+        c.drift = drift;
+        let mut st = StreamingTrainer::with_manifest(&c, &m).unwrap();
+        st.run().unwrap().final_eval.loss
+    };
+    let clean = run(0.0);
+    let drifted = run(0.8);
+    assert_ne!(clean, drifted, "drift should perturb training");
+}
+
+#[test]
+fn status_service_reports_live_state() {
+    let Some(m) = manifest() else { return };
+    let board = StatusBoard::new();
+    let server = serve(board.clone(), "127.0.0.1:0").unwrap();
+    let addr = server.addr.to_string();
+
+    // drive a short streaming run, updating the board per step like the
+    // launcher does
+    let mut st = StreamingTrainer::with_manifest(&cfg(10), &m).unwrap();
+    board.update(|s| {
+        s.model = "linreg".into();
+        s.method = "obftf".into();
+    });
+    let report = st.run().unwrap();
+    board.update(|s| {
+        s.step = report.steps;
+        s.done = true;
+    });
+
+    let got = read_status(&addr).unwrap();
+    assert_eq!(got.step, 10);
+    assert!(got.done);
+    assert_eq!(got.model, "linreg");
+}
+
+#[test]
+fn streaming_requires_positive_steps() {
+    let Some(m) = manifest() else { return };
+    let mut c = cfg(0);
+    c.epochs = 1; // valid config, but streaming ctor must refuse
+    assert!(StreamingTrainer::with_manifest(&c, &m).is_err());
+}
