@@ -19,7 +19,7 @@ use obftf::sampling::Method;
 
 fn main() -> Result<()> {
     let full = std::env::args().any(|a| a == "--full");
-    let manifest = Manifest::load(&obftf::artifacts_dir())?;
+    let manifest = Manifest::load_or_native(&obftf::artifacts_dir())?;
 
     let methods = [
         Method::Uniform,

@@ -28,7 +28,7 @@ fn main() -> Result<()> {
         .and_then(|s| s.parse().ok())
         .unwrap_or(0.25);
 
-    let manifest = Manifest::load(&obftf::artifacts_dir())?;
+    let manifest = Manifest::load_or_native(&obftf::artifacts_dir())?;
     let cfg = TrainConfig {
         model: "mlp".into(),
         method: Method::Obftf,

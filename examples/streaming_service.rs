@@ -24,7 +24,7 @@ fn main() -> Result<()> {
     let addr =
         std::env::var("SERVICE_ADDR").unwrap_or_else(|_| "127.0.0.1:7878".to_string());
 
-    let manifest = Manifest::load(&obftf::artifacts_dir())?;
+    let manifest = Manifest::load_or_native(&obftf::artifacts_dir())?;
     let ckdir = TempDir::new("service")?;
     let cfg = TrainConfig {
         model: "mlp".into(),

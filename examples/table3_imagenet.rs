@@ -17,7 +17,7 @@ use obftf::sampling::Method;
 
 fn main() -> Result<()> {
     let full = std::env::args().any(|a| a == "--full");
-    let manifest = Manifest::load(&obftf::artifacts_dir())?;
+    let manifest = Manifest::load_or_native(&obftf::artifacts_dir())?;
 
     // "Ours" in the paper is Eq. 6; we report both the solver-backed
     // variant (obftf) and the appendix's production approximation
@@ -51,14 +51,22 @@ fn main() -> Result<()> {
             methods.len() * ratios.len(),
             base.epochs
         );
-        let cells = sweep(&base, &methods, &ratios, &manifest, |c| {
+        let cells = match sweep(&base, &methods, &ratios, &manifest, |c| {
             eprintln!(
                 "  {}/{:.2} -> acc {:.4}",
                 c.method.as_str(),
                 c.ratio,
                 c.report.final_eval.metric
             );
-        })?;
+        }) {
+            Ok(cells) => cells,
+            Err(e) => {
+                // conv models need executable AOT artifacts (run `make
+                // artifacts` and build with --features pjrt)
+                eprintln!("table3 [{model}]: skipped — {e:#}");
+                continue;
+            }
+        };
         let role = if model == "cnn" { "ResNet50-role" } else { "MobileNetV2-role" };
         println!(
             "{}",

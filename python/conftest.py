@@ -1,0 +1,12 @@
+"""Pytest bootstrap for the python/ tree.
+
+Makes the ``compile`` package importable when pytest is invoked from the
+repository root (``pytest python/tests``): pytest only inserts the
+*rootdir-adjacent* directory for package-less layouts, so we add
+``python/`` explicitly.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

@@ -6,10 +6,13 @@ Pallas layer — if these pass, the ``pallas`` artifact flavour computes
 the same numbers as the ``jnp`` flavour.
 """
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
+
+jax = pytest.importorskip("jax", reason="the Pallas kernels need jax")
+import jax.numpy as jnp
+
+pytest.importorskip("hypothesis", reason="kernel sweeps need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import losses as klosses

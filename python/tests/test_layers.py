@@ -5,10 +5,13 @@ flavour uses our hand-written backward kernels. Their gradients must
 agree — this validates the backward kernels end-to-end.
 """
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
+
+jax = pytest.importorskip("jax", reason="the L2 layers need jax")
+import jax.numpy as jnp
+
+pytest.importorskip("hypothesis", reason="layer sweeps need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from compile import layers

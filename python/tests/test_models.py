@@ -1,9 +1,10 @@
 """L2 model tests: shapes, flavour equivalence, executable contracts."""
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
+
+jax = pytest.importorskip("jax", reason="the L2 models need jax")
+import jax.numpy as jnp
 
 from compile import model as M
 

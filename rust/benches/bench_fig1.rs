@@ -1,7 +1,8 @@
 //! `fig1` throughput harness: end-to-end Algorithm-1 step latency on
 //! the linear-regression workload, per selection method. Regenerates
 //! the compute side of Fig 1 (the accuracy side is
-//! `examples/fig1_regression.rs`).
+//! `examples/fig1_regression.rs`). Runs on the manifest's default
+//! flavour (native when no artifacts are built).
 
 use obftf::config::TrainConfig;
 use obftf::coordinator::Trainer;
@@ -11,12 +12,7 @@ use obftf::sampling::Method;
 use obftf::util::benchkit::Bench;
 
 fn main() {
-    let dir = obftf::artifacts_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping bench_fig1: run `make artifacts` first");
-        return;
-    }
-    let manifest = Manifest::load(&dir).unwrap();
+    let manifest = Manifest::load_or_native(&obftf::artifacts_dir()).unwrap();
     let mut bench = Bench::new();
 
     for method in [
@@ -47,4 +43,5 @@ fn main() {
         });
     }
     println!("{}", bench.table("fig1: linreg end-to-end step (fwd + select + bwd)"));
+    bench.write_json_env().unwrap();
 }

@@ -10,12 +10,7 @@ use obftf::sampling::Method;
 use obftf::util::benchkit::Bench;
 
 fn main() {
-    let dir = obftf::artifacts_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping bench_fig2: run `make artifacts` first");
-        return;
-    }
-    let manifest = Manifest::load(&dir).unwrap();
+    let manifest = Manifest::load_or_native(&obftf::artifacts_dir()).unwrap();
     let mut bench = Bench::heavy();
 
     // per-method step cost at the paper's ratio band
@@ -46,4 +41,5 @@ fn main() {
         }
     }
     println!("{}", bench.table("fig2: mlp end-to-end step"));
+    bench.write_json_env().unwrap();
 }

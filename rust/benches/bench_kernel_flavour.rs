@@ -1,27 +1,26 @@
-//! `abl-kernel` (DESIGN.md §4): pallas vs jnp artifact flavour.
+//! `abl-kernel` (DESIGN.md §4): execution-flavour comparison.
 //!
-//! The pallas flavour lowers interpret-mode Pallas kernels (scalarized
-//! HLO while-loops on CPU — the faithful L1 structure); the jnp flavour
-//! lets XLA fuse natively. On a real TPU the pallas path would use the
-//! MXU directly; on this CPU substrate the gap quantifies the cost of
-//! interpret-mode fidelity (EXPERIMENTS.md §Perf).
+//! With AOT artifacts built this compares the pallas flavour
+//! (interpret-mode L1 kernels) against jnp (XLA-native fusion); on a
+//! fresh checkout it measures the pure-Rust native backend. On a real
+//! TPU the pallas path would use the MXU directly; on this CPU
+//! substrate the gap quantifies the cost of interpret-mode fidelity
+//! (EXPERIMENTS.md §Perf).
 
 use obftf::data::{HostTensor, Rng};
-use obftf::runtime::{Flavour, Manifest, Session};
+use obftf::runtime::{Manifest, Session};
 use obftf::util::benchkit::{black_box, Bench};
 
 fn main() {
-    let dir = obftf::artifacts_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping bench_kernel_flavour: run `make artifacts` first");
-        return;
-    }
-    let manifest = Manifest::load(&dir).unwrap();
+    let manifest = Manifest::load_or_native(&obftf::artifacts_dir()).unwrap();
     let mut bench = Bench::heavy();
     let n = manifest.batch;
 
     for model in ["linreg", "mlp"] {
-        let entry = manifest.model(model).unwrap();
+        let Ok(entry) = manifest.model(model) else {
+            eprintln!("skipping {model}: not in manifest");
+            continue;
+        };
         let stride: usize = entry.x_shape.iter().product();
         let mut rng = Rng::seed_from(3);
         let mut shape = vec![n];
@@ -43,8 +42,15 @@ fn main() {
         };
         let mask: Vec<f32> = (0..n).map(|i| if i % 4 == 0 { 1.0 } else { 0.0 }).collect();
 
-        for flavour in [Flavour::Jnp, Flavour::Pallas] {
-            let mut s = Session::new(&manifest, model, flavour).unwrap();
+        for flavour in entry.flavours() {
+            let mut s = match Session::new(&manifest, model, flavour) {
+                Ok(s) => s,
+                Err(e) => {
+                    // artifact flavours need the pjrt cargo feature
+                    eprintln!("skipping {model}/{flavour}: {e}");
+                    continue;
+                }
+            };
             s.init(1).unwrap();
             bench.run(&format!("fwd_loss/{model}/{}", flavour.as_str()), || {
                 black_box(s.fwd_loss(&x, &y).unwrap());
@@ -54,5 +60,6 @@ fn main() {
             });
         }
     }
-    println!("{}", bench.table("kernel flavour: pallas (interpret) vs jnp (XLA-fused)"));
+    println!("{}", bench.table("execution flavour: native vs pallas vs jnp"));
+    bench.write_json_env().unwrap();
 }

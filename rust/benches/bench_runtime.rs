@@ -1,42 +1,46 @@
 //! Runtime-layer micro-benches: the plumbing between the coordinator
-//! and PJRT — host↔literal conversion, single-exec latency, the
-//! engine's channel round-trip, prefetcher throughput, and checkpoint
-//! serialization. These locate L3 overhead that isn't XLA compute.
+//! and the execution backend — single-exec latency, the engine's
+//! channel round-trip, prefetcher throughput, and checkpoint
+//! serialization. These locate L3 overhead that isn't backend compute.
+//! (Host↔literal conversion is additionally measured when the `pjrt`
+//! feature is on.)
 
 use obftf::checkpoint::Checkpoint;
 use obftf::data::stream::{Prefetcher, ResamplingStream};
-use obftf::data::{HostTensor, Rng};
-use obftf::runtime::{session, Engine, Flavour, Manifest, Session};
+use obftf::data::HostTensor;
+use obftf::runtime::{Engine, Manifest, Session};
 use obftf::testkit::TempDir;
 use obftf::util::benchkit::{black_box, Bench};
 
 fn main() {
-    let dir = obftf::artifacts_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping bench_runtime: run `make artifacts` first");
-        return;
-    }
-    let manifest = Manifest::load(&dir).unwrap();
+    let manifest = Manifest::load_or_native(&obftf::artifacts_dir()).unwrap();
+    let flavour = manifest.default_flavour();
     let mut bench = Bench::new();
     let n = manifest.batch;
 
-    // host tensor -> literal -> host tensor conversion cost (784-wide batch)
-    let mut rng = Rng::seed_from(11);
-    let t = HostTensor::f32(
-        vec![n, 784],
-        (0..n * 784).map(|_| rng.normal() as f32).collect(),
-    )
-    .unwrap();
-    bench.run("to_literal/128x784", || {
-        black_box(session::to_literal(&t).unwrap());
-    });
-    let lit = session::to_literal(&t).unwrap();
-    bench.run("from_literal/128x784", || {
-        black_box(session::from_literal(&lit).unwrap());
-    });
+    // host tensor -> literal -> host tensor conversion cost (784-wide
+    // batch), PJRT builds only
+    #[cfg(feature = "pjrt")]
+    {
+        use obftf::runtime::{from_literal, to_literal};
+        let mut rng = obftf::data::Rng::seed_from(11);
+        let t = HostTensor::f32(
+            vec![n, 784],
+            (0..n * 784).map(|_| rng.normal() as f32).collect(),
+        )
+        .unwrap();
+        if let Ok(lit) = to_literal(&t) {
+            bench.run("to_literal/128x784", || {
+                black_box(to_literal(&t).unwrap());
+            });
+            bench.run("from_literal/128x784", || {
+                black_box(from_literal(&lit).unwrap());
+            });
+        }
+    }
 
     // single-executable latency floor (linreg = smallest model)
-    let mut s = Session::new(&manifest, "linreg", Flavour::Jnp).unwrap();
+    let mut s = Session::new(&manifest, "linreg", flavour).unwrap();
     s.init(0).unwrap();
     let x = HostTensor::f32(vec![n, 1], (0..n).map(|i| i as f32 / n as f32).collect())
         .unwrap();
@@ -46,7 +50,7 @@ fn main() {
     });
 
     // engine round-trip overhead: same op through the worker channel
-    let engine = Engine::new(&manifest, "linreg", Flavour::Jnp, 1).unwrap();
+    let engine = Engine::new(&manifest, "linreg", flavour, 1).unwrap();
     engine.init_broadcast(0).unwrap();
     bench.run("engine/roundtrip/fwd_loss", || {
         black_box(
@@ -69,7 +73,7 @@ fn main() {
     });
 
     // checkpoint save/load (mlp-sized params)
-    let mut ms = Session::new(&manifest, "mlp", Flavour::Jnp).unwrap();
+    let mut ms = Session::new(&manifest, "mlp", flavour).unwrap();
     ms.init(0).unwrap();
     let params = ms.params_to_host().unwrap();
     let named: Vec<(String, HostTensor)> = manifest
@@ -91,4 +95,5 @@ fn main() {
     });
 
     println!("{}", bench.table("runtime plumbing"));
+    bench.write_json_env().unwrap();
 }

@@ -1,6 +1,9 @@
 //! `sel-micro` (DESIGN.md §4): selection-policy latency vs batch size
 //! and budget. The L3 perf target: OBFTF's solver must cost less than
 //! one fwd_loss execution at n = 128 (see EXPERIMENTS.md §Perf).
+//!
+//! CI smoke: set `OBFTF_BENCH_BUDGET_MS` / `OBFTF_BENCH_MAX_ITERS` for
+//! a tiny run and `OBFTF_BENCH_JSON` to capture the summary artifact.
 
 use obftf::data::rng::Rng;
 use obftf::sampling::{budget_for, Method};
@@ -30,4 +33,5 @@ fn main() {
         }
     }
     println!("{}", bench.table("selection policies"));
+    bench.write_json_env().unwrap();
 }

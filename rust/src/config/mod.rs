@@ -19,7 +19,9 @@ use crate::util::toml_min::{self, TomlValue};
 pub struct TrainConfig {
     /// Model name from the manifest: linreg | mlp | cnn | cnn_lite.
     pub model: String,
-    /// Kernel flavour: pallas (paper-faithful L1 kernels) | jnp.
+    /// Execution flavour: auto (manifest default) | native (pure-Rust
+    /// CPU backend, no artifacts) | pallas (paper-faithful L1 kernels)
+    /// | jnp. The artifact flavours need the `pjrt` cargo feature.
     pub flavour: String,
     /// Dataset: regression | regression_outliers | mnist_proxy |
     /// imagenet_proxy (defaults to the model's conventional pairing).
@@ -74,7 +76,7 @@ impl Default for TrainConfig {
     fn default() -> Self {
         TrainConfig {
             model: "mlp".to_string(),
-            flavour: "jnp".to_string(),
+            flavour: "auto".to_string(),
             dataset: None,
             method: Method::Obftf,
             sampling_ratio: 0.25,
@@ -178,7 +180,7 @@ impl TrainConfig {
             bail!("prefetch_depth must be ≥ 1");
         }
         match self.flavour.as_str() {
-            "pallas" | "jnp" => {}
+            "auto" | "native" | "pallas" | "jnp" => {}
             other => bail!("unknown flavour {other:?}"),
         }
         Ok(())
@@ -186,6 +188,7 @@ impl TrainConfig {
 }
 
 #[cfg(test)]
+#[allow(clippy::field_reassign_with_default)]
 mod tests {
     use super::*;
 
@@ -236,6 +239,15 @@ epochs = 2
         cfg.flavour = "cuda".into();
         assert!(cfg.validate().is_err());
         assert!(TrainConfig::from_toml_str("method = \"bogus\"").is_err());
+    }
+
+    #[test]
+    fn native_and_auto_flavours_accepted() {
+        for fl in ["auto", "native", "pallas", "jnp"] {
+            let mut cfg = TrainConfig::default();
+            cfg.flavour = fl.to_string();
+            cfg.validate().unwrap();
+        }
     }
 
     #[test]

@@ -42,13 +42,13 @@ pub struct ParallelTrainer {
 
 impl ParallelTrainer {
     pub fn from_config(cfg: &TrainConfig) -> Result<ParallelTrainer> {
-        let manifest = Manifest::load(&crate::artifacts_dir())?;
+        let manifest = Manifest::load_or_native(&crate::artifacts_dir())?;
         Self::with_manifest(cfg, &manifest)
     }
 
     pub fn with_manifest(cfg: &TrainConfig, manifest: &Manifest) -> Result<ParallelTrainer> {
         cfg.validate()?;
-        let flavour: Flavour = cfg.flavour.parse()?;
+        let flavour: Flavour = manifest.resolve_flavour(&cfg.flavour)?;
         let engine = Engine::new(manifest, &cfg.model, flavour, cfg.workers)
             .context("building worker engine")?;
         engine.init_broadcast(cfg.seed as i32)?;

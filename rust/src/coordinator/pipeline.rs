@@ -27,7 +27,7 @@ pub struct StreamingTrainer {
 
 impl StreamingTrainer {
     pub fn from_config(cfg: &TrainConfig) -> Result<StreamingTrainer> {
-        let manifest = Manifest::load(&crate::artifacts_dir())?;
+        let manifest = Manifest::load_or_native(&crate::artifacts_dir())?;
         Self::with_manifest(cfg, &manifest)
     }
 

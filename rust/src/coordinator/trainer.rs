@@ -150,18 +150,19 @@ pub struct Trainer {
 }
 
 impl Trainer {
-    /// Build everything from a config: manifest, session (compiles the
-    /// six executables), datasets, sampler — and initialize parameters.
+    /// Build everything from a config: manifest (synthesized native
+    /// when no artifacts are built), session, datasets, sampler — and
+    /// initialize parameters.
     pub fn from_config(cfg: &TrainConfig) -> Result<Trainer> {
         cfg.validate()?;
-        let manifest = Manifest::load(&crate::artifacts_dir())?;
+        let manifest = Manifest::load_or_native(&crate::artifacts_dir())?;
         Self::with_manifest(cfg, &manifest)
     }
 
     /// Same, with an explicit manifest (tests point this elsewhere).
     pub fn with_manifest(cfg: &TrainConfig, manifest: &Manifest) -> Result<Trainer> {
         cfg.validate()?;
-        let flavour: Flavour = cfg.flavour.parse()?;
+        let flavour: Flavour = manifest.resolve_flavour(&cfg.flavour)?;
         let mut session = Session::new(manifest, &cfg.model, flavour)
             .with_context(|| format!("building session for model {}", cfg.model))?;
         session.init(cfg.seed as i32)?;

@@ -1,10 +1,12 @@
 //! Host-side tensors: the interchange type between the L3 coordinator
-//! and the PJRT runtime.
+//! and the execution backends.
 //!
-//! The `xla` crate's `Literal`/`PjRtBuffer` are `Rc`-backed and cannot
-//! cross threads; `HostTensor` is the plain-`Vec` representation that
-//! flows through channels between the leader and worker threads. The
-//! conversion to/from `Literal` lives in `runtime::session`.
+//! `HostTensor` is the plain-`Vec` representation that flows through
+//! channels between the leader and worker threads and across the
+//! [`crate::runtime::Backend`] boundary. The native backend computes on
+//! it directly; the PJRT backend converts to/from `xla::Literal` (whose
+//! handles are `Rc`-backed and cannot cross threads) in
+//! `runtime::pjrt`.
 
 use anyhow::{bail, Result};
 

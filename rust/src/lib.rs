@@ -13,9 +13,12 @@
 //! * **L1 (`python/compile/kernels/`)** — Pallas kernels for the dense
 //!   layers, per-example losses and SGD updates.
 //!
-//! Python never runs at training time: `make artifacts` lowers
-//! everything once; this crate loads `artifacts/*.hlo.txt` through the
-//! PJRT C API (the `xla` crate) and owns the entire request path.
+//! Python never runs at training time. Execution goes through the
+//! [`runtime::Backend`] abstraction: the **native** flavour is a
+//! pure-Rust CPU backend (ports of the `ref.py` oracles) that runs on a
+//! fresh checkout with no artifacts, JAX or PJRT; the **pallas** /
+//! **jnp** flavours load `artifacts/*.hlo.txt` through the PJRT C API
+//! (`pjrt` cargo feature) after a one-time `make artifacts`.
 //!
 //! ## Quick start
 //!

@@ -22,7 +22,7 @@ fn train_parser() -> ArgParser {
     ArgParser::new("train", "run a training job")
         .flag("config", "TOML config file (flags override it)")
         .flag("model", "linreg | mlp | cnn | cnn_lite")
-        .flag("flavour", "pallas | jnp kernel flavour")
+        .flag("flavour", "auto | native | pallas | jnp execution flavour")
         .flag("dataset", "regression[_outliers] | mnist_proxy | imagenet_proxy")
         .flag("method", "uniform | selective_backprop | mink | max_prob | obftf | obftf_prox | obftf_dp | frank_wolfe")
         .flag("ratio", "sampling ratio in [0,1]")
@@ -161,7 +161,7 @@ fn cmd_eval(args: &[String]) -> Result<()> {
     let parser = ArgParser::new("eval", "evaluate a checkpoint")
         .flag("checkpoint", "checkpoint file to load (required)")
         .flag("model", "model name (default mlp)")
-        .flag("flavour", "pallas | jnp (default jnp)")
+        .flag("flavour", "auto | native | pallas | jnp (default auto)")
         .flag("dataset", "dataset override")
         .flag("seed", "dataset generation seed");
     let p = parser.parse(args)?;
@@ -170,7 +170,7 @@ fn cmd_eval(args: &[String]) -> Result<()> {
     };
     let mut cfg = TrainConfig {
         model: p.get("model").unwrap_or("mlp").to_string(),
-        flavour: p.get("flavour").unwrap_or("jnp").to_string(),
+        flavour: p.get("flavour").unwrap_or("auto").to_string(),
         dataset: p.get("dataset").map(|s| s.to_string()),
         epochs: 1,
         ..Default::default()
@@ -187,9 +187,10 @@ fn cmd_eval(args: &[String]) -> Result<()> {
 }
 
 fn cmd_inspect() -> Result<()> {
-    let manifest = Manifest::load(&obftf::artifacts_dir())?;
+    let manifest = Manifest::load_or_native(&obftf::artifacts_dir())?;
     println!("artifacts dir: {:?}", manifest.dir);
     println!("compiled batch size: {}", manifest.batch);
+    println!("default flavour: {}", manifest.default_flavour());
     for (name, entry) in &manifest.models {
         let nparam: usize = entry
             .params

@@ -1,0 +1,164 @@
+//! The backend abstraction: one model's executor behind a trait object.
+//!
+//! A backend owns the resident parameters and runs the six model
+//! executables (`init`, `fwd_loss`, `train_step`, `grads`, `apply`,
+//! `eval`) on [`HostTensor`]s. Two implementations exist:
+//!
+//! * [`crate::runtime::native::NativeBackend`] — pure-Rust CPU math
+//!   ported from `python/compile/kernels/ref.py`; zero dependencies,
+//!   always available;
+//! * `PjrtBackend` (`pjrt` cargo feature) — AOT-lowered HLO artifacts
+//!   executed through the PJRT C API.
+//!
+//! [`crate::runtime::Session`] wraps a `Box<dyn Backend>` and owns all
+//! input validation, so backends can assume well-shaped tensors.
+
+use anyhow::{bail, Result};
+
+use crate::data::tensor::{HostTensor, TensorData};
+
+/// Cumulative execution counters for the perf pass.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SessionStats {
+    pub executions: u64,
+    pub exec_ns: u64,
+    pub compile_ns: u64,
+}
+
+/// One model's executor: resident parameters + the six executables.
+///
+/// Inputs are validated by [`crate::runtime::Session`] before they
+/// reach a backend: `x`/`y` have the compiled batch shape and dtype,
+/// masks have batch length, and `selected` indices are in range.
+pub trait Backend {
+    /// Initialize parameters deterministically from `seed`.
+    fn init(&mut self, seed: i32) -> Result<()>;
+
+    /// "Ten forward": per-example losses for the whole batch.
+    fn fwd_loss(&mut self, x: &HostTensor, y: &HostTensor) -> Result<Vec<f32>>;
+
+    /// "One backward": masked train step; parameters update in place.
+    /// Returns the selected-subset mean loss.
+    fn train_step(
+        &mut self,
+        x: &HostTensor,
+        y: &HostTensor,
+        mask: &[f32],
+        lr: f32,
+    ) -> Result<f32>;
+
+    /// "One backward", gathered: run the backward only on the selected
+    /// rows. Numerically equivalent to [`Backend::train_step`] with the
+    /// matching mask, but O(|selected|) instead of O(batch).
+    fn train_step_selected(
+        &mut self,
+        x: &HostTensor,
+        y: &HostTensor,
+        selected: &[usize],
+        lr: f32,
+    ) -> Result<f32>;
+
+    /// Gradients for a masked shard (the data-parallel worker path).
+    /// Returns (grads, selected mean loss over this shard).
+    fn grads(
+        &mut self,
+        x: &HostTensor,
+        y: &HostTensor,
+        mask: &[f32],
+    ) -> Result<(Vec<HostTensor>, f32)>;
+
+    /// Apply externally averaged gradients (the leader path).
+    fn apply(&mut self, grads: &[HostTensor], lr: f32) -> Result<()>;
+
+    /// Masked eval sums: `(sum_loss, sum_metric, count)`.
+    fn eval_batch(
+        &mut self,
+        x: &HostTensor,
+        y: &HostTensor,
+        mask: &[f32],
+    ) -> Result<(f64, f64, f64)>;
+
+    /// Copy the resident parameters to host (checkpointing / broadcast).
+    fn params_to_host(&self) -> Result<Vec<HostTensor>>;
+
+    /// Replace the resident parameters from host tensors.
+    fn load_params(&mut self, params: &[HostTensor]) -> Result<()>;
+
+    /// How many parameter tensors are currently resident (0 before
+    /// `init`/`load_params`).
+    fn n_resident_params(&self) -> usize;
+
+    /// Cumulative execution counters.
+    fn stats(&self) -> SessionStats;
+
+    /// Human-readable execution platform (e.g. `"native-cpu"`).
+    fn platform_name(&self) -> String;
+}
+
+/// Gather `selected` rows of a batch into a `rows`-row sub-batch,
+/// zero-padding when `rows > selected.len()`. `batch` is the row count
+/// of `x`/`y`; indices must already be validated against it.
+pub(crate) fn gather_rows(
+    x: &HostTensor,
+    y: &HostTensor,
+    selected: &[usize],
+    rows: usize,
+    batch: usize,
+) -> Result<(HostTensor, HostTensor)> {
+    if selected.len() > rows {
+        bail!("gather_rows: {} selected rows > target {rows}", selected.len());
+    }
+    let stride = x.element_count() / batch;
+    let xv = x.as_f32()?;
+    let mut gx = vec![0.0f32; rows * stride];
+    for (row, &i) in selected.iter().enumerate() {
+        if i >= batch {
+            bail!("selected index {i} out of range");
+        }
+        gx[row * stride..(row + 1) * stride]
+            .copy_from_slice(&xv[i * stride..(i + 1) * stride]);
+    }
+    let mut gshape = x.shape.clone();
+    gshape[0] = rows;
+    let gx = HostTensor { shape: gshape, data: TensorData::F32(gx) };
+    let gy = match &y.data {
+        TensorData::F32(v) => {
+            let mut out = vec![0.0f32; rows];
+            for (row, &i) in selected.iter().enumerate() {
+                out[row] = v[i];
+            }
+            HostTensor { shape: vec![rows], data: TensorData::F32(out) }
+        }
+        TensorData::I32(v) => {
+            let mut out = vec![0i32; rows];
+            for (row, &i) in selected.iter().enumerate() {
+                out[row] = v[i];
+            }
+            HostTensor { shape: vec![rows], data: TensorData::I32(out) }
+        }
+    };
+    Ok((gx, gy))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gather_rows_picks_and_pads() {
+        let x = HostTensor::f32(vec![4, 2], vec![0., 1., 2., 3., 4., 5., 6., 7.]).unwrap();
+        let y = HostTensor::i32(vec![4], vec![10, 11, 12, 13]).unwrap();
+        let (gx, gy) = gather_rows(&x, &y, &[3, 1], 3, 4).unwrap();
+        assert_eq!(gx.shape, vec![3, 2]);
+        assert_eq!(gx.as_f32().unwrap(), &[6., 7., 2., 3., 0., 0.]);
+        assert_eq!(gy.as_i32().unwrap(), &[13, 11, 0]);
+    }
+
+    #[test]
+    fn gather_rows_rejects_bad_input() {
+        let x = HostTensor::f32(vec![2, 1], vec![0., 1.]).unwrap();
+        let y = HostTensor::f32(vec![2], vec![0., 1.]).unwrap();
+        assert!(gather_rows(&x, &y, &[5], 1, 2).is_err());
+        assert!(gather_rows(&x, &y, &[0, 1], 1, 2).is_err());
+    }
+}

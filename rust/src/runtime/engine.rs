@@ -1,8 +1,8 @@
 //! Multi-worker execution engine: the leader/worker data-parallel
 //! substrate (the paper trains sync data-parallel on 32 GPUs; here each
-//! worker is a thread owning its own PJRT CPU client + compiled
-//! executables — the `xla` handles are `Rc`-backed and cannot be
-//! shared).
+//! worker is a thread owning its own [`Session`] — backends may hold
+//! non-`Send` handles (PJRT's are `Rc`-backed), so sessions are built
+//! inside their worker thread and never shared).
 //!
 //! Protocol per step (see `coordinator::parallel`):
 //!   1. leader shards the global batch;

@@ -1,9 +1,15 @@
-//! `artifacts/manifest.json` — the python→rust interchange contract.
+//! `artifacts/manifest.json` — the python→rust interchange contract —
+//! plus the synthesized **native** manifest used when no artifacts are
+//! built.
 //!
 //! `aot.py` emits one entry per model describing tensor shapes, dtypes
 //! and the parameter layout, plus the HLO-text filename for every
-//! (executable, flavour) pair. The runtime refuses to start on a
-//! missing/inconsistent manifest rather than guessing shapes.
+//! (executable, flavour) pair. The runtime refuses to start on an
+//! inconsistent manifest rather than guessing shapes. When the
+//! artifacts directory is absent entirely, [`Manifest::load_or_native`]
+//! synthesizes entries for the models the pure-Rust
+//! [`crate::runtime::native`] backend executes (linreg, mlp), so a
+//! fresh checkout trains without Python, JAX or PJRT.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -12,9 +18,16 @@ use anyhow::{bail, Context, Result};
 
 use crate::util::json::{self, Json};
 
+/// Batch size of the synthesized native manifest (matches the
+/// `python/compile/model.py` `BATCH` the AOT artifacts are lowered at).
+pub const NATIVE_BATCH: usize = 128;
+
 /// Kernel flavour of an artifact set (DESIGN.md `abl-kernel`).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Flavour {
+    /// Pure-Rust CPU backend (no artifacts, no PJRT) — the hermetic
+    /// default on a fresh checkout.
+    Native,
     /// L1 Pallas kernels (interpret-mode), the paper-faithful path.
     Pallas,
     /// Pure-jnp lowering (XLA-native fusion), the fast CPU path.
@@ -24,9 +37,22 @@ pub enum Flavour {
 impl Flavour {
     pub fn as_str(&self) -> &'static str {
         match self {
+            Flavour::Native => "native",
             Flavour::Pallas => "pallas",
             Flavour::Jnp => "jnp",
         }
+    }
+
+    /// Whether this flavour executes on-disk HLO artifacts (vs the
+    /// built-in native backend).
+    pub fn needs_artifacts(&self) -> bool {
+        !matches!(self, Flavour::Native)
+    }
+}
+
+impl std::fmt::Display for Flavour {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
     }
 }
 
@@ -35,9 +61,10 @@ impl std::str::FromStr for Flavour {
 
     fn from_str(s: &str) -> Result<Self> {
         match s {
+            "native" => Ok(Flavour::Native),
             "pallas" => Ok(Flavour::Pallas),
             "jnp" => Ok(Flavour::Jnp),
-            other => bail!("unknown flavour {other:?}; expected pallas | jnp"),
+            other => bail!("unknown flavour {other:?}; expected native | pallas | jnp"),
         }
     }
 }
@@ -84,7 +111,8 @@ pub struct ModelEntry {
     pub num_classes: usize,
     pub y_dtype: String,
     pub params: Vec<ParamEntry>,
-    /// `"{exe}:{flavour}"` → HLO text filename.
+    /// `"{exe}:{flavour}"` → HLO text filename (`"<builtin>"` for the
+    /// native flavour, which has no on-disk artifact).
     pub executables: BTreeMap<String, String>,
 }
 
@@ -100,6 +128,26 @@ impl ModelEntry {
             .get(&key)
             .map(String::as_str)
             .with_context(|| format!("manifest has no executable {key:?}"))
+    }
+
+    /// The flavours this entry lists executables for (sorted, deduped).
+    pub fn flavours(&self) -> Vec<Flavour> {
+        let mut out: Vec<Flavour> = Vec::new();
+        for key in self.executables.keys() {
+            if let Some((_, suffix)) = key.rsplit_once(':') {
+                if let Ok(fl) = suffix.parse::<Flavour>() {
+                    if !out.contains(&fl) {
+                        out.push(fl);
+                    }
+                }
+            }
+        }
+        out.sort();
+        out
+    }
+
+    pub fn has_flavour(&self, flavour: Flavour) -> bool {
+        self.flavours().contains(&flavour)
     }
 
     pub fn n_params(&self) -> usize {
@@ -175,7 +223,75 @@ impl Manifest {
         Ok(m)
     }
 
-    /// Structural validation + artifact-file existence check.
+    /// Load `dir/manifest.json` when present, otherwise synthesize the
+    /// [`Manifest::native`] manifest — a fresh checkout with no
+    /// `artifacts/` directory starts up on the pure-Rust backend
+    /// instead of refusing to run.
+    pub fn load_or_native(dir: &Path) -> Result<Manifest> {
+        if dir.join("manifest.json").exists() {
+            Self::load(dir)
+        } else {
+            Ok(Self::native(dir))
+        }
+    }
+
+    /// Synthesize the artifact-free manifest: the models the native CPU
+    /// backend executes (linreg, mlp), all six executables tagged with
+    /// the `native` flavour and no on-disk files.
+    pub fn native(dir: &Path) -> Manifest {
+        fn entry(
+            task: &str,
+            x_shape: Vec<usize>,
+            num_classes: usize,
+            y_dtype: &str,
+            params: Vec<(&str, Vec<usize>)>,
+        ) -> ModelEntry {
+            let executables = Exe::ALL
+                .iter()
+                .map(|e| (format!("{}:native", e.as_str()), "<builtin>".to_string()))
+                .collect();
+            ModelEntry {
+                task: task.to_string(),
+                x_shape,
+                num_classes,
+                y_dtype: y_dtype.to_string(),
+                params: params
+                    .into_iter()
+                    .map(|(name, shape)| ParamEntry { name: name.to_string(), shape })
+                    .collect(),
+                executables,
+            }
+        }
+
+        let mut models = BTreeMap::new();
+        // paper §4.1: y = 2x + 1 + noise, single-feature linear head
+        models.insert(
+            "linreg".to_string(),
+            entry("regression", vec![1], 0, "f32", vec![("w", vec![1, 1]), ("b", vec![1])]),
+        );
+        // paper §4.2: 784-256-256-10 MLP (matches python/compile/model.py)
+        models.insert(
+            "mlp".to_string(),
+            entry(
+                "classification",
+                vec![784],
+                10,
+                "i32",
+                vec![
+                    ("w1", vec![784, 256]),
+                    ("b1", vec![256]),
+                    ("w2", vec![256, 256]),
+                    ("b2", vec![256]),
+                    ("w3", vec![256, 10]),
+                    ("b3", vec![10]),
+                ],
+            ),
+        );
+        Manifest { version: 1, batch: NATIVE_BATCH, models, dir: dir.to_path_buf() }
+    }
+
+    /// Structural validation + artifact-file existence check (native
+    /// executables are built in and have no files to check).
     pub fn validate(&self) -> Result<()> {
         if self.version != 1 {
             bail!("unsupported manifest version {}", self.version);
@@ -196,7 +312,15 @@ impl Manifest {
             if entry.params.is_empty() {
                 bail!("model {name}: no parameters");
             }
+            let flavours = entry.flavours();
+            if flavours.is_empty() {
+                bail!("model {name}: no executables with a recognizable flavour");
+            }
             for (key, fname) in &entry.executables {
+                let flavour = key.rsplit_once(':').and_then(|(_, s)| s.parse::<Flavour>().ok());
+                if flavour.is_some_and(|f| !f.needs_artifacts()) {
+                    continue;
+                }
                 let p = self.dir.join(fname);
                 if !p.exists() {
                     bail!(
@@ -205,8 +329,8 @@ impl Manifest {
                     );
                 }
             }
-            for exe in Exe::ALL {
-                for fl in [Flavour::Pallas, Flavour::Jnp] {
+            for fl in flavours {
+                for exe in Exe::ALL {
                     entry.artifact(exe, fl).with_context(|| format!("model {name}"))?;
                 }
             }
@@ -225,6 +349,41 @@ impl Manifest {
 
     pub fn artifact_path(&self, model: &str, exe: Exe, flavour: Flavour) -> Result<PathBuf> {
         Ok(self.dir.join(self.model(model)?.artifact(exe, flavour)?))
+    }
+
+    /// The flavour to run when the config says `auto`: `native`
+    /// (hermetic) when listed; otherwise the best *executable* artifact
+    /// flavour. Without the `pjrt` cargo feature the artifact flavours
+    /// cannot execute at all, so `native` is the only sensible default
+    /// even against an artifact manifest (its dense-chain models run
+    /// straight off the parameter specs).
+    pub fn default_flavour(&self) -> Flavour {
+        let all_have = |f: Flavour| self.models.values().all(|e| e.has_flavour(f));
+        if all_have(Flavour::Native) {
+            return Flavour::Native;
+        }
+        #[cfg(feature = "pjrt")]
+        {
+            if all_have(Flavour::Jnp) {
+                Flavour::Jnp
+            } else {
+                Flavour::Pallas
+            }
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            Flavour::Native
+        }
+    }
+
+    /// Resolve a config flavour string: `"auto"` picks
+    /// [`Manifest::default_flavour`], anything else parses strictly.
+    pub fn resolve_flavour(&self, s: &str) -> Result<Flavour> {
+        if s == "auto" {
+            Ok(self.default_flavour())
+        } else {
+            s.parse()
+        }
     }
 }
 
@@ -276,6 +435,8 @@ mod tests {
         let e = m.model("m").unwrap();
         assert_eq!(e.artifact(Exe::Init, Flavour::Jnp).unwrap(), "m_init.jnp.hlo.txt");
         assert_eq!(e.params[0], ParamEntry { name: "w".into(), shape: vec![1, 1] });
+        assert_eq!(e.flavours(), vec![Flavour::Pallas, Flavour::Jnp]);
+        assert!(!e.has_flavour(Flavour::Native));
         assert!(m.model("nope").is_err());
     }
 
@@ -296,9 +457,53 @@ mod tests {
     #[test]
     fn flavour_parse() {
         use std::str::FromStr;
+        assert_eq!(Flavour::from_str("native").unwrap(), Flavour::Native);
         assert_eq!(Flavour::from_str("pallas").unwrap(), Flavour::Pallas);
         assert_eq!(Flavour::from_str("jnp").unwrap(), Flavour::Jnp);
         assert!(Flavour::from_str("cuda").is_err());
+        assert!(!Flavour::Native.needs_artifacts());
+        assert!(Flavour::Jnp.needs_artifacts());
+    }
+
+    #[test]
+    fn native_manifest_validates_without_files() {
+        let dir = TempDir::new("native").unwrap();
+        let m = Manifest::native(dir.path());
+        m.validate().unwrap();
+        assert_eq!(m.batch, NATIVE_BATCH);
+        let mlp = m.model("mlp").unwrap();
+        assert!(mlp.is_classification());
+        assert_eq!(mlp.n_params(), 6);
+        assert_eq!(mlp.flavours(), vec![Flavour::Native]);
+        assert_eq!(mlp.artifact(Exe::TrainStep, Flavour::Native).unwrap(), "<builtin>");
+        assert!(mlp.artifact(Exe::TrainStep, Flavour::Jnp).is_err());
+        assert_eq!(m.default_flavour(), Flavour::Native);
+    }
+
+    #[test]
+    fn load_or_native_falls_back_when_artifacts_absent() {
+        let dir = TempDir::new("fallback").unwrap();
+        let m = Manifest::load_or_native(dir.path()).unwrap();
+        assert!(m.models.contains_key("linreg"));
+        assert!(m.models.contains_key("mlp"));
+        // and prefers a real manifest when one exists
+        write_toy_manifest(dir.path(), None);
+        let m = Manifest::load_or_native(dir.path()).unwrap();
+        assert!(m.models.contains_key("m"));
+        // artifact flavours are only the default when they can execute
+        #[cfg(feature = "pjrt")]
+        assert_eq!(m.default_flavour(), Flavour::Jnp);
+        #[cfg(not(feature = "pjrt"))]
+        assert_eq!(m.default_flavour(), Flavour::Native);
+    }
+
+    #[test]
+    fn resolve_flavour_auto_and_strict() {
+        let dir = TempDir::new("resolve").unwrap();
+        let m = Manifest::native(dir.path());
+        assert_eq!(m.resolve_flavour("auto").unwrap(), Flavour::Native);
+        assert_eq!(m.resolve_flavour("jnp").unwrap(), Flavour::Jnp);
+        assert!(m.resolve_flavour("cuda").is_err());
     }
 
     #[test]

@@ -1,14 +1,28 @@
-//! PJRT runtime: load the AOT artifacts (`artifacts/*.hlo.txt` + the
-//! manifest) and execute them from the rust hot path.
+//! Execution runtime: the [`Backend`] abstraction and its two
+//! implementations, plus the manifest contract and the leader/worker
+//! engine.
 //!
-//! * [`manifest`] — the python→rust interchange contract;
+//! * [`manifest`] — the python→rust interchange contract (and the
+//!   synthesized native manifest used when no artifacts exist);
+//! * [`backend`]  — the `Backend` trait a [`Session`] dispatches onto;
+//! * [`native`]   — pure-Rust CPU backend (hermetic default);
+//! * `pjrt`       — AOT HLO artifacts via the PJRT C API (`pjrt`
+//!   cargo feature);
 //! * [`session`]  — single-threaded model session with resident params;
 //! * [`engine`]   — leader/worker thread pool for data-parallel steps.
 
+pub mod backend;
 pub mod engine;
 pub mod manifest;
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 pub mod session;
 
+pub use backend::{Backend, SessionStats};
 pub use engine::Engine;
-pub use manifest::{Exe, Flavour, Manifest, ModelEntry, ParamEntry};
-pub use session::{compile_hlo, from_literal, to_literal, Session, SessionStats};
+pub use manifest::{Exe, Flavour, Manifest, ModelEntry, ParamEntry, NATIVE_BATCH};
+pub use native::NativeBackend;
+#[cfg(feature = "pjrt")]
+pub use pjrt::{compile_hlo, from_literal, to_literal};
+pub use session::Session;

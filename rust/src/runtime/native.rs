@@ -1,0 +1,756 @@
+//! Pure-Rust native CPU backend: the hermetic execution path.
+//!
+//! Ports the oracles in `python/compile/kernels/ref.py` to Rust so the
+//! full Algorithm-1 loop runs on any machine with no artifacts, JAX or
+//! PJRT:
+//!
+//! * `matmul_bias_act` — `act(x · W + b)` with f32 accumulation, ReLU
+//!   on hidden layers;
+//! * `softmax_xent` / `mse` — per-example losses (stable logsumexp);
+//! * `softmax_xent_grad` / `mse_grad` — head gradients with
+//!   `dloss = mask / max(Σmask, 1)`, i.e. the masked-mean objective of
+//!   `model.py::_masked_loss_fn`;
+//! * `sgd_update` — `w − lr·g`.
+//!
+//! The backend executes any model whose manifest entry is a **dense
+//! chain**: alternating `(weight [d_in, d_out], bias [d_out])` pairs
+//! over flat features — linreg and the 784-256-256-10 MLP. Convolution
+//! models (cnn, cnn_lite) stay on the PJRT artifact path.
+//!
+//! `train_step` computes the same masked gradients as `grads` followed
+//! by `apply`, so serial fused steps and the leader/worker
+//! grads→average→apply protocol walk identical trajectories.
+
+use anyhow::{bail, Result};
+
+use super::backend::{gather_rows, Backend, SessionStats};
+use super::manifest::ModelEntry;
+use crate::data::rng::Rng;
+use crate::data::tensor::{HostTensor, TensorData};
+
+/// Seed-mixing constant so parameter init draws are decorrelated from
+/// dataset generators seeded with the same user seed.
+const INIT_SEED_MIX: u64 = 0x6f62_6674_665f_696e; // "obftf_in"
+
+/// Dense-chain topology: layer widths `[d_in, h_1, …, d_out]`.
+struct DenseChain {
+    dims: Vec<usize>,
+    classification: bool,
+}
+
+impl DenseChain {
+    fn n_layers(&self) -> usize {
+        self.dims.len() - 1
+    }
+
+    fn out_width(&self) -> usize {
+        *self.dims.last().expect("dims never empty")
+    }
+}
+
+/// The pure-Rust CPU backend ([`Flavour::Native`]).
+///
+/// [`Flavour::Native`]: super::manifest::Flavour::Native
+pub struct NativeBackend {
+    chain: DenseChain,
+    entry: ModelEntry,
+    batch: usize,
+    /// Resident parameters in manifest order (w_0, b_0, w_1, b_1, …).
+    params: Vec<HostTensor>,
+    stats: SessionStats,
+}
+
+impl NativeBackend {
+    /// Build from a manifest entry, validating that the parameter list
+    /// forms a dense chain the native math can execute.
+    pub fn new(model: &str, entry: &ModelEntry, batch: usize) -> Result<NativeBackend> {
+        let t0 = std::time::Instant::now();
+        if entry.x_shape.len() != 1 {
+            bail!(
+                "native backend supports flat-feature models only; \
+                 model {model} has x_shape {:?} (use the pjrt feature for conv models)",
+                entry.x_shape
+            );
+        }
+        if entry.params.is_empty() || entry.params.len() % 2 != 0 {
+            bail!(
+                "native backend expects (weight, bias) parameter pairs; \
+                 model {model} has {} tensors",
+                entry.params.len()
+            );
+        }
+        let mut dims = vec![entry.x_shape[0]];
+        for pair in entry.params.chunks(2) {
+            let (w, b) = (&pair[0], &pair[1]);
+            if w.shape.len() != 2 || b.shape.len() != 1 || w.shape[1] != b.shape[0] {
+                bail!(
+                    "model {model}: parameter pair {}/{} is not dense \
+                     (shapes {:?} / {:?})",
+                    w.name,
+                    b.name,
+                    w.shape,
+                    b.shape
+                );
+            }
+            let prev = *dims.last().expect("dims starts non-empty");
+            if w.shape[0] != prev {
+                bail!(
+                    "model {model}: layer input width {} does not chain onto \
+                     previous width {prev}",
+                    w.shape[0]
+                );
+            }
+            dims.push(w.shape[1]);
+        }
+        let classification = entry.is_classification();
+        let out = *dims.last().expect("dims starts non-empty");
+        if classification && out != entry.num_classes {
+            bail!("model {model}: head width {out} != num_classes {}", entry.num_classes);
+        }
+        if !classification && out != 1 {
+            bail!("model {model}: regression head must have width 1, got {out}");
+        }
+        let stats = SessionStats {
+            // clamp to 1 ns so stats always witness construction
+            compile_ns: (t0.elapsed().as_nanos() as u64).max(1),
+            ..Default::default()
+        };
+        Ok(NativeBackend {
+            chain: DenseChain { dims, classification },
+            entry: entry.clone(),
+            batch,
+            params: vec![],
+            stats,
+        })
+    }
+
+    fn bump(&mut self, t0: std::time::Instant) {
+        self.stats.executions += 1;
+        self.stats.exec_ns += t0.elapsed().as_nanos() as u64;
+    }
+
+    fn layer_weight(&self, l: usize) -> &[f32] {
+        self.params[2 * l].as_f32().expect("parameters are f32")
+    }
+
+    fn layer_bias(&self, l: usize) -> &[f32] {
+        self.params[2 * l + 1].as_f32().expect("parameters are f32")
+    }
+
+    /// Forward pass over `n` rows: `acts[l] = act(input_l · W_l + b_l)`
+    /// where `input_0 = x` and `input_l = acts[l-1]` (ReLU on hidden
+    /// layers, identity on the head — ref.py `matmul_bias_act`). The
+    /// input batch is read in place, never copied.
+    fn forward(&self, x: &[f32], n: usize) -> Vec<Vec<f32>> {
+        let nl = self.chain.n_layers();
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(nl);
+        for l in 0..nl {
+            let (din, dout) = (self.chain.dims[l], self.chain.dims[l + 1]);
+            let w = self.layer_weight(l);
+            let b = self.layer_bias(l);
+            let h: &[f32] = if l == 0 { x } else { &acts[l - 1] };
+            let mut z = vec![0.0f32; n * dout];
+            for i in 0..n {
+                let row = &h[i * din..(i + 1) * din];
+                let out = &mut z[i * dout..(i + 1) * dout];
+                out.copy_from_slice(b);
+                for (k, &hv) in row.iter().enumerate() {
+                    if hv == 0.0 {
+                        continue; // adding 0·w is exact; skipping is too
+                    }
+                    let wrow = &w[k * dout..(k + 1) * dout];
+                    for (o, &wv) in out.iter_mut().zip(wrow) {
+                        *o += hv * wv;
+                    }
+                }
+            }
+            if l + 1 < nl {
+                for v in z.iter_mut() {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+            acts.push(z);
+        }
+        acts
+    }
+
+    /// Per-example losses from head outputs (ref.py `softmax_xent` /
+    /// `mse`).
+    fn per_example_losses(&self, logits: &[f32], y: &HostTensor, n: usize) -> Result<Vec<f32>> {
+        let c = self.chain.out_width();
+        let mut out = vec![0.0f32; n];
+        if self.chain.classification {
+            let labels = y.as_i32()?;
+            for i in 0..n {
+                let row = &logits[i * c..(i + 1) * c];
+                let label = labels[i];
+                if label < 0 || label as usize >= c {
+                    bail!("label {label} outside [0, {c})");
+                }
+                out[i] = logsumexp(row) - row[label as usize];
+            }
+        } else {
+            let targets = y.as_f32()?;
+            for i in 0..n {
+                let d = logits[i] - targets[i];
+                out[i] = d * d;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Masked-mean loss gradients — the value-and-grad of
+    /// `masked_mean(per_example_loss)` from `model.py`. Returns the
+    /// gradients in manifest parameter order plus the selected mean
+    /// loss. `mask.len()` is the row count (callers may pass gathered
+    /// sub-batches smaller than the compiled batch).
+    fn compute_grads(
+        &self,
+        x: &HostTensor,
+        y: &HostTensor,
+        mask: &[f32],
+    ) -> Result<(Vec<HostTensor>, f32)> {
+        let n = mask.len();
+        let xs = x.as_f32()?;
+        let nl = self.chain.n_layers();
+        let c = self.chain.out_width();
+        let acts = self.forward(xs, n);
+        let logits = &acts[nl - 1];
+        let losses = self.per_example_losses(logits, y, n)?;
+        let denom = mask.iter().sum::<f32>().max(1.0);
+        let sel_loss = losses.iter().zip(mask).map(|(l, m)| l * m).sum::<f32>() / denom;
+
+        // head gradient dL/dz with dloss_i = mask_i / denom
+        // (ref.py softmax_xent_grad / mse_grad)
+        let mut dz = vec![0.0f32; n * c];
+        if self.chain.classification {
+            let labels = y.as_i32()?;
+            for i in 0..n {
+                let dl = mask[i] / denom;
+                if dl == 0.0 {
+                    continue;
+                }
+                let row = &logits[i * c..(i + 1) * c];
+                let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+                let drow = &mut dz[i * c..(i + 1) * c];
+                let mut sum = 0.0f32;
+                for (d, &v) in drow.iter_mut().zip(row) {
+                    *d = (v - m).exp();
+                    sum += *d;
+                }
+                for d in drow.iter_mut() {
+                    *d = *d / sum * dl;
+                }
+                drow[labels[i] as usize] -= dl;
+            }
+        } else {
+            let targets = y.as_f32()?;
+            for i in 0..n {
+                let dl = mask[i] / denom;
+                dz[i] = 2.0 * (logits[i] - targets[i]) * dl;
+            }
+        }
+
+        // backprop through the chain: dW_l = actsᵀ_l · dz, db_l = Σ dz,
+        // dh = dz · Wᵀ_l gated by the ReLU (acts > 0 ⟺ pre-act > 0)
+        let mut grads: Vec<Option<(Vec<f32>, Vec<f32>)>> = (0..nl).map(|_| None).collect();
+        for l in (0..nl).rev() {
+            let (din, dout) = (self.chain.dims[l], self.chain.dims[l + 1]);
+            let h: &[f32] = if l == 0 { xs } else { &acts[l - 1] };
+            let mut dw = vec![0.0f32; din * dout];
+            let mut db = vec![0.0f32; dout];
+            for i in 0..n {
+                let drow = &dz[i * dout..(i + 1) * dout];
+                for (dbv, &dv) in db.iter_mut().zip(drow) {
+                    *dbv += dv;
+                }
+                let hrow = &h[i * din..(i + 1) * din];
+                for (k, &hv) in hrow.iter().enumerate() {
+                    if hv == 0.0 {
+                        continue;
+                    }
+                    let wrow = &mut dw[k * dout..(k + 1) * dout];
+                    for (g, &dv) in wrow.iter_mut().zip(drow) {
+                        *g += hv * dv;
+                    }
+                }
+            }
+            if l > 0 {
+                let w = self.layer_weight(l);
+                let mut dh = vec![0.0f32; n * din];
+                for i in 0..n {
+                    let drow = &dz[i * dout..(i + 1) * dout];
+                    let hrow = &h[i * din..(i + 1) * din];
+                    let orow = &mut dh[i * din..(i + 1) * din];
+                    for (k, o) in orow.iter_mut().enumerate() {
+                        if hrow[k] <= 0.0 {
+                            continue; // ReLU gate
+                        }
+                        let wrow = &w[k * dout..(k + 1) * dout];
+                        let mut s = 0.0f32;
+                        for (&dv, &wv) in drow.iter().zip(wrow) {
+                            s += dv * wv;
+                        }
+                        *o = s;
+                    }
+                }
+                dz = dh;
+            }
+            grads[l] = Some((dw, db));
+        }
+
+        let mut out = Vec::with_capacity(2 * nl);
+        for (l, g) in grads.into_iter().enumerate() {
+            let (dw, db) = g.expect("filled by the backward loop");
+            out.push(HostTensor::f32(
+                vec![self.chain.dims[l], self.chain.dims[l + 1]],
+                dw,
+            )?);
+            out.push(HostTensor::f32(vec![self.chain.dims[l + 1]], db)?);
+        }
+        Ok((out, sel_loss))
+    }
+
+    /// `w ← w − lr·g` over all resident parameters (ref.py
+    /// `sgd_update`).
+    fn sgd_update(&mut self, grads: &[HostTensor], lr: f32) -> Result<()> {
+        if grads.len() != self.params.len() {
+            bail!("apply got {} grads, expected {}", grads.len(), self.params.len());
+        }
+        for (p, g) in self.params.iter_mut().zip(grads) {
+            let gv = g.as_f32()?;
+            let TensorData::F32(pv) = &mut p.data else {
+                bail!("non-f32 parameter");
+            };
+            if gv.len() != pv.len() {
+                bail!("gradient size {} != parameter size {}", gv.len(), pv.len());
+            }
+            for (x, &d) in pv.iter_mut().zip(gv) {
+                *x -= lr * d;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Numerically stable `log(Σ exp(row))` (ref.py `softmax_xent`).
+fn logsumexp(row: &[f32]) -> f32 {
+    let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    m + row.iter().map(|&v| (v - m).exp()).sum::<f32>().ln()
+}
+
+impl Backend for NativeBackend {
+    /// He initialization for weights (`N(0, 2/fan_in)`), zeros for
+    /// biases — the same scheme as `model.py::init_params`, drawn from
+    /// the crate's deterministic [`Rng`] instead of JAX's PRNG.
+    fn init(&mut self, seed: i32) -> Result<()> {
+        let t0 = std::time::Instant::now();
+        let mut rng = Rng::seed_from((seed as i64 as u64) ^ INIT_SEED_MIX);
+        let mut params = Vec::with_capacity(self.entry.params.len());
+        for spec in &self.entry.params {
+            let count: usize = spec.shape.iter().product();
+            let data = if spec.shape.len() == 1 {
+                vec![0.0f32; count]
+            } else {
+                let fan_in: usize = spec.shape[..spec.shape.len() - 1].iter().product();
+                let scale = (2.0 / fan_in as f64).sqrt();
+                (0..count).map(|_| (scale * rng.normal()) as f32).collect()
+            };
+            params.push(HostTensor::f32(spec.shape.clone(), data)?);
+        }
+        self.params = params;
+        self.bump(t0);
+        Ok(())
+    }
+
+    fn fwd_loss(&mut self, x: &HostTensor, y: &HostTensor) -> Result<Vec<f32>> {
+        let t0 = std::time::Instant::now();
+        let n = self.batch;
+        let acts = self.forward(x.as_f32()?, n);
+        let logits = acts.last().expect("chain has at least one layer");
+        let losses = self.per_example_losses(logits, y, n)?;
+        self.bump(t0);
+        Ok(losses)
+    }
+
+    fn train_step(
+        &mut self,
+        x: &HostTensor,
+        y: &HostTensor,
+        mask: &[f32],
+        lr: f32,
+    ) -> Result<f32> {
+        let t0 = std::time::Instant::now();
+        let (grads, sel_loss) = self.compute_grads(x, y, mask)?;
+        self.sgd_update(&grads, lr)?;
+        self.bump(t0);
+        Ok(sel_loss)
+    }
+
+    /// Gathered backward: rebuild an O(|selected|) sub-batch and run the
+    /// masked step on it. Indices are gathered in ascending order, so
+    /// every reduction visits the same nonzero terms in the same order
+    /// as the masked full-batch step (whose masked-out rows contribute
+    /// exact zeros) — the result is bit-identical to
+    /// [`Backend::train_step`] with the matching mask.
+    fn train_step_selected(
+        &mut self,
+        x: &HostTensor,
+        y: &HostTensor,
+        selected: &[usize],
+        lr: f32,
+    ) -> Result<f32> {
+        let t0 = std::time::Instant::now();
+        let k = selected.len();
+        let mut sorted: Vec<usize> = selected.to_vec();
+        sorted.sort_unstable();
+        let (gx, gy) = gather_rows(x, y, &sorted, k, self.batch)?;
+        let mask = vec![1.0f32; k];
+        let (grads, sel_loss) = self.compute_grads(&gx, &gy, &mask)?;
+        self.sgd_update(&grads, lr)?;
+        self.bump(t0);
+        Ok(sel_loss)
+    }
+
+    fn grads(
+        &mut self,
+        x: &HostTensor,
+        y: &HostTensor,
+        mask: &[f32],
+    ) -> Result<(Vec<HostTensor>, f32)> {
+        let t0 = std::time::Instant::now();
+        let out = self.compute_grads(x, y, mask)?;
+        self.bump(t0);
+        Ok(out)
+    }
+
+    fn apply(&mut self, grads: &[HostTensor], lr: f32) -> Result<()> {
+        let t0 = std::time::Instant::now();
+        self.sgd_update(grads, lr)?;
+        self.bump(t0);
+        Ok(())
+    }
+
+    fn eval_batch(
+        &mut self,
+        x: &HostTensor,
+        y: &HostTensor,
+        mask: &[f32],
+    ) -> Result<(f64, f64, f64)> {
+        let t0 = std::time::Instant::now();
+        let n = self.batch;
+        let c = self.chain.out_width();
+        let acts = self.forward(x.as_f32()?, n);
+        let logits = acts.last().expect("chain has at least one layer");
+        let losses = self.per_example_losses(logits, y, n)?;
+        let mut sums = (0.0f64, 0.0f64, 0.0f64);
+        if self.chain.classification {
+            let labels = y.as_i32()?;
+            for i in 0..n {
+                let m = mask[i] as f64;
+                if m == 0.0 {
+                    continue;
+                }
+                let row = &logits[i * c..(i + 1) * c];
+                let mut best = 0usize;
+                for (j, &v) in row.iter().enumerate() {
+                    if v > row[best] {
+                        best = j;
+                    }
+                }
+                let correct = if best == labels[i] as usize { 1.0 } else { 0.0 };
+                sums.0 += losses[i] as f64 * m;
+                sums.1 += correct * m;
+                sums.2 += m;
+            }
+        } else {
+            for i in 0..n {
+                let m = mask[i] as f64;
+                if m == 0.0 {
+                    continue; // inf·0 on a diverged padded row would NaN the sums
+                }
+                sums.0 += losses[i] as f64 * m;
+                sums.1 += losses[i] as f64 * m; // metric = squared error
+                sums.2 += m;
+            }
+        }
+        self.bump(t0);
+        Ok(sums)
+    }
+
+    fn params_to_host(&self) -> Result<Vec<HostTensor>> {
+        Ok(self.params.clone())
+    }
+
+    fn load_params(&mut self, params: &[HostTensor]) -> Result<()> {
+        if params.len() != self.entry.n_params() {
+            bail!(
+                "load_params got {} tensors, expected {}",
+                params.len(),
+                self.entry.n_params()
+            );
+        }
+        for (t, spec) in params.iter().zip(&self.entry.params) {
+            if t.shape != spec.shape {
+                bail!("param {}: shape {:?} != manifest {:?}", spec.name, t.shape, spec.shape);
+            }
+            if !t.is_f32() {
+                bail!("param {}: parameters must be f32", spec.name);
+            }
+        }
+        self.params = params.to_vec();
+        Ok(())
+    }
+
+    fn n_resident_params(&self) -> usize {
+        self.params.len()
+    }
+
+    fn stats(&self) -> SessionStats {
+        self.stats
+    }
+
+    fn platform_name(&self) -> String {
+        "native-cpu".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::ParamEntry;
+    use std::collections::BTreeMap;
+
+    fn chain_entry(task: &str, dims: &[usize], num_classes: usize) -> ModelEntry {
+        let mut params = Vec::new();
+        for (l, pair) in dims.windows(2).enumerate() {
+            params.push(ParamEntry { name: format!("w{l}"), shape: vec![pair[0], pair[1]] });
+            params.push(ParamEntry { name: format!("b{l}"), shape: vec![pair[1]] });
+        }
+        ModelEntry {
+            task: task.to_string(),
+            x_shape: vec![dims[0]],
+            num_classes,
+            y_dtype: if task == "classification" { "i32" } else { "f32" }.to_string(),
+            params,
+            executables: BTreeMap::new(),
+        }
+    }
+
+    fn backend(task: &str, dims: &[usize], num_classes: usize, batch: usize) -> NativeBackend {
+        let entry = chain_entry(task, dims, num_classes);
+        let mut b = NativeBackend::new("test", &entry, batch).unwrap();
+        b.init(7).unwrap();
+        b
+    }
+
+    fn toy_batch(b: &NativeBackend, seed: u64) -> (HostTensor, HostTensor) {
+        let n = b.batch;
+        let din = b.chain.dims[0];
+        let mut rng = Rng::seed_from(seed);
+        let x = HostTensor::f32(
+            vec![n, din],
+            (0..n * din).map(|_| rng.normal() as f32).collect(),
+        )
+        .unwrap();
+        let y = if b.chain.classification {
+            HostTensor::i32(
+                vec![n],
+                (0..n).map(|_| rng.below(b.chain.out_width()) as i32).collect(),
+            )
+            .unwrap()
+        } else {
+            HostTensor::f32(vec![n], (0..n).map(|_| rng.normal() as f32).collect()).unwrap()
+        };
+        (x, y)
+    }
+
+    #[test]
+    fn rejects_non_dense_entries() {
+        let mut entry = chain_entry("classification", &[4, 3], 3);
+        entry.params[0].shape = vec![4, 3, 1];
+        assert!(NativeBackend::new("bad", &entry, 8).is_err());
+
+        let mut entry = chain_entry("classification", &[4, 3], 3);
+        entry.params.pop();
+        assert!(NativeBackend::new("odd", &entry, 8).is_err());
+
+        // head width must match num_classes
+        let entry = chain_entry("classification", &[4, 5], 3);
+        assert!(NativeBackend::new("head", &entry, 8).is_err());
+
+        let entry = chain_entry("regression", &[4, 2], 0);
+        assert!(NativeBackend::new("reg", &entry, 8).is_err());
+    }
+
+    #[test]
+    fn softmax_xent_matches_brute_force() {
+        let mut b = backend("classification", &[3, 5], 5, 4);
+        let (x, y) = toy_batch(&b, 3);
+        let losses = b.fwd_loss(&x, &y).unwrap();
+        let acts = b.forward(x.as_f32().unwrap(), 4);
+        let logits = acts.last().unwrap();
+        let labels = y.as_i32().unwrap();
+        for i in 0..4 {
+            let row = &logits[i * 5..(i + 1) * 5];
+            let z: f64 = row.iter().map(|&v| (v as f64).exp()).sum();
+            let want = z.ln() - row[labels[i] as usize] as f64;
+            assert!(
+                (losses[i] as f64 - want).abs() < 1e-5,
+                "row {i}: {} vs {want}",
+                losses[i]
+            );
+            assert!(losses[i] >= 0.0);
+        }
+    }
+
+    #[test]
+    fn mse_loss_is_squared_error() {
+        let mut b = backend("regression", &[2, 1], 0, 3);
+        let (x, y) = toy_batch(&b, 5);
+        let losses = b.fwd_loss(&x, &y).unwrap();
+        let acts = b.forward(x.as_f32().unwrap(), 3);
+        let preds = acts.last().unwrap();
+        let targets = y.as_f32().unwrap();
+        for i in 0..3 {
+            let d = preds[i] - targets[i];
+            assert!((losses[i] - d * d).abs() < 1e-6);
+        }
+    }
+
+    /// Central-difference gradient check over every parameter of a
+    /// two-hidden-layer classifier — validates the whole backward pass.
+    #[test]
+    fn gradients_match_finite_differences() {
+        let n = 6;
+        let mut b = backend("classification", &[4, 5, 3], 3, n);
+        let (x, y) = toy_batch(&b, 11);
+        let mask: Vec<f32> = (0..n).map(|i| if i % 2 == 0 { 1.0 } else { 0.0 }).collect();
+        let (grads, _) = b.grads(&x, &y, &mask).unwrap();
+
+        let masked_loss = |b: &mut NativeBackend| -> f64 {
+            let losses = b.fwd_loss(&x, &y).unwrap();
+            let denom: f32 = mask.iter().sum::<f32>().max(1.0);
+            (losses.iter().zip(&mask).map(|(l, m)| l * m).sum::<f32>() / denom) as f64
+        };
+
+        let eps = 1e-3f32;
+        for (pi, g) in grads.iter().enumerate() {
+            let gv = g.as_f32().unwrap().to_vec();
+            for vi in 0..gv.len() {
+                let orig = {
+                    let TensorData::F32(pv) = &mut b.params[pi].data else { panic!() };
+                    let o = pv[vi];
+                    pv[vi] = o + eps;
+                    o
+                };
+                let up = masked_loss(&mut b);
+                {
+                    let TensorData::F32(pv) = &mut b.params[pi].data else { panic!() };
+                    pv[vi] = orig - eps;
+                }
+                let down = masked_loss(&mut b);
+                {
+                    let TensorData::F32(pv) = &mut b.params[pi].data else { panic!() };
+                    pv[vi] = orig;
+                }
+                let numeric = (up - down) / (2.0 * eps as f64);
+                let analytic = gv[vi] as f64;
+                assert!(
+                    (numeric - analytic).abs() < 1e-2 * analytic.abs().max(1e-1),
+                    "param {pi}[{vi}]: numeric {numeric} vs analytic {analytic}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn train_step_equals_grads_plus_apply() {
+        let n = 8;
+        let mut fused = backend("classification", &[6, 4, 3], 3, n);
+        let mut split = backend("classification", &[6, 4, 3], 3, n);
+        let (x, y) = toy_batch(&fused, 21);
+        let mask = vec![1.0f32; n];
+
+        let l1 = fused.train_step(&x, &y, &mask, 0.1).unwrap();
+        let (g, l2) = split.grads(&x, &y, &mask).unwrap();
+        split.apply(&g, 0.1).unwrap();
+
+        assert_eq!(l1, l2);
+        for (a, b) in fused.params.iter().zip(&split.params) {
+            assert_eq!(a.as_f32().unwrap(), b.as_f32().unwrap());
+        }
+    }
+
+    #[test]
+    fn gathered_step_is_bit_identical_to_masked_step() {
+        let n = 10;
+        let mut masked = backend("classification", &[3, 4, 2], 2, n);
+        let mut gathered = backend("classification", &[3, 4, 2], 2, n);
+        let (x, y) = toy_batch(&masked, 31);
+        let selected = vec![7usize, 1, 4]; // unsorted on purpose
+        let mut mask = vec![0.0f32; n];
+        for &i in &selected {
+            mask[i] = 1.0;
+        }
+
+        let lm = masked.train_step(&x, &y, &mask, 0.05).unwrap();
+        let lg = gathered.train_step_selected(&x, &y, &selected, 0.05).unwrap();
+        assert_eq!(lm, lg, "masked {lm} vs gathered {lg}");
+        for (a, b) in masked.params.iter().zip(&gathered.params) {
+            assert_eq!(a.as_f32().unwrap(), b.as_f32().unwrap());
+        }
+    }
+
+    #[test]
+    fn init_is_deterministic_and_seed_sensitive() {
+        let entry = chain_entry("classification", &[4, 3], 3);
+        let mut a = NativeBackend::new("t", &entry, 2).unwrap();
+        let mut b = NativeBackend::new("t", &entry, 2).unwrap();
+        a.init(42).unwrap();
+        b.init(42).unwrap();
+        assert_eq!(a.params, b.params);
+        let mut c = NativeBackend::new("t", &entry, 2).unwrap();
+        c.init(43).unwrap();
+        assert_ne!(a.params, c.params);
+        // biases start at zero, weights don't
+        assert!(a.params[1].as_f32().unwrap().iter().all(|&v| v == 0.0));
+        assert!(a.params[0].as_f32().unwrap().iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn eval_counts_and_accuracy_bounds() {
+        let n = 16;
+        let mut b = backend("classification", &[3, 4], 4, n);
+        let (x, y) = toy_batch(&b, 9);
+        let mask = vec![1.0f32; n];
+        let (loss, metric, count) = b.eval_batch(&x, &y, &mask).unwrap();
+        assert_eq!(count, n as f64);
+        assert!(loss > 0.0);
+        assert!((0.0..=count).contains(&metric));
+        let zeros = vec![0.0f32; n];
+        let zero = b.eval_batch(&x, &y, &zeros).unwrap();
+        assert_eq!(zero, (0.0, 0.0, 0.0));
+    }
+
+    #[test]
+    fn training_reduces_loss_on_learnable_data() {
+        // y = 2x + 1, exactly representable by the linreg chain
+        let n = 32;
+        let mut b = backend("regression", &[1, 1], 0, n);
+        let mut rng = Rng::seed_from(77);
+        let xs: Vec<f32> = (0..n).map(|_| rng.uniform_in(-1.0, 1.0) as f32).collect();
+        let ys: Vec<f32> = xs.iter().map(|&v| 2.0 * v + 1.0).collect();
+        let x = HostTensor::f32(vec![n, 1], xs).unwrap();
+        let y = HostTensor::f32(vec![n], ys).unwrap();
+        let mask = vec![1.0f32; n];
+        let first = b.train_step(&x, &y, &mask, 0.3).unwrap();
+        let mut last = first;
+        for _ in 0..60 {
+            last = b.train_step(&x, &y, &mask, 0.3).unwrap();
+        }
+        assert!(last < first * 0.05, "loss did not converge: {first} -> {last}");
+    }
+}

@@ -1,0 +1,364 @@
+//! PJRT artifact backend (`pjrt` cargo feature): one model × flavour,
+//! all six AOT-lowered executables compiled, parameters held resident
+//! as XLA `Literal`s.
+//!
+//! The `xla` crate's handles are `Rc`-backed (not `Send`); a
+//! `PjrtBackend` therefore lives on exactly one thread. Multi-worker
+//! execution builds one session per worker thread (see
+//! [`crate::runtime::engine`]).
+//!
+//! Hot-path design: parameters never round-trip through `HostTensor`
+//! between steps — `train_step` returns a tuple literal whose leading
+//! elements simply *become* the new parameter literals. Only the scalar
+//! selected-loss and the per-example loss vector are copied to host.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::backend::{gather_rows, Backend, SessionStats};
+use super::manifest::{Exe, Flavour, Manifest, ModelEntry};
+use crate::data::tensor::{HostTensor, TensorData};
+
+/// One model's compiled executables + resident parameters.
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    exes: HashMap<Exe, xla::PjRtLoadedExecutable>,
+    /// Sub-batch `train_step_b{bb}` variants, keyed by compiled batch
+    /// size `bb` (ascending); the gathered backward picks the smallest
+    /// `bb ≥ |selection|` (see [`Backend::train_step_selected`]).
+    gather_exes: std::collections::BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    entry: ModelEntry,
+    batch: usize,
+    params: Vec<xla::Literal>,
+    /// `Cell` so [`PjrtBackend::run`] can take `&self` while callers
+    /// hold borrows of `self.params` as executable inputs.
+    stats: std::cell::Cell<SessionStats>,
+}
+
+/// Convert a host tensor into an XLA literal.
+///
+/// Uses `create_from_shape_and_untyped_data` — a single memcpy — rather
+/// than `vec1().reshape()`, which copies twice (§Perf: 242 µs → ~60 µs
+/// for a 128×784 batch).
+pub fn to_literal(t: &HostTensor) -> Result<xla::Literal> {
+    fn as_bytes<T>(v: &[T]) -> &[u8] {
+        // SAFETY: f32/i32 are plain-old-data; the literal copies out of
+        // this view before it returns.
+        unsafe {
+            std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v))
+        }
+    }
+    let lit = match &t.data {
+        TensorData::F32(v) => {
+            if t.shape.is_empty() {
+                return Ok(xla::Literal::scalar(v[0]));
+            }
+            xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::F32,
+                &t.shape,
+                as_bytes(v),
+            )
+            .map_err(|e| anyhow::anyhow!("literal from f32 {:?}: {e:?}", t.shape))?
+        }
+        TensorData::I32(v) => {
+            if t.shape.is_empty() {
+                return Ok(xla::Literal::scalar(v[0]));
+            }
+            xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::S32,
+                &t.shape,
+                as_bytes(v),
+            )
+            .map_err(|e| anyhow::anyhow!("literal from i32 {:?}: {e:?}", t.shape))?
+        }
+    };
+    Ok(lit)
+}
+
+/// Convert an XLA literal back to a host tensor.
+pub fn from_literal(l: &xla::Literal) -> Result<HostTensor> {
+    let shape = l.array_shape().map_err(|e| anyhow::anyhow!("literal shape: {e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let ty = l.ty().map_err(|e| anyhow::anyhow!("literal dtype: {e:?}"))?;
+    match ty {
+        xla::ElementType::F32 => Ok(HostTensor {
+            shape: dims,
+            data: TensorData::F32(
+                l.to_vec().map_err(|e| anyhow::anyhow!("literal data: {e:?}"))?,
+            ),
+        }),
+        xla::ElementType::S32 => Ok(HostTensor {
+            shape: dims,
+            data: TensorData::I32(
+                l.to_vec().map_err(|e| anyhow::anyhow!("literal data: {e:?}"))?,
+            ),
+        }),
+        other => bail!("unsupported artifact dtype {other:?}"),
+    }
+}
+
+impl PjrtBackend {
+    /// Compile all six executables of `model` from `manifest`.
+    pub fn new(manifest: &Manifest, model: &str, flavour: Flavour) -> Result<PjrtBackend> {
+        let entry = manifest.model(model)?.clone();
+        let client = match xla::PjRtClient::cpu() {
+            Ok(c) => c,
+            Err(e) => bail!("create PJRT CPU client: {e:?}"),
+        };
+        let mut exes = HashMap::new();
+        let mut compile_ns = 0u64;
+        for exe in Exe::ALL {
+            let path = manifest.artifact_path(model, exe, flavour)?;
+            let t0 = Instant::now();
+            let compiled = compile_hlo(&client, &path)
+                .with_context(|| format!("compiling {model}/{}", exe.as_str()))?;
+            compile_ns += t0.elapsed().as_nanos() as u64;
+            exes.insert(exe, compiled);
+        }
+        // optional sub-batch backward variants (train_step_b{bb}:{flavour})
+        let mut gather_exes = std::collections::BTreeMap::new();
+        let suffix = format!(":{}", flavour.as_str());
+        for (key, fname) in &entry.executables {
+            let Some(stem) = key.strip_suffix(&suffix) else { continue };
+            let Some(bb) = stem.strip_prefix("train_step_b") else { continue };
+            let Ok(bb) = bb.parse::<usize>() else { continue };
+            let t0 = Instant::now();
+            let compiled = compile_hlo(&client, &manifest.dir.join(fname))
+                .with_context(|| format!("compiling {model}/{key}"))?;
+            compile_ns += t0.elapsed().as_nanos() as u64;
+            gather_exes.insert(bb, compiled);
+        }
+        Ok(PjrtBackend {
+            client,
+            exes,
+            gather_exes,
+            entry,
+            batch: manifest.batch,
+            params: vec![],
+            stats: std::cell::Cell::new(SessionStats { compile_ns, ..Default::default() }),
+        })
+    }
+
+    /// Execute one AOT executable and untuple its outputs. Takes `&self`
+    /// (stats in a `Cell`) so callers can pass inputs borrowing
+    /// `self.params` and re-assign them from the outputs afterwards.
+    fn run(&self, exe: Exe, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let t0 = Instant::now();
+        let exec = self.exes.get(&exe).expect("all exes compiled in new()");
+        let outs = run_exec(exec, exe.as_str(), inputs)?;
+        self.bump(t0);
+        Ok(outs)
+    }
+
+    fn bump(&self, t0: Instant) {
+        let mut stats = self.stats.get();
+        stats.executions += 1;
+        stats.exec_ns += t0.elapsed().as_nanos() as u64;
+        self.stats.set(stats);
+    }
+}
+
+fn run_exec(
+    exec: &xla::PjRtLoadedExecutable,
+    label: &str,
+    inputs: &[&xla::Literal],
+) -> Result<Vec<xla::Literal>> {
+    let result = exec
+        .execute::<&xla::Literal>(inputs)
+        .map_err(|e| anyhow::anyhow!("executing {label}: {e:?}"))?;
+    let tuple = result[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow::anyhow!("fetch output literal: {e:?}"))?;
+    tuple.to_tuple().map_err(|e| anyhow::anyhow!("untuple output: {e:?}"))
+}
+
+impl Backend for PjrtBackend {
+    /// Initialize parameters from `seed` (runs the `init` executable).
+    fn init(&mut self, seed: i32) -> Result<()> {
+        let seed_lit = xla::Literal::scalar(seed);
+        let outs = self.run(Exe::Init, &[&seed_lit])?;
+        if outs.len() != self.entry.n_params() {
+            bail!(
+                "init returned {} tensors, manifest declares {} params",
+                outs.len(),
+                self.entry.n_params()
+            );
+        }
+        self.params = outs;
+        Ok(())
+    }
+
+    fn fwd_loss(&mut self, x: &HostTensor, y: &HostTensor) -> Result<Vec<f32>> {
+        let xl = to_literal(x)?;
+        let yl = to_literal(y)?;
+        let mut inputs: Vec<&xla::Literal> = self.params.iter().collect();
+        inputs.push(&xl);
+        inputs.push(&yl);
+        let outs = self.run(Exe::FwdLoss, &inputs)?;
+        let loss = from_literal(&outs[0])?;
+        Ok(loss.as_f32()?.to_vec())
+    }
+
+    fn train_step(
+        &mut self,
+        x: &HostTensor,
+        y: &HostTensor,
+        mask: &[f32],
+        lr: f32,
+    ) -> Result<f32> {
+        let xl = to_literal(x)?;
+        let yl = to_literal(y)?;
+        let ml = xla::Literal::vec1(mask);
+        let lrl = xla::Literal::scalar(lr);
+        let mut inputs: Vec<&xla::Literal> = self.params.iter().collect();
+        inputs.extend([&xl, &yl, &ml, &lrl]);
+        let mut outs = self.run(Exe::TrainStep, &inputs)?;
+        let loss_lit = outs.pop().expect("train_step returns params + loss");
+        if outs.len() != self.entry.n_params() {
+            bail!("train_step returned {} params, expected {}", outs.len(), self.entry.n_params());
+        }
+        self.params = outs;
+        from_literal(&loss_lit)?.scalar_value()
+    }
+
+    /// Gathered backward on the smallest compiled sub-batch
+    /// `bb ≥ |selected|` (falling back to the masked full-batch step
+    /// when none fits). Numerically identical to [`Backend::train_step`]
+    /// with the equivalent mask — the masked mean over gathered rows
+    /// equals the masked mean over the full batch — but costs O(bb)
+    /// instead of O(n) in the backward (EXPERIMENTS.md §Perf).
+    fn train_step_selected(
+        &mut self,
+        x: &HostTensor,
+        y: &HostTensor,
+        selected: &[usize],
+        lr: f32,
+    ) -> Result<f32> {
+        let k = selected.len();
+        // smallest compiled sub-batch that fits
+        let bb = self
+            .gather_exes
+            .range(k..)
+            .next()
+            .map(|(&bb, _)| bb)
+            .filter(|&bb| bb < self.batch);
+        let Some(bb) = bb else {
+            // no useful sub-batch: masked full-batch step
+            let mut mask = vec![0.0f32; self.batch];
+            for &i in selected {
+                if i >= self.batch {
+                    bail!("selected index {i} out of range");
+                }
+                mask[i] = 1.0;
+            }
+            return self.train_step(x, y, &mask, lr);
+        };
+
+        let (gx, gy) = gather_rows(x, y, selected, bb, self.batch)?;
+        let mut mask = vec![0.0f32; bb];
+        for m in mask.iter_mut().take(k) {
+            *m = 1.0;
+        }
+
+        let xl = to_literal(&gx)?;
+        let yl = to_literal(&gy)?;
+        let ml = xla::Literal::vec1(&mask);
+        let lrl = xla::Literal::scalar(lr);
+        let mut inputs: Vec<&xla::Literal> = self.params.iter().collect();
+        inputs.extend([&xl, &yl, &ml, &lrl]);
+        let t0 = Instant::now();
+        let exec = &self.gather_exes[&bb];
+        let mut outs = run_exec(exec, &format!("train_step_b{bb}"), &inputs)?;
+        self.bump(t0);
+        let loss_lit = outs.pop().expect("train_step returns params + loss");
+        if outs.len() != self.entry.n_params() {
+            bail!("train_step_b{bb} returned {} params", outs.len());
+        }
+        self.params = outs;
+        from_literal(&loss_lit)?.scalar_value()
+    }
+
+    fn grads(
+        &mut self,
+        x: &HostTensor,
+        y: &HostTensor,
+        mask: &[f32],
+    ) -> Result<(Vec<HostTensor>, f32)> {
+        let xl = to_literal(x)?;
+        let yl = to_literal(y)?;
+        let ml = xla::Literal::vec1(mask);
+        let mut inputs: Vec<&xla::Literal> = self.params.iter().collect();
+        inputs.extend([&xl, &yl, &ml]);
+        let mut outs = self.run(Exe::Grads, &inputs)?;
+        let loss_lit = outs.pop().expect("grads returns grads + loss");
+        let grads = outs.iter().map(from_literal).collect::<Result<Vec<_>>>()?;
+        Ok((grads, from_literal(&loss_lit)?.scalar_value()?))
+    }
+
+    fn apply(&mut self, grads: &[HostTensor], lr: f32) -> Result<()> {
+        let glits = grads.iter().map(to_literal).collect::<Result<Vec<_>>>()?;
+        let lrl = xla::Literal::scalar(lr);
+        let mut inputs: Vec<&xla::Literal> = self.params.iter().collect();
+        inputs.extend(glits.iter());
+        inputs.push(&lrl);
+        let outs = self.run(Exe::Apply, &inputs)?;
+        if outs.len() != self.entry.n_params() {
+            bail!("apply returned {} params, expected {}", outs.len(), self.entry.n_params());
+        }
+        self.params = outs;
+        Ok(())
+    }
+
+    fn eval_batch(
+        &mut self,
+        x: &HostTensor,
+        y: &HostTensor,
+        mask: &[f32],
+    ) -> Result<(f64, f64, f64)> {
+        let xl = to_literal(x)?;
+        let yl = to_literal(y)?;
+        let ml = xla::Literal::vec1(mask);
+        let mut inputs: Vec<&xla::Literal> = self.params.iter().collect();
+        inputs.extend([&xl, &yl, &ml]);
+        let outs = self.run(Exe::Eval, &inputs)?;
+        let s = from_literal(&outs[0])?.scalar_value()? as f64;
+        let m = from_literal(&outs[1])?.scalar_value()? as f64;
+        let c = from_literal(&outs[2])?.scalar_value()? as f64;
+        Ok((s, m, c))
+    }
+
+    fn params_to_host(&self) -> Result<Vec<HostTensor>> {
+        self.params.iter().map(from_literal).collect()
+    }
+
+    fn load_params(&mut self, params: &[HostTensor]) -> Result<()> {
+        self.params = params.iter().map(to_literal).collect::<Result<Vec<_>>>()?;
+        Ok(())
+    }
+
+    fn n_resident_params(&self) -> usize {
+        self.params.len()
+    }
+
+    fn stats(&self) -> SessionStats {
+        self.stats.get()
+    }
+
+    fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+/// Load HLO text and compile it on `client` (text, not serialized
+/// proto, is the python→rust interchange format).
+pub fn compile_hlo(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(path)
+        .map_err(|e| anyhow::anyhow!("parse HLO text {path:?}: {e:?}"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .map_err(|e| anyhow::anyhow!("XLA compile {path:?}: {e:?}"))
+}

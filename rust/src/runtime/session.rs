@@ -1,137 +1,54 @@
-//! A single-threaded PJRT session: one model × flavour, all six
-//! executables compiled, parameters held resident as XLA `Literal`s.
+//! A single-threaded model session: input validation + dispatch onto a
+//! [`Backend`] trait object.
 //!
-//! The `xla` crate's handles are `Rc`-backed (not `Send`); a `Session`
-//! therefore lives on exactly one thread. Multi-worker execution wraps
-//! one `Session` per worker thread (see [`crate::runtime::engine`]).
+//! `Session` owns everything backend-independent — shape/dtype checks
+//! against the manifest entry, parameter-arity checks, flavour
+//! dispatch — so the coordinator, engine and trainers are written once
+//! against this type and run unchanged on the native CPU backend or
+//! the PJRT artifact backend (`pjrt` cargo feature).
 //!
-//! Hot-path design: parameters never round-trip through `HostTensor`
-//! between steps — `train_step` returns a tuple literal whose leading
-//! elements simply *become* the new parameter literals. Only the scalar
-//! selected-loss and the per-example loss vector are copied to host.
-
-use std::collections::HashMap;
-use std::path::Path;
-use std::time::Instant;
+//! Backends may hold non-`Send` handles (PJRT's are `Rc`-backed); a
+//! `Session` therefore lives on exactly one thread. Multi-worker
+//! execution wraps one `Session` per worker thread (see
+//! [`crate::runtime::engine`]).
 
 use anyhow::{bail, Context, Result};
 
-use super::manifest::{Exe, Flavour, Manifest, ModelEntry};
+use super::backend::{Backend, SessionStats};
+use super::manifest::{Flavour, Manifest, ModelEntry};
+use super::native::NativeBackend;
 use crate::data::tensor::{HostTensor, TensorData};
 
-/// Cumulative execution counters for the perf pass.
-#[derive(Clone, Copy, Debug, Default)]
-pub struct SessionStats {
-    pub executions: u64,
-    pub exec_ns: u64,
-    pub compile_ns: u64,
-}
-
-/// One model's compiled executables + resident parameters.
+/// One model's validated executor handle.
 pub struct Session {
-    client: xla::PjRtClient,
-    exes: HashMap<Exe, xla::PjRtLoadedExecutable>,
-    /// Sub-batch `train_step_b{bb}` variants, keyed by compiled batch
-    /// size `bb` (ascending); the gathered backward picks the smallest
-    /// `bb ≥ |selection|` (see [`Session::train_step_selected`]).
-    gather_exes: std::collections::BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    backend: Box<dyn Backend>,
     entry: ModelEntry,
     model_name: String,
     flavour: Flavour,
     batch: usize,
-    params: Vec<xla::Literal>,
-    stats: std::cell::Cell<SessionStats>,
-}
-
-/// Convert a host tensor into an XLA literal.
-///
-/// Uses `create_from_shape_and_untyped_data` — a single memcpy — rather
-/// than `vec1().reshape()`, which copies twice (§Perf: 242 µs → ~60 µs
-/// for a 128×784 batch).
-pub fn to_literal(t: &HostTensor) -> Result<xla::Literal> {
-    fn as_bytes<T>(v: &[T]) -> &[u8] {
-        // SAFETY: f32/i32 are plain-old-data; the literal copies out of
-        // this view before it returns.
-        unsafe {
-            std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v))
-        }
-    }
-    let lit = match &t.data {
-        TensorData::F32(v) => {
-            if t.shape.is_empty() {
-                return Ok(xla::Literal::scalar(v[0]));
-            }
-            xla::Literal::create_from_shape_and_untyped_data(
-                xla::ElementType::F32,
-                &t.shape,
-                as_bytes(v),
-            )
-            .map_err(|e| anyhow::anyhow!("literal from f32 {:?}: {e:?}", t.shape))?
-        }
-        TensorData::I32(v) => {
-            if t.shape.is_empty() {
-                return Ok(xla::Literal::scalar(v[0]));
-            }
-            xla::Literal::create_from_shape_and_untyped_data(
-                xla::ElementType::S32,
-                &t.shape,
-                as_bytes(v),
-            )
-            .map_err(|e| anyhow::anyhow!("literal from i32 {:?}: {e:?}", t.shape))?
-        }
-    };
-    Ok(lit)
-}
-
-/// Convert an XLA literal back to a host tensor.
-pub fn from_literal(l: &xla::Literal) -> Result<HostTensor> {
-    let shape = l.array_shape()?;
-    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-    match l.ty()? {
-        xla::ElementType::F32 => Ok(HostTensor { shape: dims, data: TensorData::F32(l.to_vec()?) }),
-        xla::ElementType::S32 => Ok(HostTensor { shape: dims, data: TensorData::I32(l.to_vec()?) }),
-        other => bail!("unsupported artifact dtype {other:?}"),
-    }
 }
 
 impl Session {
-    /// Compile all six executables of `model` from `manifest`.
+    /// Build the backend for `model` at `flavour`.
+    ///
+    /// `Flavour::Native` needs no artifacts (the executables are built
+    /// in); `Pallas`/`Jnp` compile the AOT HLO artifacts the manifest
+    /// names, and require the `pjrt` cargo feature.
     pub fn new(manifest: &Manifest, model: &str, flavour: Flavour) -> Result<Session> {
         let entry = manifest.model(model)?.clone();
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        let mut exes = HashMap::new();
-        let mut compile_ns = 0u64;
-        for exe in Exe::ALL {
-            let path = manifest.artifact_path(model, exe, flavour)?;
-            let t0 = Instant::now();
-            let compiled = compile_hlo(&client, &path)
-                .with_context(|| format!("compiling {model}/{}", exe.as_str()))?;
-            compile_ns += t0.elapsed().as_nanos() as u64;
-            exes.insert(exe, compiled);
-        }
-        // optional sub-batch backward variants (train_step_b{bb}:{flavour})
-        let mut gather_exes = std::collections::BTreeMap::new();
-        let suffix = format!(":{}", flavour.as_str());
-        for (key, fname) in &entry.executables {
-            let Some(stem) = key.strip_suffix(&suffix) else { continue };
-            let Some(bb) = stem.strip_prefix("train_step_b") else { continue };
-            let Ok(bb) = bb.parse::<usize>() else { continue };
-            let t0 = Instant::now();
-            let compiled = compile_hlo(&client, &manifest.dir.join(fname))
-                .with_context(|| format!("compiling {model}/{key}"))?;
-            compile_ns += t0.elapsed().as_nanos() as u64;
-            gather_exes.insert(bb, compiled);
-        }
+        let backend: Box<dyn Backend> = match flavour {
+            Flavour::Native => Box::new(
+                NativeBackend::new(model, &entry, manifest.batch)
+                    .with_context(|| format!("building native backend for {model}"))?,
+            ),
+            Flavour::Pallas | Flavour::Jnp => pjrt_backend(manifest, model, flavour)?,
+        };
         Ok(Session {
-            client,
-            exes,
-            gather_exes,
+            backend,
             entry,
             model_name: model.to_string(),
             flavour,
             batch: manifest.batch,
-            params: vec![],
-            stats: std::cell::Cell::new(SessionStats { compile_ns, ..Default::default() }),
         })
     }
 
@@ -152,60 +69,37 @@ impl Session {
     }
 
     pub fn stats(&self) -> SessionStats {
-        self.stats.get()
+        self.backend.stats()
     }
 
+    /// Human-readable execution platform of the underlying backend.
     pub fn client_platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Execute one AOT executable and untuple its outputs.
-    /// `&self` + `Cell` stats so callers can pass inputs borrowing
-    /// `self.params` and re-assign them from the outputs afterwards.
-    fn run(&self, exe: Exe, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let exec = self.exes.get(&exe).expect("all exes compiled in new()");
-        self.run_exec(exec, exe.as_str(), inputs)
-    }
-
-    fn run_exec(
-        &self,
-        exec: &xla::PjRtLoadedExecutable,
-        label: &str,
-        inputs: &[&xla::Literal],
-    ) -> Result<Vec<xla::Literal>> {
-        let t0 = Instant::now();
-        let result = exec
-            .execute::<&xla::Literal>(inputs)
-            .with_context(|| format!("executing {label}"))?;
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .context("fetch output literal")?;
-        let outs = tuple.to_tuple().context("untuple output")?;
-        let mut stats = self.stats.get();
-        stats.executions += 1;
-        stats.exec_ns += t0.elapsed().as_nanos() as u64;
-        self.stats.set(stats);
-        Ok(outs)
+        self.backend.platform_name()
     }
 
     /// Initialize parameters from `seed` (runs the `init` executable).
     pub fn init(&mut self, seed: i32) -> Result<()> {
-        let seed_lit = xla::Literal::scalar(seed);
-        let outs = self.run(Exe::Init, &[&seed_lit])?;
-        if outs.len() != self.entry.n_params() {
+        self.backend.init(seed)?;
+        if self.backend.n_resident_params() != self.entry.n_params() {
             bail!(
-                "init returned {} tensors, manifest declares {} params",
-                outs.len(),
+                "init produced {} tensors, manifest declares {} params",
+                self.backend.n_resident_params(),
                 self.entry.n_params()
             );
         }
-        self.params = outs;
         Ok(())
     }
 
     fn check_ready(&self) -> Result<()> {
-        if self.params.len() != self.entry.n_params() {
+        if self.backend.n_resident_params() != self.entry.n_params() {
             bail!("session has no parameters; call init() or load_params() first");
+        }
+        Ok(())
+    }
+
+    fn check_mask(&self, mask: &[f32]) -> Result<()> {
+        if mask.len() != self.batch {
+            bail!("mask len {} != batch {}", mask.len(), self.batch);
         }
         Ok(())
     }
@@ -230,14 +124,7 @@ impl Session {
     pub fn fwd_loss(&mut self, x: &HostTensor, y: &HostTensor) -> Result<Vec<f32>> {
         self.check_ready()?;
         self.check_batch_inputs(x, y)?;
-        let xl = to_literal(x)?;
-        let yl = to_literal(y)?;
-        let mut inputs: Vec<&xla::Literal> = self.params.iter().collect();
-        inputs.push(&xl);
-        inputs.push(&yl);
-        let outs = self.run(Exe::FwdLoss, &inputs)?;
-        let loss = from_literal(&outs[0])?;
-        Ok(loss.as_f32()?.to_vec())
+        self.backend.fwd_loss(x, y)
     }
 
     /// "One backward": masked train step; parameters update in place.
@@ -251,31 +138,13 @@ impl Session {
     ) -> Result<f32> {
         self.check_ready()?;
         self.check_batch_inputs(x, y)?;
-        if mask.len() != self.batch {
-            bail!("mask len {} != batch {}", mask.len(), self.batch);
-        }
-        let xl = to_literal(x)?;
-        let yl = to_literal(y)?;
-        let ml = xla::Literal::vec1(mask);
-        let lrl = xla::Literal::scalar(lr);
-        let mut inputs: Vec<&xla::Literal> = self.params.iter().collect();
-        inputs.extend([&xl, &yl, &ml, &lrl]);
-        let mut outs = self.run(Exe::TrainStep, &inputs)?;
-        let loss_lit = outs.pop().expect("train_step returns params + loss");
-        if outs.len() != self.entry.n_params() {
-            bail!("train_step returned {} params, expected {}", outs.len(), self.entry.n_params());
-        }
-        self.params = outs;
-        Ok(from_literal(&loss_lit)?.scalar_value()?)
+        self.check_mask(mask)?;
+        self.backend.train_step(x, y, mask, lr)
     }
 
     /// "One backward", gathered: run the backward only on the selected
-    /// rows, using the smallest compiled sub-batch `bb ≥ |selected|`
-    /// (falling back to the masked full-batch step when none fits).
-    /// Numerically identical to [`Session::train_step`] with the
-    /// equivalent mask — the masked mean over gathered rows equals the
-    /// masked mean over the full batch — but costs O(bb) instead of
-    /// O(n) in the backward (EXPERIMENTS.md §Perf).
+    /// rows — O(|selection|) instead of O(batch), numerically
+    /// equivalent to [`Session::train_step`] with the matching mask.
     pub fn train_step_selected(
         &mut self,
         x: &HostTensor,
@@ -285,78 +154,15 @@ impl Session {
     ) -> Result<f32> {
         self.check_ready()?;
         self.check_batch_inputs(x, y)?;
-        let k = selected.len();
-        if k == 0 {
+        if selected.is_empty() {
             bail!("train_step_selected: empty selection");
         }
-        // smallest compiled sub-batch that fits
-        let bb = self
-            .gather_exes
-            .range(k..)
-            .next()
-            .map(|(&bb, _)| bb)
-            .filter(|&bb| bb < self.batch);
-        let Some(bb) = bb else {
-            // no useful sub-batch: masked full-batch step
-            let mut mask = vec![0.0f32; self.batch];
-            for &i in selected {
-                if i >= self.batch {
-                    bail!("selected index {i} out of range");
-                }
-                mask[i] = 1.0;
-            }
-            return self.train_step(x, y, &mask, lr);
-        };
-
-        // gather the selected rows, zero-pad to bb
-        let stride = x.element_count() / self.batch;
-        let xv = x.as_f32()?;
-        let mut gx = vec![0.0f32; bb * stride];
-        for (row, &i) in selected.iter().enumerate() {
+        for &i in selected {
             if i >= self.batch {
                 bail!("selected index {i} out of range");
             }
-            gx[row * stride..(row + 1) * stride]
-                .copy_from_slice(&xv[i * stride..(i + 1) * stride]);
         }
-        let mut gshape = x.shape.clone();
-        gshape[0] = bb;
-        let gx = HostTensor { shape: gshape, data: TensorData::F32(gx) };
-        let gy = match &y.data {
-            TensorData::F32(v) => {
-                let mut out = vec![0.0f32; bb];
-                for (row, &i) in selected.iter().enumerate() {
-                    out[row] = v[i];
-                }
-                HostTensor { shape: vec![bb], data: TensorData::F32(out) }
-            }
-            TensorData::I32(v) => {
-                let mut out = vec![0i32; bb];
-                for (row, &i) in selected.iter().enumerate() {
-                    out[row] = v[i];
-                }
-                HostTensor { shape: vec![bb], data: TensorData::I32(out) }
-            }
-        };
-        let mut mask = vec![0.0f32; bb];
-        for m in mask.iter_mut().take(k) {
-            *m = 1.0;
-        }
-
-        let xl = to_literal(&gx)?;
-        let yl = to_literal(&gy)?;
-        let ml = xla::Literal::vec1(&mask);
-        let lrl = xla::Literal::scalar(lr);
-        let mut inputs: Vec<&xla::Literal> = self.params.iter().collect();
-        inputs.extend([&xl, &yl, &ml, &lrl]);
-        let exec = &self.gather_exes[&bb];
-        let mut outs = self.run_exec(exec, &format!("train_step_b{bb}"), &inputs)?;
-        let loss_lit = outs.pop().expect("train_step returns params + loss");
-        if outs.len() != self.entry.n_params() {
-            bail!("train_step_b{bb} returned {} params", outs.len());
-        }
-        self.params = outs;
-        Ok(from_literal(&loss_lit)?.scalar_value()?)
+        self.backend.train_step_selected(x, y, selected, lr)
     }
 
     /// Gradients for a masked shard (the data-parallel worker path).
@@ -369,15 +175,8 @@ impl Session {
     ) -> Result<(Vec<HostTensor>, f32)> {
         self.check_ready()?;
         self.check_batch_inputs(x, y)?;
-        let xl = to_literal(x)?;
-        let yl = to_literal(y)?;
-        let ml = xla::Literal::vec1(mask);
-        let mut inputs: Vec<&xla::Literal> = self.params.iter().collect();
-        inputs.extend([&xl, &yl, &ml]);
-        let mut outs = self.run(Exe::Grads, &inputs)?;
-        let loss_lit = outs.pop().expect("grads returns grads + loss");
-        let grads = outs.iter().map(from_literal).collect::<Result<Vec<_>>>()?;
-        Ok((grads, from_literal(&loss_lit)?.scalar_value()?))
+        self.check_mask(mask)?;
+        self.backend.grads(x, y, mask)
     }
 
     /// Apply externally averaged gradients (the leader path).
@@ -386,17 +185,7 @@ impl Session {
         if grads.len() != self.entry.n_params() {
             bail!("apply got {} grads, expected {}", grads.len(), self.entry.n_params());
         }
-        let glits = grads.iter().map(to_literal).collect::<Result<Vec<_>>>()?;
-        let lrl = xla::Literal::scalar(lr);
-        let mut inputs: Vec<&xla::Literal> = self.params.iter().collect();
-        inputs.extend(glits.iter());
-        inputs.push(&lrl);
-        let outs = self.run(Exe::Apply, &inputs)?;
-        if outs.len() != self.entry.n_params() {
-            bail!("apply returned {} params, expected {}", outs.len(), self.entry.n_params());
-        }
-        self.params = outs;
-        Ok(())
+        self.backend.apply(grads, lr)
     }
 
     /// Masked eval sums: `(sum_loss, sum_metric, count)`.
@@ -408,21 +197,13 @@ impl Session {
     ) -> Result<(f64, f64, f64)> {
         self.check_ready()?;
         self.check_batch_inputs(x, y)?;
-        let xl = to_literal(x)?;
-        let yl = to_literal(y)?;
-        let ml = xla::Literal::vec1(mask);
-        let mut inputs: Vec<&xla::Literal> = self.params.iter().collect();
-        inputs.extend([&xl, &yl, &ml]);
-        let outs = self.run(Exe::Eval, &inputs)?;
-        let s = from_literal(&outs[0])?.scalar_value()? as f64;
-        let m = from_literal(&outs[1])?.scalar_value()? as f64;
-        let c = from_literal(&outs[2])?.scalar_value()? as f64;
-        Ok((s, m, c))
+        self.check_mask(mask)?;
+        self.backend.eval_batch(x, y, mask)
     }
 
     /// Copy the resident parameters to host (checkpointing / broadcast).
     pub fn params_to_host(&self) -> Result<Vec<HostTensor>> {
-        self.params.iter().map(from_literal).collect()
+        self.backend.params_to_host()
     }
 
     /// Replace the resident parameters from host tensors (shape-checked
@@ -436,18 +217,96 @@ impl Session {
                 bail!("param {}: shape {:?} != manifest {:?}", spec.name, t.shape, spec.shape);
             }
         }
-        self.params = params.iter().map(to_literal).collect::<Result<Vec<_>>>()?;
-        Ok(())
+        self.backend.load_params(params)
     }
 }
 
-/// Load HLO text and compile it on `client` (see /opt/xla-example: text,
-/// not serialized proto, is the interchange format).
-pub fn compile_hlo(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
-    let proto = xla::HloModuleProto::from_text_file(path)
-        .map_err(|e| anyhow::anyhow!("parse HLO text {path:?}: {e:?}"))?;
-    let comp = xla::XlaComputation::from_proto(&proto);
-    client
-        .compile(&comp)
-        .map_err(|e| anyhow::anyhow!("XLA compile {path:?}: {e:?}"))
+#[cfg(feature = "pjrt")]
+fn pjrt_backend(manifest: &Manifest, model: &str, flavour: Flavour) -> Result<Box<dyn Backend>> {
+    Ok(Box::new(super::pjrt::PjrtBackend::new(manifest, model, flavour)?))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_backend(_manifest: &Manifest, _model: &str, flavour: Flavour) -> Result<Box<dyn Backend>> {
+    bail!(
+        "flavour {flavour} executes AOT artifacts and needs the `pjrt` cargo feature \
+         (build with --features pjrt); the artifact-free default is flavour `native`"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::TempDir;
+
+    fn native_session(model: &str) -> Session {
+        let dir = TempDir::new("session").unwrap();
+        let m = Manifest::native(dir.path());
+        Session::new(&m, model, Flavour::Native).unwrap()
+    }
+
+    #[test]
+    fn native_linreg_round_trip() {
+        let mut s = native_session("linreg");
+        assert_eq!(s.model_name(), "linreg");
+        assert_eq!(s.flavour(), Flavour::Native);
+        assert_eq!(s.client_platform(), "native-cpu");
+        let n = s.batch();
+        s.init(3).unwrap();
+        let x = HostTensor::f32(vec![n, 1], vec![0.5; n]).unwrap();
+        let y = HostTensor::f32(vec![n], vec![2.0; n]).unwrap();
+        let losses = s.fwd_loss(&x, &y).unwrap();
+        assert_eq!(losses.len(), n);
+        let mask = vec![1.0f32; n];
+        let before = s.params_to_host().unwrap();
+        let loss = s.train_step(&x, &y, &mask, 0.01).unwrap();
+        assert!(loss.is_finite());
+        let after = s.params_to_host().unwrap();
+        assert_ne!(before, after, "train_step must move parameters");
+        let n0 = s.stats().executions;
+        s.fwd_loss(&x, &y).unwrap();
+        assert_eq!(s.stats().executions, n0 + 1);
+    }
+
+    #[test]
+    fn uninitialized_session_refuses_to_run() {
+        let mut s = native_session("linreg");
+        let n = s.batch();
+        let x = HostTensor::f32(vec![n, 1], vec![0.0; n]).unwrap();
+        let y = HostTensor::f32(vec![n], vec![0.0; n]).unwrap();
+        let err = s.fwd_loss(&x, &y).unwrap_err().to_string();
+        assert!(err.contains("init"), "err: {err}");
+    }
+
+    #[test]
+    fn shape_violations_rejected_before_execution() {
+        let mut s = native_session("linreg");
+        s.init(0).unwrap();
+        let n = s.batch();
+        let good_x = HostTensor::f32(vec![n, 1], vec![0.0; n]).unwrap();
+        let good_y = HostTensor::f32(vec![n], vec![0.0; n]).unwrap();
+        let bad_x = HostTensor::f32(vec![n + 1, 1], vec![0.0; n + 1]).unwrap();
+        assert!(s.fwd_loss(&bad_x, &good_y).is_err());
+        let bad_y = HostTensor::i32(vec![n], vec![0; n]).unwrap();
+        assert!(s.fwd_loss(&good_x, &bad_y).is_err());
+        let short_mask = vec![1.0f32; n - 1];
+        assert!(s.train_step(&good_x, &good_y, &short_mask, 0.1).is_err());
+        assert!(s.apply(&[], 0.1).is_err());
+        assert!(s.train_step_selected(&good_x, &good_y, &[], 0.1).is_err());
+        assert!(s.train_step_selected(&good_x, &good_y, &[n + 5], 0.1).is_err());
+        // still usable after rejected calls
+        assert!(s.fwd_loss(&good_x, &good_y).is_ok());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn artifact_flavours_need_the_pjrt_feature() {
+        let dir = TempDir::new("session").unwrap();
+        let m = Manifest::native(dir.path());
+        let err = match Session::new(&m, "mlp", Flavour::Jnp) {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("jnp must not build without the pjrt feature"),
+        };
+        assert!(err.contains("pjrt"), "err: {err}");
+    }
 }

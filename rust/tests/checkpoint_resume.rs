@@ -6,14 +6,8 @@ use obftf::runtime::Manifest;
 use obftf::sampling::Method;
 use obftf::testkit::TempDir;
 
-fn manifest() -> Option<Manifest> {
-    let dir = obftf::artifacts_dir();
-    if dir.join("manifest.json").exists() {
-        Some(Manifest::load(&dir).expect("manifest loads"))
-    } else {
-        eprintln!("skipping: artifacts not built");
-        None
-    }
+fn manifest() -> Manifest {
+    Manifest::load_or_native(&obftf::artifacts_dir()).expect("manifest loads")
 }
 
 fn cfg() -> TrainConfig {
@@ -32,7 +26,7 @@ fn cfg() -> TrainConfig {
 
 #[test]
 fn save_then_load_restores_exact_eval() {
-    let Some(m) = manifest() else { return };
+    let m = manifest();
     let dir = TempDir::new("resume").unwrap();
     let ck = dir.file("model.ck");
 
@@ -51,7 +45,7 @@ fn save_then_load_restores_exact_eval() {
 
 #[test]
 fn training_continues_after_resume() {
-    let Some(m) = manifest() else { return };
+    let m = manifest();
     let dir = TempDir::new("resume2").unwrap();
     let ck = dir.file("model.ck");
 
@@ -70,7 +64,7 @@ fn training_continues_after_resume() {
 
 #[test]
 fn wrong_model_checkpoint_rejected() {
-    let Some(m) = manifest() else { return };
+    let m = manifest();
     let dir = TempDir::new("resume3").unwrap();
     let ck = dir.file("linreg.ck");
     let a = Trainer::with_manifest(&cfg(), &m).unwrap();
@@ -86,7 +80,7 @@ fn wrong_model_checkpoint_rejected() {
 
 #[test]
 fn checkpoint_written_per_epoch_when_configured() {
-    let Some(m) = manifest() else { return };
+    let m = manifest();
     let dir = TempDir::new("resume4").unwrap();
     let ck = dir.file("auto.ck");
     let mut c = cfg();

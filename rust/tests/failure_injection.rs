@@ -1,90 +1,105 @@
 //! Failure injection: the runtime must fail *loudly and early* on
 //! corrupted artifacts, broken manifests, and bad checkpoints — and
 //! stay usable after recoverable errors.
+//!
+//! Artifact-corruption tests need real on-disk HLO artifacts plus the
+//! `pjrt` feature; they skip otherwise. Everything else runs on the
+//! manifest's default flavour (native on a fresh checkout).
 
-use obftf::runtime::{Engine, Flavour, Manifest, Session};
+use obftf::runtime::{Engine, Manifest, Session};
 use obftf::testkit::TempDir;
 
-fn manifest() -> Option<Manifest> {
-    let dir = obftf::artifacts_dir();
-    if dir.join("manifest.json").exists() {
-        Some(Manifest::load(&dir).expect("manifest loads"))
-    } else {
-        eprintln!("skipping: artifacts not built");
-        None
+fn manifest() -> Manifest {
+    Manifest::load_or_native(&obftf::artifacts_dir()).expect("manifest loads")
+}
+
+/// Artifact-backed tests (`pjrt` feature + built artifacts only).
+#[cfg(feature = "pjrt")]
+mod artifact_corruption {
+    use super::*;
+    use obftf::runtime::Flavour;
+
+    fn artifact_manifest() -> Option<Manifest> {
+        let dir = obftf::artifacts_dir();
+        if dir.join("manifest.json").exists() {
+            Some(Manifest::load(&dir).expect("manifest loads"))
+        } else {
+            eprintln!("skipping: artifacts not built");
+            None
+        }
     }
-}
 
-/// Clone the real artifacts dir into a temp dir (symlink-free copy of
-/// just the files one model needs) so we can corrupt things safely.
-fn clone_artifacts(model: &str) -> Option<(TempDir, Manifest)> {
-    let m = manifest()?;
-    let dir = TempDir::new("corrupt").unwrap();
-    // copy the manifest and this model's artifacts, but keep ALL models
-    // in the json (validate() will fail on missing files for others, so
-    // rewrite a single-model manifest instead)
-    let entry = m.model(model).unwrap();
-    for fname in entry.executables.values() {
-        std::fs::copy(m.dir.join(fname), dir.path().join(fname)).unwrap();
+    /// Clone the real artifacts dir into a temp dir (symlink-free copy
+    /// of just the files one model needs) so we can corrupt things
+    /// safely.
+    fn clone_artifacts(model: &str) -> Option<(TempDir, Manifest)> {
+        let m = artifact_manifest()?;
+        let dir = TempDir::new("corrupt").unwrap();
+        let entry = m.model(model).unwrap();
+        for fname in entry.executables.values() {
+            std::fs::copy(m.dir.join(fname), dir.path().join(fname)).unwrap();
+        }
+        // single-model manifest json
+        let text = std::fs::read_to_string(m.dir.join("manifest.json")).unwrap();
+        let j = obftf::util::json::parse(&text).unwrap();
+        let mut out = obftf::util::json::Json::obj();
+        out.set("version", j.need("version").unwrap().clone());
+        out.set("batch", j.need("batch").unwrap().clone());
+        let mut models = obftf::util::json::Json::obj();
+        models.set(model, j.need("models").unwrap().need(model).unwrap().clone());
+        out.set("models", models);
+        std::fs::write(dir.file("manifest.json"), out.to_string_pretty()).unwrap();
+        let cloned = Manifest::load(dir.path()).unwrap();
+        Some((dir, cloned))
     }
-    // single-model manifest json
-    let text = std::fs::read_to_string(m.dir.join("manifest.json")).unwrap();
-    let j = obftf::util::json::parse(&text).unwrap();
-    let mut out = obftf::util::json::Json::obj();
-    out.set("version", j.need("version").unwrap().clone());
-    out.set("batch", j.need("batch").unwrap().clone());
-    let mut models = obftf::util::json::Json::obj();
-    models.set(model, j.need("models").unwrap().need(model).unwrap().clone());
-    out.set("models", models);
-    std::fs::write(dir.file("manifest.json"), out.to_string_pretty()).unwrap();
-    let cloned = Manifest::load(dir.path()).unwrap();
-    Some((dir, cloned))
-}
 
-#[test]
-fn corrupted_hlo_artifact_fails_compile_with_context() {
-    let Some((dir, m)) = clone_artifacts("linreg") else { return };
-    let fname = m.model("linreg").unwrap().artifact(
-        obftf::runtime::Exe::FwdLoss,
-        Flavour::Jnp,
-    ).unwrap().to_string();
-    std::fs::write(dir.file(&fname), "HloModule garbage\n%%%not hlo%%%").unwrap();
-    let err = match Session::new(&m, "linreg", Flavour::Jnp) {
-        Err(e) => format!("{e:#}"),
-        Ok(_) => panic!("corrupted artifact must not compile"),
-    };
-    assert!(err.contains("fwd_loss"), "error should name the executable: {err}");
-}
+    #[test]
+    fn corrupted_hlo_artifact_fails_compile_with_context() {
+        let Some((dir, m)) = clone_artifacts("linreg") else { return };
+        let fname = m
+            .model("linreg")
+            .unwrap()
+            .artifact(obftf::runtime::Exe::FwdLoss, Flavour::Jnp)
+            .unwrap()
+            .to_string();
+        std::fs::write(dir.file(&fname), "HloModule garbage\n%%%not hlo%%%").unwrap();
+        let err = match Session::new(&m, "linreg", Flavour::Jnp) {
+            Err(e) => format!("{e:#}"),
+            Ok(_) => panic!("corrupted artifact must not compile"),
+        };
+        assert!(err.contains("fwd_loss"), "error should name the executable: {err}");
+    }
 
-#[test]
-fn truncated_hlo_artifact_fails() {
-    let Some((dir, m)) = clone_artifacts("linreg") else { return };
-    let fname = m
-        .model("linreg")
-        .unwrap()
-        .artifact(obftf::runtime::Exe::TrainStep, Flavour::Jnp)
-        .unwrap()
-        .to_string();
-    let full = std::fs::read_to_string(dir.file(&fname)).unwrap();
-    std::fs::write(dir.file(&fname), &full[..full.len() / 3]).unwrap();
-    assert!(Session::new(&m, "linreg", Flavour::Jnp).is_err());
-}
+    #[test]
+    fn truncated_hlo_artifact_fails() {
+        let Some((dir, m)) = clone_artifacts("linreg") else { return };
+        let fname = m
+            .model("linreg")
+            .unwrap()
+            .artifact(obftf::runtime::Exe::TrainStep, Flavour::Jnp)
+            .unwrap()
+            .to_string();
+        let full = std::fs::read_to_string(dir.file(&fname)).unwrap();
+        std::fs::write(dir.file(&fname), &full[..full.len() / 3]).unwrap();
+        assert!(Session::new(&m, "linreg", Flavour::Jnp).is_err());
+    }
 
-#[test]
-fn engine_startup_fails_fast_on_bad_artifacts() {
-    let Some((dir, m)) = clone_artifacts("linreg") else { return };
-    let fname = m
-        .model("linreg")
-        .unwrap()
-        .artifact(obftf::runtime::Exe::Init, Flavour::Jnp)
-        .unwrap()
-        .to_string();
-    std::fs::write(dir.file(&fname), "not hlo at all").unwrap();
-    let err = match Engine::new(&m, "linreg", Flavour::Jnp, 2) {
-        Err(e) => format!("{e:#}"),
-        Ok(_) => panic!("engine must fail fast"),
-    };
-    assert!(err.contains("failed to start"), "{err}");
+    #[test]
+    fn engine_startup_fails_fast_on_bad_artifacts() {
+        let Some((dir, m)) = clone_artifacts("linreg") else { return };
+        let fname = m
+            .model("linreg")
+            .unwrap()
+            .artifact(obftf::runtime::Exe::Init, Flavour::Jnp)
+            .unwrap()
+            .to_string();
+        std::fs::write(dir.file(&fname), "not hlo at all").unwrap();
+        let err = match Engine::new(&m, "linreg", Flavour::Jnp, 2) {
+            Err(e) => format!("{e:#}"),
+            Ok(_) => panic!("engine must fail fast"),
+        };
+        assert!(err.contains("failed to start"), "{err}");
+    }
 }
 
 #[test]
@@ -96,6 +111,15 @@ fn manifest_with_garbage_json_rejected() {
         Ok(_) => panic!("garbage manifest must not load"),
     };
     assert!(err.contains("parse"), "{err}");
+}
+
+#[test]
+fn garbage_manifest_is_not_silently_replaced_by_native() {
+    // load_or_native falls back only when NO manifest exists; a broken
+    // one must still fail loudly
+    let dir = TempDir::new("badjson2").unwrap();
+    std::fs::write(dir.file("manifest.json"), "{ not json !!!").unwrap();
+    assert!(Manifest::load_or_native(dir.path()).is_err());
 }
 
 #[test]
@@ -136,9 +160,9 @@ fn checkpoint_dtype_tag_corruption_detected() {
 
 #[test]
 fn session_survives_a_rejected_request_sequence() {
-    let Some(m) = manifest() else { return };
+    let m = manifest();
     use obftf::data::HostTensor;
-    let mut s = Session::new(&m, "linreg", Flavour::Jnp).unwrap();
+    let mut s = Session::new(&m, "linreg", m.default_flavour()).unwrap();
     s.init(1).unwrap();
     let n = m.batch;
     let x = HostTensor::f32(vec![n, 1], vec![0.1; n]).unwrap();
@@ -152,14 +176,15 @@ fn session_survives_a_rejected_request_sequence() {
     // still healthy
     let losses = s.fwd_loss(&x, &y).unwrap();
     assert_eq!(losses.len(), n);
-    let l = s.train_step(&x, &y, &vec![1.0; n], 0.01).unwrap();
+    let mask = vec![1.0f32; n];
+    let l = s.train_step(&x, &y, &mask, 0.01).unwrap();
     assert!(l.is_finite());
 }
 
 #[test]
 fn engine_rejects_mismatched_shard_counts() {
-    let Some(m) = manifest() else { return };
-    let engine = Engine::new(&m, "linreg", Flavour::Jnp, 2).unwrap();
+    let m = manifest();
+    let engine = Engine::new(&m, "linreg", m.default_flavour(), 2).unwrap();
     engine.init_broadcast(1).unwrap();
     use obftf::data::HostTensor;
     let n = m.batch;

@@ -1,6 +1,10 @@
 //! The leader/worker data-parallel trainer must be *numerically
 //! identical* to the serial trainer: same shuffles, same selections,
-//! same weighted-averaged gradients, bit-equal parameters.
+//! same weighted-averaged gradients, bit-equal parameters (up to the
+//! float-summation reorder of weighted grad averaging).
+//!
+//! Runs against the manifest's default flavour — the synthesized
+//! native manifest on a fresh checkout, real artifacts when built.
 
 use obftf::config::TrainConfig;
 use obftf::coordinator::{ParallelTrainer, Trainer};
@@ -8,14 +12,8 @@ use obftf::data::TensorData;
 use obftf::runtime::Manifest;
 use obftf::sampling::Method;
 
-fn manifest() -> Option<Manifest> {
-    let dir = obftf::artifacts_dir();
-    if dir.join("manifest.json").exists() {
-        Some(Manifest::load(&dir).expect("manifest loads"))
-    } else {
-        eprintln!("skipping: artifacts not built");
-        None
-    }
+fn manifest() -> Manifest {
+    Manifest::load_or_native(&obftf::artifacts_dir()).expect("manifest loads")
 }
 
 fn cfg(model: &str, workers: usize) -> TrainConfig {
@@ -53,7 +51,7 @@ fn assert_params_equal(a: &[obftf::data::HostTensor], b: &[obftf::data::HostTens
 
 #[test]
 fn parallel_equals_serial_linreg() {
-    let Some(m) = manifest() else { return };
+    let m = manifest();
     let serial_cfg = cfg("linreg", 1);
     let mut serial = Trainer::with_manifest(&serial_cfg, &m).unwrap();
     serial.run_epoch().unwrap();
@@ -71,7 +69,7 @@ fn parallel_equals_serial_linreg() {
 
 #[test]
 fn parallel_equals_serial_mlp_eval() {
-    let Some(m) = manifest() else { return };
+    let m = manifest();
     let mut serial = Trainer::with_manifest(&cfg("mlp", 1), &m).unwrap();
     serial.run_epoch().unwrap();
     let se = serial.evaluate().unwrap();
@@ -95,8 +93,22 @@ fn parallel_equals_serial_mlp_eval() {
 }
 
 #[test]
+fn parallel_equals_serial_mlp_params() {
+    let m = manifest();
+    let mut serial = Trainer::with_manifest(&cfg("mlp", 1), &m).unwrap();
+    serial.run_epoch().unwrap();
+    let sp = serial.session().params_to_host().unwrap();
+
+    let mut par = ParallelTrainer::with_manifest(&cfg("mlp", 2), &m).unwrap();
+    par.run_epoch().unwrap();
+    let pp = par.params_to_host().unwrap();
+
+    assert_params_equal(&sp, &pp, 1e-4);
+}
+
+#[test]
 fn sharded_eval_counts_every_example_once() {
-    let Some(m) = manifest() else { return };
+    let m = manifest();
     // test-set size NOT divisible by batch or workers: padding must be
     // masked out in every shard
     let mut c = cfg("linreg", 3);
@@ -110,7 +122,7 @@ fn sharded_eval_counts_every_example_once() {
 
 #[test]
 fn worker_count_exceeding_batch_still_works() {
-    let Some(m) = manifest() else { return };
+    let m = manifest();
     // 128-row batches over 5 workers → uneven shards incl. padding-only
     let mut c = cfg("linreg", 5);
     c.n_train = Some(130); // second batch has only 2 real rows

@@ -7,14 +7,8 @@ use obftf::coordinator::StreamingTrainer;
 use obftf::runtime::Manifest;
 use obftf::sampling::Method;
 
-fn manifest() -> Option<Manifest> {
-    let dir = obftf::artifacts_dir();
-    if dir.join("manifest.json").exists() {
-        Some(Manifest::load(&dir).expect("manifest loads"))
-    } else {
-        eprintln!("skipping: artifacts not built");
-        None
-    }
+fn manifest() -> Manifest {
+    Manifest::load_or_native(&obftf::artifacts_dir()).expect("manifest loads")
 }
 
 fn cfg(steps: usize) -> TrainConfig {
@@ -36,7 +30,7 @@ fn cfg(steps: usize) -> TrainConfig {
 
 #[test]
 fn streaming_runs_exact_step_count() {
-    let Some(m) = manifest() else { return };
+    let m = manifest();
     let mut st = StreamingTrainer::with_manifest(&cfg(25), &m).unwrap();
     let report = st.run().unwrap();
     assert_eq!(report.steps, 25);
@@ -48,7 +42,7 @@ fn streaming_runs_exact_step_count() {
 
 #[test]
 fn backpressure_engages_when_training_is_slow() {
-    let Some(m) = manifest() else { return };
+    let m = manifest();
     let mut st = StreamingTrainer::with_manifest(&cfg(20), &m).unwrap();
     st.run().unwrap();
     // the linreg step is fast but still slower than synthetic generation;
@@ -61,7 +55,7 @@ fn backpressure_engages_when_training_is_slow() {
 
 #[test]
 fn drift_changes_the_loss_trajectory() {
-    let Some(m) = manifest() else { return };
+    let m = manifest();
     let run = |drift: f32| {
         let mut c = cfg(30);
         c.drift = drift;
@@ -75,7 +69,7 @@ fn drift_changes_the_loss_trajectory() {
 
 #[test]
 fn status_service_reports_live_state() {
-    let Some(m) = manifest() else { return };
+    let m = manifest();
     let board = StatusBoard::new();
     let server = serve(board.clone(), "127.0.0.1:0").unwrap();
     let addr = server.addr.to_string();
@@ -101,7 +95,7 @@ fn status_service_reports_live_state() {
 
 #[test]
 fn streaming_requires_positive_steps() {
-    let Some(m) = manifest() else { return };
+    let m = manifest();
     let mut c = cfg(0);
     c.epochs = 1; // valid config, but streaming ctor must refuse
     assert!(StreamingTrainer::with_manifest(&c, &m).is_err());

@@ -1,0 +1,251 @@
+//! Vendored, dependency-free subset of the `anyhow` API.
+//!
+//! The hermetic build ships no crates.io dependencies (CI and the tier-1
+//! verify must pass on an offline, fresh checkout), so this in-tree
+//! package provides the slice of `anyhow` the workspace actually uses:
+//!
+//! * [`Error`] — a context-chained, boxed error value;
+//! * [`Result`] — `Result<T, Error>` alias with a default type param;
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`;
+//! * [`anyhow!`], [`bail!`], [`ensure!`] macros.
+//!
+//! Formatting matches upstream where it matters to callers: `{}` prints
+//! the outermost message only, `{:#}` prints the whole context chain
+//! separated by `": "`, and `{:?}` prints the message plus a
+//! `Caused by:` list.
+
+use std::fmt;
+
+/// A context-chained error value.
+///
+/// Deliberately does **not** implement `std::error::Error`: that keeps
+/// the blanket `From<E: std::error::Error>` conversion below coherent,
+/// exactly as in upstream `anyhow`.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+/// `anyhow::Result<T>`: `Result` with [`Error`] as the default error.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: context.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// The context chain, outermost message first.
+    pub fn chain(&self) -> Chain<'_> {
+        Chain { next: Some(self) }
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        let mut cur = self;
+        while let Some(next) = cur.source.as_deref() {
+            cur = next;
+        }
+        &cur.msg
+    }
+}
+
+/// Iterator over an [`Error`]'s context chain (see [`Error::chain`]).
+pub struct Chain<'a> {
+    next: Option<&'a Error>,
+}
+
+impl<'a> Iterator for Chain<'a> {
+    type Item = &'a str;
+
+    fn next(&mut self) -> Option<&'a str> {
+        let cur = self.next?;
+        self.next = cur.source.as_deref();
+        Some(&cur.msg)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if f.alternate() {
+            let mut cur = self.source.as_deref();
+            while let Some(e) = cur {
+                write!(f, ": {}", e.msg)?;
+                cur = e.source.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if self.source.is_some() {
+            write!(f, "\n\nCaused by:")?;
+            let mut cur = self.source.as_deref();
+            while let Some(e) = cur {
+                write!(f, "\n    {}", e.msg)?;
+                cur = e.source.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        fn sources(e: &dyn std::error::Error) -> Option<Box<Error>> {
+            e.source().map(|s| Box::new(Error { msg: s.to_string(), source: sources(s) }))
+        }
+        Error { msg: e.to_string(), source: sources(&e) }
+    }
+}
+
+/// `.context(..)` / `.with_context(..)` on fallible values.
+pub trait Context<T, E> {
+    /// Wrap the error value with additional context.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+
+    /// Wrap the error value with lazily evaluated context.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless `$cond` holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn display_shows_outermost_only() {
+        let e: Error = Error::from(io_err()).context("reading config");
+        assert_eq!(e.to_string(), "reading config");
+    }
+
+    #[test]
+    fn alternate_display_shows_chain() {
+        let e: Error = Error::from(io_err()).context("reading config");
+        assert_eq!(format!("{e:#}"), "reading config: gone");
+    }
+
+    #[test]
+    fn debug_lists_causes() {
+        let e: Error = Error::from(io_err()).context("outer");
+        let d = format!("{e:?}");
+        assert!(d.starts_with("outer"));
+        assert!(d.contains("Caused by:"));
+        assert!(d.contains("gone"));
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("ctx").unwrap_err();
+        assert_eq!(e.to_string(), "ctx");
+
+        let o: Option<u8> = None;
+        let e = o.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(e.to_string(), "missing 7");
+
+        let ok: Option<u8> = Some(3);
+        assert_eq!(ok.context("unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<u32> {
+            let n: u32 = "12".parse()?;
+            Ok(n)
+        }
+        assert_eq!(inner().unwrap(), 12);
+
+        fn failing() -> Result<u32> {
+            let n: u32 = "nope".parse()?;
+            Ok(n)
+        }
+        assert!(failing().is_err());
+    }
+
+    #[test]
+    fn macros_format_and_bail() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative input {x}");
+            if x > 100 {
+                bail!("too big: {}", x);
+            }
+            Ok(x)
+        }
+        assert_eq!(f(4).unwrap(), 4);
+        assert_eq!(f(-1).unwrap_err().to_string(), "negative input -1");
+        assert_eq!(f(101).unwrap_err().to_string(), "too big: 101");
+        let e = anyhow!("plain {}", "message");
+        assert_eq!(e.to_string(), "plain message");
+    }
+
+    #[test]
+    fn chain_and_root_cause() {
+        let e = Error::msg("root").context("mid").context("top");
+        let parts: Vec<&str> = e.chain().collect();
+        assert_eq!(parts, vec!["top", "mid", "root"]);
+        assert_eq!(e.root_cause(), "root");
+    }
+}

@@ -1,0 +1,211 @@
+//! API-compatible stub for the PJRT `xla` crate.
+//!
+//! The real crate binds the PJRT C API (libxla_extension); that shared
+//! library is not part of the hermetic dependency set, so this stub
+//! keeps the `pjrt` cargo feature *compiling* everywhere. Every entry
+//! point that would touch PJRT returns [`XlaError::Unavailable`] at
+//! runtime with instructions to vendor the real crate; the type and
+//! method signatures mirror the subset the `obftf` runtime uses.
+//!
+//! Replace this package (same path, `rust/vendor/xla`) with the real
+//! bindings to light up the `pallas` / `jnp` artifact flavours.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error: always "PJRT unavailable".
+pub enum XlaError {
+    /// The operation needs the real PJRT runtime.
+    Unavailable(&'static str),
+}
+
+impl fmt::Debug for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            XlaError::Unavailable(op) => write!(
+                f,
+                "PJRT unavailable ({op}): the in-tree `xla` stub has no backend; \
+                 vendor the real xla crate at rust/vendor/xla to run pallas/jnp artifacts"
+            ),
+        }
+    }
+}
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+fn unavailable<T>(op: &'static str) -> Result<T> {
+    Err(XlaError::Unavailable(op))
+}
+
+/// Element types the obftf runtime marshals.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S32,
+    S64,
+    F32,
+    F64,
+}
+
+/// Plain-old-data element types storable in a [`Literal`].
+pub trait NativeType: Copy {
+    const TY: ElementType;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+}
+
+/// Host-side tensor value (stub: carries no data).
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn scalar<T: NativeType>(_v: T) -> Literal {
+        Literal { _private: () }
+    }
+
+    pub fn vec1<T: NativeType>(_v: &[T]) -> Literal {
+        Literal { _private: () }
+    }
+
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[usize],
+        _data: &[u8],
+    ) -> Result<Literal> {
+        unavailable("Literal::create_from_shape_and_untyped_data")
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        unavailable("Literal::array_shape")
+    }
+
+    pub fn ty(&self) -> Result<ElementType> {
+        unavailable("Literal::ty")
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+}
+
+/// Array shape (dims in elements).
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// An XLA computation built from a proto (stub).
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// PJRT client handle (stub: construction always fails).
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+/// Compiled executable handle (stub).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// Device buffer handle (stub).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().err().expect("stub must fail");
+        let msg = format!("{err:?}");
+        assert!(msg.contains("PJRT unavailable"));
+        assert!(msg.contains("vendor the real xla crate"));
+    }
+
+    #[test]
+    fn literal_constructors_do_not_panic() {
+        let _ = Literal::scalar(1.0f32);
+        let _ = Literal::scalar(1i32);
+        let _ = Literal::vec1(&[1.0f32, 2.0]);
+        assert!(Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[2],
+            &[0; 8]
+        )
+        .is_err());
+    }
+}
