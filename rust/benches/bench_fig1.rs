@@ -42,6 +42,7 @@ fn main() {
             i += 1;
         });
     }
-    println!("{}", bench.table("fig1: linreg end-to-end step (fwd + select + bwd)"));
-    bench.write_json_env().unwrap();
+    bench
+        .finish("fig1: linreg end-to-end step (fwd + select + bwd)", "BENCH_fig1.json")
+        .unwrap();
 }

@@ -40,6 +40,5 @@ fn main() {
             );
         }
     }
-    println!("{}", bench.table("fig2: mlp end-to-end step"));
-    bench.write_json_env().unwrap();
+    bench.finish("fig2: mlp end-to-end step", "BENCH_fig2.json").unwrap();
 }

@@ -2,12 +2,15 @@
 //!
 //! With AOT artifacts built this compares the pallas flavour
 //! (interpret-mode L1 kernels) against jnp (XLA-native fusion); on a
-//! fresh checkout it measures the pure-Rust native backend. On a real
-//! TPU the pallas path would use the MXU directly; on this CPU
-//! substrate the gap quantifies the cost of interpret-mode fidelity
-//! (EXPERIMENTS.md §Perf).
+//! fresh checkout it measures the pure-Rust native backend (blocked
+//! kernels at the `OBFTF_NATIVE_THREADS`/`OBFTF_NATIVE_KERNELS`
+//! configuration). On a real TPU the pallas path would use the MXU
+//! directly; on this CPU substrate the gap quantifies the cost of
+//! interpret-mode fidelity (EXPERIMENTS.md §Perf). Dense-chain cases
+//! report GFLOP/s and rows/s alongside latency.
 
 use obftf::data::{HostTensor, Rng};
+use obftf::runtime::kernels::{dense_fwd_flops, dense_train_flops};
 use obftf::runtime::{Manifest, Session};
 use obftf::util::benchkit::{black_box, Bench};
 
@@ -41,6 +44,11 @@ fn main() {
                 .unwrap()
         };
         let mask: Vec<f32> = (0..n).map(|i| if i % 4 == 0 { 1.0 } else { 0.0 }).collect();
+        // conv models have no dense-chain FLOP model; report latency only
+        let (fwd_flops, train_flops) = match entry.dense_dims() {
+            Some(dims) => (dense_fwd_flops(&dims, n), dense_train_flops(&dims, n)),
+            None => (0.0, 0.0),
+        };
 
         for flavour in entry.flavours() {
             let mut s = match Session::new(&manifest, model, flavour) {
@@ -52,14 +60,25 @@ fn main() {
                 }
             };
             s.init(1).unwrap();
-            bench.run(&format!("fwd_loss/{model}/{}", flavour.as_str()), || {
-                black_box(s.fwd_loss(&x, &y).unwrap());
-            });
-            bench.run(&format!("train_step/{model}/{}", flavour.as_str()), || {
-                black_box(s.train_step(&x, &y, &mask, 0.01).unwrap());
-            });
+            bench.run_throughput(
+                &format!("fwd_loss/{model}/{}", flavour.as_str()),
+                fwd_flops,
+                n as f64,
+                || {
+                    black_box(s.fwd_loss(&x, &y).unwrap());
+                },
+            );
+            bench.run_throughput(
+                &format!("train_step/{model}/{}", flavour.as_str()),
+                train_flops,
+                n as f64,
+                || {
+                    black_box(s.train_step(&x, &y, &mask, 0.01).unwrap());
+                },
+            );
         }
     }
-    println!("{}", bench.table("execution flavour: native vs pallas vs jnp"));
-    bench.write_json_env().unwrap();
+    bench
+        .finish("execution flavour: native vs pallas vs jnp", "BENCH_kernel_flavour.json")
+        .unwrap();
 }

@@ -1,14 +1,17 @@
 //! Runtime-layer micro-benches: the plumbing between the coordinator
 //! and the execution backend — single-exec latency, the engine's
 //! channel round-trip, prefetcher throughput, and checkpoint
-//! serialization. These locate L3 overhead that isn't backend compute.
-//! (Host↔literal conversion is additionally measured when the `pjrt`
-//! feature is on.)
+//! serialization — plus the native kernel-subsystem comparison rows
+//! (naive PR-1 loops vs blocked kernels, single- and multi-threaded)
+//! that seed the repo-root `BENCH_native_kernels.json` perf
+//! trajectory. (Host↔literal conversion is additionally measured when
+//! the `pjrt` feature is on.)
 
 use obftf::checkpoint::Checkpoint;
 use obftf::data::stream::{Prefetcher, ResamplingStream};
 use obftf::data::HostTensor;
-use obftf::runtime::{Engine, Manifest, Session};
+use obftf::runtime::kernels::{dense_fwd_flops, dense_train_flops};
+use obftf::runtime::{Backend, Engine, KernelConfig, Manifest, NativeBackend, Session};
 use obftf::testkit::TempDir;
 use obftf::util::benchkit::{black_box, Bench};
 
@@ -17,6 +20,58 @@ fn main() {
     let flavour = manifest.default_flavour();
     let mut bench = Bench::new();
     let n = manifest.batch;
+
+    // native kernel throughput: blocked/threaded kernels vs the naive
+    // loops they replaced, at the paper's mlp × batch-128 workload
+    if let Some((entry, dims)) = manifest
+        .model("mlp")
+        .ok()
+        .and_then(|e| e.dense_dims().map(|d| (e, d)))
+    {
+        let mut rng = obftf::data::Rng::seed_from(17);
+        let x = HostTensor::f32(
+            vec![n, dims[0]],
+            (0..n * dims[0]).map(|_| rng.normal() as f32 * 0.3).collect(),
+        )
+        .unwrap();
+        let classes = *dims.last().unwrap();
+        let y = HostTensor::i32(
+            vec![n],
+            (0..n).map(|_| rng.below(classes) as i32).collect(),
+        )
+        .unwrap();
+        let mask = vec![1.0f32; n];
+        let fwd_flops = dense_fwd_flops(&dims, n);
+        let train_flops = dense_train_flops(&dims, n);
+        let threads = KernelConfig::from_env().threads;
+        let mut cases = vec![
+            ("naive".to_string(), KernelConfig::reference()),
+            ("blocked-t1".to_string(), KernelConfig::blocked(1)),
+        ];
+        if threads > 1 {
+            cases.push((format!("blocked-t{threads}"), KernelConfig::blocked(threads)));
+        }
+        for (tag, kcfg) in cases {
+            let mut b = NativeBackend::with_kernel_config("mlp", entry, n, kcfg).unwrap();
+            b.init(1).unwrap();
+            bench.run_throughput(
+                &format!("native/mlp/fwd_loss/{tag}"),
+                fwd_flops,
+                n as f64,
+                || {
+                    black_box(b.fwd_loss(&x, &y).unwrap());
+                },
+            );
+            bench.run_throughput(
+                &format!("native/mlp/train_step/{tag}"),
+                train_flops,
+                n as f64,
+                || {
+                    black_box(b.train_step(&x, &y, &mask, 0.01).unwrap());
+                },
+            );
+        }
+    }
 
     // host tensor -> literal -> host tensor conversion cost (784-wide
     // batch), PJRT builds only
@@ -94,6 +149,7 @@ fn main() {
         black_box(Checkpoint::load(&path).unwrap());
     });
 
-    println!("{}", bench.table("runtime plumbing"));
-    bench.write_json_env().unwrap();
+    bench
+        .finish("runtime: native kernels + plumbing", "BENCH_native_kernels.json")
+        .unwrap();
 }

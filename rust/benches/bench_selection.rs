@@ -32,6 +32,5 @@ fn main() {
             }
         }
     }
-    println!("{}", bench.table("selection policies"));
-    bench.write_json_env().unwrap();
+    bench.finish("selection policies", "BENCH_selection.json").unwrap();
 }

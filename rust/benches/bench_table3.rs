@@ -78,6 +78,7 @@ fn main() {
         });
     }
 
-    println!("{}", bench.table("table3: cnn / cnn_lite end-to-end step"));
-    bench.write_json_env().unwrap();
+    bench
+        .finish("table3: cnn / cnn_lite end-to-end step", "BENCH_table3.json")
+        .unwrap();
 }

@@ -18,11 +18,20 @@ use anyhow::{bail, Result};
 use crate::data::tensor::{HostTensor, TensorData};
 
 /// Cumulative execution counters for the perf pass.
+///
+/// `exec_ns` is wall time across all executable calls; `forward_ns` /
+/// `backward_ns` attribute the kernel time inside those calls to the
+/// step's two phases (forward = batched loss/eval passes, backward =
+/// gradient + update math), so benches can attribute cost to the step
+/// rather than to session construction (`compile_ns`). Backends that
+/// cannot split phases may leave the phase counters at zero.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct SessionStats {
     pub executions: u64,
     pub exec_ns: u64,
     pub compile_ns: u64,
+    pub forward_ns: u64,
+    pub backward_ns: u64,
 }
 
 /// One model's executor: resident parameters + the six executables.

@@ -1,0 +1,341 @@
+//! The native backend's kernel subsystem: cache-blocked, register-tiled
+//! f32 dense kernels with a naive reference oracle.
+//!
+//! Three kernels cover the whole dense-chain training step:
+//!
+//! * [`matmul_bias_act`] — `out = act(h · W + b)` (forward);
+//! * [`grad_weights`]    — `dW = hᵀ · dz`, `db = Σᵢ dz` (backward,
+//!   weight gradients);
+//! * [`grad_input`]      — `dh = relu_gate(h) ⊙ (dz · Wᵀ)` (backward,
+//!   input gradients).
+//!
+//! Two implementations sit behind [`KernelConfig`]:
+//!
+//! * [`gemm`] — the blocked path: weights packed into [`NR`]-wide
+//!   column panels (contiguous streaming), [`MR`]×[`NR`] register
+//!   tiles, fused bias + ReLU epilogues, and batch-row sharding across
+//!   a scoped thread pool ([`pool`]);
+//! * [`reference`] — the naive row-major triple loops the blocked path
+//!   is property-tested against (`tests/kernel_parity.rs`).
+//!
+//! **Determinism contract.** Every per-element reduction runs in a
+//! fixed index order that does not depend on the thread count or on how
+//! rows are grouped into register tiles: the forward and `grad_input`
+//! kernels are sharded over batch rows (each row's result is computed
+//! independently), and `grad_weights` is sharded over `din` so each
+//! `dW[k][o]` accumulates batch rows `0..n` sequentially on exactly one
+//! thread. Masked-out rows contribute exact zeros to every reduction,
+//! so the gathered sub-batch step stays bit-identical to the masked
+//! full-batch step — the invariant `NativeBackend::train_step_selected`
+//! documents — at any thread count.
+//!
+//! Environment knobs (read once per backend construction):
+//!
+//! * `OBFTF_NATIVE_THREADS` — worker threads for the blocked path
+//!   (default: available parallelism; `1` disables threading);
+//! * `OBFTF_NATIVE_KERNELS` — `blocked` (default) or `reference`.
+
+#![allow(clippy::too_many_arguments)] // kernels take flat slices + dims
+
+pub mod gemm;
+pub mod pool;
+pub mod reference;
+
+/// Register-tile rows (batch dimension): each micro-kernel invocation
+/// computes `MR` output rows so a packed panel line is reused `MR`
+/// times per load.
+pub const MR: usize = 4;
+
+/// Register-tile columns (output dimension): the SIMD-friendly lane
+/// width. One panel line is `NR` contiguous f32s (a 64-byte cache
+/// line), so the inner loops vectorize without gather loads.
+pub const NR: usize = 16;
+
+/// Below this many scalar multiply-adds a kernel call runs
+/// single-threaded: spawning scoped threads costs more than the work.
+pub const PAR_THRESHOLD_FLOPS: usize = 1 << 18;
+
+/// Which kernel implementation a backend dispatches onto.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelFlavour {
+    /// Blocked/packed register-tiled kernels (the default).
+    Blocked,
+    /// Naive row-major loops — the property-test oracle, kept
+    /// selectable so benches can measure the speedup.
+    Reference,
+}
+
+/// Resolved kernel configuration for one backend instance.
+#[derive(Clone, Copy, Debug)]
+pub struct KernelConfig {
+    pub flavour: KernelFlavour,
+    /// Worker threads for the blocked path (`>= 1`).
+    pub threads: usize,
+}
+
+impl KernelConfig {
+    /// Resolve from the environment: `OBFTF_NATIVE_KERNELS` /
+    /// `OBFTF_NATIVE_THREADS`, defaulting to blocked kernels on all
+    /// available cores.
+    pub fn from_env() -> KernelConfig {
+        let flavour = match std::env::var("OBFTF_NATIVE_KERNELS").as_deref() {
+            Ok("reference") | Ok("naive") => KernelFlavour::Reference,
+            _ => KernelFlavour::Blocked,
+        };
+        let threads = std::env::var("OBFTF_NATIVE_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&t| t > 0)
+            .unwrap_or_else(pool::available_threads);
+        KernelConfig { flavour, threads }
+    }
+
+    /// Single-threaded blocked kernels (deterministic default for
+    /// tests).
+    pub fn blocked(threads: usize) -> KernelConfig {
+        KernelConfig { flavour: KernelFlavour::Blocked, threads: threads.max(1) }
+    }
+
+    /// The naive oracle (always single-threaded).
+    pub fn reference() -> KernelConfig {
+        KernelConfig { flavour: KernelFlavour::Reference, threads: 1 }
+    }
+
+    /// Threads to use for a kernel call of `flops` multiply-adds.
+    fn threads_for(&self, flops: usize) -> usize {
+        if flops < PAR_THRESHOLD_FLOPS {
+            1
+        } else {
+            self.threads
+        }
+    }
+}
+
+/// A free-list of f32 scratch buffers so the per-step working set
+/// (activations, head gradients, packed panels) is allocated once and
+/// recycled across training steps instead of `Vec`-allocated fresh on
+/// every `forward`/`compute_grads` call.
+#[derive(Default)]
+pub struct Arena {
+    free: Vec<Vec<f32>>,
+}
+
+impl Arena {
+    pub fn new() -> Arena {
+        Arena::default()
+    }
+
+    /// Check out a zeroed buffer of exactly `len` elements, reusing the
+    /// best-fitting recycled buffer when one exists.
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        let mut best: Option<usize> = None;
+        for (i, buf) in self.free.iter().enumerate() {
+            let fits = buf.capacity() >= len;
+            best = match best {
+                None => Some(i),
+                Some(j) => {
+                    let jfits = self.free[j].capacity() >= len;
+                    // prefer the smallest buffer that fits, else the
+                    // largest available (it will grow the least)
+                    let better = if fits && jfits {
+                        buf.capacity() < self.free[j].capacity()
+                    } else if fits != jfits {
+                        fits
+                    } else {
+                        buf.capacity() > self.free[j].capacity()
+                    };
+                    Some(if better { i } else { j })
+                }
+            };
+        }
+        let mut buf = match best {
+            Some(i) => self.free.swap_remove(i),
+            None => Vec::new(),
+        };
+        buf.clear();
+        buf.resize(len, 0.0);
+        buf
+    }
+
+    /// Return a buffer to the free list for reuse.
+    pub fn put(&mut self, buf: Vec<f32>) {
+        if buf.capacity() > 0 {
+            self.free.push(buf);
+        }
+    }
+
+    /// Buffers currently waiting for reuse.
+    pub fn idle_buffers(&self) -> usize {
+        self.free.len()
+    }
+}
+
+/// `out = act(h · W + b)`: `h` is `n×din` row-major, `w` is `din×dout`,
+/// `b` is `dout`, `out` is `n×dout`. `relu` selects the hidden-layer
+/// epilogue (identity on the head).
+pub fn matmul_bias_act(
+    cfg: &KernelConfig,
+    arena: &mut Arena,
+    h: &[f32],
+    w: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    n: usize,
+    din: usize,
+    dout: usize,
+    relu: bool,
+) {
+    debug_assert_eq!(h.len(), n * din);
+    debug_assert_eq!(w.len(), din * dout);
+    debug_assert_eq!(b.len(), dout);
+    debug_assert_eq!(out.len(), n * dout);
+    match cfg.flavour {
+        KernelFlavour::Reference => reference::matmul_bias_act(h, w, b, out, n, din, dout, relu),
+        KernelFlavour::Blocked => {
+            let threads = cfg.threads_for(n * din * dout);
+            gemm::matmul_bias_act(arena, h, w, b, out, n, din, dout, relu, threads);
+        }
+    }
+}
+
+/// `dw = hᵀ · dz` and `db = Σᵢ dz[i]`: `h` is `n×din`, `dz` is
+/// `n×dout`, `dw` is `din×dout`, `db` is `dout`. Rows accumulate in
+/// ascending batch order for every output element.
+pub fn grad_weights(
+    cfg: &KernelConfig,
+    arena: &mut Arena,
+    h: &[f32],
+    dz: &[f32],
+    dw: &mut [f32],
+    db: &mut [f32],
+    n: usize,
+    din: usize,
+    dout: usize,
+) {
+    debug_assert_eq!(h.len(), n * din);
+    debug_assert_eq!(dz.len(), n * dout);
+    debug_assert_eq!(dw.len(), din * dout);
+    debug_assert_eq!(db.len(), dout);
+    match cfg.flavour {
+        KernelFlavour::Reference => reference::grad_weights(h, dz, dw, db, n, din, dout),
+        KernelFlavour::Blocked => {
+            let threads = cfg.threads_for(n * din * dout);
+            gemm::grad_weights(arena, h, dz, dw, db, n, din, dout, threads);
+        }
+    }
+}
+
+/// `dh[i][k] = (h[i][k] > 0) · Σₒ dz[i][o] · w[k][o]` — the ReLU-gated
+/// input gradient `dz · Wᵀ`. `h` here is the *activation* of the layer
+/// whose input gradient is being computed (acts > 0 ⟺ pre-act > 0).
+pub fn grad_input(
+    cfg: &KernelConfig,
+    arena: &mut Arena,
+    dz: &[f32],
+    w: &[f32],
+    h: &[f32],
+    dh: &mut [f32],
+    n: usize,
+    din: usize,
+    dout: usize,
+) {
+    debug_assert_eq!(dz.len(), n * dout);
+    debug_assert_eq!(w.len(), din * dout);
+    debug_assert_eq!(h.len(), n * din);
+    debug_assert_eq!(dh.len(), n * din);
+    match cfg.flavour {
+        KernelFlavour::Reference => reference::grad_input(dz, w, h, dh, n, din, dout),
+        KernelFlavour::Blocked => {
+            let threads = cfg.threads_for(n * din * dout);
+            gemm::grad_input(arena, dz, w, h, dh, n, din, dout, threads);
+        }
+    }
+}
+
+/// Multiply-add FLOPs (counting mul and add separately) of one forward
+/// pass over a dense chain with layer widths `dims`, batch `n`.
+pub fn dense_fwd_flops(dims: &[usize], n: usize) -> f64 {
+    dims.windows(2).map(|p| 2.0 * n as f64 * p[0] as f64 * p[1] as f64).sum()
+}
+
+/// FLOPs of one full train step (forward + dW + dh backprop) over a
+/// dense chain: the backward roughly doubles the forward, minus the
+/// first layer's `dh` which is never materialized.
+pub fn dense_train_flops(dims: &[usize], n: usize) -> f64 {
+    let fwd = dense_fwd_flops(dims, n);
+    let dh: f64 = dims
+        .windows(2)
+        .skip(1)
+        .map(|p| 2.0 * n as f64 * p[0] as f64 * p[1] as f64)
+        .sum();
+    2.0 * fwd + dh
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arena_recycles_buffers() {
+        let mut a = Arena::new();
+        let b1 = a.take(100);
+        assert_eq!(b1.len(), 100);
+        assert!(b1.iter().all(|&v| v == 0.0));
+        let cap = b1.capacity();
+        a.put(b1);
+        assert_eq!(a.idle_buffers(), 1);
+        // a smaller request reuses the same allocation
+        let b2 = a.take(40);
+        assert_eq!(b2.len(), 40);
+        assert_eq!(b2.capacity(), cap);
+        assert_eq!(a.idle_buffers(), 0);
+        a.put(b2);
+        // zeroed even after being dirtied
+        let mut b3 = a.take(40);
+        b3.iter_mut().for_each(|v| *v = 7.0);
+        a.put(b3);
+        let b4 = a.take(40);
+        assert!(b4.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn arena_prefers_best_fit() {
+        let mut a = Arena::new();
+        let small = a.take(10);
+        let big = a.take(1000);
+        let (smallcap, bigcap) = (small.capacity(), big.capacity());
+        a.put(big);
+        a.put(small);
+        let got = a.take(8);
+        assert_eq!(got.capacity(), smallcap, "smallest fitting buffer wins");
+        a.put(got);
+        let got = a.take(500);
+        assert_eq!(got.capacity(), bigcap);
+    }
+
+    #[test]
+    fn config_resolves_sane_defaults() {
+        let cfg = KernelConfig::blocked(0);
+        assert_eq!(cfg.threads, 1);
+        assert_eq!(cfg.flavour, KernelFlavour::Blocked);
+        let r = KernelConfig::reference();
+        assert_eq!(r.threads, 1);
+        // tiny calls never thread
+        let cfg = KernelConfig::blocked(8);
+        assert_eq!(cfg.threads_for(100), 1);
+        assert_eq!(cfg.threads_for(PAR_THRESHOLD_FLOPS), 8);
+        let env = KernelConfig::from_env();
+        assert!(env.threads >= 1);
+    }
+
+    #[test]
+    fn flop_model_counts_mlp() {
+        // 784-256-256-10 at n=128: fwd = 2n(784·256 + 256·256 + 256·10)
+        let dims = [784, 256, 256, 10];
+        let fwd = dense_fwd_flops(&dims, 128);
+        assert_eq!(fwd, 2.0 * 128.0 * (784.0 * 256.0 + 256.0 * 256.0 + 256.0 * 10.0));
+        let train = dense_train_flops(&dims, 128);
+        let dh = 2.0 * 128.0 * (256.0 * 256.0 + 256.0 * 10.0);
+        assert_eq!(train, 2.0 * fwd + dh);
+    }
+}

@@ -1,0 +1,100 @@
+//! Scoped row-sharding for the blocked kernels.
+//!
+//! [`par_rows`] splits a row-major output buffer into contiguous,
+//! disjoint row ranges and runs one closure per range on
+//! `std::thread::scope` workers. Shard boundaries never change what is
+//! computed — every kernel built on this either computes rows
+//! independently (forward, `grad_input`) or gives each thread a
+//! disjoint slice of `dW` rows whose batch reduction order is fixed
+//! (`grad_weights`) — so results are bit-identical at any thread count.
+//!
+//! Workers are spawned per call (threads−1 spawns per parallel region;
+//! the last shard runs on the caller), a deliberate trade: tens of µs
+//! per threaded kernel call against the ms-scale calls that clear
+//! [`super::PAR_THRESHOLD_FLOPS`]. A persistent pool is the upgrade
+//! path if profile data ever shows the spawn tax matters.
+
+/// Detected hardware parallelism (the `OBFTF_NATIVE_THREADS` default).
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f(row_start, row_end, chunk)` over `threads` contiguous shards
+/// of `out` (`rows` rows of `row_elems` f32s each). The chunk passed to
+/// `f` is `out[row_start * row_elems .. row_end * row_elems]`; row
+/// indices are global so closures can index shared inputs. With one
+/// shard (or one row) `f` runs on the calling thread.
+pub fn par_rows<F>(out: &mut [f32], rows: usize, row_elems: usize, threads: usize, f: F)
+where
+    F: Fn(usize, usize, &mut [f32]) + Sync,
+{
+    debug_assert_eq!(out.len(), rows * row_elems);
+    let t = threads.clamp(1, rows.max(1));
+    if t <= 1 {
+        f(0, rows, out);
+        return;
+    }
+    std::thread::scope(|scope| {
+        let f = &f;
+        let mut rest = out;
+        let mut start = 0usize;
+        for ti in 0..t {
+            // even split: remaining rows over remaining shards
+            let take = (rows - start).div_ceil(t - ti);
+            let slice = std::mem::take(&mut rest);
+            let (head, tail) = slice.split_at_mut(take * row_elems);
+            rest = tail;
+            let s0 = start;
+            start += take;
+            if ti == t - 1 {
+                // run the last shard on the calling thread
+                f(s0, s0 + take, head);
+            } else {
+                scope.spawn(move || f(s0, s0 + take, head));
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn covers_every_row_exactly_once() {
+        for threads in [1, 2, 3, 7, 64] {
+            for rows in [0usize, 1, 2, 5, 13] {
+                let mut out = vec![0.0f32; rows * 3];
+                par_rows(&mut out, rows, 3, threads, |s, e, chunk| {
+                    assert_eq!(chunk.len(), (e - s) * 3);
+                    for (r, row) in chunk.chunks_exact_mut(3).enumerate() {
+                        for v in row.iter_mut() {
+                            *v += (s + r) as f32 + 1.0;
+                        }
+                    }
+                });
+                for r in 0..rows {
+                    for c in 0..3 {
+                        assert_eq!(out[r * 3 + c], r as f32 + 1.0, "row {r} col {c} threads {threads}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shards_actually_run_concurrently_scoped() {
+        let hits = AtomicUsize::new(0);
+        let mut out = vec![0.0f32; 8];
+        par_rows(&mut out, 8, 1, 4, |_, _, _| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn available_threads_is_positive() {
+        assert!(available_threads() >= 1);
+    }
+}

@@ -1,0 +1,145 @@
+//! Naive row-major kernels: the PR-1 `NativeBackend` loops, kept
+//! verbatim as the property-test oracle for the blocked path
+//! (`tests/kernel_parity.rs`) and selectable at runtime via
+//! `OBFTF_NATIVE_KERNELS=reference` so benches can measure the
+//! blocked-kernel speedup against the exact code it replaced.
+
+/// `out = act(h · W + b)`, one batch row at a time (ref.py
+/// `matmul_bias_act`).
+pub fn matmul_bias_act(
+    h: &[f32],
+    w: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    n: usize,
+    din: usize,
+    dout: usize,
+    relu: bool,
+) {
+    for i in 0..n {
+        let row = &h[i * din..(i + 1) * din];
+        let orow = &mut out[i * dout..(i + 1) * dout];
+        orow.copy_from_slice(b);
+        for (k, &hv) in row.iter().enumerate() {
+            if hv == 0.0 {
+                continue; // adding 0·w is exact; skipping is too
+            }
+            let wrow = &w[k * dout..(k + 1) * dout];
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += hv * wv;
+            }
+        }
+    }
+    if relu {
+        for v in out.iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+    }
+}
+
+/// `dw = hᵀ · dz`, `db = Σᵢ dz[i]`, accumulating batch rows in
+/// ascending order.
+pub fn grad_weights(
+    h: &[f32],
+    dz: &[f32],
+    dw: &mut [f32],
+    db: &mut [f32],
+    n: usize,
+    din: usize,
+    dout: usize,
+) {
+    dw.fill(0.0);
+    db.fill(0.0);
+    for i in 0..n {
+        let drow = &dz[i * dout..(i + 1) * dout];
+        for (dbv, &dv) in db.iter_mut().zip(drow) {
+            *dbv += dv;
+        }
+        let hrow = &h[i * din..(i + 1) * din];
+        for (k, &hv) in hrow.iter().enumerate() {
+            if hv == 0.0 {
+                continue;
+            }
+            let wrow = &mut dw[k * dout..(k + 1) * dout];
+            for (g, &dv) in wrow.iter_mut().zip(drow) {
+                *g += hv * dv;
+            }
+        }
+    }
+}
+
+/// `dh[i][k] = (h[i][k] > 0) · Σₒ dz[i][o] · w[k][o]` — ReLU-gated
+/// `dz · Wᵀ`; `h` is the activation of the layer whose input gradient
+/// is computed.
+pub fn grad_input(
+    dz: &[f32],
+    w: &[f32],
+    h: &[f32],
+    dh: &mut [f32],
+    n: usize,
+    din: usize,
+    dout: usize,
+) {
+    dh.fill(0.0);
+    for i in 0..n {
+        let drow = &dz[i * dout..(i + 1) * dout];
+        let hrow = &h[i * din..(i + 1) * din];
+        let orow = &mut dh[i * din..(i + 1) * din];
+        for (k, o) in orow.iter_mut().enumerate() {
+            if hrow[k] <= 0.0 {
+                continue; // ReLU gate
+            }
+            let wrow = &w[k * dout..(k + 1) * dout];
+            let mut s = 0.0f32;
+            for (&dv, &wv) in drow.iter().zip(wrow) {
+                s += dv * wv;
+            }
+            *o = s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_matmul_by_hand() {
+        // h = [[1, 2]], w = [[1, 0], [0, 1]], b = [10, 20]
+        let h = [1.0f32, 2.0];
+        let w = [1.0f32, 0.0, 0.0, 1.0];
+        let b = [10.0f32, 20.0];
+        let mut out = [0.0f32; 2];
+        matmul_bias_act(&h, &w, &b, &mut out, 1, 2, 2, false);
+        assert_eq!(out, [11.0, 22.0]);
+        // relu clamps negatives
+        let b = [-5.0f32, 20.0];
+        matmul_bias_act(&h, &w, &b, &mut out, 1, 2, 2, true);
+        assert_eq!(out, [0.0, 22.0]);
+    }
+
+    #[test]
+    fn grad_weights_by_hand() {
+        // two rows: h = [[1, 0], [2, 1]], dz = [[3], [4]]
+        let h = [1.0f32, 0.0, 2.0, 1.0];
+        let dz = [3.0f32, 4.0];
+        let mut dw = [0.0f32; 2];
+        let mut db = [0.0f32; 1];
+        grad_weights(&h, &dz, &mut dw, &mut db, 2, 2, 1);
+        assert_eq!(dw, [1.0 * 3.0 + 2.0 * 4.0, 0.0 * 3.0 + 1.0 * 4.0]);
+        assert_eq!(db, [7.0]);
+    }
+
+    #[test]
+    fn grad_input_gates_on_activation() {
+        // h = [[1, -1]] (second unit inactive), w = [[1], [1]], dz = [[5]]
+        let h = [1.0f32, -1.0];
+        let w = [1.0f32, 1.0];
+        let dz = [5.0f32];
+        let mut dh = [9.0f32; 2];
+        grad_input(&dz, &w, &h, &mut dh, 1, 2, 1);
+        assert_eq!(dh, [5.0, 0.0]);
+    }
+}

@@ -121,6 +121,29 @@ impl ModelEntry {
         self.task == "classification"
     }
 
+    /// Layer widths `[d_in, h_1, …, d_out]` when this entry is a dense
+    /// chain of (weight, bias) pairs over flat features — the form the
+    /// native backend executes: each weight's input width chains onto
+    /// the previous layer and each bias matches its weight's output
+    /// width. `None` for conv/non-chain entries.
+    pub fn dense_dims(&self) -> Option<Vec<usize>> {
+        if self.x_shape.len() != 1 || self.params.is_empty() || self.params.len() % 2 != 0 {
+            return None;
+        }
+        let mut dims = vec![self.x_shape[0]];
+        for pair in self.params.chunks(2) {
+            let (w, b) = (&pair[0], &pair[1]);
+            if w.shape.len() != 2 || b.shape.len() != 1 || w.shape[1] != b.shape[0] {
+                return None;
+            }
+            if w.shape[0] != *dims.last().expect("dims starts non-empty") {
+                return None;
+            }
+            dims.push(w.shape[1]);
+        }
+        Some(dims)
+    }
+
     /// Artifact filename for `(exe, flavour)`.
     pub fn artifact(&self, exe: Exe, flavour: Flavour) -> Result<&str> {
         let key = format!("{}:{}", exe.as_str(), flavour.as_str());
@@ -478,6 +501,28 @@ mod tests {
         assert_eq!(mlp.artifact(Exe::TrainStep, Flavour::Native).unwrap(), "<builtin>");
         assert!(mlp.artifact(Exe::TrainStep, Flavour::Jnp).is_err());
         assert_eq!(m.default_flavour(), Flavour::Native);
+    }
+
+    #[test]
+    fn dense_dims_recovers_chain_widths() {
+        let dir = TempDir::new("dims").unwrap();
+        let m = Manifest::native(dir.path());
+        let mlp = m.model("mlp").unwrap();
+        let dims = mlp.dense_dims().expect("mlp is a dense chain");
+        assert_eq!(dims.first(), Some(&mlp.x_shape[0]));
+        assert_eq!(dims.len(), mlp.n_params() / 2 + 1);
+        assert_eq!(dims.last(), Some(&mlp.num_classes));
+        // non-chain entries (conv-shaped input / odd params /
+        // non-chaining widths) say None
+        let mut conv = mlp.clone();
+        conv.x_shape = vec![8, 8, 1];
+        assert!(conv.dense_dims().is_none());
+        let mut odd = mlp.clone();
+        odd.params.pop();
+        assert!(odd.dense_dims().is_none());
+        let mut broken = mlp.clone();
+        broken.params[2].shape[0] += 1; // second weight no longer chains
+        assert!(broken.dense_dims().is_none());
     }
 
     #[test]

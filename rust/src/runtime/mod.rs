@@ -6,6 +6,8 @@
 //!   synthesized native manifest used when no artifacts exist);
 //! * [`backend`]  — the `Backend` trait a [`Session`] dispatches onto;
 //! * [`native`]   — pure-Rust CPU backend (hermetic default);
+//! * [`kernels`]  — the native backend's blocked/SIMD-friendly,
+//!   multi-threaded dense kernels plus their naive reference oracle;
 //! * `pjrt`       — AOT HLO artifacts via the PJRT C API (`pjrt`
 //!   cargo feature);
 //! * [`session`]  — single-threaded model session with resident params;
@@ -13,6 +15,7 @@
 
 pub mod backend;
 pub mod engine;
+pub mod kernels;
 pub mod manifest;
 pub mod native;
 #[cfg(feature = "pjrt")]
@@ -21,6 +24,7 @@ pub mod session;
 
 pub use backend::{Backend, SessionStats};
 pub use engine::Engine;
+pub use kernels::{Arena, KernelConfig, KernelFlavour};
 pub use manifest::{Exe, Flavour, Manifest, ModelEntry, ParamEntry, NATIVE_BATCH};
 pub use native::NativeBackend;
 #[cfg(feature = "pjrt")]

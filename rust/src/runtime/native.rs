@@ -12,6 +12,15 @@
 //!   `model.py::_masked_loss_fn`;
 //! * `sgd_update` — `w − lr·g`.
 //!
+//! The dense math itself lives in [`super::kernels`]: cache-blocked,
+//! register-tiled, multi-threaded kernels by default
+//! (`OBFTF_NATIVE_THREADS` controls sharding,
+//! `OBFTF_NATIVE_KERNELS=reference` selects the naive oracle loops),
+//! with a scratch [`Arena`] recycling the per-step working set
+//! (activations, packed panels, head gradients) across steps — in
+//! steady state only the gradient tensors handed back to the caller
+//! are freshly allocated.
+//!
 //! The backend executes any model whose manifest entry is a **dense
 //! chain**: alternating `(weight [d_in, d_out], bias [d_out])` pairs
 //! over flat features — linreg and the 784-256-256-10 MLP. Convolution
@@ -24,6 +33,7 @@
 use anyhow::{bail, Result};
 
 use super::backend::{gather_rows, Backend, SessionStats};
+use super::kernels::{self, Arena, KernelConfig};
 use super::manifest::ModelEntry;
 use crate::data::rng::Rng;
 use crate::data::tensor::{HostTensor, TensorData};
@@ -58,12 +68,31 @@ pub struct NativeBackend {
     /// Resident parameters in manifest order (w_0, b_0, w_1, b_1, …).
     params: Vec<HostTensor>,
     stats: SessionStats,
+    /// Kernel implementation + thread count (resolved once, at build).
+    kcfg: KernelConfig,
+    /// Recycled scratch buffers (activations, packed panels, head
+    /// gradients) — see [`Arena`].
+    scratch: Arena,
 }
 
 impl NativeBackend {
     /// Build from a manifest entry, validating that the parameter list
-    /// forms a dense chain the native math can execute.
+    /// forms a dense chain the native math can execute. Kernel flavour
+    /// and thread count come from the environment
+    /// (`OBFTF_NATIVE_KERNELS`, `OBFTF_NATIVE_THREADS`).
     pub fn new(model: &str, entry: &ModelEntry, batch: usize) -> Result<NativeBackend> {
+        NativeBackend::with_kernel_config(model, entry, batch, KernelConfig::from_env())
+    }
+
+    /// Build with an explicit kernel configuration — the
+    /// deterministic-by-construction path benches and property tests
+    /// use to pin flavour/threads without touching the environment.
+    pub fn with_kernel_config(
+        model: &str,
+        entry: &ModelEntry,
+        batch: usize,
+        kcfg: KernelConfig,
+    ) -> Result<NativeBackend> {
         let t0 = std::time::Instant::now();
         if entry.x_shape.len() != 1 {
             bail!(
@@ -121,59 +150,14 @@ impl NativeBackend {
             batch,
             params: vec![],
             stats,
+            kcfg,
+            scratch: Arena::new(),
         })
     }
 
     fn bump(&mut self, t0: std::time::Instant) {
         self.stats.executions += 1;
         self.stats.exec_ns += t0.elapsed().as_nanos() as u64;
-    }
-
-    fn layer_weight(&self, l: usize) -> &[f32] {
-        self.params[2 * l].as_f32().expect("parameters are f32")
-    }
-
-    fn layer_bias(&self, l: usize) -> &[f32] {
-        self.params[2 * l + 1].as_f32().expect("parameters are f32")
-    }
-
-    /// Forward pass over `n` rows: `acts[l] = act(input_l · W_l + b_l)`
-    /// where `input_0 = x` and `input_l = acts[l-1]` (ReLU on hidden
-    /// layers, identity on the head — ref.py `matmul_bias_act`). The
-    /// input batch is read in place, never copied.
-    fn forward(&self, x: &[f32], n: usize) -> Vec<Vec<f32>> {
-        let nl = self.chain.n_layers();
-        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(nl);
-        for l in 0..nl {
-            let (din, dout) = (self.chain.dims[l], self.chain.dims[l + 1]);
-            let w = self.layer_weight(l);
-            let b = self.layer_bias(l);
-            let h: &[f32] = if l == 0 { x } else { &acts[l - 1] };
-            let mut z = vec![0.0f32; n * dout];
-            for i in 0..n {
-                let row = &h[i * din..(i + 1) * din];
-                let out = &mut z[i * dout..(i + 1) * dout];
-                out.copy_from_slice(b);
-                for (k, &hv) in row.iter().enumerate() {
-                    if hv == 0.0 {
-                        continue; // adding 0·w is exact; skipping is too
-                    }
-                    let wrow = &w[k * dout..(k + 1) * dout];
-                    for (o, &wv) in out.iter_mut().zip(wrow) {
-                        *o += hv * wv;
-                    }
-                }
-            }
-            if l + 1 < nl {
-                for v in z.iter_mut() {
-                    if *v < 0.0 {
-                        *v = 0.0;
-                    }
-                }
-            }
-            acts.push(z);
-        }
-        acts
     }
 
     /// Per-example losses from head outputs (ref.py `softmax_xent` /
@@ -206,25 +190,30 @@ impl NativeBackend {
     /// gradients in manifest parameter order plus the selected mean
     /// loss. `mask.len()` is the row count (callers may pass gathered
     /// sub-batches smaller than the compiled batch).
+    ///
+    /// Also splits the elapsed kernel time into
+    /// [`SessionStats::forward_ns`] / [`SessionStats::backward_ns`].
     fn compute_grads(
-        &self,
+        &mut self,
         x: &HostTensor,
         y: &HostTensor,
         mask: &[f32],
     ) -> Result<(Vec<HostTensor>, f32)> {
+        let t0 = std::time::Instant::now();
         let n = mask.len();
         let xs = x.as_f32()?;
         let nl = self.chain.n_layers();
         let c = self.chain.out_width();
-        let acts = self.forward(xs, n);
+        let acts = forward_chain(&self.chain, &self.params, &self.kcfg, &mut self.scratch, xs, n);
         let logits = &acts[nl - 1];
         let losses = self.per_example_losses(logits, y, n)?;
         let denom = mask.iter().sum::<f32>().max(1.0);
         let sel_loss = losses.iter().zip(mask).map(|(l, m)| l * m).sum::<f32>() / denom;
+        let fwd_ns = t0.elapsed().as_nanos() as u64;
 
         // head gradient dL/dz with dloss_i = mask_i / denom
         // (ref.py softmax_xent_grad / mse_grad)
-        let mut dz = vec![0.0f32; n * c];
+        let mut dz = self.scratch.take(n * c);
         if self.chain.classification {
             let labels = y.as_i32()?;
             for i in 0..n {
@@ -261,44 +250,38 @@ impl NativeBackend {
             let h: &[f32] = if l == 0 { xs } else { &acts[l - 1] };
             let mut dw = vec![0.0f32; din * dout];
             let mut db = vec![0.0f32; dout];
-            for i in 0..n {
-                let drow = &dz[i * dout..(i + 1) * dout];
-                for (dbv, &dv) in db.iter_mut().zip(drow) {
-                    *dbv += dv;
-                }
-                let hrow = &h[i * din..(i + 1) * din];
-                for (k, &hv) in hrow.iter().enumerate() {
-                    if hv == 0.0 {
-                        continue;
-                    }
-                    let wrow = &mut dw[k * dout..(k + 1) * dout];
-                    for (g, &dv) in wrow.iter_mut().zip(drow) {
-                        *g += hv * dv;
-                    }
-                }
-            }
+            kernels::grad_weights(
+                &self.kcfg,
+                &mut self.scratch,
+                h,
+                &dz,
+                &mut dw,
+                &mut db,
+                n,
+                din,
+                dout,
+            );
             if l > 0 {
-                let w = self.layer_weight(l);
-                let mut dh = vec![0.0f32; n * din];
-                for i in 0..n {
-                    let drow = &dz[i * dout..(i + 1) * dout];
-                    let hrow = &h[i * din..(i + 1) * din];
-                    let orow = &mut dh[i * din..(i + 1) * din];
-                    for (k, o) in orow.iter_mut().enumerate() {
-                        if hrow[k] <= 0.0 {
-                            continue; // ReLU gate
-                        }
-                        let wrow = &w[k * dout..(k + 1) * dout];
-                        let mut s = 0.0f32;
-                        for (&dv, &wv) in drow.iter().zip(wrow) {
-                            s += dv * wv;
-                        }
-                        *o = s;
-                    }
-                }
-                dz = dh;
+                let w = self.params[2 * l].as_f32()?;
+                let mut dh = self.scratch.take(n * din);
+                kernels::grad_input(
+                    &self.kcfg,
+                    &mut self.scratch,
+                    &dz,
+                    w,
+                    h,
+                    &mut dh,
+                    n,
+                    din,
+                    dout,
+                );
+                self.scratch.put(std::mem::replace(&mut dz, dh));
             }
             grads[l] = Some((dw, db));
+        }
+        self.scratch.put(dz);
+        for a in acts {
+            self.scratch.put(a);
         }
 
         let mut out = Vec::with_capacity(2 * nl);
@@ -310,6 +293,8 @@ impl NativeBackend {
             )?);
             out.push(HostTensor::f32(vec![self.chain.dims[l + 1]], db)?);
         }
+        self.stats.forward_ns += fwd_ns;
+        self.stats.backward_ns += (t0.elapsed().as_nanos() as u64).saturating_sub(fwd_ns);
         Ok((out, sel_loss))
     }
 
@@ -333,6 +318,37 @@ impl NativeBackend {
         }
         Ok(())
     }
+}
+
+/// Forward pass over `n` rows: `acts[l] = act(input_l · W_l + b_l)`
+/// where `input_0 = x` and `input_l = acts[l-1]` (ReLU on hidden
+/// layers, identity on the head — ref.py `matmul_bias_act`). The input
+/// batch is read in place, never copied; activation buffers come from
+/// `arena` and must be recycled back by the caller. A free function
+/// over the backend's fields so callers can lend `&mut self.scratch`
+/// while the parameters stay borrowed — the arena is never moved out
+/// of the backend, even on error paths.
+fn forward_chain(
+    chain: &DenseChain,
+    params: &[HostTensor],
+    kcfg: &KernelConfig,
+    arena: &mut Arena,
+    x: &[f32],
+    n: usize,
+) -> Vec<Vec<f32>> {
+    let nl = chain.n_layers();
+    let mut acts: Vec<Vec<f32>> = Vec::with_capacity(nl);
+    for l in 0..nl {
+        let (din, dout) = (chain.dims[l], chain.dims[l + 1]);
+        let w = params[2 * l].as_f32().expect("parameters are f32");
+        let b = params[2 * l + 1].as_f32().expect("parameters are f32");
+        let h: &[f32] = if l == 0 { x } else { &acts[l - 1] };
+        let mut z = arena.take(n * dout);
+        let relu = l + 1 < nl;
+        kernels::matmul_bias_act(kcfg, arena, h, w, b, &mut z, n, din, dout, relu);
+        acts.push(z);
+    }
+    acts
 }
 
 /// Numerically stable `log(Σ exp(row))` (ref.py `softmax_xent`).
@@ -368,9 +384,15 @@ impl Backend for NativeBackend {
     fn fwd_loss(&mut self, x: &HostTensor, y: &HostTensor) -> Result<Vec<f32>> {
         let t0 = std::time::Instant::now();
         let n = self.batch;
-        let acts = self.forward(x.as_f32()?, n);
+        let xs = x.as_f32()?;
+        let acts = forward_chain(&self.chain, &self.params, &self.kcfg, &mut self.scratch, xs, n);
         let logits = acts.last().expect("chain has at least one layer");
-        let losses = self.per_example_losses(logits, y, n)?;
+        let losses = self.per_example_losses(logits, y, n);
+        for a in acts {
+            self.scratch.put(a);
+        }
+        let losses = losses?;
+        self.stats.forward_ns += t0.elapsed().as_nanos() as u64;
         self.bump(t0);
         Ok(losses)
     }
@@ -384,7 +406,9 @@ impl Backend for NativeBackend {
     ) -> Result<f32> {
         let t0 = std::time::Instant::now();
         let (grads, sel_loss) = self.compute_grads(x, y, mask)?;
+        let t1 = std::time::Instant::now();
         self.sgd_update(&grads, lr)?;
+        self.stats.backward_ns += t1.elapsed().as_nanos() as u64;
         self.bump(t0);
         Ok(sel_loss)
     }
@@ -394,7 +418,9 @@ impl Backend for NativeBackend {
     /// every reduction visits the same nonzero terms in the same order
     /// as the masked full-batch step (whose masked-out rows contribute
     /// exact zeros) — the result is bit-identical to
-    /// [`Backend::train_step`] with the matching mask.
+    /// [`Backend::train_step`] with the matching mask. The kernels
+    /// preserve this at any thread count: reductions never reorder
+    /// across batch rows (see [`super::kernels`]).
     fn train_step_selected(
         &mut self,
         x: &HostTensor,
@@ -409,7 +435,9 @@ impl Backend for NativeBackend {
         let (gx, gy) = gather_rows(x, y, &sorted, k, self.batch)?;
         let mask = vec![1.0f32; k];
         let (grads, sel_loss) = self.compute_grads(&gx, &gy, &mask)?;
+        let t1 = std::time::Instant::now();
         self.sgd_update(&grads, lr)?;
+        self.stats.backward_ns += t1.elapsed().as_nanos() as u64;
         self.bump(t0);
         Ok(sel_loss)
     }
@@ -429,6 +457,7 @@ impl Backend for NativeBackend {
     fn apply(&mut self, grads: &[HostTensor], lr: f32) -> Result<()> {
         let t0 = std::time::Instant::now();
         self.sgd_update(grads, lr)?;
+        self.stats.backward_ns += t0.elapsed().as_nanos() as u64;
         self.bump(t0);
         Ok(())
     }
@@ -442,7 +471,8 @@ impl Backend for NativeBackend {
         let t0 = std::time::Instant::now();
         let n = self.batch;
         let c = self.chain.out_width();
-        let acts = self.forward(x.as_f32()?, n);
+        let xs = x.as_f32()?;
+        let acts = forward_chain(&self.chain, &self.params, &self.kcfg, &mut self.scratch, xs, n);
         let logits = acts.last().expect("chain has at least one layer");
         let losses = self.per_example_losses(logits, y, n)?;
         let mut sums = (0.0f64, 0.0f64, 0.0f64);
@@ -476,6 +506,10 @@ impl Backend for NativeBackend {
                 sums.2 += m;
             }
         }
+        for a in acts {
+            self.scratch.put(a);
+        }
+        self.stats.forward_ns += t0.elapsed().as_nanos() as u64;
         self.bump(t0);
         Ok(sums)
     }
@@ -567,6 +601,11 @@ mod tests {
         (x, y)
     }
 
+    fn forward_acts(b: &NativeBackend, x: &HostTensor, n: usize) -> Vec<Vec<f32>> {
+        let mut arena = Arena::new();
+        forward_chain(&b.chain, &b.params, &b.kcfg, &mut arena, x.as_f32().unwrap(), n)
+    }
+
     #[test]
     fn rejects_non_dense_entries() {
         let mut entry = chain_entry("classification", &[4, 3], 3);
@@ -590,7 +629,7 @@ mod tests {
         let mut b = backend("classification", &[3, 5], 5, 4);
         let (x, y) = toy_batch(&b, 3);
         let losses = b.fwd_loss(&x, &y).unwrap();
-        let acts = b.forward(x.as_f32().unwrap(), 4);
+        let acts = forward_acts(&b, &x, 4);
         let logits = acts.last().unwrap();
         let labels = y.as_i32().unwrap();
         for i in 0..4 {
@@ -611,7 +650,7 @@ mod tests {
         let mut b = backend("regression", &[2, 1], 0, 3);
         let (x, y) = toy_batch(&b, 5);
         let losses = b.fwd_loss(&x, &y).unwrap();
-        let acts = b.forward(x.as_f32().unwrap(), 3);
+        let acts = forward_acts(&b, &x, 3);
         let preds = acts.last().unwrap();
         let targets = y.as_f32().unwrap();
         for i in 0..3 {
@@ -752,5 +791,62 @@ mod tests {
             last = b.train_step(&x, &y, &mask, 0.3).unwrap();
         }
         assert!(last < first * 0.05, "loss did not converge: {first} -> {last}");
+    }
+
+    #[test]
+    fn stats_split_kernel_time_between_forward_and_backward() {
+        let n = 8;
+        let mut b = backend("classification", &[6, 4, 3], 3, n);
+        let (x, y) = toy_batch(&b, 13);
+        let mask = vec![1.0f32; n];
+        b.fwd_loss(&x, &y).unwrap();
+        let s = b.stats();
+        assert!(s.forward_ns > 0, "fwd_loss must attribute forward time");
+        assert_eq!(s.backward_ns, 0, "fwd_loss must not attribute backward time");
+        b.train_step(&x, &y, &mask, 0.1).unwrap();
+        let s = b.stats();
+        assert!(s.backward_ns > 0, "train_step must attribute backward time");
+        assert!(s.forward_ns + s.backward_ns <= s.exec_ns + s.compile_ns + 1_000_000);
+    }
+
+    #[test]
+    fn scratch_arena_recycles_across_steps() {
+        let n = 8;
+        let mut b = backend("classification", &[6, 4, 3], 3, n);
+        let (x, y) = toy_batch(&b, 17);
+        let mask = vec![1.0f32; n];
+        b.train_step(&x, &y, &mask, 0.1).unwrap();
+        let idle = b.scratch.idle_buffers();
+        assert!(idle > 0, "step must return scratch buffers to the arena");
+        b.train_step(&x, &y, &mask, 0.1).unwrap();
+        assert_eq!(
+            b.scratch.idle_buffers(),
+            idle,
+            "steady-state steps must reuse, not grow, the arena"
+        );
+    }
+
+    #[test]
+    fn reference_and_blocked_kernels_agree_end_to_end() {
+        let n = 12;
+        let entry = chain_entry("classification", &[9, 7, 3], 3);
+        let mut blocked =
+            NativeBackend::with_kernel_config("t", &entry, n, KernelConfig::blocked(2)).unwrap();
+        let mut naive =
+            NativeBackend::with_kernel_config("t", &entry, n, KernelConfig::reference()).unwrap();
+        blocked.init(5).unwrap();
+        naive.init(5).unwrap();
+        let (x, y) = toy_batch(&blocked, 29);
+        let mask: Vec<f32> = (0..n).map(|i| if i % 3 == 0 { 1.0 } else { 0.0 }).collect();
+        for _ in 0..3 {
+            let lb = blocked.train_step(&x, &y, &mask, 0.1).unwrap();
+            let ln = naive.train_step(&x, &y, &mask, 0.1).unwrap();
+            assert!((lb - ln).abs() <= 1e-4 * ln.abs().max(1.0), "loss {lb} vs {ln}");
+        }
+        for (a, b) in blocked.params.iter().zip(&naive.params) {
+            for (va, vb) in a.as_f32().unwrap().iter().zip(b.as_f32().unwrap()) {
+                assert!((va - vb).abs() <= 1e-4 * vb.abs().max(1.0), "{va} vs {vb}");
+            }
+        }
     }
 }
