@@ -34,7 +34,7 @@ fn main() {
             ..Default::default()
         };
         let mut t = Trainer::with_manifest(&cfg, &manifest).unwrap();
-        let (train, _) = obftf::coordinator::trainer::build_datasets(&cfg).unwrap();
+        let (train, _) = obftf::coordinator::build_datasets(&cfg).unwrap();
         let batches: Vec<_> = BatchIter::new(&train, manifest.batch, None).collect();
         let mut i = 0;
         bench.run(&format!("fig1-step/{}", method.as_str()), || {

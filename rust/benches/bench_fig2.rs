@@ -28,7 +28,7 @@ fn main() {
             };
             let mut t = Trainer::with_manifest(&cfg, &manifest).unwrap();
             let (train, _) =
-                obftf::coordinator::trainer::build_datasets(&cfg).unwrap();
+                obftf::coordinator::build_datasets(&cfg).unwrap();
             let batches: Vec<_> = BatchIter::new(&train, manifest.batch, None).collect();
             let mut i = 0;
             bench.run(

@@ -2,14 +2,96 @@
 //! and budget. The L3 perf target: OBFTF's solver must cost less than
 //! one fwd_loss execution at n = 128 (see EXPERIMENTS.md §Perf).
 //!
+//! **Pipeline mode** (`OBFTF_BENCH_PIPELINE=1`): instead of the policy
+//! micro-bench, run the staged continuous-training pipeline against the
+//! serial streaming trainer on the same mlp workload and emit
+//! `BENCH_pipeline.json` with steps/s, the cache hit-rate and the
+//! async-eval stall. `OBFTF_PIPELINE_WORKERS` sets the fleet size (CI
+//! sweeps 1 and 4); `OBFTF_BENCH_PIPELINE_STEPS` the steps per run.
+//!
 //! CI smoke: set `OBFTF_BENCH_BUDGET_MS` / `OBFTF_BENCH_MAX_ITERS` for
 //! a tiny run and `OBFTF_BENCH_JSON` to capture the summary artifact.
 
+use obftf::config::TrainConfig;
+use obftf::coordinator::{PipelineTrainer, StreamingTrainer};
 use obftf::data::rng::Rng;
+use obftf::runtime::Manifest;
 use obftf::sampling::{budget_for, Method};
 use obftf::util::benchkit::{black_box, Bench};
 
+fn env_usize(key: &str) -> Option<usize> {
+    std::env::var(key).ok().and_then(|v| v.parse().ok())
+}
+
+/// The shared streaming workload both drivers run: mlp on the mnist
+/// proxy, cheap deterministic selection (mink) so the measured contrast
+/// is the stage overlap, eval cadence on so the serial baseline pays
+/// its eval stalls on the hot path the way the pipeline does not.
+fn workload(steps: usize) -> TrainConfig {
+    TrainConfig {
+        model: "mlp".to_string(),
+        method: Method::MinK,
+        sampling_ratio: 0.25,
+        epochs: 0,
+        stream_steps: steps,
+        lr: 0.05,
+        n_train: Some(2048),
+        n_test: Some(512),
+        seed: 23,
+        eval_every: 4,
+        prefetch_depth: 4,
+        ..Default::default()
+    }
+}
+
+fn pipeline_bench() {
+    let mut bench = Bench::heavy();
+    let manifest = Manifest::load_or_native(&obftf::artifacts_dir()).expect("manifest loads");
+    let steps = env_usize("OBFTF_BENCH_PIPELINE_STEPS").unwrap_or(48);
+    let workers = env_usize("OBFTF_PIPELINE_WORKERS").unwrap_or(4);
+    let cfg = workload(steps);
+
+    bench.run_throughput("pipeline/serial-streaming/mlp", 0.0, steps as f64, || {
+        let mut st = StreamingTrainer::with_manifest(&cfg, &manifest).expect("serial trainer");
+        black_box(st.run().expect("serial run"));
+    });
+
+    let mut pcfg = cfg.clone();
+    pcfg.pipeline = true;
+    pcfg.pipeline_workers = workers;
+    let mut hit_rate = 0.0f64;
+    let mut stall_ms = 0.0f64;
+    let mut fleet_fwd = 0.0f64;
+    bench.run_throughput(
+        &format!("pipeline/staged-w{workers}/mlp"),
+        0.0,
+        steps as f64,
+        || {
+            let mut p = PipelineTrainer::with_manifest(&pcfg, &manifest).expect("pipeline");
+            black_box(p.run().expect("pipeline run"));
+            hit_rate = p.cache_stats().hit_rate();
+            stall_ms = p.eval_stall_ms() as f64;
+            fleet_fwd = p.budget.inference_forwards as f64;
+        },
+    );
+    bench.annotate_last("inference_workers", workers as f64);
+    bench.annotate_last("cache_hit_rate", hit_rate);
+    bench.annotate_last("eval_stall_ms", stall_ms);
+    bench.annotate_last("inference_forwards", fleet_fwd);
+
+    bench
+        .finish("staged pipeline vs serial streaming", "BENCH_pipeline.json")
+        .unwrap();
+}
+
 fn main() {
+    let pipeline_mode = std::env::var("OBFTF_BENCH_PIPELINE")
+        .map(|v| matches!(v.trim(), "1" | "true" | "yes" | "on"))
+        .unwrap_or(false);
+    if pipeline_mode {
+        pipeline_bench();
+        return;
+    }
     let mut bench = Bench::new();
     let mut rng = Rng::seed_from(0x5e1ec7);
 

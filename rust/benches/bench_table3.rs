@@ -35,7 +35,7 @@ fn main() {
                 continue;
             }
         };
-        let (train, _) = obftf::coordinator::trainer::build_datasets(&cfg).unwrap();
+        let (train, _) = obftf::coordinator::build_datasets(&cfg).unwrap();
         let batches: Vec<_> = BatchIter::new(&train, manifest.batch, None).collect();
 
         let mut i = 0;
@@ -68,7 +68,7 @@ fn main() {
             workers: 2,
             ..Default::default()
         };
-        let (train, _) = obftf::coordinator::trainer::build_datasets(&cfg).unwrap();
+        let (train, _) = obftf::coordinator::build_datasets(&cfg).unwrap();
         let batches: Vec<_> = BatchIter::new(&train, manifest.batch, None).collect();
         let mut pt = ParallelTrainer::with_manifest(&cfg, &manifest).unwrap();
         let mut j = 0;

@@ -64,12 +64,29 @@ pub struct TrainConfig {
     /// them). When a batch is fully covered by fresh cache entries the
     /// fwd_loss execution is skipped.
     pub reuse_losses: bool,
-    /// Max cache age in steps (0 = auto: one epoch's worth of steps).
+    /// Max cache age in steps (0 = auto: two epochs' worth of steps,
+    /// in both the serial trainer and the pipeline).
     pub loss_max_age: u64,
     /// Force the masked full-batch backward instead of the gathered
     /// sub-batch backward (identical numerics, O(n) vs O(b) cost; kept
     /// as the perf-ablation knob — EXPERIMENTS.md §Perf).
     pub masked_backward: bool,
+    /// Streaming mode only: run the staged pipeline (inference-fleet
+    /// workers + sharded loss cache + backward-only training stage +
+    /// async eval) instead of the serial streaming loop.
+    pub pipeline: bool,
+    /// Inference-fleet worker threads for pipeline mode
+    /// (`OBFTF_PIPELINE_WORKERS` overrides).
+    pub pipeline_workers: usize,
+    /// Batches the fleet may score ahead of the training stage
+    /// (`OBFTF_PIPELINE_DEPTH` overrides; sync mode pins it to 0).
+    pub pipeline_depth: usize,
+    /// Loss-cache lock stripes (0 = auto from the worker count;
+    /// `OBFTF_PIPELINE_SHARDS` overrides).
+    pub cache_shards: usize,
+    /// Synchronous stage handoffs — the bit-identical oracle mode
+    /// (`OBFTF_PIPELINE_SYNC` overrides).
+    pub pipeline_sync: bool,
 }
 
 impl Default for TrainConfig {
@@ -98,6 +115,11 @@ impl Default for TrainConfig {
             reuse_losses: false,
             loss_max_age: 0,
             masked_backward: false,
+            pipeline: false,
+            pipeline_workers: 2,
+            pipeline_depth: 4,
+            cache_shards: 0,
+            pipeline_sync: false,
         }
     }
 }
@@ -145,6 +167,11 @@ impl TrainConfig {
             "masked_backward" => self.masked_backward = val.as_bool()?,
             "reuse_losses" => self.reuse_losses = val.as_bool()?,
             "loss_max_age" => self.loss_max_age = val.as_u64()?,
+            "pipeline" => self.pipeline = val.as_bool()?,
+            "pipeline_workers" => self.pipeline_workers = val.as_usize()?,
+            "pipeline_depth" => self.pipeline_depth = val.as_usize()?,
+            "cache_shards" => self.cache_shards = val.as_usize()?,
+            "pipeline_sync" => self.pipeline_sync = val.as_bool()?,
             other => bail!("unknown config key {other:?}"),
         }
         Ok(())
@@ -178,6 +205,15 @@ impl TrainConfig {
         }
         if self.prefetch_depth == 0 {
             bail!("prefetch_depth must be ≥ 1");
+        }
+        if self.pipeline && self.stream_steps == 0 {
+            bail!("pipeline mode requires stream_steps > 0 (it is a streaming driver)");
+        }
+        if self.pipeline_workers == 0 {
+            bail!("pipeline_workers must be ≥ 1");
+        }
+        if self.pipeline_depth == 0 {
+            bail!("pipeline_depth must be ≥ 1");
         }
         match self.flavour.as_str() {
             "auto" | "native" | "pallas" | "jnp" => {}
@@ -254,6 +290,29 @@ epochs = 2
     fn stream_mode_allows_zero_epochs() {
         let cfg = TrainConfig::from_toml_str("epochs = 0\nstream_steps = 100").unwrap();
         assert_eq!(cfg.stream_steps, 100);
+    }
+
+    #[test]
+    fn pipeline_keys_parse_and_validate() {
+        let cfg = TrainConfig::from_toml_str(
+            "epochs = 0\nstream_steps = 50\npipeline = true\npipeline_workers = 4\n\
+             pipeline_depth = 8\ncache_shards = 16\npipeline_sync = true\n",
+        )
+        .unwrap();
+        assert!(cfg.pipeline && cfg.pipeline_sync);
+        assert_eq!(cfg.pipeline_workers, 4);
+        assert_eq!(cfg.pipeline_depth, 8);
+        assert_eq!(cfg.cache_shards, 16);
+        // pipeline without streaming is rejected
+        assert!(TrainConfig::from_toml_str("pipeline = true").is_err());
+        let mut cfg = TrainConfig::default();
+        cfg.stream_steps = 10;
+        cfg.pipeline = true;
+        cfg.pipeline_workers = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = TrainConfig::default();
+        cfg.pipeline_depth = 0;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

@@ -15,6 +15,11 @@ pub struct BudgetTracker {
     /// when the loss cache served the rest — the "inference already
     /// paid" discount).
     pub forward_executed: u64,
+    /// Forwards executed by the *inference fleet* (the pipeline's
+    /// worker pool). These are the paper's "already paid for" passes:
+    /// they never count against the training budget, but tracking them
+    /// makes the fleet's throughput observable.
+    pub inference_forwards: u64,
     pub steps: u64,
 }
 
@@ -31,6 +36,10 @@ impl BudgetTracker {
 
     pub fn record_forward_executed(&mut self, n: usize) {
         self.forward_executed += n as u64;
+    }
+
+    pub fn record_inference_forwards(&mut self, n: u64) {
+        self.inference_forwards += n;
     }
 
     /// Realized sampling ratio (backward / forward).
@@ -78,6 +87,17 @@ mod tests {
         let b = BudgetTracker::new();
         assert_eq!(b.realized_ratio(), 0.0);
         assert_eq!(b.saved_fraction(), 0.0);
+    }
+
+    #[test]
+    fn inference_forwards_never_count_against_training() {
+        let mut b = BudgetTracker::new();
+        b.record_step(128, 32);
+        b.record_inference_forwards(4 * 128);
+        assert_eq!(b.inference_forwards, 512);
+        // training-side economics unchanged by fleet accounting
+        assert_eq!(b.cost_forward_equivalents(), 128 + 64);
+        assert!((b.realized_ratio() - 0.25).abs() < 1e-12);
     }
 
     #[test]

@@ -11,6 +11,53 @@
 //! entirely — the "ten forward" become free — at the cost of selecting
 //! on slightly stale losses (the staleness/accuracy trade-off is the
 //! `loss_max_age` knob, ablated in EXPERIMENTS.md).
+//!
+//! Two implementations share the freshness semantics:
+//!
+//! * [`LossCache`] — single-owner, used by the serial [`Trainer`]
+//!   (the numerical oracle path);
+//! * [`ShardedLossCache`] — N lock-striped shards keyed by dataset
+//!   index, written concurrently by the pipeline's inference workers
+//!   and read by the selection stage (`coordinator::pipeline`), with
+//!   per-shard hit/miss/staleness row counters.
+//!
+//! [`Trainer`]: crate::coordinator::Trainer
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Aggregated cache counters. For [`LossCache`] and
+/// [`ShardedLossCache::stats`] the granularity is per *lookup* (one
+/// batch lookup = one hit or one miss); [`ShardedLossCache::shard_stats`]
+/// counts per *row* instead. `stale` counts lookups (rows) that failed
+/// freshness although every row (the row) had been recorded — i.e.
+/// misses caused by age rather than by absence.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub stale: u64,
+}
+
+impl CacheStats {
+    /// Hit fraction over all lookups (0.0 when nothing was looked up).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// `stamp` value meaning "never recorded".
+const NEVER: u64 = u64::MAX;
+
+#[inline]
+fn is_fresh(stamp: u64, now: u64, max_age: u64) -> bool {
+    stamp != NEVER && (max_age == 0 || now.saturating_sub(stamp) <= max_age)
+}
 
 /// Fixed-capacity per-example loss store, keyed by dataset index.
 #[derive(Clone, Debug)]
@@ -22,6 +69,7 @@ pub struct LossCache {
     max_age: u64,
     hits: u64,
     misses: u64,
+    stale: u64,
 }
 
 impl LossCache {
@@ -29,10 +77,11 @@ impl LossCache {
     pub fn new(capacity: usize, max_age: u64) -> Self {
         LossCache {
             losses: vec![0.0; capacity],
-            stamp: vec![u64::MAX; capacity],
+            stamp: vec![NEVER; capacity],
             max_age,
             hits: 0,
             misses: 0,
+            stale: 0,
         }
     }
 
@@ -45,11 +94,25 @@ impl LossCache {
         (self.hits, self.misses)
     }
 
+    /// Full counters (batch granularity; `stale` ⊆ `misses`).
+    pub fn counters(&self) -> CacheStats {
+        CacheStats { hits: self.hits, misses: self.misses, stale: self.stale }
+    }
+
+    /// The recorded `(loss, stamp)` for one id, if any.
+    pub fn entry(&self, id: usize) -> Option<(f32, u64)> {
+        if id < self.stamp.len() && self.stamp[id] != NEVER {
+            Some((self.losses[id], self.stamp[id]))
+        } else {
+            None
+        }
+    }
+
     fn fresh(&self, id: usize, now: u64) -> bool {
-        if id >= self.stamp.len() || self.stamp[id] == u64::MAX {
+        if id >= self.stamp.len() {
             return false;
         }
-        self.max_age == 0 || now.saturating_sub(self.stamp[id]) <= self.max_age
+        is_fresh(self.stamp[id], now, self.max_age)
     }
 
     /// If every valid row has a fresh loss, return the cached loss
@@ -68,6 +131,15 @@ impl LossCache {
             .all(|(&id, _)| self.fresh(id, now));
         if !all_fresh {
             self.misses += 1;
+            // age-caused miss: every valid row was recorded at some point
+            let all_recorded = ids
+                .iter()
+                .zip(valid)
+                .filter(|(_, &m)| m > 0.0)
+                .all(|(&id, _)| id < self.stamp.len() && self.stamp[id] != NEVER);
+            if all_recorded {
+                self.stale += 1;
+            }
             return None;
         }
         self.hits += 1;
@@ -94,8 +166,276 @@ impl LossCache {
     pub fn invalidate(&mut self, ids: &[usize]) {
         for &id in ids {
             if id < self.stamp.len() {
-                self.stamp[id] = u64::MAX;
+                self.stamp[id] = NEVER;
             }
+        }
+    }
+}
+
+/// Outcome of a non-counting [`ShardedLossCache::probe_batch`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum CacheProbe {
+    /// Every valid row fresh — the cached losses (padding rows 0.0).
+    Fresh(Vec<f32>),
+    /// Every valid row recorded, but at least one too old; `min_stamp`
+    /// is the oldest stamp seen (the re-score watermark).
+    Stale { min_stamp: u64 },
+    /// At least one valid row was never recorded.
+    Incomplete,
+}
+
+#[derive(Debug, Default)]
+struct ShardSlots {
+    losses: Vec<f32>,
+    stamp: Vec<u64>,
+}
+
+#[derive(Debug, Default)]
+struct ShardCounters {
+    hit_rows: AtomicU64,
+    miss_rows: AtomicU64,
+    stale_rows: AtomicU64,
+}
+
+/// Concurrent, lock-striped per-example loss store.
+///
+/// Dataset index `id` lives in shard `id % n_shards`, slot
+/// `id / n_shards`, so contiguous batches spread their writes across
+/// every stripe. Writers ([`ShardedLossCache::record_batch`]) and the
+/// reader ([`ShardedLossCache::lookup_batch`] /
+/// [`ShardedLossCache::probe_batch`]) take `&self`; each shard is an
+/// independent mutex, locked at most once per call.
+#[derive(Debug)]
+pub struct ShardedLossCache {
+    shards: Vec<Mutex<ShardSlots>>,
+    row_counters: Vec<ShardCounters>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    stale: AtomicU64,
+    capacity: usize,
+    max_age: u64,
+}
+
+impl ShardedLossCache {
+    /// `capacity` = training-set size; `max_age` in steps (0 = ∞);
+    /// `n_shards` lock stripes (clamped to `[1, max(capacity, 1)]`).
+    pub fn new(capacity: usize, max_age: u64, n_shards: usize) -> Self {
+        let n = n_shards.clamp(1, capacity.max(1));
+        let shards = (0..n)
+            .map(|k| {
+                // shard k owns ids {k, k+n, k+2n, ...} < capacity
+                let slots = capacity / n + usize::from(k < capacity % n);
+                Mutex::new(ShardSlots {
+                    losses: vec![0.0; slots],
+                    stamp: vec![NEVER; slots],
+                })
+            })
+            .collect();
+        ShardedLossCache {
+            shards,
+            row_counters: (0..n).map(|_| ShardCounters::default()).collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            stale: AtomicU64::new(0),
+            capacity,
+            max_age,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn max_age(&self) -> u64 {
+        self.max_age
+    }
+
+    /// Lookup-granularity counters (one hit or miss per
+    /// [`ShardedLossCache::lookup_batch`] call; `stale` ⊆ `misses`).
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            stale: self.stale.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Row-granularity counters for one shard (accumulated by counting
+    /// lookups only, never by probes).
+    pub fn shard_stats(&self, shard: usize) -> CacheStats {
+        let c = &self.row_counters[shard];
+        CacheStats {
+            hits: c.hit_rows.load(Ordering::Relaxed),
+            misses: c.miss_rows.load(Ordering::Relaxed),
+            stale: c.stale_rows.load(Ordering::Relaxed),
+        }
+    }
+
+    /// The recorded `(loss, stamp)` for one id, if any.
+    pub fn entry(&self, id: usize) -> Option<(f32, u64)> {
+        if id >= self.capacity {
+            return None;
+        }
+        let n = self.shards.len();
+        let slots = self.shards[id % n].lock().expect("shard lock");
+        let i = id / n;
+        if slots.stamp[i] != NEVER {
+            Some((slots.losses[i], slots.stamp[i]))
+        } else {
+            None
+        }
+    }
+
+    /// Bucket the valid, in-range rows of a batch by owning shard (one
+    /// pass over the batch; each touched shard is then locked exactly
+    /// once). Out-of-range valid rows are returned separately.
+    fn bucket_rows(&self, ids: &[usize], valid: &[f32]) -> (Vec<Vec<u32>>, u32) {
+        let n = self.shards.len();
+        let mut buckets: Vec<Vec<u32>> = vec![Vec::new(); n];
+        let mut out_of_range = 0u32;
+        for (row, (&id, &m)) in ids.iter().zip(valid).enumerate() {
+            if m <= 0.0 {
+                continue;
+            }
+            if id >= self.capacity {
+                out_of_range += 1;
+            } else {
+                buckets[id % n].push(row as u32);
+            }
+        }
+        (buckets, out_of_range)
+    }
+
+    /// Record freshly computed losses for a batch (concurrent-safe;
+    /// last writer per id wins). Out-of-range ids and padding rows are
+    /// ignored, exactly like [`LossCache::record_batch`].
+    pub fn record_batch(&self, ids: &[usize], valid: &[f32], losses: &[f32], now: u64) {
+        let n = self.shards.len();
+        let (buckets, _) = self.bucket_rows(ids, valid);
+        for (k, rows) in buckets.iter().enumerate() {
+            if rows.is_empty() {
+                continue;
+            }
+            let mut slots = self.shards[k].lock().expect("shard lock");
+            for &row in rows {
+                let id = ids[row as usize];
+                let i = id / n;
+                slots.losses[i] = losses[row as usize];
+                slots.stamp[i] = now;
+            }
+        }
+    }
+
+    /// Shared scan behind probe/lookup. Returns the loss vector (valid
+    /// when `missing == 0 && stale_rows == 0`) plus per-row tallies.
+    /// `exact` demands `stamp == now` instead of the age window — the
+    /// synchronous-handoff freshness rule.
+    fn scan(
+        &self,
+        ids: &[usize],
+        valid: &[f32],
+        now: u64,
+        exact: bool,
+        count_rows: bool,
+    ) -> (Vec<f32>, usize, usize, u64) {
+        let n = self.shards.len();
+        let mut out = vec![0.0f32; ids.len()];
+        // out-of-range valid rows are permanent misses, tallied under
+        // shard 0 so they count exactly once
+        let (buckets, out_of_range) = self.bucket_rows(ids, valid);
+        let mut missing = out_of_range as usize;
+        let mut stale_rows = 0usize;
+        let mut min_stamp = NEVER;
+        if count_rows && out_of_range > 0 {
+            self.row_counters[0]
+                .miss_rows
+                .fetch_add(out_of_range as u64, Ordering::Relaxed);
+        }
+        for (k, rows) in buckets.iter().enumerate() {
+            if rows.is_empty() {
+                continue;
+            }
+            let (mut hit_k, mut miss_k, mut stale_k) = (0u64, 0u64, 0u64);
+            let slots = self.shards[k].lock().expect("shard lock");
+            for &row in rows {
+                let i = ids[row as usize] / n;
+                let stamp = slots.stamp[i];
+                let fresh = if exact {
+                    stamp == now
+                } else {
+                    is_fresh(stamp, now, self.max_age)
+                };
+                if stamp == NEVER {
+                    missing += 1;
+                    miss_k += 1;
+                } else if fresh {
+                    out[row as usize] = slots.losses[i];
+                    min_stamp = min_stamp.min(stamp);
+                    hit_k += 1;
+                } else {
+                    stale_rows += 1;
+                    min_stamp = min_stamp.min(stamp);
+                    miss_k += 1;
+                    stale_k += 1;
+                }
+            }
+            drop(slots);
+            if count_rows {
+                let c = &self.row_counters[k];
+                c.hit_rows.fetch_add(hit_k, Ordering::Relaxed);
+                c.miss_rows.fetch_add(miss_k, Ordering::Relaxed);
+                c.stale_rows.fetch_add(stale_k, Ordering::Relaxed);
+            }
+        }
+        (out, missing, stale_rows, min_stamp)
+    }
+
+    /// Non-counting freshness probe (the pipeline's wait loop polls
+    /// this; only the first, counting [`ShardedLossCache::lookup_batch`]
+    /// contributes to hit/miss statistics).
+    pub fn probe_batch(&self, ids: &[usize], valid: &[f32], now: u64) -> CacheProbe {
+        let (out, missing, stale_rows, min_stamp) = self.scan(ids, valid, now, false, false);
+        if missing > 0 {
+            CacheProbe::Incomplete
+        } else if stale_rows > 0 {
+            CacheProbe::Stale { min_stamp }
+        } else {
+            CacheProbe::Fresh(out)
+        }
+    }
+
+    /// Exact-stamp probe: the losses only when every valid row was
+    /// recorded at exactly `stamp`. This is the synchronous-handoff
+    /// rule ("staleness forced to 0") — an entry written under any
+    /// other parameter version does not count, which is what makes the
+    /// sync pipeline bit-identical to the serial trainer. Non-counting.
+    pub fn probe_stamped(&self, ids: &[usize], valid: &[f32], stamp: u64) -> Option<Vec<f32>> {
+        let (out, missing, stale_rows, _) = self.scan(ids, valid, stamp, true, false);
+        if missing == 0 && stale_rows == 0 {
+            Some(out)
+        } else {
+            None
+        }
+    }
+
+    /// All-or-nothing batch lookup with the same semantics as
+    /// [`LossCache::lookup_batch`]; counts one aggregate hit/miss per
+    /// call plus per-shard row counters.
+    pub fn lookup_batch(&self, ids: &[usize], valid: &[f32], now: u64) -> Option<Vec<f32>> {
+        let (out, missing, stale_rows, _) = self.scan(ids, valid, now, false, true);
+        if missing == 0 && stale_rows == 0 {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            Some(out)
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            if missing == 0 {
+                self.stale.fetch_add(1, Ordering::Relaxed);
+            }
+            None
         }
     }
 }
@@ -114,16 +454,20 @@ mod tests {
         let got = c.lookup_batch(&ids, &valid, 1).unwrap();
         assert_eq!(got, vec![0.5, 0.6, 0.7, 0.0]); // padding zeroed
         assert_eq!(c.stats(), (1, 1));
+        // the initial miss was an absence, not an expiry
+        assert_eq!(c.counters().stale, 0);
     }
 
     #[test]
-    fn staleness_expires_entries() {
+    fn staleness_expires_entries_and_counts() {
         let mut c = LossCache::new(4, 10);
         let ids = [0, 1];
         let valid = [1.0, 1.0];
         c.record_batch(&ids, &valid, &[1.0, 2.0], 0);
         assert!(c.lookup_batch(&ids, &valid, 10).is_some());
         assert!(c.lookup_batch(&ids, &valid, 11).is_none());
+        let stats = c.counters();
+        assert_eq!((stats.hits, stats.misses, stats.stale), (1, 1, 1));
     }
 
     #[test]
@@ -151,5 +495,123 @@ mod tests {
         assert!(c.lookup_batch(&[5], &[1.0], 0).is_none());
         c.record_batch(&[5], &[1.0], &[1.0], 0); // silently ignored
         assert!(c.lookup_batch(&[5], &[1.0], 1).is_none());
+    }
+
+    #[test]
+    fn hit_rate_math() {
+        let s = CacheStats { hits: 3, misses: 1, stale: 0 };
+        assert!((s.hit_rate() - 0.75).abs() < 1e-12);
+        assert_eq!(CacheStats::default().hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn sharded_matches_serial_on_a_serial_schedule() {
+        let mut serial = LossCache::new(10, 5);
+        let sharded = ShardedLossCache::new(10, 5, 3);
+        let ids = [0, 3, 7, 9];
+        let valid = [1.0, 1.0, 1.0, 1.0];
+        let losses = [0.1, 0.3, 0.7, 0.9];
+        serial.record_batch(&ids, &valid, &losses, 2);
+        sharded.record_batch(&ids, &valid, &losses, 2);
+        for now in [2u64, 7, 8] {
+            assert_eq!(
+                serial.lookup_batch(&ids, &valid, now),
+                sharded.lookup_batch(&ids, &valid, now),
+                "now={now}"
+            );
+        }
+        for id in 0..10 {
+            assert_eq!(serial.entry(id), sharded.entry(id), "id={id}");
+        }
+    }
+
+    #[test]
+    fn sharded_probe_classifies_missing_vs_stale() {
+        let c = ShardedLossCache::new(8, 2, 4);
+        let ids = [1, 5];
+        let valid = [1.0, 1.0];
+        assert_eq!(c.probe_batch(&ids, &valid, 0), CacheProbe::Incomplete);
+        c.record_batch(&ids, &valid, &[0.5, 0.6], 1);
+        assert_eq!(
+            c.probe_batch(&ids, &valid, 2),
+            CacheProbe::Fresh(vec![0.5, 0.6])
+        );
+        assert_eq!(
+            c.probe_batch(&ids, &valid, 9),
+            CacheProbe::Stale { min_stamp: 1 }
+        );
+        // probes never touch the counters
+        assert_eq!(c.stats(), CacheStats::default());
+    }
+
+    #[test]
+    fn probe_stamped_requires_exact_version() {
+        let c = ShardedLossCache::new(8, 0, 3);
+        let ids = [0, 4];
+        let valid = [1.0, 1.0];
+        c.record_batch(&ids, &valid, &[0.1, 0.4], 3);
+        // max_age = 0 (any age) would accept these — the exact probe
+        // must not
+        assert!(c.lookup_batch(&ids, &valid, 7).is_some());
+        assert_eq!(c.probe_stamped(&ids, &valid, 7), None);
+        assert_eq!(c.probe_stamped(&ids, &valid, 3), Some(vec![0.1, 0.4]));
+        // partial re-stamp is still a refusal
+        c.record_batch(&[0], &[1.0], &[0.9], 7);
+        assert_eq!(c.probe_stamped(&ids, &valid, 7), None);
+        c.record_batch(&[4], &[1.0], &[0.5], 7);
+        assert_eq!(c.probe_stamped(&ids, &valid, 7), Some(vec![0.9, 0.5]));
+    }
+
+    #[test]
+    fn sharded_counters_attribute_rows_to_shards() {
+        let c = ShardedLossCache::new(6, 0, 2);
+        // ids 0,2,4 → shard 0; ids 1,3,5 → shard 1
+        c.record_batch(&[0, 1], &[1.0, 1.0], &[1.0, 2.0], 0);
+        assert!(c.lookup_batch(&[0, 1, 2], &[1.0, 1.0, 1.0], 1).is_none());
+        let s0 = c.shard_stats(0);
+        let s1 = c.shard_stats(1);
+        assert_eq!((s0.hits, s0.misses), (1, 1)); // id 0 hit, id 2 missing
+        assert_eq!((s1.hits, s1.misses), (1, 0)); // id 1 hit
+        let agg = c.stats();
+        assert_eq!((agg.hits, agg.misses, agg.stale), (0, 1, 0));
+    }
+
+    #[test]
+    fn sharded_out_of_range_ids_counted_once() {
+        let c = ShardedLossCache::new(4, 0, 4);
+        assert!(c.lookup_batch(&[99], &[1.0], 0).is_none());
+        let total_miss_rows: u64 = (0..4).map(|k| c.shard_stats(k).misses).sum();
+        assert_eq!(total_miss_rows, 1);
+        c.record_batch(&[99], &[1.0], &[1.0], 0); // silently ignored
+        assert!(c.lookup_batch(&[99], &[1.0], 1).is_none());
+        assert_eq!(c.entry(99), None);
+    }
+
+    #[test]
+    fn sharded_single_shard_degenerates_to_serial() {
+        let mut serial = LossCache::new(5, 3);
+        let sharded = ShardedLossCache::new(5, 3, 1);
+        for (now, id) in [(0u64, 0usize), (1, 2), (4, 4), (9, 0)] {
+            serial.record_batch(&[id], &[1.0], &[id as f32], now);
+            sharded.record_batch(&[id], &[1.0], &[id as f32], now);
+        }
+        let ids = [0, 2, 4];
+        let valid = [1.0; 3];
+        for now in 0..12u64 {
+            assert_eq!(
+                serial.lookup_batch(&ids, &valid, now),
+                sharded.lookup_batch(&ids, &valid, now),
+                "now={now}"
+            );
+        }
+    }
+
+    #[test]
+    fn shard_count_clamped_to_capacity() {
+        let c = ShardedLossCache::new(2, 0, 64);
+        assert_eq!(c.n_shards(), 2);
+        let c = ShardedLossCache::new(0, 0, 4);
+        assert_eq!(c.n_shards(), 1);
+        assert!(c.lookup_batch(&[], &[], 0).is_some()); // vacuous hit
     }
 }

@@ -1,23 +1,147 @@
 //! L3 coordinator: the paper's system contribution.
 //!
-//! * [`trainer`]  — the single-process OBFTF training loop
-//!   (Algorithm 1: forward all → select → backward selected);
-//! * [`parallel`] — leader/worker sync data-parallel variant;
-//! * [`pipeline`] — streaming (continuous-training) mode with bounded
-//!   prefetch and backpressure accounting;
-//! * [`budget`]   — forward/backward compute accounting (the paper's
+//! * [`trainer`]   — the single-process OBFTF training loop
+//!   (Algorithm 1: forward all → select → backward selected); the
+//!   numerical oracle every concurrent driver is bounded against;
+//! * [`parallel`]  — leader/worker sync data-parallel variant;
+//! * [`streaming`] — serial streaming (continuous-training) mode with
+//!   bounded prefetch and backpressure accounting;
+//! * [`pipeline`]  — the staged continuous-training pipeline: an
+//!   inference-fleet stage writing a sharded loss cache, a selection
+//!   stage reading it, a backward-only training stage, and async eval;
+//! * [`budget`]    — forward/backward compute accounting (the paper's
 //!   "ten forward, one backward" economics);
-//! * [`service`]  — tokio status/control plane for long-running jobs.
+//! * [`service`]   — status/control plane for long-running jobs.
+//!
+//! Shared construction helpers live here so every driver derives the
+//! *same* datasets, selection RNG stream and stream source from a
+//! config — the serial/parallel/pipeline equivalence guarantees all
+//! hang off that determinism.
 
 pub mod budget;
 pub mod loss_cache;
 pub mod parallel;
 pub mod pipeline;
 pub mod service;
+pub mod streaming;
 pub mod trainer;
 
 pub use budget::BudgetTracker;
-pub use loss_cache::LossCache;
+pub use loss_cache::{CacheStats, LossCache, ShardedLossCache};
 pub use parallel::ParallelTrainer;
-pub use pipeline::StreamingTrainer;
+pub use pipeline::PipelineTrainer;
+pub use streaming::StreamingTrainer;
 pub use trainer::{EvalResult, TrainReport, Trainer};
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::data::dataset::InMemoryDataset;
+use crate::data::rng::Rng;
+use crate::data::stream::{ResamplingStream, StreamSource};
+
+/// Build the (train, test) datasets a config names, honouring size and
+/// label-noise overrides. Every trainer variant (serial, parallel,
+/// streaming, pipeline) constructs its data through this one helper so
+/// a given config always yields bit-identical datasets.
+pub fn build_datasets(cfg: &TrainConfig) -> Result<(InMemoryDataset, InMemoryDataset)> {
+    use crate::data::{imagenet_proxy::ImagenetProxySpec, mnist_proxy::MnistProxySpec,
+                      regression::RegressionSpec};
+    let name = cfg.dataset_name();
+    let seed = cfg.seed;
+    Ok(match name.as_str() {
+        "regression" | "regression_outliers" => {
+            let mut spec = if name == "regression_outliers" {
+                RegressionSpec::with_outliers()
+            } else {
+                RegressionSpec::default()
+            };
+            if let Some(n) = cfg.n_train {
+                spec.n_train = n;
+            }
+            if let Some(n) = cfg.n_test {
+                spec.n_test = n;
+            }
+            spec.build(seed)
+        }
+        "mnist_proxy" => {
+            let mut spec = MnistProxySpec::default();
+            if let Some(n) = cfg.n_train {
+                spec.n_train = n;
+            }
+            if let Some(n) = cfg.n_test {
+                spec.n_test = n;
+            }
+            spec.label_noise = cfg.label_noise;
+            spec.build(seed)
+        }
+        "imagenet_proxy" => {
+            let mut spec = ImagenetProxySpec::default();
+            if let Some(n) = cfg.n_train {
+                spec.n_train = n;
+            }
+            if let Some(n) = cfg.n_test {
+                spec.n_test = n;
+            }
+            spec.label_noise = cfg.label_noise;
+            spec.build(seed)
+        }
+        other => anyhow::bail!("unknown dataset {other:?}"),
+    })
+}
+
+/// The selection-RNG stream for a config: seeded from `cfg.seed`, with
+/// the epoch-shuffle child stream split off (and discarded here —
+/// epoch-mode trainers re-split per epoch). Serial, parallel and
+/// pipeline trainers all derive their sampler coins through this one
+/// function, which is what makes their selections comparable
+/// step-for-step.
+pub fn selection_rng(cfg: &TrainConfig) -> Rng {
+    let mut rng = Rng::seed_from(cfg.seed ^ 0x747261696e657221);
+    let _shuffle_stream = rng.split();
+    rng
+}
+
+/// The streaming-mode batch source for a config: resamples `train`
+/// (with optional concept drift) under a seed derived from `cfg.seed`.
+/// Shared by the serial streaming trainer and the staged pipeline so
+/// both consume the identical batch sequence.
+pub fn stream_source(cfg: &TrainConfig, train: InMemoryDataset) -> Box<dyn StreamSource> {
+    Box::new(ResamplingStream::new(train, cfg.seed ^ 0x73747265616d, cfg.drift))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selection_rng_is_deterministic_per_seed() {
+        let cfg = TrainConfig { seed: 123, ..Default::default() };
+        let mut a = selection_rng(&cfg);
+        let mut b = selection_rng(&cfg);
+        for _ in 0..16 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let cfg2 = TrainConfig { seed: 124, ..Default::default() };
+        let mut c = selection_rng(&cfg2);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn stream_source_is_deterministic_per_seed() {
+        let cfg = TrainConfig {
+            model: "linreg".into(),
+            seed: 5,
+            n_train: Some(64),
+            ..Default::default()
+        };
+        let (train, _) = build_datasets(&cfg).unwrap();
+        let mut a = stream_source(&cfg, train.clone());
+        let mut b = stream_source(&cfg, train);
+        for _ in 0..4 {
+            let ba = a.next_batch(8);
+            let bb = b.next_batch(8);
+            assert_eq!(ba.ids, bb.ids);
+        }
+    }
+}

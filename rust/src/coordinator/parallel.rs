@@ -16,7 +16,8 @@ use anyhow::{Context, Result};
 
 use crate::config::TrainConfig;
 use crate::coordinator::budget::BudgetTracker;
-use crate::coordinator::trainer::{build_datasets, EvalResult, TrainReport};
+use crate::coordinator::build_datasets;
+use crate::coordinator::trainer::{EvalResult, TrainReport};
 use crate::data::dataset::{Batch, BatchIter, InMemoryDataset};
 use crate::data::rng::Rng;
 use crate::data::shard::{gather_losses, shard_batch, shard_mask};
@@ -55,8 +56,7 @@ impl ParallelTrainer {
         let (train, test) = build_datasets(cfg)?;
         let sampler = cfg.method.build(cfg.gamma);
         // IMPORTANT: same rng derivation as Trainer so parallel == serial
-        let mut rng = Rng::seed_from(cfg.seed ^ 0x747261696e657221);
-        let _shuffle_stream = rng.split();
+        let rng = crate::coordinator::selection_rng(cfg);
         Ok(ParallelTrainer {
             cfg: cfg.clone(),
             engine,
@@ -135,6 +135,10 @@ impl ParallelTrainer {
             fwd_us,
             sel_us,
             bwd_us,
+            cache_hits: 0,
+            cache_misses: 0,
+            cache_stale: 0,
+            sel_hash: crate::sampling::selection_hash(&selected),
         };
         self.recorder.record_step(rec);
         self.step += 1;
@@ -154,7 +158,7 @@ impl ParallelTrainer {
 
     /// Sharded evaluation over the test split.
     pub fn evaluate(&mut self) -> Result<EvalResult> {
-        let batches: Vec<Batch> = BatchIter::new(&self.test, self.batch_size, None).collect();
+        let batches = self.test.batches(self.batch_size);
         let mut sums = (0.0f64, 0.0f64, 0.0f64);
         for b in &batches {
             let shards = shard_batch(b, self.engine.n_workers())?;

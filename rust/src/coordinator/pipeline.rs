@@ -1,87 +1,458 @@
-//! Streaming (continuous-training) mode: the paper's production
-//! setting, where the model trains on an endless stream rather than
-//! epochs over a finite set.
+//! Staged continuous-training pipeline — the paper's deployed-system
+//! architecture as concurrently-running stages.
 //!
-//! The [`crate::data::stream::Prefetcher`] produces batches on its own
-//! thread behind a bounded channel (backpressure); the trainer consumes
-//! them and runs Algorithm 1 per batch. Stall accounting from the
-//! prefetcher makes it observable whether ingestion or training is the
-//! bottleneck.
+//! The premise of the paper is that a production inference fleet is
+//! *already* running forward passes; training should merely record the
+//! per-instance losses those passes produce and spend its own compute
+//! on backward passes. The serial drivers interleave all of that on one
+//! thread; this module decouples it:
+//!
+//! ```text
+//!   producer ──batches──▶ ticket queue ──▶ inference stage
+//!   (Prefetcher)               ▲            (N scoped workers, each
+//!        │                     │ re-score    with its own Session,
+//!        │ (Arc<Batch>)        │ on stale    params synced from the
+//!        ▼                     │             ParamStore)
+//!   selection stage ◀── ShardedLossCache ◀── record_batch(stamp =
+//!   (leader: sampler            (lock-striped,     param version)
+//!    over cached losses)         concurrent writers)
+//!        │ selected
+//!        ▼
+//!   training stage (leader: backward + apply only)
+//!        │ publish params (version = step+1)     │ snapshot at the
+//!        ▼                                       ▼ eval cadence
+//!   ParamStore ──────────────▶ async-eval stage (cloned Session,
+//!                              scores off the hot path)
+//! ```
+//!
+//! **Synchronous oracle mode** (`pipeline_sync` / `OBFTF_PIPELINE_SYNC`):
+//! tickets are issued one step at a time and the selection stage waits
+//! for the inference stage before selecting, so every loss is computed
+//! with the current weights — the pipeline is then bit-identical to the
+//! serial [`StreamingTrainer`] / [`Trainer`] path (pinned by
+//! `rust/tests/pipeline_equivalence.rs`). **Async mode** runs the
+//! stages concurrently: the inference fleet scores up to
+//! `pipeline_depth` batches ahead under possibly-stale weights, bounded
+//! by `loss_max_age` (0 = auto: two epochs' worth of steps, the serial
+//! trainer's window; fully-scored-but-stale batches are re-enqueued for
+//! re-scoring with current weights).
+//!
+//! Environment overrides (CI and benches): `OBFTF_PIPELINE_WORKERS`,
+//! `OBFTF_PIPELINE_DEPTH`, `OBFTF_PIPELINE_SHARDS`,
+//! `OBFTF_PIPELINE_SYNC` — see README "Pipeline architecture".
+//!
+//! [`StreamingTrainer`]: crate::coordinator::StreamingTrainer
+//! [`Trainer`]: crate::coordinator::Trainer
 
-use anyhow::Result;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
 
 use crate::config::TrainConfig;
+use crate::coordinator::budget::BudgetTracker;
+use crate::coordinator::loss_cache::{CacheProbe, CacheStats, ShardedLossCache};
 use crate::coordinator::service::StatusBoard;
-use crate::coordinator::trainer::{EvalResult, TrainReport, Trainer};
-use crate::data::stream::{Prefetcher, ResamplingStream, StreamSource};
-use crate::metrics::EvalRecord;
-use crate::runtime::Manifest;
+use crate::coordinator::trainer::{EvalResult, TrainReport};
+use crate::data::dataset::Batch;
+use crate::data::rng::Rng;
+use crate::data::stream::Prefetcher;
+use crate::data::HostTensor;
+use crate::metrics::{EvalRecord, Recorder, StepRecord};
+use crate::runtime::{Flavour, Manifest, Session};
+use crate::sampling::{budget_for, selection_hash, selection_mask, Sampler};
 
-/// Streaming driver wrapping a single-process [`Trainer`].
-pub struct StreamingTrainer {
-    trainer: Trainer,
-    prefetcher: Prefetcher,
-    steps: usize,
-    eval_every_steps: usize,
+/// Upper bound on how long the selection stage waits for the inference
+/// fleet before declaring the pipeline wedged.
+const STALL_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// A unit of inference work: score `batch` and record the losses.
+struct Ticket {
+    batch: Arc<Batch>,
 }
 
-impl StreamingTrainer {
-    pub fn from_config(cfg: &TrainConfig) -> Result<StreamingTrainer> {
+/// A unit of eval work: score the test split under `params`.
+struct EvalJob {
+    step: u64,
+    params: Arc<Vec<HostTensor>>,
+}
+
+type SharedTickets = Arc<Mutex<mpsc::Receiver<Ticket>>>;
+
+/// Versioned weight snapshot the training stage publishes and the
+/// inference workers sync from. Version = number of applies performed,
+/// which is also the staleness stamp written into the loss cache.
+struct ParamStore {
+    inner: Mutex<(u64, Arc<Vec<HostTensor>>)>,
+}
+
+impl ParamStore {
+    fn new(initial: Arc<Vec<HostTensor>>) -> Self {
+        ParamStore { inner: Mutex::new((0, initial)) }
+    }
+
+    fn latest(&self) -> (u64, Arc<Vec<HostTensor>>) {
+        let g = self.inner.lock().expect("param store lock");
+        (g.0, g.1.clone())
+    }
+
+    fn publish(&self, version: u64, params: Arc<Vec<HostTensor>>) {
+        *self.inner.lock().expect("param store lock") = (version, params);
+    }
+}
+
+/// Resolved pipeline shape (config overlaid with `OBFTF_PIPELINE_*`).
+#[derive(Clone, Copy, Debug)]
+pub struct PipelineKnobs {
+    /// Inference-fleet worker threads.
+    pub workers: usize,
+    /// Batches the fleet may score ahead of the training stage (async
+    /// mode; sync mode pins this to 0).
+    pub depth: usize,
+    /// Loss-cache lock stripes.
+    pub shards: usize,
+    /// Synchronous handoffs — the bit-identical oracle mode.
+    pub sync: bool,
+    /// Max accepted loss age in parameter versions. `loss_max_age = 0`
+    /// resolves to the same auto window the serial trainer uses (two
+    /// epochs' worth of steps), so the knob means the same thing in
+    /// both drivers.
+    pub max_age: u64,
+}
+
+fn env_usize(key: &str) -> Option<usize> {
+    std::env::var(key).ok().and_then(|v| v.parse().ok())
+}
+
+fn env_bool(key: &str) -> Option<bool> {
+    std::env::var(key)
+        .ok()
+        .map(|v| matches!(v.trim(), "1" | "true" | "yes" | "on"))
+}
+
+impl PipelineKnobs {
+    /// Config values overlaid with the `OBFTF_PIPELINE_*` environment
+    /// (the env wins — CI and benches sweep worker counts that way).
+    /// `train_len`/`batch` size the auto defaults: the auto `max_age`
+    /// is two epochs' worth of steps, exactly like the serial trainer's
+    /// `reuse_losses` auto window.
+    pub fn resolve(cfg: &TrainConfig, train_len: usize, batch: usize) -> PipelineKnobs {
+        let workers = env_usize("OBFTF_PIPELINE_WORKERS")
+            .unwrap_or(cfg.pipeline_workers)
+            .max(1);
+        let depth = env_usize("OBFTF_PIPELINE_DEPTH")
+            .unwrap_or(cfg.pipeline_depth)
+            .max(1);
+        let shards_cfg = env_usize("OBFTF_PIPELINE_SHARDS").unwrap_or(cfg.cache_shards);
+        let shards = if shards_cfg == 0 {
+            (workers * 2).clamp(4, 16)
+        } else {
+            shards_cfg
+        };
+        let sync = env_bool("OBFTF_PIPELINE_SYNC").unwrap_or(cfg.pipeline_sync);
+        let max_age = if cfg.loss_max_age > 0 {
+            cfg.loss_max_age
+        } else {
+            2 * train_len.div_ceil(batch.max(1)) as u64
+        };
+        PipelineKnobs { workers, depth, shards, sync, max_age }
+    }
+}
+
+/// The staged continuous-training driver (see module docs).
+pub struct PipelineTrainer {
+    pub cfg: TrainConfig,
+    session: Session,
+    sampler: Box<dyn Sampler>,
+    rng: Rng,
+    prefetcher: Prefetcher,
+    test_batches: Arc<Vec<Batch>>,
+    cache: Arc<ShardedLossCache>,
+    pub recorder: Recorder,
+    pub budget: BudgetTracker,
+    knobs: PipelineKnobs,
+    steps: usize,
+    eval_every_steps: usize,
+    eval_stall_ns: u64,
+    step: u64,
+}
+
+impl PipelineTrainer {
+    pub fn from_config(cfg: &TrainConfig) -> Result<PipelineTrainer> {
         let manifest = Manifest::load_or_native(&crate::artifacts_dir())?;
         Self::with_manifest(cfg, &manifest)
     }
 
-    pub fn with_manifest(cfg: &TrainConfig, manifest: &Manifest) -> Result<StreamingTrainer> {
-        anyhow::ensure!(cfg.stream_steps > 0, "stream_steps must be > 0 for streaming mode");
-        let trainer = Trainer::with_manifest(cfg, manifest)?;
-        // the stream resamples the training split (with optional drift)
-        let (train, _) = crate::coordinator::trainer::build_datasets(cfg)?;
-        let source: Box<dyn StreamSource> =
-            Box::new(ResamplingStream::new(train, cfg.seed ^ 0x73747265616d, cfg.drift));
-        let prefetcher =
-            Prefetcher::spawn(source, manifest.batch, cfg.prefetch_depth);
+    pub fn with_manifest(cfg: &TrainConfig, manifest: &Manifest) -> Result<PipelineTrainer> {
+        cfg.validate()?;
+        anyhow::ensure!(cfg.stream_steps > 0, "stream_steps must be > 0 for pipeline mode");
+        let flavour: Flavour = manifest.resolve_flavour(&cfg.flavour)?;
+        let mut session = Session::new(manifest, &cfg.model, flavour)
+            .with_context(|| format!("building session for model {}", cfg.model))?;
+        session.init(cfg.seed as i32)?;
+        let (train, test) = crate::coordinator::build_datasets(cfg)?;
+        if train.x_shape != session.entry().x_shape {
+            anyhow::bail!(
+                "dataset {} features {:?} incompatible with model {} ({:?})",
+                cfg.dataset_name(),
+                train.x_shape,
+                cfg.model,
+                session.entry().x_shape
+            );
+        }
+        let sampler = cfg.method.build(cfg.gamma);
+        let rng = crate::coordinator::selection_rng(cfg);
+        let mut knobs = PipelineKnobs::resolve(cfg, train.len(), manifest.batch);
+        let cache = Arc::new(ShardedLossCache::new(train.len(), knobs.max_age, knobs.shards));
+        // the cache clamps its stripe count to the capacity; keep the
+        // published knobs in agreement so 0..knobs.shards is always a
+        // valid shard_stats range
+        knobs.shards = cache.n_shards();
+        let test_batches = Arc::new(test.batches(manifest.batch));
+        let source = crate::coordinator::stream_source(cfg, train);
+        let prefetcher = Prefetcher::spawn(
+            source,
+            manifest.batch,
+            cfg.prefetch_depth.max(knobs.depth + 2),
+        );
         let eval_every_steps = if cfg.eval_every > 0 {
             (cfg.stream_steps / cfg.eval_every.max(1)).max(1)
         } else {
             0
         };
-        Ok(StreamingTrainer {
-            trainer,
+        Ok(PipelineTrainer {
+            cfg: cfg.clone(),
+            session,
+            sampler,
+            rng,
             prefetcher,
+            test_batches,
+            cache,
+            recorder: Recorder::new(),
+            budget: BudgetTracker::new(),
+            knobs,
             steps: cfg.stream_steps,
             eval_every_steps,
+            eval_stall_ns: 0,
+            step: 0,
         })
     }
 
-    /// Producer-side stall time (ns) — nonzero means training is the
-    /// bottleneck and backpressure engaged (healthy); a large consumer
-    /// wait would instead show up as low steps/sec with zero stall.
+    pub fn session(&self) -> &Session {
+        &self.session
+    }
+
+    pub fn knobs(&self) -> PipelineKnobs {
+        self.knobs
+    }
+
+    /// Aggregate loss-cache counters (lookup granularity: one hit or
+    /// miss per step, counted the moment the selection stage first asks).
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    /// Per-shard row-granularity cache counters.
+    pub fn shard_stats(&self, shard: usize) -> CacheStats {
+        self.cache.shard_stats(shard)
+    }
+
+    /// Milliseconds the training stage spent blocked handing snapshots
+    /// to the async-eval stage (nonzero = evals arrive faster than the
+    /// eval session can score them).
+    pub fn eval_stall_ms(&self) -> u64 {
+        self.eval_stall_ns / 1_000_000
+    }
+
+    /// Producer-side stall time (ns) of the batch stream.
     pub fn producer_blocked_ns(&self) -> u64 {
-        self.prefetcher
-            .stats
-            .blocked_ns
-            .load(std::sync::atomic::Ordering::Relaxed)
+        self.prefetcher.stats.blocked_ns.load(Ordering::Relaxed)
     }
 
-    pub fn trainer(&self) -> &Trainer {
-        &self.trainer
-    }
-
-    /// Run `stream_steps` batches from the stream.
+    /// Run `stream_steps` batches through the staged pipeline.
     pub fn run(&mut self) -> Result<TrainReport> {
         let board = StatusBoard::new();
         self.run_with_board(&board)
     }
 
-    /// Run, publishing per-step state to `board` (the live status
-    /// endpoint) and checkpointing at the eval cadence when configured.
+    /// Run, publishing per-step state (including cache and eval-stall
+    /// counters) to `board`.
     pub fn run_with_board(&mut self, board: &StatusBoard) -> Result<TrainReport> {
-        let t0 = std::time::Instant::now();
-        for s in 0..self.steps {
-            let batch = self.prefetcher.next();
-            let rec = self.trainer.step_batch(&batch)?;
+        let t0 = Instant::now();
+        let manifest = self.session.manifest().clone();
+        let model = self.cfg.model.clone();
+        let flavour = self.session.flavour();
+        let cache = self.cache.clone();
+        let params = Arc::new(ParamStore::new(Arc::new(self.session.snapshot()?)));
+        let err: Arc<Mutex<Option<String>>> = Arc::new(Mutex::new(None));
+        let fleet_rows = Arc::new(AtomicU64::new(0));
+        let eval_out: Arc<Mutex<Vec<EvalRecord>>> = Arc::new(Mutex::new(Vec::new()));
+        let ticket_cap = self.knobs.depth + self.knobs.workers + 2;
+        let (ticket_tx, ticket_rx) = mpsc::sync_channel::<Ticket>(ticket_cap);
+        let ticket_rx: SharedTickets = Arc::new(Mutex::new(ticket_rx));
+        let (eval_tx, eval_rx) = mpsc::sync_channel::<EvalJob>(1);
+        let test_batches = self.test_batches.clone();
+
+        let run_result = std::thread::scope(|scope| -> Result<()> {
+            for w in 0..self.knobs.workers {
+                let ctx = WorkerCtx {
+                    manifest: manifest.clone(),
+                    model: model.clone(),
+                    flavour,
+                    tickets: ticket_rx.clone(),
+                    cache: cache.clone(),
+                    params: params.clone(),
+                    fleet_rows: fleet_rows.clone(),
+                    err: err.clone(),
+                };
+                std::thread::Builder::new()
+                    .name(format!("obftf-infer-{w}"))
+                    .spawn_scoped(scope, move || inference_worker(ctx))
+                    .context("spawn inference worker")?;
+            }
+            let ectx = EvalCtx {
+                manifest: manifest.clone(),
+                model: model.clone(),
+                flavour,
+                jobs: eval_rx,
+                batches: test_batches,
+                out: eval_out.clone(),
+                err: err.clone(),
+            };
+            std::thread::Builder::new()
+                .name("obftf-eval".into())
+                .spawn_scoped(scope, move || eval_worker(ectx))
+                .context("spawn eval worker")?;
+            let r = self.leader(board, &ticket_tx, &eval_tx, &params, &err, t0);
+            // close the stage queues so workers and the eval stage exit
+            // before the scope joins them
+            drop(ticket_tx);
+            drop(eval_tx);
+            r
+        });
+        run_result?;
+        // a stage may have failed after the leader's last check (e.g.
+        // the eval stage on the final snapshot, or a worker on a
+        // leftover requeued ticket) — surface it rather than reporting
+        // a silently-degraded run
+        if let Some(e) = err.lock().expect("err slot").take() {
+            anyhow::bail!("pipeline stage failed during shutdown: {e}");
+        }
+
+        self.budget
+            .record_inference_forwards(fleet_rows.load(Ordering::Relaxed));
+        let mut evals: Vec<EvalRecord> = std::mem::take(&mut *eval_out.lock().expect("eval out"));
+        evals.sort_by_key(|e| e.step);
+        for e in evals {
+            self.recorder.record_eval(e);
+        }
+        self.report()
+    }
+
+    /// Selection + training stages (the leader loop). Issues inference
+    /// tickets up to the lookahead horizon, waits on the cache handoff,
+    /// selects, runs the backward, publishes weights.
+    fn leader(
+        &mut self,
+        board: &StatusBoard,
+        tickets: &mpsc::SyncSender<Ticket>,
+        evals: &mpsc::SyncSender<EvalJob>,
+        params: &ParamStore,
+        err: &Mutex<Option<String>>,
+        t0: Instant,
+    ) -> Result<()> {
+        let steps = self.steps as u64;
+        let depth = if self.knobs.sync { 0 } else { self.knobs.depth as u64 };
+        let mut pending: VecDeque<Arc<Batch>> = VecDeque::new();
+        let mut next_issue: u64 = 0;
+        for s in 0..steps {
+            // top up the fleet's lookahead window
+            let horizon = (s + depth).min(steps - 1);
+            while next_issue <= horizon {
+                let batch = Arc::new(self.prefetcher.next());
+                send_ticket(tickets, Ticket { batch: batch.clone() }, err)?;
+                pending.push_back(batch);
+                next_issue += 1;
+            }
+            let batch = pending.pop_front().expect("ticket issued for this step");
+
+            // ---- stage handoff: wait for the inference fleet ----
+            let t_wait = Instant::now();
+            let losses = await_losses(&self.cache, &batch, s, self.knobs.sync, tickets, err)?;
+            let fwd_us = t_wait.elapsed().as_micros() as u64;
+
+            // ---- selection stage (never touches the engine) ----
+            let t1 = Instant::now();
+            let b = budget_for(self.cfg.sampling_ratio, batch.real);
+            let selected = self
+                .sampler
+                .select(&losses, &batch.valid_mask, b, &mut self.rng);
+            let sel_us = t1.elapsed().as_micros() as u64;
+
+            // ---- training stage: backward + apply only ----
+            let t2 = Instant::now();
+            let sel_loss = if self.cfg.masked_backward {
+                let mask = selection_mask(&selected, batch.batch_size());
+                self.session.train_step(&batch.x, &batch.y, &mask, self.cfg.lr)?
+            } else {
+                self.session
+                    .train_step_selected(&batch.x, &batch.y, &selected, self.cfg.lr)?
+            };
+            let bwd_us = t2.elapsed().as_micros() as u64;
+
+            let new_params = Arc::new(self.session.snapshot()?);
+            params.publish(s + 1, new_params.clone());
+
+            let batch_loss = {
+                let mut sum = 0.0f64;
+                let mut cnt = 0.0f64;
+                for (l, m) in losses.iter().zip(&batch.valid_mask) {
+                    sum += (*l as f64) * (*m as f64);
+                    cnt += *m as f64;
+                }
+                (sum / cnt.max(1.0)) as f32
+            };
+
+            self.budget.record_step(batch.real, selected.len());
+            let cache_stats = self.cache.stats();
+            let rec = StepRecord {
+                step: self.step,
+                epoch: 0,
+                sel_loss,
+                batch_loss,
+                n_forward: batch.real,
+                n_selected: selected.len(),
+                fwd_us,
+                sel_us,
+                bwd_us,
+                cache_hits: cache_stats.hits,
+                cache_misses: cache_stats.misses,
+                cache_stale: cache_stats.stale,
+                sel_hash: selection_hash(&selected),
+            };
+            self.recorder.record_step(rec);
+            self.step += 1;
+
+            // ---- async eval stage ----
+            if self.eval_every_steps > 0 && ((s + 1) as usize) % self.eval_every_steps == 0 {
+                let t3 = Instant::now();
+                if evals
+                    .send(EvalJob { step: self.step, params: new_params })
+                    .is_err()
+                {
+                    if let Some(e) = err.lock().expect("err slot").take() {
+                        anyhow::bail!("pipeline eval stage failed: {e}");
+                    }
+                    anyhow::bail!("pipeline eval stage terminated unexpectedly");
+                }
+                self.eval_stall_ns += t3.elapsed().as_nanos() as u64;
+            }
+
             let blocked_ms = self.producer_blocked_ns() / 1_000_000;
-            let ratio = self.trainer.budget.realized_ratio();
+            let ratio = self.budget.realized_ratio();
+            let eval_stall_ms = self.eval_stall_ms();
             board.update(|st| {
                 st.step = rec.step + 1;
                 st.sel_loss = rec.sel_loss;
@@ -89,21 +460,238 @@ impl StreamingTrainer {
                 st.realized_ratio = ratio;
                 st.steps_per_sec = (s + 1) as f64 / t0.elapsed().as_secs_f64();
                 st.producer_blocked_ms = blocked_ms;
+                st.cache_hits = cache_stats.hits;
+                st.cache_misses = cache_stats.misses;
+                st.cache_stale = cache_stats.stale;
+                st.eval_stall_ms = eval_stall_ms;
             });
-            if self.eval_every_steps > 0 && (s + 1) % self.eval_every_steps == 0 {
-                let ev: EvalResult = self.trainer.evaluate()?;
-                let step = self.trainer.step_count();
-                self.trainer.recorder.record_eval(EvalRecord {
-                    step,
-                    epoch: 0,
-                    loss: ev.loss,
-                    metric: ev.metric,
-                });
-                if let Some(path) = self.trainer.cfg.checkpoint.clone() {
-                    self.trainer.save_checkpoint(std::path::Path::new(&path))?;
+        }
+        Ok(())
+    }
+
+    /// Leader-side synchronous evaluation (used only when the run
+    /// recorded no async evals).
+    fn evaluate(&mut self) -> Result<EvalResult> {
+        let mut sums = (0.0f64, 0.0f64, 0.0f64);
+        let batches = self.test_batches.clone();
+        for b in batches.iter() {
+            let (l, m, c) = self.session.eval_batch(&b.x, &b.y, &b.valid_mask)?;
+            sums.0 += l;
+            sums.1 += m;
+            sums.2 += c;
+        }
+        let count = sums.2.max(1.0);
+        Ok(EvalResult { loss: sums.0 / count, metric: sums.1 / count })
+    }
+
+    fn report(&mut self) -> Result<TrainReport> {
+        let final_eval = match self.recorder.evals.last() {
+            Some(e) => EvalResult { loss: e.loss, metric: e.metric },
+            None => self.evaluate()?,
+        };
+        let (fwd, bwd) = self.recorder.totals();
+        Ok(TrainReport {
+            model: self.cfg.model.clone(),
+            method: self.cfg.method.as_str().to_string(),
+            sampling_ratio: self.cfg.sampling_ratio,
+            epochs: 0,
+            steps: self.step,
+            final_eval,
+            evals: self.recorder.evals.clone(),
+            forward_examples: fwd,
+            backward_examples: bwd,
+            realized_ratio: self.budget.realized_ratio(),
+            saved_fraction: self.budget.saved_fraction(),
+            steps_per_sec: self.recorder.throughput(),
+            latency_summary: self.recorder.latency_summary(),
+        })
+    }
+}
+
+/// Everything an inference worker owns (built before its thread starts;
+/// the `Session` itself is constructed *inside* the thread because
+/// backends may hold non-`Send` handles).
+struct WorkerCtx {
+    manifest: Manifest,
+    model: String,
+    flavour: Flavour,
+    tickets: SharedTickets,
+    cache: Arc<ShardedLossCache>,
+    params: Arc<ParamStore>,
+    fleet_rows: Arc<AtomicU64>,
+    err: Arc<Mutex<Option<String>>>,
+}
+
+struct EvalCtx {
+    manifest: Manifest,
+    model: String,
+    flavour: Flavour,
+    jobs: mpsc::Receiver<EvalJob>,
+    batches: Arc<Vec<Batch>>,
+    out: Arc<Mutex<Vec<EvalRecord>>>,
+    err: Arc<Mutex<Option<String>>>,
+}
+
+fn record_failure(err: &Mutex<Option<String>>, stage: &str, e: anyhow::Error) {
+    let mut slot = err.lock().expect("err slot");
+    if slot.is_none() {
+        *slot = Some(format!("{stage}: {e:#}"));
+    }
+}
+
+/// Inference-stage worker: drain tickets, sync weights from the
+/// [`ParamStore`], run `fwd_loss`, record into the sharded cache with
+/// the parameter version as the staleness stamp.
+fn inference_worker(ctx: WorkerCtx) {
+    let mut session = match Session::new(&ctx.manifest, &ctx.model, ctx.flavour) {
+        Ok(s) => s,
+        Err(e) => return record_failure(&ctx.err, "inference worker (session build)", e),
+    };
+    let mut loaded_version = u64::MAX;
+    loop {
+        let msg = ctx.tickets.lock().expect("ticket queue").recv();
+        let Ok(Ticket { batch }) = msg else {
+            return; // leader closed the queue: clean shutdown
+        };
+        let (version, p) = ctx.params.latest();
+        if version != loaded_version {
+            if let Err(e) = session.load_params(&p) {
+                return record_failure(&ctx.err, "inference worker (weight sync)", e);
+            }
+            loaded_version = version;
+        }
+        match session.fwd_loss(&batch.x, &batch.y) {
+            Ok(losses) => {
+                ctx.cache
+                    .record_batch(&batch.ids, &batch.valid_mask, &losses, loaded_version);
+                ctx.fleet_rows.fetch_add(batch.real as u64, Ordering::Relaxed);
+            }
+            Err(e) => return record_failure(&ctx.err, "inference worker (fwd_loss)", e),
+        }
+    }
+}
+
+/// Async-eval stage: score weight snapshots over the test split on a
+/// cloned session, entirely off the training hot path.
+fn eval_worker(ctx: EvalCtx) {
+    let mut session = match Session::new(&ctx.manifest, &ctx.model, ctx.flavour) {
+        Ok(s) => s,
+        Err(e) => return record_failure(&ctx.err, "eval stage (session build)", e),
+    };
+    while let Ok(job) = ctx.jobs.recv() {
+        if let Err(e) = session.load_params(&job.params) {
+            return record_failure(&ctx.err, "eval stage (weight sync)", e);
+        }
+        let mut sums = (0.0f64, 0.0f64, 0.0f64);
+        for b in ctx.batches.iter() {
+            match session.eval_batch(&b.x, &b.y, &b.valid_mask) {
+                Ok((l, m, c)) => {
+                    sums.0 += l;
+                    sums.1 += m;
+                    sums.2 += c;
                 }
+                Err(e) => return record_failure(&ctx.err, "eval stage (eval_batch)", e),
             }
         }
-        self.trainer.report()
+        let count = sums.2.max(1.0);
+        ctx.out.lock().expect("eval out").push(EvalRecord {
+            step: job.step,
+            epoch: 0,
+            loss: sums.0 / count,
+            metric: sums.1 / count,
+        });
     }
+}
+
+/// Non-blocking ticket send with worker-death detection (a plain
+/// blocking send could deadlock against a dead fleet).
+fn send_ticket(
+    tickets: &mpsc::SyncSender<Ticket>,
+    mut ticket: Ticket,
+    err: &Mutex<Option<String>>,
+) -> Result<()> {
+    loop {
+        match tickets.try_send(ticket) {
+            Ok(()) => return Ok(()),
+            Err(mpsc::TrySendError::Full(back)) => {
+                if let Some(e) = err.lock().expect("err slot").take() {
+                    anyhow::bail!("pipeline inference stage failed: {e}");
+                }
+                ticket = back;
+                std::thread::sleep(Duration::from_micros(50));
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => {
+                if let Some(e) = err.lock().expect("err slot").take() {
+                    anyhow::bail!("pipeline inference stage failed: {e}");
+                }
+                anyhow::bail!("pipeline inference stage terminated unexpectedly");
+            }
+        }
+    }
+}
+
+/// The selection stage's handoff.
+///
+/// Async mode: first a *counting* lookup (the hit/miss statistic
+/// answers "were the losses ready when selection wanted them?"), then
+/// non-counting polls; fully-scored-but-stale batches are re-enqueued
+/// once per staleness watermark so a worker re-scores them with
+/// current weights.
+///
+/// Sync mode: poll the exact-stamp probe — only losses computed under
+/// the *current* parameter version (stamp == step) are accepted, which
+/// is what makes the oracle mode bit-identical to the serial trainer.
+fn await_losses(
+    cache: &ShardedLossCache,
+    batch: &Arc<Batch>,
+    now: u64,
+    sync: bool,
+    tickets: &mpsc::SyncSender<Ticket>,
+    err: &Mutex<Option<String>>,
+) -> Result<Vec<f32>> {
+    let t0 = Instant::now();
+    if sync {
+        loop {
+            if let Some(e) = err.lock().expect("err slot").take() {
+                anyhow::bail!("pipeline inference stage failed: {e}");
+            }
+            if let Some(l) = cache.probe_stamped(&batch.ids, &batch.valid_mask, now) {
+                return Ok(l);
+            }
+            check_stall(cache, now, t0)?;
+            std::thread::sleep(Duration::from_micros(30));
+        }
+    }
+    if let Some(l) = cache.lookup_batch(&batch.ids, &batch.valid_mask, now) {
+        return Ok(l);
+    }
+    let mut requeued_for: Option<u64> = None;
+    loop {
+        if let Some(e) = err.lock().expect("err slot").take() {
+            anyhow::bail!("pipeline inference stage failed: {e}");
+        }
+        match cache.probe_batch(&batch.ids, &batch.valid_mask, now) {
+            CacheProbe::Fresh(l) => return Ok(l),
+            CacheProbe::Stale { min_stamp } => {
+                if requeued_for != Some(min_stamp) {
+                    send_ticket(tickets, Ticket { batch: batch.clone() }, err)?;
+                    requeued_for = Some(min_stamp);
+                }
+            }
+            CacheProbe::Incomplete => {}
+        }
+        check_stall(cache, now, t0)?;
+        std::thread::sleep(Duration::from_micros(30));
+    }
+}
+
+fn check_stall(cache: &ShardedLossCache, now: u64, since: Instant) -> Result<()> {
+    if since.elapsed() > STALL_TIMEOUT {
+        anyhow::bail!(
+            "pipeline stalled: step {now} waited {STALL_TIMEOUT:?} for losses \
+             (cache stats {:?})",
+            cache.stats()
+        );
+    }
+    Ok(())
 }

@@ -27,6 +27,14 @@ pub struct Status {
     pub realized_ratio: f64,
     pub steps_per_sec: f64,
     pub producer_blocked_ms: u64,
+    /// Loss-cache counters (lookup granularity; `cache_stale` ⊆
+    /// `cache_misses` — misses caused by age rather than absence).
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_stale: u64,
+    /// Milliseconds the pipeline's training stage spent blocked handing
+    /// weight snapshots to the async-eval stage (serial modes: 0).
+    pub eval_stall_ms: u64,
     pub done: bool,
 }
 
@@ -41,8 +49,23 @@ impl Status {
             .set("realized_ratio", Json::Num(self.realized_ratio))
             .set("steps_per_sec", Json::Num(self.steps_per_sec))
             .set("producer_blocked_ms", Json::Num(self.producer_blocked_ms as f64))
+            .set("cache_hits", Json::Num(self.cache_hits as f64))
+            .set("cache_misses", Json::Num(self.cache_misses as f64))
+            .set("cache_stale", Json::Num(self.cache_stale as f64))
+            .set("cache_hit_rate", Json::Num(self.cache_hit_rate()))
+            .set("eval_stall_ms", Json::Num(self.eval_stall_ms as f64))
             .set("done", Json::Bool(self.done));
         j
+    }
+
+    /// Hit fraction over all cache lookups so far (0.0 before any).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
     }
 
     pub fn from_json(j: &Json) -> Result<Status> {
@@ -55,6 +78,10 @@ impl Status {
             realized_ratio: j.need("realized_ratio")?.as_f64()?,
             steps_per_sec: j.need("steps_per_sec")?.as_f64()?,
             producer_blocked_ms: j.need("producer_blocked_ms")?.as_f64()? as u64,
+            cache_hits: j.need("cache_hits")?.as_f64()? as u64,
+            cache_misses: j.need("cache_misses")?.as_f64()? as u64,
+            cache_stale: j.need("cache_stale")?.as_f64()? as u64,
+            eval_stall_ms: j.need("eval_stall_ms")?.as_f64()? as u64,
             done: j.need("done")?.as_bool()?,
         })
     }
@@ -159,12 +186,22 @@ mod tests {
             realized_ratio: 0.25,
             steps_per_sec: 10.0,
             producer_blocked_ms: 3,
+            cache_hits: 30,
+            cache_misses: 10,
+            cache_stale: 4,
+            eval_stall_ms: 17,
             done: true,
         };
+        assert!((s.cache_hit_rate() - 0.75).abs() < 1e-12);
         let j = s.to_json();
+        assert!(j.to_string_compact().contains("cache_hit_rate"));
         let got = Status::from_json(&json::parse(&j.to_string_compact()).unwrap()).unwrap();
         assert_eq!(got.step, 42);
         assert_eq!(got.model, "mlp");
+        assert_eq!(got.cache_hits, 30);
+        assert_eq!(got.cache_misses, 10);
+        assert_eq!(got.cache_stale, 4);
+        assert_eq!(got.eval_stall_ms, 17);
         assert!(got.done);
     }
 

@@ -1,0 +1,114 @@
+//! Serial streaming (continuous-training) mode: the paper's production
+//! setting, where the model trains on an endless stream rather than
+//! epochs over a finite set.
+//!
+//! The [`crate::data::stream::Prefetcher`] produces batches on its own
+//! thread behind a bounded channel (backpressure); the trainer consumes
+//! them and runs Algorithm 1 per batch. Stall accounting from the
+//! prefetcher makes it observable whether ingestion or training is the
+//! bottleneck. This is the *serial* baseline the staged
+//! [`crate::coordinator::PipelineTrainer`] is benchmarked (and, in sync
+//! mode, bit-for-bit verified) against.
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::coordinator::service::StatusBoard;
+use crate::coordinator::trainer::{EvalResult, TrainReport, Trainer};
+use crate::data::stream::Prefetcher;
+use crate::metrics::EvalRecord;
+use crate::runtime::Manifest;
+
+/// Streaming driver wrapping a single-process [`Trainer`].
+pub struct StreamingTrainer {
+    trainer: Trainer,
+    prefetcher: Prefetcher,
+    steps: usize,
+    eval_every_steps: usize,
+}
+
+impl StreamingTrainer {
+    pub fn from_config(cfg: &TrainConfig) -> Result<StreamingTrainer> {
+        let manifest = Manifest::load_or_native(&crate::artifacts_dir())?;
+        Self::with_manifest(cfg, &manifest)
+    }
+
+    pub fn with_manifest(cfg: &TrainConfig, manifest: &Manifest) -> Result<StreamingTrainer> {
+        anyhow::ensure!(cfg.stream_steps > 0, "stream_steps must be > 0 for streaming mode");
+        let trainer = Trainer::with_manifest(cfg, manifest)?;
+        // the stream resamples the training split (with optional drift)
+        let (train, _) = crate::coordinator::build_datasets(cfg)?;
+        let source = crate::coordinator::stream_source(cfg, train);
+        let prefetcher =
+            Prefetcher::spawn(source, manifest.batch, cfg.prefetch_depth);
+        let eval_every_steps = if cfg.eval_every > 0 {
+            (cfg.stream_steps / cfg.eval_every.max(1)).max(1)
+        } else {
+            0
+        };
+        Ok(StreamingTrainer {
+            trainer,
+            prefetcher,
+            steps: cfg.stream_steps,
+            eval_every_steps,
+        })
+    }
+
+    /// Producer-side stall time (ns) — nonzero means training is the
+    /// bottleneck and backpressure engaged (healthy); a large consumer
+    /// wait would instead show up as low steps/sec with zero stall.
+    pub fn producer_blocked_ns(&self) -> u64 {
+        self.prefetcher
+            .stats
+            .blocked_ns
+            .load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    pub fn trainer(&self) -> &Trainer {
+        &self.trainer
+    }
+
+    /// Run `stream_steps` batches from the stream.
+    pub fn run(&mut self) -> Result<TrainReport> {
+        let board = StatusBoard::new();
+        self.run_with_board(&board)
+    }
+
+    /// Run, publishing per-step state to `board` (the live status
+    /// endpoint) and checkpointing at the eval cadence when configured.
+    pub fn run_with_board(&mut self, board: &StatusBoard) -> Result<TrainReport> {
+        let t0 = std::time::Instant::now();
+        for s in 0..self.steps {
+            let batch = self.prefetcher.next();
+            let rec = self.trainer.step_batch(&batch)?;
+            let blocked_ms = self.producer_blocked_ns() / 1_000_000;
+            let ratio = self.trainer.budget.realized_ratio();
+            let cache = self.trainer.cache_counters();
+            board.update(|st| {
+                st.step = rec.step + 1;
+                st.sel_loss = rec.sel_loss;
+                st.batch_loss = rec.batch_loss;
+                st.realized_ratio = ratio;
+                st.steps_per_sec = (s + 1) as f64 / t0.elapsed().as_secs_f64();
+                st.producer_blocked_ms = blocked_ms;
+                st.cache_hits = cache.hits;
+                st.cache_misses = cache.misses;
+                st.cache_stale = cache.stale;
+            });
+            if self.eval_every_steps > 0 && (s + 1) % self.eval_every_steps == 0 {
+                let ev: EvalResult = self.trainer.evaluate()?;
+                let step = self.trainer.step_count();
+                self.trainer.recorder.record_eval(EvalRecord {
+                    step,
+                    epoch: 0,
+                    loss: ev.loss,
+                    metric: ev.metric,
+                });
+                if let Some(path) = self.trainer.cfg.checkpoint.clone() {
+                    self.trainer.save_checkpoint(std::path::Path::new(&path))?;
+                }
+            }
+        }
+        self.trainer.report()
+    }
+}

@@ -83,53 +83,10 @@ impl TrainReport {
     }
 }
 
-/// Build the (train, test) datasets a config names, honouring size and
-/// label-noise overrides.
-pub fn build_datasets(cfg: &TrainConfig) -> Result<(InMemoryDataset, InMemoryDataset)> {
-    use crate::data::{imagenet_proxy::ImagenetProxySpec, mnist_proxy::MnistProxySpec,
-                      regression::RegressionSpec};
-    let name = cfg.dataset_name();
-    let seed = cfg.seed;
-    Ok(match name.as_str() {
-        "regression" | "regression_outliers" => {
-            let mut spec = if name == "regression_outliers" {
-                RegressionSpec::with_outliers()
-            } else {
-                RegressionSpec::default()
-            };
-            if let Some(n) = cfg.n_train {
-                spec.n_train = n;
-            }
-            if let Some(n) = cfg.n_test {
-                spec.n_test = n;
-            }
-            spec.build(seed)
-        }
-        "mnist_proxy" => {
-            let mut spec = MnistProxySpec::default();
-            if let Some(n) = cfg.n_train {
-                spec.n_train = n;
-            }
-            if let Some(n) = cfg.n_test {
-                spec.n_test = n;
-            }
-            spec.label_noise = cfg.label_noise;
-            spec.build(seed)
-        }
-        "imagenet_proxy" => {
-            let mut spec = ImagenetProxySpec::default();
-            if let Some(n) = cfg.n_train {
-                spec.n_train = n;
-            }
-            if let Some(n) = cfg.n_test {
-                spec.n_test = n;
-            }
-            spec.label_noise = cfg.label_noise;
-            spec.build(seed)
-        }
-        other => anyhow::bail!("unknown dataset {other:?}"),
-    })
-}
+// The dataset builder every trainer variant shares now lives in
+// `coordinator::mod` (one construction path for serial, parallel,
+// streaming and pipeline); re-exported here for source compatibility.
+pub use super::build_datasets;
 
 /// The single-process trainer.
 pub struct Trainer {
@@ -178,8 +135,7 @@ impl Trainer {
             );
         }
         let sampler = cfg.method.build(cfg.gamma);
-        let mut rng = Rng::seed_from(cfg.seed ^ 0x747261696e657221);
-        let _shuffle_stream = rng.split();
+        let rng = super::selection_rng(cfg);
         let cache = if cfg.reuse_losses {
             let max_age = if cfg.loss_max_age > 0 {
                 cfg.loss_max_age
@@ -212,6 +168,11 @@ impl Trainer {
     /// `(hits, misses)` of the loss cache at batch granularity.
     pub fn cache_stats(&self) -> (u64, u64) {
         self.cache.as_ref().map(|c| c.stats()).unwrap_or((0, 0))
+    }
+
+    /// Full loss-cache counters (zeros when the cache is disabled).
+    pub fn cache_counters(&self) -> crate::coordinator::CacheStats {
+        self.cache.as_ref().map(|c| c.counters()).unwrap_or_default()
     }
 
     pub fn session(&self) -> &Session {
@@ -280,6 +241,7 @@ impl Trainer {
         };
 
         self.budget.record_step(batch.real, selected.len());
+        let cache_counters = self.cache_counters();
         let rec = StepRecord {
             step: self.step,
             epoch: self.epoch,
@@ -290,6 +252,10 @@ impl Trainer {
             fwd_us,
             sel_us,
             bwd_us,
+            cache_hits: cache_counters.hits,
+            cache_misses: cache_counters.misses,
+            cache_stale: cache_counters.stale,
+            sel_hash: crate::sampling::selection_hash(&selected),
         };
         self.recorder.record_step(rec);
         self.step += 1;
@@ -312,8 +278,7 @@ impl Trainer {
 
     /// Full evaluation over the test split.
     pub fn evaluate(&mut self) -> Result<EvalResult> {
-        let batch = self.session.batch();
-        let batches: Vec<Batch> = BatchIter::new(&self.test, batch, None).collect();
+        let batches = self.test.batches(self.session.batch());
         let mut sums = (0.0f64, 0.0f64, 0.0f64);
         for b in &batches {
             let (l, m, c) = self.session.eval_batch(&b.x, &b.y, &b.valid_mask)?;

@@ -158,6 +158,16 @@ impl<'a> BatchIter<'a> {
     }
 }
 
+impl InMemoryDataset {
+    /// Materialize the whole dataset as padded fixed-size batches in
+    /// sequential order — the shared eval path (the serial trainer, the
+    /// parallel trainer and the pipeline's async-eval stage all iterate
+    /// this same deterministic cover).
+    pub fn batches(&self, batch: usize) -> Vec<Batch> {
+        BatchIter::new(self, batch, None).collect()
+    }
+}
+
 impl<'a> Iterator for BatchIter<'a> {
     type Item = Batch;
 
@@ -216,6 +226,16 @@ mod tests {
         }
         seen.sort_unstable();
         assert_eq!(seen, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn batches_cover_sequentially_with_padding() {
+        let ds = toy(6);
+        let bs = ds.batches(4);
+        assert_eq!(bs.len(), 2);
+        assert_eq!(bs[0].real, 4);
+        assert_eq!(bs[1].real, 2);
+        assert_eq!(bs[1].y.as_i32().unwrap()[..2], [4, 5]);
     }
 
     #[test]

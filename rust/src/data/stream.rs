@@ -82,6 +82,9 @@ pub struct StreamStats {
     /// Nanoseconds the producer spent blocked on the full channel
     /// (backpressure from the trainer).
     pub blocked_ns: AtomicU64,
+    /// Nanoseconds the consumer spent blocked waiting for a batch
+    /// (ingestion is the bottleneck when this dominates).
+    pub consumer_blocked_ns: AtomicU64,
 }
 
 /// Bounded-channel prefetcher running a [`StreamSource`] on its own
@@ -118,7 +121,12 @@ impl Prefetcher {
 
     /// Blocking fetch of the next batch.
     pub fn next(&self) -> Batch {
-        self.rx.recv().expect("producer thread never closes first")
+        let t0 = Instant::now();
+        let b = self.rx.recv().expect("producer thread never closes first");
+        self.stats
+            .consumer_blocked_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        b
     }
 
     /// Non-blocking fetch.
@@ -169,6 +177,11 @@ mod tests {
             assert_eq!(b.batch_size(), 4);
         }
         assert!(pf.stats.produced.load(Ordering::Relaxed) >= 10);
+        // consumer wait time was accounted (possibly zero, but the
+        // counter must exist and never go backwards)
+        let waited = pf.stats.consumer_blocked_ns.load(Ordering::Relaxed);
+        let _ = pf.next();
+        assert!(pf.stats.consumer_blocked_ns.load(Ordering::Relaxed) >= waited);
         drop(pf); // must not hang
     }
 

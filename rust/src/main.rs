@@ -12,7 +12,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Result};
 
 use obftf::config::TrainConfig;
-use obftf::coordinator::{ParallelTrainer, StreamingTrainer, Trainer};
+use obftf::coordinator::{ParallelTrainer, PipelineTrainer, StreamingTrainer, Trainer};
 use obftf::data::rng::Rng;
 use obftf::runtime::Manifest;
 use obftf::sampling::Method;
@@ -40,7 +40,12 @@ fn train_parser() -> ArgParser {
         .flag("status-addr", "bind a status endpoint (streaming mode)")
         .bool_flag("masked-backward", "use the masked full-batch backward (perf ablation)")
         .bool_flag("reuse-losses", "reuse cached per-instance losses (skip fwd when fresh)")
-        .flag("loss-max-age", "loss cache max age in steps (0 = one epoch)")
+        .flag("loss-max-age", "loss cache max age in steps (0 = auto: two epochs' worth)")
+        .bool_flag("pipeline", "streaming mode: run the staged pipeline (inference fleet + sharded cache + async eval)")
+        .flag("pipeline-workers", "pipeline inference-fleet worker threads")
+        .flag("pipeline-depth", "pipeline lookahead depth in batches")
+        .flag("cache-shards", "sharded loss-cache stripes (0 = auto)")
+        .bool_flag("pipeline-sync", "pipeline synchronous handoffs (bit-identical oracle mode)")
 }
 
 fn build_config(p: &Parsed) -> Result<TrainConfig> {
@@ -111,6 +116,21 @@ fn build_config(p: &Parsed) -> Result<TrainConfig> {
     if let Some(v) = p.get_parse::<u64>("loss-max-age")? {
         cfg.loss_max_age = v;
     }
+    if p.get_bool("pipeline") {
+        cfg.pipeline = true;
+    }
+    if let Some(v) = p.get_parse::<usize>("pipeline-workers")? {
+        cfg.pipeline_workers = v;
+    }
+    if let Some(v) = p.get_parse::<usize>("pipeline-depth")? {
+        cfg.pipeline_depth = v;
+    }
+    if let Some(v) = p.get_parse::<usize>("cache-shards")? {
+        cfg.cache_shards = v;
+    }
+    if p.get_bool("pipeline-sync") {
+        cfg.pipeline_sync = true;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -128,7 +148,6 @@ fn cmd_train(args: &[String]) -> Result<()> {
         cfg.dataset_name()
     );
     let report = if cfg.stream_steps > 0 {
-        let mut st = StreamingTrainer::from_config(&cfg)?;
         match &cfg.status_addr {
             Some(addr) => {
                 use obftf::coordinator::service::{serve, StatusBoard};
@@ -139,14 +158,19 @@ fn cmd_train(args: &[String]) -> Result<()> {
                     s.model = cfg.model.clone();
                     s.method = cfg.method.as_str().to_string();
                 });
-                let report = st.run_with_board(&board)?;
+                let report = if cfg.pipeline {
+                    PipelineTrainer::from_config(&cfg)?.run_with_board(&board)?
+                } else {
+                    StreamingTrainer::from_config(&cfg)?.run_with_board(&board)?
+                };
                 board.update(|s| {
                     s.done = true;
                     s.step = report.steps;
                 });
                 report
             }
-            None => st.run()?,
+            None if cfg.pipeline => PipelineTrainer::from_config(&cfg)?.run()?,
+            None => StreamingTrainer::from_config(&cfg)?.run()?,
         }
     } else if cfg.workers > 1 {
         ParallelTrainer::from_config(&cfg)?.run()?

@@ -21,6 +21,16 @@ pub struct StepRecord {
     pub fwd_us: u64,
     pub sel_us: u64,
     pub bwd_us: u64,
+    /// Cumulative loss-cache counters at record time (zero when the
+    /// trainer runs without a cache). `cache_stale` ⊆ `cache_misses`:
+    /// lookups that failed freshness although every row was recorded.
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_stale: u64,
+    /// Order-sensitive fingerprint of the selected indices
+    /// ([`crate::sampling::selection_hash`]) — the compact observable
+    /// the pipeline-vs-serial equivalence tests compare.
+    pub sel_hash: u64,
 }
 
 /// One evaluation's record.
@@ -88,12 +98,13 @@ impl Recorder {
             .with_context(|| format!("creating {path:?}"))?;
         writeln!(
             f,
-            "step,epoch,sel_loss,batch_loss,n_forward,n_selected,fwd_us,sel_us,bwd_us"
+            "step,epoch,sel_loss,batch_loss,n_forward,n_selected,fwd_us,sel_us,bwd_us,\
+             cache_hits,cache_misses,cache_stale,sel_hash"
         )?;
         for s in &self.steps {
             writeln!(
                 f,
-                "{},{},{},{},{},{},{},{},{}",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{}",
                 s.step,
                 s.epoch,
                 s.sel_loss,
@@ -102,7 +113,11 @@ impl Recorder {
                 s.n_selected,
                 s.fwd_us,
                 s.sel_us,
-                s.bwd_us
+                s.bwd_us,
+                s.cache_hits,
+                s.cache_misses,
+                s.cache_stale,
+                s.sel_hash
             )?;
         }
         Ok(())
@@ -147,6 +162,10 @@ mod tests {
             fwd_us: 100,
             sel_us: 10,
             bwd_us: 200,
+            cache_hits: 1,
+            cache_misses: 2,
+            cache_stale: 0,
+            sel_hash: 42,
         }
     }
 
@@ -172,7 +191,11 @@ mod tests {
         r.write_evals_csv(&ep).unwrap();
         let steps = std::fs::read_to_string(&sp).unwrap();
         assert!(steps.lines().count() == 2);
-        assert!(steps.contains("0,0,1,2,128,32,100,10,200"));
+        assert!(steps.contains("0,0,1,2,128,32,100,10,200,1,2,0,42"));
+        assert!(steps.starts_with(
+            "step,epoch,sel_loss,batch_loss,n_forward,n_selected,fwd_us,sel_us,bwd_us,\
+             cache_hits,cache_misses,cache_stale,sel_hash"
+        ));
         let evals = std::fs::read_to_string(&ep).unwrap();
         assert!(evals.contains("0,0,0.5,0.9"));
     }

@@ -54,6 +54,11 @@ struct WorkerHandle {
 pub struct Engine {
     workers: Vec<WorkerHandle>,
     n_params: usize,
+    /// Retained so detached sessions (async eval, debugging probes) can
+    /// be re-materialized with the workers' current weights.
+    manifest: Manifest,
+    model: String,
+    flavour: Flavour,
 }
 
 impl Engine {
@@ -88,11 +93,27 @@ impl Engine {
             }
             workers.push(WorkerHandle { tx: req_tx, rx: rep_rx, handle: Some(handle) });
         }
-        Ok(Engine { workers, n_params })
+        Ok(Engine {
+            workers,
+            n_params,
+            manifest: manifest.clone(),
+            model: model.to_string(),
+            flavour,
+        })
     }
 
     pub fn n_workers(&self) -> usize {
         self.workers.len()
+    }
+
+    /// Build a detached [`Session`] of the same model × flavour on the
+    /// *calling* thread, loaded with the workers' current parameters —
+    /// the weight-snapshot path async eval uses to score off the hot
+    /// loop without borrowing a worker.
+    pub fn fork_session(&self) -> Result<Session> {
+        let mut s = Session::new(&self.manifest, &self.model, self.flavour)?;
+        s.load_params(&self.params_to_host()?)?;
+        Ok(s)
     }
 
     fn send(&self, w: usize, req: Req) -> Result<()> {
@@ -342,6 +363,20 @@ pub fn weighted_average_grads(
 mod tests {
     use super::*;
     use crate::data::tensor::HostTensor;
+
+    #[test]
+    fn fork_session_matches_worker_params() {
+        let dir = crate::testkit::TempDir::new("engine").unwrap();
+        let m = Manifest::native(dir.path());
+        let engine = Engine::new(&m, "linreg", Flavour::Native, 2).unwrap();
+        engine.init_broadcast(9).unwrap();
+        let forked = engine.fork_session().unwrap();
+        assert_eq!(
+            forked.params_to_host().unwrap(),
+            engine.params_to_host().unwrap(),
+            "fork must carry the workers' weights bit-identically"
+        );
+    }
 
     #[test]
     fn weighted_average_matches_manual() {

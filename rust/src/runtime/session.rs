@@ -26,6 +26,9 @@ pub struct Session {
     model_name: String,
     flavour: Flavour,
     batch: usize,
+    /// Retained so the session can be re-materialized on another thread
+    /// ([`Session::fork`] / the pipeline's inference + eval stages).
+    manifest: Manifest,
 }
 
 impl Session {
@@ -49,7 +52,34 @@ impl Session {
             model_name: model.to_string(),
             flavour,
             batch: manifest.batch,
+            manifest: manifest.clone(),
         })
+    }
+
+    /// The manifest this session was built from (pipeline stages clone
+    /// it to build sibling sessions on their own threads).
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Copy the resident parameters to host — the weight snapshot the
+    /// async-eval stage ships across threads (alias of
+    /// [`Session::params_to_host`], named for intent).
+    pub fn snapshot(&self) -> Result<Vec<HostTensor>> {
+        self.params_to_host()
+    }
+
+    /// Build an independent session of the same model × flavour and, if
+    /// this session holds parameters, load a snapshot of them into the
+    /// clone. Sessions are single-threaded (backends may hold
+    /// non-`Send` handles), so cross-thread cloning goes through
+    /// `manifest()` + [`Session::new`] on the target thread instead.
+    pub fn fork(&self) -> Result<Session> {
+        let mut s = Session::new(&self.manifest, &self.model_name, self.flavour)?;
+        if self.backend.n_resident_params() == self.entry.n_params() {
+            s.load_params(&self.params_to_host()?)?;
+        }
+        Ok(s)
     }
 
     pub fn model_name(&self) -> &str {
@@ -266,6 +296,38 @@ mod tests {
         let n0 = s.stats().executions;
         s.fwd_loss(&x, &y).unwrap();
         assert_eq!(s.stats().executions, n0 + 1);
+    }
+
+    #[test]
+    fn fork_clones_weights_and_diverges_after() {
+        let mut s = native_session("linreg");
+        s.init(5).unwrap();
+        let n = s.batch();
+        let x = HostTensor::f32(vec![n, 1], vec![0.25; n]).unwrap();
+        let y = HostTensor::f32(vec![n], vec![1.0; n]).unwrap();
+        let mut f = s.fork().unwrap();
+        assert_eq!(
+            s.params_to_host().unwrap(),
+            f.params_to_host().unwrap(),
+            "fork must start bit-identical"
+        );
+        assert_eq!(s.fwd_loss(&x, &y).unwrap(), f.fwd_loss(&x, &y).unwrap());
+        // training the fork must not move the original
+        let before = s.params_to_host().unwrap();
+        let mask = vec![1.0f32; n];
+        f.train_step(&x, &y, &mask, 0.05).unwrap();
+        assert_eq!(s.params_to_host().unwrap(), before);
+        assert_ne!(f.params_to_host().unwrap(), before);
+        // snapshot() is the params_to_host alias
+        assert_eq!(s.snapshot().unwrap(), before);
+    }
+
+    #[test]
+    fn fork_of_uninitialized_session_is_uninitialized() {
+        let s = native_session("linreg");
+        let f = s.fork().unwrap();
+        assert_eq!(f.model_name(), "linreg");
+        assert_eq!(s.manifest().batch, f.manifest().batch);
     }
 
     #[test]

@@ -147,6 +147,22 @@ pub fn budget_for(ratio: f64, n_valid: usize) -> usize {
     (((ratio * n_valid as f64).round() as usize).max(1)).min(n_valid)
 }
 
+/// Order-sensitive FNV-1a fingerprint of a selection. The gathered
+/// backward reduces rows in selection order, so two trainers are only
+/// bit-identical when their selections match *including order* — this
+/// is the compact per-step observable the pipeline-vs-serial
+/// equivalence tests compare (recorded as `StepRecord::sel_hash`).
+pub fn selection_hash(selected: &[usize]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &i in selected {
+        for b in (i as u64).to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    h
+}
+
 /// Convert selected indices into the f32 0/1 mask the `train_step`
 /// executable consumes.
 pub fn selection_mask(indices: &[usize], n: usize) -> Vec<f32> {
@@ -183,6 +199,14 @@ mod tests {
     fn mask_from_indices() {
         let m = selection_mask(&[0, 3], 5);
         assert_eq!(m, vec![1.0, 0.0, 0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn selection_hash_is_order_sensitive() {
+        assert_eq!(selection_hash(&[1, 2, 3]), selection_hash(&[1, 2, 3]));
+        assert_ne!(selection_hash(&[1, 2, 3]), selection_hash(&[3, 2, 1]));
+        assert_ne!(selection_hash(&[]), selection_hash(&[0]));
+        assert_ne!(selection_hash(&[0, 1]), selection_hash(&[1]));
     }
 
     #[test]

@@ -1,0 +1,187 @@
+//! The staged pipeline bounded against the serial trainer oracle.
+//!
+//! With synchronous stage handoffs and staleness forced to zero (every
+//! loss scored under the current parameter version), the pipeline must
+//! reproduce the serial streaming trainer *bit for bit*: identical
+//! selected sets (order included — the gathered backward reduces in
+//! selection order), identical per-step losses, identical final
+//! weights, identical eval trajectory. Async mode is bounded loosely:
+//! it must complete, train and account its cache traffic.
+
+use obftf::config::TrainConfig;
+use obftf::coordinator::{PipelineTrainer, StreamingTrainer};
+use obftf::data::TensorData;
+use obftf::runtime::Manifest;
+use obftf::sampling::Method;
+
+fn manifest() -> Manifest {
+    Manifest::load_or_native(&obftf::artifacts_dir()).expect("manifest loads")
+}
+
+fn cfg(steps: usize) -> TrainConfig {
+    TrainConfig {
+        model: "mlp".to_string(),
+        method: Method::Obftf,
+        sampling_ratio: 0.25,
+        epochs: 0,
+        stream_steps: steps,
+        lr: 0.05,
+        n_train: Some(512),
+        n_test: Some(256),
+        seed: 31,
+        eval_every: 3,
+        prefetch_depth: 3,
+        ..Default::default()
+    }
+}
+
+fn assert_params_bit_identical(a: &[obftf::data::HostTensor], b: &[obftf::data::HostTensor]) {
+    assert_eq!(a.len(), b.len());
+    for (i, (ta, tb)) in a.iter().zip(b).enumerate() {
+        assert_eq!(ta.shape, tb.shape, "param {i} shape");
+        match (&ta.data, &tb.data) {
+            (TensorData::F32(va), TensorData::F32(vb)) => {
+                for (j, (x, y)) in va.iter().zip(vb).enumerate() {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "param {i}[{j}]: serial {x} vs pipeline {y}"
+                    );
+                }
+            }
+            _ => panic!("params must be f32"),
+        }
+    }
+}
+
+/// The acceptance pin: sync pipeline ≡ serial trainer on the mlp
+/// manifest, at 1 and 3 inference workers.
+#[test]
+fn sync_pipeline_is_bit_identical_to_serial_streaming() {
+    let m = manifest();
+    let c = cfg(12);
+    let mut serial = StreamingTrainer::with_manifest(&c, &m).unwrap();
+    let sreport = serial.run().unwrap();
+    let sparams = serial.trainer().session().params_to_host().unwrap();
+    assert_eq!(sreport.steps, 12);
+
+    for workers in [1usize, 3] {
+        let mut pc = c.clone();
+        pc.pipeline = true;
+        pc.pipeline_sync = true;
+        pc.pipeline_workers = workers;
+        pc.cache_shards = 3;
+        let mut p = PipelineTrainer::with_manifest(&pc, &m).unwrap();
+        let preport = p.run().unwrap();
+        assert_eq!(preport.steps, sreport.steps, "workers={workers}");
+
+        // bit-identical selected sets and per-step losses
+        let srecs = &serial.trainer().recorder.steps;
+        let precs = &p.recorder.steps;
+        assert_eq!(srecs.len(), precs.len());
+        for (a, b) in srecs.iter().zip(precs.iter()) {
+            assert_eq!(
+                a.sel_hash, b.sel_hash,
+                "workers={workers} step {}: selected sets differ",
+                a.step
+            );
+            assert_eq!(a.n_selected, b.n_selected, "step {}", a.step);
+            assert_eq!(
+                a.sel_loss.to_bits(),
+                b.sel_loss.to_bits(),
+                "workers={workers} step {} sel_loss: {} vs {}",
+                a.step,
+                a.sel_loss,
+                b.sel_loss
+            );
+            assert_eq!(
+                a.batch_loss.to_bits(),
+                b.batch_loss.to_bits(),
+                "workers={workers} step {} batch_loss",
+                a.step
+            );
+        }
+
+        // bit-identical final weights
+        let pparams = p.session().params_to_host().unwrap();
+        assert_params_bit_identical(&sparams, &pparams);
+
+        // same async-eval cadence, same values
+        assert_eq!(sreport.evals.len(), preport.evals.len());
+        assert!(!preport.evals.is_empty(), "eval cadence must have fired");
+        for (a, b) in sreport.evals.iter().zip(&preport.evals) {
+            assert_eq!(a.step, b.step);
+            assert!(
+                (a.loss - b.loss).abs() <= 1e-12 * a.loss.abs().max(1.0),
+                "eval at step {}: {} vs {}",
+                a.step,
+                a.loss,
+                b.loss
+            );
+            assert!((a.metric - b.metric).abs() <= 1e-12);
+        }
+
+        // same compute accounting
+        assert_eq!(preport.forward_examples, sreport.forward_examples);
+        assert_eq!(preport.backward_examples, sreport.backward_examples);
+    }
+}
+
+#[test]
+fn async_pipeline_trains_and_accounts_cache_traffic() {
+    let m = manifest();
+    let mut pc = cfg(30);
+    pc.model = "linreg".into();
+    pc.method = Method::MaxProb;
+    pc.lr = 0.01;
+    pc.pipeline = true;
+    pc.pipeline_workers = 3;
+    pc.pipeline_depth = 4;
+    let mut p = PipelineTrainer::with_manifest(&pc, &m).unwrap();
+    let report = p.run().unwrap();
+    assert_eq!(report.steps, 30);
+    assert!(report.final_eval.loss.is_finite());
+    assert!(!report.evals.is_empty(), "async eval must have recorded");
+    // exactly one counting lookup per step
+    let stats = p.cache_stats();
+    assert_eq!(stats.hits + stats.misses, 30);
+    // the fleet scored every issued batch (requeues only add to this)
+    assert!(p.budget.inference_forwards >= 30 * m.batch as u64);
+    // per-shard row counters saw the traffic
+    let shards = p.knobs().shards;
+    let row_lookups: u64 = (0..shards)
+        .map(|k| {
+            let s = p.shard_stats(k);
+            s.hits + s.misses
+        })
+        .sum();
+    assert!(row_lookups > 0);
+    assert!(report.realized_ratio > 0.0);
+}
+
+#[test]
+fn bounded_staleness_requeues_and_completes() {
+    let m = manifest();
+    let mut pc = cfg(20);
+    pc.model = "linreg".into();
+    pc.lr = 0.01;
+    pc.pipeline = true;
+    pc.pipeline_workers = 2;
+    // lookahead deliberately deeper than the staleness bound so the
+    // re-score path must engage for the run to finish
+    pc.pipeline_depth = 6;
+    pc.loss_max_age = 1;
+    let mut p = PipelineTrainer::with_manifest(&pc, &m).unwrap();
+    let report = p.run().unwrap();
+    assert_eq!(report.steps, 20);
+    assert!(report.final_eval.loss.is_finite());
+}
+
+#[test]
+fn pipeline_requires_streaming_mode() {
+    let m = manifest();
+    let mut pc = cfg(0);
+    pc.epochs = 1; // valid config overall, but not for the pipeline ctor
+    pc.pipeline = false; // validate() would reject pipeline+no-stream
+    assert!(PipelineTrainer::with_manifest(&pc, &m).is_err());
+}
