@@ -6,6 +6,12 @@
 //! small ratios, shrinking toward 0.45), and max-prob *collapses* — the
 //! high-loss tail (label noise) monopolizes its backward budget.
 //!
+//! Runs **hermetically**: on a fresh checkout (no `artifacts/`) the
+//! synthesized native manifest carries the cnn / cnn_lite conv chains
+//! and the native backend executes them through the blocked conv
+//! kernels (`runtime/kernels/conv`). `tests/table3_hermetic.rs` pins a
+//! tiny-budget version of this grid in CI.
+//!
 //! Run:  cargo run --release --example table3_imagenet [-- --full]
 
 use anyhow::Result;
@@ -61,8 +67,9 @@ fn main() -> Result<()> {
         }) {
             Ok(cells) => cells,
             Err(e) => {
-                // conv models need executable AOT artifacts (run `make
-                // artifacts` and build with --features pjrt)
+                // only reachable against an artifact manifest whose
+                // conv entries lack native executables and the pjrt
+                // feature is off
                 eprintln!("table3 [{model}]: skipped — {e:#}");
                 continue;
             }

@@ -1,19 +1,24 @@
 //! `table3` throughput harness: CNN (ResNet50-role) and CNN-lite
 //! (MobileNetV2-role) step latency — the paper's "higher accuracy vs
 //! higher computational efficiency" model pairing, measured on this
-//! substrate. Also benches the sharded data-parallel step (the paper's
+//! substrate. Runs hermetically on the native conv backend (no
+//! artifacts needed): per model it times the raw "ten forward" pass
+//! (exact conv GFLOP/s from the manifest geometry), the serial
+//! Algorithm-1 step, and the sharded data-parallel step (the paper's
 //! 32-GPU sync setup, scaled to worker threads).
 
 use obftf::config::TrainConfig;
 use obftf::coordinator::{ParallelTrainer, Trainer};
 use obftf::data::BatchIter;
-use obftf::runtime::Manifest;
-use obftf::sampling::Method;
+use obftf::runtime::kernels::{conv_fwd_flops, conv_train_flops};
+use obftf::runtime::{Manifest, Session};
+use obftf::sampling::{budget_for, Method};
 use obftf::util::benchkit::Bench;
 
 fn main() {
     let manifest = Manifest::load_or_native(&obftf::artifacts_dir()).unwrap();
     let mut bench = Bench::heavy();
+    let batch = manifest.batch;
 
     for model in ["cnn", "cnn_lite"] {
         let cfg = TrainConfig {
@@ -26,8 +31,9 @@ fn main() {
             n_test: Some(128),
             ..Default::default()
         };
-        // conv models need executable AOT artifacts; skip when the
-        // current build can't run them (no native dense-chain form)
+        // conv models run natively when the manifest carries their
+        // stride schedule; artifact manifests without the pjrt feature
+        // still skip
         let mut t = match Trainer::with_manifest(&cfg, &manifest) {
             Ok(t) => t,
             Err(e) => {
@@ -36,26 +42,61 @@ fn main() {
             }
         };
         let (train, _) = obftf::coordinator::build_datasets(&cfg).unwrap();
-        let batches: Vec<_> = BatchIter::new(&train, manifest.batch, None).collect();
+        let batches: Vec<_> = BatchIter::new(&train, batch, None).collect();
+
+        // exact conv FLOP accounting from the manifest geometry: the
+        // Algorithm-1 step is a full-batch "ten forward" plus a
+        // gathered train step over the b selected rows
+        let entry = manifest.model(model).unwrap();
+        let (fwd_flops, step_flops) = entry
+            .conv_chain()
+            .map(|(shapes, head)| {
+                let fwd = conv_fwd_flops(&shapes, head, batch);
+                let b = budget_for(cfg.sampling_ratio, batch);
+                (fwd, fwd + conv_train_flops(&shapes, head, b))
+            })
+            .unwrap_or((0.0, 0.0));
+        let flavour = manifest.default_flavour();
+        if let Ok(mut session) = Session::new(&manifest, model, flavour) {
+            session.init(7).unwrap();
+            let mut i = 0;
+            bench.run_throughput(&format!("table3-fwd/{model}"), fwd_flops, batch as f64, || {
+                let b = &batches[i % batches.len()];
+                session.fwd_loss(&b.x, &b.y).unwrap();
+                i += 1;
+            });
+        }
 
         let mut i = 0;
-        bench.run(&format!("table3-step/{model}/serial"), || {
-            t.step_batch(&batches[i % batches.len()]).unwrap();
-            i += 1;
-        });
+        bench.run_throughput(
+            &format!("table3-step/{model}/serial"),
+            step_flops,
+            batch as f64,
+            || {
+                t.step_batch(&batches[i % batches.len()]).unwrap();
+                i += 1;
+            },
+        );
 
-        // data-parallel variant (leader/worker over threads)
+        // data-parallel variant (leader/worker over threads); its
+        // workers run the masked full-batch backward over shards, so
+        // the gathered-step FLOP model does not apply — rows/s only
         let mut pcfg = cfg.clone();
         pcfg.workers = 2;
         let mut pt = ParallelTrainer::with_manifest(&pcfg, &manifest).unwrap();
         let mut j = 0;
-        bench.run(&format!("table3-step/{model}/workers2"), || {
-            pt.step_batch(&batches[j % batches.len()]).unwrap();
-            j += 1;
-        });
+        bench.run_throughput(
+            &format!("table3-step/{model}/workers2"),
+            0.0,
+            batch as f64,
+            || {
+                pt.step_batch(&batches[j % batches.len()]).unwrap();
+                j += 1;
+            },
+        );
     }
     // the data-parallel shape is model-independent; fall back to the
-    // mlp so the sharded step is still measured without artifacts
+    // mlp so the sharded step is still measured if conv cannot run
     if bench.results().is_empty() && manifest.model("mlp").is_ok() {
         let cfg = TrainConfig {
             model: "mlp".into(),
@@ -69,7 +110,7 @@ fn main() {
             ..Default::default()
         };
         let (train, _) = obftf::coordinator::build_datasets(&cfg).unwrap();
-        let batches: Vec<_> = BatchIter::new(&train, manifest.batch, None).collect();
+        let batches: Vec<_> = BatchIter::new(&train, batch, None).collect();
         let mut pt = ParallelTrainer::with_manifest(&cfg, &manifest).unwrap();
         let mut j = 0;
         bench.run("table3-step/mlp/workers2", || {

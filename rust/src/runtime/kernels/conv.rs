@@ -1,0 +1,405 @@
+//! Conv2d kernel family: SAME-padded NHWC convolution lowered onto the
+//! blocked GEMM tiles, plus global average pooling.
+//!
+//! The blocked path is **im2col + GEMM**: each conv layer's input is
+//! unfolded into a `(n·oh·ow) × (kh·kw·cin)` patch matrix whose rows
+//! stream through the exact packed-panel [`MR`]×[`NR`] micro-kernels of
+//! [`super::gemm`] — the HWIO weight layout `[kh, kw, cin, cout]` is,
+//! flattened, already the row-major `(kh·kw·cin) × cout` GEMM operand,
+//! so the forward fuses bias + ReLU for free, `dW = patchesᵀ · dz`
+//! reuses the transposed weight-gradient kernel, and `dx` is
+//! `dz · Wᵀ` scattered back through [`col2im`].
+//!
+//! **Determinism.** Patch rows are ordered `(image, oy, ox)` with the
+//! image index outermost, so batch-row sharding in the GEMM and
+//! image sharding in `col2im` give every output element a fixed
+//! reduction order at any thread count, and a masked-out image's
+//! exact-zero `dz` rows contribute exact zeros interleaved in the same
+//! ascending order the gathered sub-batch visits — the conv chain
+//! inherits the gathered-vs-masked bit-equality of the dense kernels
+//! (see the module docs in [`super`]).
+//!
+//! A deliberate trade: a train step unfolds each layer input twice
+//! (once in the forward, once in `dW`), keeping the kernel API
+//! stateless and the arena's working set one buffer deep. Retaining
+//! the forward's patch matrices across the backward (a few MB per
+//! layer) is the named upgrade path if profile data shows the second
+//! unfold matters — the values are identical either way, so no
+//! numerics would change.
+//!
+//! [`MR`]: super::MR
+//! [`NR`]: super::NR
+
+use super::pool::par_rows;
+use super::{gemm, Arena};
+
+/// Geometry of one SAME-padded conv layer (NHWC activations, HWIO
+/// weights), resolved once at backend construction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConvShape {
+    pub h: usize,
+    pub w: usize,
+    pub cin: usize,
+    pub cout: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub pad_top: usize,
+    pub pad_left: usize,
+    pub oh: usize,
+    pub ow: usize,
+}
+
+impl ConvShape {
+    /// XLA `SAME` geometry: `oh = ceil(h/s)`, total padding
+    /// `max((oh−1)·s + kh − h, 0)` split low-side-first (top gets
+    /// `total/2`) — matches `jax.lax.conv_general_dilated(.., "SAME")`.
+    pub fn same(
+        h: usize,
+        w: usize,
+        cin: usize,
+        cout: usize,
+        kh: usize,
+        kw: usize,
+        stride: usize,
+    ) -> ConvShape {
+        assert!(stride > 0, "stride must be positive");
+        let oh = h.div_ceil(stride);
+        let ow = w.div_ceil(stride);
+        let pad_h = ((oh - 1) * stride + kh).saturating_sub(h);
+        let pad_w = ((ow - 1) * stride + kw).saturating_sub(w);
+        ConvShape {
+            h,
+            w,
+            cin,
+            cout,
+            kh,
+            kw,
+            stride,
+            pad_top: pad_h / 2,
+            pad_left: pad_w / 2,
+            oh,
+            ow,
+        }
+    }
+
+    /// Input elements per image (`h·w·cin`).
+    pub fn in_elems(&self) -> usize {
+        self.h * self.w * self.cin
+    }
+
+    /// Output elements per image (`oh·ow·cout`).
+    pub fn out_elems(&self) -> usize {
+        self.oh * self.ow * self.cout
+    }
+
+    /// Spatial output positions per image (`oh·ow`).
+    pub fn positions(&self) -> usize {
+        self.oh * self.ow
+    }
+
+    /// im2col patch width (`kh·kw·cin`) — the GEMM reduction length.
+    pub fn patch_len(&self) -> usize {
+        self.kh * self.kw * self.cin
+    }
+
+    /// Multiply-add FLOPs of one forward pass over `n` images.
+    pub fn fwd_flops(&self, n: usize) -> f64 {
+        2.0 * n as f64 * self.positions() as f64 * self.patch_len() as f64 * self.cout as f64
+    }
+}
+
+/// Unfold `n` NHWC images into the patch matrix: row `(i·oh + oy)·ow + ox`,
+/// column `(ky·kw + kx)·cin + c`. Out-of-image taps are zero (SAME
+/// padding); every row is fully rewritten, so `cols` may be dirty.
+/// Sharded over images — each image's rows are a disjoint, purely
+/// written block, so the unfold is bit-identical at any thread count.
+pub fn im2col(x: &[f32], n: usize, s: &ConvShape, cols: &mut [f32], threads: usize) {
+    debug_assert_eq!(x.len(), n * s.in_elems());
+    debug_assert_eq!(cols.len(), n * s.positions() * s.patch_len());
+    let pl = s.patch_len();
+    let per_image = s.positions() * pl;
+    par_rows(cols, n, per_image, threads, |i0, i1, chunk| {
+        for i in i0..i1 {
+            let img = &x[i * s.in_elems()..(i + 1) * s.in_elems()];
+            let rows = &mut chunk[(i - i0) * per_image..(i - i0 + 1) * per_image];
+            for oy in 0..s.oh {
+                for ox in 0..s.ow {
+                    let pos = oy * s.ow + ox;
+                    let dst = &mut rows[pos * pl..(pos + 1) * pl];
+                    dst.fill(0.0);
+                    for ky in 0..s.kh {
+                        let y = (oy * s.stride + ky) as isize - s.pad_top as isize;
+                        if y < 0 || y as usize >= s.h {
+                            continue;
+                        }
+                        for kx in 0..s.kw {
+                            let xx = (ox * s.stride + kx) as isize - s.pad_left as isize;
+                            if xx < 0 || xx as usize >= s.w {
+                                continue;
+                            }
+                            let src = (y as usize * s.w + xx as usize) * s.cin;
+                            let at = (ky * s.kw + kx) * s.cin;
+                            dst[at..at + s.cin].copy_from_slice(&img[src..src + s.cin]);
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Fold a patch-gradient matrix (the `dz · Wᵀ` of [`conv2d_grad_x`])
+/// back onto image gradients, accumulating overlapping taps, with an
+/// optional fused ReLU gate by the layer's input activation (applied
+/// per image while its chunk is cache-hot; gating after the scatter
+/// is elementwise, so the ungated values are bit-identical). Sharded
+/// over images: each image's `dx` is written by exactly one thread in
+/// a fixed `(oy, ox, ky, kx)` order, so the scatter is bit-identical
+/// at any thread count. `dx` is fully overwritten.
+pub fn col2im(
+    dpatch: &[f32],
+    n: usize,
+    s: &ConvShape,
+    dx: &mut [f32],
+    gate: Option<&[f32]>,
+    threads: usize,
+) {
+    debug_assert_eq!(dpatch.len(), n * s.positions() * s.patch_len());
+    debug_assert_eq!(dx.len(), n * s.in_elems());
+    let pl = s.patch_len();
+    par_rows(dx, n, s.in_elems(), threads, |i0, i1, chunk| {
+        chunk.fill(0.0);
+        for i in i0..i1 {
+            let img = &mut chunk[(i - i0) * s.in_elems()..(i - i0 + 1) * s.in_elems()];
+            for oy in 0..s.oh {
+                for ox in 0..s.ow {
+                    let row = (i * s.oh + oy) * s.ow + ox;
+                    let patch = &dpatch[row * pl..(row + 1) * pl];
+                    for ky in 0..s.kh {
+                        let y = (oy * s.stride + ky) as isize - s.pad_top as isize;
+                        if y < 0 || y as usize >= s.h {
+                            continue;
+                        }
+                        for kx in 0..s.kw {
+                            let xx = (ox * s.stride + kx) as isize - s.pad_left as isize;
+                            if xx < 0 || xx as usize >= s.w {
+                                continue;
+                            }
+                            let dst = (y as usize * s.w + xx as usize) * s.cin;
+                            let at = (ky * s.kw + kx) * s.cin;
+                            for (d, &v) in
+                                img[dst..dst + s.cin].iter_mut().zip(&patch[at..at + s.cin])
+                            {
+                                *d += v;
+                            }
+                        }
+                    }
+                }
+            }
+            if let Some(g) = gate {
+                relu_gate(img, &g[i * s.in_elems()..(i + 1) * s.in_elems()]);
+            }
+        }
+    });
+}
+
+/// Blocked `out = act(conv2d(x, k) + b)`: im2col, then the packed-panel
+/// GEMM over `(n·oh·ow)` patch rows with fused bias + ReLU.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_bias_act_blocked(
+    arena: &mut Arena,
+    x: &[f32],
+    k: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    n: usize,
+    s: &ConvShape,
+    relu: bool,
+    threads: usize,
+) {
+    let rows = n * s.positions();
+    let mut cols = arena.take(rows * s.patch_len());
+    im2col(x, n, s, &mut cols, threads);
+    gemm::matmul_bias_act(arena, &cols, k, b, out, rows, s.patch_len(), s.cout, relu, threads);
+    arena.put(cols);
+}
+
+/// Blocked `dk = patchesᵀ · dz`, `db = Σ dz` (sum over batch *and*
+/// spatial positions, ascending patch-row order per element).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_grad_w_blocked(
+    arena: &mut Arena,
+    x: &[f32],
+    dz: &[f32],
+    dk: &mut [f32],
+    db: &mut [f32],
+    n: usize,
+    s: &ConvShape,
+    threads: usize,
+) {
+    let rows = n * s.positions();
+    let mut cols = arena.take(rows * s.patch_len());
+    im2col(x, n, s, &mut cols, threads);
+    gemm::grad_weights(arena, &cols, dz, dk, db, rows, s.patch_len(), s.cout, threads);
+    arena.put(cols);
+}
+
+/// Blocked input gradient: `dpatch = dz · Wᵀ` (packed, ungated), folded
+/// back with [`col2im`], then ReLU-gated by the layer's input
+/// activation `h_in` (the previous layer's post-ReLU output).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_grad_x_blocked(
+    arena: &mut Arena,
+    dz: &[f32],
+    k: &[f32],
+    h_in: &[f32],
+    dx: &mut [f32],
+    n: usize,
+    s: &ConvShape,
+    threads: usize,
+) {
+    let rows = n * s.positions();
+    let mut dpatch = arena.take(rows * s.patch_len());
+    gemm::dz_wt(arena, dz, k, &mut dpatch, rows, s.patch_len(), s.cout, threads);
+    col2im(&dpatch, n, s, dx, Some(h_in), threads);
+    arena.put(dpatch);
+}
+
+/// Zero `dst` wherever the matching activation is not strictly
+/// positive — the ReLU gate (activation > 0 ⟺ pre-activation > 0).
+pub fn relu_gate(dst: &mut [f32], act: &[f32]) {
+    debug_assert_eq!(dst.len(), act.len());
+    for (d, &hv) in dst.iter_mut().zip(act) {
+        if hv <= 0.0 {
+            *d = 0.0;
+        }
+    }
+}
+
+/// Global average pool: `out[i][c] = mean over positions of
+/// x[i][pos][c]` (positions reduced in ascending order). Shared by both
+/// kernel flavours — the op is memory-bound and already deterministic.
+pub fn global_avg_pool(x: &[f32], out: &mut [f32], n: usize, positions: usize, c: usize) {
+    debug_assert_eq!(x.len(), n * positions * c);
+    debug_assert_eq!(out.len(), n * c);
+    let inv = 1.0 / positions as f32;
+    for i in 0..n {
+        let dst = &mut out[i * c..(i + 1) * c];
+        dst.fill(0.0);
+        let img = &x[i * positions * c..(i + 1) * positions * c];
+        for pos in 0..positions {
+            for (d, &v) in dst.iter_mut().zip(&img[pos * c..(pos + 1) * c]) {
+                *d += v;
+            }
+        }
+        for d in dst.iter_mut() {
+            *d *= inv;
+        }
+    }
+}
+
+/// Global-average-pool gradient: every position inherits
+/// `dpool[i][c] / positions`, optionally ReLU-gated in place by the
+/// pooled layer's activation (one pass instead of spread-then-gate;
+/// identical values). `dx` is fully overwritten.
+pub fn global_avg_pool_grad(
+    dpool: &[f32],
+    dx: &mut [f32],
+    gate: Option<&[f32]>,
+    n: usize,
+    positions: usize,
+    c: usize,
+) {
+    debug_assert_eq!(dpool.len(), n * c);
+    debug_assert_eq!(dx.len(), n * positions * c);
+    if let Some(g) = gate {
+        debug_assert_eq!(g.len(), dx.len());
+    }
+    let inv = 1.0 / positions as f32;
+    for i in 0..n {
+        let src = &dpool[i * c..(i + 1) * c];
+        for pos in 0..positions {
+            let at = (i * positions + pos) * c;
+            let dst = &mut dx[at..at + c];
+            match gate {
+                Some(g) => {
+                    for ((d, &v), &hv) in dst.iter_mut().zip(src).zip(&g[at..at + c]) {
+                        *d = if hv > 0.0 { v * inv } else { 0.0 };
+                    }
+                }
+                None => {
+                    for (d, &v) in dst.iter_mut().zip(src) {
+                        *d = v * inv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_geometry_matches_xla() {
+        // 16×16, k=3: stride 1 → 16×16 pad (1,1); stride 2 → 8×8 with
+        // one total pad row split low-side-first (top 0, bottom 1)
+        let s1 = ConvShape::same(16, 16, 3, 8, 3, 3, 1);
+        assert_eq!((s1.oh, s1.ow, s1.pad_top, s1.pad_left), (16, 16, 1, 1));
+        let s2 = ConvShape::same(16, 16, 3, 8, 3, 3, 2);
+        assert_eq!((s2.oh, s2.ow, s2.pad_top, s2.pad_left), (8, 8, 0, 0));
+        assert_eq!((s2.oh - 1) * 2 + 3 - 16, 1, "one pad row, on the bottom");
+        // degenerate 1×1 image with a 3×3 kernel: all taps but the
+        // center are padding
+        let s3 = ConvShape::same(1, 1, 2, 4, 3, 3, 1);
+        assert_eq!((s3.oh, s3.ow, s3.pad_top, s3.pad_left), (1, 1, 1, 1));
+        // kernel == image, no padding needed at stride = image size
+        let s4 = ConvShape::same(3, 3, 1, 1, 3, 3, 3);
+        assert_eq!((s4.oh, s4.ow, s4.pad_top, s4.pad_left), (1, 1, 0, 0));
+        assert_eq!(s4.patch_len(), 9);
+        assert_eq!(s1.fwd_flops(2), 2.0 * 2.0 * 256.0 * 27.0 * 8.0);
+    }
+
+    #[test]
+    fn im2col_col2im_roundtrip_counts_taps() {
+        // col2im(im2col(1s)) counts, per input element, how many patches
+        // it participates in — every in-image tap exactly once per use.
+        let s = ConvShape::same(3, 3, 1, 1, 3, 3, 1);
+        let n = 1;
+        let x = vec![1.0f32; n * s.in_elems()];
+        let mut cols = vec![7.0f32; n * s.positions() * s.patch_len()];
+        im2col(&x, n, &s, &mut cols, 1);
+        // padding taps must be exact zeros even in a dirty buffer
+        let total: f32 = cols.iter().sum();
+        // 9 positions × 9 taps = 81 taps; corner positions see 4 in-image
+        // taps, edges 6, center 9 → 4·4 + 4·6 + 9 = 49
+        assert_eq!(total, 49.0);
+        let mut dx = vec![3.0f32; n * s.in_elems()];
+        col2im(&cols, n, &s, &mut dx, None, 1);
+        // center pixel participates in all 9 patches, corners in 4
+        assert_eq!(dx[4], 9.0);
+        assert_eq!(dx[0], 4.0);
+        assert_eq!(dx.iter().sum::<f32>(), 49.0);
+    }
+
+    #[test]
+    fn gap_forward_and_grad() {
+        // 2 images × 2 positions × 2 channels
+        let x = vec![1.0, 2.0, 3.0, 4.0, 10.0, 20.0, 30.0, 40.0];
+        let mut out = vec![0.0f32; 4];
+        global_avg_pool(&x, &mut out, 2, 2, 2);
+        assert_eq!(out, vec![2.0, 3.0, 20.0, 30.0]);
+        let mut dx = vec![9.0f32; 8];
+        global_avg_pool_grad(&out, &mut dx, None, 2, 2, 2);
+        assert_eq!(dx, vec![1.0, 1.5, 1.0, 1.5, 10.0, 15.0, 10.0, 15.0]);
+    }
+
+    #[test]
+    fn relu_gate_zeroes_inactive_lanes() {
+        let mut d = vec![1.0f32, 2.0, 3.0, -4.0];
+        relu_gate(&mut d, &[0.5, 0.0, -1.0, 2.0]);
+        assert_eq!(d, vec![1.0, 0.0, 0.0, -4.0]);
+    }
+}

@@ -217,13 +217,17 @@ pub fn grad_weights(
     arena.put(ht);
 }
 
-/// Blocked ReLU-gated `dh = dz · Wᵀ`; see [`super::grad_input`].
+/// Shared `dh = dz · Wᵀ` core with an optional fused ReLU gate: the
+/// gate (when given the layer's input activation) is applied per row
+/// block inside the parallel region while the block is cache-hot.
+/// Gating is an elementwise zeroing after each block's accumulation,
+/// so the ungated values are bit-identical either way.
 #[allow(clippy::too_many_arguments)]
-pub fn grad_input(
+fn dz_wt_impl(
     arena: &mut Arena,
     dz: &[f32],
     w: &[f32],
-    h: &[f32],
+    gate: Option<&[f32]>,
     dh: &mut [f32],
     n: usize,
     din: usize,
@@ -258,13 +262,15 @@ pub fn grad_input(
                     }
                 }
             }
-            // ReLU gate by the layer's activation
-            for r in 0..m {
-                let hrow = &h[(s + i + r) * din..(s + i + r + 1) * din];
-                let dst = &mut chunk[(i + r) * din..(i + r + 1) * din];
-                for (d, &hv) in dst.iter_mut().zip(hrow) {
-                    if hv <= 0.0 {
-                        *d = 0.0;
+            if let Some(h) = gate {
+                // ReLU gate by the layer's activation
+                for r in 0..m {
+                    let hrow = &h[(s + i + r) * din..(s + i + r + 1) * din];
+                    let dst = &mut chunk[(i + r) * din..(i + r + 1) * din];
+                    for (d, &hv) in dst.iter_mut().zip(hrow) {
+                        if hv <= 0.0 {
+                            *d = 0.0;
+                        }
                     }
                 }
             }
@@ -272,6 +278,39 @@ pub fn grad_input(
         }
     });
     arena.put(wt);
+}
+
+/// Blocked plain `dh = dz · Wᵀ` (no activation gate) — the conv
+/// chain's ungated head-to-pool / patch gradients
+/// ([`super::matmul_dz_wt`], [`super::conv::conv2d_grad_x_blocked`]).
+#[allow(clippy::too_many_arguments)]
+pub fn dz_wt(
+    arena: &mut Arena,
+    dz: &[f32],
+    w: &[f32],
+    dh: &mut [f32],
+    n: usize,
+    din: usize,
+    dout: usize,
+    threads: usize,
+) {
+    dz_wt_impl(arena, dz, w, None, dh, n, din, dout, threads);
+}
+
+/// Blocked ReLU-gated `dh = dz · Wᵀ`; see [`super::grad_input`].
+#[allow(clippy::too_many_arguments)]
+pub fn grad_input(
+    arena: &mut Arena,
+    dz: &[f32],
+    w: &[f32],
+    h: &[f32],
+    dh: &mut [f32],
+    n: usize,
+    din: usize,
+    dout: usize,
+    threads: usize,
+) {
+    dz_wt_impl(arena, dz, w, Some(h), dh, n, din, dout, threads);
 }
 
 #[cfg(test)]

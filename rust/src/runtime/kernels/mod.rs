@@ -1,5 +1,5 @@
 //! The native backend's kernel subsystem: cache-blocked, register-tiled
-//! f32 dense kernels with a naive reference oracle.
+//! f32 dense **and conv** kernels with a naive reference oracle.
 //!
 //! Three kernels cover the whole dense-chain training step:
 //!
@@ -9,14 +9,27 @@
 //! * [`grad_input`]      — `dh = relu_gate(h) ⊙ (dz · Wᵀ)` (backward,
 //!   input gradients).
 //!
+//! The conv family extends the same contract to SAME-padded NHWC
+//! convolution (the cnn / cnn_lite stacks of Table 3):
+//!
+//! * [`conv2d_bias_act`] — `out = act(conv2d(x, K) + b)` (forward);
+//! * [`conv2d_grad_w`]   — `dK = patchesᵀ · dz`, `db = Σ dz`;
+//! * [`conv2d_grad_x`]   — input gradient, ReLU-gated by the layer's
+//!   input activation;
+//! * [`matmul_dz_wt`]    — plain `dz · Wᵀ` (the linear pooled node);
+//! * [`conv::global_avg_pool`] / [`conv::global_avg_pool_grad`].
+//!
 //! Two implementations sit behind [`KernelConfig`]:
 //!
 //! * [`gemm`] — the blocked path: weights packed into [`NR`]-wide
 //!   column panels (contiguous streaming), [`MR`]×[`NR`] register
 //!   tiles, fused bias + ReLU epilogues, and batch-row sharding across
-//!   a scoped thread pool ([`pool`]);
-//! * [`reference`] — the naive row-major triple loops the blocked path
-//!   is property-tested against (`tests/kernel_parity.rs`).
+//!   a scoped thread pool ([`pool`]); conv lowers onto the same tiles
+//!   via im2col ([`conv`]);
+//! * [`reference`] — the naive row-major loops (triple loops for
+//!   dense, direct seven-deep loops for conv) the blocked path is
+//!   property-tested against (`tests/kernel_parity.rs`,
+//!   `tests/conv_parity.rs`).
 //!
 //! **Determinism contract.** Every per-element reduction runs in a
 //! fixed index order that does not depend on the thread count or on how
@@ -37,9 +50,12 @@
 
 #![allow(clippy::too_many_arguments)] // kernels take flat slices + dims
 
+pub mod conv;
 pub mod gemm;
 pub mod pool;
 pub mod reference;
+
+pub use conv::ConvShape;
 
 /// Register-tile rows (batch dimension): each micro-kernel invocation
 /// computes `MR` output rows so a packed panel line is reused `MR`
@@ -252,6 +268,131 @@ pub fn grad_input(
     }
 }
 
+/// Plain `dh = dz · Wᵀ` with **no** activation gate — the gradient
+/// through a linear node (the conv chain's global-average-pool output
+/// feeding the dense head). Same shapes as [`grad_input`].
+pub fn matmul_dz_wt(
+    cfg: &KernelConfig,
+    arena: &mut Arena,
+    dz: &[f32],
+    w: &[f32],
+    dh: &mut [f32],
+    n: usize,
+    din: usize,
+    dout: usize,
+) {
+    debug_assert_eq!(dz.len(), n * dout);
+    debug_assert_eq!(w.len(), din * dout);
+    debug_assert_eq!(dh.len(), n * din);
+    match cfg.flavour {
+        KernelFlavour::Reference => reference::dz_wt(dz, w, dh, n, din, dout),
+        KernelFlavour::Blocked => {
+            let threads = cfg.threads_for(n * din * dout);
+            gemm::dz_wt(arena, dz, w, dh, n, din, dout, threads);
+        }
+    }
+}
+
+/// `out = act(conv2d(x, k) + b)` over `n` SAME-padded NHWC images:
+/// `x` is `n×h×w×cin`, `k` is HWIO `kh×kw×cin×cout`, `b` is `cout`,
+/// `out` is `n×oh×ow×cout` (all flat, row-major).
+pub fn conv2d_bias_act(
+    cfg: &KernelConfig,
+    arena: &mut Arena,
+    x: &[f32],
+    k: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    n: usize,
+    s: &ConvShape,
+    relu: bool,
+) {
+    debug_assert_eq!(x.len(), n * s.in_elems());
+    debug_assert_eq!(k.len(), s.patch_len() * s.cout);
+    debug_assert_eq!(b.len(), s.cout);
+    debug_assert_eq!(out.len(), n * s.out_elems());
+    match cfg.flavour {
+        KernelFlavour::Reference => reference::conv2d_bias_act(x, k, b, out, n, s, relu),
+        KernelFlavour::Blocked => {
+            let threads = cfg.threads_for(n * s.positions() * s.patch_len() * s.cout);
+            conv::conv2d_bias_act_blocked(arena, x, k, b, out, n, s, relu, threads);
+        }
+    }
+}
+
+/// `dk = patchesᵀ · dz`, `db = Σ dz` for one conv layer: `x` is the
+/// layer input (`n×h×w×cin`), `dz` the output gradient
+/// (`n×oh×ow×cout`), `dk` HWIO-shaped, `db` `cout`. Patch rows reduce
+/// in ascending `(image, oy, ox)` order for every output element.
+pub fn conv2d_grad_w(
+    cfg: &KernelConfig,
+    arena: &mut Arena,
+    x: &[f32],
+    dz: &[f32],
+    dk: &mut [f32],
+    db: &mut [f32],
+    n: usize,
+    s: &ConvShape,
+) {
+    debug_assert_eq!(x.len(), n * s.in_elems());
+    debug_assert_eq!(dz.len(), n * s.out_elems());
+    debug_assert_eq!(dk.len(), s.patch_len() * s.cout);
+    debug_assert_eq!(db.len(), s.cout);
+    match cfg.flavour {
+        KernelFlavour::Reference => reference::conv2d_grad_w(x, dz, dk, db, n, s),
+        KernelFlavour::Blocked => {
+            let threads = cfg.threads_for(n * s.positions() * s.patch_len() * s.cout);
+            conv::conv2d_grad_w_blocked(arena, x, dz, dk, db, n, s, threads);
+        }
+    }
+}
+
+/// Conv input gradient `dx = relu_gate(h_in) ⊙ scatter(dz · Kᵀ)`:
+/// `h_in` is the layer's input activation (the previous layer's
+/// post-ReLU output), `dx` is `n×h×w×cin` and fully overwritten.
+pub fn conv2d_grad_x(
+    cfg: &KernelConfig,
+    arena: &mut Arena,
+    dz: &[f32],
+    k: &[f32],
+    h_in: &[f32],
+    dx: &mut [f32],
+    n: usize,
+    s: &ConvShape,
+) {
+    debug_assert_eq!(dz.len(), n * s.out_elems());
+    debug_assert_eq!(k.len(), s.patch_len() * s.cout);
+    debug_assert_eq!(h_in.len(), n * s.in_elems());
+    debug_assert_eq!(dx.len(), n * s.in_elems());
+    match cfg.flavour {
+        KernelFlavour::Reference => reference::conv2d_grad_x(dz, k, h_in, dx, n, s),
+        KernelFlavour::Blocked => {
+            let threads = cfg.threads_for(n * s.positions() * s.patch_len() * s.cout);
+            conv::conv2d_grad_x_blocked(arena, dz, k, h_in, dx, n, s, threads);
+        }
+    }
+}
+
+/// Multiply-add FLOPs of one forward pass over a conv→GAP→dense chain:
+/// `shapes` are the conv layers, `head = (c_last, out_width)`.
+pub fn conv_fwd_flops(shapes: &[ConvShape], head: (usize, usize), n: usize) -> f64 {
+    let convs: f64 = shapes.iter().map(|s| s.fwd_flops(n)).sum();
+    convs + 2.0 * n as f64 * head.0 as f64 * head.1 as f64
+}
+
+/// FLOPs of one full conv train step: forward + dK (same cost) per
+/// layer, plus dx for every layer but the first, plus the dense head's
+/// forward/dW/dh.
+pub fn conv_train_flops(shapes: &[ConvShape], head: (usize, usize), n: usize) -> f64 {
+    let convs: f64 = shapes
+        .iter()
+        .enumerate()
+        .map(|(l, s)| s.fwd_flops(n) * if l == 0 { 2.0 } else { 3.0 })
+        .sum();
+    let head_flops = 2.0 * n as f64 * head.0 as f64 * head.1 as f64;
+    convs + 3.0 * head_flops
+}
+
 /// Multiply-add FLOPs (counting mul and add separately) of one forward
 /// pass over a dense chain with layer widths `dims`, batch `n`.
 pub fn dense_fwd_flops(dims: &[usize], n: usize) -> f64 {
@@ -326,6 +467,24 @@ mod tests {
         assert_eq!(cfg.threads_for(PAR_THRESHOLD_FLOPS), 8);
         let env = KernelConfig::from_env();
         assert!(env.threads >= 1);
+    }
+
+    #[test]
+    fn flop_model_counts_cnn_lite() {
+        // cnn_lite: 16×16×3 → conv(16, s2) → conv(32, s2) → GAP → 100
+        let s1 = ConvShape::same(16, 16, 3, 16, 3, 3, 2);
+        let s2 = ConvShape::same(s1.oh, s1.ow, 16, 32, 3, 3, 2);
+        let shapes = [s1, s2];
+        let n = 128.0;
+        let fwd = conv_fwd_flops(&shapes, (32, 100), 128);
+        let want = 2.0 * n * (64.0 * 27.0 * 16.0 + 16.0 * 144.0 * 32.0 + 32.0 * 100.0);
+        assert_eq!(fwd, want);
+        let train = conv_train_flops(&shapes, (32, 100), 128);
+        // backward = forward again (dK/dW) + dx for every non-first
+        // conv layer + the head's dh (dz·Wᵀ)
+        let dx2 = 2.0 * n * 16.0 * 144.0 * 32.0;
+        let head_dh = 2.0 * n * 32.0 * 100.0;
+        assert_eq!(train, 2.0 * fwd + dx2 + head_dh);
     }
 
     #[test]

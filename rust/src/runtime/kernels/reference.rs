@@ -3,6 +3,14 @@
 //! (`tests/kernel_parity.rs`) and selectable at runtime via
 //! `OBFTF_NATIVE_KERNELS=reference` so benches can measure the
 //! blocked-kernel speedup against the exact code it replaced.
+//!
+//! The conv family (`conv2d_*`) follows the same contract: direct
+//! seven-deep loops over the SAME-padded geometry of
+//! [`super::conv::ConvShape`], no im2col, no packing — the oracle the
+//! blocked im2col/GEMM lowering is property-tested against
+//! (`tests/conv_parity.rs`).
+
+use super::conv::{relu_gate, ConvShape};
 
 /// `out = act(h · W + b)`, one batch row at a time (ref.py
 /// `matmul_bias_act`).
@@ -101,6 +109,171 @@ pub fn grad_input(
     }
 }
 
+/// Plain `dh = dz · Wᵀ` (no ReLU gate): the head-to-pool gradient of
+/// the conv chain, where the pooled activation is a linear node.
+pub fn dz_wt(dz: &[f32], w: &[f32], dh: &mut [f32], n: usize, din: usize, dout: usize) {
+    for i in 0..n {
+        let drow = &dz[i * dout..(i + 1) * dout];
+        let orow = &mut dh[i * din..(i + 1) * din];
+        for (k, o) in orow.iter_mut().enumerate() {
+            let wrow = &w[k * dout..(k + 1) * dout];
+            let mut s = 0.0f32;
+            for (&dv, &wv) in drow.iter().zip(wrow) {
+                s += dv * wv;
+            }
+            *o = s;
+        }
+    }
+}
+
+/// Direct `out = act(conv2d(x, k) + b)` over SAME-padded NHWC images,
+/// HWIO weights; one output position at a time (the conv oracle).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_bias_act(
+    x: &[f32],
+    k: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    n: usize,
+    s: &ConvShape,
+    relu: bool,
+) {
+    for i in 0..n {
+        let img = &x[i * s.in_elems()..(i + 1) * s.in_elems()];
+        for oy in 0..s.oh {
+            for ox in 0..s.ow {
+                let row = (i * s.oh + oy) * s.ow + ox;
+                let orow = &mut out[row * s.cout..(row + 1) * s.cout];
+                orow.copy_from_slice(b);
+                for ky in 0..s.kh {
+                    let y = (oy * s.stride + ky) as isize - s.pad_top as isize;
+                    if y < 0 || y as usize >= s.h {
+                        continue;
+                    }
+                    for kx in 0..s.kw {
+                        let xx = (ox * s.stride + kx) as isize - s.pad_left as isize;
+                        if xx < 0 || xx as usize >= s.w {
+                            continue;
+                        }
+                        for c in 0..s.cin {
+                            let hv = img[(y as usize * s.w + xx as usize) * s.cin + c];
+                            if hv == 0.0 {
+                                continue; // adding 0·w is exact; skipping is too
+                            }
+                            let wat = ((ky * s.kw + kx) * s.cin + c) * s.cout;
+                            let wrow = &k[wat..wat + s.cout];
+                            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                                *o += hv * wv;
+                            }
+                        }
+                    }
+                }
+                if relu {
+                    for v in orow.iter_mut() {
+                        if *v < 0.0 {
+                            *v = 0.0;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Direct `dk = Σ x-patch ⊗ dz`, `db = Σ dz` (sum over batch and
+/// spatial positions, patch rows reduced in ascending order).
+pub fn conv2d_grad_w(
+    x: &[f32],
+    dz: &[f32],
+    dk: &mut [f32],
+    db: &mut [f32],
+    n: usize,
+    s: &ConvShape,
+) {
+    dk.fill(0.0);
+    db.fill(0.0);
+    for i in 0..n {
+        let img = &x[i * s.in_elems()..(i + 1) * s.in_elems()];
+        for oy in 0..s.oh {
+            for ox in 0..s.ow {
+                let row = (i * s.oh + oy) * s.ow + ox;
+                let drow = &dz[row * s.cout..(row + 1) * s.cout];
+                for (dbv, &dv) in db.iter_mut().zip(drow) {
+                    *dbv += dv;
+                }
+                for ky in 0..s.kh {
+                    let y = (oy * s.stride + ky) as isize - s.pad_top as isize;
+                    if y < 0 || y as usize >= s.h {
+                        continue;
+                    }
+                    for kx in 0..s.kw {
+                        let xx = (ox * s.stride + kx) as isize - s.pad_left as isize;
+                        if xx < 0 || xx as usize >= s.w {
+                            continue;
+                        }
+                        for c in 0..s.cin {
+                            let hv = img[(y as usize * s.w + xx as usize) * s.cin + c];
+                            if hv == 0.0 {
+                                continue;
+                            }
+                            let wat = ((ky * s.kw + kx) * s.cin + c) * s.cout;
+                            let krow = &mut dk[wat..wat + s.cout];
+                            for (g, &dv) in krow.iter_mut().zip(drow) {
+                                *g += hv * dv;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Direct input gradient: scatter `dz · Wᵀ` back onto the input image
+/// in ascending `(oy, ox, ky, kx)` order, then ReLU-gate by the
+/// layer's input activation `h_in`. `dx` is fully overwritten.
+pub fn conv2d_grad_x(
+    dz: &[f32],
+    k: &[f32],
+    h_in: &[f32],
+    dx: &mut [f32],
+    n: usize,
+    s: &ConvShape,
+) {
+    dx.fill(0.0);
+    for i in 0..n {
+        let img = &mut dx[i * s.in_elems()..(i + 1) * s.in_elems()];
+        for oy in 0..s.oh {
+            for ox in 0..s.ow {
+                let row = (i * s.oh + oy) * s.ow + ox;
+                let drow = &dz[row * s.cout..(row + 1) * s.cout];
+                for ky in 0..s.kh {
+                    let y = (oy * s.stride + ky) as isize - s.pad_top as isize;
+                    if y < 0 || y as usize >= s.h {
+                        continue;
+                    }
+                    for kx in 0..s.kw {
+                        let xx = (ox * s.stride + kx) as isize - s.pad_left as isize;
+                        if xx < 0 || xx as usize >= s.w {
+                            continue;
+                        }
+                        for c in 0..s.cin {
+                            let wat = ((ky * s.kw + kx) * s.cin + c) * s.cout;
+                            let wrow = &k[wat..wat + s.cout];
+                            let mut sum = 0.0f32;
+                            for (&dv, &wv) in drow.iter().zip(wrow) {
+                                sum += dv * wv;
+                            }
+                            img[(y as usize * s.w + xx as usize) * s.cin + c] += sum;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    relu_gate(dx, h_in);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -141,5 +314,65 @@ mod tests {
         let mut dh = [9.0f32; 2];
         grad_input(&dz, &w, &h, &mut dh, 1, 2, 1);
         assert_eq!(dh, [5.0, 0.0]);
+    }
+
+    #[test]
+    fn dz_wt_is_ungated() {
+        let w = [1.0f32, 2.0]; // 2×1
+        let dz = [5.0f32];
+        let mut dh = [0.0f32; 2];
+        dz_wt(&dz, &w, &mut dh, 1, 2, 1);
+        assert_eq!(dh, [5.0, 10.0]);
+    }
+
+    #[test]
+    fn conv_identity_kernel_recovers_input() {
+        // 1×1 kernel, stride 1, identity weight: conv is a pointwise
+        // dense map; with w = I and b = 0 the output is the input.
+        let s = ConvShape::same(2, 2, 2, 2, 1, 1, 1);
+        let x = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+        let k = [1.0f32, 0.0, 0.0, 1.0]; // [1,1,2,2] identity
+        let b = [0.0f32; 2];
+        let mut out = [9.0f32; 8];
+        conv2d_bias_act(&x, &k, &b, &mut out, 1, &s, false);
+        assert_eq!(out, x);
+    }
+
+    #[test]
+    fn conv_averaging_kernel_on_padded_edge() {
+        // 3×3 ones kernel over a 2×2 single-channel image, stride 1:
+        // every output = sum of the whole image region it covers.
+        let s = ConvShape::same(2, 2, 1, 1, 3, 3, 1);
+        let x = [1.0f32, 2.0, 3.0, 4.0];
+        let k = [1.0f32; 9];
+        let b = [0.0f32];
+        let mut out = [0.0f32; 4];
+        conv2d_bias_act(&x, &k, &b, &mut out, 1, &s, false);
+        // SAME pad (top 1, left 1): each 2×2 output sees all 4 pixels
+        assert_eq!(out, [10.0, 10.0, 10.0, 10.0]);
+    }
+
+    #[test]
+    fn conv_grad_w_by_hand() {
+        // 1×1 conv = dense over positions: dk = Σ_pos x·dz, db = Σ dz
+        let s = ConvShape::same(1, 2, 1, 1, 1, 1, 1);
+        let x = [3.0f32, 4.0];
+        let dz = [0.5f32, 0.25];
+        let (mut dk, mut db) = ([0.0f32; 1], [0.0f32; 1]);
+        conv2d_grad_w(&x, &dz, &mut dk, &mut db, 1, &s);
+        assert_eq!(dk, [3.0 * 0.5 + 4.0 * 0.25]);
+        assert_eq!(db, [0.75]);
+    }
+
+    #[test]
+    fn conv_grad_x_gates_and_scatters() {
+        // 1×1 conv, w = [2]: dx = 2·dz, gated by h_in
+        let s = ConvShape::same(1, 2, 1, 1, 1, 1, 1);
+        let dz = [5.0f32, 7.0];
+        let k = [2.0f32];
+        let h_in = [1.0f32, -1.0];
+        let mut dx = [9.0f32; 2];
+        conv2d_grad_x(&dz, &k, &h_in, &mut dx, 1, &s);
+        assert_eq!(dx, [10.0, 0.0]);
     }
 }

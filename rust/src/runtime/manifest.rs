@@ -7,9 +7,10 @@
 //! (executable, flavour) pair. The runtime refuses to start on an
 //! inconsistent manifest rather than guessing shapes. When the
 //! artifacts directory is absent entirely, [`Manifest::load_or_native`]
-//! synthesizes entries for the models the pure-Rust
-//! [`crate::runtime::native`] backend executes (linreg, mlp), so a
-//! fresh checkout trains without Python, JAX or PJRT.
+//! synthesizes entries for all four paper models — the dense chains
+//! (linreg, mlp) and the conv chains (cnn, cnn_lite, whose stride
+//! schedule rides in `conv_strides`) — so a fresh checkout trains
+//! every workload, Table 3 included, without Python, JAX or PJRT.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -111,6 +112,12 @@ pub struct ModelEntry {
     pub num_classes: usize,
     pub y_dtype: String,
     pub params: Vec<ParamEntry>,
+    /// Conv stride schedule for conv→GAP→dense models (one entry per
+    /// conv layer, SAME padding implied — the geometry the native
+    /// backend needs that weight shapes alone cannot carry). Empty for
+    /// dense-chain models and for artifact manifests (whose HLO encodes
+    /// the geometry; conv models there run via the `pjrt` feature).
+    pub conv_strides: Vec<usize>,
     /// `"{exe}:{flavour}"` → HLO text filename (`"<builtin>"` for the
     /// native flavour, which has no on-disk artifact).
     pub executables: BTreeMap<String, String>,
@@ -142,6 +149,46 @@ impl ModelEntry {
             dims.push(w.shape[1]);
         }
         Some(dims)
+    }
+
+    /// The conv geometry of a conv-chain entry: one SAME-padded
+    /// [`ConvShape`] per conv layer plus the `(head_in, head_out)`
+    /// dense-head widths. `None` for dense entries, for conv entries
+    /// without a stride schedule (artifact manifests), and for
+    /// malformed parameter lists — full validation with error messages
+    /// lives in the native backend's topology parser.
+    ///
+    /// [`ConvShape`]: super::kernels::ConvShape
+    pub fn conv_chain(&self) -> Option<(Vec<super::kernels::ConvShape>, (usize, usize))> {
+        use super::kernels::ConvShape;
+        if self.x_shape.len() != 3 || self.conv_strides.is_empty() {
+            return None;
+        }
+        if self.params.len() != 2 * (self.conv_strides.len() + 1) {
+            return None;
+        }
+        if self.x_shape.iter().any(|&d| d == 0) {
+            return None;
+        }
+        let (mut h, mut w, mut cin) = (self.x_shape[0], self.x_shape[1], self.x_shape[2]);
+        let mut shapes = Vec::with_capacity(self.conv_strides.len());
+        for (&stride, pair) in self.conv_strides.iter().zip(self.params.chunks(2)) {
+            let k = &pair[0];
+            if k.shape.len() != 4 || k.shape[2] != cin || stride == 0 {
+                return None;
+            }
+            if k.shape.iter().any(|&d| d == 0) {
+                return None;
+            }
+            let cs = ConvShape::same(h, w, cin, k.shape[3], k.shape[0], k.shape[1], stride);
+            (h, w, cin) = (cs.oh, cs.ow, cs.cout);
+            shapes.push(cs);
+        }
+        let head = &self.params[2 * shapes.len()];
+        if head.shape.len() != 2 || head.shape[0] != cin {
+            return None;
+        }
+        Some((shapes, (cin, head.shape[1])))
     }
 
     /// Artifact filename for `(exe, flavour)`.
@@ -195,12 +242,17 @@ impl ModelEntry {
             .iter()
             .map(|(k, v)| Ok((k.clone(), v.as_str()?.to_string())))
             .collect::<Result<BTreeMap<_, _>>>()?;
+        let conv_strides = match j.get("conv_strides") {
+            Some(v) => v.as_usize_vec()?,
+            None => vec![],
+        };
         Ok(ModelEntry {
             task: j.need("task")?.as_str()?.to_string(),
             x_shape: j.need("x_shape")?.as_usize_vec()?,
             num_classes: j.need("num_classes")?.as_usize()?,
             y_dtype: j.need("y_dtype")?.as_str()?.to_string(),
             params,
+            conv_strides,
             executables,
         })
     }
@@ -259,8 +311,9 @@ impl Manifest {
     }
 
     /// Synthesize the artifact-free manifest: the models the native CPU
-    /// backend executes (linreg, mlp), all six executables tagged with
-    /// the `native` flavour and no on-disk files.
+    /// backend executes (linreg, mlp, cnn, cnn_lite), all six
+    /// executables tagged with the `native` flavour and no on-disk
+    /// files.
     pub fn native(dir: &Path) -> Manifest {
         fn entry(
             task: &str,
@@ -268,6 +321,7 @@ impl Manifest {
             num_classes: usize,
             y_dtype: &str,
             params: Vec<(&str, Vec<usize>)>,
+            conv_strides: Vec<usize>,
         ) -> ModelEntry {
             let executables = Exe::ALL
                 .iter()
@@ -282,15 +336,48 @@ impl Manifest {
                     .into_iter()
                     .map(|(name, shape)| ParamEntry { name: name.to_string(), shape })
                     .collect(),
+                conv_strides,
                 executables,
             }
+        }
+
+        /// Conv stack on 16×16×3 with per-layer (width, stride), 3×3
+        /// SAME kernels, GAP, dense head to 100 classes — mirrors
+        /// `python/compile/model.py::_make_cnn`.
+        fn cnn_entry(widths_strides: &[(usize, usize)]) -> ModelEntry {
+            let mut params: Vec<(String, Vec<usize>)> = Vec::new();
+            let mut cin = 3usize;
+            let mut strides = Vec::new();
+            for (li, &(cout, stride)) in widths_strides.iter().enumerate() {
+                params.push((format!("k{}", li + 1), vec![3, 3, cin, cout]));
+                params.push((format!("cb{}", li + 1), vec![cout]));
+                strides.push(stride);
+                cin = cout;
+            }
+            params.push(("wh".to_string(), vec![cin, 100]));
+            params.push(("bh".to_string(), vec![100]));
+            entry(
+                "classification",
+                vec![16, 16, 3],
+                100,
+                "i32",
+                params.iter().map(|(n, s)| (n.as_str(), s.clone())).collect(),
+                strides,
+            )
         }
 
         let mut models = BTreeMap::new();
         // paper §4.1: y = 2x + 1 + noise, single-feature linear head
         models.insert(
             "linreg".to_string(),
-            entry("regression", vec![1], 0, "f32", vec![("w", vec![1, 1]), ("b", vec![1])]),
+            entry(
+                "regression",
+                vec![1],
+                0,
+                "f32",
+                vec![("w", vec![1, 1]), ("b", vec![1])],
+                vec![],
+            ),
         );
         // paper §4.2: 784-256-256-10 MLP (matches python/compile/model.py)
         models.insert(
@@ -308,8 +395,14 @@ impl Manifest {
                     ("w3", vec![256, 10]),
                     ("b3", vec![10]),
                 ],
+                vec![],
             ),
         );
+        // paper §4.3 / Table 3: ResNet50-role conv stack and the
+        // MobileNetV2-role lite stack (python/compile/model.py CNN /
+        // CNN_LITE widths and stride schedules)
+        models.insert("cnn".to_string(), cnn_entry(&[(32, 1), (64, 2), (128, 2)]));
+        models.insert("cnn_lite".to_string(), cnn_entry(&[(16, 2), (32, 2)]));
         Manifest { version: 1, batch: NATIVE_BATCH, models, dir: dir.to_path_buf() }
     }
 
@@ -334,6 +427,30 @@ impl Manifest {
             }
             if entry.params.is_empty() {
                 bail!("model {name}: no parameters");
+            }
+            // structural subset of the conv invariants; the full set
+            // lives in ModelEntry::conv_chain and the native backend's
+            // parse_conv — keep the three in sync
+            if !entry.conv_strides.is_empty() {
+                if entry.x_shape.len() != 3 {
+                    bail!(
+                        "model {name}: conv_strides given but x_shape {:?} is not NHWC",
+                        entry.x_shape
+                    );
+                }
+                if entry.conv_strides.iter().any(|&s| s == 0) {
+                    bail!("model {name}: conv stride 0");
+                }
+                // conv layers are (kernel, bias) pairs plus one dense
+                // head pair after the pool
+                if entry.params.len() != 2 * (entry.conv_strides.len() + 1) {
+                    bail!(
+                        "model {name}: {} conv strides need {} param tensors, got {}",
+                        entry.conv_strides.len(),
+                        2 * (entry.conv_strides.len() + 1),
+                        entry.params.len()
+                    );
+                }
             }
             let flavours = entry.flavours();
             if flavours.is_empty() {
@@ -501,6 +618,106 @@ mod tests {
         assert_eq!(mlp.artifact(Exe::TrainStep, Flavour::Native).unwrap(), "<builtin>");
         assert!(mlp.artifact(Exe::TrainStep, Flavour::Jnp).is_err());
         assert_eq!(m.default_flavour(), Flavour::Native);
+    }
+
+    #[test]
+    fn native_manifest_synthesizes_conv_models() {
+        let dir = TempDir::new("natconv").unwrap();
+        let m = Manifest::native(dir.path());
+        for (name, n_convs, widths) in
+            [("cnn", 3usize, vec![32, 64, 128]), ("cnn_lite", 2, vec![16, 32])]
+        {
+            let e = m.model(name).unwrap();
+            assert_eq!(e.x_shape, vec![16, 16, 3], "{name}");
+            assert_eq!(e.num_classes, 100, "{name}");
+            assert_eq!(e.conv_strides.len(), n_convs, "{name}");
+            assert_eq!(e.n_params(), 2 * (n_convs + 1), "{name}");
+            assert!(e.dense_dims().is_none(), "{name} is not a dense chain");
+            let mut cin = 3;
+            for (l, &cout) in widths.iter().enumerate() {
+                assert_eq!(e.params[2 * l].shape, vec![3, 3, cin, cout], "{name} k{l}");
+                assert_eq!(e.params[2 * l + 1].shape, vec![cout], "{name} cb{l}");
+                cin = cout;
+            }
+            assert_eq!(e.params[2 * n_convs].shape, vec![cin, 100], "{name} head");
+            assert!(e.has_flavour(Flavour::Native), "{name}");
+        }
+        // cnn matches the python model's stride schedule (1, 2, 2);
+        // cnn_lite is (2, 2)
+        assert_eq!(m.model("cnn").unwrap().conv_strides, vec![1, 2, 2]);
+        assert_eq!(m.model("cnn_lite").unwrap().conv_strides, vec![2, 2]);
+    }
+
+    #[test]
+    fn conv_chain_recovers_geometry() {
+        let dir = TempDir::new("chain").unwrap();
+        let m = Manifest::native(dir.path());
+        let (shapes, head) = m.model("cnn_lite").unwrap().conv_chain().expect("conv chain");
+        assert_eq!(shapes.len(), 2);
+        assert_eq!((shapes[0].h, shapes[0].w, shapes[0].cin, shapes[0].cout), (16, 16, 3, 16));
+        assert_eq!((shapes[0].oh, shapes[0].ow), (8, 8), "stride 2 halves 16×16");
+        assert_eq!((shapes[1].oh, shapes[1].ow), (4, 4));
+        assert_eq!(head, (32, 100));
+        let (shapes, head) = m.model("cnn").unwrap().conv_chain().expect("conv chain");
+        assert_eq!(shapes.len(), 3);
+        assert_eq!((shapes[0].oh, shapes[0].ow), (16, 16), "stride 1 preserves 16×16");
+        assert_eq!((shapes[2].oh, shapes[2].ow), (4, 4));
+        assert_eq!(head, (128, 100));
+        // dense entries have no conv chain
+        assert!(m.model("mlp").unwrap().conv_chain().is_none());
+        // and malformed conv entries say None rather than panicking
+        let mut e = m.model("cnn_lite").unwrap().clone();
+        e.params[0].shape = vec![3, 3, 9, 16];
+        assert!(e.conv_chain().is_none());
+    }
+
+    #[test]
+    fn conv_strides_are_validated() {
+        let dir = TempDir::new("convval").unwrap();
+        let mut m = Manifest::native(dir.path());
+        m.models.get_mut("cnn_lite").unwrap().conv_strides = vec![2];
+        assert!(m.validate().is_err(), "stride/param arity mismatch must fail");
+        let mut m = Manifest::native(dir.path());
+        m.models.get_mut("cnn_lite").unwrap().conv_strides = vec![0, 2];
+        assert!(m.validate().is_err(), "zero stride must fail");
+        let mut m = Manifest::native(dir.path());
+        m.models.get_mut("mlp").unwrap().conv_strides = vec![1];
+        assert!(m.validate().is_err(), "conv_strides on a flat model must fail");
+    }
+
+    #[test]
+    fn conv_strides_parse_from_json() {
+        let dir = TempDir::new("convjson").unwrap();
+        let doc = r#"{
+  "version": 1,
+  "batch": 4,
+  "models": {
+    "c": {
+      "task": "classification",
+      "x_shape": [4, 4, 1],
+      "num_classes": 2,
+      "y_dtype": "i32",
+      "conv_strides": [2],
+      "params": [
+        {"name": "k1", "shape": [3, 3, 1, 2]},
+        {"name": "cb1", "shape": [2]},
+        {"name": "wh", "shape": [2, 2]},
+        {"name": "bh", "shape": [2]}
+      ],
+      "executables": {"init:native": "<builtin>", "fwd_loss:native": "<builtin>",
+        "train_step:native": "<builtin>", "grads:native": "<builtin>",
+        "apply:native": "<builtin>", "eval:native": "<builtin>"}
+    }
+  }
+}"#;
+        std::fs::write(dir.path().join("manifest.json"), doc).unwrap();
+        let m = Manifest::load(dir.path()).unwrap();
+        assert_eq!(m.model("c").unwrap().conv_strides, vec![2]);
+        // absent key defaults to empty (the toy manifest has none)
+        let dir2 = TempDir::new("convjson2").unwrap();
+        write_toy_manifest(dir2.path(), None);
+        let m2 = Manifest::load(dir2.path()).unwrap();
+        assert!(m2.model("m").unwrap().conv_strides.is_empty());
     }
 
     #[test]

@@ -21,19 +21,30 @@
 //! steady state only the gradient tensors handed back to the caller
 //! are freshly allocated.
 //!
-//! The backend executes any model whose manifest entry is a **dense
-//! chain**: alternating `(weight [d_in, d_out], bias [d_out])` pairs
-//! over flat features — linreg and the 784-256-256-10 MLP. Convolution
-//! models (cnn, cnn_lite) stay on the PJRT artifact path.
+//! The backend executes two manifest topologies:
+//!
+//! * **dense chains** — alternating `(weight [d_in, d_out], bias
+//!   [d_out])` pairs over flat features (linreg, the 784-256-256-10
+//!   MLP);
+//! * **conv chains** — NHWC input, SAME-padded 3×3 conv layers (HWIO
+//!   kernels, strides from the manifest's `conv_strides`), global
+//!   average pooling, and a dense head (cnn, cnn_lite) — mirroring
+//!   `python/compile/model.py::_cnn_predict_generic`. Conv forward and
+//!   backward lower onto the blocked GEMM tiles via im2col (see
+//!   [`super::kernels::conv`]).
 //!
 //! `train_step` computes the same masked gradients as `grads` followed
 //! by `apply`, so serial fused steps and the leader/worker
-//! grads→average→apply protocol walk identical trajectories.
+//! grads→average→apply protocol walk identical trajectories. The
+//! gathered sub-batch step stays bit-identical to the masked full-batch
+//! step on both topologies, at any thread count (every kernel reduction
+//! runs in a fixed per-element order — see the [`super::kernels`]
+//! module docs).
 
 use anyhow::{bail, Result};
 
 use super::backend::{gather_rows, Backend, SessionStats};
-use super::kernels::{self, Arena, KernelConfig};
+use super::kernels::{self, conv, Arena, ConvShape, KernelConfig};
 use super::manifest::ModelEntry;
 use crate::data::rng::Rng;
 use crate::data::tensor::{HostTensor, TensorData};
@@ -52,17 +63,201 @@ impl DenseChain {
     fn n_layers(&self) -> usize {
         self.dims.len() - 1
     }
+}
 
-    fn out_width(&self) -> usize {
-        *self.dims.last().expect("dims never empty")
+/// Conv-chain topology: SAME-padded conv stack → global average pool →
+/// dense head, over NHWC images.
+struct ConvNet {
+    convs: Vec<ConvShape>,
+    /// Head input width (= the last conv layer's channel count).
+    head_in: usize,
+    /// Head output width (num_classes, or 1 for regression).
+    out: usize,
+    classification: bool,
+}
+
+/// What a manifest entry's parameter list executes as.
+enum Topology {
+    Dense(DenseChain),
+    Conv(ConvNet),
+}
+
+impl Topology {
+    fn classification(&self) -> bool {
+        match self {
+            Topology::Dense(c) => c.classification,
+            Topology::Conv(c) => c.classification,
+        }
     }
+
+    /// Head width (the per-example logits/prediction width).
+    fn out_width(&self) -> usize {
+        match self {
+            Topology::Dense(c) => *c.dims.last().expect("dims never empty"),
+            Topology::Conv(c) => c.out,
+        }
+    }
+
+    /// Flat input elements per example.
+    #[cfg(test)]
+    fn in_elems(&self) -> usize {
+        match self {
+            Topology::Dense(c) => c.dims[0],
+            Topology::Conv(c) => c.convs[0].in_elems(),
+        }
+    }
+}
+
+/// Resolve a manifest entry into an executable topology, validating
+/// shapes. Dense chains keep the PR-1 error contract; conv chains need
+/// the manifest's `conv_strides` (artifact manifests without them run
+/// conv models via the `pjrt` feature instead).
+fn parse_topology(model: &str, entry: &ModelEntry) -> Result<Topology> {
+    match entry.x_shape.len() {
+        1 => parse_dense(model, entry),
+        3 => parse_conv(model, entry),
+        _ => bail!(
+            "native backend supports flat-feature or NHWC models only; \
+             model {model} has x_shape {:?} (use the pjrt feature for other layouts)",
+            entry.x_shape
+        ),
+    }
+}
+
+fn parse_dense(model: &str, entry: &ModelEntry) -> Result<Topology> {
+    if entry.params.is_empty() || entry.params.len() % 2 != 0 {
+        bail!(
+            "native backend expects (weight, bias) parameter pairs; \
+             model {model} has {} tensors",
+            entry.params.len()
+        );
+    }
+    let mut dims = vec![entry.x_shape[0]];
+    for pair in entry.params.chunks(2) {
+        let (w, b) = (&pair[0], &pair[1]);
+        if w.shape.len() != 2 || b.shape.len() != 1 || w.shape[1] != b.shape[0] {
+            bail!(
+                "model {model}: parameter pair {}/{} is not dense \
+                 (shapes {:?} / {:?})",
+                w.name,
+                b.name,
+                w.shape,
+                b.shape
+            );
+        }
+        let prev = *dims.last().expect("dims starts non-empty");
+        if w.shape[0] != prev {
+            bail!(
+                "model {model}: layer input width {} does not chain onto \
+                 previous width {prev}",
+                w.shape[0]
+            );
+        }
+        dims.push(w.shape[1]);
+    }
+    let classification = entry.is_classification();
+    let out = *dims.last().expect("dims starts non-empty");
+    check_head(model, entry, classification, out)?;
+    Ok(Topology::Dense(DenseChain { dims, classification }))
+}
+
+fn parse_conv(model: &str, entry: &ModelEntry) -> Result<Topology> {
+    if entry.conv_strides.is_empty() {
+        bail!(
+            "model {model}: NHWC input {:?} but the manifest carries no conv_strides; \
+             artifact manifests run conv models via the pjrt feature",
+            entry.x_shape
+        );
+    }
+    let n_convs = entry.conv_strides.len();
+    if entry.params.len() != 2 * (n_convs + 1) {
+        bail!(
+            "model {model}: {n_convs} conv layers + pooled head need {} param tensors, got {}",
+            2 * (n_convs + 1),
+            entry.params.len()
+        );
+    }
+    if entry.x_shape.iter().any(|&d| d == 0) {
+        bail!("model {model}: zero-sized x_shape {:?}", entry.x_shape);
+    }
+    let mut cin = entry.x_shape[2];
+    for (l, (&stride, pair)) in
+        entry.conv_strides.iter().zip(entry.params.chunks(2)).enumerate()
+    {
+        let (k, b) = (&pair[0], &pair[1]);
+        if k.shape.len() != 4 || b.shape.len() != 1 || k.shape[3] != b.shape[0] {
+            bail!(
+                "model {model}: conv pair {}/{} is not HWIO kernel + bias \
+                 (shapes {:?} / {:?})",
+                k.name,
+                b.name,
+                k.shape,
+                b.shape
+            );
+        }
+        if k.shape[2] != cin {
+            bail!(
+                "model {model}: conv layer {l} input channels {} do not chain onto \
+                 previous channels {cin}",
+                k.shape[2]
+            );
+        }
+        if stride == 0 {
+            bail!("model {model}: conv layer {l} has stride 0");
+        }
+        if k.shape.iter().any(|&d| d == 0) {
+            bail!("model {model}: conv layer {l} has a zero kernel dim {:?}", k.shape);
+        }
+        cin = k.shape[3];
+    }
+    let head = &entry.params[2 * n_convs..];
+    let (hw, hb) = (&head[0], &head[1]);
+    if hw.shape.len() != 2 || hb.shape.len() != 1 || hw.shape[1] != hb.shape[0] {
+        bail!(
+            "model {model}: head pair {}/{} is not dense (shapes {:?} / {:?})",
+            hw.name,
+            hb.name,
+            hw.shape,
+            hb.shape
+        );
+    }
+    if hw.shape[0] != cin {
+        bail!(
+            "model {model}: head input width {} != pooled channels {cin}",
+            hw.shape[0]
+        );
+    }
+    let classification = entry.is_classification();
+    check_head(model, entry, classification, hw.shape[1])?;
+    // Geometry comes from the one shared walk (`ModelEntry::conv_chain`)
+    // so the backend and the bench FLOP accounting can never disagree
+    // on shapes. Conv-entry invariants live in three places — the
+    // checks above (detailed errors), `conv_chain` (the geometry walk),
+    // and the arity/stride subset in `Manifest::validate` — keep them
+    // in sync when the topology rules change. The checks above mirror
+    // every condition `conv_chain` rejects today; if it ever grows one
+    // they miss, refuse to start rather than panic.
+    let Some((convs, (head_in, out))) = entry.conv_chain() else {
+        bail!("model {model}: parameter list does not form a conv chain");
+    };
+    Ok(Topology::Conv(ConvNet { convs, head_in, out, classification }))
+}
+
+fn check_head(model: &str, entry: &ModelEntry, classification: bool, out: usize) -> Result<()> {
+    if classification && out != entry.num_classes {
+        bail!("model {model}: head width {out} != num_classes {}", entry.num_classes);
+    }
+    if !classification && out != 1 {
+        bail!("model {model}: regression head must have width 1, got {out}");
+    }
+    Ok(())
 }
 
 /// The pure-Rust CPU backend ([`Flavour::Native`]).
 ///
 /// [`Flavour::Native`]: super::manifest::Flavour::Native
 pub struct NativeBackend {
-    chain: DenseChain,
+    topo: Topology,
     entry: ModelEntry,
     batch: usize,
     /// Resident parameters in manifest order (w_0, b_0, w_1, b_1, …).
@@ -77,7 +272,7 @@ pub struct NativeBackend {
 
 impl NativeBackend {
     /// Build from a manifest entry, validating that the parameter list
-    /// forms a dense chain the native math can execute. Kernel flavour
+    /// forms a topology the native math can execute. Kernel flavour
     /// and thread count come from the environment
     /// (`OBFTF_NATIVE_KERNELS`, `OBFTF_NATIVE_THREADS`).
     pub fn new(model: &str, entry: &ModelEntry, batch: usize) -> Result<NativeBackend> {
@@ -94,58 +289,14 @@ impl NativeBackend {
         kcfg: KernelConfig,
     ) -> Result<NativeBackend> {
         let t0 = std::time::Instant::now();
-        if entry.x_shape.len() != 1 {
-            bail!(
-                "native backend supports flat-feature models only; \
-                 model {model} has x_shape {:?} (use the pjrt feature for conv models)",
-                entry.x_shape
-            );
-        }
-        if entry.params.is_empty() || entry.params.len() % 2 != 0 {
-            bail!(
-                "native backend expects (weight, bias) parameter pairs; \
-                 model {model} has {} tensors",
-                entry.params.len()
-            );
-        }
-        let mut dims = vec![entry.x_shape[0]];
-        for pair in entry.params.chunks(2) {
-            let (w, b) = (&pair[0], &pair[1]);
-            if w.shape.len() != 2 || b.shape.len() != 1 || w.shape[1] != b.shape[0] {
-                bail!(
-                    "model {model}: parameter pair {}/{} is not dense \
-                     (shapes {:?} / {:?})",
-                    w.name,
-                    b.name,
-                    w.shape,
-                    b.shape
-                );
-            }
-            let prev = *dims.last().expect("dims starts non-empty");
-            if w.shape[0] != prev {
-                bail!(
-                    "model {model}: layer input width {} does not chain onto \
-                     previous width {prev}",
-                    w.shape[0]
-                );
-            }
-            dims.push(w.shape[1]);
-        }
-        let classification = entry.is_classification();
-        let out = *dims.last().expect("dims starts non-empty");
-        if classification && out != entry.num_classes {
-            bail!("model {model}: head width {out} != num_classes {}", entry.num_classes);
-        }
-        if !classification && out != 1 {
-            bail!("model {model}: regression head must have width 1, got {out}");
-        }
+        let topo = parse_topology(model, entry)?;
         let stats = SessionStats {
             // clamp to 1 ns so stats always witness construction
             compile_ns: (t0.elapsed().as_nanos() as u64).max(1),
             ..Default::default()
         };
         Ok(NativeBackend {
-            chain: DenseChain { dims, classification },
+            topo,
             entry: entry.clone(),
             batch,
             params: vec![],
@@ -163,9 +314,9 @@ impl NativeBackend {
     /// Per-example losses from head outputs (ref.py `softmax_xent` /
     /// `mse`).
     fn per_example_losses(&self, logits: &[f32], y: &HostTensor, n: usize) -> Result<Vec<f32>> {
-        let c = self.chain.out_width();
+        let c = self.topo.out_width();
         let mut out = vec![0.0f32; n];
-        if self.chain.classification {
+        if self.topo.classification() {
             let labels = y.as_i32()?;
             for i in 0..n {
                 let row = &logits[i * c..(i + 1) * c];
@@ -202,10 +353,9 @@ impl NativeBackend {
         let t0 = std::time::Instant::now();
         let n = mask.len();
         let xs = x.as_f32()?;
-        let nl = self.chain.n_layers();
-        let c = self.chain.out_width();
-        let acts = forward_chain(&self.chain, &self.params, &self.kcfg, &mut self.scratch, xs, n);
-        let logits = &acts[nl - 1];
+        let c = self.topo.out_width();
+        let acts = forward_topo(&self.topo, &self.params, &self.kcfg, &mut self.scratch, xs, n);
+        let logits = acts.last().expect("every topology ends in a head");
         let losses = self.per_example_losses(logits, y, n)?;
         let denom = mask.iter().sum::<f32>().max(1.0);
         let sel_loss = losses.iter().zip(mask).map(|(l, m)| l * m).sum::<f32>() / denom;
@@ -214,7 +364,7 @@ impl NativeBackend {
         // head gradient dL/dz with dloss_i = mask_i / denom
         // (ref.py softmax_xent_grad / mse_grad)
         let mut dz = self.scratch.take(n * c);
-        if self.chain.classification {
+        if self.topo.classification() {
             let labels = y.as_i32()?;
             for i in 0..n {
                 let dl = mask[i] / denom;
@@ -242,56 +392,13 @@ impl NativeBackend {
             }
         }
 
-        // backprop through the chain: dW_l = actsᵀ_l · dz, db_l = Σ dz,
-        // dh = dz · Wᵀ_l gated by the ReLU (acts > 0 ⟺ pre-act > 0)
-        let mut grads: Vec<Option<(Vec<f32>, Vec<f32>)>> = (0..nl).map(|_| None).collect();
-        for l in (0..nl).rev() {
-            let (din, dout) = (self.chain.dims[l], self.chain.dims[l + 1]);
-            let h: &[f32] = if l == 0 { xs } else { &acts[l - 1] };
-            let mut dw = vec![0.0f32; din * dout];
-            let mut db = vec![0.0f32; dout];
-            kernels::grad_weights(
-                &self.kcfg,
-                &mut self.scratch,
-                h,
-                &dz,
-                &mut dw,
-                &mut db,
-                n,
-                din,
-                dout,
-            );
-            if l > 0 {
-                let w = self.params[2 * l].as_f32()?;
-                let mut dh = self.scratch.take(n * din);
-                kernels::grad_input(
-                    &self.kcfg,
-                    &mut self.scratch,
-                    &dz,
-                    w,
-                    h,
-                    &mut dh,
-                    n,
-                    din,
-                    dout,
-                );
-                self.scratch.put(std::mem::replace(&mut dz, dh));
-            }
-            grads[l] = Some((dw, db));
-        }
-        self.scratch.put(dz);
+        let (params, kcfg, arena) = (&self.params, &self.kcfg, &mut self.scratch);
+        let out = match &self.topo {
+            Topology::Dense(chain) => dense_backward(chain, params, kcfg, arena, xs, &acts, dz, n)?,
+            Topology::Conv(net) => conv_backward(net, params, kcfg, arena, xs, &acts, dz, n)?,
+        };
         for a in acts {
             self.scratch.put(a);
-        }
-
-        let mut out = Vec::with_capacity(2 * nl);
-        for (l, g) in grads.into_iter().enumerate() {
-            let (dw, db) = g.expect("filled by the backward loop");
-            out.push(HostTensor::f32(
-                vec![self.chain.dims[l], self.chain.dims[l + 1]],
-                dw,
-            )?);
-            out.push(HostTensor::f32(vec![self.chain.dims[l + 1]], db)?);
         }
         self.stats.forward_ns += fwd_ns;
         self.stats.backward_ns += (t0.elapsed().as_nanos() as u64).saturating_sub(fwd_ns);
@@ -320,35 +427,182 @@ impl NativeBackend {
     }
 }
 
-/// Forward pass over `n` rows: `acts[l] = act(input_l · W_l + b_l)`
-/// where `input_0 = x` and `input_l = acts[l-1]` (ReLU on hidden
-/// layers, identity on the head — ref.py `matmul_bias_act`). The input
-/// batch is read in place, never copied; activation buffers come from
-/// `arena` and must be recycled back by the caller. A free function
-/// over the backend's fields so callers can lend `&mut self.scratch`
-/// while the parameters stay borrowed — the arena is never moved out
-/// of the backend, even on error paths.
-fn forward_chain(
-    chain: &DenseChain,
+/// Forward pass over `n` rows; returns every intermediate activation
+/// (the backward pass needs them all), with the head logits last.
+///
+/// * Dense: `acts[l] = act(input_l · W_l + b_l)` with `input_0 = x`,
+///   ReLU on hidden layers, identity head (ref.py `matmul_bias_act`).
+/// * Conv: `[conv act 0 … conv act L−1, pooled, logits]` — each conv
+///   layer is SAME-padded + bias + ReLU, the pool is a global average,
+///   the head is identity dense.
+///
+/// The input batch is read in place, never copied; activation buffers
+/// come from `arena` and must be recycled back by the caller. A free
+/// function over the backend's fields so callers can lend
+/// `&mut self.scratch` while the parameters stay borrowed — the arena
+/// is never moved out of the backend, even on error paths.
+fn forward_topo(
+    topo: &Topology,
     params: &[HostTensor],
     kcfg: &KernelConfig,
     arena: &mut Arena,
     x: &[f32],
     n: usize,
 ) -> Vec<Vec<f32>> {
-    let nl = chain.n_layers();
-    let mut acts: Vec<Vec<f32>> = Vec::with_capacity(nl);
-    for l in 0..nl {
-        let (din, dout) = (chain.dims[l], chain.dims[l + 1]);
-        let w = params[2 * l].as_f32().expect("parameters are f32");
-        let b = params[2 * l + 1].as_f32().expect("parameters are f32");
-        let h: &[f32] = if l == 0 { x } else { &acts[l - 1] };
-        let mut z = arena.take(n * dout);
-        let relu = l + 1 < nl;
-        kernels::matmul_bias_act(kcfg, arena, h, w, b, &mut z, n, din, dout, relu);
-        acts.push(z);
+    match topo {
+        Topology::Dense(chain) => {
+            let nl = chain.n_layers();
+            let mut acts: Vec<Vec<f32>> = Vec::with_capacity(nl);
+            for l in 0..nl {
+                let (din, dout) = (chain.dims[l], chain.dims[l + 1]);
+                let w = params[2 * l].as_f32().expect("parameters are f32");
+                let b = params[2 * l + 1].as_f32().expect("parameters are f32");
+                let h: &[f32] = if l == 0 { x } else { &acts[l - 1] };
+                let mut z = arena.take(n * dout);
+                let relu = l + 1 < nl;
+                kernels::matmul_bias_act(kcfg, arena, h, w, b, &mut z, n, din, dout, relu);
+                acts.push(z);
+            }
+            acts
+        }
+        Topology::Conv(net) => {
+            let nl = net.convs.len();
+            let mut acts: Vec<Vec<f32>> = Vec::with_capacity(nl + 2);
+            for (l, cs) in net.convs.iter().enumerate() {
+                let k = params[2 * l].as_f32().expect("parameters are f32");
+                let b = params[2 * l + 1].as_f32().expect("parameters are f32");
+                let h: &[f32] = if l == 0 { x } else { &acts[l - 1] };
+                let mut z = arena.take(n * cs.out_elems());
+                kernels::conv2d_bias_act(kcfg, arena, h, k, b, &mut z, n, cs, true);
+                acts.push(z);
+            }
+            let last = &net.convs[nl - 1];
+            let mut pooled = arena.take(n * net.head_in);
+            conv::global_avg_pool(&acts[nl - 1], &mut pooled, n, last.positions(), net.head_in);
+            let wh = params[2 * nl].as_f32().expect("parameters are f32");
+            let bh = params[2 * nl + 1].as_f32().expect("parameters are f32");
+            let mut logits = arena.take(n * net.out);
+            kernels::matmul_bias_act(
+                kcfg,
+                arena,
+                &pooled,
+                wh,
+                bh,
+                &mut logits,
+                n,
+                net.head_in,
+                net.out,
+                false,
+            );
+            acts.push(pooled);
+            acts.push(logits);
+            acts
+        }
     }
-    acts
+}
+
+/// Dense-chain backward: `dW_l = actsᵀ_l · dz`, `db_l = Σ dz`,
+/// `dh = dz · Wᵀ_l` gated by the ReLU (acts > 0 ⟺ pre-act > 0).
+/// Consumes the head gradient buffer and recycles it into `arena`.
+#[allow(clippy::too_many_arguments)]
+fn dense_backward(
+    chain: &DenseChain,
+    params: &[HostTensor],
+    kcfg: &KernelConfig,
+    arena: &mut Arena,
+    xs: &[f32],
+    acts: &[Vec<f32>],
+    mut dz: Vec<f32>,
+    n: usize,
+) -> Result<Vec<HostTensor>> {
+    let nl = chain.n_layers();
+    let mut grads: Vec<Option<(Vec<f32>, Vec<f32>)>> = (0..nl).map(|_| None).collect();
+    for l in (0..nl).rev() {
+        let (din, dout) = (chain.dims[l], chain.dims[l + 1]);
+        let h: &[f32] = if l == 0 { xs } else { &acts[l - 1] };
+        let mut dw = vec![0.0f32; din * dout];
+        let mut db = vec![0.0f32; dout];
+        kernels::grad_weights(kcfg, arena, h, &dz, &mut dw, &mut db, n, din, dout);
+        if l > 0 {
+            let w = params[2 * l].as_f32()?;
+            let mut dh = arena.take(n * din);
+            kernels::grad_input(kcfg, arena, &dz, w, h, &mut dh, n, din, dout);
+            arena.put(std::mem::replace(&mut dz, dh));
+        }
+        grads[l] = Some((dw, db));
+    }
+    arena.put(dz);
+    let mut out = Vec::with_capacity(2 * nl);
+    for (l, g) in grads.into_iter().enumerate() {
+        let (dw, db) = g.expect("filled by the backward loop");
+        out.push(HostTensor::f32(vec![chain.dims[l], chain.dims[l + 1]], dw)?);
+        out.push(HostTensor::f32(vec![chain.dims[l + 1]], db)?);
+    }
+    Ok(out)
+}
+
+/// Conv-chain backward: dense head gradients, the ungated pooled
+/// gradient `dz · Whᵀ`, the global-average-pool spread (each position
+/// inherits `1/positions` of its channel's gradient) gated by the last
+/// conv ReLU, then per-conv-layer `dK`/`db` and the gated input
+/// gradient, deepest layer first. Consumes `dz`, recycles every
+/// intermediate into `arena`.
+#[allow(clippy::too_many_arguments)]
+fn conv_backward(
+    net: &ConvNet,
+    params: &[HostTensor],
+    kcfg: &KernelConfig,
+    arena: &mut Arena,
+    xs: &[f32],
+    acts: &[Vec<f32>],
+    dz: Vec<f32>,
+    n: usize,
+) -> Result<Vec<HostTensor>> {
+    let nl = net.convs.len();
+    let pooled = &acts[nl];
+    let (cl, out_w) = (net.head_in, net.out);
+    // head dense gradients
+    let mut dwh = vec![0.0f32; cl * out_w];
+    let mut dbh = vec![0.0f32; out_w];
+    kernels::grad_weights(kcfg, arena, pooled, &dz, &mut dwh, &mut dbh, n, cl, out_w);
+    // pooled gradient — the pool output is a linear node, no gate
+    let wh = params[2 * nl].as_f32()?;
+    let mut dpool = arena.take(n * cl);
+    kernels::matmul_dz_wt(kcfg, arena, &dz, wh, &mut dpool, n, cl, out_w);
+    arena.put(dz);
+    // spread through the global average pool, gated by the last conv
+    // ReLU in the same pass
+    let last = &net.convs[nl - 1];
+    let mut dspat = arena.take(n * last.out_elems());
+    conv::global_avg_pool_grad(&dpool, &mut dspat, Some(&acts[nl - 1]), n, last.positions(), cl);
+    arena.put(dpool);
+    // conv layers, deepest first
+    let mut grads: Vec<Option<(Vec<f32>, Vec<f32>)>> = (0..nl).map(|_| None).collect();
+    for l in (0..nl).rev() {
+        let cs = &net.convs[l];
+        let input: &[f32] = if l == 0 { xs } else { &acts[l - 1] };
+        let mut dk = vec![0.0f32; cs.patch_len() * cs.cout];
+        let mut db = vec![0.0f32; cs.cout];
+        kernels::conv2d_grad_w(kcfg, arena, input, &dspat, &mut dk, &mut db, n, cs);
+        if l > 0 {
+            let k = params[2 * l].as_f32()?;
+            let mut dx = arena.take(n * cs.in_elems());
+            kernels::conv2d_grad_x(kcfg, arena, &dspat, k, input, &mut dx, n, cs);
+            arena.put(std::mem::replace(&mut dspat, dx));
+        }
+        grads[l] = Some((dk, db));
+    }
+    arena.put(dspat);
+    let mut out = Vec::with_capacity(2 * (nl + 1));
+    for (l, g) in grads.into_iter().enumerate() {
+        let (dk, db) = g.expect("filled by the backward loop");
+        let cs = &net.convs[l];
+        out.push(HostTensor::f32(vec![cs.kh, cs.kw, cs.cin, cs.cout], dk)?);
+        out.push(HostTensor::f32(vec![cs.cout], db)?);
+    }
+    out.push(HostTensor::f32(vec![cl, out_w], dwh)?);
+    out.push(HostTensor::f32(vec![out_w], dbh)?);
+    Ok(out)
 }
 
 /// Numerically stable `log(Σ exp(row))` (ref.py `softmax_xent`).
@@ -358,9 +612,11 @@ fn logsumexp(row: &[f32]) -> f32 {
 }
 
 impl Backend for NativeBackend {
-    /// He initialization for weights (`N(0, 2/fan_in)`), zeros for
-    /// biases — the same scheme as `model.py::init_params`, drawn from
-    /// the crate's deterministic [`Rng`] instead of JAX's PRNG.
+    /// He initialization for weights (`N(0, 2/fan_in)`, with
+    /// `fan_in = prod(shape[..-1])` — so HWIO conv kernels get
+    /// `kh·kw·cin`), zeros for biases — the same scheme as
+    /// `model.py::init_params`, drawn from the crate's deterministic
+    /// [`Rng`] instead of JAX's PRNG.
     fn init(&mut self, seed: i32) -> Result<()> {
         let t0 = std::time::Instant::now();
         let mut rng = Rng::seed_from((seed as i64 as u64) ^ INIT_SEED_MIX);
@@ -385,8 +641,8 @@ impl Backend for NativeBackend {
         let t0 = std::time::Instant::now();
         let n = self.batch;
         let xs = x.as_f32()?;
-        let acts = forward_chain(&self.chain, &self.params, &self.kcfg, &mut self.scratch, xs, n);
-        let logits = acts.last().expect("chain has at least one layer");
+        let acts = forward_topo(&self.topo, &self.params, &self.kcfg, &mut self.scratch, xs, n);
+        let logits = acts.last().expect("every topology ends in a head");
         let losses = self.per_example_losses(logits, y, n);
         for a in acts {
             self.scratch.put(a);
@@ -419,8 +675,9 @@ impl Backend for NativeBackend {
     /// as the masked full-batch step (whose masked-out rows contribute
     /// exact zeros) — the result is bit-identical to
     /// [`Backend::train_step`] with the matching mask. The kernels
-    /// preserve this at any thread count: reductions never reorder
-    /// across batch rows (see [`super::kernels`]).
+    /// preserve this at any thread count and on both topologies:
+    /// reductions never reorder across batch rows (see
+    /// [`super::kernels`]).
     fn train_step_selected(
         &mut self,
         x: &HostTensor,
@@ -470,13 +727,13 @@ impl Backend for NativeBackend {
     ) -> Result<(f64, f64, f64)> {
         let t0 = std::time::Instant::now();
         let n = self.batch;
-        let c = self.chain.out_width();
+        let c = self.topo.out_width();
         let xs = x.as_f32()?;
-        let acts = forward_chain(&self.chain, &self.params, &self.kcfg, &mut self.scratch, xs, n);
-        let logits = acts.last().expect("chain has at least one layer");
+        let acts = forward_topo(&self.topo, &self.params, &self.kcfg, &mut self.scratch, xs, n);
+        let logits = acts.last().expect("every topology ends in a head");
         let losses = self.per_example_losses(logits, y, n)?;
         let mut sums = (0.0f64, 0.0f64, 0.0f64);
-        if self.chain.classification {
+        if self.topo.classification() {
             let labels = y.as_i32()?;
             for i in 0..n {
                 let m = mask[i] as f64;
@@ -569,6 +826,37 @@ mod tests {
             num_classes,
             y_dtype: if task == "classification" { "i32" } else { "f32" }.to_string(),
             params,
+            conv_strides: vec![],
+            executables: BTreeMap::new(),
+        }
+    }
+
+    /// Tiny conv entry: `hw×hw×cin` input, 3×3 SAME conv layers with
+    /// per-layer (width, stride), GAP, dense head to `num_classes`.
+    fn conv_entry(
+        hw: usize,
+        cin: usize,
+        widths_strides: &[(usize, usize)],
+        num_classes: usize,
+    ) -> ModelEntry {
+        let mut params = Vec::new();
+        let mut strides = Vec::new();
+        let mut c = cin;
+        for (l, &(cout, stride)) in widths_strides.iter().enumerate() {
+            params.push(ParamEntry { name: format!("k{l}"), shape: vec![3, 3, c, cout] });
+            params.push(ParamEntry { name: format!("cb{l}"), shape: vec![cout] });
+            strides.push(stride);
+            c = cout;
+        }
+        params.push(ParamEntry { name: "wh".into(), shape: vec![c, num_classes] });
+        params.push(ParamEntry { name: "bh".into(), shape: vec![num_classes] });
+        ModelEntry {
+            task: "classification".to_string(),
+            x_shape: vec![hw, hw, cin],
+            num_classes,
+            y_dtype: "i32".to_string(),
+            params,
+            conv_strides: strides,
             executables: BTreeMap::new(),
         }
     }
@@ -580,19 +868,25 @@ mod tests {
         b
     }
 
+    fn conv_backend(entry: &ModelEntry, batch: usize, kcfg: KernelConfig) -> NativeBackend {
+        let mut b = NativeBackend::with_kernel_config("ctest", entry, batch, kcfg).unwrap();
+        b.init(7).unwrap();
+        b
+    }
+
     fn toy_batch(b: &NativeBackend, seed: u64) -> (HostTensor, HostTensor) {
         let n = b.batch;
-        let din = b.chain.dims[0];
+        let din = b.topo.in_elems();
         let mut rng = Rng::seed_from(seed);
         let x = HostTensor::f32(
             vec![n, din],
             (0..n * din).map(|_| rng.normal() as f32).collect(),
         )
         .unwrap();
-        let y = if b.chain.classification {
+        let y = if b.topo.classification() {
             HostTensor::i32(
                 vec![n],
-                (0..n).map(|_| rng.below(b.chain.out_width()) as i32).collect(),
+                (0..n).map(|_| rng.below(b.topo.out_width()) as i32).collect(),
             )
             .unwrap()
         } else {
@@ -603,7 +897,7 @@ mod tests {
 
     fn forward_acts(b: &NativeBackend, x: &HostTensor, n: usize) -> Vec<Vec<f32>> {
         let mut arena = Arena::new();
-        forward_chain(&b.chain, &b.params, &b.kcfg, &mut arena, x.as_f32().unwrap(), n)
+        forward_topo(&b.topo, &b.params, &b.kcfg, &mut arena, x.as_f32().unwrap(), n)
     }
 
     #[test]
@@ -622,6 +916,38 @@ mod tests {
 
         let entry = chain_entry("regression", &[4, 2], 0);
         assert!(NativeBackend::new("reg", &entry, 8).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_conv_entries() {
+        // NHWC input without strides: the artifact-manifest case
+        let mut entry = conv_entry(4, 2, &[(3, 2)], 2);
+        entry.conv_strides.clear();
+        let err = NativeBackend::new("c", &entry, 4).unwrap_err().to_string();
+        assert!(err.contains("conv_strides"), "err: {err}");
+
+        // channel chain broken
+        let mut entry = conv_entry(4, 2, &[(3, 2), (5, 1)], 2);
+        entry.params[2].shape = vec![3, 3, 4, 5];
+        assert!(NativeBackend::new("c", &entry, 4).is_err());
+
+        // head width must match pooled channels
+        let mut entry = conv_entry(4, 2, &[(3, 2)], 2);
+        entry.params[2].shape = vec![7, 2];
+        assert!(NativeBackend::new("c", &entry, 4).is_err());
+
+        // head classes mismatch
+        let mut entry = conv_entry(4, 2, &[(3, 2)], 2);
+        entry.num_classes = 9;
+        assert!(NativeBackend::new("c", &entry, 4).is_err());
+
+        // stride zero
+        let mut entry = conv_entry(4, 2, &[(3, 2)], 2);
+        entry.conv_strides[0] = 0;
+        assert!(NativeBackend::new("c", &entry, 4).is_err());
+
+        // a well-formed one builds
+        assert!(NativeBackend::new("c", &conv_entry(4, 2, &[(3, 2)], 2), 4).is_ok());
     }
 
     #[test]
@@ -668,11 +994,47 @@ mod tests {
         let (x, y) = toy_batch(&b, 11);
         let mask: Vec<f32> = (0..n).map(|i| if i % 2 == 0 { 1.0 } else { 0.0 }).collect();
         let (grads, _) = b.grads(&x, &y, &mask).unwrap();
+        check_grads_fd(&mut b, &x, &y, &mask, &grads);
+    }
 
+    /// The same finite-difference check over a tiny conv net: one conv
+    /// layer (stride 2) + GAP + head — validates the conv backward
+    /// (dK, db, head grads) end to end.
+    #[test]
+    fn conv_gradients_match_finite_differences() {
+        let n = 3;
+        let entry = conv_entry(4, 2, &[(3, 2)], 2);
+        let mut b = conv_backend(&entry, n, KernelConfig::blocked(1));
+        let (x, y) = toy_batch(&b, 13);
+        let mask = vec![1.0, 0.0, 1.0];
+        let (grads, _) = b.grads(&x, &y, &mask).unwrap();
+        check_grads_fd(&mut b, &x, &y, &mask, &grads);
+    }
+
+    /// And over two conv layers, where the conv input gradient
+    /// (col2im + ReLU gate) participates.
+    #[test]
+    fn deep_conv_gradients_match_finite_differences() {
+        let n = 2;
+        let entry = conv_entry(5, 1, &[(2, 1), (3, 2)], 2);
+        let mut b = conv_backend(&entry, n, KernelConfig::blocked(1));
+        let (x, y) = toy_batch(&b, 17);
+        let mask = vec![1.0, 1.0];
+        let (grads, _) = b.grads(&x, &y, &mask).unwrap();
+        check_grads_fd(&mut b, &x, &y, &mask, &grads);
+    }
+
+    fn check_grads_fd(
+        b: &mut NativeBackend,
+        x: &HostTensor,
+        y: &HostTensor,
+        mask: &[f32],
+        grads: &[HostTensor],
+    ) {
         let masked_loss = |b: &mut NativeBackend| -> f64 {
-            let losses = b.fwd_loss(&x, &y).unwrap();
+            let losses = b.fwd_loss(x, y).unwrap();
             let denom: f32 = mask.iter().sum::<f32>().max(1.0);
-            (losses.iter().zip(&mask).map(|(l, m)| l * m).sum::<f32>() / denom) as f64
+            (losses.iter().zip(mask).map(|(l, m)| l * m).sum::<f32>() / denom) as f64
         };
 
         let eps = 1e-3f32;
@@ -685,12 +1047,12 @@ mod tests {
                     pv[vi] = o + eps;
                     o
                 };
-                let up = masked_loss(&mut b);
+                let up = masked_loss(b);
                 {
                     let TensorData::F32(pv) = &mut b.params[pi].data else { panic!() };
                     pv[vi] = orig - eps;
                 }
-                let down = masked_loss(&mut b);
+                let down = masked_loss(b);
                 {
                     let TensorData::F32(pv) = &mut b.params[pi].data else { panic!() };
                     pv[vi] = orig;
@@ -744,6 +1106,29 @@ mod tests {
     }
 
     #[test]
+    fn conv_gathered_step_is_bit_identical_to_masked_step() {
+        let n = 6;
+        let entry = conv_entry(4, 2, &[(3, 1), (4, 2)], 3);
+        for threads in [1usize, 3] {
+            let cfg = KernelConfig::blocked(threads);
+            let mut masked = conv_backend(&entry, n, cfg);
+            let mut gathered = conv_backend(&entry, n, cfg);
+            let (x, y) = toy_batch(&masked, 41);
+            let selected = vec![5usize, 0, 2]; // unsorted on purpose
+            let mut mask = vec![0.0f32; n];
+            for &i in &selected {
+                mask[i] = 1.0;
+            }
+            let lm = masked.train_step(&x, &y, &mask, 0.05).unwrap();
+            let lg = gathered.train_step_selected(&x, &y, &selected, 0.05).unwrap();
+            assert_eq!(lm, lg, "t{threads}: masked {lm} vs gathered {lg}");
+            for (a, b) in masked.params.iter().zip(&gathered.params) {
+                assert_eq!(a.as_f32().unwrap(), b.as_f32().unwrap(), "t{threads}");
+            }
+        }
+    }
+
+    #[test]
     fn init_is_deterministic_and_seed_sensitive() {
         let entry = chain_entry("classification", &[4, 3], 3);
         let mut a = NativeBackend::new("t", &entry, 2).unwrap();
@@ -757,6 +1142,22 @@ mod tests {
         // biases start at zero, weights don't
         assert!(a.params[1].as_f32().unwrap().iter().all(|&v| v == 0.0));
         assert!(a.params[0].as_f32().unwrap().iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn conv_init_scales_by_patch_fan_in() {
+        // He init over a conv kernel draws with σ = sqrt(2 / (kh·kw·cin))
+        let entry = conv_entry(4, 8, &[(32, 2)], 2);
+        let mut b = NativeBackend::new("t", &entry, 2).unwrap();
+        b.init(3).unwrap();
+        let k = b.params[0].as_f32().unwrap();
+        let var: f64 = k.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / k.len() as f64;
+        let want = 2.0 / (3.0 * 3.0 * 8.0);
+        assert!(
+            (var - want).abs() < 0.3 * want,
+            "kernel variance {var} vs He {want}"
+        );
+        assert!(b.params[1].as_f32().unwrap().iter().all(|&v| v == 0.0));
     }
 
     #[test]
@@ -827,6 +1228,24 @@ mod tests {
     }
 
     #[test]
+    fn conv_scratch_arena_recycles_across_steps() {
+        let n = 4;
+        let entry = conv_entry(4, 2, &[(3, 1), (4, 2)], 3);
+        let mut b = conv_backend(&entry, n, KernelConfig::blocked(1));
+        let (x, y) = toy_batch(&b, 19);
+        let mask = vec![1.0f32; n];
+        b.train_step(&x, &y, &mask, 0.1).unwrap();
+        let idle = b.scratch.idle_buffers();
+        assert!(idle > 0, "conv step must return scratch buffers to the arena");
+        b.train_step(&x, &y, &mask, 0.1).unwrap();
+        assert_eq!(
+            b.scratch.idle_buffers(),
+            idle,
+            "steady-state conv steps must reuse, not grow, the arena"
+        );
+    }
+
+    #[test]
     fn reference_and_blocked_kernels_agree_end_to_end() {
         let n = 12;
         let entry = chain_entry("classification", &[9, 7, 3], 3);
@@ -838,6 +1257,26 @@ mod tests {
         naive.init(5).unwrap();
         let (x, y) = toy_batch(&blocked, 29);
         let mask: Vec<f32> = (0..n).map(|i| if i % 3 == 0 { 1.0 } else { 0.0 }).collect();
+        for _ in 0..3 {
+            let lb = blocked.train_step(&x, &y, &mask, 0.1).unwrap();
+            let ln = naive.train_step(&x, &y, &mask, 0.1).unwrap();
+            assert!((lb - ln).abs() <= 1e-4 * ln.abs().max(1.0), "loss {lb} vs {ln}");
+        }
+        for (a, b) in blocked.params.iter().zip(&naive.params) {
+            for (va, vb) in a.as_f32().unwrap().iter().zip(b.as_f32().unwrap()) {
+                assert!((va - vb).abs() <= 1e-4 * vb.abs().max(1.0), "{va} vs {vb}");
+            }
+        }
+    }
+
+    #[test]
+    fn conv_reference_and_blocked_kernels_agree_end_to_end() {
+        let n = 5;
+        let entry = conv_entry(5, 2, &[(3, 1), (4, 2)], 3);
+        let mut blocked = conv_backend(&entry, n, KernelConfig::blocked(2));
+        let mut naive = conv_backend(&entry, n, KernelConfig::reference());
+        let (x, y) = toy_batch(&blocked, 37);
+        let mask: Vec<f32> = (0..n).map(|i| if i % 2 == 0 { 1.0 } else { 0.0 }).collect();
         for _ in 0..3 {
             let lb = blocked.train_step(&x, &y, &mask, 0.1).unwrap();
             let ln = naive.train_step(&x, &y, &mask, 0.1).unwrap();

@@ -3,7 +3,10 @@
 //! * [`TempDir`] — unique scratch directory, removed on drop;
 //! * [`propcheck`] — seeded randomized property harness: runs `cases`
 //!   generated inputs through a property, reporting the failing seed so
-//!   a failure reproduces deterministically.
+//!   a failure reproduces deterministically;
+//! * [`cases`] — shared case generators (tensor fills, kernel shapes,
+//!   conv geometries, mask patterns, cache writer plans) so property
+//!   tests compose one vocabulary instead of re-rolling ad-hoc copies.
 //!
 //! Exposed as a normal module (not `#[cfg(test)]`) so integration tests
 //! and benches can use it; it has no cost unless called.
@@ -12,6 +15,127 @@ use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::data::rng::Rng;
+
+pub mod cases {
+    //! Shared randomized-case generators for the property tests.
+    //!
+    //! `kernel_parity.rs`, `conv_parity.rs` and `sharded_cache.rs` all
+    //! draw their inputs from here: tensor fills, dense kernel shapes
+    //! straddling the register-tile sizes, awkward conv geometries
+    //! (1×1 images, kernel ≥ image, non-tile-multiple channels),
+    //! periodic row masks, labelled batches and per-writer cache op
+    //! plans.
+
+    use crate::data::rng::Rng;
+    use crate::data::tensor::HostTensor;
+    use crate::runtime::kernels::{MR, NR};
+
+    /// `len` standard-normal f32 draws.
+    pub fn normal_vec(rng: &mut Rng, len: usize) -> Vec<f32> {
+        (0..len).map(|_| rng.normal() as f32).collect()
+    }
+
+    /// ReLU-like activations: standard-normal clamped at zero, so about
+    /// half the entries are *exactly* 0.0 (the gate pattern backward
+    /// kernels must honour).
+    pub fn relu_vec(rng: &mut Rng, len: usize) -> Vec<f32> {
+        (0..len).map(|_| (rng.normal() as f32).max(0.0)).collect()
+    }
+
+    /// A labelled classification batch: `n×features` normal features
+    /// (scaled to keep logits tame) and uniform labels in `0..classes`.
+    pub fn class_batch(
+        n: usize,
+        features: usize,
+        classes: usize,
+        seed: u64,
+    ) -> (HostTensor, HostTensor) {
+        let mut rng = Rng::seed_from(seed);
+        let x = HostTensor::f32(
+            vec![n, features],
+            (0..n * features).map(|_| rng.normal() as f32 * 0.4).collect(),
+        )
+        .expect("consistent shape");
+        let y = HostTensor::i32(vec![n], (0..n).map(|_| rng.below(classes) as i32).collect())
+            .expect("consistent shape");
+        (x, y)
+    }
+
+    /// Zero every row of `buf` except each `period`-th one
+    /// (`period == 0` zeroes them all — the all-masked-out batch).
+    /// Mirrors how masked-out examples carry exact-zero head gradients.
+    pub fn zero_rows_except_period(buf: &mut [f32], row_elems: usize, period: usize) {
+        for (i, row) in buf.chunks_exact_mut(row_elems).enumerate() {
+            if period == 0 || i % period != 0 {
+                row.fill(0.0);
+            }
+        }
+    }
+
+    /// Dense kernel shape `(n, din, dout)` deliberately straddling the
+    /// `MR`/`NR` register-tile sizes (every remainder path gets hit).
+    pub fn dense_dims(rng: &mut Rng) -> (usize, usize, usize) {
+        (
+            1 + rng.below(3 * MR + 2),
+            1 + rng.below(2 * NR + 3),
+            1 + rng.below(2 * NR + 3),
+        )
+    }
+
+    /// Awkward conv geometry `(h, w, cin, cout, k, stride)`: images down
+    /// to 1×1, kernels that can exceed the image (SAME padding covers
+    /// the overhang), strides past the image size, and channel counts
+    /// straddling the `NR` panel width.
+    pub fn conv_geometry(rng: &mut Rng) -> (usize, usize, usize, usize, usize, usize) {
+        (
+            1 + rng.below(5),
+            1 + rng.below(5),
+            1 + rng.below(4),
+            1 + rng.below(NR + 3),
+            1 + rng.below(3),
+            1 + rng.below(3),
+        )
+    }
+
+    /// Per-writer loss-cache op plans: writer `w` owns ids ≡ `w` mod
+    /// `writers` (so per-id write order is each writer's program
+    /// order), each op a `(id, loss, stamp)` with the loss derived from
+    /// id and stamp so content mismatches are self-describing.
+    pub fn writer_plans(
+        rng: &mut Rng,
+        capacity: usize,
+        writers: usize,
+        ops_per_writer: usize,
+    ) -> Vec<Vec<(usize, f32, u64)>> {
+        let mut plans = Vec::with_capacity(writers);
+        for w in 0..writers {
+            let owned = (capacity - w).div_ceil(writers);
+            let mut plan = Vec::with_capacity(ops_per_writer);
+            for _ in 0..ops_per_writer {
+                let id = w + writers * rng.below(owned);
+                let stamp = rng.below(50) as u64;
+                let loss = id as f32 * 0.25 + stamp as f32;
+                plan.push((id, loss, stamp));
+            }
+            plans.push(plan);
+        }
+        plans
+    }
+
+    /// Relative-tolerance elementwise comparison, reporting the first
+    /// offending index — the shared parity assertion.
+    pub fn check_close(got: &[f32], want: &[f32], rel_tol: f32, what: &str) -> Result<(), String> {
+        if got.len() != want.len() {
+            return Err(format!("{what}: length {} vs {}", got.len(), want.len()));
+        }
+        for (i, (g, w)) in got.iter().zip(want).enumerate() {
+            if (g - w).abs() > rel_tol * w.abs().max(1.0) {
+                return Err(format!("{what}[{i}]: got {g} vs want {w}"));
+            }
+        }
+        Ok(())
+    }
+}
 
 static COUNTER: AtomicU64 = AtomicU64::new(0);
 
@@ -133,5 +257,67 @@ mod tests {
             |rng| rng.below(10),
             |_| Err("nope".into()),
         );
+    }
+
+    #[test]
+    fn gen_fills_have_expected_structure() {
+        let mut rng = Rng::seed_from(1);
+        let v = cases::normal_vec(&mut rng, 512);
+        assert_eq!(v.len(), 512);
+        assert!(v.iter().any(|&x| x < 0.0) && v.iter().any(|&x| x > 0.0));
+        let r = cases::relu_vec(&mut rng, 512);
+        assert!(r.iter().all(|&x| x >= 0.0));
+        let zeros = r.iter().filter(|&&x| x == 0.0).count();
+        assert!(zeros > 100, "ReLU fill should have many exact zeros, got {zeros}");
+    }
+
+    #[test]
+    fn gen_masking_and_shapes() {
+        let mut buf = vec![1.0f32; 12];
+        cases::zero_rows_except_period(&mut buf, 3, 2);
+        assert_eq!(buf, vec![1., 1., 1., 0., 0., 0., 1., 1., 1., 0., 0., 0.]);
+        let mut all = vec![1.0f32; 6];
+        cases::zero_rows_except_period(&mut all, 3, 0);
+        assert!(all.iter().all(|&v| v == 0.0));
+        let mut rng = Rng::seed_from(2);
+        for _ in 0..50 {
+            let (n, din, dout) = cases::dense_dims(&mut rng);
+            assert!(n >= 1 && din >= 1 && dout >= 1);
+            let (h, w, cin, cout, k, s) = cases::conv_geometry(&mut rng);
+            assert!(h >= 1 && w >= 1 && cin >= 1 && cout >= 1 && k >= 1 && s >= 1);
+        }
+    }
+
+    #[test]
+    fn gen_class_batch_is_deterministic() {
+        let (x1, y1) = cases::class_batch(4, 3, 5, 9);
+        let (x2, y2) = cases::class_batch(4, 3, 5, 9);
+        assert_eq!(x1, x2);
+        assert_eq!(y1, y2);
+        assert_eq!(x1.shape, vec![4, 3]);
+        assert!(y1.as_i32().unwrap().iter().all(|&l| (0..5).contains(&l)));
+    }
+
+    #[test]
+    fn gen_writer_plans_partition_ids() {
+        let mut rng = Rng::seed_from(3);
+        let plans = cases::writer_plans(&mut rng, 40, 3, 25);
+        assert_eq!(plans.len(), 3);
+        for (w, plan) in plans.iter().enumerate() {
+            assert_eq!(plan.len(), 25);
+            for &(id, loss, stamp) in plan {
+                assert_eq!(id % 3, w, "writer {w} must own id {id}");
+                assert!(id < 40);
+                assert_eq!(loss, id as f32 * 0.25 + stamp as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn gen_check_close_reports_index() {
+        assert!(cases::check_close(&[1.0, 2.0], &[1.0, 2.0], 1e-6, "t").is_ok());
+        let err = cases::check_close(&[1.0, 2.5], &[1.0, 2.0], 1e-4, "t").unwrap_err();
+        assert!(err.contains("t[1]"), "err: {err}");
+        assert!(cases::check_close(&[1.0], &[1.0, 2.0], 1e-6, "t").is_err());
     }
 }

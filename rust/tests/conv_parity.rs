@@ -1,0 +1,301 @@
+//! Property tests for the conv kernel family (`runtime/kernels/conv`):
+//! the blocked im2col/GEMM lowering must match the direct-loop
+//! `kernels/reference.rs` conv oracle across awkward geometries, be
+//! bit-identical across thread counts, and preserve the
+//! gathered-vs-masked bit-equality invariant at the backend level on
+//! the cnn_lite chain — the conv mirror of `tests/kernel_parity.rs`.
+
+use obftf::data::rng::Rng;
+use obftf::data::{HostTensor, TensorData};
+use obftf::runtime::kernels::{self, reference, Arena, ConvShape};
+use obftf::runtime::{Backend, KernelConfig, Manifest, NativeBackend};
+use obftf::testkit::cases::{
+    check_close, conv_geometry, normal_vec, relu_vec, zero_rows_except_period,
+};
+use obftf::testkit::{propcheck, TempDir};
+
+const REL_TOL: f32 = 1e-4;
+
+/// One randomized conv-parity case; data regenerates from `data_seed`
+/// so failures print a compact, replayable description.
+#[derive(Debug)]
+struct Case {
+    h: usize,
+    w: usize,
+    cin: usize,
+    cout: usize,
+    k: usize,
+    stride: usize,
+    n: usize,
+    threads: usize,
+    relu: bool,
+    mask_period: usize,
+    data_seed: u64,
+}
+
+fn gen_case(rng: &mut Rng) -> Case {
+    let (h, w, cin, cout, k, stride) = conv_geometry(rng);
+    Case {
+        h,
+        w,
+        cin,
+        cout,
+        k,
+        stride,
+        n: 1 + rng.below(5),
+        threads: 1 + rng.below(5),
+        relu: rng.below(2) == 1,
+        // every `mask_period`-th image's dz rows survive, the rest are
+        // zeroed (0 ⇒ the all-masked-out batch)
+        mask_period: rng.below(4),
+        data_seed: rng.next_u64(),
+    }
+}
+
+fn shape_of(c: &Case) -> ConvShape {
+    ConvShape::same(c.h, c.w, c.cin, c.cout, c.k, c.k, c.stride)
+}
+
+#[test]
+fn blocked_conv_matches_reference_on_random_geometries() {
+    propcheck("conv-blocked-vs-reference", 60, gen_case, |c| {
+        let s = shape_of(c);
+        let (n, threads) = (c.n, c.threads);
+        let mut rng = Rng::seed_from(c.data_seed);
+        let x = normal_vec(&mut rng, n * s.in_elems());
+        let k = normal_vec(&mut rng, s.patch_len() * s.cout);
+        let b = normal_vec(&mut rng, s.cout);
+        // ReLU-like input activation (exact zeros) for the gated paths
+        let h_in = relu_vec(&mut rng, n * s.in_elems());
+        let mut dz = normal_vec(&mut rng, n * s.out_elems());
+        // masked-out images carry exact-zero output gradients
+        zero_rows_except_period(&mut dz, s.out_elems(), c.mask_period);
+
+        let cfg = KernelConfig::blocked(threads);
+        let mut arena = Arena::new();
+
+        let mut got = vec![0.0f32; n * s.out_elems()];
+        let mut want = vec![0.0f32; n * s.out_elems()];
+        kernels::conv2d_bias_act(&cfg, &mut arena, &x, &k, &b, &mut got, n, &s, c.relu);
+        reference::conv2d_bias_act(&x, &k, &b, &mut want, n, &s, c.relu);
+        check_close(&got, &want, REL_TOL, "conv forward")?;
+
+        let (mut gk, mut gb) = (vec![0.0f32; s.patch_len() * s.cout], vec![0.0f32; s.cout]);
+        let (mut wk, mut wb) = (vec![0.0f32; s.patch_len() * s.cout], vec![0.0f32; s.cout]);
+        kernels::conv2d_grad_w(&cfg, &mut arena, &x, &dz, &mut gk, &mut gb, n, &s);
+        reference::conv2d_grad_w(&x, &dz, &mut wk, &mut wb, n, &s);
+        check_close(&gk, &wk, REL_TOL, "conv grad_w")?;
+        check_close(&gb, &wb, REL_TOL, "conv grad_b")?;
+
+        let mut gx = vec![1.0f32; n * s.in_elems()]; // dirty: kernel must overwrite
+        let mut wx = vec![0.0f32; n * s.in_elems()];
+        kernels::conv2d_grad_x(&cfg, &mut arena, &dz, &k, &h_in, &mut gx, n, &s);
+        reference::conv2d_grad_x(&dz, &k, &h_in, &mut wx, n, &s);
+        check_close(&gx, &wx, REL_TOL, "conv grad_x")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn blocked_conv_is_thread_count_invariant_bitwise() {
+    propcheck("conv-threaded-vs-serial", 40, gen_case, |c| {
+        let s = shape_of(c);
+        let n = c.n;
+        let mut rng = Rng::seed_from(c.data_seed);
+        let x = normal_vec(&mut rng, n * s.in_elems());
+        let k = normal_vec(&mut rng, s.patch_len() * s.cout);
+        let b = normal_vec(&mut rng, s.cout);
+        let h_in = relu_vec(&mut rng, n * s.in_elems());
+        let dz = normal_vec(&mut rng, n * s.out_elems());
+        let mut arena = Arena::new();
+        let serial = KernelConfig::blocked(1);
+        let threaded = KernelConfig::blocked(4);
+
+        let (mut o1, mut o4) =
+            (vec![0.0f32; n * s.out_elems()], vec![0.0f32; n * s.out_elems()]);
+        kernels::conv2d_bias_act(&serial, &mut arena, &x, &k, &b, &mut o1, n, &s, c.relu);
+        kernels::conv2d_bias_act(&threaded, &mut arena, &x, &k, &b, &mut o4, n, &s, c.relu);
+        if o1 != o4 {
+            return Err("conv forward differs across thread counts".into());
+        }
+        let (mut k1, mut b1) = (vec![0.0f32; s.patch_len() * s.cout], vec![0.0f32; s.cout]);
+        let (mut k4, mut b4) = (vec![0.0f32; s.patch_len() * s.cout], vec![0.0f32; s.cout]);
+        kernels::conv2d_grad_w(&serial, &mut arena, &x, &dz, &mut k1, &mut b1, n, &s);
+        kernels::conv2d_grad_w(&threaded, &mut arena, &x, &dz, &mut k4, &mut b4, n, &s);
+        if k1 != k4 || b1 != b4 {
+            return Err("conv grad_w differs across thread counts".into());
+        }
+        let (mut x1, mut x4) =
+            (vec![0.0f32; n * s.in_elems()], vec![0.0f32; n * s.in_elems()]);
+        kernels::conv2d_grad_x(&serial, &mut arena, &dz, &k, &h_in, &mut x1, n, &s);
+        kernels::conv2d_grad_x(&threaded, &mut arena, &dz, &k, &h_in, &mut x4, n, &s);
+        if x1 != x4 {
+            return Err("conv grad_x differs across thread counts".into());
+        }
+        Ok(())
+    });
+}
+
+/// The geometries the lowering logic must not mishandle, pinned
+/// explicitly: a 1×1 image under a 3×3 kernel (all padding but the
+/// center), kernel == image, stride past the image, channels around
+/// the `NR` panel width, and the real cnn_lite layer shapes.
+#[test]
+fn pinned_awkward_geometries_match_reference() {
+    use obftf::runtime::kernels::NR;
+    let geoms = [
+        (1, 1, 1, 1, 3, 1),
+        (1, 1, 3, NR, 3, 2),
+        (3, 3, 2, 5, 3, 3),
+        (3, 3, 1, 1, 3, 1),
+        (2, 5, 3, NR + 1, 3, 2),
+        (4, 4, NR, NR, 1, 1),
+        (16, 16, 3, 16, 3, 2),  // cnn_lite layer 1
+        (8, 8, 16, NR - 1, 3, 2), // non-tile cout at the layer-2 shape
+    ];
+    for (h, w, cin, cout, k, stride) in geoms {
+        let s = ConvShape::same(h, w, cin, cout, k, k, stride);
+        let n = 2;
+        for threads in [1, 3] {
+            let mut rng = Rng::seed_from((h * 100 + w * 10 + cout + stride) as u64);
+            let x = normal_vec(&mut rng, n * s.in_elems());
+            let kv = normal_vec(&mut rng, s.patch_len() * s.cout);
+            let b = normal_vec(&mut rng, s.cout);
+            let cfg = KernelConfig::blocked(threads);
+            let mut arena = Arena::new();
+            let mut got = vec![0.0f32; n * s.out_elems()];
+            let mut want = vec![0.0f32; n * s.out_elems()];
+            kernels::conv2d_bias_act(&cfg, &mut arena, &x, &kv, &b, &mut got, n, &s, true);
+            reference::conv2d_bias_act(&x, &kv, &b, &mut want, n, &s, true);
+            check_close(
+                &got,
+                &want,
+                REL_TOL,
+                &format!("conv {h}x{w}x{cin}->{cout} k{k} s{stride} t{threads}"),
+            )
+            .unwrap_or_else(|e| panic!("{e}"));
+        }
+    }
+}
+
+/// An all-masked-out batch (every dz element exactly zero) must
+/// produce exactly-zero kernel, bias and input gradients on both
+/// paths, at several thread counts.
+#[test]
+fn all_masked_out_batch_yields_zero_conv_grads() {
+    let s = ConvShape::same(5, 4, 3, 7, 3, 3, 2);
+    let n = 4;
+    let mut rng = Rng::seed_from(5);
+    let x = normal_vec(&mut rng, n * s.in_elems());
+    let k = normal_vec(&mut rng, s.patch_len() * s.cout);
+    let h_in = relu_vec(&mut rng, n * s.in_elems());
+    let dz = vec![0.0f32; n * s.out_elems()];
+    for cfg in [KernelConfig::blocked(1), KernelConfig::blocked(4), KernelConfig::reference()] {
+        let mut arena = Arena::new();
+        let (mut dk, mut db) = (vec![1.0f32; s.patch_len() * s.cout], vec![1.0f32; s.cout]);
+        kernels::conv2d_grad_w(&cfg, &mut arena, &x, &dz, &mut dk, &mut db, n, &s);
+        assert!(dk.iter().all(|&v| v == 0.0), "dK must be exactly zero");
+        assert!(db.iter().all(|&v| v == 0.0), "db must be exactly zero");
+        let mut dx = vec![1.0f32; n * s.in_elems()];
+        kernels::conv2d_grad_x(&cfg, &mut arena, &dz, &k, &h_in, &mut dx, n, &s);
+        assert!(dx.iter().all(|&v| v == 0.0), "dx must be exactly zero");
+    }
+}
+
+/// The backend-level invariant on the real Table 3 workload: on the
+/// cnn_lite chain (16×16×3 → conv16/s2 → conv32/s2 → GAP → 100-way
+/// head, batch 128), the gathered sub-batch step stays bit-identical
+/// to the masked full-batch step — with threading disabled *and*
+/// enabled — and the parameters are bit-identical across thread
+/// counts. Mirror of kernel_parity's mlp pin.
+#[test]
+fn cnn_lite_gathered_step_bit_identical_to_masked_step() {
+    let dir = TempDir::new("cparity").unwrap();
+    let manifest = Manifest::native(dir.path());
+    let entry = manifest.model("cnn_lite").unwrap();
+    let n = manifest.batch;
+    let stride: usize = entry.x_shape.iter().product();
+    let mut rng = Rng::seed_from(71);
+    let x = HostTensor::f32(
+        vec![n, entry.x_shape[0], entry.x_shape[1], entry.x_shape[2]],
+        (0..n * stride).map(|_| rng.normal() as f32 * 0.5).collect(),
+    )
+    .unwrap();
+    let y = HostTensor::i32(
+        vec![n],
+        (0..n).map(|_| rng.below(entry.num_classes) as i32).collect(),
+    )
+    .unwrap();
+    // scattered, unsorted selection across the batch
+    let selected: Vec<usize> = vec![97, 3, 40, 41, 42, 11, 127, 64, 5, 80];
+    let mut mask = vec![0.0f32; n];
+    for &i in &selected {
+        mask[i] = 1.0;
+    }
+
+    let mut end_params: Vec<Vec<HostTensor>> = vec![];
+    for threads in [1usize, 4] {
+        let cfg = KernelConfig::blocked(threads);
+        let mut masked = NativeBackend::with_kernel_config("cnn_lite", entry, n, cfg).unwrap();
+        let mut gathered = NativeBackend::with_kernel_config("cnn_lite", entry, n, cfg).unwrap();
+        masked.init(9).unwrap();
+        gathered.init(9).unwrap();
+        for step in 0..2 {
+            let lm = masked.train_step(&x, &y, &mask, 0.05).unwrap();
+            let lg = gathered.train_step_selected(&x, &y, &selected, 0.05).unwrap();
+            assert_eq!(lm, lg, "t{threads} step {step}: masked {lm} vs gathered {lg}");
+        }
+        let pm = masked.params_to_host().unwrap();
+        let pg = gathered.params_to_host().unwrap();
+        for (a, b) in pm.iter().zip(&pg) {
+            match (&a.data, &b.data) {
+                (TensorData::F32(va), TensorData::F32(vb)) => {
+                    assert_eq!(va, vb, "t{threads}: masked vs gathered params")
+                }
+                _ => panic!("params must be f32"),
+            }
+        }
+        end_params.push(pm);
+    }
+    for (a, b) in end_params[0].iter().zip(&end_params[1]) {
+        match (&a.data, &b.data) {
+            (TensorData::F32(va), TensorData::F32(vb)) => {
+                assert_eq!(va, vb, "cnn_lite params must be thread-count invariant")
+            }
+            _ => panic!("params must be f32"),
+        }
+    }
+}
+
+/// fwd_loss on the cnn_lite chain is bitwise thread-count invariant
+/// too (the property the sharded-cache inference fleet relies on when
+/// scoring conv batches).
+#[test]
+fn cnn_lite_forward_losses_thread_invariant() {
+    let dir = TempDir::new("cfwd").unwrap();
+    let manifest = Manifest::native(dir.path());
+    let entry = manifest.model("cnn_lite").unwrap();
+    let n = manifest.batch;
+    let stride: usize = entry.x_shape.iter().product();
+    let mut rng = Rng::seed_from(13);
+    let x = HostTensor::f32(
+        vec![n, 16, 16, 3],
+        (0..n * stride).map(|_| rng.normal() as f32 * 0.5).collect(),
+    )
+    .unwrap();
+    let y = HostTensor::i32(
+        vec![n],
+        (0..n).map(|_| rng.below(entry.num_classes) as i32).collect(),
+    )
+    .unwrap();
+    let mut all: Vec<Vec<f32>> = vec![];
+    for threads in [1usize, 4] {
+        let cfg = KernelConfig::blocked(threads);
+        let mut b = NativeBackend::with_kernel_config("cnn_lite", entry, n, cfg).unwrap();
+        b.init(3).unwrap();
+        let losses = b.fwd_loss(&x, &y).unwrap();
+        assert!(losses.iter().all(|l| l.is_finite()));
+        all.push(losses);
+    }
+    assert_eq!(all[0], all[1], "losses must be thread-count invariant");
+}

@@ -3,11 +3,17 @@
 //! naive `kernels/reference.rs` oracle across awkward shapes, be
 //! bit-identical across thread counts, and preserve the
 //! gathered-vs-masked bit-equality invariant of the native backend.
+//!
+//! Inputs come from the shared [`obftf::testkit::cases`] vocabulary (the
+//! conv mirror of this file is `tests/conv_parity.rs`).
 
 use obftf::data::rng::Rng;
 use obftf::data::{HostTensor, TensorData};
-use obftf::runtime::kernels::{self, reference, Arena, MR, NR};
+use obftf::runtime::kernels::{self, reference, Arena};
 use obftf::runtime::{Backend, KernelConfig, Manifest, NativeBackend};
+use obftf::testkit::cases::{
+    check_close, class_batch, dense_dims, normal_vec, relu_vec, zero_rows_except_period,
+};
 use obftf::testkit::{propcheck, TempDir};
 
 const REL_TOL: f32 = 1e-4;
@@ -27,10 +33,11 @@ struct Case {
 }
 
 fn gen_case(rng: &mut Rng) -> Case {
+    let (n, din, dout) = dense_dims(rng);
     Case {
-        n: 1 + rng.below(3 * MR + 2),
-        din: 1 + rng.below(2 * NR + 3),
-        dout: 1 + rng.below(2 * NR + 3),
+        n,
+        din,
+        dout,
         threads: 1 + rng.below(5),
         relu: rng.below(2) == 1,
         // every `mask_period`-th dz row is kept, the rest zeroed
@@ -40,35 +47,19 @@ fn gen_case(rng: &mut Rng) -> Case {
     }
 }
 
-fn fill(rng: &mut Rng, len: usize) -> Vec<f32> {
-    (0..len).map(|_| rng.normal() as f32).collect()
-}
-
-fn check_close(got: &[f32], want: &[f32], what: &str) -> Result<(), String> {
-    for (i, (g, w)) in got.iter().zip(want).enumerate() {
-        if (g - w).abs() > REL_TOL * w.abs().max(1.0) {
-            return Err(format!("{what}[{i}]: blocked {g} vs reference {w}"));
-        }
-    }
-    Ok(())
-}
-
 #[test]
 fn blocked_kernels_match_reference_on_random_shapes() {
     propcheck("blocked-vs-reference", 60, gen_case, |c| {
         let &Case { n, din, dout, threads, relu, mask_period, data_seed } = c;
         let mut rng = Rng::seed_from(data_seed);
-        let h = fill(&mut rng, n * din);
-        let w = fill(&mut rng, din * dout);
-        let b = fill(&mut rng, dout);
+        let h = normal_vec(&mut rng, n * din);
+        let w = normal_vec(&mut rng, din * dout);
+        let b = normal_vec(&mut rng, dout);
         // ReLU-like activations (exact zeros) for the backward inputs
-        let hact: Vec<f32> = h.iter().map(|&v| v.max(0.0)).collect();
-        let mut dz = fill(&mut rng, n * dout);
-        for (i, row) in dz.chunks_exact_mut(dout).enumerate() {
-            if mask_period == 0 || i % mask_period != 0 {
-                row.fill(0.0); // masked-out rows carry exact-zero head grads
-            }
-        }
+        let hact = relu_vec(&mut rng, n * din);
+        let mut dz = normal_vec(&mut rng, n * dout);
+        // masked-out rows carry exact-zero head grads
+        zero_rows_except_period(&mut dz, dout, mask_period);
 
         let cfg = KernelConfig::blocked(threads);
         let mut arena = Arena::new();
@@ -77,20 +68,27 @@ fn blocked_kernels_match_reference_on_random_shapes() {
         let mut want = vec![0.0f32; n * dout];
         kernels::matmul_bias_act(&cfg, &mut arena, &h, &w, &b, &mut got, n, din, dout, relu);
         reference::matmul_bias_act(&h, &w, &b, &mut want, n, din, dout, relu);
-        check_close(&got, &want, "forward")?;
+        check_close(&got, &want, REL_TOL, "forward")?;
 
         let (mut gw, mut gb) = (vec![0.0f32; din * dout], vec![0.0f32; dout]);
         let (mut ww, mut wb) = (vec![0.0f32; din * dout], vec![0.0f32; dout]);
         kernels::grad_weights(&cfg, &mut arena, &hact, &dz, &mut gw, &mut gb, n, din, dout);
         reference::grad_weights(&hact, &dz, &mut ww, &mut wb, n, din, dout);
-        check_close(&gw, &ww, "grad_weights")?;
-        check_close(&gb, &wb, "grad_bias")?;
+        check_close(&gw, &ww, REL_TOL, "grad_weights")?;
+        check_close(&gb, &wb, REL_TOL, "grad_bias")?;
 
         let mut gh = vec![0.0f32; n * din];
         let mut wh = vec![0.0f32; n * din];
         kernels::grad_input(&cfg, &mut arena, &dz, &w, &hact, &mut gh, n, din, dout);
         reference::grad_input(&dz, &w, &hact, &mut wh, n, din, dout);
-        check_close(&gh, &wh, "grad_input")?;
+        check_close(&gh, &wh, REL_TOL, "grad_input")?;
+
+        // the ungated product must equal the oracle's too
+        let mut gu = vec![0.0f32; n * din];
+        let mut wu = vec![0.0f32; n * din];
+        kernels::matmul_dz_wt(&cfg, &mut arena, &dz, &w, &mut gu, n, din, dout);
+        reference::dz_wt(&dz, &w, &mut wu, n, din, dout);
+        check_close(&gu, &wu, REL_TOL, "dz_wt")?;
         Ok(())
     });
 }
@@ -100,10 +98,10 @@ fn blocked_kernels_are_thread_count_invariant_bitwise() {
     propcheck("threaded-vs-serial", 40, gen_case, |c| {
         let &Case { n, din, dout, relu, data_seed, .. } = c;
         let mut rng = Rng::seed_from(data_seed);
-        let h = fill(&mut rng, n * din);
-        let w = fill(&mut rng, din * dout);
-        let b = fill(&mut rng, dout);
-        let dz = fill(&mut rng, n * dout);
+        let h = normal_vec(&mut rng, n * din);
+        let w = normal_vec(&mut rng, din * dout);
+        let b = normal_vec(&mut rng, dout);
+        let dz = normal_vec(&mut rng, n * dout);
         let mut arena = Arena::new();
         let serial = KernelConfig::blocked(1);
         let threaded = KernelConfig::blocked(4);
@@ -136,6 +134,7 @@ fn blocked_kernels_are_thread_count_invariant_bitwise() {
 /// input feature, tile-aligned, off-by-one around `MR`/`NR`.
 #[test]
 fn pinned_awkward_shapes_match_reference() {
+    use obftf::runtime::kernels::{MR, NR};
     let shapes = [
         (1, 1, 1),
         (1, NR, NR),
@@ -148,16 +147,16 @@ fn pinned_awkward_shapes_match_reference() {
     for (n, din, dout) in shapes {
         for threads in [1, 3] {
             let mut rng = Rng::seed_from((n * 1000 + din * 10 + dout) as u64);
-            let h = fill(&mut rng, n * din);
-            let w = fill(&mut rng, din * dout);
-            let b = fill(&mut rng, dout);
+            let h = normal_vec(&mut rng, n * din);
+            let w = normal_vec(&mut rng, din * dout);
+            let b = normal_vec(&mut rng, dout);
             let cfg = KernelConfig::blocked(threads);
             let mut arena = Arena::new();
             let mut got = vec![0.0f32; n * dout];
             let mut want = vec![0.0f32; n * dout];
             kernels::matmul_bias_act(&cfg, &mut arena, &h, &w, &b, &mut got, n, din, dout, true);
             reference::matmul_bias_act(&h, &w, &b, &mut want, n, din, dout, true);
-            check_close(&got, &want, &format!("fwd {n}x{din}x{dout} t{threads}"))
+            check_close(&got, &want, REL_TOL, &format!("fwd {n}x{din}x{dout} t{threads}"))
                 .unwrap_or_else(|e| panic!("{e}"));
         }
     }
@@ -169,8 +168,8 @@ fn pinned_awkward_shapes_match_reference() {
 fn all_masked_out_batch_yields_zero_grads() {
     let (n, din, dout) = (9, 13, 7);
     let mut rng = Rng::seed_from(5);
-    let h = fill(&mut rng, n * din);
-    let w = fill(&mut rng, din * dout);
+    let h = normal_vec(&mut rng, n * din);
+    let w = normal_vec(&mut rng, din * dout);
     let dz = vec![0.0f32; n * dout];
     for threads in [1, 4] {
         let cfg = KernelConfig::blocked(threads);
@@ -183,17 +182,6 @@ fn all_masked_out_batch_yields_zero_grads() {
         kernels::grad_input(&cfg, &mut arena, &dz, &w, &h, &mut dh, n, din, dout);
         assert!(dh.iter().all(|&v| v == 0.0), "dh must be exactly zero");
     }
-}
-
-fn mlp_batch(n: usize, din: usize, classes: usize, seed: u64) -> (HostTensor, HostTensor) {
-    let mut rng = Rng::seed_from(seed);
-    let x = HostTensor::f32(
-        vec![n, din],
-        (0..n * din).map(|_| rng.normal() as f32 * 0.4).collect(),
-    )
-    .unwrap();
-    let y = HostTensor::i32(vec![n], (0..n).map(|_| rng.below(classes) as i32).collect()).unwrap();
-    (x, y)
 }
 
 /// The backend-level invariant the paper's gathered backward relies
@@ -209,7 +197,7 @@ fn gathered_step_bit_identical_to_masked_step_threaded_and_serial() {
     let entry = manifest.model("mlp").unwrap();
     let n = manifest.batch;
     let (din, classes) = (entry.x_shape[0], entry.num_classes);
-    let (x, y) = mlp_batch(n, din, classes, 71);
+    let (x, y) = class_batch(n, din, classes, 71);
     // scattered, unsorted selection across the batch
     let selected: Vec<usize> = vec![97, 3, 40, 41, 42, 11, 127, 64, 5, 80];
     let mut mask = vec![0.0f32; n];

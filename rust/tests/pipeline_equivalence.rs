@@ -127,6 +127,58 @@ fn sync_pipeline_is_bit_identical_to_serial_streaming() {
     }
 }
 
+/// The same bit-for-bit pin on the conv workload: the staged pipeline
+/// must reproduce the serial streaming trainer exactly on cnn_lite
+/// (native conv chain), so all six sampling methods and the pipeline
+/// run Table 3's scenario unchanged.
+#[test]
+fn sync_pipeline_is_bit_identical_to_serial_streaming_on_cnn_lite() {
+    let m = manifest();
+    let mut c = cfg(6);
+    c.model = "cnn_lite".to_string();
+    c.dataset = Some("imagenet_proxy".into());
+    c.n_train = Some(256);
+    c.n_test = Some(128);
+    c.lr = 0.1;
+    let mut serial = StreamingTrainer::with_manifest(&c, &m).unwrap();
+    let sreport = serial.run().unwrap();
+    let sparams = serial.trainer().session().params_to_host().unwrap();
+    assert_eq!(sreport.steps, 6);
+
+    for workers in [1usize, 2] {
+        let mut pc = c.clone();
+        pc.pipeline = true;
+        pc.pipeline_sync = true;
+        pc.pipeline_workers = workers;
+        let mut p = PipelineTrainer::with_manifest(&pc, &m).unwrap();
+        let preport = p.run().unwrap();
+        assert_eq!(preport.steps, sreport.steps, "workers={workers}");
+
+        let srecs = &serial.trainer().recorder.steps;
+        let precs = &p.recorder.steps;
+        assert_eq!(srecs.len(), precs.len());
+        for (a, b) in srecs.iter().zip(precs.iter()) {
+            assert_eq!(
+                a.sel_hash, b.sel_hash,
+                "workers={workers} step {}: selected sets differ",
+                a.step
+            );
+            assert_eq!(
+                a.sel_loss.to_bits(),
+                b.sel_loss.to_bits(),
+                "workers={workers} step {} sel_loss: {} vs {}",
+                a.step,
+                a.sel_loss,
+                b.sel_loss
+            );
+        }
+        let pparams = p.session().params_to_host().unwrap();
+        assert_params_bit_identical(&sparams, &pparams);
+        assert_eq!(preport.forward_examples, sreport.forward_examples);
+        assert_eq!(preport.backward_examples, sreport.backward_examples);
+    }
+}
+
 #[test]
 fn async_pipeline_trains_and_accounts_cache_traffic() {
     let m = manifest();

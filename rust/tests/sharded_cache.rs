@@ -5,10 +5,12 @@
 
 use obftf::coordinator::{LossCache, ShardedLossCache};
 use obftf::data::rng::Rng;
+use obftf::testkit::cases::writer_plans;
 
 /// Property: partition writes among W writers (writer w owns ids ≡ w
-/// mod W, so per-id write order is each writer's program order), run
-/// the writers concurrently against an N-shard cache, and the final
+/// mod W, so per-id write order is each writer's program order — the
+/// shared [`obftf::testkit::cases::writer_plans`] contract), run the
+/// writers concurrently against an N-shard cache, and the final
 /// contents equal the serial cache applying the same per-writer
 /// sequences in any interleaving — here round-robin.
 #[test]
@@ -21,18 +23,7 @@ fn interleaved_writers_match_serial_for_any_schedule() {
         let max_age = rng.below(4) as u64 * 3; // 0 (∞), 3, 6, 9
         let ops_per_writer = 20 + rng.below(60);
 
-        let mut plans: Vec<Vec<(usize, f32, u64)>> = Vec::new();
-        for w in 0..writers {
-            let owned = (capacity - w).div_ceil(writers);
-            let mut plan = Vec::new();
-            for _ in 0..ops_per_writer {
-                let id = w + writers * rng.below(owned);
-                let stamp = rng.below(50) as u64;
-                let loss = id as f32 * 0.25 + stamp as f32;
-                plan.push((id, loss, stamp));
-            }
-            plans.push(plan);
-        }
+        let plans = writer_plans(&mut rng, capacity, writers, ops_per_writer);
 
         // serial reference: round-robin interleave (any schedule that
         // preserves each writer's order yields the same contents,
