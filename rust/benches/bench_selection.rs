@@ -8,6 +8,10 @@
 //! `BENCH_pipeline.json` with steps/s, the cache hit-rate and the
 //! async-eval stall. `OBFTF_PIPELINE_WORKERS` sets the fleet size (CI
 //! sweeps 1 and 4); `OBFTF_BENCH_PIPELINE_STEPS` the steps per run.
+//! Each invocation also runs the **multi-process** fleet (`proc-w1` and
+//! `proc-wN` rows: `obftf worker` children over pipes, distributed
+//! shard ownership) so one JSON carries thread and proc rows from the
+//! same run, including wire traffic as `frame_bytes_per_step`.
 //!
 //! CI smoke: set `OBFTF_BENCH_BUDGET_MS` / `OBFTF_BENCH_MAX_ITERS` for
 //! a tiny run and `OBFTF_BENCH_JSON` to capture the summary artifact.
@@ -78,6 +82,44 @@ fn pipeline_bench() {
     bench.annotate_last("cache_hit_rate", hit_rate);
     bench.annotate_last("eval_stall_ms", stall_ms);
     bench.annotate_last("inference_forwards", fleet_fwd);
+
+    // multi-process fleet rows: the same workload over the proc
+    // transport, at one worker and at the sweep's fleet size, so the
+    // thread-vs-proc contrast (stage overlap vs serialization tax)
+    // lands in one JSON
+    std::env::set_var("OBFTF_WORKER_BIN", env!("CARGO_BIN_EXE_obftf"));
+    let mut proc_sizes = vec![1usize];
+    if workers != 1 {
+        proc_sizes.push(workers);
+    }
+    for pw in proc_sizes {
+        let mut ccfg = cfg.clone();
+        ccfg.pipeline = true;
+        ccfg.pipeline_proc = true;
+        ccfg.pipeline_workers = pw;
+        // the env override wins inside PipelineKnobs::resolve — pin it
+        // to this row's fleet size so the proc-w1 row really runs one
+        // worker even when CI sweeps OBFTF_PIPELINE_WORKERS=4
+        std::env::set_var("OBFTF_PIPELINE_WORKERS", pw.to_string());
+        let mut hit_rate = 0.0f64;
+        let mut stall_ms = 0.0f64;
+        let mut fleet_fwd = 0.0f64;
+        let mut frame_bytes = 0.0f64;
+        bench.run_throughput(&format!("pipeline/proc-w{pw}/mlp"), 0.0, steps as f64, || {
+            let mut p = PipelineTrainer::with_manifest(&ccfg, &manifest).expect("proc pipeline");
+            black_box(p.run().expect("proc pipeline run"));
+            hit_rate = p.cache_stats().hit_rate();
+            stall_ms = p.eval_stall_ms() as f64;
+            fleet_fwd = p.budget.inference_forwards as f64;
+            frame_bytes = p.frame_bytes() as f64;
+        });
+        bench.annotate_last("inference_workers", pw as f64);
+        bench.annotate_last("cache_hit_rate", hit_rate);
+        bench.annotate_last("eval_stall_ms", stall_ms);
+        bench.annotate_last("inference_forwards", fleet_fwd);
+        bench.annotate_last("frame_bytes_per_step", frame_bytes / steps as f64);
+    }
+    std::env::set_var("OBFTF_PIPELINE_WORKERS", workers.to_string());
 
     bench
         .finish("staged pipeline vs serial streaming", "BENCH_pipeline.json")

@@ -87,6 +87,12 @@ pub struct TrainConfig {
     /// Synchronous stage handoffs — the bit-identical oracle mode
     /// (`OBFTF_PIPELINE_SYNC` overrides).
     pub pipeline_sync: bool,
+    /// Multi-process inference fleet: spawn `obftf worker` child
+    /// processes over stdin/stdout pipes with distributed loss-cache
+    /// shard ownership, instead of in-process threads
+    /// (`OBFTF_PIPELINE_PROC` overrides; see README "Multi-process
+    /// fleet").
+    pub pipeline_proc: bool,
 }
 
 impl Default for TrainConfig {
@@ -120,6 +126,7 @@ impl Default for TrainConfig {
             pipeline_depth: 4,
             cache_shards: 0,
             pipeline_sync: false,
+            pipeline_proc: false,
         }
     }
 }
@@ -172,6 +179,7 @@ impl TrainConfig {
             "pipeline_depth" => self.pipeline_depth = val.as_usize()?,
             "cache_shards" => self.cache_shards = val.as_usize()?,
             "pipeline_sync" => self.pipeline_sync = val.as_bool()?,
+            "pipeline_proc" => self.pipeline_proc = val.as_bool()?,
             other => bail!("unknown config key {other:?}"),
         }
         Ok(())
@@ -214,6 +222,9 @@ impl TrainConfig {
         }
         if self.pipeline_depth == 0 {
             bail!("pipeline_depth must be ≥ 1");
+        }
+        if self.pipeline_proc && !self.pipeline {
+            bail!("pipeline_proc requires pipeline = true (it selects the fleet transport)");
         }
         match self.flavour.as_str() {
             "auto" | "native" | "pallas" | "jnp" => {}
@@ -305,6 +316,16 @@ epochs = 2
         assert_eq!(cfg.cache_shards, 16);
         // pipeline without streaming is rejected
         assert!(TrainConfig::from_toml_str("pipeline = true").is_err());
+        // proc transport parses, but demands pipeline mode
+        let cfg = TrainConfig::from_toml_str(
+            "epochs = 0\nstream_steps = 50\npipeline = true\npipeline_proc = true\n",
+        )
+        .unwrap();
+        assert!(cfg.pipeline_proc);
+        assert!(TrainConfig::from_toml_str(
+            "epochs = 0\nstream_steps = 50\npipeline_proc = true\n"
+        )
+        .is_err());
         let mut cfg = TrainConfig::default();
         cfg.stream_steps = 10;
         cfg.pipeline = true;

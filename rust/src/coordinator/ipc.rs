@@ -1,0 +1,1320 @@
+//! Transport abstraction for the staged pipeline's inference fleet.
+//!
+//! The pipeline leader (selection + training stages) talks to its
+//! inference fleet and distributed loss cache exclusively through the
+//! [`Transport`] trait:
+//!
+//! * [`InProcTransport`] — the fleet as scoped-ownership *threads*
+//!   sharing one address space: a bounded ticket queue feeds N workers
+//!   (each with a private [`Session`]), losses land in one lock-striped
+//!   [`ShardedLossCache`], weights sync through a [`ParamStore`]. This
+//!   is the PR-3 pipeline unchanged — the degenerate single-process
+//!   case of the sharded-ownership protocol.
+//! * [`ProcTransport`] — the fleet as *child processes* (`obftf
+//!   worker`) over stdin/stdout pipes speaking the typed frames of
+//!   [`crate::coordinator::proto`]. Each worker **owns** the loss-cache
+//!   shards `id % n_workers == worker_id`: it records its own scores
+//!   locally, receives routed rows for ids it owns when another worker
+//!   scored them, and serves the leader's `CacheLookup` fan-outs. The
+//!   leader holds no loss state at all — freshness classification runs
+//!   over merged `CacheView`s, under the same rules as the in-memory
+//!   cache (`exact` stamp in sync mode, `max_age` window otherwise).
+//!
+//! Failure policy is fail-fast: a dedicated reader thread per child
+//! turns pipe EOF or a decode error into a `Dead` event, and every
+//! blocking leader wait carries a timeout, so a worker dying
+//! mid-pipeline surfaces as a contextual error (worker id, child exit
+//! status, last frame sent) instead of a hang. `worker_restarts` is
+//! plumbed through the stats for a future supervised-restart policy and
+//! is always 0 under fail-fast.
+//!
+//! [`Session`]: crate::runtime::Session
+
+use std::io::{BufReader, Read, Write};
+use std::path::PathBuf;
+use std::process::{Child, ChildStdin, Command, Stdio};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::loss_cache::{
+    is_fresh, CacheProbe, CacheStats, LossCache, ShardedLossCache, NEVER,
+};
+use crate::coordinator::proto::{self, Frame, ViewRow, WorkerStats, NO_ID};
+use crate::data::dataset::Batch;
+use crate::data::HostTensor;
+use crate::runtime::{Flavour, Manifest, Session};
+
+/// Upper bound on how long the leader waits for fleet progress before
+/// declaring the pipeline wedged (overridable per-transport via spec).
+pub const STALL_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Versioned weight snapshot the training stage publishes and the
+/// in-process inference workers sync from. Version = number of applies
+/// performed, which is also the staleness stamp written into the loss
+/// cache. (In proc mode the same publish crosses the process boundary
+/// as a `ParamUpdate` frame instead.)
+pub struct ParamStore {
+    inner: Mutex<(u64, Arc<Vec<HostTensor>>)>,
+}
+
+impl ParamStore {
+    pub fn new(initial: Arc<Vec<HostTensor>>) -> Self {
+        ParamStore { inner: Mutex::new((0, initial)) }
+    }
+
+    pub fn latest(&self) -> (u64, Arc<Vec<HostTensor>>) {
+        let g = self.inner.lock().expect("param store lock");
+        (g.0, g.1.clone())
+    }
+
+    pub fn publish(&self, version: u64, params: Arc<Vec<HostTensor>>) {
+        *self.inner.lock().expect("param store lock") = (version, params);
+    }
+}
+
+/// End-of-run aggregate the leader absorbs at [`Transport::shutdown`].
+#[derive(Clone, Debug, Default)]
+pub struct FleetSummary {
+    /// Final per-worker counters (proc mode: from `WorkerStats` frames).
+    pub workers: Vec<WorkerStats>,
+    /// Workers alive when shutdown began.
+    pub workers_alive: usize,
+    /// Workers relaunched mid-run (always 0 under fail-fast).
+    pub restarts: u64,
+    /// Aggregate lookup-granularity cache counters.
+    pub cache: CacheStats,
+    /// Row-granularity counters per shard (proc mode: shard == worker).
+    pub shard_rows: Vec<CacheStats>,
+    /// Total real rows forwarded by the fleet (requeues included).
+    pub fleet_rows: u64,
+    /// Total wire bytes, both directions (in-proc: 0).
+    pub frame_bytes: u64,
+}
+
+/// The pipeline leader's view of its inference fleet + loss cache.
+///
+/// `now` is the current parameter version; in sync mode
+/// [`Transport::await_losses`] only accepts losses stamped exactly
+/// `now` (the bit-identical oracle rule), otherwise the transport's
+/// `max_age` window applies and fully-scored-but-stale batches are
+/// re-submitted for re-scoring.
+pub trait Transport {
+    fn n_workers(&self) -> usize;
+    /// Broadcast new weights to the fleet (version = staleness stamp).
+    fn publish(&mut self, version: u64, weights: &Arc<Vec<HostTensor>>) -> Result<()>;
+    /// Enqueue a batch for scoring.
+    fn submit(&mut self, batch: &Arc<Batch>) -> Result<()>;
+    /// Block until the losses for `batch` satisfy the freshness rule.
+    fn await_losses(&mut self, batch: &Arc<Batch>, now: u64) -> Result<Vec<f32>>;
+    /// Aggregate lookup-granularity counters so far.
+    fn cache_stats(&self) -> CacheStats;
+    /// Workers currently alive.
+    fn workers_alive(&self) -> usize;
+    /// Per-worker scored-batch counts so far.
+    fn worker_scored(&self) -> Vec<u64>;
+    /// Workers relaunched so far (0 under the fail-fast policy).
+    fn restarts(&self) -> u64 {
+        0
+    }
+    /// Wire traffic so far in bytes (0 for in-process transports).
+    fn frame_bytes(&self) -> u64 {
+        0
+    }
+    /// Graceful shutdown: drain the fleet, join/reap workers, surface
+    /// any failure that raced the leader's last check.
+    fn shutdown(&mut self) -> Result<FleetSummary>;
+}
+
+// ---------------------------------------------------------------------------
+// In-process transport (threads + shared sharded cache)
+// ---------------------------------------------------------------------------
+
+/// A unit of inference work: score `batch` and record the losses.
+struct Ticket {
+    batch: Arc<Batch>,
+}
+
+type SharedTickets = Arc<Mutex<mpsc::Receiver<Ticket>>>;
+
+/// Construction parameters for [`InProcTransport::spawn`].
+pub struct InProcSpec {
+    pub manifest: Manifest,
+    pub model: String,
+    pub flavour: Flavour,
+    pub workers: usize,
+    pub capacity: usize,
+    pub max_age: u64,
+    pub shards: usize,
+    pub sync: bool,
+    /// Ticket-queue bound (lookahead depth + workers + slack).
+    pub queue_cap: usize,
+    pub stall: Duration,
+}
+
+/// The PR-3 thread fleet behind the [`Transport`] trait.
+pub struct InProcTransport {
+    cache: Arc<ShardedLossCache>,
+    params: Arc<ParamStore>,
+    tickets: Option<mpsc::SyncSender<Ticket>>,
+    err: Arc<Mutex<Option<String>>>,
+    scored_batches: Arc<Vec<AtomicU64>>,
+    scored_rows: Arc<Vec<AtomicU64>>,
+    handles: Vec<JoinHandle<()>>,
+    sync: bool,
+    stall: Duration,
+}
+
+impl InProcTransport {
+    /// Spawn the worker threads; each builds its [`Session`] on its own
+    /// thread (backends may hold non-`Send` handles).
+    ///
+    /// [`Session`]: crate::runtime::Session
+    pub fn spawn(spec: InProcSpec) -> Result<InProcTransport> {
+        let cache = Arc::new(ShardedLossCache::new(spec.capacity, spec.max_age, spec.shards));
+        let params = Arc::new(ParamStore::new(Arc::new(Vec::new())));
+        let err: Arc<Mutex<Option<String>>> = Arc::new(Mutex::new(None));
+        let scored_batches: Arc<Vec<AtomicU64>> =
+            Arc::new((0..spec.workers).map(|_| AtomicU64::new(0)).collect());
+        let scored_rows: Arc<Vec<AtomicU64>> =
+            Arc::new((0..spec.workers).map(|_| AtomicU64::new(0)).collect());
+        let (ticket_tx, ticket_rx) = mpsc::sync_channel::<Ticket>(spec.queue_cap);
+        let ticket_rx: SharedTickets = Arc::new(Mutex::new(ticket_rx));
+        let mut handles = Vec::with_capacity(spec.workers);
+        for w in 0..spec.workers {
+            let ctx = WorkerCtx {
+                manifest: spec.manifest.clone(),
+                model: spec.model.clone(),
+                flavour: spec.flavour,
+                index: w,
+                tickets: ticket_rx.clone(),
+                cache: cache.clone(),
+                params: params.clone(),
+                scored_batches: scored_batches.clone(),
+                scored_rows: scored_rows.clone(),
+                err: err.clone(),
+            };
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("obftf-infer-{w}"))
+                    .spawn(move || inference_worker(ctx))
+                    .context("spawn inference worker")?,
+            );
+        }
+        Ok(InProcTransport {
+            cache,
+            params,
+            tickets: Some(ticket_tx),
+            err,
+            scored_batches,
+            scored_rows,
+            handles,
+            sync: spec.sync,
+            stall: spec.stall,
+        })
+    }
+
+    /// Live shard counters (the trait only exposes them via summary).
+    pub fn shard_stats(&self, shard: usize) -> CacheStats {
+        self.cache.shard_stats(shard)
+    }
+
+    fn check_err(&self) -> Result<()> {
+        if let Some(e) = self.err.lock().expect("err slot").take() {
+            bail!("pipeline inference stage failed: {e}");
+        }
+        Ok(())
+    }
+
+    fn check_stall(&self, now: u64, since: Instant) -> Result<()> {
+        if since.elapsed() > self.stall {
+            bail!(
+                "pipeline stalled: step {now} waited {:?} for losses (cache stats {:?})",
+                self.stall,
+                self.cache.stats()
+            );
+        }
+        Ok(())
+    }
+
+    /// Non-blocking ticket send with worker-death detection (a plain
+    /// blocking send could deadlock against a dead fleet).
+    fn send_ticket(&self, mut ticket: Ticket) -> Result<()> {
+        let Some(tickets) = self.tickets.as_ref() else {
+            bail!("pipeline inference stage already shut down");
+        };
+        loop {
+            match tickets.try_send(ticket) {
+                Ok(()) => return Ok(()),
+                Err(mpsc::TrySendError::Full(back)) => {
+                    self.check_err()?;
+                    ticket = back;
+                    std::thread::sleep(Duration::from_micros(50));
+                }
+                Err(mpsc::TrySendError::Disconnected(_)) => {
+                    self.check_err()?;
+                    bail!("pipeline inference stage terminated unexpectedly");
+                }
+            }
+        }
+    }
+
+    fn summary(&self, workers_alive: usize) -> FleetSummary {
+        let workers = (0..self.scored_batches.len())
+            .map(|w| WorkerStats {
+                worker: w as u32,
+                scored_batches: self.scored_batches[w].load(Ordering::Relaxed),
+                scored_rows: self.scored_rows[w].load(Ordering::Relaxed),
+                recorded_rows: self.scored_rows[w].load(Ordering::Relaxed),
+                lookups: 0,
+            })
+            .collect();
+        FleetSummary {
+            workers,
+            workers_alive,
+            restarts: 0,
+            cache: self.cache.stats(),
+            shard_rows: (0..self.cache.n_shards()).map(|k| self.cache.shard_stats(k)).collect(),
+            fleet_rows: self.fleet_rows_now(),
+            frame_bytes: 0,
+        }
+    }
+
+    fn fleet_rows_now(&self) -> u64 {
+        self.scored_rows.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+}
+
+impl Transport for InProcTransport {
+    fn n_workers(&self) -> usize {
+        self.scored_batches.len()
+    }
+
+    fn publish(&mut self, version: u64, weights: &Arc<Vec<HostTensor>>) -> Result<()> {
+        self.params.publish(version, weights.clone());
+        Ok(())
+    }
+
+    fn submit(&mut self, batch: &Arc<Batch>) -> Result<()> {
+        self.send_ticket(Ticket { batch: batch.clone() })
+    }
+
+    /// The selection stage's handoff.
+    ///
+    /// Async mode: first a *counting* lookup (the hit/miss statistic
+    /// answers "were the losses ready when selection wanted them?"),
+    /// then non-counting polls; fully-scored-but-stale batches are
+    /// re-enqueued once per staleness watermark so a worker re-scores
+    /// them with current weights.
+    ///
+    /// Sync mode: poll the exact-stamp probe — only losses computed
+    /// under the *current* parameter version (stamp == now) are
+    /// accepted, which is what makes the oracle mode bit-identical to
+    /// the serial trainer.
+    fn await_losses(&mut self, batch: &Arc<Batch>, now: u64) -> Result<Vec<f32>> {
+        let t0 = Instant::now();
+        if self.sync {
+            loop {
+                self.check_err()?;
+                if let Some(l) = self.cache.probe_stamped(&batch.ids, &batch.valid_mask, now) {
+                    return Ok(l);
+                }
+                self.check_stall(now, t0)?;
+                std::thread::sleep(Duration::from_micros(30));
+            }
+        }
+        if let Some(l) = self.cache.lookup_batch(&batch.ids, &batch.valid_mask, now) {
+            return Ok(l);
+        }
+        let mut requeued_for: Option<u64> = None;
+        loop {
+            self.check_err()?;
+            match self.cache.probe_batch(&batch.ids, &batch.valid_mask, now) {
+                CacheProbe::Fresh(l) => return Ok(l),
+                CacheProbe::Stale { min_stamp } => {
+                    if requeued_for != Some(min_stamp) {
+                        self.send_ticket(Ticket { batch: batch.clone() })?;
+                        requeued_for = Some(min_stamp);
+                    }
+                }
+                CacheProbe::Incomplete => {}
+            }
+            self.check_stall(now, t0)?;
+            std::thread::sleep(Duration::from_micros(30));
+        }
+    }
+
+    fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    /// Worker threads that have not exited. A healthy worker lives
+    /// until the ticket queue closes; one that hit an error (recorded
+    /// in the err slot) exits early and stops counting here.
+    fn workers_alive(&self) -> usize {
+        self.handles.iter().filter(|h| !h.is_finished()).count()
+    }
+
+    fn worker_scored(&self) -> Vec<u64> {
+        self.scored_batches.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+
+    fn shutdown(&mut self) -> Result<FleetSummary> {
+        let alive_at_entry = self.workers_alive();
+        // close the ticket queue so workers drain and exit, then join
+        self.tickets.take();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        // a worker may have failed after the leader's last check (e.g.
+        // on a leftover requeued ticket) — surface it rather than
+        // reporting a silently-degraded run
+        if let Some(e) = self.err.lock().expect("err slot").take() {
+            bail!("pipeline stage failed during shutdown: {e}");
+        }
+        Ok(self.summary(alive_at_entry))
+    }
+}
+
+impl Drop for InProcTransport {
+    fn drop(&mut self) {
+        self.tickets.take();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Everything an in-process inference worker owns (built before its
+/// thread starts; the `Session` itself is constructed *inside* the
+/// thread because backends may hold non-`Send` handles).
+struct WorkerCtx {
+    manifest: Manifest,
+    model: String,
+    flavour: Flavour,
+    index: usize,
+    tickets: SharedTickets,
+    cache: Arc<ShardedLossCache>,
+    params: Arc<ParamStore>,
+    scored_batches: Arc<Vec<AtomicU64>>,
+    scored_rows: Arc<Vec<AtomicU64>>,
+    err: Arc<Mutex<Option<String>>>,
+}
+
+fn record_failure(err: &Mutex<Option<String>>, stage: &str, e: anyhow::Error) {
+    let mut slot = err.lock().expect("err slot");
+    if slot.is_none() {
+        *slot = Some(format!("{stage}: {e:#}"));
+    }
+}
+
+/// In-process inference worker: drain tickets, sync weights from the
+/// [`ParamStore`], run `fwd_loss`, record into the sharded cache with
+/// the parameter version as the staleness stamp.
+fn inference_worker(ctx: WorkerCtx) {
+    let mut session = match Session::new(&ctx.manifest, &ctx.model, ctx.flavour) {
+        Ok(s) => s,
+        Err(e) => return record_failure(&ctx.err, "inference worker (session build)", e),
+    };
+    let mut loaded_version = u64::MAX;
+    loop {
+        let msg = ctx.tickets.lock().expect("ticket queue").recv();
+        let Ok(Ticket { batch }) = msg else {
+            return; // leader closed the queue: clean shutdown
+        };
+        let (version, p) = ctx.params.latest();
+        if version != loaded_version {
+            if let Err(e) = session.load_params(&p) {
+                return record_failure(&ctx.err, "inference worker (weight sync)", e);
+            }
+            loaded_version = version;
+        }
+        match session.fwd_loss(&batch.x, &batch.y) {
+            Ok(losses) => {
+                ctx.cache
+                    .record_batch(&batch.ids, &batch.valid_mask, &losses, loaded_version);
+                ctx.scored_batches[ctx.index].fetch_add(1, Ordering::Relaxed);
+                ctx.scored_rows[ctx.index].fetch_add(batch.real as u64, Ordering::Relaxed);
+            }
+            Err(e) => return record_failure(&ctx.err, "inference worker (fwd_loss)", e),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Multi-process transport (child workers over stdin/stdout pipes)
+// ---------------------------------------------------------------------------
+
+/// Construction parameters for [`ProcTransport::spawn`].
+pub struct ProcSpec {
+    pub model: String,
+    pub flavour: Flavour,
+    pub workers: usize,
+    pub capacity: usize,
+    pub max_age: u64,
+    pub sync: bool,
+    /// Worker binary; `None` resolves `$OBFTF_WORKER_BIN`, then the
+    /// current executable (correct when the leader *is* `obftf`).
+    pub worker_bin: Option<PathBuf>,
+    /// Leader-side recv timeout (stall + liveness bound).
+    pub timeout: Duration,
+    /// Test-only fault injection: worker `w` crashes (exit 17, no
+    /// handshake) after handling `fail_after[w]` frames.
+    pub fail_after: Vec<Option<u64>>,
+}
+
+/// Test-only fault injection via the environment:
+/// `OBFTF_PROC_FAIL_AFTER="<worker>:<frames>"` makes that worker crash
+/// after handling that many frames. Returns an empty vector (no
+/// faults) when unset or malformed, so production paths cost nothing.
+pub fn fail_after_from_env(workers: usize) -> Vec<Option<u64>> {
+    let Ok(v) = std::env::var("OBFTF_PROC_FAIL_AFTER") else {
+        return Vec::new();
+    };
+    let mut out = vec![None; workers];
+    if let Some((w, k)) = v.split_once(':') {
+        if let (Ok(w), Ok(k)) = (w.trim().parse::<usize>(), k.trim().parse::<u64>()) {
+            if w < workers {
+                out[w] = Some(k);
+            }
+        }
+    }
+    out
+}
+
+impl ProcSpec {
+    fn resolve_bin(&self) -> Result<PathBuf> {
+        if let Some(p) = &self.worker_bin {
+            return Ok(p.clone());
+        }
+        if let Ok(p) = std::env::var("OBFTF_WORKER_BIN") {
+            return Ok(PathBuf::from(p));
+        }
+        std::env::current_exe().context("locating worker binary (current_exe)")
+    }
+}
+
+enum Event {
+    Frame(usize, Frame),
+    Dead(usize, String),
+}
+
+struct ProcHandle {
+    child: Child,
+    stdin: Option<ChildStdin>,
+    reader: Option<JoinHandle<()>>,
+    alive: bool,
+    last_sent: &'static str,
+}
+
+/// The multi-process fleet: `obftf worker` children with distributed
+/// loss-cache shard ownership (`id % n_workers`).
+pub struct ProcTransport {
+    procs: Vec<ProcHandle>,
+    events: mpsc::Receiver<Event>,
+    sync: bool,
+    max_age: u64,
+    timeout: Duration,
+    next_seq: u64,
+    next_req: u64,
+    cur_req: u64,
+    pending_views: Vec<Option<Vec<ViewRow>>>,
+    agg: CacheStats,
+    shard_rows: Vec<CacheStats>,
+    scored: Vec<u64>,
+    fleet_rows: u64,
+    bytes_out: u64,
+    bytes_in: Arc<AtomicU64>,
+    final_stats: Vec<Option<WorkerStats>>,
+    shutting_down: bool,
+    /// Set whenever a `LossRecords` frame lands (new rows recorded /
+    /// routed) — tells `await_losses` a re-lookup can make progress
+    /// without waiting for another event. Routing itself produces no
+    /// reply frame, so without this the leader could block on an event
+    /// that never comes after the routed rows already satisfied it.
+    progress: bool,
+}
+
+enum RowClass {
+    Fresh(Vec<f32>),
+    Stale { min_stamp: u64 },
+    Incomplete,
+}
+
+impl ProcTransport {
+    /// Spawn `workers` child processes and their reader threads.
+    pub fn spawn(spec: ProcSpec) -> Result<ProcTransport> {
+        anyhow::ensure!(spec.workers > 0, "proc transport needs at least one worker");
+        let bin = spec.resolve_bin()?;
+        let (tx, events) = mpsc::channel::<Event>();
+        let bytes_in = Arc::new(AtomicU64::new(0));
+        let mut procs = Vec::with_capacity(spec.workers);
+        for w in 0..spec.workers {
+            let mut cmd = Command::new(&bin);
+            cmd.arg("worker")
+                .arg("--worker-id")
+                .arg(w.to_string())
+                .arg("--workers")
+                .arg(spec.workers.to_string())
+                .arg("--model")
+                .arg(&spec.model)
+                .arg("--flavour")
+                .arg(spec.flavour.as_str())
+                .arg("--capacity")
+                .arg(spec.capacity.to_string())
+                .arg("--max-age")
+                .arg(spec.max_age.to_string())
+                .stdin(Stdio::piped())
+                .stdout(Stdio::piped());
+            if let Some(Some(k)) = spec.fail_after.get(w) {
+                cmd.arg("--fail-after").arg(k.to_string());
+            }
+            let mut child = cmd
+                .spawn()
+                .with_context(|| format!("spawning pipeline worker {w} ({})", bin.display()))?;
+            let stdin = child.stdin.take().expect("piped stdin");
+            let stdout = child.stdout.take().expect("piped stdout");
+            let tx = tx.clone();
+            let counter = bytes_in.clone();
+            let reader = std::thread::Builder::new()
+                .name(format!("obftf-proc-rx-{w}"))
+                .spawn(move || {
+                    let mut r = BufReader::new(stdout);
+                    loop {
+                        match proto::read_frame(&mut r) {
+                            Ok(Some((frame, n))) => {
+                                counter.fetch_add(n as u64, Ordering::Relaxed);
+                                if tx.send(Event::Frame(w, frame)).is_err() {
+                                    return;
+                                }
+                            }
+                            Ok(None) => {
+                                let _ =
+                                    tx.send(Event::Dead(w, "stdout closed (worker exited)".into()));
+                                return;
+                            }
+                            Err(e) => {
+                                let _ =
+                                    tx.send(Event::Dead(w, format!("bad frame from worker: {e:#}")));
+                                return;
+                            }
+                        }
+                    }
+                })
+                .context("spawn proc reader thread")?;
+            procs.push(ProcHandle {
+                child,
+                stdin: Some(stdin),
+                reader: Some(reader),
+                alive: true,
+                last_sent: "none",
+            });
+        }
+        drop(tx);
+        Ok(ProcTransport {
+            pending_views: vec![None; spec.workers],
+            shard_rows: vec![CacheStats::default(); spec.workers],
+            scored: vec![0; spec.workers],
+            final_stats: vec![None; spec.workers],
+            procs,
+            events,
+            sync: spec.sync,
+            max_age: spec.max_age,
+            timeout: spec.timeout,
+            next_seq: 0,
+            next_req: 0,
+            cur_req: 0,
+            agg: CacheStats::default(),
+            fleet_rows: 0,
+            bytes_out: 0,
+            bytes_in,
+            shutting_down: false,
+            progress: false,
+        })
+    }
+
+    /// Contextual fail-fast error for a dead/failed worker: id, child
+    /// exit status, the last frame the leader sent it.
+    fn dead_error(&mut self, w: usize, reason: &str) -> anyhow::Error {
+        self.procs[w].alive = false;
+        let status = match self.procs[w].child.try_wait() {
+            Ok(Some(s)) => s.to_string(),
+            Ok(None) => "still running".to_string(),
+            Err(_) => "unknown".to_string(),
+        };
+        let last = self.procs[w].last_sent;
+        anyhow!(
+            "pipeline worker {w} died mid-pipeline: {reason} \
+             (child status: {status}; last frame sent to worker {w}: {last})"
+        )
+    }
+
+    fn write_raw(&mut self, w: usize, bytes: &[u8], name: &'static str) -> Result<()> {
+        if !self.procs[w].alive {
+            return Err(self.dead_error(w, "refusing to write to dead worker"));
+        }
+        let io = {
+            let h = &mut self.procs[w];
+            let stdin = h.stdin.as_mut().expect("stdin open while alive");
+            stdin.write_all(bytes)
+        };
+        match io {
+            Ok(()) => {
+                self.bytes_out += bytes.len() as u64;
+                self.procs[w].last_sent = name;
+                Ok(())
+            }
+            Err(e) => Err(self.dead_error(w, &format!("write of {name} frame failed: {e}"))),
+        }
+    }
+
+    fn write(&mut self, w: usize, frame: &Frame) -> Result<()> {
+        self.write_raw(w, &frame.encode(), frame.name())
+    }
+
+    fn handle_event(&mut self, ev: Event) -> Result<()> {
+        match ev {
+            Event::Frame(w, frame) => self.handle_frame(w, frame),
+            Event::Dead(w, reason) => {
+                if self.shutting_down && self.final_stats[w].is_some() {
+                    // normal EOF after the stats handshake
+                    self.procs[w].alive = false;
+                    Ok(())
+                } else {
+                    Err(self.dead_error(w, &reason))
+                }
+            }
+        }
+    }
+
+    fn handle_frame(&mut self, w: usize, frame: Frame) -> Result<()> {
+        match frame {
+            Frame::LossRecords { stamp, ids, losses, .. } => {
+                self.scored[w] += 1;
+                self.fleet_rows += ids.len() as u64;
+                self.progress = true;
+                if self.shutting_down {
+                    return Ok(()); // late score reply: absorb, don't route
+                }
+                // route foreign rows to their shard owners
+                let n = self.procs.len() as u64;
+                for owner in 0..self.procs.len() {
+                    if owner == w {
+                        continue; // scorer recorded its own rows locally
+                    }
+                    let mut oids = Vec::new();
+                    let mut olosses = Vec::new();
+                    for (&id, &l) in ids.iter().zip(&losses) {
+                        if id % n == owner as u64 {
+                            oids.push(id);
+                            olosses.push(l);
+                        }
+                    }
+                    if oids.is_empty() {
+                        continue;
+                    }
+                    let route = Frame::LossRecords {
+                        seq: u64::MAX,
+                        worker: w as u32,
+                        stamp,
+                        ids: oids,
+                        losses: olosses,
+                    };
+                    self.write(owner, &route)?;
+                }
+                Ok(())
+            }
+            Frame::CacheView { req, worker, rows } => {
+                let worker = worker as usize;
+                if req == self.cur_req && worker < self.pending_views.len() {
+                    self.pending_views[worker] = Some(rows);
+                }
+                Ok(())
+            }
+            Frame::WorkerStats(s) => {
+                let idx = s.worker as usize;
+                if idx < self.final_stats.len() {
+                    self.final_stats[idx] = Some(s);
+                }
+                Ok(())
+            }
+            other => Err(self.dead_error(w, &format!("protocol violation: sent {}", other.name()))),
+        }
+    }
+
+    fn drain_events(&mut self) -> Result<()> {
+        loop {
+            match self.events.try_recv() {
+                Ok(ev) => self.handle_event(ev)?,
+                Err(mpsc::TryRecvError::Empty) => return Ok(()),
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    bail!("all pipeline workers terminated (event channel closed)")
+                }
+            }
+        }
+    }
+
+    fn recv_deadline(&mut self, deadline: Instant, what: &str) -> Result<()> {
+        let remain = deadline.saturating_duration_since(Instant::now());
+        if remain.is_zero() {
+            bail!(
+                "pipeline timed out after {:?} waiting for {what} \
+                 (workers alive: {}/{})",
+                self.timeout,
+                self.procs.iter().filter(|p| p.alive).count(),
+                self.procs.len()
+            );
+        }
+        match self.events.recv_timeout(remain) {
+            Ok(ev) => self.handle_event(ev),
+            Err(mpsc::RecvTimeoutError::Timeout) => bail!(
+                "pipeline timed out after {:?} waiting for {what} \
+                 (workers alive: {}/{})",
+                self.timeout,
+                self.procs.iter().filter(|p| p.alive).count(),
+                self.procs.len()
+            ),
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                bail!("all pipeline workers terminated while waiting for {what}")
+            }
+        }
+    }
+
+    /// One `CacheLookup` fan-out + merged-view freshness classification
+    /// (the distributed analogue of `ShardedLossCache::scan`).
+    fn lookup_once(&mut self, batch: &Batch, now: u64, count: bool) -> Result<RowClass> {
+        let n = self.procs.len();
+        self.next_req += 1;
+        let req = self.next_req;
+        self.cur_req = req;
+        let wire_ids: Vec<u64> = batch
+            .ids
+            .iter()
+            .zip(&batch.valid_mask)
+            .map(|(&id, &m)| if m > 0.0 && id != usize::MAX { id as u64 } else { NO_ID })
+            .collect();
+        for v in self.pending_views.iter_mut() {
+            *v = None;
+        }
+        let lookup = Frame::CacheLookup { req, now, exact: self.sync, ids: wire_ids.clone() };
+        let bytes = lookup.encode();
+        for w in 0..n {
+            self.write_raw(w, &bytes, "CacheLookup")?;
+        }
+        let deadline = Instant::now() + self.timeout;
+        while self.pending_views.iter().any(|v| v.is_none()) {
+            self.recv_deadline(deadline, "cache views")?;
+        }
+        // merge views into per-row entries
+        let rows = wire_ids.len();
+        let mut per_row: Vec<Option<(f32, u64)>> = vec![None; rows];
+        for view in self.pending_views.iter().flatten() {
+            for r in view {
+                if (r.pos as usize) < rows {
+                    per_row[r.pos as usize] = Some((r.loss, r.stamp));
+                }
+            }
+        }
+        let mut out = vec![0.0f32; rows];
+        let mut missing = 0usize;
+        let mut stale = 0usize;
+        let mut min_stamp = NEVER;
+        let mut per_shard = vec![CacheStats::default(); n];
+        for (pos, &wid) in wire_ids.iter().enumerate() {
+            if wid == NO_ID {
+                continue;
+            }
+            let owner = (wid % n as u64) as usize;
+            let (loss, stamp) = per_row[pos].unwrap_or((0.0, NEVER));
+            let fresh = if self.sync {
+                stamp == now
+            } else {
+                is_fresh(stamp, now, self.max_age)
+            };
+            if stamp == NEVER {
+                missing += 1;
+                per_shard[owner].misses += 1;
+            } else if fresh {
+                out[pos] = loss;
+                min_stamp = min_stamp.min(stamp);
+                per_shard[owner].hits += 1;
+            } else {
+                stale += 1;
+                min_stamp = min_stamp.min(stamp);
+                per_shard[owner].misses += 1;
+                per_shard[owner].stale += 1;
+            }
+        }
+        if count {
+            for (agg, s) in self.shard_rows.iter_mut().zip(&per_shard) {
+                agg.hits += s.hits;
+                agg.misses += s.misses;
+                agg.stale += s.stale;
+            }
+            if missing == 0 && stale == 0 {
+                self.agg.hits += 1;
+            } else {
+                self.agg.misses += 1;
+                if missing == 0 {
+                    self.agg.stale += 1;
+                }
+            }
+        }
+        Ok(if missing > 0 {
+            RowClass::Incomplete
+        } else if stale > 0 {
+            RowClass::Stale { min_stamp }
+        } else {
+            RowClass::Fresh(out)
+        })
+    }
+
+    fn submit_inner(&mut self, batch: &Batch) -> Result<()> {
+        let w = (self.next_seq % self.procs.len() as u64) as usize;
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.write(w, &Frame::ScoreBatch { seq, batch: batch.clone() })
+    }
+
+    fn reap(&mut self) {
+        for p in &mut self.procs {
+            p.stdin.take(); // close the pipe: EOF backup in case Shutdown was lost
+            let _ = p.child.kill();
+            let _ = p.child.wait();
+            if let Some(h) = p.reader.take() {
+                let _ = h.join();
+            }
+            p.alive = false;
+        }
+    }
+}
+
+impl Transport for ProcTransport {
+    fn n_workers(&self) -> usize {
+        self.procs.len()
+    }
+
+    fn publish(&mut self, version: u64, weights: &Arc<Vec<HostTensor>>) -> Result<()> {
+        // runs once per training step: encode straight from the
+        // borrowed snapshot instead of cloning it into a Frame
+        let bytes = proto::encode_param_update(version, weights.as_slice());
+        for w in 0..self.procs.len() {
+            self.write_raw(w, &bytes, "ParamUpdate")?;
+        }
+        Ok(())
+    }
+
+    fn submit(&mut self, batch: &Arc<Batch>) -> Result<()> {
+        self.drain_events()?;
+        self.submit_inner(batch)
+    }
+
+    /// Distributed analogue of the in-process wait: drain fleet events
+    /// (routing loss records to shard owners as they arrive), fan out
+    /// `CacheLookup`s, classify merged views, requeue stale batches
+    /// (async mode), all under the recv timeout.
+    fn await_losses(&mut self, batch: &Arc<Batch>, now: u64) -> Result<Vec<f32>> {
+        let deadline = Instant::now() + self.timeout;
+        // sync/exact mode never counts: matches the thread oracle, whose
+        // probe_stamped polls are non-counting
+        let mut counted = self.sync;
+        let mut requeued_for: Option<u64> = None;
+        loop {
+            self.drain_events()?;
+            self.progress = false;
+            match self.lookup_once(batch, now, !counted)? {
+                RowClass::Fresh(l) => return Ok(l),
+                RowClass::Stale { min_stamp } => {
+                    if !self.sync && requeued_for != Some(min_stamp) {
+                        self.submit_inner(batch)?;
+                        requeued_for = Some(min_stamp);
+                    }
+                }
+                RowClass::Incomplete => {}
+            }
+            counted = true;
+            // a LossRecords handled during the lookup's own collect means
+            // rows were routed after some owners had already answered —
+            // re-lookup immediately; otherwise block for fleet progress
+            if !self.progress {
+                self.recv_deadline(deadline, "loss records")?;
+            }
+        }
+    }
+
+    fn cache_stats(&self) -> CacheStats {
+        self.agg
+    }
+
+    fn workers_alive(&self) -> usize {
+        self.procs.iter().filter(|p| p.alive).count()
+    }
+
+    fn worker_scored(&self) -> Vec<u64> {
+        self.scored.clone()
+    }
+
+    fn frame_bytes(&self) -> u64 {
+        self.bytes_out + self.bytes_in.load(Ordering::Relaxed)
+    }
+
+    fn shutdown(&mut self) -> Result<FleetSummary> {
+        self.shutting_down = true;
+        let alive_at_entry = self.workers_alive();
+        let n = self.procs.len();
+        let mut first_err: Option<anyhow::Error> = None;
+        for w in 0..n {
+            if self.procs[w].alive {
+                if let Err(e) = self.write(w, &Frame::Shutdown) {
+                    first_err.get_or_insert(e);
+                }
+            }
+        }
+        let deadline = Instant::now() + self.timeout;
+        while first_err.is_none()
+            && (0..n).any(|w| self.procs[w].alive && self.final_stats[w].is_none())
+        {
+            if let Err(e) = self.recv_deadline(deadline, "worker stats") {
+                first_err = Some(e);
+            }
+        }
+        self.reap();
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        let workers = (0..n)
+            .map(|w| {
+                self.final_stats[w].unwrap_or(WorkerStats {
+                    worker: w as u32,
+                    scored_batches: self.scored[w],
+                    ..Default::default()
+                })
+            })
+            .collect();
+        Ok(FleetSummary {
+            workers,
+            workers_alive: alive_at_entry,
+            restarts: 0,
+            cache: self.agg,
+            shard_rows: self.shard_rows.clone(),
+            fleet_rows: self.fleet_rows,
+            frame_bytes: self.frame_bytes(),
+        })
+    }
+}
+
+impl Drop for ProcTransport {
+    fn drop(&mut self) {
+        self.reap();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker side (the `obftf worker` subcommand body)
+// ---------------------------------------------------------------------------
+
+/// Child-side configuration (parsed from the worker subcommand flags).
+#[derive(Clone, Debug)]
+pub struct WorkerConfig {
+    pub worker_id: usize,
+    pub n_workers: usize,
+    pub model: String,
+    pub flavour: String,
+    /// Loss-cache capacity (training-set size).
+    pub capacity: usize,
+    /// Stored for symmetry/diagnostics; freshness is classified
+    /// leader-side from the stamps in `CacheView`s.
+    pub max_age: u64,
+    /// Test-only: crash (exit 17, no handshake) after this many frames.
+    pub fail_after: Option<u64>,
+}
+
+/// The worker protocol loop: read frames from `input`, write replies to
+/// `output`. Owns the loss-cache shards `id % n_workers == worker_id`:
+/// records its own scores and routed rows there, serves `CacheLookup`s
+/// over them. Returns on `Shutdown` (after the `WorkerStats` handshake)
+/// or on clean EOF.
+///
+/// Runs over any byte stream, so tests drive it hermetically with
+/// in-memory buffers; `obftf worker` runs it over stdin/stdout.
+pub fn run_worker(cfg: &WorkerConfig, mut input: impl Read, mut output: impl Write) -> Result<()> {
+    anyhow::ensure!(cfg.n_workers > 0, "worker fleet size must be ≥ 1");
+    anyhow::ensure!(
+        cfg.worker_id < cfg.n_workers,
+        "worker id {} out of range for {} workers",
+        cfg.worker_id,
+        cfg.n_workers
+    );
+    let manifest = Manifest::load_or_native(&crate::artifacts_dir())?;
+    let flavour = manifest.resolve_flavour(&cfg.flavour)?;
+    let mut session = Session::new(&manifest, &cfg.model, flavour)
+        .with_context(|| format!("worker {}: building session for {}", cfg.worker_id, cfg.model))?;
+    let mut cache = LossCache::new(cfg.capacity, 0);
+    let me = cfg.worker_id as u64;
+    let n = cfg.n_workers as u64;
+    let mut stats = WorkerStats { worker: cfg.worker_id as u32, ..Default::default() };
+    let mut version = NEVER;
+    let mut frames_handled = 0u64;
+    loop {
+        let Some((frame, _)) = proto::read_frame(&mut input)? else {
+            return Ok(()); // leader closed the pipe: clean shutdown
+        };
+        if cfg.fail_after.is_some_and(|k| frames_handled >= k) {
+            // simulated mid-pipeline crash for the kill-a-worker
+            // regression test: no Shutdown handshake, no stats
+            std::process::exit(17);
+        }
+        frames_handled += 1;
+        match frame {
+            Frame::ParamUpdate { version: v, weights } => {
+                session.load_params(&weights).context("worker weight sync")?;
+                version = v;
+            }
+            Frame::ScoreBatch { seq, batch } => {
+                anyhow::ensure!(version != NEVER, "ScoreBatch before any ParamUpdate");
+                let losses = session.fwd_loss(&batch.x, &batch.y).context("worker fwd_loss")?;
+                let mut ids = Vec::with_capacity(batch.real);
+                let mut vals = Vec::with_capacity(batch.real);
+                let mut own_ids = Vec::new();
+                let mut own_vals = Vec::new();
+                for ((&id, &m), &l) in batch.ids.iter().zip(&batch.valid_mask).zip(&losses) {
+                    if m <= 0.0 || id == usize::MAX {
+                        continue;
+                    }
+                    ids.push(id as u64);
+                    vals.push(l);
+                    if id as u64 % n == me {
+                        own_ids.push(id);
+                        own_vals.push(l);
+                    }
+                }
+                let own_valid = vec![1.0f32; own_ids.len()];
+                cache.record_batch(&own_ids, &own_valid, &own_vals, version);
+                stats.scored_batches += 1;
+                stats.scored_rows += ids.len() as u64;
+                stats.recorded_rows += own_ids.len() as u64;
+                let reply = Frame::LossRecords {
+                    seq,
+                    worker: stats.worker,
+                    stamp: version,
+                    ids,
+                    losses: vals,
+                };
+                proto::write_frame(&mut output, &reply)?;
+                output.flush().context("flushing LossRecords")?;
+            }
+            Frame::LossRecords { stamp, ids, losses, .. } => {
+                // rows routed from another scorer; record the owned ones
+                let mut own_ids = Vec::with_capacity(ids.len());
+                let mut own_vals = Vec::with_capacity(ids.len());
+                for (&id, &l) in ids.iter().zip(&losses) {
+                    if id % n == me {
+                        own_ids.push(id as usize);
+                        own_vals.push(l);
+                    }
+                }
+                let own_valid = vec![1.0f32; own_ids.len()];
+                cache.record_batch(&own_ids, &own_valid, &own_vals, stamp);
+                stats.recorded_rows += own_ids.len() as u64;
+            }
+            Frame::CacheLookup { req, ids, .. } => {
+                let mut rows = Vec::new();
+                for (pos, &wid) in ids.iter().enumerate() {
+                    if wid == NO_ID || wid % n != me {
+                        continue;
+                    }
+                    let (loss, stamp) = cache.entry(wid as usize).unwrap_or((0.0, NEVER));
+                    rows.push(ViewRow { pos: pos as u32, loss, stamp });
+                }
+                stats.lookups += 1;
+                proto::write_frame(
+                    &mut output,
+                    &Frame::CacheView { req, worker: stats.worker, rows },
+                )?;
+                output.flush().context("flushing CacheView")?;
+            }
+            Frame::Shutdown => {
+                proto::write_frame(&mut output, &Frame::WorkerStats(stats))?;
+                output.flush().context("flushing WorkerStats")?;
+                return Ok(());
+            }
+            other => bail!(
+                "worker {}: unexpected {} frame from leader",
+                cfg.worker_id,
+                other.name()
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::InMemoryDataset;
+    use crate::data::Rng;
+
+    fn worker_cfg(worker_id: usize, n_workers: usize, capacity: usize) -> WorkerConfig {
+        WorkerConfig {
+            worker_id,
+            n_workers,
+            model: "linreg".into(),
+            flavour: "native".into(),
+            capacity,
+            max_age: 0,
+            fail_after: None,
+        }
+    }
+
+    /// Build a linreg-shaped batch over `capacity` synthetic examples.
+    fn linreg_fixture() -> (Manifest, Session, Batch, usize) {
+        let manifest = Manifest::load_or_native(&crate::artifacts_dir()).expect("manifest");
+        let batch_size = manifest.batch;
+        let capacity = batch_size * 2;
+        let mut rng = Rng::seed_from(11);
+        let xs: Vec<f32> = (0..capacity).map(|_| rng.normal() as f32).collect();
+        let ys: Vec<f32> = xs.iter().map(|x| 2.0 * x + 0.5).collect();
+        let ds = InMemoryDataset::new(vec![1], xs, crate::data::Targets::F32(ys)).unwrap();
+        let ids: Vec<usize> = (0..batch_size).collect();
+        let batch = ds.gather_batch(&ids, batch_size).unwrap();
+        let mut session = Session::new(&manifest, "linreg", Flavour::Native).unwrap();
+        session.init(3).unwrap();
+        (manifest, session, batch, capacity)
+    }
+
+    fn run_script(cfg: &WorkerConfig, frames: &[Frame]) -> Vec<Frame> {
+        let mut input = Vec::new();
+        for f in frames {
+            input.extend_from_slice(&f.encode());
+        }
+        let mut output = Vec::new();
+        run_worker(cfg, &mut input.as_slice(), &mut output).expect("worker runs");
+        let mut replies = Vec::new();
+        let mut cur = std::io::Cursor::new(output);
+        while let Some((f, _)) = proto::read_frame(&mut cur).expect("reply decodes") {
+            replies.push(f);
+        }
+        replies
+    }
+
+    #[test]
+    fn worker_scores_records_owned_and_serves_lookups() {
+        let (_, mut session, batch, capacity) = linreg_fixture();
+        let weights = session.snapshot().unwrap();
+        let expect = session.fwd_loss(&batch.x, &batch.y).unwrap();
+        let cfg = worker_cfg(1, 2, capacity);
+        let lookup_ids: Vec<u64> = batch.ids.iter().map(|&i| i as u64).collect();
+        let script = [
+            Frame::ParamUpdate { version: 5, weights },
+            Frame::ScoreBatch { seq: 7, batch: batch.clone() },
+            Frame::CacheLookup { req: 1, now: 5, exact: true, ids: lookup_ids },
+            Frame::Shutdown,
+        ];
+        let replies = run_script(&cfg, &script);
+        assert_eq!(replies.len(), 3, "LossRecords + CacheView + WorkerStats");
+        let Frame::LossRecords { seq, worker, stamp, ids, losses } = &replies[0] else {
+            panic!("expected LossRecords, got {}", replies[0].name());
+        };
+        assert_eq!((*seq, *worker, *stamp), (7, 1, 5));
+        assert_eq!(ids.len(), batch.real);
+        for ((&id, &got), &want) in ids.iter().zip(losses).zip(&expect) {
+            assert_eq!(got.to_bits(), want.to_bits(), "loss for id {id}");
+        }
+        let Frame::CacheView { req, worker, rows } = &replies[1] else {
+            panic!("expected CacheView, got {}", replies[1].name());
+        };
+        assert_eq!((*req, *worker), (1, 1));
+        // worker 1 of 2 owns the odd ids, all recorded at stamp 5
+        let odd = batch.ids.iter().filter(|&&i| i % 2 == 1).count();
+        assert_eq!(rows.len(), odd);
+        for r in rows {
+            assert_eq!(batch.ids[r.pos as usize] % 2, 1);
+            assert_eq!(r.stamp, 5);
+            assert_eq!(r.loss.to_bits(), expect[r.pos as usize].to_bits());
+        }
+        let Frame::WorkerStats(s) = &replies[2] else {
+            panic!("expected WorkerStats, got {}", replies[2].name());
+        };
+        assert_eq!(s.scored_batches, 1);
+        assert_eq!(s.scored_rows, batch.real as u64);
+        assert_eq!(s.recorded_rows, odd as u64);
+        assert_eq!(s.lookups, 1);
+    }
+
+    #[test]
+    fn worker_records_routed_rows_and_reports_never_for_unknown() {
+        let (_, session, batch, capacity) = linreg_fixture();
+        let weights = session.snapshot().unwrap();
+        let cfg = worker_cfg(0, 2, capacity);
+        // route two rows owned by worker 0 (even ids) at stamp 9
+        let script = [
+            Frame::ParamUpdate { version: 0, weights },
+            Frame::LossRecords {
+                seq: u64::MAX,
+                worker: 1,
+                stamp: 9,
+                ids: vec![0, 2, 3],
+                losses: vec![0.25, 0.5, 99.0],
+            },
+            Frame::CacheLookup { req: 4, now: 9, exact: false, ids: vec![0, 2, 3, 4, NO_ID] },
+            Frame::Shutdown,
+        ];
+        let replies = run_script(&cfg, &script);
+        let Frame::CacheView { rows, .. } = &replies[0] else {
+            panic!("expected CacheView, got {}", replies[0].name());
+        };
+        // owned requested rows: positions 0 (id 0), 1 (id 2), 3 (id 4);
+        // id 3 belongs to worker 1, NO_ID is skipped
+        assert_eq!(rows.len(), 3);
+        assert_eq!((rows[0].pos, rows[0].stamp), (0, 9));
+        assert_eq!(rows[0].loss, 0.25);
+        assert_eq!((rows[1].pos, rows[1].stamp), (1, 9));
+        assert_eq!(rows[1].loss, 0.5);
+        // id 4 was never recorded
+        assert_eq!((rows[2].pos, rows[2].stamp), (3, NEVER));
+        let Frame::WorkerStats(s) = &replies[1] else { panic!("expected stats") };
+        assert_eq!(s.recorded_rows, 2, "only the owned routed rows");
+        assert_eq!(s.scored_batches, 0);
+    }
+
+    #[test]
+    fn worker_rejects_score_before_params_and_bad_ids() {
+        let (_, _, batch, capacity) = linreg_fixture();
+        let mut input = Frame::ScoreBatch { seq: 0, batch }.encode();
+        let mut out = Vec::new();
+        let err = run_worker(&worker_cfg(0, 1, capacity), &mut input.as_slice(), &mut out)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("ParamUpdate"), "err: {err}");
+        // out-of-range worker id rejected up front
+        input.clear();
+        let err = run_worker(&worker_cfg(3, 2, capacity), &mut input.as_slice(), &mut out)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("out of range"), "err: {err}");
+    }
+
+    #[test]
+    fn worker_clean_eof_is_ok() {
+        let (_, _, _, capacity) = linreg_fixture();
+        let mut out = Vec::new();
+        run_worker(&worker_cfg(0, 1, capacity), std::io::empty(), &mut out).unwrap();
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn param_store_publish_and_latest() {
+        let t0 = Arc::new(vec![HostTensor::scalar_f32(1.0)]);
+        let store = ParamStore::new(t0.clone());
+        let (v, p) = store.latest();
+        assert_eq!(v, 0);
+        assert!(Arc::ptr_eq(&p, &t0));
+        let t1 = Arc::new(vec![HostTensor::scalar_f32(2.0)]);
+        store.publish(3, t1.clone());
+        let (v, p) = store.latest();
+        assert_eq!(v, 3);
+        assert!(Arc::ptr_eq(&p, &t1));
+    }
+}

@@ -51,11 +51,16 @@ impl CacheStats {
     }
 }
 
-/// `stamp` value meaning "never recorded".
-const NEVER: u64 = u64::MAX;
+/// `stamp` value meaning "never recorded". Shared with the wire
+/// protocol: a `CacheView` row (`coordinator::proto`) carries this stamp
+/// when the owning worker has no entry for the id.
+pub const NEVER: u64 = u64::MAX;
 
+/// The one freshness rule every cache variant (serial, sharded,
+/// distributed-ownership) applies: recorded, and within `max_age`
+/// parameter versions of `now` (`max_age == 0` accepts any age).
 #[inline]
-fn is_fresh(stamp: u64, now: u64, max_age: u64) -> bool {
+pub fn is_fresh(stamp: u64, now: u64, max_age: u64) -> bool {
     stamp != NEVER && (max_age == 0 || now.saturating_sub(stamp) <= max_age)
 }
 

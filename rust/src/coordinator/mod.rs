@@ -9,6 +9,11 @@
 //! * [`pipeline`]  — the staged continuous-training pipeline: an
 //!   inference-fleet stage writing a sharded loss cache, a selection
 //!   stage reading it, a backward-only training stage, and async eval;
+//! * [`proto`]     — the typed frames + length-prefixed wire codec the
+//!   pipeline stages speak across a process boundary;
+//! * [`ipc`]       — the [`Transport`] seam: the fleet as in-process
+//!   threads ([`InProcTransport`]) or `obftf worker` child processes
+//!   with distributed loss-cache shard ownership ([`ProcTransport`]);
 //! * [`budget`]    — forward/backward compute accounting (the paper's
 //!   "ten forward, one backward" economics);
 //! * [`service`]   — status/control plane for long-running jobs.
@@ -19,17 +24,23 @@
 //! hang off that determinism.
 
 pub mod budget;
+pub mod ipc;
 pub mod loss_cache;
 pub mod parallel;
 pub mod pipeline;
+pub mod proto;
 pub mod service;
 pub mod streaming;
 pub mod trainer;
 
 pub use budget::BudgetTracker;
+pub use ipc::{
+    FleetSummary, InProcSpec, InProcTransport, ProcSpec, ProcTransport, Transport, WorkerConfig,
+};
 pub use loss_cache::{CacheStats, LossCache, ShardedLossCache};
 pub use parallel::ParallelTrainer;
 pub use pipeline::PipelineTrainer;
+pub use proto::{Frame, WorkerStats};
 pub use streaming::StreamingTrainer;
 pub use trainer::{EvalResult, TrainReport, Trainer};
 

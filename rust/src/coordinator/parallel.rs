@@ -139,6 +139,8 @@ impl ParallelTrainer {
             cache_misses: 0,
             cache_stale: 0,
             sel_hash: crate::sampling::selection_hash(&selected),
+            workers_alive: 0,
+            worker_restarts: 0,
         };
         self.recorder.record_step(rec);
         self.step += 1;

@@ -8,44 +8,54 @@
 //! thread; this module decouples it:
 //!
 //! ```text
-//!   producer ──batches──▶ ticket queue ──▶ inference stage
-//!   (Prefetcher)               ▲            (N scoped workers, each
-//!        │                     │ re-score    with its own Session,
-//!        │ (Arc<Batch>)        │ on stale    params synced from the
-//!        ▼                     │             ParamStore)
-//!   selection stage ◀── ShardedLossCache ◀── record_batch(stamp =
-//!   (leader: sampler            (lock-striped,     param version)
-//!    over cached losses)         concurrent writers)
-//!        │ selected
+//!   producer ──batches──▶ Transport::submit ──▶ inference fleet
+//!   (Prefetcher)               ▲                (N workers — threads
+//!        │                     │ re-score        *or* `obftf worker`
+//!        │ (Arc<Batch>)        │ on stale        child processes —
+//!        ▼                     │                 each with a private
+//!   selection stage ◀── Transport::await_losses  Session, weights from
+//!   (leader: sampler            (sharded loss    Transport::publish)
+//!    over cached losses)         cache: striped
+//!        │ selected              or worker-owned shards)
 //!        ▼
 //!   training stage (leader: backward + apply only)
-//!        │ publish params (version = step+1)     │ snapshot at the
+//!        │ Transport::publish (version = step+1) │ snapshot at the
 //!        ▼                                       ▼ eval cadence
-//!   ParamStore ──────────────▶ async-eval stage (cloned Session,
-//!                              scores off the hot path)
+//!   fleet weights ────────────▶ async-eval stage (cloned Session,
+//!                               scores off the hot path)
 //! ```
+//!
+//! Every stage handoff goes through the [`Transport`] trait
+//! (`coordinator::ipc`): [`InProcTransport`] keeps the PR-3 thread
+//! fleet and lock-striped cache; [`ProcTransport`] promotes the fleet
+//! to child processes speaking typed frames (`coordinator::proto`) with
+//! distributed loss-cache shard ownership (`id % n_workers`).
 //!
 //! **Synchronous oracle mode** (`pipeline_sync` / `OBFTF_PIPELINE_SYNC`):
 //! tickets are issued one step at a time and the selection stage waits
 //! for the inference stage before selecting, so every loss is computed
 //! with the current weights — the pipeline is then bit-identical to the
-//! serial [`StreamingTrainer`] / [`Trainer`] path (pinned by
-//! `rust/tests/pipeline_equivalence.rs`). **Async mode** runs the
-//! stages concurrently: the inference fleet scores up to
-//! `pipeline_depth` batches ahead under possibly-stale weights, bounded
-//! by `loss_max_age` (0 = auto: two epochs' worth of steps, the serial
-//! trainer's window; fully-scored-but-stale batches are re-enqueued for
-//! re-scoring with current weights).
+//! serial [`StreamingTrainer`] / [`Trainer`] path in *both* transports
+//! (pinned by `rust/tests/pipeline_equivalence.rs`; the wire codec is
+//! bit-exact for f32). **Async mode** runs the stages concurrently: the
+//! inference fleet scores up to `pipeline_depth` batches ahead under
+//! possibly-stale weights, bounded by `loss_max_age` (0 = auto: two
+//! epochs' worth of steps; fully-scored-but-stale batches are
+//! re-enqueued for re-scoring with current weights).
 //!
 //! Environment overrides (CI and benches): `OBFTF_PIPELINE_WORKERS`,
 //! `OBFTF_PIPELINE_DEPTH`, `OBFTF_PIPELINE_SHARDS`,
-//! `OBFTF_PIPELINE_SYNC` — see README "Pipeline architecture".
+//! `OBFTF_PIPELINE_SYNC`, `OBFTF_PIPELINE_PROC`, `OBFTF_WORKER_BIN` —
+//! see README "Pipeline architecture" and "Multi-process fleet".
 //!
 //! [`StreamingTrainer`]: crate::coordinator::StreamingTrainer
 //! [`Trainer`]: crate::coordinator::Trainer
+//! [`Transport`]: crate::coordinator::ipc::Transport
+//! [`InProcTransport`]: crate::coordinator::ipc::InProcTransport
+//! [`ProcTransport`]: crate::coordinator::ipc::ProcTransport
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -53,7 +63,10 @@ use anyhow::{Context, Result};
 
 use crate::config::TrainConfig;
 use crate::coordinator::budget::BudgetTracker;
-use crate::coordinator::loss_cache::{CacheProbe, CacheStats, ShardedLossCache};
+use crate::coordinator::ipc::{
+    FleetSummary, InProcSpec, InProcTransport, ProcSpec, ProcTransport, Transport, STALL_TIMEOUT,
+};
+use crate::coordinator::loss_cache::CacheStats;
 use crate::coordinator::service::StatusBoard;
 use crate::coordinator::trainer::{EvalResult, TrainReport};
 use crate::data::dataset::Batch;
@@ -64,57 +77,29 @@ use crate::metrics::{EvalRecord, Recorder, StepRecord};
 use crate::runtime::{Flavour, Manifest, Session};
 use crate::sampling::{budget_for, selection_hash, selection_mask, Sampler};
 
-/// Upper bound on how long the selection stage waits for the inference
-/// fleet before declaring the pipeline wedged.
-const STALL_TIMEOUT: Duration = Duration::from_secs(30);
-
-/// A unit of inference work: score `batch` and record the losses.
-struct Ticket {
-    batch: Arc<Batch>,
-}
-
 /// A unit of eval work: score the test split under `params`.
 struct EvalJob {
     step: u64,
     params: Arc<Vec<HostTensor>>,
 }
 
-type SharedTickets = Arc<Mutex<mpsc::Receiver<Ticket>>>;
-
-/// Versioned weight snapshot the training stage publishes and the
-/// inference workers sync from. Version = number of applies performed,
-/// which is also the staleness stamp written into the loss cache.
-struct ParamStore {
-    inner: Mutex<(u64, Arc<Vec<HostTensor>>)>,
-}
-
-impl ParamStore {
-    fn new(initial: Arc<Vec<HostTensor>>) -> Self {
-        ParamStore { inner: Mutex::new((0, initial)) }
-    }
-
-    fn latest(&self) -> (u64, Arc<Vec<HostTensor>>) {
-        let g = self.inner.lock().expect("param store lock");
-        (g.0, g.1.clone())
-    }
-
-    fn publish(&self, version: u64, params: Arc<Vec<HostTensor>>) {
-        *self.inner.lock().expect("param store lock") = (version, params);
-    }
-}
-
 /// Resolved pipeline shape (config overlaid with `OBFTF_PIPELINE_*`).
 #[derive(Clone, Copy, Debug)]
 pub struct PipelineKnobs {
-    /// Inference-fleet worker threads.
+    /// Inference-fleet workers (threads, or child processes in proc
+    /// mode).
     pub workers: usize,
     /// Batches the fleet may score ahead of the training stage (async
     /// mode; sync mode pins this to 0).
     pub depth: usize,
-    /// Loss-cache lock stripes.
+    /// Loss-cache lock stripes (proc mode: one owned shard set per
+    /// worker, so this equals `workers`).
     pub shards: usize,
     /// Synchronous handoffs — the bit-identical oracle mode.
     pub sync: bool,
+    /// Multi-process fleet: `obftf worker` children over pipes instead
+    /// of threads.
+    pub proc: bool,
     /// Max accepted loss age in parameter versions. `loss_max_age = 0`
     /// resolves to the same auto window the serial trainer uses (two
     /// epochs' worth of steps), so the knob means the same thing in
@@ -145,8 +130,12 @@ impl PipelineKnobs {
         let depth = env_usize("OBFTF_PIPELINE_DEPTH")
             .unwrap_or(cfg.pipeline_depth)
             .max(1);
+        let proc = env_bool("OBFTF_PIPELINE_PROC").unwrap_or(cfg.pipeline_proc);
         let shards_cfg = env_usize("OBFTF_PIPELINE_SHARDS").unwrap_or(cfg.cache_shards);
-        let shards = if shards_cfg == 0 {
+        let shards = if proc {
+            // distributed ownership: exactly one shard set per worker
+            workers
+        } else if shards_cfg == 0 {
             (workers * 2).clamp(4, 16)
         } else {
             shards_cfg
@@ -157,7 +146,7 @@ impl PipelineKnobs {
         } else {
             2 * train_len.div_ceil(batch.max(1)) as u64
         };
-        PipelineKnobs { workers, depth, shards, sync, max_age }
+        PipelineKnobs { workers, depth, shards, sync, proc, max_age }
     }
 }
 
@@ -169,14 +158,16 @@ pub struct PipelineTrainer {
     rng: Rng,
     prefetcher: Prefetcher,
     test_batches: Arc<Vec<Batch>>,
-    cache: Arc<ShardedLossCache>,
     pub recorder: Recorder,
     pub budget: BudgetTracker,
     knobs: PipelineKnobs,
+    capacity: usize,
     steps: usize,
     eval_every_steps: usize,
     eval_stall_ns: u64,
     step: u64,
+    /// Fleet/cache aggregate, populated when a run completes.
+    summary: FleetSummary,
 }
 
 impl PipelineTrainer {
@@ -205,11 +196,13 @@ impl PipelineTrainer {
         let sampler = cfg.method.build(cfg.gamma);
         let rng = crate::coordinator::selection_rng(cfg);
         let mut knobs = PipelineKnobs::resolve(cfg, train.len(), manifest.batch);
-        let cache = Arc::new(ShardedLossCache::new(train.len(), knobs.max_age, knobs.shards));
-        // the cache clamps its stripe count to the capacity; keep the
-        // published knobs in agreement so 0..knobs.shards is always a
-        // valid shard_stats range
-        knobs.shards = cache.n_shards();
+        let capacity = train.len();
+        if !knobs.proc {
+            // the in-proc cache clamps its stripe count to the capacity;
+            // keep the published knobs in agreement so 0..knobs.shards is
+            // always a valid shard_stats range
+            knobs.shards = knobs.shards.clamp(1, capacity.max(1));
+        }
         let test_batches = Arc::new(test.batches(manifest.batch));
         let source = crate::coordinator::stream_source(cfg, train);
         let prefetcher = Prefetcher::spawn(
@@ -229,14 +222,15 @@ impl PipelineTrainer {
             rng,
             prefetcher,
             test_batches,
-            cache,
             recorder: Recorder::new(),
             budget: BudgetTracker::new(),
             knobs,
+            capacity,
             steps: cfg.stream_steps,
             eval_every_steps,
             eval_stall_ns: 0,
             step: 0,
+            summary: FleetSummary::default(),
         })
     }
 
@@ -249,14 +243,27 @@ impl PipelineTrainer {
     }
 
     /// Aggregate loss-cache counters (lookup granularity: one hit or
-    /// miss per step, counted the moment the selection stage first asks).
+    /// miss per step, counted the moment the selection stage first
+    /// asks). Populated when a run completes.
     pub fn cache_stats(&self) -> CacheStats {
-        self.cache.stats()
+        self.summary.cache
     }
 
-    /// Per-shard row-granularity cache counters.
+    /// Per-shard row-granularity cache counters (proc mode: shard ==
+    /// owning worker). Populated when a run completes.
     pub fn shard_stats(&self, shard: usize) -> CacheStats {
-        self.cache.shard_stats(shard)
+        self.summary.shard_rows.get(shard).copied().unwrap_or_default()
+    }
+
+    /// Final per-worker fleet counters (proc mode: from the
+    /// `WorkerStats` shutdown handshake).
+    pub fn worker_stats(&self) -> &[crate::coordinator::proto::WorkerStats] {
+        &self.summary.workers
+    }
+
+    /// Total wire bytes the fleet exchanged (0 for the thread fleet).
+    pub fn frame_bytes(&self) -> u64 {
+        self.summary.frame_bytes
     }
 
     /// Milliseconds the training stage spent blocked handing snapshots
@@ -271,78 +278,89 @@ impl PipelineTrainer {
         self.prefetcher.stats.blocked_ns.load(Ordering::Relaxed)
     }
 
+    fn build_transport(&self) -> Result<Box<dyn Transport>> {
+        let queue_cap = self.knobs.depth + self.knobs.workers + 2;
+        if self.knobs.proc {
+            let timeout = env_usize("OBFTF_PROC_TIMEOUT_MS")
+                .map(|ms| Duration::from_millis(ms as u64))
+                .unwrap_or(STALL_TIMEOUT);
+            Ok(Box::new(ProcTransport::spawn(ProcSpec {
+                model: self.cfg.model.clone(),
+                flavour: self.session.flavour(),
+                workers: self.knobs.workers,
+                capacity: self.capacity,
+                max_age: self.knobs.max_age,
+                sync: self.knobs.sync,
+                worker_bin: None,
+                timeout,
+                fail_after: crate::coordinator::ipc::fail_after_from_env(self.knobs.workers),
+            })?))
+        } else {
+            Ok(Box::new(InProcTransport::spawn(InProcSpec {
+                manifest: self.session.manifest().clone(),
+                model: self.cfg.model.clone(),
+                flavour: self.session.flavour(),
+                workers: self.knobs.workers,
+                capacity: self.capacity,
+                max_age: self.knobs.max_age,
+                shards: self.knobs.shards,
+                sync: self.knobs.sync,
+                queue_cap,
+                stall: STALL_TIMEOUT,
+            })?))
+        }
+    }
+
     /// Run `stream_steps` batches through the staged pipeline.
     pub fn run(&mut self) -> Result<TrainReport> {
         let board = StatusBoard::new();
         self.run_with_board(&board)
     }
 
-    /// Run, publishing per-step state (including cache and eval-stall
-    /// counters) to `board`.
+    /// Run, publishing per-step state (including cache, eval-stall and
+    /// worker-liveness counters) to `board`.
     pub fn run_with_board(&mut self, board: &StatusBoard) -> Result<TrainReport> {
         let t0 = Instant::now();
         let manifest = self.session.manifest().clone();
         let model = self.cfg.model.clone();
         let flavour = self.session.flavour();
-        let cache = self.cache.clone();
-        let params = Arc::new(ParamStore::new(Arc::new(self.session.snapshot()?)));
-        let err: Arc<Mutex<Option<String>>> = Arc::new(Mutex::new(None));
-        let fleet_rows = Arc::new(AtomicU64::new(0));
-        let eval_out: Arc<Mutex<Vec<EvalRecord>>> = Arc::new(Mutex::new(Vec::new()));
-        let ticket_cap = self.knobs.depth + self.knobs.workers + 2;
-        let (ticket_tx, ticket_rx) = mpsc::sync_channel::<Ticket>(ticket_cap);
-        let ticket_rx: SharedTickets = Arc::new(Mutex::new(ticket_rx));
+        let initial = Arc::new(self.session.snapshot()?);
+        let mut fleet = self.build_transport()?;
+        fleet.publish(0, &initial)?;
+
         let (eval_tx, eval_rx) = mpsc::sync_channel::<EvalJob>(1);
-        let test_batches = self.test_batches.clone();
+        let eval_out: Arc<Mutex<Vec<EvalRecord>>> = Arc::new(Mutex::new(Vec::new()));
+        let eval_err: Arc<Mutex<Option<String>>> = Arc::new(Mutex::new(None));
+        let ectx = EvalCtx {
+            manifest,
+            model,
+            flavour,
+            jobs: eval_rx,
+            batches: self.test_batches.clone(),
+            out: eval_out.clone(),
+            err: eval_err.clone(),
+        };
+        let eval_handle = std::thread::Builder::new()
+            .name("obftf-eval".into())
+            .spawn(move || eval_worker(ectx))
+            .context("spawn eval worker")?;
 
-        let run_result = std::thread::scope(|scope| -> Result<()> {
-            for w in 0..self.knobs.workers {
-                let ctx = WorkerCtx {
-                    manifest: manifest.clone(),
-                    model: model.clone(),
-                    flavour,
-                    tickets: ticket_rx.clone(),
-                    cache: cache.clone(),
-                    params: params.clone(),
-                    fleet_rows: fleet_rows.clone(),
-                    err: err.clone(),
-                };
-                std::thread::Builder::new()
-                    .name(format!("obftf-infer-{w}"))
-                    .spawn_scoped(scope, move || inference_worker(ctx))
-                    .context("spawn inference worker")?;
-            }
-            let ectx = EvalCtx {
-                manifest: manifest.clone(),
-                model: model.clone(),
-                flavour,
-                jobs: eval_rx,
-                batches: test_batches,
-                out: eval_out.clone(),
-                err: err.clone(),
-            };
-            std::thread::Builder::new()
-                .name("obftf-eval".into())
-                .spawn_scoped(scope, move || eval_worker(ectx))
-                .context("spawn eval worker")?;
-            let r = self.leader(board, &ticket_tx, &eval_tx, &params, &err, t0);
-            // close the stage queues so workers and the eval stage exit
-            // before the scope joins them
-            drop(ticket_tx);
-            drop(eval_tx);
-            r
-        });
-        run_result?;
+        let led = self.leader(board, fleet.as_mut(), &eval_tx, &eval_err, t0);
+        // close the eval queue so the stage drains and exits
+        drop(eval_tx);
+        let _ = eval_handle.join();
+        let shut = fleet.shutdown();
+        led?;
         // a stage may have failed after the leader's last check (e.g.
-        // the eval stage on the final snapshot, or a worker on a
-        // leftover requeued ticket) — surface it rather than reporting
-        // a silently-degraded run
-        if let Some(e) = err.lock().expect("err slot").take() {
-            anyhow::bail!("pipeline stage failed during shutdown: {e}");
+        // the eval stage on the final snapshot) — surface it rather than
+        // reporting a silently-degraded run
+        if let Some(e) = eval_err.lock().expect("eval err slot").take() {
+            anyhow::bail!("pipeline eval stage failed during shutdown: {e}");
         }
+        let summary = shut?;
+        self.budget.record_inference_forwards(summary.fleet_rows);
+        self.summary = summary;
 
-        self.budget
-            .record_inference_forwards(fleet_rows.load(Ordering::Relaxed));
         let mut evals: Vec<EvalRecord> = std::mem::take(&mut *eval_out.lock().expect("eval out"));
         evals.sort_by_key(|e| e.step);
         for e in evals {
@@ -352,15 +370,14 @@ impl PipelineTrainer {
     }
 
     /// Selection + training stages (the leader loop). Issues inference
-    /// tickets up to the lookahead horizon, waits on the cache handoff,
-    /// selects, runs the backward, publishes weights.
+    /// work up to the lookahead horizon, waits on the transport's cache
+    /// handoff, selects, runs the backward, publishes weights.
     fn leader(
         &mut self,
         board: &StatusBoard,
-        tickets: &mpsc::SyncSender<Ticket>,
+        fleet: &mut dyn Transport,
         evals: &mpsc::SyncSender<EvalJob>,
-        params: &ParamStore,
-        err: &Mutex<Option<String>>,
+        eval_err: &Mutex<Option<String>>,
         t0: Instant,
     ) -> Result<()> {
         let steps = self.steps as u64;
@@ -372,15 +389,15 @@ impl PipelineTrainer {
             let horizon = (s + depth).min(steps - 1);
             while next_issue <= horizon {
                 let batch = Arc::new(self.prefetcher.next());
-                send_ticket(tickets, Ticket { batch: batch.clone() }, err)?;
+                fleet.submit(&batch)?;
                 pending.push_back(batch);
                 next_issue += 1;
             }
-            let batch = pending.pop_front().expect("ticket issued for this step");
+            let batch = pending.pop_front().expect("work submitted for this step");
 
             // ---- stage handoff: wait for the inference fleet ----
             let t_wait = Instant::now();
-            let losses = await_losses(&self.cache, &batch, s, self.knobs.sync, tickets, err)?;
+            let losses = fleet.await_losses(&batch, s)?;
             let fwd_us = t_wait.elapsed().as_micros() as u64;
 
             // ---- selection stage (never touches the engine) ----
@@ -403,7 +420,7 @@ impl PipelineTrainer {
             let bwd_us = t2.elapsed().as_micros() as u64;
 
             let new_params = Arc::new(self.session.snapshot()?);
-            params.publish(s + 1, new_params.clone());
+            fleet.publish(s + 1, &new_params)?;
 
             let batch_loss = {
                 let mut sum = 0.0f64;
@@ -416,7 +433,9 @@ impl PipelineTrainer {
             };
 
             self.budget.record_step(batch.real, selected.len());
-            let cache_stats = self.cache.stats();
+            let cache_stats = fleet.cache_stats();
+            let workers_alive = fleet.workers_alive() as u32;
+            let worker_restarts = fleet.restarts() as u32;
             let rec = StepRecord {
                 step: self.step,
                 epoch: 0,
@@ -431,6 +450,8 @@ impl PipelineTrainer {
                 cache_misses: cache_stats.misses,
                 cache_stale: cache_stats.stale,
                 sel_hash: selection_hash(&selected),
+                workers_alive,
+                worker_restarts,
             };
             self.recorder.record_step(rec);
             self.step += 1;
@@ -442,7 +463,7 @@ impl PipelineTrainer {
                     .send(EvalJob { step: self.step, params: new_params })
                     .is_err()
                 {
-                    if let Some(e) = err.lock().expect("err slot").take() {
+                    if let Some(e) = eval_err.lock().expect("eval err slot").take() {
                         anyhow::bail!("pipeline eval stage failed: {e}");
                     }
                     anyhow::bail!("pipeline eval stage terminated unexpectedly");
@@ -453,6 +474,7 @@ impl PipelineTrainer {
             let blocked_ms = self.producer_blocked_ns() / 1_000_000;
             let ratio = self.budget.realized_ratio();
             let eval_stall_ms = self.eval_stall_ms();
+            let worker_scored = fleet.worker_scored();
             board.update(|st| {
                 st.step = rec.step + 1;
                 st.sel_loss = rec.sel_loss;
@@ -464,6 +486,9 @@ impl PipelineTrainer {
                 st.cache_misses = cache_stats.misses;
                 st.cache_stale = cache_stats.stale;
                 st.eval_stall_ms = eval_stall_ms;
+                st.workers_alive = workers_alive as u64;
+                st.worker_restarts = worker_restarts as u64;
+                st.worker_scored = worker_scored;
             });
         }
         Ok(())
@@ -508,20 +533,6 @@ impl PipelineTrainer {
     }
 }
 
-/// Everything an inference worker owns (built before its thread starts;
-/// the `Session` itself is constructed *inside* the thread because
-/// backends may hold non-`Send` handles).
-struct WorkerCtx {
-    manifest: Manifest,
-    model: String,
-    flavour: Flavour,
-    tickets: SharedTickets,
-    cache: Arc<ShardedLossCache>,
-    params: Arc<ParamStore>,
-    fleet_rows: Arc<AtomicU64>,
-    err: Arc<Mutex<Option<String>>>,
-}
-
 struct EvalCtx {
     manifest: Manifest,
     model: String,
@@ -536,38 +547,6 @@ fn record_failure(err: &Mutex<Option<String>>, stage: &str, e: anyhow::Error) {
     let mut slot = err.lock().expect("err slot");
     if slot.is_none() {
         *slot = Some(format!("{stage}: {e:#}"));
-    }
-}
-
-/// Inference-stage worker: drain tickets, sync weights from the
-/// [`ParamStore`], run `fwd_loss`, record into the sharded cache with
-/// the parameter version as the staleness stamp.
-fn inference_worker(ctx: WorkerCtx) {
-    let mut session = match Session::new(&ctx.manifest, &ctx.model, ctx.flavour) {
-        Ok(s) => s,
-        Err(e) => return record_failure(&ctx.err, "inference worker (session build)", e),
-    };
-    let mut loaded_version = u64::MAX;
-    loop {
-        let msg = ctx.tickets.lock().expect("ticket queue").recv();
-        let Ok(Ticket { batch }) = msg else {
-            return; // leader closed the queue: clean shutdown
-        };
-        let (version, p) = ctx.params.latest();
-        if version != loaded_version {
-            if let Err(e) = session.load_params(&p) {
-                return record_failure(&ctx.err, "inference worker (weight sync)", e);
-            }
-            loaded_version = version;
-        }
-        match session.fwd_loss(&batch.x, &batch.y) {
-            Ok(losses) => {
-                ctx.cache
-                    .record_batch(&batch.ids, &batch.valid_mask, &losses, loaded_version);
-                ctx.fleet_rows.fetch_add(batch.real as u64, Ordering::Relaxed);
-            }
-            Err(e) => return record_failure(&ctx.err, "inference worker (fwd_loss)", e),
-        }
     }
 }
 
@@ -601,97 +580,4 @@ fn eval_worker(ctx: EvalCtx) {
             metric: sums.1 / count,
         });
     }
-}
-
-/// Non-blocking ticket send with worker-death detection (a plain
-/// blocking send could deadlock against a dead fleet).
-fn send_ticket(
-    tickets: &mpsc::SyncSender<Ticket>,
-    mut ticket: Ticket,
-    err: &Mutex<Option<String>>,
-) -> Result<()> {
-    loop {
-        match tickets.try_send(ticket) {
-            Ok(()) => return Ok(()),
-            Err(mpsc::TrySendError::Full(back)) => {
-                if let Some(e) = err.lock().expect("err slot").take() {
-                    anyhow::bail!("pipeline inference stage failed: {e}");
-                }
-                ticket = back;
-                std::thread::sleep(Duration::from_micros(50));
-            }
-            Err(mpsc::TrySendError::Disconnected(_)) => {
-                if let Some(e) = err.lock().expect("err slot").take() {
-                    anyhow::bail!("pipeline inference stage failed: {e}");
-                }
-                anyhow::bail!("pipeline inference stage terminated unexpectedly");
-            }
-        }
-    }
-}
-
-/// The selection stage's handoff.
-///
-/// Async mode: first a *counting* lookup (the hit/miss statistic
-/// answers "were the losses ready when selection wanted them?"), then
-/// non-counting polls; fully-scored-but-stale batches are re-enqueued
-/// once per staleness watermark so a worker re-scores them with
-/// current weights.
-///
-/// Sync mode: poll the exact-stamp probe — only losses computed under
-/// the *current* parameter version (stamp == step) are accepted, which
-/// is what makes the oracle mode bit-identical to the serial trainer.
-fn await_losses(
-    cache: &ShardedLossCache,
-    batch: &Arc<Batch>,
-    now: u64,
-    sync: bool,
-    tickets: &mpsc::SyncSender<Ticket>,
-    err: &Mutex<Option<String>>,
-) -> Result<Vec<f32>> {
-    let t0 = Instant::now();
-    if sync {
-        loop {
-            if let Some(e) = err.lock().expect("err slot").take() {
-                anyhow::bail!("pipeline inference stage failed: {e}");
-            }
-            if let Some(l) = cache.probe_stamped(&batch.ids, &batch.valid_mask, now) {
-                return Ok(l);
-            }
-            check_stall(cache, now, t0)?;
-            std::thread::sleep(Duration::from_micros(30));
-        }
-    }
-    if let Some(l) = cache.lookup_batch(&batch.ids, &batch.valid_mask, now) {
-        return Ok(l);
-    }
-    let mut requeued_for: Option<u64> = None;
-    loop {
-        if let Some(e) = err.lock().expect("err slot").take() {
-            anyhow::bail!("pipeline inference stage failed: {e}");
-        }
-        match cache.probe_batch(&batch.ids, &batch.valid_mask, now) {
-            CacheProbe::Fresh(l) => return Ok(l),
-            CacheProbe::Stale { min_stamp } => {
-                if requeued_for != Some(min_stamp) {
-                    send_ticket(tickets, Ticket { batch: batch.clone() }, err)?;
-                    requeued_for = Some(min_stamp);
-                }
-            }
-            CacheProbe::Incomplete => {}
-        }
-        check_stall(cache, now, t0)?;
-        std::thread::sleep(Duration::from_micros(30));
-    }
-}
-
-fn check_stall(cache: &ShardedLossCache, now: u64, since: Instant) -> Result<()> {
-    if since.elapsed() > STALL_TIMEOUT {
-        anyhow::bail!(
-            "pipeline stalled: step {now} waited {STALL_TIMEOUT:?} for losses \
-             (cache stats {:?})",
-            cache.stats()
-        );
-    }
-    Ok(())
 }

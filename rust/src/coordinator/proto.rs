@@ -1,0 +1,585 @@
+//! Wire protocol for the multi-process inference fleet.
+//!
+//! Every stage handoff that crosses a process boundary is one of these
+//! typed frames, carried over a byte stream (today: the worker child's
+//! stdin/stdout pipes; the frame layer is transport-agnostic so a
+//! socket works the same way). The codec is hand-rolled — the offline
+//! dependency set has no serde — and deliberately boring:
+//!
+//! ```text
+//!   [len: u32 LE] [tag: u8] [payload…]      (len counts tag + payload)
+//! ```
+//!
+//! All integers are little-endian; f32 payloads are raw IEEE-754 bits,
+//! so losses and weight snapshots cross the boundary bit-identically
+//! (the sync-mode pipeline-equivalence guarantee depends on this).
+//! Decoding rejects truncated frames, unknown tags, trailing bytes and
+//! implausible lengths without allocating for them.
+//!
+//! Frame vocabulary (leader ⇄ worker):
+//!
+//! * [`Frame::ParamUpdate`]  leader → worker: versioned weight snapshot
+//!   (the `ParamStore` publish crossing the boundary);
+//! * [`Frame::ScoreBatch`]   leader → worker: run `fwd_loss` on a batch;
+//! * [`Frame::LossRecords`]  worker → leader: the scored rows, stamped
+//!   with the scorer's parameter version; also leader → worker to route
+//!   rows to the shard owner (`id % n_workers`);
+//! * [`Frame::CacheLookup`]  leader → worker: per-row view request over
+//!   the worker's owned loss-cache shards;
+//! * [`Frame::CacheView`]    worker → leader: `(row, loss, stamp)` for
+//!   the owned rows of a lookup;
+//! * [`Frame::Shutdown`]     leader → worker: drain and exit;
+//! * [`Frame::WorkerStats`]  worker → leader: final work counters.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::dataset::Batch;
+use crate::data::tensor::HostTensor;
+
+/// Hard ceiling on one frame's encoded size (tag + payload). Large
+/// enough for any batch or weight snapshot we ship; small enough that a
+/// corrupted length prefix fails instead of attempting a huge read.
+pub const MAX_FRAME_BYTES: usize = 1 << 30;
+
+/// Row id wire value for "padding row / no id" (`usize::MAX` host-side).
+pub const NO_ID: u64 = u64::MAX;
+
+/// One `(row position, loss, stamp)` entry of a [`Frame::CacheView`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ViewRow {
+    /// Row index within the looked-up batch.
+    pub pos: u32,
+    pub loss: f32,
+    /// Parameter version the loss was recorded under
+    /// ([`crate::coordinator::loss_cache::NEVER`] = never recorded).
+    pub stamp: u64,
+}
+
+/// A worker's cumulative work counters (shipped on shutdown; the leader
+/// also tracks live per-worker counts from `LossRecords` traffic).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WorkerStats {
+    pub worker: u32,
+    /// `ScoreBatch` frames executed.
+    pub scored_batches: u64,
+    /// Real (non-padding) rows forwarded.
+    pub scored_rows: u64,
+    /// Rows recorded into this worker's owned shards (own scores plus
+    /// rows routed from other scorers).
+    pub recorded_rows: u64,
+    /// `CacheLookup` frames served.
+    pub lookups: u64,
+}
+
+/// A typed protocol frame (see module docs for direction and intent).
+#[derive(Clone, Debug)]
+pub enum Frame {
+    ScoreBatch {
+        seq: u64,
+        batch: Batch,
+    },
+    LossRecords {
+        /// The `ScoreBatch` sequence this answers (`u64::MAX` when the
+        /// leader routes rows to their shard owner).
+        seq: u64,
+        /// Worker that computed the losses.
+        worker: u32,
+        /// Parameter version the losses were computed under.
+        stamp: u64,
+        /// Dataset ids of the real rows (no padding entries).
+        ids: Vec<u64>,
+        /// Losses parallel to `ids`.
+        losses: Vec<f32>,
+    },
+    ParamUpdate {
+        version: u64,
+        weights: Vec<HostTensor>,
+    },
+    CacheLookup {
+        req: u64,
+        /// Current step / parameter version the freshness rule is
+        /// evaluated against (leader-side; workers only echo views).
+        now: u64,
+        /// Exact-stamp (sync oracle) lookup rather than an age window.
+        exact: bool,
+        /// Per-row dataset id, [`NO_ID`] for padding rows, so view
+        /// positions map 1:1 onto batch rows.
+        ids: Vec<u64>,
+    },
+    CacheView {
+        req: u64,
+        worker: u32,
+        /// Entries for the requested rows this worker owns.
+        rows: Vec<ViewRow>,
+    },
+    Shutdown,
+    WorkerStats(WorkerStats),
+}
+
+const TAG_SCORE_BATCH: u8 = 1;
+const TAG_LOSS_RECORDS: u8 = 2;
+const TAG_PARAM_UPDATE: u8 = 3;
+const TAG_CACHE_LOOKUP: u8 = 4;
+const TAG_CACHE_VIEW: u8 = 5;
+const TAG_SHUTDOWN: u8 = 6;
+const TAG_WORKER_STATS: u8 = 7;
+
+impl Frame {
+    /// Frame name for diagnostics ("worker 2 died after ScoreBatch").
+    pub fn name(&self) -> &'static str {
+        match self {
+            Frame::ScoreBatch { .. } => "ScoreBatch",
+            Frame::LossRecords { .. } => "LossRecords",
+            Frame::ParamUpdate { .. } => "ParamUpdate",
+            Frame::CacheLookup { .. } => "CacheLookup",
+            Frame::CacheView { .. } => "CacheView",
+            Frame::Shutdown => "Shutdown",
+            Frame::WorkerStats(_) => "WorkerStats",
+        }
+    }
+
+    /// Encode as a complete length-prefixed frame.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut body = Vec::with_capacity(64);
+        match self {
+            Frame::ScoreBatch { seq, batch } => {
+                body.push(TAG_SCORE_BATCH);
+                put_u64(&mut body, *seq);
+                put_batch(&mut body, batch);
+            }
+            Frame::LossRecords { seq, worker, stamp, ids, losses } => {
+                body.push(TAG_LOSS_RECORDS);
+                put_u64(&mut body, *seq);
+                put_u32(&mut body, *worker);
+                put_u64(&mut body, *stamp);
+                put_u64s(&mut body, ids);
+                put_f32s(&mut body, losses);
+            }
+            Frame::ParamUpdate { version, weights } => {
+                return encode_param_update(*version, weights);
+            }
+            Frame::CacheLookup { req, now, exact, ids } => {
+                body.push(TAG_CACHE_LOOKUP);
+                put_u64(&mut body, *req);
+                put_u64(&mut body, *now);
+                body.push(u8::from(*exact));
+                put_u64s(&mut body, ids);
+            }
+            Frame::CacheView { req, worker, rows } => {
+                body.push(TAG_CACHE_VIEW);
+                put_u64(&mut body, *req);
+                put_u32(&mut body, *worker);
+                put_u64(&mut body, rows.len() as u64);
+                for r in rows {
+                    put_u32(&mut body, r.pos);
+                    body.extend_from_slice(&r.loss.to_le_bytes());
+                    put_u64(&mut body, r.stamp);
+                }
+            }
+            Frame::Shutdown => body.push(TAG_SHUTDOWN),
+            Frame::WorkerStats(s) => {
+                body.push(TAG_WORKER_STATS);
+                put_u32(&mut body, s.worker);
+                put_u64(&mut body, s.scored_batches);
+                put_u64(&mut body, s.scored_rows);
+                put_u64(&mut body, s.recorded_rows);
+                put_u64(&mut body, s.lookups);
+            }
+        }
+        debug_assert!(body.len() <= MAX_FRAME_BYTES);
+        let mut out = Vec::with_capacity(4 + body.len());
+        out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        out.extend_from_slice(&body);
+        out
+    }
+
+    /// Decode a frame body (the bytes after the length prefix). Rejects
+    /// unknown tags, truncation and trailing bytes.
+    pub fn decode(body: &[u8]) -> Result<Frame> {
+        let mut r = Reader { b: body, pos: 0 };
+        let tag = r.u8().context("frame tag")?;
+        let frame = match tag {
+            TAG_SCORE_BATCH => {
+                let seq = r.u64()?;
+                let batch = get_batch(&mut r)?;
+                Frame::ScoreBatch { seq, batch }
+            }
+            TAG_LOSS_RECORDS => {
+                let seq = r.u64()?;
+                let worker = r.u32()?;
+                let stamp = r.u64()?;
+                let ids = r.u64s()?;
+                let losses = r.f32s()?;
+                if ids.len() != losses.len() {
+                    bail!("LossRecords: {} ids vs {} losses", ids.len(), losses.len());
+                }
+                Frame::LossRecords { seq, worker, stamp, ids, losses }
+            }
+            TAG_PARAM_UPDATE => {
+                let version = r.u64()?;
+                let weights = crate::data::tensor::tensors_from_bytes(r.rest())
+                    .context("ParamUpdate weights")?;
+                return Ok(Frame::ParamUpdate { version, weights });
+            }
+            TAG_CACHE_LOOKUP => {
+                let req = r.u64()?;
+                let now = r.u64()?;
+                let exact = match r.u8()? {
+                    0 => false,
+                    1 => true,
+                    other => bail!("CacheLookup: bad bool byte {other}"),
+                };
+                let ids = r.u64s()?;
+                Frame::CacheLookup { req, now, exact, ids }
+            }
+            TAG_CACHE_VIEW => {
+                let req = r.u64()?;
+                let worker = r.u32()?;
+                let n = r.len_prefix(4 + 4 + 8)?;
+                let mut rows = Vec::with_capacity(n);
+                for _ in 0..n {
+                    rows.push(ViewRow { pos: r.u32()?, loss: r.f32()?, stamp: r.u64()? });
+                }
+                Frame::CacheView { req, worker, rows }
+            }
+            TAG_SHUTDOWN => Frame::Shutdown,
+            TAG_WORKER_STATS => Frame::WorkerStats(WorkerStats {
+                worker: r.u32()?,
+                scored_batches: r.u64()?,
+                scored_rows: r.u64()?,
+                recorded_rows: r.u64()?,
+                lookups: r.u64()?,
+            }),
+            other => bail!("unknown frame tag {other}"),
+        };
+        r.done()?;
+        Ok(frame)
+    }
+}
+
+/// Encode a complete `ParamUpdate` frame directly from a borrowed
+/// weight snapshot. The leader's publish runs once per training step
+/// per worker; this path avoids cloning the tensors into a [`Frame`]
+/// just to serialize them ([`Frame::encode`] delegates here, so the
+/// two encodings cannot drift).
+pub fn encode_param_update(version: u64, weights: &[HostTensor]) -> Vec<u8> {
+    let tensors = crate::data::tensor::tensors_to_bytes(weights);
+    let mut body = Vec::with_capacity(1 + 8 + tensors.len());
+    body.push(TAG_PARAM_UPDATE);
+    put_u64(&mut body, version);
+    body.extend_from_slice(&tensors);
+    debug_assert!(body.len() <= MAX_FRAME_BYTES);
+    let mut out = Vec::with_capacity(4 + body.len());
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    out.extend_from_slice(&body);
+    out
+}
+
+/// Write one frame; returns the bytes written (length prefix included).
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> Result<usize> {
+    let bytes = frame.encode();
+    w.write_all(&bytes)
+        .with_context(|| format!("writing {} frame", frame.name()))?;
+    Ok(bytes.len())
+}
+
+/// Read one frame. `Ok(None)` on clean EOF at a frame boundary;
+/// truncation inside a frame is an error. Returns the frame and its
+/// total wire size (length prefix included).
+pub fn read_frame(r: &mut impl Read) -> Result<Option<(Frame, usize)>> {
+    let mut len_buf = [0u8; 4];
+    // distinguish EOF-at-boundary from EOF-mid-prefix by hand
+    let mut got = 0usize;
+    while got < 4 {
+        let n = r.read(&mut len_buf[got..]).context("reading frame length")?;
+        if n == 0 {
+            if got == 0 {
+                return Ok(None);
+            }
+            bail!("stream ended inside a frame length prefix ({got}/4 bytes)");
+        }
+        got += n;
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len == 0 || len > MAX_FRAME_BYTES {
+        bail!("implausible frame length {len}");
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)
+        .with_context(|| format!("frame body truncated (wanted {len} bytes)"))?;
+    let frame = Frame::decode(&body)?;
+    Ok(Some((frame, 4 + len)))
+}
+
+// -- payload primitives ----------------------------------------------------
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64s(buf: &mut Vec<u8>, vs: &[u64]) {
+    put_u64(buf, vs.len() as u64);
+    for v in vs {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn put_f32s(buf: &mut Vec<u8>, vs: &[f32]) {
+    put_u64(buf, vs.len() as u64);
+    for v in vs {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn put_batch(buf: &mut Vec<u8>, b: &Batch) {
+    b.x.encode_into(buf);
+    b.y.encode_into(buf);
+    put_f32s(buf, &b.valid_mask);
+    put_u64(buf, b.real as u64);
+    let ids: Vec<u64> = b
+        .ids
+        .iter()
+        .map(|&i| if i == usize::MAX { NO_ID } else { i as u64 })
+        .collect();
+    put_u64s(buf, &ids);
+}
+
+fn get_batch(r: &mut Reader) -> Result<Batch> {
+    let (x, used) = HostTensor::decode_from(r.rest()).context("batch x")?;
+    r.pos += used;
+    let (y, used) = HostTensor::decode_from(r.rest()).context("batch y")?;
+    r.pos += used;
+    let valid_mask = r.f32s().context("batch valid_mask")?;
+    let real = r.u64()? as usize;
+    let wire_ids = r.u64s().context("batch ids")?;
+    let rows = *x.shape.first().unwrap_or(&0);
+    if valid_mask.len() != rows || wire_ids.len() != rows {
+        bail!(
+            "batch rows disagree: x {rows}, valid {}, ids {}",
+            valid_mask.len(),
+            wire_ids.len()
+        );
+    }
+    if y.shape != vec![rows] {
+        bail!("batch y shape {:?} != [{rows}]", y.shape);
+    }
+    if real > rows {
+        bail!("batch real {real} > rows {rows}");
+    }
+    let ids = wire_ids
+        .into_iter()
+        .map(|i| if i == NO_ID { usize::MAX } else { i as usize })
+        .collect();
+    Ok(Batch { x, y, valid_mask, real, ids })
+}
+
+/// Bounded little-endian payload reader.
+struct Reader<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn rest(&self) -> &'a [u8] {
+        &self.b[self.pos..]
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let Some(s) = self.b.get(self.pos..self.pos + n) else {
+            bail!("payload truncated at byte {} (wanted {n} more)", self.pos);
+        };
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    /// A `u64` element count, validated against the bytes that actually
+    /// remain (`elem_bytes` each) so corrupt counts cannot allocate.
+    fn len_prefix(&mut self, elem_bytes: usize) -> Result<usize> {
+        let n = self.u64()?;
+        let remain = (self.b.len() - self.pos) as u64;
+        if n > remain / elem_bytes as u64 {
+            bail!("length {n} exceeds remaining payload ({remain} bytes)");
+        }
+        Ok(n as usize)
+    }
+
+    fn u64s(&mut self) -> Result<Vec<u64>> {
+        let n = self.len_prefix(8)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.u64()?);
+        }
+        Ok(out)
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.len_prefix(4)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f32()?);
+        }
+        Ok(out)
+    }
+
+    fn done(&self) -> Result<()> {
+        if self.pos != self.b.len() {
+            bail!("{} trailing bytes in frame payload", self.b.len() - self.pos);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn roundtrip(f: &Frame) -> Frame {
+        let bytes = f.encode();
+        let mut cur = Cursor::new(bytes.clone());
+        let (back, used) = read_frame(&mut cur).unwrap().expect("one frame");
+        assert_eq!(used, bytes.len());
+        // re-encoding must be byte-identical (covers NaN payloads where
+        // PartialEq would lie)
+        assert_eq!(back.encode(), bytes, "{} re-encode differs", f.name());
+        back
+    }
+
+    #[test]
+    fn scalar_frames_roundtrip() {
+        roundtrip(&Frame::Shutdown);
+        let got = roundtrip(&Frame::WorkerStats(WorkerStats {
+            worker: 3,
+            scored_batches: 10,
+            scored_rows: 1280,
+            recorded_rows: 640,
+            lookups: 4,
+        }));
+        let Frame::WorkerStats(s) = got else { panic!("wrong frame") };
+        assert_eq!(s.worker, 3);
+        assert_eq!(s.scored_rows, 1280);
+    }
+
+    #[test]
+    fn loss_records_roundtrip_including_nan() {
+        let got = roundtrip(&Frame::LossRecords {
+            seq: u64::MAX,
+            worker: 1,
+            stamp: 7,
+            ids: vec![0, 5, 11],
+            losses: vec![f32::NAN, 0.5, -0.0],
+        });
+        let Frame::LossRecords { losses, .. } = got else { panic!("wrong frame") };
+        assert!(losses[0].is_nan());
+        assert_eq!(losses[2].to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn cache_frames_roundtrip() {
+        roundtrip(&Frame::CacheLookup {
+            req: 9,
+            now: u64::MAX - 1,
+            exact: true,
+            ids: vec![4, NO_ID, 2],
+        });
+        roundtrip(&Frame::CacheView {
+            req: 9,
+            worker: 0,
+            rows: vec![
+                ViewRow { pos: 0, loss: 1.5, stamp: 3 },
+                ViewRow { pos: 2, loss: 0.0, stamp: u64::MAX },
+            ],
+        });
+    }
+
+    #[test]
+    fn score_batch_roundtrip_maps_padding_ids() {
+        let batch = Batch {
+            x: HostTensor::f32(vec![3, 2], vec![1.0, 2.0, 3.0, 4.0, 0.0, 0.0]).unwrap(),
+            y: HostTensor::i32(vec![3], vec![1, 0, 0]).unwrap(),
+            valid_mask: vec![1.0, 1.0, 0.0],
+            real: 2,
+            ids: vec![10, 4, usize::MAX],
+        };
+        let got = roundtrip(&Frame::ScoreBatch { seq: 42, batch });
+        let Frame::ScoreBatch { seq, batch } = got else { panic!("wrong frame") };
+        assert_eq!(seq, 42);
+        assert_eq!(batch.ids, vec![10, 4, usize::MAX]);
+        assert_eq!(batch.real, 2);
+    }
+
+    #[test]
+    fn param_update_roundtrip() {
+        let ws = vec![
+            HostTensor::f32(vec![2, 2], vec![1.0, -2.0, 3.5, 0.0]).unwrap(),
+            HostTensor::f32(vec![2], vec![0.1, 0.2]).unwrap(),
+        ];
+        let got = roundtrip(&Frame::ParamUpdate { version: 12, weights: ws.clone() });
+        let Frame::ParamUpdate { version, weights } = got else { panic!("wrong frame") };
+        assert_eq!(version, 12);
+        assert_eq!(weights.len(), 2);
+        // the borrowed hot-path encoder and the Frame encoder agree
+        assert_eq!(
+            encode_param_update(12, &ws),
+            Frame::ParamUpdate { version: 12, weights: ws }.encode()
+        );
+    }
+
+    #[test]
+    fn eof_at_boundary_is_none_mid_frame_is_error() {
+        let mut empty = Cursor::new(Vec::<u8>::new());
+        assert!(read_frame(&mut empty).unwrap().is_none());
+        let bytes = Frame::Shutdown.encode();
+        for cut in 1..bytes.len() {
+            let mut cur = Cursor::new(bytes[..cut].to_vec());
+            assert!(read_frame(&mut cur).is_err(), "prefix {cut} must error");
+        }
+    }
+
+    #[test]
+    fn garbage_rejected() {
+        // zero length
+        let mut cur = Cursor::new(0u32.to_le_bytes().to_vec());
+        assert!(read_frame(&mut cur).is_err());
+        // absurd length
+        let mut cur = Cursor::new((u32::MAX).to_le_bytes().to_vec());
+        assert!(read_frame(&mut cur).is_err());
+        // unknown tag
+        let mut bytes = 1u32.to_le_bytes().to_vec();
+        bytes.push(200);
+        let mut cur = Cursor::new(bytes);
+        assert!(read_frame(&mut cur).is_err());
+        // trailing payload bytes after a Shutdown
+        let mut bytes = 2u32.to_le_bytes().to_vec();
+        bytes.push(super::TAG_SHUTDOWN);
+        bytes.push(0);
+        let mut cur = Cursor::new(bytes);
+        assert!(read_frame(&mut cur).is_err());
+        // mismatched ids/losses lengths
+        let f = Frame::LossRecords { seq: 0, worker: 0, stamp: 0, ids: vec![1], losses: vec![] };
+        let enc = f.encode();
+        assert!(Frame::decode(&enc[4..]).is_err());
+    }
+}

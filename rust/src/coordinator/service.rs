@@ -35,6 +35,14 @@ pub struct Status {
     /// Milliseconds the pipeline's training stage spent blocked handing
     /// weight snapshots to the async-eval stage (serial modes: 0).
     pub eval_stall_ms: u64,
+    /// Inference-fleet workers currently alive (threads or `obftf
+    /// worker` child processes; serial modes: 0).
+    pub workers_alive: u64,
+    /// Fleet workers relaunched mid-run (always 0 under the current
+    /// fail-fast policy; reserved for supervised restart).
+    pub worker_restarts: u64,
+    /// Per-worker scored-batch counts (from `WorkerStats` traffic).
+    pub worker_scored: Vec<u64>,
     pub done: bool,
 }
 
@@ -54,6 +62,12 @@ impl Status {
             .set("cache_stale", Json::Num(self.cache_stale as f64))
             .set("cache_hit_rate", Json::Num(self.cache_hit_rate()))
             .set("eval_stall_ms", Json::Num(self.eval_stall_ms as f64))
+            .set("workers_alive", Json::Num(self.workers_alive as f64))
+            .set("worker_restarts", Json::Num(self.worker_restarts as f64))
+            .set(
+                "worker_scored",
+                Json::Arr(self.worker_scored.iter().map(|&c| Json::Num(c as f64)).collect()),
+            )
             .set("done", Json::Bool(self.done));
         j
     }
@@ -82,6 +96,14 @@ impl Status {
             cache_misses: j.need("cache_misses")?.as_f64()? as u64,
             cache_stale: j.need("cache_stale")?.as_f64()? as u64,
             eval_stall_ms: j.need("eval_stall_ms")?.as_f64()? as u64,
+            workers_alive: j.need("workers_alive")?.as_f64()? as u64,
+            worker_restarts: j.need("worker_restarts")?.as_f64()? as u64,
+            worker_scored: j
+                .need("worker_scored")?
+                .as_arr()?
+                .iter()
+                .map(|v| Ok(v.as_f64()? as u64))
+                .collect::<Result<Vec<u64>>>()?,
             done: j.need("done")?.as_bool()?,
         })
     }
@@ -190,6 +212,9 @@ mod tests {
             cache_misses: 10,
             cache_stale: 4,
             eval_stall_ms: 17,
+            workers_alive: 3,
+            worker_restarts: 1,
+            worker_scored: vec![12, 9, 21],
             done: true,
         };
         assert!((s.cache_hit_rate() - 0.75).abs() < 1e-12);
@@ -202,6 +227,9 @@ mod tests {
         assert_eq!(got.cache_misses, 10);
         assert_eq!(got.cache_stale, 4);
         assert_eq!(got.eval_stall_ms, 17);
+        assert_eq!(got.workers_alive, 3);
+        assert_eq!(got.worker_restarts, 1);
+        assert_eq!(got.worker_scored, vec![12, 9, 21]);
         assert!(got.done);
     }
 

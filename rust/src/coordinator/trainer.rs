@@ -256,6 +256,8 @@ impl Trainer {
             cache_misses: cache_counters.misses,
             cache_stale: cache_counters.stale,
             sel_hash: crate::sampling::selection_hash(&selected),
+            workers_alive: 0,
+            worker_restarts: 0,
         };
         self.recorder.record_step(rec);
         self.step += 1;

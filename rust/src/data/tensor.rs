@@ -8,7 +8,7 @@
 //! handles are `Rc`-backed and cannot cross threads) in
 //! `runtime::pjrt`.
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 /// Element storage for a host tensor (models use f32 data, i32 labels).
 #[derive(Clone, Debug, PartialEq)]
@@ -90,6 +90,143 @@ impl HostTensor {
     pub fn size_bytes(&self) -> usize {
         self.element_count() * 4
     }
+
+    // -- wire serialization (little-endian, see coordinator::proto) ------
+
+    /// Append the wire encoding to `buf`: `dtype u8, ndim u8, dims u64…,
+    /// raw element bytes`. Bit-exact for f32 (NaNs and signed zeros
+    /// survive the roundtrip), so weight snapshots shipped across a
+    /// process boundary stay bit-identical.
+    pub fn encode_into(&self, buf: &mut Vec<u8>) {
+        debug_assert!(self.shape.len() <= u8::MAX as usize);
+        buf.push(match self.data {
+            TensorData::F32(_) => 0u8,
+            TensorData::I32(_) => 1u8,
+        });
+        buf.push(self.shape.len() as u8);
+        for &d in &self.shape {
+            buf.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+        match &self.data {
+            TensorData::F32(v) => {
+                for x in v {
+                    buf.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            TensorData::I32(v) => {
+                for x in v {
+                    buf.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+    }
+
+    /// Wire encoding as an owned buffer ([`HostTensor::encode_into`]).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(2 + self.shape.len() * 8 + self.size_bytes());
+        self.encode_into(&mut buf);
+        buf
+    }
+
+    /// Decode one tensor from the front of `b`; returns the tensor and
+    /// the number of bytes consumed. Rejects truncated or inconsistent
+    /// encodings (the element payload is bounded by the bytes actually
+    /// present, so a corrupt length cannot trigger a huge allocation).
+    pub fn decode_from(b: &[u8]) -> Result<(HostTensor, usize)> {
+        if b.len() < 2 {
+            bail!("tensor header truncated ({} bytes)", b.len());
+        }
+        let dtype = b[0];
+        let ndim = b[1] as usize;
+        let mut pos = 2usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for d in 0..ndim {
+            let Some(raw) = b.get(pos..pos + 8) else {
+                bail!("tensor dims truncated (dim {d}/{ndim})");
+            };
+            let v = u64::from_le_bytes(raw.try_into().expect("8-byte slice"));
+            if v > u32::MAX as u64 {
+                bail!("tensor dim {v} implausibly large");
+            }
+            shape.push(v as usize);
+            pos += 8;
+        }
+        let mut elems = 1usize;
+        for &d in &shape {
+            elems = elems
+                .checked_mul(d)
+                .filter(|n| n.checked_mul(4).is_some())
+                .ok_or_else(|| anyhow::anyhow!("tensor shape {shape:?} overflows"))?;
+        }
+        let Some(data) = b.get(pos..pos + elems * 4) else {
+            bail!(
+                "tensor data truncated: shape {shape:?} wants {} bytes, {} remain",
+                elems * 4,
+                b.len() - pos
+            );
+        };
+        let t = match dtype {
+            0 => HostTensor::f32(
+                shape,
+                data.chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().expect("4-byte chunk")))
+                    .collect(),
+            )?,
+            1 => HostTensor::i32(
+                shape,
+                data.chunks_exact(4)
+                    .map(|c| i32::from_le_bytes(c.try_into().expect("4-byte chunk")))
+                    .collect(),
+            )?,
+            other => bail!("unknown tensor dtype tag {other}"),
+        };
+        Ok((t, pos + elems * 4))
+    }
+
+    /// Decode exactly one tensor spanning all of `b`.
+    pub fn from_bytes(b: &[u8]) -> Result<HostTensor> {
+        let (t, used) = Self::decode_from(b)?;
+        if used != b.len() {
+            bail!("{} trailing bytes after tensor", b.len() - used);
+        }
+        Ok(t)
+    }
+}
+
+/// Encode a parameter list (e.g. a [`crate::runtime::Session`] weight
+/// snapshot) as `count u64` + each tensor's wire form.
+pub fn tensors_to_bytes(ts: &[HostTensor]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(8 + ts.iter().map(|t| t.size_bytes() + 32).sum::<usize>());
+    buf.extend_from_slice(&(ts.len() as u64).to_le_bytes());
+    for t in ts {
+        t.encode_into(&mut buf);
+    }
+    buf
+}
+
+/// Inverse of [`tensors_to_bytes`]; rejects truncation and trailing
+/// garbage.
+pub fn tensors_from_bytes(b: &[u8]) -> Result<Vec<HostTensor>> {
+    let Some(raw) = b.get(..8) else {
+        bail!("tensor list header truncated");
+    };
+    let count = u64::from_le_bytes(raw.try_into().expect("8-byte slice"));
+    // each tensor needs at least its 2-byte header
+    if count > (b.len() as u64) / 2 {
+        bail!("tensor list claims {count} tensors in {} bytes", b.len());
+    }
+    let mut pos = 8usize;
+    let mut out = Vec::with_capacity(count as usize);
+    for i in 0..count {
+        let (t, used) = HostTensor::decode_from(&b[pos..])
+            .with_context(|| format!("tensor {i}/{count}"))?;
+        pos += used;
+        out.push(t);
+    }
+    if pos != b.len() {
+        bail!("{} trailing bytes after tensor list", b.len() - pos);
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -114,6 +251,63 @@ mod tests {
         let t = HostTensor::i32(vec![2], vec![1, 2]).unwrap();
         assert!(t.as_f32().is_err());
         assert!(t.as_i32().is_ok());
+    }
+
+    #[test]
+    fn wire_roundtrip_preserves_bits() {
+        let t = HostTensor::f32(
+            vec![2, 3],
+            vec![0.0, -0.0, f32::NAN, f32::INFINITY, -1.5e-30, 7.25],
+        )
+        .unwrap();
+        let bytes = t.to_bytes();
+        let back = HostTensor::from_bytes(&bytes).unwrap();
+        assert_eq!(back.shape, t.shape);
+        for (a, b) in t.as_f32().unwrap().iter().zip(back.as_f32().unwrap()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let ti = HostTensor::i32(vec![3], vec![-1, 0, i32::MAX]).unwrap();
+        assert_eq!(HostTensor::from_bytes(&ti.to_bytes()).unwrap(), ti);
+        // scalar ([] shape) survives too
+        let s = HostTensor::scalar_f32(4.5);
+        assert_eq!(HostTensor::from_bytes(&s.to_bytes()).unwrap(), s);
+    }
+
+    #[test]
+    fn wire_rejects_truncation_and_garbage() {
+        let t = HostTensor::f32(vec![4], vec![1.0; 4]).unwrap();
+        let bytes = t.to_bytes();
+        for cut in 0..bytes.len() {
+            assert!(
+                HostTensor::from_bytes(&bytes[..cut]).is_err(),
+                "prefix of {cut} bytes must not decode"
+            );
+        }
+        let mut trailing = bytes.clone();
+        trailing.push(0);
+        assert!(HostTensor::from_bytes(&trailing).is_err());
+        let mut bad_dtype = bytes;
+        bad_dtype[0] = 9;
+        assert!(HostTensor::from_bytes(&bad_dtype).is_err());
+    }
+
+    #[test]
+    fn tensor_list_roundtrip_and_rejection() {
+        let ts = vec![
+            HostTensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap(),
+            HostTensor::i32(vec![1], vec![-7]).unwrap(),
+            HostTensor::f32(vec![0], vec![]).unwrap(),
+        ];
+        let bytes = tensors_to_bytes(&ts);
+        assert_eq!(tensors_from_bytes(&bytes).unwrap(), ts);
+        assert_eq!(tensors_from_bytes(&tensors_to_bytes(&[])).unwrap(), vec![]);
+        for cut in 0..bytes.len() {
+            assert!(tensors_from_bytes(&bytes[..cut]).is_err());
+        }
+        // absurd count rejected before any allocation
+        let mut huge = (u64::MAX).to_le_bytes().to_vec();
+        huge.extend_from_slice(&[0, 0]);
+        assert!(tensors_from_bytes(&huge).is_err());
     }
 
     #[test]

@@ -6,6 +6,9 @@
 //!   inspect          dump the artifact manifest / compiled-shape info
 //!   bench-selection  micro-benchmark the selection policies off-line
 //!   status           read the live status of a running streaming job
+//!   worker           pipeline inference worker (spawned by the proc
+//!                    transport; speaks coordinator::proto frames over
+//!                    stdin/stdout — not for interactive use)
 
 use std::path::{Path, PathBuf};
 
@@ -46,6 +49,10 @@ fn train_parser() -> ArgParser {
         .flag("pipeline-depth", "pipeline lookahead depth in batches")
         .flag("cache-shards", "sharded loss-cache stripes (0 = auto)")
         .bool_flag("pipeline-sync", "pipeline synchronous handoffs (bit-identical oracle mode)")
+        .bool_flag(
+            "pipeline-proc",
+            "multi-process inference fleet (obftf worker children; implies --pipeline)",
+        )
 }
 
 fn build_config(p: &Parsed) -> Result<TrainConfig> {
@@ -130,6 +137,10 @@ fn build_config(p: &Parsed) -> Result<TrainConfig> {
     }
     if p.get_bool("pipeline-sync") {
         cfg.pipeline_sync = true;
+    }
+    if p.get_bool("pipeline-proc") {
+        cfg.pipeline = true;
+        cfg.pipeline_proc = true;
     }
     cfg.validate()?;
     Ok(cfg)
@@ -268,6 +279,37 @@ fn cmd_bench_selection(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// `obftf worker` — the multi-process pipeline's inference worker.
+/// Speaks length-prefixed `coordinator::proto` frames over
+/// stdin/stdout; all human-readable output goes to stderr.
+fn cmd_worker(args: &[String]) -> Result<()> {
+    let parser = ArgParser::new("worker", "pipeline inference worker (proto frames on stdio)")
+        .flag("worker-id", "this worker's index in the fleet (required)")
+        .flag("workers", "fleet size (required)")
+        .flag("model", "model name (default mlp)")
+        .flag("flavour", "auto | native | pallas | jnp (default auto)")
+        .flag("capacity", "loss-cache capacity = training-set size (required)")
+        .flag("max-age", "loss max age in steps (diagnostic; freshness is leader-side)")
+        .flag("fail-after", "TEST ONLY: crash after N frames (kill-a-worker regression)");
+    let p = parser.parse(args)?;
+    let need = |name: &str| -> Result<usize> {
+        p.get_parse::<usize>(name)?
+            .ok_or_else(|| anyhow::anyhow!("--{name} is required\n\n{}", parser.usage()))
+    };
+    let cfg = obftf::coordinator::WorkerConfig {
+        worker_id: need("worker-id")?,
+        n_workers: need("workers")?,
+        model: p.get("model").unwrap_or("mlp").to_string(),
+        flavour: p.get("flavour").unwrap_or("auto").to_string(),
+        capacity: need("capacity")?,
+        max_age: p.get_parse::<u64>("max-age")?.unwrap_or(0),
+        fail_after: p.get_parse::<u64>("fail-after")?,
+    };
+    let stdin = std::io::stdin().lock();
+    let stdout = std::io::BufWriter::new(std::io::stdout().lock());
+    obftf::coordinator::ipc::run_worker(&cfg, stdin, stdout)
+}
+
 fn usage() -> String {
     "obftf — One Backward from Ten Forward (Dong et al. 2021)\n\n\
      USAGE:\n  obftf <SUBCOMMAND> [FLAGS]\n\n\
@@ -276,7 +318,8 @@ fn usage() -> String {
      \x20 eval             evaluate a checkpoint\n\
      \x20 inspect          dump the artifact manifest\n\
      \x20 bench-selection  micro-benchmark the selection policies\n\
-     \x20 status <addr>    read a running job's status endpoint\n"
+     \x20 status <addr>    read a running job's status endpoint\n\
+     \x20 worker           pipeline inference worker (internal; proto frames on stdio)\n"
         .to_string()
 }
 
@@ -292,6 +335,7 @@ fn main() -> Result<()> {
         "eval" => cmd_eval(rest),
         "inspect" => cmd_inspect(),
         "bench-selection" => cmd_bench_selection(rest),
+        "worker" => cmd_worker(rest),
         "status" => {
             let parser =
                 ArgParser::new("status", "read a status endpoint").positional("addr", "host:port");

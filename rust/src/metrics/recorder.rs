@@ -31,6 +31,11 @@ pub struct StepRecord {
     /// ([`crate::sampling::selection_hash`]) — the compact observable
     /// the pipeline-vs-serial equivalence tests compare.
     pub sel_hash: u64,
+    /// Inference-fleet workers alive at record time (0 when the driver
+    /// has no fleet — serial and data-parallel modes).
+    pub workers_alive: u32,
+    /// Fleet workers relaunched so far (0 under the fail-fast policy).
+    pub worker_restarts: u32,
 }
 
 /// One evaluation's record.
@@ -99,12 +104,12 @@ impl Recorder {
         writeln!(
             f,
             "step,epoch,sel_loss,batch_loss,n_forward,n_selected,fwd_us,sel_us,bwd_us,\
-             cache_hits,cache_misses,cache_stale,sel_hash"
+             cache_hits,cache_misses,cache_stale,sel_hash,workers_alive,worker_restarts"
         )?;
         for s in &self.steps {
             writeln!(
                 f,
-                "{},{},{},{},{},{},{},{},{},{},{},{},{}",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
                 s.step,
                 s.epoch,
                 s.sel_loss,
@@ -117,7 +122,9 @@ impl Recorder {
                 s.cache_hits,
                 s.cache_misses,
                 s.cache_stale,
-                s.sel_hash
+                s.sel_hash,
+                s.workers_alive,
+                s.worker_restarts
             )?;
         }
         Ok(())
@@ -166,6 +173,8 @@ mod tests {
             cache_misses: 2,
             cache_stale: 0,
             sel_hash: 42,
+            workers_alive: 4,
+            worker_restarts: 0,
         }
     }
 
@@ -191,10 +200,10 @@ mod tests {
         r.write_evals_csv(&ep).unwrap();
         let steps = std::fs::read_to_string(&sp).unwrap();
         assert!(steps.lines().count() == 2);
-        assert!(steps.contains("0,0,1,2,128,32,100,10,200,1,2,0,42"));
+        assert!(steps.contains("0,0,1,2,128,32,100,10,200,1,2,0,42,4,0"));
         assert!(steps.starts_with(
             "step,epoch,sel_loss,batch_loss,n_forward,n_selected,fwd_us,sel_us,bwd_us,\
-             cache_hits,cache_misses,cache_stale,sel_hash"
+             cache_hits,cache_misses,cache_stale,sel_hash,workers_alive,worker_restarts"
         ));
         let evals = std::fs::read_to_string(&ep).unwrap();
         assert!(evals.contains("0,0,0.5,0.9"));

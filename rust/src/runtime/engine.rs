@@ -259,6 +259,13 @@ impl Engine {
             _ => bail!("worker 0: protocol violation"),
         }
     }
+
+    /// The workers' shared parameters in wire form — the byte-level
+    /// snapshot a cross-process consumer (checkpoint shipper, remote
+    /// fleet) reads without touching `HostTensor` internals.
+    pub fn params_to_bytes(&self) -> Result<Vec<u8>> {
+        Ok(crate::data::tensor::tensors_to_bytes(&self.params_to_host()?))
+    }
 }
 
 impl Drop for Engine {
@@ -376,6 +383,17 @@ mod tests {
             engine.params_to_host().unwrap(),
             "fork must carry the workers' weights bit-identically"
         );
+    }
+
+    #[test]
+    fn params_to_bytes_matches_host_snapshot() {
+        let dir = crate::testkit::TempDir::new("engine").unwrap();
+        let m = Manifest::native(dir.path());
+        let engine = Engine::new(&m, "linreg", Flavour::Native, 1).unwrap();
+        engine.init_broadcast(4).unwrap();
+        let bytes = engine.params_to_bytes().unwrap();
+        let decoded = crate::data::tensor::tensors_from_bytes(&bytes).unwrap();
+        assert_eq!(decoded, engine.params_to_host().unwrap());
     }
 
     #[test]

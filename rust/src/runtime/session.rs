@@ -69,6 +69,20 @@ impl Session {
         self.params_to_host()
     }
 
+    /// The weight snapshot in wire form (little-endian, bit-exact f32)
+    /// — what a `ParamUpdate` frame carries to a multi-process
+    /// inference worker.
+    pub fn snapshot_bytes(&self) -> Result<Vec<u8>> {
+        Ok(crate::data::tensor::tensors_to_bytes(&self.snapshot()?))
+    }
+
+    /// Load parameters from [`Session::snapshot_bytes`] output
+    /// (shape-checked against the manifest like
+    /// [`Session::load_params`]).
+    pub fn load_snapshot_bytes(&mut self, bytes: &[u8]) -> Result<()> {
+        self.load_params(&crate::data::tensor::tensors_from_bytes(bytes)?)
+    }
+
     /// Build an independent session of the same model × flavour and, if
     /// this session holds parameters, load a snapshot of them into the
     /// clone. Sessions are single-threaded (backends may hold
@@ -320,6 +334,25 @@ mod tests {
         assert_ne!(f.params_to_host().unwrap(), before);
         // snapshot() is the params_to_host alias
         assert_eq!(s.snapshot().unwrap(), before);
+    }
+
+    #[test]
+    fn snapshot_bytes_roundtrip_is_bit_identical() {
+        let mut s = native_session("mlp");
+        s.init(7).unwrap();
+        let bytes = s.snapshot_bytes().unwrap();
+        let before = s.params_to_host().unwrap();
+        // perturb, then restore from the wire form
+        let n = s.batch();
+        let x = HostTensor::f32(vec![n, 784], vec![0.1; n * 784]).unwrap();
+        let y = HostTensor::i32(vec![n], vec![0; n]).unwrap();
+        let mask = vec![1.0f32; n];
+        s.train_step(&x, &y, &mask, 0.1).unwrap();
+        assert_ne!(s.params_to_host().unwrap(), before);
+        s.load_snapshot_bytes(&bytes).unwrap();
+        assert_eq!(s.params_to_host().unwrap(), before);
+        // truncated snapshots are rejected
+        assert!(s.load_snapshot_bytes(&bytes[..bytes.len() - 3]).is_err());
     }
 
     #[test]

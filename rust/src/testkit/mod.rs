@@ -26,6 +26,7 @@ pub mod cases {
     //! periodic row masks, labelled batches and per-writer cache op
     //! plans.
 
+    use crate::data::dataset::Batch;
     use crate::data::rng::Rng;
     use crate::data::tensor::HostTensor;
     use crate::runtime::kernels::{MR, NR};
@@ -120,6 +121,58 @@ pub mod cases {
             plans.push(plan);
         }
         plans
+    }
+
+    /// Awkward wire-protocol loss payloads for the proto roundtrip
+    /// tests: empty, single-row, non-finite losses (NaN/±inf/-0.0) and
+    /// max-version stamps.
+    pub fn wire_losses(rng: &mut Rng) -> (Vec<u64>, Vec<f32>, u64) {
+        let n = match rng.below(4) {
+            0 => 0,
+            1 => 1,
+            _ => 1 + rng.below(40),
+        };
+        let ids = (0..n).map(|_| rng.below(10_000) as u64).collect();
+        let losses = (0..n)
+            .map(|_| match rng.below(6) {
+                0 => f32::NAN,
+                1 => f32::INFINITY,
+                2 => f32::NEG_INFINITY,
+                3 => -0.0,
+                _ => rng.normal() as f32,
+            })
+            .collect();
+        let stamp = match rng.below(4) {
+            0 => u64::MAX,
+            1 => u64::MAX - 1,
+            _ => rng.below(1 << 20) as u64,
+        };
+        (ids, losses, stamp)
+    }
+
+    /// Awkward [`Batch`] payloads for the wire codec: tiny and odd row
+    /// counts, `real` anywhere in `0..=rows` (0 = all-padding batch,
+    /// rows = no padding), f32 or i32 targets, padding ids
+    /// `usize::MAX`.
+    pub fn wire_batch(rng: &mut Rng) -> Batch {
+        let rows = 1 + rng.below(7);
+        let feat = 1 + rng.below(5);
+        let real = rng.below(rows + 1);
+        let x = HostTensor::f32(vec![rows, feat], normal_vec(rng, rows * feat))
+            .expect("consistent shape");
+        let y = if rng.below(2) == 0 {
+            HostTensor::f32(vec![rows], normal_vec(rng, rows)).expect("consistent shape")
+        } else {
+            HostTensor::i32(vec![rows], (0..rows).map(|_| rng.below(10) as i32).collect())
+                .expect("consistent shape")
+        };
+        let mut valid_mask = vec![0.0f32; rows];
+        let mut ids = vec![usize::MAX; rows];
+        for (row, (m, id)) in valid_mask.iter_mut().zip(ids.iter_mut()).enumerate().take(real) {
+            *m = 1.0;
+            *id = rng.below(1 << 20) + row;
+        }
+        Batch { x, y, valid_mask, real, ids }
     }
 
     /// Relative-tolerance elementwise comparison, reporting the first
@@ -311,6 +364,31 @@ mod tests {
                 assert_eq!(loss, id as f32 * 0.25 + stamp as f32);
             }
         }
+    }
+
+    #[test]
+    fn gen_wire_payloads_cover_awkward_cases() {
+        let mut rng = Rng::seed_from(7);
+        let (mut empty, mut single, mut nonfinite, mut maxstamp, mut all_pad, mut no_pad) =
+            (false, false, false, false, false, false);
+        for _ in 0..200 {
+            let (ids, losses, stamp) = cases::wire_losses(&mut rng);
+            assert_eq!(ids.len(), losses.len());
+            empty |= ids.is_empty();
+            single |= ids.len() == 1;
+            nonfinite |= losses.iter().any(|l| !l.is_finite());
+            maxstamp |= stamp == u64::MAX;
+            let b = cases::wire_batch(&mut rng);
+            assert_eq!(b.valid_mask.len(), b.ids.len());
+            assert_eq!(b.x.shape[0], b.valid_mask.len());
+            assert_eq!(b.valid_mask.iter().filter(|&&m| m > 0.0).count(), b.real);
+            all_pad |= b.real == 0;
+            no_pad |= b.real == b.valid_mask.len();
+        }
+        assert!(
+            empty && single && nonfinite && maxstamp && all_pad && no_pad,
+            "generators must cover the awkward corners"
+        );
     }
 
     #[test]

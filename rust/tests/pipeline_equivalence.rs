@@ -5,17 +5,27 @@
 //! reproduce the serial streaming trainer *bit for bit*: identical
 //! selected sets (order included — the gathered backward reduces in
 //! selection order), identical per-step losses, identical final
-//! weights, identical eval trajectory. Async mode is bounded loosely:
-//! it must complete, train and account its cache traffic.
+//! weights, identical eval trajectory. This holds for **both**
+//! transports: the in-process thread fleet and the multi-process
+//! `obftf worker` fleet (the wire codec ships f32 bit-exactly, so
+//! crossing a process boundary changes nothing). Async mode is bounded
+//! loosely: it must complete, train and account its cache traffic.
 
 use obftf::config::TrainConfig;
-use obftf::coordinator::{PipelineTrainer, StreamingTrainer};
+use obftf::coordinator::{PipelineTrainer, StreamingTrainer, TrainReport};
 use obftf::data::TensorData;
 use obftf::runtime::Manifest;
 use obftf::sampling::Method;
 
 fn manifest() -> Manifest {
     Manifest::load_or_native(&obftf::artifacts_dir()).expect("manifest loads")
+}
+
+/// The proc transport spawns `obftf worker` children; under `cargo
+/// test` the current executable is the *test* binary, so point the
+/// transport at the real CLI binary cargo built alongside it.
+fn use_cli_worker_bin() {
+    std::env::set_var("OBFTF_WORKER_BIN", env!("CARGO_BIN_EXE_obftf"));
 }
 
 fn cfg(steps: usize) -> TrainConfig {
@@ -33,6 +43,16 @@ fn cfg(steps: usize) -> TrainConfig {
         prefetch_depth: 3,
         ..Default::default()
     }
+}
+
+fn cnn_lite_cfg(steps: usize) -> TrainConfig {
+    let mut c = cfg(steps);
+    c.model = "cnn_lite".to_string();
+    c.dataset = Some("imagenet_proxy".into());
+    c.n_train = Some(256);
+    c.n_test = Some(128);
+    c.lr = 0.1;
+    c
 }
 
 fn assert_params_bit_identical(a: &[obftf::data::HostTensor], b: &[obftf::data::HostTensor]) {
@@ -54,26 +74,27 @@ fn assert_params_bit_identical(a: &[obftf::data::HostTensor], b: &[obftf::data::
     }
 }
 
-/// The acceptance pin: sync pipeline ≡ serial trainer on the mlp
-/// manifest, at 1 and 3 inference workers.
-#[test]
-fn sync_pipeline_is_bit_identical_to_serial_streaming() {
+/// Run the serial streaming oracle for `base`, then for each fleet
+/// size run the sync pipeline over the given transport and assert the
+/// bit-for-bit contract: selected sets, per-step losses, final
+/// weights, eval trajectory, compute accounting.
+fn assert_sync_pipeline_equivalent(base: &TrainConfig, worker_counts: &[usize], proc: bool) {
     let m = manifest();
-    let c = cfg(12);
-    let mut serial = StreamingTrainer::with_manifest(&c, &m).unwrap();
+    let mut serial = StreamingTrainer::with_manifest(base, &m).unwrap();
     let sreport = serial.run().unwrap();
     let sparams = serial.trainer().session().params_to_host().unwrap();
-    assert_eq!(sreport.steps, 12);
+    assert_eq!(sreport.steps, base.stream_steps as u64);
 
-    for workers in [1usize, 3] {
-        let mut pc = c.clone();
+    for &workers in worker_counts {
+        let tag = if proc { "proc" } else { "thread" };
+        let mut pc = base.clone();
         pc.pipeline = true;
         pc.pipeline_sync = true;
+        pc.pipeline_proc = proc;
         pc.pipeline_workers = workers;
-        pc.cache_shards = 3;
         let mut p = PipelineTrainer::with_manifest(&pc, &m).unwrap();
         let preport = p.run().unwrap();
-        assert_eq!(preport.steps, sreport.steps, "workers={workers}");
+        assert_eq!(preport.steps, sreport.steps, "{tag} workers={workers}");
 
         // bit-identical selected sets and per-step losses
         let srecs = &serial.trainer().recorder.steps;
@@ -82,14 +103,14 @@ fn sync_pipeline_is_bit_identical_to_serial_streaming() {
         for (a, b) in srecs.iter().zip(precs.iter()) {
             assert_eq!(
                 a.sel_hash, b.sel_hash,
-                "workers={workers} step {}: selected sets differ",
+                "{tag} workers={workers} step {}: selected sets differ",
                 a.step
             );
             assert_eq!(a.n_selected, b.n_selected, "step {}", a.step);
             assert_eq!(
                 a.sel_loss.to_bits(),
                 b.sel_loss.to_bits(),
-                "workers={workers} step {} sel_loss: {} vs {}",
+                "{tag} workers={workers} step {} sel_loss: {} vs {}",
                 a.step,
                 a.sel_loss,
                 b.sel_loss
@@ -97,9 +118,12 @@ fn sync_pipeline_is_bit_identical_to_serial_streaming() {
             assert_eq!(
                 a.batch_loss.to_bits(),
                 b.batch_loss.to_bits(),
-                "workers={workers} step {} batch_loss",
+                "{tag} workers={workers} step {} batch_loss",
                 a.step
             );
+            // the fleet is alive for every recorded step
+            assert_eq!(b.workers_alive as usize, workers, "step {}", a.step);
+            assert_eq!(b.worker_restarts, 0, "step {}", a.step);
         }
 
         // bit-identical final weights
@@ -124,7 +148,37 @@ fn sync_pipeline_is_bit_identical_to_serial_streaming() {
         // same compute accounting
         assert_eq!(preport.forward_examples, sreport.forward_examples);
         assert_eq!(preport.backward_examples, sreport.backward_examples);
+        assert_fleet_accounting(&p, &preport, workers, proc);
     }
+}
+
+/// Transport-level bookkeeping the sync contract also pins: every
+/// stream batch was scored exactly once (sync mode never requeues),
+/// and the proc transport actually moved frames.
+fn assert_fleet_accounting(p: &PipelineTrainer, report: &TrainReport, workers: usize, proc: bool) {
+    let stats = p.worker_stats();
+    assert_eq!(stats.len(), workers);
+    let scored: u64 = stats.iter().map(|w| w.scored_batches).sum();
+    assert_eq!(scored, report.steps, "one scoring per step in sync mode");
+    assert_eq!(p.budget.inference_forwards, report.forward_examples);
+    if proc {
+        // distributed ownership: every scored row was recorded by
+        // exactly one shard owner
+        let recorded: u64 = stats.iter().map(|w| w.recorded_rows).sum();
+        assert_eq!(recorded, p.budget.inference_forwards);
+        assert!(p.frame_bytes() > 0, "proc transport must move frames");
+    } else {
+        assert_eq!(p.frame_bytes(), 0, "thread transport is wire-free");
+    }
+}
+
+/// The acceptance pin: sync thread pipeline ≡ serial trainer on the
+/// mlp manifest, at 1 and 3 inference workers.
+#[test]
+fn sync_pipeline_is_bit_identical_to_serial_streaming() {
+    let mut base = cfg(12);
+    base.cache_shards = 3;
+    assert_sync_pipeline_equivalent(&base, &[1, 3], false);
 }
 
 /// The same bit-for-bit pin on the conv workload: the staged pipeline
@@ -133,50 +187,26 @@ fn sync_pipeline_is_bit_identical_to_serial_streaming() {
 /// run Table 3's scenario unchanged.
 #[test]
 fn sync_pipeline_is_bit_identical_to_serial_streaming_on_cnn_lite() {
-    let m = manifest();
-    let mut c = cfg(6);
-    c.model = "cnn_lite".to_string();
-    c.dataset = Some("imagenet_proxy".into());
-    c.n_train = Some(256);
-    c.n_test = Some(128);
-    c.lr = 0.1;
-    let mut serial = StreamingTrainer::with_manifest(&c, &m).unwrap();
-    let sreport = serial.run().unwrap();
-    let sparams = serial.trainer().session().params_to_host().unwrap();
-    assert_eq!(sreport.steps, 6);
+    assert_sync_pipeline_equivalent(&cnn_lite_cfg(6), &[1, 2], false);
+}
 
-    for workers in [1usize, 2] {
-        let mut pc = c.clone();
-        pc.pipeline = true;
-        pc.pipeline_sync = true;
-        pc.pipeline_workers = workers;
-        let mut p = PipelineTrainer::with_manifest(&pc, &m).unwrap();
-        let preport = p.run().unwrap();
-        assert_eq!(preport.steps, sreport.steps, "workers={workers}");
+/// The multi-process acceptance pin: sync **proc** pipeline — `obftf
+/// worker` children, losses crossing stdin/stdout as typed frames,
+/// distributed shard ownership — is still bit-identical to the serial
+/// trainer at 1 and 2 worker processes.
+#[test]
+fn sync_proc_pipeline_is_bit_identical_to_serial_streaming() {
+    use_cli_worker_bin();
+    assert_sync_pipeline_equivalent(&cfg(8), &[1, 2], true);
+}
 
-        let srecs = &serial.trainer().recorder.steps;
-        let precs = &p.recorder.steps;
-        assert_eq!(srecs.len(), precs.len());
-        for (a, b) in srecs.iter().zip(precs.iter()) {
-            assert_eq!(
-                a.sel_hash, b.sel_hash,
-                "workers={workers} step {}: selected sets differ",
-                a.step
-            );
-            assert_eq!(
-                a.sel_loss.to_bits(),
-                b.sel_loss.to_bits(),
-                "workers={workers} step {} sel_loss: {} vs {}",
-                a.step,
-                a.sel_loss,
-                b.sel_loss
-            );
-        }
-        let pparams = p.session().params_to_host().unwrap();
-        assert_params_bit_identical(&sparams, &pparams);
-        assert_eq!(preport.forward_examples, sreport.forward_examples);
-        assert_eq!(preport.backward_examples, sreport.backward_examples);
-    }
+/// And the conv workload across the process boundary: NHWC batches and
+/// conv weights ship bit-exactly, so cnn_lite proc runs match serial
+/// bit for bit at 1 and 2 worker processes.
+#[test]
+fn sync_proc_pipeline_is_bit_identical_on_cnn_lite() {
+    use_cli_worker_bin();
+    assert_sync_pipeline_equivalent(&cnn_lite_cfg(4), &[1, 2], true);
 }
 
 #[test]
@@ -209,6 +239,40 @@ fn async_pipeline_trains_and_accounts_cache_traffic() {
         .sum();
     assert!(row_lookups > 0);
     assert!(report.realized_ratio > 0.0);
+}
+
+/// Async mode over the proc transport: same loose bounds as the thread
+/// fleet — completes, trains, counts one counting lookup per step and
+/// attributes row traffic to the owning workers.
+#[test]
+fn async_proc_pipeline_trains_and_accounts_cache_traffic() {
+    use_cli_worker_bin();
+    let m = manifest();
+    let mut pc = cfg(20);
+    pc.model = "linreg".into();
+    pc.method = Method::MaxProb;
+    pc.lr = 0.01;
+    pc.pipeline = true;
+    pc.pipeline_proc = true;
+    pc.pipeline_workers = 2;
+    pc.pipeline_depth = 3;
+    let mut p = PipelineTrainer::with_manifest(&pc, &m).unwrap();
+    assert!(p.knobs().proc);
+    assert_eq!(p.knobs().shards, 2, "proc mode: one shard set per worker");
+    let report = p.run().unwrap();
+    assert_eq!(report.steps, 20);
+    assert!(report.final_eval.loss.is_finite());
+    let stats = p.cache_stats();
+    assert_eq!(stats.hits + stats.misses, 20);
+    assert!(p.budget.inference_forwards >= 20 * m.batch as u64);
+    let row_lookups: u64 = (0..2)
+        .map(|k| {
+            let s = p.shard_stats(k);
+            s.hits + s.misses
+        })
+        .sum();
+    assert!(row_lookups > 0, "row traffic must be attributed to owners");
+    assert!(p.frame_bytes() > 0);
 }
 
 #[test]

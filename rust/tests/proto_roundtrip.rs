@@ -1,0 +1,180 @@
+//! Wire-codec property tests: every frame survives
+//! encode → decode → re-encode byte-identically over awkward payloads
+//! (empty batches, single-row, non-finite losses, max-version stamps),
+//! and every truncated or corrupted frame is rejected — never
+//! panicking, never over-allocating, never silently mis-decoding.
+//!
+//! Byte-level comparison (rather than `PartialEq`) is deliberate: it
+//! holds for NaN losses where equality would lie, and it is exactly the
+//! property the sync-mode pipeline-equivalence guarantee needs — what a
+//! worker computes is bit-for-bit what the leader selects on.
+
+use std::io::Cursor;
+
+use obftf::coordinator::proto::{read_frame, Frame, ViewRow, WorkerStats, NO_ID};
+use obftf::data::HostTensor;
+use obftf::testkit::{cases, propcheck};
+
+/// Encode, read back through the stream reader, re-encode, compare.
+fn assert_roundtrip(frame: &Frame) {
+    let bytes = frame.encode();
+    let mut cur = Cursor::new(bytes.clone());
+    let (back, used) = read_frame(&mut cur)
+        .expect("well-formed frame decodes")
+        .expect("frame present");
+    assert_eq!(used, bytes.len(), "{}: wire size mismatch", frame.name());
+    assert_eq!(back.encode(), bytes, "{}: re-encode differs", frame.name());
+    // nothing left in the stream
+    assert!(read_frame(&mut cur).expect("clean EOF").is_none());
+}
+
+#[test]
+fn loss_records_roundtrip_over_awkward_payloads() {
+    propcheck(
+        "proto-loss-records-roundtrip",
+        120,
+        |rng| {
+            let (ids, losses, stamp) = cases::wire_losses(rng);
+            let seq = if rng.below(4) == 0 { u64::MAX } else { rng.below(1 << 30) as u64 };
+            (seq, rng.below(64) as u32, stamp, ids, losses)
+        },
+        |(seq, worker, stamp, ids, losses)| {
+            assert_roundtrip(&Frame::LossRecords {
+                seq: *seq,
+                worker: *worker,
+                stamp: *stamp,
+                ids: ids.clone(),
+                losses: losses.clone(),
+            });
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn score_batch_roundtrips_over_awkward_batches() {
+    propcheck(
+        "proto-score-batch-roundtrip",
+        80,
+        |rng| (rng.below(1 << 20) as u64, cases::wire_batch(rng)),
+        |(seq, batch)| {
+            assert_roundtrip(&Frame::ScoreBatch { seq: *seq, batch: batch.clone() });
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn cache_frames_roundtrip_with_max_version_stamps() {
+    propcheck(
+        "proto-cache-roundtrip",
+        120,
+        |rng| {
+            let (ids, losses, stamp) = cases::wire_losses(rng);
+            let lookup_ids: Vec<u64> = ids
+                .iter()
+                .map(|&id| if id % 7 == 0 { NO_ID } else { id })
+                .collect();
+            let rows: Vec<ViewRow> = losses
+                .iter()
+                .enumerate()
+                .map(|(pos, &loss)| ViewRow { pos: pos as u32, loss, stamp })
+                .collect();
+            let now = if ids.len() % 2 == 0 { u64::MAX } else { stamp };
+            (lookup_ids, rows, now, ids.len() % 3 == 0)
+        },
+        |(ids, rows, now, exact)| {
+            assert_roundtrip(&Frame::CacheLookup {
+                req: 3,
+                now: *now,
+                exact: *exact,
+                ids: ids.clone(),
+            });
+            assert_roundtrip(&Frame::CacheView { req: 3, worker: 1, rows: rows.clone() });
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn param_update_and_stats_roundtrip() {
+    let weights = vec![
+        HostTensor::f32(vec![3, 2], vec![1.0, f32::NAN, -0.0, 2.5, f32::INFINITY, -7.0]).unwrap(),
+        HostTensor::f32(vec![0], vec![]).unwrap(),
+        HostTensor::i32(vec![2], vec![i32::MIN, i32::MAX]).unwrap(),
+    ];
+    assert_roundtrip(&Frame::ParamUpdate { version: u64::MAX, weights });
+    assert_roundtrip(&Frame::Shutdown);
+    assert_roundtrip(&Frame::WorkerStats(WorkerStats {
+        worker: u32::MAX,
+        scored_batches: u64::MAX,
+        scored_rows: 0,
+        recorded_rows: 1,
+        lookups: 2,
+    }));
+}
+
+/// Every strict prefix of a valid frame must be rejected (or report a
+/// clean boundary EOF for the empty prefix) — a dropped pipe mid-frame
+/// can never decode to a wrong frame.
+#[test]
+fn truncated_frames_are_rejected() {
+    let mut rng = obftf::data::Rng::seed_from(0xf4a3);
+    let (ids, losses, stamp) = cases::wire_losses(&mut rng);
+    let frames = vec![
+        Frame::Shutdown,
+        Frame::LossRecords { seq: 1, worker: 0, stamp, ids, losses },
+        Frame::ScoreBatch { seq: 2, batch: cases::wire_batch(&mut rng) },
+        Frame::CacheLookup { req: 1, now: u64::MAX, exact: true, ids: vec![1, NO_ID] },
+        Frame::CacheView {
+            req: 1,
+            worker: 0,
+            rows: vec![ViewRow { pos: 0, loss: 0.5, stamp: u64::MAX }],
+        },
+        Frame::ParamUpdate {
+            version: 0,
+            weights: vec![HostTensor::f32(vec![2], vec![1.0, 2.0]).unwrap()],
+        },
+        Frame::WorkerStats(WorkerStats::default()),
+    ];
+    for frame in &frames {
+        let bytes = frame.encode();
+        let mut empty = Cursor::new(Vec::<u8>::new());
+        assert!(read_frame(&mut empty).expect("boundary EOF is clean").is_none());
+        for cut in 1..bytes.len() {
+            let mut cur = Cursor::new(bytes[..cut].to_vec());
+            assert!(
+                read_frame(&mut cur).is_err(),
+                "{}: prefix of {cut}/{} bytes must be rejected",
+                frame.name(),
+                bytes.len()
+            );
+        }
+    }
+}
+
+/// Flipping the tag byte to garbage, or appending trailing payload
+/// bytes, must be rejected too (the length prefix alone is not trusted).
+#[test]
+fn corrupted_frames_are_rejected() {
+    let frame = Frame::CacheLookup { req: 1, now: 2, exact: false, ids: vec![3] };
+    let bytes = frame.encode();
+    // unknown tag
+    let mut bad = bytes.clone();
+    bad[4] = 250;
+    assert!(read_frame(&mut Cursor::new(bad)).is_err());
+    // bad bool byte
+    let mut bad = bytes.clone();
+    let bool_at = 4 + 1 + 8 + 8; // tag + req + now
+    bad[bool_at] = 7;
+    assert!(read_frame(&mut Cursor::new(bad)).is_err());
+    // payload longer than the frame claims (trailing bytes in body)
+    let mut body = bytes[4..].to_vec();
+    body.push(0);
+    assert!(Frame::decode(&body).is_err());
+    // element count beyond the payload: patch the ids length field
+    let mut bad = bytes;
+    let len_at = 4 + 1 + 8 + 8 + 1; // tag + req + now + exact
+    bad[len_at..len_at + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+    assert!(read_frame(&mut Cursor::new(bad)).is_err());
+}
