@@ -83,42 +83,52 @@ fn pipeline_bench() {
     bench.annotate_last("eval_stall_ms", stall_ms);
     bench.annotate_last("inference_forwards", fleet_fwd);
 
-    // multi-process fleet rows: the same workload over the proc
-    // transport, at one worker and at the sweep's fleet size, so the
-    // thread-vs-proc contrast (stage overlap vs serialization tax)
-    // lands in one JSON
+    // multi-process fleet rows: the same workload over the child-
+    // process transports — pipes (`proc-w*`) and Unix sockets
+    // (`socket-w*`) — at one worker and at the sweep's fleet size, so
+    // the thread-vs-proc contrast (stage overlap vs serialization tax)
+    // and the pipe-vs-socket wire tax land in one JSON
     std::env::set_var("OBFTF_WORKER_BIN", env!("CARGO_BIN_EXE_obftf"));
-    let mut proc_sizes = vec![1usize];
+    let mut fleet_sizes = vec![1usize];
     if workers != 1 {
-        proc_sizes.push(workers);
+        fleet_sizes.push(workers);
     }
-    for pw in proc_sizes {
-        let mut ccfg = cfg.clone();
-        ccfg.pipeline = true;
-        ccfg.pipeline_proc = true;
-        ccfg.pipeline_workers = pw;
-        // the env override wins inside PipelineKnobs::resolve — pin it
-        // to this row's fleet size so the proc-w1 row really runs one
-        // worker even when CI sweeps OBFTF_PIPELINE_WORKERS=4
-        std::env::set_var("OBFTF_PIPELINE_WORKERS", pw.to_string());
-        let mut hit_rate = 0.0f64;
-        let mut stall_ms = 0.0f64;
-        let mut fleet_fwd = 0.0f64;
-        let mut frame_bytes = 0.0f64;
-        bench.run_throughput(&format!("pipeline/proc-w{pw}/mlp"), 0.0, steps as f64, || {
-            let mut p = PipelineTrainer::with_manifest(&ccfg, &manifest).expect("proc pipeline");
-            black_box(p.run().expect("proc pipeline run"));
-            hit_rate = p.cache_stats().hit_rate();
-            stall_ms = p.eval_stall_ms() as f64;
-            fleet_fwd = p.budget.inference_forwards as f64;
-            frame_bytes = p.frame_bytes() as f64;
-        });
-        bench.annotate_last("inference_workers", pw as f64);
-        bench.annotate_last("cache_hit_rate", hit_rate);
-        bench.annotate_last("eval_stall_ms", stall_ms);
-        bench.annotate_last("inference_forwards", fleet_fwd);
-        bench.annotate_last("frame_bytes_per_step", frame_bytes / steps as f64);
+    for (tag, socket) in [("proc", "pipes"), ("socket", "unix")] {
+        // the env override beats the config inside
+        // `PipelineOptions::resolve` — pin both knobs per row so the
+        // proc-w1 row really runs one pipe worker even when CI sweeps
+        // OBFTF_PIPELINE_WORKERS=4 or sets OBFTF_PIPELINE_SOCKET
+        std::env::set_var("OBFTF_PIPELINE_SOCKET", socket);
+        for &pw in &fleet_sizes {
+            let mut ccfg = cfg.clone();
+            ccfg.pipeline = true;
+            ccfg.pipeline_proc = true;
+            if socket != "pipes" {
+                ccfg.pipeline_socket = socket.to_string();
+            }
+            ccfg.pipeline_workers = pw;
+            std::env::set_var("OBFTF_PIPELINE_WORKERS", pw.to_string());
+            let mut hit_rate = 0.0f64;
+            let mut stall_ms = 0.0f64;
+            let mut fleet_fwd = 0.0f64;
+            let mut frame_bytes = 0.0f64;
+            bench.run_throughput(&format!("pipeline/{tag}-w{pw}/mlp"), 0.0, steps as f64, || {
+                let mut p =
+                    PipelineTrainer::with_manifest(&ccfg, &manifest).expect("fleet pipeline");
+                black_box(p.run().expect("fleet pipeline run"));
+                hit_rate = p.cache_stats().hit_rate();
+                stall_ms = p.eval_stall_ms() as f64;
+                fleet_fwd = p.budget.inference_forwards as f64;
+                frame_bytes = p.frame_bytes() as f64;
+            });
+            bench.annotate_last("inference_workers", pw as f64);
+            bench.annotate_last("cache_hit_rate", hit_rate);
+            bench.annotate_last("eval_stall_ms", stall_ms);
+            bench.annotate_last("inference_forwards", fleet_fwd);
+            bench.annotate_last("frame_bytes_per_step", frame_bytes / steps as f64);
+        }
     }
+    std::env::remove_var("OBFTF_PIPELINE_SOCKET");
     std::env::set_var("OBFTF_PIPELINE_WORKERS", workers.to_string());
 
     bench

@@ -5,10 +5,18 @@
 //! Offline note: the `toml`/`serde` crates are unavailable; parsing goes
 //! through [`crate::util::toml_min`], and unknown keys are rejected so
 //! typos fail loudly exactly as `deny_unknown_fields` would.
+//!
+//! Pipeline knobs resolve through [`options::PipelineOptions`] with
+//! CLI > env > config > default precedence — see that module for the
+//! full knob table.
+
+pub mod options;
 
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
+
+pub use options::{PipelineOptions, PipelineOverrides, TransportKind};
 
 use crate::sampling::Method;
 use crate::util::toml_min::{self, TomlValue};
@@ -93,6 +101,26 @@ pub struct TrainConfig {
     /// (`OBFTF_PIPELINE_PROC` overrides; see README "Multi-process
     /// fleet").
     pub pipeline_proc: bool,
+    /// Socket link for the multi-process fleet: "" (stdio pipes),
+    /// "unix" (Unix-domain sockets) or "tcp" (loopback TCP). A
+    /// non-empty value implies the process fleet
+    /// (`OBFTF_PIPELINE_SOCKET` overrides; see README "Socket fleet").
+    pub pipeline_socket: String,
+    /// Shard-owner affinity routing: `ScoreBatch` work goes to the
+    /// worker owning most of the batch's ids, cutting routed
+    /// `LossRecords` traffic (`OBFTF_PIPELINE_AFFINITY` overrides).
+    pub pipeline_affinity: bool,
+    /// Supervised restarts allowed across a fleet run before a worker
+    /// death becomes fatal; 0 = strict fail-fast
+    /// (`OBFTF_PIPELINE_RESTART_LIMIT` overrides).
+    pub pipeline_restart_limit: u32,
+    /// Fleet spawn/connect/handshake/await bound in milliseconds;
+    /// 0 = the built-in 30 s stall timeout (`OBFTF_PROC_TIMEOUT_MS`
+    /// overrides).
+    pub proc_timeout_ms: u64,
+    /// CLI-layer knob overrides (never read from TOML; populated only
+    /// by the `obftf` flag parser — a `Some` beats env and config).
+    pub overrides: PipelineOverrides,
 }
 
 impl Default for TrainConfig {
@@ -127,6 +155,11 @@ impl Default for TrainConfig {
             cache_shards: 0,
             pipeline_sync: false,
             pipeline_proc: false,
+            pipeline_socket: String::new(),
+            pipeline_affinity: true,
+            pipeline_restart_limit: 2,
+            proc_timeout_ms: 0,
+            overrides: PipelineOverrides::default(),
         }
     }
 }
@@ -180,6 +213,13 @@ impl TrainConfig {
             "cache_shards" => self.cache_shards = val.as_usize()?,
             "pipeline_sync" => self.pipeline_sync = val.as_bool()?,
             "pipeline_proc" => self.pipeline_proc = val.as_bool()?,
+            "pipeline_socket" => self.pipeline_socket = val.as_str()?.to_string(),
+            "pipeline_affinity" => self.pipeline_affinity = val.as_bool()?,
+            "pipeline_restart_limit" => {
+                self.pipeline_restart_limit = u32::try_from(val.as_u64()?)
+                    .map_err(|_| anyhow::anyhow!("pipeline_restart_limit too large"))?
+            }
+            "proc_timeout_ms" => self.proc_timeout_ms = val.as_u64()?,
             other => bail!("unknown config key {other:?}"),
         }
         Ok(())
@@ -225,6 +265,13 @@ impl TrainConfig {
         }
         if self.pipeline_proc && !self.pipeline {
             bail!("pipeline_proc requires pipeline = true (it selects the fleet transport)");
+        }
+        if !self.pipeline_socket.is_empty() && !self.pipeline {
+            bail!("pipeline_socket requires pipeline = true (it selects the fleet link)");
+        }
+        match self.pipeline_socket.as_str() {
+            "" | "none" | "pipes" | "unix" | "tcp" => {}
+            other => bail!("unknown pipeline_socket {other:?} (want unix | tcp | none)"),
         }
         match self.flavour.as_str() {
             "auto" | "native" | "pallas" | "jnp" => {}
@@ -334,6 +381,26 @@ epochs = 2
         let mut cfg = TrainConfig::default();
         cfg.pipeline_depth = 0;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn socket_fleet_keys_parse_and_validate() {
+        let cfg = TrainConfig::from_toml_str(
+            "epochs = 0\nstream_steps = 50\npipeline = true\npipeline_socket = \"unix\"\n\
+             pipeline_affinity = false\npipeline_restart_limit = 3\nproc_timeout_ms = 500\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.pipeline_socket, "unix");
+        assert!(!cfg.pipeline_affinity);
+        assert_eq!(cfg.pipeline_restart_limit, 3);
+        assert_eq!(cfg.proc_timeout_ms, 500);
+        assert!(cfg.overrides.is_empty(), "TOML never populates CLI overrides");
+        // socket without pipeline mode is rejected, as is a bogus link
+        assert!(TrainConfig::from_toml_str("pipeline_socket = \"unix\"").is_err());
+        assert!(TrainConfig::from_toml_str(
+            "epochs = 0\nstream_steps = 50\npipeline = true\npipeline_socket = \"smoke\"\n"
+        )
+        .is_err());
     }
 
     #[test]

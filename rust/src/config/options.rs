@@ -1,0 +1,348 @@
+//! The one typed resolution point for every pipeline knob.
+//!
+//! The pipeline's shape used to be scattered across three surfaces —
+//! `OBFTF_PIPELINE_*` environment variables, `TrainConfig` TOML keys,
+//! and ad-hoc CLI flags — each consulted at a different place. This
+//! module folds them into a single builder, [`PipelineOptions`], with
+//! one documented precedence:
+//!
+//! ```text
+//!   CLI flag  >  OBFTF_* env var  >  config file  >  built-in default
+//! ```
+//!
+//! CLI-layer values travel as a [`PipelineOverrides`] (every field
+//! optional) carried on `TrainConfig` — only `main.rs` populates it, so
+//! programmatic callers and benches keep the historical env-over-config
+//! behaviour. `obftf config --print-effective` dumps the resolved
+//! values so a surprising run can be explained without re-reading three
+//! sources.
+//!
+//! | knob | CLI | env | config key | default |
+//! |------|-----|-----|------------|---------|
+//! | workers        | `--pipeline-workers`  | `OBFTF_PIPELINE_WORKERS`  | `pipeline_workers`  | 2 |
+//! | depth          | `--pipeline-depth`    | `OBFTF_PIPELINE_DEPTH`    | `pipeline_depth`    | 4 |
+//! | shards         | (none)                | `OBFTF_PIPELINE_SHARDS`   | `cache_shards`      | 0 = auto |
+//! | sync           | `--pipeline-sync`     | `OBFTF_PIPELINE_SYNC`     | `pipeline_sync`     | false |
+//! | proc fleet     | `--pipeline-proc`     | `OBFTF_PIPELINE_PROC`     | `pipeline_proc`     | false |
+//! | socket link    | `--pipeline-socket`   | `OBFTF_PIPELINE_SOCKET`   | `pipeline_socket`   | "" = pipes |
+//! | affinity       | `--pipeline-affinity` | `OBFTF_PIPELINE_AFFINITY` | `pipeline_affinity` | true |
+//! | restart limit  | `--restart-limit`     | `OBFTF_PIPELINE_RESTART_LIMIT` | `pipeline_restart_limit` | 2 |
+//! | fleet timeout  | (none)                | `OBFTF_PROC_TIMEOUT_MS`   | `proc_timeout_ms`   | 0 = 30 s |
+
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::config::TrainConfig;
+
+/// Which transport carries the inference fleet.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportKind {
+    /// In-process worker threads over a shared sharded cache.
+    Threads,
+    /// `obftf worker` child processes over stdin/stdout pipes.
+    Pipes,
+    /// `obftf worker` child processes over Unix-domain sockets.
+    UnixSocket,
+    /// `obftf worker` child processes over loopback TCP sockets.
+    TcpSocket,
+}
+
+impl TransportKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TransportKind::Threads => "threads",
+            TransportKind::Pipes => "pipes",
+            TransportKind::UnixSocket => "unix-socket",
+            TransportKind::TcpSocket => "tcp-socket",
+        }
+    }
+
+    /// True for the multi-process transports (child `obftf worker`
+    /// fleet with distributed shard ownership).
+    pub fn is_fleet(&self) -> bool {
+        !matches!(self, TransportKind::Threads)
+    }
+}
+
+/// CLI-layer knob values, every field optional. Populated only by the
+/// `obftf` binary's flag parser and carried on [`TrainConfig`]; a
+/// `Some` here beats both the environment and the config file.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PipelineOverrides {
+    pub workers: Option<usize>,
+    pub depth: Option<usize>,
+    pub shards: Option<usize>,
+    pub sync: Option<bool>,
+    pub proc: Option<bool>,
+    /// Socket link: "unix" | "tcp" | "" (pipes).
+    pub socket: Option<String>,
+    pub affinity: Option<bool>,
+    pub restart_limit: Option<u32>,
+    pub timeout_ms: Option<u64>,
+}
+
+impl PipelineOverrides {
+    pub fn is_empty(&self) -> bool {
+        *self == PipelineOverrides::default()
+    }
+}
+
+/// Fully-resolved pipeline shape: what the staged pipeline actually
+/// runs with after CLI > env > config > default resolution.
+#[derive(Clone, Copy, Debug)]
+pub struct PipelineOptions {
+    /// Inference-fleet workers (threads, or child processes for fleet
+    /// transports).
+    pub workers: usize,
+    /// Batches the fleet may score ahead of the training stage (async
+    /// mode; sync mode pins this to 0).
+    pub depth: usize,
+    /// Loss-cache lock stripes (fleet transports: one owned shard set
+    /// per worker, so this equals `workers`).
+    pub shards: usize,
+    /// Synchronous handoffs — the bit-identical oracle mode.
+    pub sync: bool,
+    /// Which transport carries the fleet.
+    pub transport: TransportKind,
+    /// Shard-owner affinity routing for `ScoreBatch` submissions.
+    pub affinity: bool,
+    /// Supervised restarts allowed before a worker death is fatal.
+    pub restart_limit: u32,
+    /// Max accepted loss age in parameter versions (resolved from the
+    /// same auto window the serial trainer uses).
+    pub max_age: u64,
+    /// Fleet spawn/connect/handshake/await bound.
+    pub timeout: Duration,
+}
+
+fn env_usize(key: &str) -> Option<usize> {
+    std::env::var(key).ok().and_then(|v| v.parse().ok())
+}
+
+fn env_u32(key: &str) -> Option<u32> {
+    std::env::var(key).ok().and_then(|v| v.parse().ok())
+}
+
+fn env_u64(key: &str) -> Option<u64> {
+    std::env::var(key).ok().and_then(|v| v.parse().ok())
+}
+
+fn env_bool(key: &str) -> Option<bool> {
+    std::env::var(key)
+        .ok()
+        .map(|v| matches!(v.trim(), "1" | "true" | "yes" | "on"))
+}
+
+fn env_str(key: &str) -> Option<String> {
+    std::env::var(key).ok()
+}
+
+/// Parse a socket-link name ("", "none", "pipes" → no socket).
+fn socket_kind(s: &str) -> Result<Option<TransportKind>> {
+    match s.trim() {
+        "" | "none" | "pipes" => Ok(None),
+        "unix" => Ok(Some(TransportKind::UnixSocket)),
+        "tcp" => Ok(Some(TransportKind::TcpSocket)),
+        other => bail!("unknown pipeline socket mode {other:?} (want unix | tcp | none)"),
+    }
+}
+
+impl PipelineOptions {
+    /// Resolve every knob with CLI > env > config > default precedence
+    /// (config values already carry the built-in defaults).
+    /// `train_len`/`batch` size the auto `max_age`: two epochs' worth
+    /// of steps, exactly like the serial trainer's `reuse_losses`
+    /// window.
+    pub fn resolve(cfg: &TrainConfig, train_len: usize, batch: usize) -> Result<PipelineOptions> {
+        let ov = &cfg.overrides;
+        let workers = ov
+            .workers
+            .or_else(|| env_usize("OBFTF_PIPELINE_WORKERS"))
+            .unwrap_or(cfg.pipeline_workers)
+            .max(1);
+        let depth = ov
+            .depth
+            .or_else(|| env_usize("OBFTF_PIPELINE_DEPTH"))
+            .unwrap_or(cfg.pipeline_depth)
+            .max(1);
+        let sync = ov
+            .sync
+            .or_else(|| env_bool("OBFTF_PIPELINE_SYNC"))
+            .unwrap_or(cfg.pipeline_sync);
+        let proc = ov
+            .proc
+            .or_else(|| env_bool("OBFTF_PIPELINE_PROC"))
+            .unwrap_or(cfg.pipeline_proc);
+        let socket = ov
+            .socket
+            .clone()
+            .or_else(|| env_str("OBFTF_PIPELINE_SOCKET"))
+            .unwrap_or_else(|| cfg.pipeline_socket.clone());
+        // a socket link implies the multi-process fleet
+        let transport = match socket_kind(&socket)? {
+            Some(k) => k,
+            None if proc => TransportKind::Pipes,
+            None => TransportKind::Threads,
+        };
+        let shards_cfg = ov
+            .shards
+            .or_else(|| env_usize("OBFTF_PIPELINE_SHARDS"))
+            .unwrap_or(cfg.cache_shards);
+        let shards = if transport.is_fleet() {
+            // distributed ownership: exactly one shard set per worker
+            workers
+        } else if shards_cfg == 0 {
+            (workers * 2).clamp(4, 16)
+        } else {
+            shards_cfg
+        };
+        let affinity = ov
+            .affinity
+            .or_else(|| env_bool("OBFTF_PIPELINE_AFFINITY"))
+            .unwrap_or(cfg.pipeline_affinity);
+        let restart_limit = ov
+            .restart_limit
+            .or_else(|| env_u32("OBFTF_PIPELINE_RESTART_LIMIT"))
+            .unwrap_or(cfg.pipeline_restart_limit);
+        let timeout_ms = ov
+            .timeout_ms
+            .or_else(|| env_u64("OBFTF_PROC_TIMEOUT_MS"))
+            .unwrap_or(cfg.proc_timeout_ms);
+        let timeout = if timeout_ms > 0 {
+            Duration::from_millis(timeout_ms)
+        } else {
+            crate::coordinator::ipc::STALL_TIMEOUT
+        };
+        let max_age = if cfg.loss_max_age > 0 {
+            cfg.loss_max_age
+        } else {
+            2 * train_len.div_ceil(batch.max(1)) as u64
+        };
+        Ok(PipelineOptions {
+            workers,
+            depth,
+            shards,
+            sync,
+            transport,
+            affinity,
+            restart_limit,
+            max_age,
+            timeout,
+        })
+    }
+
+    /// Human-readable dump for `obftf config --print-effective`:
+    /// one `key = value` line per resolved knob. `max_age` prints
+    /// "auto" when the config left it 0 and no dataset is at hand to
+    /// size the window.
+    pub fn effective_lines(&self, max_age_auto: bool) -> Vec<String> {
+        vec![
+            format!("pipeline_workers = {}", self.workers),
+            format!("pipeline_depth = {}", self.depth),
+            format!("cache_shards = {}", self.shards),
+            format!("pipeline_sync = {}", self.sync),
+            format!("pipeline_transport = {}", self.transport.as_str()),
+            format!("pipeline_affinity = {}", self.affinity),
+            format!("pipeline_restart_limit = {}", self.restart_limit),
+            format!(
+                "loss_max_age = {}",
+                if max_age_auto { "auto".to_string() } else { self.max_age.to_string() }
+            ),
+            format!("proc_timeout_ms = {}", self.timeout.as_millis()),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> TrainConfig {
+        TrainConfig { stream_steps: 10, pipeline: true, ..Default::default() }
+    }
+
+    #[test]
+    fn defaults_resolve_to_threads_with_affinity_and_restart_budget() {
+        let o = PipelineOptions::resolve(&base(), 64, 8).unwrap();
+        assert_eq!(o.transport, TransportKind::Threads);
+        assert!(!o.transport.is_fleet());
+        assert_eq!(o.workers, 2);
+        assert!(o.affinity, "affinity routing defaults on");
+        assert_eq!(o.restart_limit, 2, "elastic by default");
+        assert_eq!(o.max_age, 2 * 8, "two epochs of 64/8 steps");
+        assert_eq!(o.timeout, crate::coordinator::ipc::STALL_TIMEOUT);
+    }
+
+    #[test]
+    fn socket_config_implies_fleet_transport() {
+        let mut cfg = base();
+        cfg.pipeline_socket = "unix".into();
+        let o = PipelineOptions::resolve(&cfg, 64, 8).unwrap();
+        assert_eq!(o.transport, TransportKind::UnixSocket);
+        assert!(o.transport.is_fleet());
+        assert_eq!(o.shards, o.workers, "one owned shard set per worker");
+        cfg.pipeline_socket = "tcp".into();
+        let o = PipelineOptions::resolve(&cfg, 64, 8).unwrap();
+        assert_eq!(o.transport, TransportKind::TcpSocket);
+        cfg.pipeline_socket = "carrier-pigeon".into();
+        assert!(PipelineOptions::resolve(&cfg, 64, 8).is_err());
+    }
+
+    #[test]
+    fn cli_overrides_beat_config() {
+        let mut cfg = base();
+        cfg.pipeline_workers = 2;
+        cfg.pipeline_socket = "unix".into();
+        cfg.overrides = PipelineOverrides {
+            workers: Some(5),
+            socket: Some("tcp".into()),
+            affinity: Some(false),
+            restart_limit: Some(0),
+            timeout_ms: Some(1234),
+            ..Default::default()
+        };
+        let o = PipelineOptions::resolve(&cfg, 64, 8).unwrap();
+        assert_eq!(o.workers, 5);
+        assert_eq!(o.transport, TransportKind::TcpSocket);
+        assert!(!o.affinity);
+        assert_eq!(o.restart_limit, 0);
+        assert_eq!(o.timeout, Duration::from_millis(1234));
+    }
+
+    /// One env-injection test (process env is shared across a test
+    /// binary's threads, so no other test in this binary asserts on
+    /// the depth knob): the env beats config, and the CLI overrides
+    /// beat the env.
+    #[test]
+    fn env_beats_config_and_cli_beats_env() {
+        std::env::set_var("OBFTF_PIPELINE_DEPTH", "7");
+        let mut cfg = base();
+        cfg.pipeline_depth = 3;
+        let o = PipelineOptions::resolve(&cfg, 64, 8).unwrap();
+        assert_eq!(o.depth, 7, "env beats config");
+        cfg.overrides.depth = Some(1);
+        let o = PipelineOptions::resolve(&cfg, 64, 8).unwrap();
+        assert_eq!(o.depth, 1, "CLI beats env");
+        std::env::remove_var("OBFTF_PIPELINE_DEPTH");
+    }
+
+    #[test]
+    fn effective_lines_cover_every_knob() {
+        let o = PipelineOptions::resolve(&base(), 0, 0).unwrap();
+        let lines = o.effective_lines(true);
+        assert!(lines.iter().any(|l| l == "loss_max_age = auto"));
+        assert!(lines.iter().any(|l| l.starts_with("pipeline_transport = threads")));
+        assert!(lines.iter().any(|l| l.starts_with("pipeline_affinity = true")));
+        for key in [
+            "pipeline_workers",
+            "pipeline_depth",
+            "cache_shards",
+            "pipeline_sync",
+            "pipeline_restart_limit",
+            "proc_timeout_ms",
+        ] {
+            assert!(lines.iter().any(|l| l.starts_with(key)), "missing {key}");
+        }
+    }
+}

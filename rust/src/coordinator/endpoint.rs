@@ -1,0 +1,440 @@
+//! Worker endpoints: the spawn/connect/handshake lifecycle behind the
+//! fleet transport.
+//!
+//! A [`WorkerEndpoint`] is one live link to one `obftf worker` process,
+//! independent of how the bytes travel:
+//!
+//! * [`LinkMode::Pipes`] — the worker's stdin/stdout (the PR-5 wiring);
+//! * [`LinkMode::Unix`]  — a Unix-domain socket the worker listens on;
+//! * [`LinkMode::Tcp`]   — a loopback TCP socket (`TCP_NODELAY`).
+//!
+//! Socket bootstrap: the leader passes `--listen <addr>` (for TCP,
+//! port 0 — the kernel picks), the worker binds, prints one
+//! `OBFTF_LISTEN <addr>` line on stdout and accepts exactly one
+//! connection. The leader reads that line *under the fleet timeout* and
+//! connects, so a hung or crashed listener surfaces as a contextual
+//! error naming the endpoint instead of a silent stall. On every link
+//! the worker's first frame is [`Frame::Hello`] (protocol version +
+//! worker id), which the leader verifies before treating the endpoint
+//! as live.
+//!
+//! [`EndpointSpawner`] captures everything needed to (re)create a
+//! worker's endpoint, which is what makes the supervised-restart policy
+//! in `ipc.rs` possible: respawning worker `w` at generation `g+1` is
+//! one `spawner.spawn(w, g + 1, None)` call.
+//!
+//! [`Frame::Hello`]: crate::coordinator::proto::Frame::Hello
+
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+/// How leader and worker exchange `coordinator::proto` frames.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkMode {
+    /// Child stdin/stdout pipes.
+    Pipes,
+    /// Unix-domain socket (worker listens, leader connects).
+    Unix,
+    /// Loopback TCP socket (worker listens on an ephemeral port).
+    Tcp,
+}
+
+impl LinkMode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            LinkMode::Pipes => "pipes",
+            LinkMode::Unix => "unix socket",
+            LinkMode::Tcp => "tcp socket",
+        }
+    }
+}
+
+/// Everything needed to (re)spawn one worker's endpoint. Cloned into
+/// the fleet transport so dead workers can be respawned mid-run.
+#[derive(Clone, Debug)]
+pub struct EndpointSpawner {
+    pub bin: PathBuf,
+    pub model: String,
+    pub flavour: String,
+    pub workers: usize,
+    pub capacity: usize,
+    pub max_age: u64,
+    pub link: LinkMode,
+    /// Bound on spawn-side waits (socket bootstrap line, connect).
+    pub timeout: Duration,
+}
+
+/// One live leader↔worker link: the child process plus the write half
+/// of its byte stream. The read half is handed to the transport's
+/// reader thread at spawn time.
+pub struct WorkerEndpoint {
+    pub worker: usize,
+    /// Incarnation counter: bumped on every supervised restart so stale
+    /// events from a dead predecessor can be told apart.
+    pub generation: u64,
+    /// Human-readable endpoint name for contextual errors
+    /// (e.g. `worker 1 gen 2 (unix socket /tmp/obftf-….sock)`).
+    pub describe: String,
+    child: Child,
+    writer: Option<Box<dyn Write + Send>>,
+}
+
+impl WorkerEndpoint {
+    /// Write raw frame bytes to the worker.
+    pub fn write_all(&mut self, bytes: &[u8]) -> std::io::Result<()> {
+        match self.writer.as_mut() {
+            Some(w) => w.write_all(bytes),
+            None => Err(std::io::Error::new(
+                std::io::ErrorKind::BrokenPipe,
+                "endpoint input already closed",
+            )),
+        }
+    }
+
+    /// Close the leader→worker half (EOF backup if a Shutdown was lost).
+    pub fn close_input(&mut self) {
+        self.writer.take();
+    }
+
+    /// The child's exit status, for error context.
+    pub fn status_string(&mut self) -> String {
+        match self.child.try_wait() {
+            Ok(Some(s)) => s.to_string(),
+            Ok(None) => "still running".to_string(),
+            Err(_) => "unknown".to_string(),
+        }
+    }
+
+    /// Kill and reap the child (idempotent).
+    pub fn reap(&mut self) {
+        self.writer.take();
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+impl Drop for WorkerEndpoint {
+    fn drop(&mut self) {
+        self.reap();
+    }
+}
+
+impl EndpointSpawner {
+    /// Spawn worker `worker` at incarnation `generation`; returns the
+    /// endpoint (write half) and the read half for a reader thread.
+    /// Socket modes block — bounded by `timeout` — on the worker's
+    /// bootstrap line and the connect; the Hello handshake itself is
+    /// awaited by the transport's event loop.
+    pub fn spawn(
+        &self,
+        worker: usize,
+        generation: u64,
+        fail_after: Option<u64>,
+    ) -> Result<(WorkerEndpoint, Box<dyn Read + Send>)> {
+        let mut cmd = Command::new(&self.bin);
+        cmd.arg("worker")
+            .arg("--worker-id")
+            .arg(worker.to_string())
+            .arg("--workers")
+            .arg(self.workers.to_string())
+            .arg("--model")
+            .arg(&self.model)
+            .arg("--flavour")
+            .arg(&self.flavour)
+            .arg("--capacity")
+            .arg(self.capacity.to_string())
+            .arg("--max-age")
+            .arg(self.max_age.to_string())
+            .stdin(Stdio::piped())
+            .stdout(Stdio::piped());
+        if let Some(k) = fail_after {
+            cmd.arg("--fail-after").arg(k.to_string());
+        }
+        let listen = match self.link {
+            LinkMode::Pipes => None,
+            // generation-unique path: a restarted worker must never
+            // race its dead predecessor's leftover bind
+            LinkMode::Unix => Some(format!(
+                "unix:{}",
+                std::env::temp_dir()
+                    .join(format!(
+                        "obftf-{}-w{worker}-g{generation}.sock",
+                        std::process::id()
+                    ))
+                    .display()
+            )),
+            LinkMode::Tcp => Some("tcp:127.0.0.1:0".to_string()),
+        };
+        if let Some(l) = &listen {
+            cmd.arg("--listen").arg(l);
+        }
+        let mut child = cmd.spawn().with_context(|| {
+            format!("spawning pipeline worker {worker} ({})", self.bin.display())
+        })?;
+        let stdin = child.stdin.take().expect("piped stdin");
+        let stdout = child.stdout.take().expect("piped stdout");
+        let describe = |addr: &str| {
+            format!("worker {worker} gen {generation} ({} {addr})", self.link.as_str())
+        };
+        match self.link {
+            LinkMode::Pipes => Ok((
+                WorkerEndpoint {
+                    worker,
+                    generation,
+                    describe: format!("worker {worker} gen {generation} (pipes)"),
+                    child,
+                    writer: Some(Box::new(stdin)),
+                },
+                Box::new(stdout),
+            )),
+            LinkMode::Unix | LinkMode::Tcp => {
+                let deadline = Instant::now() + self.timeout;
+                let requested = listen.expect("socket mode has a listen addr");
+                let addr = match read_bootstrap_line(stdout, deadline) {
+                    Ok(a) => a,
+                    Err(e) => {
+                        let _ = child.kill();
+                        let _ = child.wait();
+                        return Err(e.context(format!(
+                            "connecting to {} (listen {requested})",
+                            describe(&requested)
+                        )));
+                    }
+                };
+                let ep = describe(&addr);
+                match connect(self.link, &addr, deadline) {
+                    Ok((writer, reader)) => Ok((
+                        WorkerEndpoint {
+                            worker,
+                            generation,
+                            describe: ep,
+                            child,
+                            writer: Some(writer),
+                        },
+                        reader,
+                    )),
+                    Err(e) => {
+                        let _ = child.kill();
+                        let _ = child.wait();
+                        Err(e.context(format!("connecting to {ep}")))
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Read the worker's `OBFTF_LISTEN <addr>` stdout line, bounded by
+/// `deadline` (pipes have no read timeout, so the read runs on a helper
+/// thread and the wait goes through a channel).
+fn read_bootstrap_line(stdout: impl Read + Send + 'static, deadline: Instant) -> Result<String> {
+    let (tx, rx) = mpsc::channel::<std::io::Result<String>>();
+    std::thread::Builder::new()
+        .name("obftf-bootstrap-rx".into())
+        .spawn(move || {
+            let mut line = String::new();
+            let r = BufReader::new(stdout).read_line(&mut line).map(|_| line);
+            let _ = tx.send(r);
+        })
+        .context("spawn bootstrap reader thread")?;
+    let remain = deadline.saturating_duration_since(Instant::now());
+    let line = match rx.recv_timeout(remain) {
+        Ok(Ok(line)) => line,
+        Ok(Err(e)) => return Err(e).context("reading socket bootstrap line"),
+        Err(_) => bail!(
+            "timed out after {remain:?} waiting for the worker's \
+             OBFTF_LISTEN bootstrap line"
+        ),
+    };
+    let addr = line
+        .trim()
+        .strip_prefix("OBFTF_LISTEN ")
+        .with_context(|| format!("bad bootstrap line from worker: {line:?}"))?;
+    Ok(addr.to_string())
+}
+
+/// Connect to a worker's listener; returns (write half, read half).
+fn connect(
+    link: LinkMode,
+    addr: &str,
+    deadline: Instant,
+) -> Result<(Box<dyn Write + Send>, Box<dyn Read + Send>)> {
+    match link {
+        LinkMode::Pipes => unreachable!("pipes endpoints do not connect"),
+        LinkMode::Unix => {
+            let path = addr.strip_prefix("unix:").unwrap_or(addr);
+            // the worker binds before printing the line, so the first
+            // attempt normally succeeds; retry briefly anyway in case
+            // the filesystem view lags the print
+            let stream = loop {
+                match UnixStream::connect(path) {
+                    Ok(s) => break s,
+                    Err(e) => {
+                        if Instant::now() >= deadline {
+                            return Err(e)
+                                .with_context(|| format!("connect to unix socket {path}"));
+                        }
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                }
+            };
+            let writer = stream.try_clone().context("clone unix stream")?;
+            Ok((Box::new(writer), Box::new(stream)))
+        }
+        LinkMode::Tcp => {
+            let host = addr.strip_prefix("tcp:").unwrap_or(addr);
+            let sock: std::net::SocketAddr = host
+                .parse()
+                .with_context(|| format!("bad tcp address {host:?}"))?;
+            let remain = deadline
+                .saturating_duration_since(Instant::now())
+                .max(Duration::from_millis(1));
+            let stream = TcpStream::connect_timeout(&sock, remain)
+                .with_context(|| format!("connect to tcp socket {host}"))?;
+            stream.set_nodelay(true).context("TCP_NODELAY")?;
+            let writer = stream.try_clone().context("clone tcp stream")?;
+            Ok((Box::new(writer), Box::new(stream)))
+        }
+    }
+}
+
+/// Worker-side socket serving: bind `--listen <addr>`, print the
+/// `OBFTF_LISTEN` bootstrap line, accept exactly one leader connection
+/// and run the worker protocol loop over it.
+pub fn serve_worker(cfg: &crate::coordinator::ipc::WorkerConfig, listen: &str) -> Result<()> {
+    if let Some(path) = listen.strip_prefix("unix:") {
+        // a stale path from a crashed predecessor would fail the bind
+        let _ = std::fs::remove_file(path);
+        let listener =
+            UnixListener::bind(path).with_context(|| format!("binding unix socket {path}"))?;
+        announce(&format!("unix:{path}"))?;
+        let (stream, _) = listener
+            .accept()
+            .with_context(|| format!("accepting leader on unix socket {path}"))?;
+        // connected: the filesystem name has done its job
+        let _ = std::fs::remove_file(path);
+        let input = BufReader::new(stream.try_clone().context("clone unix stream")?);
+        let output = BufWriter::new(stream);
+        crate::coordinator::ipc::run_worker(cfg, input, output)
+    } else {
+        let host = listen.strip_prefix("tcp:").unwrap_or(listen);
+        let listener =
+            TcpListener::bind(host).with_context(|| format!("binding tcp socket {host}"))?;
+        let local = listener.local_addr().context("tcp local_addr")?;
+        announce(&format!("tcp:{local}"))?;
+        let (stream, _) = listener
+            .accept()
+            .with_context(|| format!("accepting leader on tcp socket {local}"))?;
+        stream.set_nodelay(true).context("TCP_NODELAY")?;
+        let input = BufReader::new(stream.try_clone().context("clone tcp stream")?);
+        let output = BufWriter::new(stream);
+        crate::coordinator::ipc::run_worker(cfg, input, output)
+    }
+}
+
+fn announce(addr: &str) -> Result<()> {
+    use std::io::Write as _;
+    let mut out = std::io::stdout().lock();
+    writeln!(out, "OBFTF_LISTEN {addr}").context("writing bootstrap line")?;
+    out.flush().context("flushing bootstrap line")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn link_mode_names() {
+        assert_eq!(LinkMode::Pipes.as_str(), "pipes");
+        assert_eq!(LinkMode::Unix.as_str(), "unix socket");
+        assert_eq!(LinkMode::Tcp.as_str(), "tcp socket");
+    }
+
+    #[test]
+    fn bootstrap_line_parses_and_times_out() {
+        let ok: &[u8] = b"OBFTF_LISTEN tcp:127.0.0.1:4312\n";
+        let addr =
+            read_bootstrap_line(ok, Instant::now() + Duration::from_secs(1)).unwrap();
+        assert_eq!(addr, "tcp:127.0.0.1:4312");
+        let bad: &[u8] = b"something else\n";
+        let err = read_bootstrap_line(bad, Instant::now() + Duration::from_secs(1))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("bad bootstrap line"), "{err:#}");
+        // a reader that never produces the line hits the deadline
+        let (never_tx, never_rx) = std::sync::mpsc::channel::<u8>();
+        struct Never(std::sync::mpsc::Receiver<u8>);
+        impl Read for Never {
+            fn read(&mut self, _b: &mut [u8]) -> std::io::Result<usize> {
+                let _ = self.0.recv(); // blocks until the sender drops
+                Ok(0)
+            }
+        }
+        let err = read_bootstrap_line(
+            Never(never_rx),
+            Instant::now() + Duration::from_millis(50),
+        )
+        .unwrap_err();
+        drop(never_tx);
+        assert!(format!("{err:#}").contains("timed out"), "{err:#}");
+    }
+
+    /// The full socket bootstrap, hermetically: a thread plays the
+    /// worker (bind → announce-style handoff → accept), the test plays
+    /// the leader (connect), and one byte crosses each way.
+    #[test]
+    fn unix_connect_roundtrip() {
+        let path = std::env::temp_dir().join(format!("obftf-test-{}.sock", std::process::id()));
+        let path_s = path.display().to_string();
+        let listener = UnixListener::bind(&path).unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let mut b = [0u8; 1];
+            s.read_exact(&mut b).unwrap();
+            s.write_all(&[b[0] + 1]).unwrap();
+        });
+        let (mut w, mut r) = connect(
+            LinkMode::Unix,
+            &format!("unix:{path_s}"),
+            Instant::now() + Duration::from_secs(2),
+        )
+        .unwrap();
+        w.write_all(&[41]).unwrap();
+        w.flush().unwrap();
+        let mut b = [0u8; 1];
+        r.read_exact(&mut b).unwrap();
+        assert_eq!(b[0], 42);
+        server.join().unwrap();
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn tcp_connect_roundtrip() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let mut b = [0u8; 1];
+            s.read_exact(&mut b).unwrap();
+            s.write_all(&[b[0] * 2]).unwrap();
+        });
+        let (mut w, mut r) = connect(
+            LinkMode::Tcp,
+            &format!("tcp:{addr}"),
+            Instant::now() + Duration::from_secs(2),
+        )
+        .unwrap();
+        w.write_all(&[21]).unwrap();
+        w.flush().unwrap();
+        let mut b = [0u8; 1];
+        r.read_exact(&mut b).unwrap();
+        assert_eq!(b[0], 42);
+        server.join().unwrap();
+    }
+}

@@ -10,29 +10,44 @@
 //!   [`ShardedLossCache`], weights sync through a [`ParamStore`]. This
 //!   is the PR-3 pipeline unchanged — the degenerate single-process
 //!   case of the sharded-ownership protocol.
-//! * [`ProcTransport`] — the fleet as *child processes* (`obftf
-//!   worker`) over stdin/stdout pipes speaking the typed frames of
-//!   [`crate::coordinator::proto`]. Each worker **owns** the loss-cache
-//!   shards `id % n_workers == worker_id`: it records its own scores
-//!   locally, receives routed rows for ids it owns when another worker
-//!   scored them, and serves the leader's `CacheLookup` fan-outs. The
-//!   leader holds no loss state at all — freshness classification runs
-//!   over merged `CacheView`s, under the same rules as the in-memory
-//!   cache (`exact` stamp in sync mode, `max_age` window otherwise).
+//! * [`FleetTransport`] — the fleet as *child processes* (`obftf
+//!   worker`) speaking the typed frames of [`crate::coordinator::proto`]
+//!   over a per-worker [`WorkerEndpoint`]: stdin/stdout pipes, a
+//!   Unix-domain socket, or loopback TCP ([`LinkMode`]). Each worker
+//!   **owns** the loss-cache shards `id % n_workers == worker_id`: it
+//!   records its own scores locally, receives routed rows for ids it
+//!   owns when another worker scored them, and serves the leader's
+//!   `CacheLookup` fan-outs. The leader holds no loss state at all —
+//!   freshness classification runs over merged `CacheView`s, under the
+//!   same rules as the in-memory cache (`exact` stamp in sync mode,
+//!   `max_age` window otherwise).
 //!
-//! Failure policy is fail-fast: a dedicated reader thread per child
-//! turns pipe EOF or a decode error into a `Dead` event, and every
-//! blocking leader wait carries a timeout, so a worker dying
-//! mid-pipeline surfaces as a contextual error (worker id, child exit
-//! status, last frame sent) instead of a hang. `worker_restarts` is
-//! plumbed through the stats for a future supervised-restart policy and
-//! is always 0 under fail-fast.
+//! Every endpoint handshakes: the worker's first frame is a
+//! version-checked `Hello`, awaited under the fleet timeout, so a wrong
+//! binary or a hung listener fails with a contextual error naming the
+//! endpoint. A dedicated reader thread per worker turns link EOF or a
+//! decode error into a generation-tagged `Dead` event.
+//!
+//! Failure policy is *supervised restart* (`restart_limit` relaunches
+//! allowed; 0 = strict fail-fast): a dead worker is respawned, its
+//! replacement handshakes, receives the current weights, has its
+//! loss-cache shard re-warmed from the leader's routed-row journal
+//! (every `LossRecords` reply passes the leader, which is the routing
+//! hop), and gets its in-flight `ScoreBatch` work re-issued. Deaths
+//! beyond the budget — or during shutdown — surface as a contextual
+//! error (worker id, endpoint, child exit status, last frame sent)
+//! instead of a hang. `worker_restarts` counts the relaunches.
+//!
+//! `ScoreBatch` routing is shard-owner **affinity** by default: a batch
+//! goes to the alive worker owning the most of its ids (ties to the
+//! lowest index), which cuts the routed-`LossRecords` share of
+//! `frame_bytes_per_step`; `affinity = false` restores round-robin.
 //!
 //! [`Session`]: crate::runtime::Session
 
+use std::collections::{BTreeMap, HashMap};
 use std::io::{BufReader, Read, Write};
 use std::path::PathBuf;
-use std::process::{Child, ChildStdin, Command, Stdio};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
@@ -40,6 +55,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::coordinator::endpoint::{EndpointSpawner, LinkMode, WorkerEndpoint};
 use crate::coordinator::loss_cache::{
     is_fresh, CacheProbe, CacheStats, LossCache, ShardedLossCache, NEVER,
 };
@@ -83,7 +99,7 @@ pub struct FleetSummary {
     pub workers: Vec<WorkerStats>,
     /// Workers alive when shutdown began.
     pub workers_alive: usize,
-    /// Workers relaunched mid-run (always 0 under fail-fast).
+    /// Workers relaunched mid-run by the supervised-restart policy.
     pub restarts: u64,
     /// Aggregate lookup-granularity cache counters.
     pub cache: CacheStats,
@@ -116,7 +132,8 @@ pub trait Transport {
     fn workers_alive(&self) -> usize;
     /// Per-worker scored-batch counts so far.
     fn worker_scored(&self) -> Vec<u64>;
-    /// Workers relaunched so far (0 under the fail-fast policy).
+    /// Workers relaunched so far by the supervised-restart policy
+    /// (0 for transports that cannot restart).
     fn restarts(&self) -> u64 {
         0
     }
@@ -445,11 +462,11 @@ fn inference_worker(ctx: WorkerCtx) {
 }
 
 // ---------------------------------------------------------------------------
-// Multi-process transport (child workers over stdin/stdout pipes)
+// Multi-process fleet transport (child workers over pipes or sockets)
 // ---------------------------------------------------------------------------
 
-/// Construction parameters for [`ProcTransport::spawn`].
-pub struct ProcSpec {
+/// Construction parameters for [`FleetTransport::spawn`].
+pub struct FleetSpec {
     pub model: String,
     pub flavour: Flavour,
     pub workers: usize,
@@ -459,11 +476,21 @@ pub struct ProcSpec {
     /// Worker binary; `None` resolves `$OBFTF_WORKER_BIN`, then the
     /// current executable (correct when the leader *is* `obftf`).
     pub worker_bin: Option<PathBuf>,
-    /// Leader-side recv timeout (stall + liveness bound).
+    /// Leader-side recv timeout — also bounds spawn, socket connect and
+    /// the Hello handshake (stall + liveness bound).
     pub timeout: Duration,
     /// Test-only fault injection: worker `w` crashes (exit 17, no
-    /// handshake) after handling `fail_after[w]` frames.
+    /// handshake) after handling `fail_after[w]` frames. Never
+    /// re-injected into supervised-restart replacements.
     pub fail_after: Vec<Option<u64>>,
+    /// How frames travel: stdio pipes, Unix socket, or loopback TCP.
+    pub link: LinkMode,
+    /// Shard-owner affinity routing for `ScoreBatch` (false =
+    /// round-robin).
+    pub affinity: bool,
+    /// Supervised restarts allowed across the fleet before a worker
+    /// death becomes fatal (0 = strict fail-fast).
+    pub restart_limit: u32,
 }
 
 /// Test-only fault injection via the environment:
@@ -485,7 +512,7 @@ pub fn fail_after_from_env(workers: usize) -> Vec<Option<u64>> {
     out
 }
 
-impl ProcSpec {
+impl FleetSpec {
     fn resolve_bin(&self) -> Result<PathBuf> {
         if let Some(p) = &self.worker_bin {
             return Ok(p.clone());
@@ -497,27 +524,55 @@ impl ProcSpec {
     }
 }
 
+/// Fleet events are generation-tagged so a dead incarnation's trailing
+/// frames or EOF cannot be attributed to its restarted successor.
 enum Event {
-    Frame(usize, Frame),
-    Dead(usize, String),
+    Frame(usize, u64, Frame),
+    Dead(usize, u64, String),
 }
 
-struct ProcHandle {
-    child: Child,
-    stdin: Option<ChildStdin>,
+/// One worker's live state: its endpoint (process + write half), the
+/// reader thread draining its read half, and handshake/liveness flags.
+struct Slot {
+    ep: WorkerEndpoint,
     reader: Option<JoinHandle<()>>,
     alive: bool,
+    /// Version-checked `Hello` received from this incarnation.
+    hello: bool,
     last_sent: &'static str,
 }
 
-/// The multi-process fleet: `obftf worker` children with distributed
-/// loss-cache shard ownership (`id % n_workers`).
-pub struct ProcTransport {
-    procs: Vec<ProcHandle>,
+/// The multi-process fleet: `obftf worker` children (pipes or sockets)
+/// with distributed loss-cache shard ownership (`id % n_workers`) and
+/// supervised restart.
+pub struct FleetTransport {
+    spawner: EndpointSpawner,
+    slots: Vec<Slot>,
     events: mpsc::Receiver<Event>,
+    /// Kept alive so restarted workers' reader threads can attach; the
+    /// event channel never disconnects while the transport lives.
+    event_tx: mpsc::Sender<Event>,
     sync: bool,
     max_age: u64,
     timeout: Duration,
+    affinity: bool,
+    restart_limit: u32,
+    /// Supervised restarts performed so far.
+    restarts: u64,
+    /// Bumped on every restart; an in-flight `CacheLookup` collect
+    /// aborts (and re-issues) when it observes a bump, since the
+    /// replaced worker will never answer the old request.
+    restart_epoch: u64,
+    /// Per-owner journal of every routed/recorded row the leader has
+    /// seen (`id → (loss, stamp)`, newest stamp wins) — the re-warm
+    /// source for a restarted owner's shard.
+    journal: Vec<HashMap<u64, (f32, u64)>>,
+    /// In-flight `ScoreBatch` work: `seq → (worker, batch)`, retired by
+    /// the matching `LossRecords` reply, re-issued on restart.
+    outstanding: BTreeMap<u64, (usize, Arc<Batch>)>,
+    /// Last published `ParamUpdate`, pre-encoded, so a replacement
+    /// worker starts from current weights.
+    last_params: Option<Vec<u8>>,
     next_seq: u64,
     next_req: u64,
     cur_req: u64,
@@ -542,132 +597,209 @@ enum RowClass {
     Fresh(Vec<f32>),
     Stale { min_stamp: u64 },
     Incomplete,
+    /// A restart invalidated the in-flight lookup; re-issue immediately
+    /// (nothing was counted).
+    Retry,
 }
 
-impl ProcTransport {
-    /// Spawn `workers` child processes and their reader threads.
-    pub fn spawn(spec: ProcSpec) -> Result<ProcTransport> {
-        anyhow::ensure!(spec.workers > 0, "proc transport needs at least one worker");
+impl FleetTransport {
+    /// Spawn `workers` child processes, their reader threads, and await
+    /// every endpoint's version-checked `Hello` handshake.
+    pub fn spawn(spec: FleetSpec) -> Result<FleetTransport> {
+        anyhow::ensure!(spec.workers > 0, "fleet transport needs at least one worker");
         let bin = spec.resolve_bin()?;
-        let (tx, events) = mpsc::channel::<Event>();
-        let bytes_in = Arc::new(AtomicU64::new(0));
-        let mut procs = Vec::with_capacity(spec.workers);
-        for w in 0..spec.workers {
-            let mut cmd = Command::new(&bin);
-            cmd.arg("worker")
-                .arg("--worker-id")
-                .arg(w.to_string())
-                .arg("--workers")
-                .arg(spec.workers.to_string())
-                .arg("--model")
-                .arg(&spec.model)
-                .arg("--flavour")
-                .arg(spec.flavour.as_str())
-                .arg("--capacity")
-                .arg(spec.capacity.to_string())
-                .arg("--max-age")
-                .arg(spec.max_age.to_string())
-                .stdin(Stdio::piped())
-                .stdout(Stdio::piped());
-            if let Some(Some(k)) = spec.fail_after.get(w) {
-                cmd.arg("--fail-after").arg(k.to_string());
-            }
-            let mut child = cmd
-                .spawn()
-                .with_context(|| format!("spawning pipeline worker {w} ({})", bin.display()))?;
-            let stdin = child.stdin.take().expect("piped stdin");
-            let stdout = child.stdout.take().expect("piped stdout");
-            let tx = tx.clone();
-            let counter = bytes_in.clone();
-            let reader = std::thread::Builder::new()
-                .name(format!("obftf-proc-rx-{w}"))
-                .spawn(move || {
-                    let mut r = BufReader::new(stdout);
-                    loop {
-                        match proto::read_frame(&mut r) {
-                            Ok(Some((frame, n))) => {
-                                counter.fetch_add(n as u64, Ordering::Relaxed);
-                                if tx.send(Event::Frame(w, frame)).is_err() {
-                                    return;
-                                }
-                            }
-                            Ok(None) => {
-                                let _ =
-                                    tx.send(Event::Dead(w, "stdout closed (worker exited)".into()));
-                                return;
-                            }
-                            Err(e) => {
-                                let _ =
-                                    tx.send(Event::Dead(w, format!("bad frame from worker: {e:#}")));
-                                return;
-                            }
-                        }
-                    }
-                })
-                .context("spawn proc reader thread")?;
-            procs.push(ProcHandle {
-                child,
-                stdin: Some(stdin),
-                reader: Some(reader),
-                alive: true,
-                last_sent: "none",
-            });
-        }
-        drop(tx);
-        Ok(ProcTransport {
-            pending_views: vec![None; spec.workers],
-            shard_rows: vec![CacheStats::default(); spec.workers],
-            scored: vec![0; spec.workers],
-            final_stats: vec![None; spec.workers],
-            procs,
+        let spawner = EndpointSpawner {
+            bin,
+            model: spec.model.clone(),
+            flavour: spec.flavour.as_str().to_string(),
+            workers: spec.workers,
+            capacity: spec.capacity,
+            max_age: spec.max_age,
+            link: spec.link,
+            timeout: spec.timeout,
+        };
+        let (event_tx, events) = mpsc::channel::<Event>();
+        let mut t = FleetTransport {
+            spawner,
+            slots: Vec::with_capacity(spec.workers),
             events,
+            event_tx,
             sync: spec.sync,
             max_age: spec.max_age,
             timeout: spec.timeout,
+            affinity: spec.affinity,
+            restart_limit: spec.restart_limit,
+            restarts: 0,
+            restart_epoch: 0,
+            journal: (0..spec.workers).map(|_| HashMap::new()).collect(),
+            outstanding: BTreeMap::new(),
+            last_params: None,
             next_seq: 0,
             next_req: 0,
             cur_req: 0,
+            pending_views: vec![None; spec.workers],
             agg: CacheStats::default(),
+            shard_rows: vec![CacheStats::default(); spec.workers],
+            scored: vec![0; spec.workers],
             fleet_rows: 0,
             bytes_out: 0,
-            bytes_in,
+            bytes_in: Arc::new(AtomicU64::new(0)),
+            final_stats: vec![None; spec.workers],
             shutting_down: false,
             progress: false,
-        })
+        };
+        for w in 0..spec.workers {
+            let fail = spec.fail_after.get(w).copied().flatten();
+            let slot = t.spawn_slot(w, 0, fail)?;
+            t.slots.push(slot);
+        }
+        for w in 0..spec.workers {
+            t.await_hello(w)?;
+        }
+        Ok(t)
     }
 
-    /// Contextual fail-fast error for a dead/failed worker: id, child
+    /// Spawn one worker incarnation: endpoint (process + link) plus the
+    /// reader thread that turns its frames into generation-tagged
+    /// events.
+    fn spawn_slot(&self, w: usize, generation: u64, fail_after: Option<u64>) -> Result<Slot> {
+        let (ep, stream) = self.spawner.spawn(w, generation, fail_after)?;
+        let tx = self.event_tx.clone();
+        let counter = self.bytes_in.clone();
+        let reader = std::thread::Builder::new()
+            .name(format!("obftf-fleet-rx-{w}-g{generation}"))
+            .spawn(move || {
+                let mut r = BufReader::new(stream);
+                loop {
+                    match proto::read_frame(&mut r) {
+                        Ok(Some((frame, n))) => {
+                            counter.fetch_add(n as u64, Ordering::Relaxed);
+                            if tx.send(Event::Frame(w, generation, frame)).is_err() {
+                                return;
+                            }
+                        }
+                        Ok(None) => {
+                            let _ = tx.send(Event::Dead(
+                                w,
+                                generation,
+                                "link closed (worker exited)".into(),
+                            ));
+                            return;
+                        }
+                        Err(e) => {
+                            let _ = tx.send(Event::Dead(
+                                w,
+                                generation,
+                                format!("bad frame from worker: {e:#}"),
+                            ));
+                            return;
+                        }
+                    }
+                }
+            })
+            .context("spawn fleet reader thread")?;
+        Ok(Slot { ep, reader: Some(reader), alive: true, hello: false, last_sent: "none" })
+    }
+
+    /// Block (bounded by the fleet timeout) until worker `w`'s current
+    /// incarnation has handshaken. Other workers' events are handled
+    /// along the way, including their deaths (supervised recursively).
+    fn await_hello(&mut self, w: usize) -> Result<()> {
+        let deadline = Instant::now() + self.timeout;
+        while !self.slots[w].hello {
+            let what = format!("Hello handshake from {}", self.slots[w].ep.describe);
+            self.recv_deadline(deadline, &what)?;
+        }
+        Ok(())
+    }
+
+    /// Supervised-restart policy for a dead worker: within the restart
+    /// budget, respawn → handshake → republish weights → re-warm the
+    /// owned shard from the journal → re-issue in-flight batches.
+    /// Beyond the budget, or during shutdown, the death is fatal.
+    fn supervise(&mut self, w: usize, reason: &str) -> Result<()> {
+        if self.shutting_down || self.restarts >= u64::from(self.restart_limit) {
+            return Err(self.dead_error(w, reason));
+        }
+        self.restarts += 1;
+        self.restart_epoch += 1;
+        eprintln!(
+            "obftf fleet: {} died ({reason}); supervised restart {} of {}",
+            self.slots[w].ep.describe, self.restarts, self.restart_limit
+        );
+        let generation = self.slots[w].ep.generation + 1;
+        // reap the dead incarnation; its reader exits on EOF, and any
+        // trailing events it already queued carry the old generation
+        self.slots[w].alive = false;
+        self.slots[w].ep.reap();
+        if let Some(h) = self.slots[w].reader.take() {
+            let _ = h.join();
+        }
+        // never re-inject --fail-after into a replacement
+        self.slots[w] = self.spawn_slot(w, generation, None)?;
+        self.await_hello(w)?;
+        if let Some(bytes) = self.last_params.clone() {
+            self.write_raw(w, &bytes, "ParamUpdate")?;
+        }
+        // re-warm the shard stamp-ascending so the newest stamp wins
+        // exactly as it did the first time
+        let mut by_stamp: BTreeMap<u64, (Vec<u64>, Vec<f32>)> = BTreeMap::new();
+        for (&id, &(loss, stamp)) in &self.journal[w] {
+            let e = by_stamp.entry(stamp).or_default();
+            e.0.push(id);
+            e.1.push(loss);
+        }
+        for (stamp, (ids, losses)) in by_stamp {
+            let warm = Frame::LossRecords { seq: u64::MAX, worker: w as u32, stamp, ids, losses };
+            self.write(w, &warm)?;
+        }
+        // re-issue the dead incarnation's in-flight scoring work
+        let replay: Vec<(u64, Arc<Batch>)> = self
+            .outstanding
+            .iter()
+            .filter(|(_, (owner, _))| *owner == w)
+            .map(|(&seq, (_, b))| (seq, b.clone()))
+            .collect();
+        for (seq, batch) in replay {
+            self.write(w, &Frame::ScoreBatch { seq, batch: (*batch).clone() })?;
+        }
+        self.progress = true;
+        Ok(())
+    }
+
+    /// Contextual error for a dead/failed worker: id, endpoint, child
     /// exit status, the last frame the leader sent it.
     fn dead_error(&mut self, w: usize, reason: &str) -> anyhow::Error {
-        self.procs[w].alive = false;
-        let status = match self.procs[w].child.try_wait() {
-            Ok(Some(s)) => s.to_string(),
-            Ok(None) => "still running".to_string(),
-            Err(_) => "unknown".to_string(),
-        };
-        let last = self.procs[w].last_sent;
+        self.slots[w].alive = false;
+        let status = self.slots[w].ep.status_string();
+        let desc = self.slots[w].ep.describe.clone();
+        let last = self.slots[w].last_sent;
         anyhow!(
             "pipeline worker {w} died mid-pipeline: {reason} \
-             (child status: {status}; last frame sent to worker {w}: {last})"
+             (endpoint: {desc}; child status: {status}; \
+             last frame sent to worker {w}: {last})"
         )
     }
 
     fn write_raw(&mut self, w: usize, bytes: &[u8], name: &'static str) -> Result<()> {
-        if !self.procs[w].alive {
+        if !self.slots[w].alive {
             return Err(self.dead_error(w, "refusing to write to dead worker"));
         }
-        let io = {
-            let h = &mut self.procs[w];
-            let stdin = h.stdin.as_mut().expect("stdin open while alive");
-            stdin.write_all(bytes)
-        };
-        match io {
+        match self.slots[w].ep.write_all(bytes) {
             Ok(()) => {
                 self.bytes_out += bytes.len() as u64;
-                self.procs[w].last_sent = name;
+                self.slots[w].last_sent = name;
                 Ok(())
             }
-            Err(e) => Err(self.dead_error(w, &format!("write of {name} frame failed: {e}"))),
+            Err(e) => {
+                // the write found the corpse before the reader thread
+                // did — same policy: supervise within budget. The lost
+                // frame is covered by the restart sequence (ParamUpdate
+                // republish, journal re-warm, outstanding replay) or,
+                // for CacheLookup, by the epoch-bump retry.
+                let reason = format!("write of {name} frame failed: {e}");
+                self.supervise(w, &reason)
+            }
         }
     }
 
@@ -677,14 +809,22 @@ impl ProcTransport {
 
     fn handle_event(&mut self, ev: Event) -> Result<()> {
         match ev {
-            Event::Frame(w, frame) => self.handle_frame(w, frame),
-            Event::Dead(w, reason) => {
+            Event::Frame(w, gen, frame) => {
+                if gen != self.slots[w].ep.generation {
+                    return Ok(()); // trailing frame from a dead incarnation
+                }
+                self.handle_frame(w, frame)
+            }
+            Event::Dead(w, gen, reason) => {
+                if gen != self.slots[w].ep.generation {
+                    return Ok(()); // the predecessor's EOF, already handled
+                }
                 if self.shutting_down && self.final_stats[w].is_some() {
                     // normal EOF after the stats handshake
-                    self.procs[w].alive = false;
+                    self.slots[w].alive = false;
                     Ok(())
                 } else {
-                    Err(self.dead_error(w, &reason))
+                    self.supervise(w, &reason)
                 }
             }
         }
@@ -692,16 +832,45 @@ impl ProcTransport {
 
     fn handle_frame(&mut self, w: usize, frame: Frame) -> Result<()> {
         match frame {
-            Frame::LossRecords { stamp, ids, losses, .. } => {
+            Frame::Hello { proto: version, worker } => {
+                if version != proto::PROTO_VERSION {
+                    return Err(self.dead_error(
+                        w,
+                        &format!(
+                            "protocol version mismatch: worker speaks v{version}, \
+                             leader speaks v{}",
+                            proto::PROTO_VERSION
+                        ),
+                    ));
+                }
+                if worker as usize != w {
+                    return Err(self
+                        .dead_error(w, &format!("handshake id mismatch: announced {worker}")));
+                }
+                self.slots[w].hello = true;
+                Ok(())
+            }
+            Frame::LossRecords { seq, stamp, ids, losses, .. } => {
                 self.scored[w] += 1;
                 self.fleet_rows += ids.len() as u64;
                 self.progress = true;
+                if seq != u64::MAX {
+                    self.outstanding.remove(&seq);
+                }
+                // journal every row under its owner (newest stamp wins)
+                // so a restarted owner's shard can be re-warmed
+                let n = self.slots.len() as u64;
+                for (&id, &l) in ids.iter().zip(&losses) {
+                    let e = self.journal[(id % n) as usize].entry(id).or_insert((l, stamp));
+                    if stamp >= e.1 {
+                        *e = (l, stamp);
+                    }
+                }
                 if self.shutting_down {
                     return Ok(()); // late score reply: absorb, don't route
                 }
                 // route foreign rows to their shard owners
-                let n = self.procs.len() as u64;
-                for owner in 0..self.procs.len() {
+                for owner in 0..self.slots.len() {
                     if owner == w {
                         continue; // scorer recorded its own rows locally
                     }
@@ -764,8 +933,8 @@ impl ProcTransport {
                 "pipeline timed out after {:?} waiting for {what} \
                  (workers alive: {}/{})",
                 self.timeout,
-                self.procs.iter().filter(|p| p.alive).count(),
-                self.procs.len()
+                self.slots.iter().filter(|s| s.alive).count(),
+                self.slots.len()
             );
         }
         match self.events.recv_timeout(remain) {
@@ -774,8 +943,8 @@ impl ProcTransport {
                 "pipeline timed out after {:?} waiting for {what} \
                  (workers alive: {}/{})",
                 self.timeout,
-                self.procs.iter().filter(|p| p.alive).count(),
-                self.procs.len()
+                self.slots.iter().filter(|s| s.alive).count(),
+                self.slots.len()
             ),
             Err(mpsc::RecvTimeoutError::Disconnected) => {
                 bail!("all pipeline workers terminated while waiting for {what}")
@@ -785,8 +954,14 @@ impl ProcTransport {
 
     /// One `CacheLookup` fan-out + merged-view freshness classification
     /// (the distributed analogue of `ShardedLossCache::scan`).
+    ///
+    /// If a supervised restart fires mid-collect (the respawned worker
+    /// never saw this request), the lookup aborts with
+    /// [`RowClass::Retry`] so the caller re-issues it against the new
+    /// incarnation instead of waiting out the timeout.
     fn lookup_once(&mut self, batch: &Batch, now: u64, count: bool) -> Result<RowClass> {
-        let n = self.procs.len();
+        let n = self.slots.len();
+        let epoch0 = self.restart_epoch;
         self.next_req += 1;
         let req = self.next_req;
         self.cur_req = req;
@@ -803,10 +978,16 @@ impl ProcTransport {
         let bytes = lookup.encode();
         for w in 0..n {
             self.write_raw(w, &bytes, "CacheLookup")?;
+            if self.restart_epoch != epoch0 {
+                return Ok(RowClass::Retry);
+            }
         }
         let deadline = Instant::now() + self.timeout;
         while self.pending_views.iter().any(|v| v.is_none()) {
             self.recv_deadline(deadline, "cache views")?;
+            if self.restart_epoch != epoch0 {
+                return Ok(RowClass::Retry);
+            }
         }
         // merge views into per-row entries
         let rows = wire_ids.len();
@@ -872,36 +1053,68 @@ impl ProcTransport {
         })
     }
 
-    fn submit_inner(&mut self, batch: &Batch) -> Result<()> {
-        let w = (self.next_seq % self.procs.len() as u64) as usize;
+    /// Pick the scorer for a batch. With affinity routing (the
+    /// default), that is the shard owner of the most batch ids —
+    /// its rows are recorded locally instead of routed, cutting
+    /// `LossRecords` re-send traffic. Ties go to the lowest worker
+    /// index; batches with no valid ids fall back to round-robin.
+    fn pick_scorer(&self, batch: &Batch) -> usize {
+        let n = self.slots.len();
+        if !self.affinity || n == 1 {
+            return (self.next_seq % n as u64) as usize;
+        }
+        let mut counts = vec![0u64; n];
+        for (&id, &m) in batch.ids.iter().zip(&batch.valid_mask) {
+            if m > 0.0 && id != usize::MAX {
+                counts[(id as u64 % n as u64) as usize] += 1;
+            }
+        }
+        let mut best = (self.next_seq % n as u64) as usize;
+        let mut best_count = 0u64;
+        for (w, &c) in counts.iter().enumerate() {
+            if c > best_count {
+                best = w;
+                best_count = c;
+            }
+        }
+        best
+    }
+
+    fn submit_inner(&mut self, batch: &Arc<Batch>) -> Result<()> {
+        let w = self.pick_scorer(batch);
         let seq = self.next_seq;
         self.next_seq += 1;
-        self.write(w, &Frame::ScoreBatch { seq, batch: batch.clone() })
+        // track before writing: if the write triggers a supervised
+        // restart, the replay loop must already see this batch
+        self.outstanding.insert(seq, (w, batch.clone()));
+        self.write(w, &Frame::ScoreBatch { seq, batch: (**batch).clone() })
     }
 
     fn reap(&mut self) {
-        for p in &mut self.procs {
-            p.stdin.take(); // close the pipe: EOF backup in case Shutdown was lost
-            let _ = p.child.kill();
-            let _ = p.child.wait();
-            if let Some(h) = p.reader.take() {
+        self.shutting_down = true;
+        for s in &mut self.slots {
+            s.ep.reap();
+            if let Some(h) = s.reader.take() {
                 let _ = h.join();
             }
-            p.alive = false;
+            s.alive = false;
         }
     }
 }
 
-impl Transport for ProcTransport {
+impl Transport for FleetTransport {
     fn n_workers(&self) -> usize {
-        self.procs.len()
+        self.slots.len()
     }
 
     fn publish(&mut self, version: u64, weights: &Arc<Vec<HostTensor>>) -> Result<()> {
         // runs once per training step: encode straight from the
         // borrowed snapshot instead of cloning it into a Frame
         let bytes = proto::encode_param_update(version, weights.as_slice());
-        for w in 0..self.procs.len() {
+        // cache before writing so a restart fired *by* one of these
+        // writes already republishes this snapshot
+        self.last_params = Some(bytes.clone());
+        for w in 0..self.slots.len() {
             self.write_raw(w, &bytes, "ParamUpdate")?;
         }
         Ok(())
@@ -932,10 +1145,18 @@ impl Transport for ProcTransport {
                         self.submit_inner(batch)?;
                         requeued_for = Some(min_stamp);
                     }
+                    counted = true;
                 }
-                RowClass::Incomplete => {}
+                RowClass::Incomplete => {
+                    counted = true;
+                }
+                RowClass::Retry => {
+                    // a supervised restart aborted the lookup before it
+                    // classified (or counted) anything — re-issue it
+                    // against the new incarnation; `progress` is set by
+                    // the restart, so the loop retries immediately
+                }
             }
-            counted = true;
             // a LossRecords handled during the lookup's own collect means
             // rows were routed after some owners had already answered —
             // re-lookup immediately; otherwise block for fleet progress
@@ -950,11 +1171,15 @@ impl Transport for ProcTransport {
     }
 
     fn workers_alive(&self) -> usize {
-        self.procs.iter().filter(|p| p.alive).count()
+        self.slots.iter().filter(|s| s.alive).count()
     }
 
     fn worker_scored(&self) -> Vec<u64> {
         self.scored.clone()
+    }
+
+    fn restarts(&self) -> u64 {
+        self.restarts
     }
 
     fn frame_bytes(&self) -> u64 {
@@ -964,10 +1189,10 @@ impl Transport for ProcTransport {
     fn shutdown(&mut self) -> Result<FleetSummary> {
         self.shutting_down = true;
         let alive_at_entry = self.workers_alive();
-        let n = self.procs.len();
+        let n = self.slots.len();
         let mut first_err: Option<anyhow::Error> = None;
         for w in 0..n {
-            if self.procs[w].alive {
+            if self.slots[w].alive {
                 if let Err(e) = self.write(w, &Frame::Shutdown) {
                     first_err.get_or_insert(e);
                 }
@@ -975,7 +1200,7 @@ impl Transport for ProcTransport {
         }
         let deadline = Instant::now() + self.timeout;
         while first_err.is_none()
-            && (0..n).any(|w| self.procs[w].alive && self.final_stats[w].is_none())
+            && (0..n).any(|w| self.slots[w].alive && self.final_stats[w].is_none())
         {
             if let Err(e) = self.recv_deadline(deadline, "worker stats") {
                 first_err = Some(e);
@@ -997,7 +1222,7 @@ impl Transport for ProcTransport {
         Ok(FleetSummary {
             workers,
             workers_alive: alive_at_entry,
-            restarts: 0,
+            restarts: self.restarts,
             cache: self.agg,
             shard_rows: self.shard_rows.clone(),
             fleet_rows: self.fleet_rows,
@@ -1006,7 +1231,7 @@ impl Transport for ProcTransport {
     }
 }
 
-impl Drop for ProcTransport {
+impl Drop for FleetTransport {
     fn drop(&mut self) {
         self.reap();
     }
@@ -1048,6 +1273,13 @@ pub fn run_worker(cfg: &WorkerConfig, mut input: impl Read, mut output: impl Wri
         cfg.worker_id,
         cfg.n_workers
     );
+    // announce first, before the (possibly slow) session build, so the
+    // leader's version-checked handshake completes promptly
+    proto::write_frame(
+        &mut output,
+        &Frame::Hello { proto: proto::PROTO_VERSION, worker: cfg.worker_id as u32 },
+    )?;
+    output.flush().context("flushing Hello")?;
     let manifest = Manifest::load_or_native(&crate::artifacts_dir())?;
     let flavour = manifest.resolve_flavour(&cfg.flavour)?;
     let mut session = Session::new(&manifest, &cfg.model, flavour)
@@ -1213,17 +1445,21 @@ mod tests {
             Frame::Shutdown,
         ];
         let replies = run_script(&cfg, &script);
-        assert_eq!(replies.len(), 3, "LossRecords + CacheView + WorkerStats");
-        let Frame::LossRecords { seq, worker, stamp, ids, losses } = &replies[0] else {
-            panic!("expected LossRecords, got {}", replies[0].name());
+        assert_eq!(replies.len(), 4, "Hello + LossRecords + CacheView + WorkerStats");
+        let Frame::Hello { proto: version, worker } = &replies[0] else {
+            panic!("expected Hello first, got {}", replies[0].name());
+        };
+        assert_eq!((*version, *worker), (proto::PROTO_VERSION, 1));
+        let Frame::LossRecords { seq, worker, stamp, ids, losses } = &replies[1] else {
+            panic!("expected LossRecords, got {}", replies[1].name());
         };
         assert_eq!((*seq, *worker, *stamp), (7, 1, 5));
         assert_eq!(ids.len(), batch.real);
         for ((&id, &got), &want) in ids.iter().zip(losses).zip(&expect) {
             assert_eq!(got.to_bits(), want.to_bits(), "loss for id {id}");
         }
-        let Frame::CacheView { req, worker, rows } = &replies[1] else {
-            panic!("expected CacheView, got {}", replies[1].name());
+        let Frame::CacheView { req, worker, rows } = &replies[2] else {
+            panic!("expected CacheView, got {}", replies[2].name());
         };
         assert_eq!((*req, *worker), (1, 1));
         // worker 1 of 2 owns the odd ids, all recorded at stamp 5
@@ -1234,8 +1470,8 @@ mod tests {
             assert_eq!(r.stamp, 5);
             assert_eq!(r.loss.to_bits(), expect[r.pos as usize].to_bits());
         }
-        let Frame::WorkerStats(s) = &replies[2] else {
-            panic!("expected WorkerStats, got {}", replies[2].name());
+        let Frame::WorkerStats(s) = &replies[3] else {
+            panic!("expected WorkerStats, got {}", replies[3].name());
         };
         assert_eq!(s.scored_batches, 1);
         assert_eq!(s.scored_rows, batch.real as u64);
@@ -1262,8 +1498,9 @@ mod tests {
             Frame::Shutdown,
         ];
         let replies = run_script(&cfg, &script);
-        let Frame::CacheView { rows, .. } = &replies[0] else {
-            panic!("expected CacheView, got {}", replies[0].name());
+        assert!(matches!(replies[0], Frame::Hello { .. }), "Hello announces first");
+        let Frame::CacheView { rows, .. } = &replies[1] else {
+            panic!("expected CacheView, got {}", replies[1].name());
         };
         // owned requested rows: positions 0 (id 0), 1 (id 2), 3 (id 4);
         // id 3 belongs to worker 1, NO_ID is skipped
@@ -1274,7 +1511,7 @@ mod tests {
         assert_eq!(rows[1].loss, 0.5);
         // id 4 was never recorded
         assert_eq!((rows[2].pos, rows[2].stamp), (3, NEVER));
-        let Frame::WorkerStats(s) = &replies[1] else { panic!("expected stats") };
+        let Frame::WorkerStats(s) = &replies[2] else { panic!("expected stats") };
         assert_eq!(s.recorded_rows, 2, "only the owned routed rows");
         assert_eq!(s.scored_batches, 0);
     }
@@ -1301,7 +1538,11 @@ mod tests {
         let (_, _, _, capacity) = linreg_fixture();
         let mut out = Vec::new();
         run_worker(&worker_cfg(0, 1, capacity), std::io::empty(), &mut out).unwrap();
-        assert!(out.is_empty());
+        // only the Hello announcement crossed the wire
+        let mut cur = std::io::Cursor::new(out);
+        let (first, _) = proto::read_frame(&mut cur).unwrap().expect("Hello present");
+        assert!(matches!(first, Frame::Hello { proto: v, worker: 0 } if v == proto::PROTO_VERSION));
+        assert!(proto::read_frame(&mut cur).unwrap().is_none());
     }
 
     #[test]

@@ -11,9 +11,12 @@
 //!   stage reading it, a backward-only training stage, and async eval;
 //! * [`proto`]     — the typed frames + length-prefixed wire codec the
 //!   pipeline stages speak across a process boundary;
+//! * [`endpoint`]  — the worker-endpoint lifecycle (spawn / socket
+//!   bootstrap / connect) shared by every fleet link mode;
 //! * [`ipc`]       — the [`Transport`] seam: the fleet as in-process
-//!   threads ([`InProcTransport`]) or `obftf worker` child processes
-//!   with distributed loss-cache shard ownership ([`ProcTransport`]);
+//!   threads ([`InProcTransport`]) or `obftf worker` child processes —
+//!   pipes, Unix sockets or loopback TCP — with distributed loss-cache
+//!   shard ownership and supervised restart ([`FleetTransport`]);
 //! * [`budget`]    — forward/backward compute accounting (the paper's
 //!   "ten forward, one backward" economics);
 //! * [`service`]   — status/control plane for long-running jobs.
@@ -24,6 +27,7 @@
 //! hang off that determinism.
 
 pub mod budget;
+pub mod endpoint;
 pub mod ipc;
 pub mod loss_cache;
 pub mod parallel;
@@ -34,8 +38,9 @@ pub mod streaming;
 pub mod trainer;
 
 pub use budget::BudgetTracker;
+pub use endpoint::LinkMode;
 pub use ipc::{
-    FleetSummary, InProcSpec, InProcTransport, ProcSpec, ProcTransport, Transport, WorkerConfig,
+    FleetSpec, FleetSummary, FleetTransport, InProcSpec, InProcTransport, Transport, WorkerConfig,
 };
 pub use loss_cache::{CacheStats, LossCache, ShardedLossCache};
 pub use parallel::ParallelTrainer;

@@ -27,9 +27,11 @@
 //!
 //! Every stage handoff goes through the [`Transport`] trait
 //! (`coordinator::ipc`): [`InProcTransport`] keeps the PR-3 thread
-//! fleet and lock-striped cache; [`ProcTransport`] promotes the fleet
-//! to child processes speaking typed frames (`coordinator::proto`) with
-//! distributed loss-cache shard ownership (`id % n_workers`).
+//! fleet and lock-striped cache; [`FleetTransport`] promotes the fleet
+//! to child processes speaking typed frames (`coordinator::proto`) —
+//! over stdio pipes, Unix-domain sockets or loopback TCP — with
+//! distributed loss-cache shard ownership (`id % n_workers`),
+//! shard-owner affinity routing and supervised worker restart.
 //!
 //! **Synchronous oracle mode** (`pipeline_sync` / `OBFTF_PIPELINE_SYNC`):
 //! tickets are issued one step at a time and the selection stage waits
@@ -43,28 +45,29 @@
 //! epochs' worth of steps; fully-scored-but-stale batches are
 //! re-enqueued for re-scoring with current weights).
 //!
-//! Environment overrides (CI and benches): `OBFTF_PIPELINE_WORKERS`,
-//! `OBFTF_PIPELINE_DEPTH`, `OBFTF_PIPELINE_SHARDS`,
-//! `OBFTF_PIPELINE_SYNC`, `OBFTF_PIPELINE_PROC`, `OBFTF_WORKER_BIN` —
-//! see README "Pipeline architecture" and "Multi-process fleet".
+//! Every knob (worker count, depth, shards, sync, transport kind,
+//! affinity, restart budget, timeouts) resolves through
+//! [`PipelineOptions`] with CLI > env > config > default precedence —
+//! see `config::options` for the table, and README "Pipeline
+//! architecture" / "Multi-process fleet" / "Socket fleet".
 //!
 //! [`StreamingTrainer`]: crate::coordinator::StreamingTrainer
 //! [`Trainer`]: crate::coordinator::Trainer
 //! [`Transport`]: crate::coordinator::ipc::Transport
 //! [`InProcTransport`]: crate::coordinator::ipc::InProcTransport
-//! [`ProcTransport`]: crate::coordinator::ipc::ProcTransport
+//! [`FleetTransport`]: crate::coordinator::ipc::FleetTransport
 
 use std::collections::VecDeque;
 use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::config::TrainConfig;
-use crate::coordinator::budget::BudgetTracker;
+use crate::config::{PipelineOptions, TrainConfig, TransportKind};
+use crate::coordinator::endpoint::LinkMode;
 use crate::coordinator::ipc::{
-    FleetSummary, InProcSpec, InProcTransport, ProcSpec, ProcTransport, Transport, STALL_TIMEOUT,
+    FleetSpec, FleetSummary, FleetTransport, InProcSpec, InProcTransport, Transport, STALL_TIMEOUT,
 };
 use crate::coordinator::loss_cache::CacheStats;
 use crate::coordinator::service::StatusBoard;
@@ -83,73 +86,6 @@ struct EvalJob {
     params: Arc<Vec<HostTensor>>,
 }
 
-/// Resolved pipeline shape (config overlaid with `OBFTF_PIPELINE_*`).
-#[derive(Clone, Copy, Debug)]
-pub struct PipelineKnobs {
-    /// Inference-fleet workers (threads, or child processes in proc
-    /// mode).
-    pub workers: usize,
-    /// Batches the fleet may score ahead of the training stage (async
-    /// mode; sync mode pins this to 0).
-    pub depth: usize,
-    /// Loss-cache lock stripes (proc mode: one owned shard set per
-    /// worker, so this equals `workers`).
-    pub shards: usize,
-    /// Synchronous handoffs — the bit-identical oracle mode.
-    pub sync: bool,
-    /// Multi-process fleet: `obftf worker` children over pipes instead
-    /// of threads.
-    pub proc: bool,
-    /// Max accepted loss age in parameter versions. `loss_max_age = 0`
-    /// resolves to the same auto window the serial trainer uses (two
-    /// epochs' worth of steps), so the knob means the same thing in
-    /// both drivers.
-    pub max_age: u64,
-}
-
-fn env_usize(key: &str) -> Option<usize> {
-    std::env::var(key).ok().and_then(|v| v.parse().ok())
-}
-
-fn env_bool(key: &str) -> Option<bool> {
-    std::env::var(key)
-        .ok()
-        .map(|v| matches!(v.trim(), "1" | "true" | "yes" | "on"))
-}
-
-impl PipelineKnobs {
-    /// Config values overlaid with the `OBFTF_PIPELINE_*` environment
-    /// (the env wins — CI and benches sweep worker counts that way).
-    /// `train_len`/`batch` size the auto defaults: the auto `max_age`
-    /// is two epochs' worth of steps, exactly like the serial trainer's
-    /// `reuse_losses` auto window.
-    pub fn resolve(cfg: &TrainConfig, train_len: usize, batch: usize) -> PipelineKnobs {
-        let workers = env_usize("OBFTF_PIPELINE_WORKERS")
-            .unwrap_or(cfg.pipeline_workers)
-            .max(1);
-        let depth = env_usize("OBFTF_PIPELINE_DEPTH")
-            .unwrap_or(cfg.pipeline_depth)
-            .max(1);
-        let proc = env_bool("OBFTF_PIPELINE_PROC").unwrap_or(cfg.pipeline_proc);
-        let shards_cfg = env_usize("OBFTF_PIPELINE_SHARDS").unwrap_or(cfg.cache_shards);
-        let shards = if proc {
-            // distributed ownership: exactly one shard set per worker
-            workers
-        } else if shards_cfg == 0 {
-            (workers * 2).clamp(4, 16)
-        } else {
-            shards_cfg
-        };
-        let sync = env_bool("OBFTF_PIPELINE_SYNC").unwrap_or(cfg.pipeline_sync);
-        let max_age = if cfg.loss_max_age > 0 {
-            cfg.loss_max_age
-        } else {
-            2 * train_len.div_ceil(batch.max(1)) as u64
-        };
-        PipelineKnobs { workers, depth, shards, sync, proc, max_age }
-    }
-}
-
 /// The staged continuous-training driver (see module docs).
 pub struct PipelineTrainer {
     pub cfg: TrainConfig,
@@ -160,7 +96,7 @@ pub struct PipelineTrainer {
     test_batches: Arc<Vec<Batch>>,
     pub recorder: Recorder,
     pub budget: BudgetTracker,
-    knobs: PipelineKnobs,
+    options: PipelineOptions,
     capacity: usize,
     steps: usize,
     eval_every_steps: usize,
@@ -195,20 +131,20 @@ impl PipelineTrainer {
         }
         let sampler = cfg.method.build(cfg.gamma);
         let rng = crate::coordinator::selection_rng(cfg);
-        let mut knobs = PipelineKnobs::resolve(cfg, train.len(), manifest.batch);
+        let mut options = PipelineOptions::resolve(cfg, train.len(), manifest.batch)?;
         let capacity = train.len();
-        if !knobs.proc {
+        if !options.transport.is_fleet() {
             // the in-proc cache clamps its stripe count to the capacity;
-            // keep the published knobs in agreement so 0..knobs.shards is
-            // always a valid shard_stats range
-            knobs.shards = knobs.shards.clamp(1, capacity.max(1));
+            // keep the published options in agreement so 0..options.shards
+            // is always a valid shard_stats range
+            options.shards = options.shards.clamp(1, capacity.max(1));
         }
         let test_batches = Arc::new(test.batches(manifest.batch));
         let source = crate::coordinator::stream_source(cfg, train);
         let prefetcher = Prefetcher::spawn(
             source,
             manifest.batch,
-            cfg.prefetch_depth.max(knobs.depth + 2),
+            cfg.prefetch_depth.max(options.depth + 2),
         );
         let eval_every_steps = if cfg.eval_every > 0 {
             (cfg.stream_steps / cfg.eval_every.max(1)).max(1)
@@ -224,7 +160,7 @@ impl PipelineTrainer {
             test_batches,
             recorder: Recorder::new(),
             budget: BudgetTracker::new(),
-            knobs,
+            options,
             capacity,
             steps: cfg.stream_steps,
             eval_every_steps,
@@ -238,8 +174,10 @@ impl PipelineTrainer {
         &self.session
     }
 
-    pub fn knobs(&self) -> PipelineKnobs {
-        self.knobs
+    /// The fully-resolved pipeline shape this trainer runs with
+    /// (CLI > env > config > default; see `config::options`).
+    pub fn options(&self) -> PipelineOptions {
+        self.options
     }
 
     /// Aggregate loss-cache counters (lookup granularity: one hit or
@@ -279,36 +217,40 @@ impl PipelineTrainer {
     }
 
     fn build_transport(&self) -> Result<Box<dyn Transport>> {
-        let queue_cap = self.knobs.depth + self.knobs.workers + 2;
-        if self.knobs.proc {
-            let timeout = env_usize("OBFTF_PROC_TIMEOUT_MS")
-                .map(|ms| Duration::from_millis(ms as u64))
-                .unwrap_or(STALL_TIMEOUT);
-            Ok(Box::new(ProcTransport::spawn(ProcSpec {
-                model: self.cfg.model.clone(),
-                flavour: self.session.flavour(),
-                workers: self.knobs.workers,
-                capacity: self.capacity,
-                max_age: self.knobs.max_age,
-                sync: self.knobs.sync,
-                worker_bin: None,
-                timeout,
-                fail_after: crate::coordinator::ipc::fail_after_from_env(self.knobs.workers),
-            })?))
-        } else {
-            Ok(Box::new(InProcTransport::spawn(InProcSpec {
-                manifest: self.session.manifest().clone(),
-                model: self.cfg.model.clone(),
-                flavour: self.session.flavour(),
-                workers: self.knobs.workers,
-                capacity: self.capacity,
-                max_age: self.knobs.max_age,
-                shards: self.knobs.shards,
-                sync: self.knobs.sync,
-                queue_cap,
-                stall: STALL_TIMEOUT,
-            })?))
-        }
+        let queue_cap = self.options.depth + self.options.workers + 2;
+        let link = match self.options.transport {
+            TransportKind::Threads => {
+                return Ok(Box::new(InProcTransport::spawn(InProcSpec {
+                    manifest: self.session.manifest().clone(),
+                    model: self.cfg.model.clone(),
+                    flavour: self.session.flavour(),
+                    workers: self.options.workers,
+                    capacity: self.capacity,
+                    max_age: self.options.max_age,
+                    shards: self.options.shards,
+                    sync: self.options.sync,
+                    queue_cap,
+                    stall: STALL_TIMEOUT,
+                })?));
+            }
+            TransportKind::Pipes => LinkMode::Pipes,
+            TransportKind::UnixSocket => LinkMode::Unix,
+            TransportKind::TcpSocket => LinkMode::Tcp,
+        };
+        Ok(Box::new(FleetTransport::spawn(FleetSpec {
+            model: self.cfg.model.clone(),
+            flavour: self.session.flavour(),
+            workers: self.options.workers,
+            capacity: self.capacity,
+            max_age: self.options.max_age,
+            sync: self.options.sync,
+            worker_bin: None,
+            timeout: self.options.timeout,
+            fail_after: crate::coordinator::ipc::fail_after_from_env(self.options.workers),
+            link,
+            affinity: self.options.affinity,
+            restart_limit: self.options.restart_limit,
+        })?))
     }
 
     /// Run `stream_steps` batches through the staged pipeline.
@@ -381,7 +323,7 @@ impl PipelineTrainer {
         t0: Instant,
     ) -> Result<()> {
         let steps = self.steps as u64;
-        let depth = if self.knobs.sync { 0 } else { self.knobs.depth as u64 };
+        let depth = if self.options.sync { 0 } else { self.options.depth as u64 };
         let mut pending: VecDeque<Arc<Batch>> = VecDeque::new();
         let mut next_issue: u64 = 0;
         for s in 0..steps {

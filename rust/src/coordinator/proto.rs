@@ -18,6 +18,9 @@
 //!
 //! Frame vocabulary (leader ⇄ worker):
 //!
+//! * [`Frame::Hello`]        worker → leader: the first frame on every
+//!   link — protocol version + worker id, checked by the leader before
+//!   the endpoint is considered live (the socket/pipe handshake);
 //! * [`Frame::ParamUpdate`]  leader → worker: versioned weight snapshot
 //!   (the `ParamStore` publish crossing the boundary);
 //! * [`Frame::ScoreBatch`]   leader → worker: run `fwd_loss` on a batch;
@@ -38,10 +41,17 @@ use anyhow::{bail, Context, Result};
 use crate::data::dataset::Batch;
 use crate::data::tensor::HostTensor;
 
+/// Wire-protocol version carried in the [`Frame::Hello`] handshake.
+/// Bump on any incompatible frame-layout change; the leader refuses a
+/// worker announcing a different version.
+pub const PROTO_VERSION: u32 = 1;
+
 /// Hard ceiling on one frame's encoded size (tag + payload). Large
-/// enough for any batch or weight snapshot we ship; small enough that a
-/// corrupted length prefix fails instead of attempting a huge read.
-pub const MAX_FRAME_BYTES: usize = 1 << 30;
+/// enough for any batch or weight snapshot we ship (64 MiB); small
+/// enough that a corrupted length prefix from a bad peer is rejected
+/// outright — and the body is read incrementally, so even an in-range
+/// garbage length can never size a giant allocation up front.
+pub const MAX_FRAME_BYTES: usize = 1 << 26;
 
 /// Row id wire value for "padding row / no id" (`usize::MAX` host-side).
 pub const NO_ID: u64 = u64::MAX;
@@ -76,6 +86,13 @@ pub struct WorkerStats {
 /// A typed protocol frame (see module docs for direction and intent).
 #[derive(Clone, Debug)]
 pub enum Frame {
+    /// First frame on every link, worker → leader: announce protocol
+    /// version and worker id so the leader can reject a mismatched
+    /// binary (or a crossed wire) before any state crosses it.
+    Hello {
+        proto: u32,
+        worker: u32,
+    },
     ScoreBatch {
         seq: u64,
         batch: Batch,
@@ -125,11 +142,13 @@ const TAG_CACHE_LOOKUP: u8 = 4;
 const TAG_CACHE_VIEW: u8 = 5;
 const TAG_SHUTDOWN: u8 = 6;
 const TAG_WORKER_STATS: u8 = 7;
+const TAG_HELLO: u8 = 8;
 
 impl Frame {
     /// Frame name for diagnostics ("worker 2 died after ScoreBatch").
     pub fn name(&self) -> &'static str {
         match self {
+            Frame::Hello { .. } => "Hello",
             Frame::ScoreBatch { .. } => "ScoreBatch",
             Frame::LossRecords { .. } => "LossRecords",
             Frame::ParamUpdate { .. } => "ParamUpdate",
@@ -144,6 +163,11 @@ impl Frame {
     pub fn encode(&self) -> Vec<u8> {
         let mut body = Vec::with_capacity(64);
         match self {
+            Frame::Hello { proto, worker } => {
+                body.push(TAG_HELLO);
+                put_u32(&mut body, *proto);
+                put_u32(&mut body, *worker);
+            }
             Frame::ScoreBatch { seq, batch } => {
                 body.push(TAG_SCORE_BATCH);
                 put_u64(&mut body, *seq);
@@ -201,6 +225,7 @@ impl Frame {
         let mut r = Reader { b: body, pos: 0 };
         let tag = r.u8().context("frame tag")?;
         let frame = match tag {
+            TAG_HELLO => Frame::Hello { proto: r.u32()?, worker: r.u32()? },
             TAG_SCORE_BATCH => {
                 let seq = r.u64()?;
                 let batch = get_batch(&mut r)?;
@@ -304,11 +329,18 @@ pub fn read_frame(r: &mut impl Read) -> Result<Option<(Frame, usize)>> {
     }
     let len = u32::from_le_bytes(len_buf) as usize;
     if len == 0 || len > MAX_FRAME_BYTES {
-        bail!("implausible frame length {len}");
+        bail!("implausible frame length {len} (cap {MAX_FRAME_BYTES})");
     }
-    let mut body = vec![0u8; len];
-    r.read_exact(&mut body)
-        .with_context(|| format!("frame body truncated (wanted {len} bytes)"))?;
+    // read incrementally via a bounded take: a garbage length prefix
+    // that slipped under the cap fails at the stream's real end instead
+    // of sizing a `len`-byte buffer up front on the peer's say-so
+    let mut body = Vec::with_capacity(len.min(1 << 16));
+    r.take(len as u64)
+        .read_to_end(&mut body)
+        .context("reading frame body")?;
+    if body.len() != len {
+        bail!("frame body truncated (wanted {len} bytes, got {})", body.len());
+    }
     let frame = Frame::decode(&body)?;
     Ok(Some((frame, 4 + len)))
 }
@@ -465,6 +497,28 @@ mod tests {
         // PartialEq would lie)
         assert_eq!(back.encode(), bytes, "{} re-encode differs", f.name());
         back
+    }
+
+    #[test]
+    fn hello_roundtrips_and_carries_version() {
+        let got = roundtrip(&Frame::Hello { proto: PROTO_VERSION, worker: 3 });
+        let Frame::Hello { proto, worker } = got else { panic!("wrong frame") };
+        assert_eq!((proto, worker), (PROTO_VERSION, 3));
+    }
+
+    #[test]
+    fn over_cap_length_prefix_rejected_before_any_read() {
+        // a length prefix one past the cap must fail on the prefix
+        // alone — the (empty) body is never consulted
+        let bytes = ((MAX_FRAME_BYTES + 1) as u32).to_le_bytes().to_vec();
+        let err = read_frame(&mut Cursor::new(bytes)).unwrap_err();
+        assert!(format!("{err:#}").contains("implausible frame length"));
+        // an in-range but lying length fails at the stream's real end
+        // (incremental read), not with a huge up-front allocation
+        let mut bytes = ((MAX_FRAME_BYTES) as u32).to_le_bytes().to_vec();
+        bytes.push(TAG_SHUTDOWN);
+        let err = read_frame(&mut Cursor::new(bytes)).unwrap_err();
+        assert!(format!("{err:#}").contains("truncated"), "{err:#}");
     }
 
     #[test]

@@ -4,17 +4,23 @@
 //!   train            run a training job from a TOML config + overrides
 //!   eval             evaluate a checkpoint on a dataset's test split
 //!   inspect          dump the artifact manifest / compiled-shape info
+//!   config           print the effective (resolved) configuration
 //!   bench-selection  micro-benchmark the selection policies off-line
 //!   status           read the live status of a running streaming job
-//!   worker           pipeline inference worker (spawned by the proc
+//!   worker           pipeline inference worker (spawned by the fleet
 //!                    transport; speaks coordinator::proto frames over
-//!                    stdin/stdout — not for interactive use)
+//!                    stdin/stdout, or over a socket with --listen —
+//!                    not for interactive use)
+//!
+//! Pipeline flags feed the typed `PipelineOverrides` layer, so the
+//! resolution order is CLI > `OBFTF_*` env > config file > default
+//! (see `config::options`).
 
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Result};
 
-use obftf::config::TrainConfig;
+use obftf::config::{PipelineOptions, TrainConfig};
 use obftf::coordinator::{ParallelTrainer, PipelineTrainer, StreamingTrainer, Trainer};
 use obftf::data::rng::Rng;
 use obftf::runtime::Manifest;
@@ -22,8 +28,11 @@ use obftf::sampling::Method;
 use obftf::util::cli::{ArgParser, Parsed};
 
 fn train_parser() -> ArgParser {
-    ArgParser::new("train", "run a training job")
-        .flag("config", "TOML config file (flags override it)")
+    with_train_flags(ArgParser::new("train", "run a training job"))
+}
+
+fn with_train_flags(p: ArgParser) -> ArgParser {
+    p.flag("config", "TOML config file (flags override it)")
         .flag("model", "linreg | mlp | cnn | cnn_lite")
         .flag("flavour", "auto | native | pallas | jnp execution flavour")
         .flag("dataset", "regression[_outliers] | mnist_proxy | imagenet_proxy")
@@ -53,6 +62,19 @@ fn train_parser() -> ArgParser {
             "pipeline-proc",
             "multi-process inference fleet (obftf worker children; implies --pipeline)",
         )
+        .flag(
+            "pipeline-socket",
+            "fleet link: unix | tcp | none (implies --pipeline; none = stdio pipes)",
+        )
+        .flag(
+            "pipeline-affinity",
+            "true|false: route ScoreBatch to the majority shard owner (default true)",
+        )
+        .flag(
+            "restart-limit",
+            "supervised worker restarts allowed before a death is fatal (0 = fail-fast)",
+        )
+        .flag("proc-timeout-ms", "fleet spawn/connect/handshake/await bound (0 = 30 s)")
 }
 
 fn build_config(p: &Parsed) -> Result<TrainConfig> {
@@ -126,24 +148,79 @@ fn build_config(p: &Parsed) -> Result<TrainConfig> {
     if p.get_bool("pipeline") {
         cfg.pipeline = true;
     }
+    // pipeline shape flags feed the CLI-overrides layer (beats env and
+    // config in PipelineOptions::resolve); the mirrored config fields
+    // keep `validate` and `--print-effective` seeing the same values
     if let Some(v) = p.get_parse::<usize>("pipeline-workers")? {
         cfg.pipeline_workers = v;
+        cfg.overrides.workers = Some(v);
     }
     if let Some(v) = p.get_parse::<usize>("pipeline-depth")? {
         cfg.pipeline_depth = v;
+        cfg.overrides.depth = Some(v);
     }
     if let Some(v) = p.get_parse::<usize>("cache-shards")? {
         cfg.cache_shards = v;
+        cfg.overrides.shards = Some(v);
     }
     if p.get_bool("pipeline-sync") {
         cfg.pipeline_sync = true;
+        cfg.overrides.sync = Some(true);
     }
     if p.get_bool("pipeline-proc") {
         cfg.pipeline = true;
         cfg.pipeline_proc = true;
+        cfg.overrides.proc = Some(true);
+    }
+    if let Some(v) = p.get("pipeline-socket") {
+        cfg.pipeline = true;
+        cfg.pipeline_socket = v.to_string();
+        cfg.overrides.socket = Some(v.to_string());
+    }
+    if let Some(v) = p.get_bool_value("pipeline-affinity")? {
+        cfg.pipeline_affinity = v;
+        cfg.overrides.affinity = Some(v);
+    }
+    if let Some(v) = p.get_parse::<u32>("restart-limit")? {
+        cfg.pipeline_restart_limit = v;
+        cfg.overrides.restart_limit = Some(v);
+    }
+    if let Some(v) = p.get_parse::<u64>("proc-timeout-ms")? {
+        cfg.proc_timeout_ms = v;
+        cfg.overrides.timeout_ms = Some(v);
     }
     cfg.validate()?;
     Ok(cfg)
+}
+
+/// `obftf config --print-effective` — dump the pipeline knobs exactly
+/// as a run launched with the same config/env/flags would resolve them
+/// (CLI > env > config > default).
+fn cmd_config(args: &[String]) -> Result<()> {
+    let parser = with_train_flags(
+        ArgParser::new("config", "inspect the effective configuration").bool_flag(
+            "print-effective",
+            "print every pipeline knob after CLI > env > config > default resolution",
+        ),
+    );
+    let p = parser.parse(args)?;
+    if !p.get_bool("print-effective") {
+        bail!("nothing to do — pass --print-effective\n\n{}", parser.usage());
+    }
+    let cfg = build_config(&p)?;
+    println!("# effective configuration (CLI > env > config > default)");
+    println!("model = {:?}", cfg.model);
+    println!("flavour = {:?}", cfg.flavour);
+    println!("dataset = {:?}", cfg.dataset_name());
+    println!("method = {:?}", cfg.method.as_str());
+    println!("pipeline = {}", cfg.pipeline);
+    // no dataset is materialised here, so the auto max-age window
+    // (two epochs' worth of steps) cannot be sized yet
+    let options = PipelineOptions::resolve(&cfg, 0, 0)?;
+    for line in options.effective_lines(cfg.loss_max_age == 0) {
+        println!("{line}");
+    }
+    Ok(())
 }
 
 fn cmd_train(args: &[String]) -> Result<()> {
@@ -280,16 +357,20 @@ fn cmd_bench_selection(args: &[String]) -> Result<()> {
 }
 
 /// `obftf worker` — the multi-process pipeline's inference worker.
-/// Speaks length-prefixed `coordinator::proto` frames over
-/// stdin/stdout; all human-readable output goes to stderr.
+/// Speaks length-prefixed `coordinator::proto` frames over stdin/stdout
+/// by default, or binds `--listen <unix:PATH | tcp:HOST:PORT>` and
+/// serves one leader connection; all human-readable output goes to
+/// stderr (socket mode also prints the `OBFTF_LISTEN` bootstrap line on
+/// stdout).
 fn cmd_worker(args: &[String]) -> Result<()> {
-    let parser = ArgParser::new("worker", "pipeline inference worker (proto frames on stdio)")
+    let parser = ArgParser::new("worker", "pipeline inference worker (proto frames)")
         .flag("worker-id", "this worker's index in the fleet (required)")
         .flag("workers", "fleet size (required)")
         .flag("model", "model name (default mlp)")
         .flag("flavour", "auto | native | pallas | jnp (default auto)")
         .flag("capacity", "loss-cache capacity = training-set size (required)")
         .flag("max-age", "loss max age in steps (diagnostic; freshness is leader-side)")
+        .flag("listen", "serve one leader over a socket: unix:PATH | tcp:HOST:PORT")
         .flag("fail-after", "TEST ONLY: crash after N frames (kill-a-worker regression)");
     let p = parser.parse(args)?;
     let need = |name: &str| -> Result<usize> {
@@ -305,6 +386,9 @@ fn cmd_worker(args: &[String]) -> Result<()> {
         max_age: p.get_parse::<u64>("max-age")?.unwrap_or(0),
         fail_after: p.get_parse::<u64>("fail-after")?,
     };
+    if let Some(listen) = p.get("listen") {
+        return obftf::coordinator::endpoint::serve_worker(&cfg, listen);
+    }
     let stdin = std::io::stdin().lock();
     let stdout = std::io::BufWriter::new(std::io::stdout().lock());
     obftf::coordinator::ipc::run_worker(&cfg, stdin, stdout)
@@ -317,9 +401,10 @@ fn usage() -> String {
      \x20 train            run a training job (--help for flags)\n\
      \x20 eval             evaluate a checkpoint\n\
      \x20 inspect          dump the artifact manifest\n\
+     \x20 config           print the effective configuration (--print-effective)\n\
      \x20 bench-selection  micro-benchmark the selection policies\n\
      \x20 status <addr>    read a running job's status endpoint\n\
-     \x20 worker           pipeline inference worker (internal; proto frames on stdio)\n"
+     \x20 worker           pipeline inference worker (internal; stdio or --listen socket)\n"
         .to_string()
 }
 
@@ -334,6 +419,7 @@ fn main() -> Result<()> {
         "train" => cmd_train(rest),
         "eval" => cmd_eval(rest),
         "inspect" => cmd_inspect(),
+        "config" => cmd_config(rest),
         "bench-selection" => cmd_bench_selection(rest),
         "worker" => cmd_worker(rest),
         "status" => {

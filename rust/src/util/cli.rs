@@ -160,6 +160,21 @@ impl Parsed {
     pub fn positional(&self, idx: usize) -> Option<&str> {
         self.positionals.get(idx).map(String::as_str)
     }
+
+    /// Tri-state boolean *value* flag (`--x true` / `--x=false`):
+    /// `None` when absent, `Err` on anything that isn't a recognisable
+    /// boolean. Used for knobs whose default is `true`, where a plain
+    /// presence flag could only turn them on.
+    pub fn get_bool_value(&self, name: &str) -> Result<Option<bool>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => match v.trim().to_ascii_lowercase().as_str() {
+                "1" | "true" | "yes" | "on" => Ok(Some(true)),
+                "0" | "false" | "no" | "off" => Ok(Some(false)),
+                other => bail!("--{name}: expected a boolean, got {other:?}"),
+            },
+        }
+    }
 }
 
 fn levenshtein(a: &str, b: &str) -> usize {
@@ -227,5 +242,16 @@ mod tests {
     fn bad_parse_type_errors() {
         let p = parser().parse(&argv(&["--ratio", "abc"])).unwrap();
         assert!(p.get_parse::<f64>("ratio").is_err());
+    }
+
+    #[test]
+    fn bool_value_flags_are_tri_state() {
+        let p = parser().parse(&argv(&["--model", "off"])).unwrap();
+        assert_eq!(p.get_bool_value("model").unwrap(), Some(false));
+        assert_eq!(p.get_bool_value("ratio").unwrap(), None);
+        let p = parser().parse(&argv(&["--model=TRUE"])).unwrap();
+        assert_eq!(p.get_bool_value("model").unwrap(), Some(true));
+        let p = parser().parse(&argv(&["--model", "maybe"])).unwrap();
+        assert!(p.get_bool_value("model").is_err());
     }
 }

@@ -5,11 +5,12 @@
 //! reproduce the serial streaming trainer *bit for bit*: identical
 //! selected sets (order included — the gathered backward reduces in
 //! selection order), identical per-step losses, identical final
-//! weights, identical eval trajectory. This holds for **both**
-//! transports: the in-process thread fleet and the multi-process
-//! `obftf worker` fleet (the wire codec ships f32 bit-exactly, so
-//! crossing a process boundary changes nothing). Async mode is bounded
-//! loosely: it must complete, train and account its cache traffic.
+//! weights, identical eval trajectory. This holds for **every**
+//! transport: the in-process thread fleet and the multi-process
+//! `obftf worker` fleet over pipes, Unix sockets and loopback TCP
+//! (the wire codec ships f32 bit-exactly, so crossing a process or
+//! socket boundary changes nothing). Async mode is bounded loosely:
+//! it must complete, train and account its cache traffic.
 
 use obftf::config::TrainConfig;
 use obftf::coordinator::{PipelineTrainer, StreamingTrainer, TrainReport};
@@ -75,10 +76,11 @@ fn assert_params_bit_identical(a: &[obftf::data::HostTensor], b: &[obftf::data::
 }
 
 /// Run the serial streaming oracle for `base`, then for each fleet
-/// size run the sync pipeline over the given transport and assert the
-/// bit-for-bit contract: selected sets, per-step losses, final
-/// weights, eval trajectory, compute accounting.
-fn assert_sync_pipeline_equivalent(base: &TrainConfig, worker_counts: &[usize], proc: bool) {
+/// size run the sync pipeline over the given transport (`mode` is
+/// `"thread"`, `"proc"` for pipes, or `"unix"`/`"tcp"` for sockets)
+/// and assert the bit-for-bit contract: selected sets, per-step
+/// losses, final weights, eval trajectory, compute accounting.
+fn assert_sync_pipeline_equivalent(base: &TrainConfig, worker_counts: &[usize], mode: &str) {
     let m = manifest();
     let mut serial = StreamingTrainer::with_manifest(base, &m).unwrap();
     let sreport = serial.run().unwrap();
@@ -86,11 +88,19 @@ fn assert_sync_pipeline_equivalent(base: &TrainConfig, worker_counts: &[usize], 
     assert_eq!(sreport.steps, base.stream_steps as u64);
 
     for &workers in worker_counts {
-        let tag = if proc { "proc" } else { "thread" };
+        let tag = mode;
         let mut pc = base.clone();
         pc.pipeline = true;
         pc.pipeline_sync = true;
-        pc.pipeline_proc = proc;
+        match mode {
+            "thread" => {}
+            "proc" => pc.pipeline_proc = true,
+            "unix" | "tcp" => {
+                pc.pipeline_proc = true;
+                pc.pipeline_socket = mode.to_string();
+            }
+            other => panic!("unknown transport mode {other:?}"),
+        }
         pc.pipeline_workers = workers;
         let mut p = PipelineTrainer::with_manifest(&pc, &m).unwrap();
         let preport = p.run().unwrap();
@@ -148,25 +158,25 @@ fn assert_sync_pipeline_equivalent(base: &TrainConfig, worker_counts: &[usize], 
         // same compute accounting
         assert_eq!(preport.forward_examples, sreport.forward_examples);
         assert_eq!(preport.backward_examples, sreport.backward_examples);
-        assert_fleet_accounting(&p, &preport, workers, proc);
+        assert_fleet_accounting(&p, &preport, workers, mode != "thread");
     }
 }
 
 /// Transport-level bookkeeping the sync contract also pins: every
 /// stream batch was scored exactly once (sync mode never requeues),
-/// and the proc transport actually moved frames.
-fn assert_fleet_accounting(p: &PipelineTrainer, report: &TrainReport, workers: usize, proc: bool) {
+/// and the fleet transports actually moved frames.
+fn assert_fleet_accounting(p: &PipelineTrainer, report: &TrainReport, workers: usize, fleet: bool) {
     let stats = p.worker_stats();
     assert_eq!(stats.len(), workers);
     let scored: u64 = stats.iter().map(|w| w.scored_batches).sum();
     assert_eq!(scored, report.steps, "one scoring per step in sync mode");
     assert_eq!(p.budget.inference_forwards, report.forward_examples);
-    if proc {
+    if fleet {
         // distributed ownership: every scored row was recorded by
         // exactly one shard owner
         let recorded: u64 = stats.iter().map(|w| w.recorded_rows).sum();
         assert_eq!(recorded, p.budget.inference_forwards);
-        assert!(p.frame_bytes() > 0, "proc transport must move frames");
+        assert!(p.frame_bytes() > 0, "fleet transport must move frames");
     } else {
         assert_eq!(p.frame_bytes(), 0, "thread transport is wire-free");
     }
@@ -178,7 +188,7 @@ fn assert_fleet_accounting(p: &PipelineTrainer, report: &TrainReport, workers: u
 fn sync_pipeline_is_bit_identical_to_serial_streaming() {
     let mut base = cfg(12);
     base.cache_shards = 3;
-    assert_sync_pipeline_equivalent(&base, &[1, 3], false);
+    assert_sync_pipeline_equivalent(&base, &[1, 3], "thread");
 }
 
 /// The same bit-for-bit pin on the conv workload: the staged pipeline
@@ -187,7 +197,7 @@ fn sync_pipeline_is_bit_identical_to_serial_streaming() {
 /// run Table 3's scenario unchanged.
 #[test]
 fn sync_pipeline_is_bit_identical_to_serial_streaming_on_cnn_lite() {
-    assert_sync_pipeline_equivalent(&cnn_lite_cfg(6), &[1, 2], false);
+    assert_sync_pipeline_equivalent(&cnn_lite_cfg(6), &[1, 2], "thread");
 }
 
 /// The multi-process acceptance pin: sync **proc** pipeline — `obftf
@@ -197,7 +207,25 @@ fn sync_pipeline_is_bit_identical_to_serial_streaming_on_cnn_lite() {
 #[test]
 fn sync_proc_pipeline_is_bit_identical_to_serial_streaming() {
     use_cli_worker_bin();
-    assert_sync_pipeline_equivalent(&cfg(8), &[1, 2], true);
+    assert_sync_pipeline_equivalent(&cfg(8), &[1, 2], "proc");
+}
+
+/// The socket-fleet acceptance pin: the same `obftf worker` children
+/// reached over **Unix-domain sockets** — `OBFTF_LISTEN` bootstrap,
+/// `Hello` handshake, frames over the stream — stay bit-identical to
+/// the serial trainer at 1 and 2 worker processes.
+#[test]
+fn sync_unix_socket_pipeline_is_bit_identical_to_serial_streaming() {
+    use_cli_worker_bin();
+    assert_sync_pipeline_equivalent(&cfg(8), &[1, 2], "unix");
+}
+
+/// And over **loopback TCP**: connect_timeout + TCP_NODELAY on both
+/// halves, identical frames, identical bits.
+#[test]
+fn sync_tcp_socket_pipeline_is_bit_identical_to_serial_streaming() {
+    use_cli_worker_bin();
+    assert_sync_pipeline_equivalent(&cfg(6), &[2], "tcp");
 }
 
 /// And the conv workload across the process boundary: NHWC batches and
@@ -206,7 +234,7 @@ fn sync_proc_pipeline_is_bit_identical_to_serial_streaming() {
 #[test]
 fn sync_proc_pipeline_is_bit_identical_on_cnn_lite() {
     use_cli_worker_bin();
-    assert_sync_pipeline_equivalent(&cnn_lite_cfg(4), &[1, 2], true);
+    assert_sync_pipeline_equivalent(&cnn_lite_cfg(4), &[1, 2], "proc");
 }
 
 #[test]
@@ -230,7 +258,7 @@ fn async_pipeline_trains_and_accounts_cache_traffic() {
     // the fleet scored every issued batch (requeues only add to this)
     assert!(p.budget.inference_forwards >= 30 * m.batch as u64);
     // per-shard row counters saw the traffic
-    let shards = p.knobs().shards;
+    let shards = p.options().shards;
     let row_lookups: u64 = (0..shards)
         .map(|k| {
             let s = p.shard_stats(k);
@@ -257,8 +285,8 @@ fn async_proc_pipeline_trains_and_accounts_cache_traffic() {
     pc.pipeline_workers = 2;
     pc.pipeline_depth = 3;
     let mut p = PipelineTrainer::with_manifest(&pc, &m).unwrap();
-    assert!(p.knobs().proc);
-    assert_eq!(p.knobs().shards, 2, "proc mode: one shard set per worker");
+    assert!(p.options().transport.is_fleet());
+    assert_eq!(p.options().shards, 2, "fleet mode: one shard set per worker");
     let report = p.run().unwrap();
     assert_eq!(report.steps, 20);
     assert!(report.final_eval.loss.is_finite());

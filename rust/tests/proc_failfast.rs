@@ -14,13 +14,15 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use obftf::coordinator::{ProcSpec, ProcTransport, Transport};
+use obftf::coordinator::{FleetSpec, FleetTransport, LinkMode, Transport};
 use obftf::data::dataset::{Batch, InMemoryDataset};
 use obftf::data::{Rng, Targets};
 use obftf::runtime::{Flavour, Manifest, Session};
 
-fn spec(workers: usize, capacity: usize, fail_after: Vec<Option<u64>>) -> ProcSpec {
-    ProcSpec {
+/// restart_limit = 0: these tests pin the strict fail-fast behaviour
+/// (the elastic supervised-restart path is pinned in socket_restart.rs).
+fn spec(workers: usize, capacity: usize, fail_after: Vec<Option<u64>>) -> FleetSpec {
+    FleetSpec {
         model: "linreg".into(),
         flavour: Flavour::Native,
         workers,
@@ -30,6 +32,9 @@ fn spec(workers: usize, capacity: usize, fail_after: Vec<Option<u64>>) -> ProcSp
         worker_bin: Some(env!("CARGO_BIN_EXE_obftf").into()),
         timeout: Duration::from_secs(60),
         fail_after,
+        link: LinkMode::Pipes,
+        affinity: true,
+        restart_limit: 0,
     }
 }
 
@@ -56,7 +61,7 @@ fn fixture() -> (Session, Batch, usize) {
 fn proc_transport_scores_bit_identically_and_reports_stats() {
     let (mut session, batch, capacity) = fixture();
     let expect = session.fwd_loss(&batch.x, &batch.y).unwrap();
-    let mut t = ProcTransport::spawn(spec(2, capacity, Vec::new())).expect("fleet spawns");
+    let mut t = FleetTransport::spawn(spec(2, capacity, Vec::new())).expect("fleet spawns");
     assert_eq!(t.n_workers(), 2);
     assert_eq!(t.workers_alive(), 2);
     t.publish(0, &Arc::new(session.snapshot().unwrap())).unwrap();
@@ -75,7 +80,11 @@ fn proc_transport_scores_bit_identically_and_reports_stats() {
             assert_eq!(*got, 0.0, "padding rows read as 0.0");
         }
     }
-    assert_eq!(t.worker_scored(), vec![1, 0], "seq 0 round-robins to worker 0");
+    assert_eq!(
+        t.worker_scored(),
+        vec![1, 0],
+        "affinity tie (ids split evenly across shards) routes to the lowest worker"
+    );
     let summary = t.shutdown().expect("clean shutdown");
     assert_eq!(summary.workers.len(), 2);
     assert_eq!(summary.workers_alive, 2);
@@ -100,7 +109,7 @@ fn leader_fails_fast_with_context_when_a_worker_dies() {
     // worker 1 survives exactly one frame (the ParamUpdate), then
     // crashes on whatever arrives next
     let mut t =
-        ProcTransport::spawn(spec(2, capacity, vec![None, Some(1)])).expect("fleet spawns");
+        FleetTransport::spawn(spec(2, capacity, vec![None, Some(1)])).expect("fleet spawns");
     t.publish(0, &Arc::new(session.snapshot().unwrap())).unwrap();
     let batch = Arc::new(batch);
     t.submit(&batch).unwrap();
@@ -130,9 +139,13 @@ fn pipeline_run_surfaces_worker_death() {
     std::env::set_var("OBFTF_WORKER_BIN", env!("CARGO_BIN_EXE_obftf"));
     // the injection travels by env so the spawn path stays production-
     // shaped; this file runs in its own test process, and the other
-    // tests here drive ProcTransport directly with explicit fail_after,
+    // tests here drive FleetTransport directly with explicit fail_after,
     // so the variable cannot leak anywhere it matters
     std::env::set_var("OBFTF_PROC_FAIL_AFTER", "1:2");
+    // zero the restart budget: the default elastic policy would respawn
+    // the crashed worker and heal the run, but this test pins the
+    // fail-fast surface of the trainer
+    std::env::set_var("OBFTF_PIPELINE_RESTART_LIMIT", "0");
     let cfg = TrainConfig {
         model: "linreg".to_string(),
         method: Method::MinK,
@@ -153,6 +166,7 @@ fn pipeline_run_surfaces_worker_death() {
     let err = p.run().expect_err("worker death must fail the run");
     let msg = format!("{err:#}");
     std::env::remove_var("OBFTF_PROC_FAIL_AFTER");
+    std::env::remove_var("OBFTF_PIPELINE_RESTART_LIMIT");
     assert!(msg.contains("worker 1"), "run error must name the worker: {msg}");
 }
 
@@ -162,7 +176,7 @@ fn pipeline_run_surfaces_worker_death() {
 fn missing_worker_binary_is_a_contextual_spawn_error() {
     let mut s = spec(1, 64, Vec::new());
     s.worker_bin = Some("/nonexistent/obftf-worker-binary".into());
-    let err = ProcTransport::spawn(s).expect_err("spawn must fail");
+    let err = FleetTransport::spawn(s).expect_err("spawn must fail");
     let msg = format!("{err:#}");
     assert!(msg.contains("spawning pipeline worker 0"), "msg: {msg}");
     assert!(msg.contains("/nonexistent/obftf-worker-binary"), "msg: {msg}");

@@ -11,7 +11,9 @@
 
 use std::io::Cursor;
 
-use obftf::coordinator::proto::{read_frame, Frame, ViewRow, WorkerStats, NO_ID};
+use obftf::coordinator::proto::{
+    read_frame, Frame, ViewRow, WorkerStats, MAX_FRAME_BYTES, NO_ID, PROTO_VERSION,
+};
 use obftf::data::HostTensor;
 use obftf::testkit::{cases, propcheck};
 
@@ -114,6 +116,25 @@ fn param_update_and_stats_roundtrip() {
     }));
 }
 
+/// The handshake frame every worker leads with: carries the protocol
+/// version and the worker's id, survives the wire bit-exactly at the
+/// extremes, and decodes back to the live PROTO_VERSION.
+#[test]
+fn hello_handshake_roundtrips() {
+    for (proto, worker) in [(PROTO_VERSION, 0), (0, u32::MAX), (u32::MAX, 7)] {
+        assert_roundtrip(&Frame::Hello { proto, worker });
+    }
+    let bytes = Frame::Hello { proto: PROTO_VERSION, worker: 3 }.encode();
+    let (back, _) = read_frame(&mut Cursor::new(bytes)).unwrap().unwrap();
+    match back {
+        Frame::Hello { proto, worker } => {
+            assert_eq!(proto, PROTO_VERSION);
+            assert_eq!(worker, 3);
+        }
+        other => panic!("expected Hello, got {}", other.name()),
+    }
+}
+
 /// Every strict prefix of a valid frame must be rejected (or report a
 /// clean boundary EOF for the empty prefix) — a dropped pipe mid-frame
 /// can never decode to a wrong frame.
@@ -177,4 +198,33 @@ fn corrupted_frames_are_rejected() {
     let len_at = 4 + 1 + 8 + 8 + 1; // tag + req + now + exact
     bad[len_at..len_at + 8].copy_from_slice(&u64::MAX.to_le_bytes());
     assert!(read_frame(&mut Cursor::new(bad)).is_err());
+}
+
+/// The length prefix is capped: a corrupted (or hostile) header
+/// claiming a frame beyond `MAX_FRAME_BYTES` is rejected *before* any
+/// body allocation, an in-cap claim over a short stream reports a
+/// truncated body rather than blocking, and a zero-length frame —
+/// impossible to encode, every frame has a tag byte — is rejected too.
+#[test]
+fn implausible_frame_lengths_are_rejected_without_allocation() {
+    // 4-byte header only: claims cap+1 bytes of body that don't exist.
+    // read_frame must refuse on the header alone — if it tried to
+    // allocate/read the claimed body this test would OOM or hang.
+    let over = (MAX_FRAME_BYTES + 1) as u32;
+    let mut cur = Cursor::new(over.to_le_bytes().to_vec());
+    let err = read_frame(&mut cur).expect_err("over-cap length must be rejected");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("implausible frame length"), "msg: {msg}");
+    // u32::MAX length prefix: same refusal
+    let mut cur = Cursor::new(u32::MAX.to_le_bytes().to_vec());
+    assert!(read_frame(&mut cur).is_err());
+    // in-cap claim, but the stream ends after 3 body bytes: truncation,
+    // not a giant buffer
+    let mut bytes = 1024u32.to_le_bytes().to_vec();
+    bytes.extend_from_slice(&[8, 0, 0]);
+    let err = read_frame(&mut Cursor::new(bytes)).expect_err("short body must be rejected");
+    assert!(format!("{err:#}").contains("truncated"), "{err:#}");
+    // zero-length frame
+    let mut cur = Cursor::new(0u32.to_le_bytes().to_vec());
+    assert!(read_frame(&mut cur).is_err(), "zero-length frame must be rejected");
 }

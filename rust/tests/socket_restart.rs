@@ -1,0 +1,183 @@
+//! The elastic half of the socket fleet: a worker killed mid-run is
+//! *restarted* by the supervised-restart policy instead of failing the
+//! job — its replacement re-handshakes, receives the current weights,
+//! re-warms its loss-cache shard from the leader's routed-row journal,
+//! and the run completes with `worker_restarts > 0` and results that
+//! are still bit-identical to the serial oracle (sync mode scores
+//! every row under the current parameter version, so a heal can never
+//! smuggle in a staleness-bound violation).
+//!
+//! Two layers are pinned: the transport driven directly (crash →
+//! restart → re-warmed lookups), and the pipeline trainer end to end
+//! over a Unix-socket fleet with an injected mid-run crash.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use obftf::config::TrainConfig;
+use obftf::coordinator::{
+    FleetSpec, FleetTransport, LinkMode, PipelineTrainer, StreamingTrainer, Transport,
+};
+use obftf::data::dataset::{Batch, InMemoryDataset};
+use obftf::data::{Rng, Targets, TensorData};
+use obftf::runtime::{Flavour, Manifest, Session};
+use obftf::sampling::Method;
+
+fn spec(workers: usize, capacity: usize, fail_after: Vec<Option<u64>>) -> FleetSpec {
+    FleetSpec {
+        model: "linreg".into(),
+        flavour: Flavour::Native,
+        workers,
+        capacity,
+        max_age: 0,
+        sync: true,
+        worker_bin: Some(env!("CARGO_BIN_EXE_obftf").into()),
+        timeout: Duration::from_secs(60),
+        fail_after,
+        link: LinkMode::Unix,
+        affinity: true,
+        restart_limit: 2,
+    }
+}
+
+fn fixture() -> (Session, Batch, usize) {
+    let manifest = Manifest::load_or_native(&obftf::artifacts_dir()).expect("manifest");
+    let batch_size = manifest.batch;
+    let capacity = batch_size * 2;
+    let mut rng = Rng::seed_from(41);
+    let xs: Vec<f32> = (0..capacity).map(|_| rng.normal() as f32).collect();
+    let ys: Vec<f32> = xs.iter().map(|x| 2.0 * x + 0.5).collect();
+    let ds = InMemoryDataset::new(vec![1], xs, Targets::F32(ys)).unwrap();
+    let ids: Vec<usize> = (0..batch_size).collect();
+    let batch = ds.gather_batch(&ids, batch_size).unwrap();
+    let mut session = Session::new(&manifest, "linreg", Flavour::Native).unwrap();
+    session.init(5).unwrap();
+    (session, batch, capacity)
+}
+
+/// Transport layer: worker 1 crashes after its second frame (the
+/// ParamUpdate plus one more). The supervisor must respawn it, replay
+/// its journal, and the very same `await_losses` call must still
+/// return losses bit-identical to a local session — with exactly one
+/// restart on the books and both shard owners answering lookups.
+#[test]
+fn socket_worker_crash_is_healed_by_supervised_restart() {
+    let (mut session, batch, capacity) = fixture();
+    let expect = session.fwd_loss(&batch.x, &batch.y).unwrap();
+    let mut t =
+        FleetTransport::spawn(spec(2, capacity, vec![None, Some(1)])).expect("fleet spawns");
+    t.publish(0, &Arc::new(session.snapshot().unwrap())).unwrap();
+    let batch = Arc::new(batch);
+    t.submit(&batch).unwrap();
+    let losses = t.await_losses(&batch, 0).expect("restart heals the handoff");
+    assert_eq!(losses.len(), batch.batch_size());
+    for (row, (got, want)) in losses.iter().zip(&expect).enumerate() {
+        if batch.valid_mask[row] > 0.0 {
+            assert_eq!(
+                got.to_bits(),
+                want.to_bits(),
+                "row {row}: healed fleet must stay bit-identical"
+            );
+        }
+    }
+    assert_eq!(t.restarts(), 1, "exactly one supervised restart");
+    assert_eq!(t.workers_alive(), 2, "the replacement counts as alive");
+    let summary = t.shutdown().expect("clean shutdown");
+    assert_eq!(summary.restarts, 1);
+    assert_eq!(summary.workers.len(), 2);
+    assert_eq!(summary.workers_alive, 2);
+    // the re-warmed shard answered: every real row was recorded by a
+    // shard owner and both owners served lookups
+    let recorded: u64 = summary.workers.iter().map(|w| w.recorded_rows).sum();
+    assert_eq!(recorded, batch.real as u64);
+    assert!(summary.workers.iter().all(|w| w.lookups >= 1));
+}
+
+/// A worker that keeps dying exhausts the restart budget and the
+/// leader fails with full context instead of respawning forever.
+#[test]
+fn restart_budget_exhaustion_fails_with_context() {
+    let (session, batch, capacity) = fixture();
+    let mut s = spec(1, capacity, vec![Some(0)]);
+    s.restart_limit = 0;
+    let mut t = FleetTransport::spawn(s).expect("fleet spawns");
+    let batch = Arc::new(batch);
+    let err = t
+        .publish(0, &Arc::new(session.snapshot().unwrap()))
+        .and_then(|()| t.submit(&batch))
+        .and_then(|()| t.await_losses(&batch, 0).map(|_| ()))
+        .expect_err("zero budget must fail fast");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("worker 0"), "error names the worker: {msg}");
+}
+
+/// End to end over Unix sockets: serial oracle vs a socket pipeline
+/// whose worker 1 is killed mid-run by `--fail-after` injection. The
+/// run must complete, record the restart in its step telemetry, and
+/// stay bit-for-bit equal to serial — selection hashes, losses and
+/// final weights.
+#[test]
+fn socket_pipeline_survives_midrun_worker_kill_bit_identically() {
+    std::env::set_var("OBFTF_WORKER_BIN", env!("CARGO_BIN_EXE_obftf"));
+    // worker 1 dies on its 7th frame — a few steps in, mid-pipeline
+    std::env::set_var("OBFTF_PROC_FAIL_AFTER", "1:6");
+    let m = Manifest::load_or_native(&obftf::artifacts_dir()).expect("manifest");
+    let base = TrainConfig {
+        model: "mlp".to_string(),
+        method: Method::Obftf,
+        sampling_ratio: 0.25,
+        epochs: 0,
+        stream_steps: 12,
+        lr: 0.05,
+        n_train: Some(512),
+        n_test: Some(256),
+        seed: 31,
+        eval_every: 5,
+        ..Default::default()
+    };
+    let mut serial = StreamingTrainer::with_manifest(&base, &m).unwrap();
+    serial.run().unwrap();
+    let sparams = serial.trainer().session().params_to_host().unwrap();
+
+    let mut pc = base.clone();
+    pc.pipeline = true;
+    pc.pipeline_sync = true;
+    pc.pipeline_proc = true;
+    pc.pipeline_socket = "unix".to_string();
+    pc.pipeline_workers = 2;
+    let mut p = PipelineTrainer::with_manifest(&pc, &m).unwrap();
+    let report = p.run().expect("restart policy must heal the injected kill");
+    std::env::remove_var("OBFTF_PROC_FAIL_AFTER");
+    assert_eq!(report.steps, 12);
+
+    // the kill actually happened and was healed, not dodged
+    let last = p.recorder.steps.last().expect("steps recorded");
+    assert!(last.worker_restarts > 0, "run must have restarted a worker");
+    assert_eq!(last.workers_alive, 2, "fleet is whole again at the end");
+
+    // bit-for-bit against serial, restart and all
+    let srecs = &serial.trainer().recorder.steps;
+    let precs = &p.recorder.steps;
+    assert_eq!(srecs.len(), precs.len());
+    for (a, b) in srecs.iter().zip(precs.iter()) {
+        assert_eq!(a.sel_hash, b.sel_hash, "step {}: selected sets differ", a.step);
+        assert_eq!(
+            a.sel_loss.to_bits(),
+            b.sel_loss.to_bits(),
+            "step {} sel_loss diverged across the restart",
+            a.step
+        );
+    }
+    let pparams = p.session().params_to_host().unwrap();
+    assert_eq!(sparams.len(), pparams.len());
+    for (i, (ta, tb)) in sparams.iter().zip(&pparams).enumerate() {
+        match (&ta.data, &tb.data) {
+            (TensorData::F32(va), TensorData::F32(vb)) => {
+                for (j, (x, y)) in va.iter().zip(vb).enumerate() {
+                    assert_eq!(x.to_bits(), y.to_bits(), "param {i}[{j}] diverged");
+                }
+            }
+            _ => panic!("params must be f32"),
+        }
+    }
+}
