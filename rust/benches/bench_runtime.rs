@@ -10,8 +10,10 @@
 use obftf::checkpoint::Checkpoint;
 use obftf::data::stream::{Prefetcher, ResamplingStream};
 use obftf::data::HostTensor;
-use obftf::runtime::kernels::{dense_fwd_flops, dense_train_flops};
-use obftf::runtime::{Backend, Engine, KernelConfig, Manifest, NativeBackend, Session};
+use obftf::runtime::kernels::{dense_fwd_flops, dense_train_flops, simd_available};
+use obftf::runtime::{
+    Backend, Engine, KernelConfig, Manifest, NativeBackend, ScorePrecision, Session,
+};
 use obftf::testkit::TempDir;
 use obftf::util::benchkit::{black_box, Bench};
 
@@ -51,6 +53,12 @@ fn main() {
         if threads > 1 {
             cases.push((format!("blocked-t{threads}"), KernelConfig::blocked(threads)));
         }
+        if simd_available() {
+            cases.push(("simd-t1".to_string(), KernelConfig::simd(1)));
+            if threads > 1 {
+                cases.push((format!("simd-t{threads}"), KernelConfig::simd(threads)));
+            }
+        }
         for (tag, kcfg) in cases {
             let mut b = NativeBackend::with_kernel_config("mlp", entry, n, kcfg).unwrap();
             b.init(1).unwrap();
@@ -70,6 +78,18 @@ fn main() {
                     black_box(b.train_step(&x, &y, &mask, 0.01).unwrap());
                 },
             );
+        }
+
+        // fast-scoring row: the fleet's bf16-panel forward on the same
+        // workload (rows/s is the number the async pipeline cares about)
+        if simd_available() {
+            let kcfg = KernelConfig::simd(1);
+            let mut b = NativeBackend::with_kernel_config("mlp", entry, n, kcfg).unwrap();
+            b.init(1).unwrap();
+            b.set_score_precision(ScorePrecision::Bf16);
+            bench.run_throughput("native/mlp/fwd_loss/bf16-score", fwd_flops, n as f64, || {
+                black_box(b.fwd_loss(&x, &y).unwrap());
+            });
         }
     }
 

@@ -118,6 +118,12 @@ pub struct TrainConfig {
     /// 0 = the built-in 30 s stall timeout (`OBFTF_PROC_TIMEOUT_MS`
     /// overrides).
     pub proc_timeout_ms: u64,
+    /// Numeric precision of the pipeline fleet's scoring forward:
+    /// "f32" (exact, default) or "bf16" (packed bf16 panels with f32
+    /// accumulation — async pipeline only; sync mode rejects it to
+    /// stay bit-identical to the serial trainer).
+    /// (`OBFTF_SCORE_PRECISION` overrides.)
+    pub score_precision: String,
     /// CLI-layer knob overrides (never read from TOML; populated only
     /// by the `obftf` flag parser — a `Some` beats env and config).
     pub overrides: PipelineOverrides,
@@ -159,6 +165,7 @@ impl Default for TrainConfig {
             pipeline_affinity: true,
             pipeline_restart_limit: 2,
             proc_timeout_ms: 0,
+            score_precision: "f32".to_string(),
             overrides: PipelineOverrides::default(),
         }
     }
@@ -220,6 +227,7 @@ impl TrainConfig {
                     .map_err(|_| anyhow::anyhow!("pipeline_restart_limit too large"))?
             }
             "proc_timeout_ms" => self.proc_timeout_ms = val.as_u64()?,
+            "score_precision" => self.score_precision = val.as_str()?.to_string(),
             other => bail!("unknown config key {other:?}"),
         }
         Ok(())
@@ -272,6 +280,10 @@ impl TrainConfig {
         match self.pipeline_socket.as_str() {
             "" | "none" | "pipes" | "unix" | "tcp" => {}
             other => bail!("unknown pipeline_socket {other:?} (want unix | tcp | none)"),
+        }
+        match self.score_precision.as_str() {
+            "f32" | "bf16" => {}
+            other => bail!("unknown score_precision {other:?} (expected f32 | bf16)"),
         }
         match self.flavour.as_str() {
             "auto" | "native" | "pallas" | "jnp" => {}
@@ -401,6 +413,18 @@ epochs = 2
             "epochs = 0\nstream_steps = 50\npipeline = true\npipeline_socket = \"smoke\"\n"
         )
         .is_err());
+    }
+
+    #[test]
+    fn score_precision_parses_and_rejects_junk() {
+        let cfg = TrainConfig::from_toml_str(
+            "epochs = 0\nstream_steps = 50\npipeline = true\nscore_precision = \"bf16\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.score_precision, "bf16");
+        assert_eq!(TrainConfig::default().score_precision, "f32");
+        let err = TrainConfig::from_toml_str("score_precision = \"f16\"\n").unwrap_err();
+        assert!(format!("{err:#}").contains("f32 | bf16"), "err: {err:#}");
     }
 
     #[test]

@@ -28,12 +28,14 @@
 //! | affinity       | `--pipeline-affinity` | `OBFTF_PIPELINE_AFFINITY` | `pipeline_affinity` | true |
 //! | restart limit  | `--restart-limit`     | `OBFTF_PIPELINE_RESTART_LIMIT` | `pipeline_restart_limit` | 2 |
 //! | fleet timeout  | (none)                | `OBFTF_PROC_TIMEOUT_MS`   | `proc_timeout_ms`   | 0 = 30 s |
+//! | score precision | `--score-precision`  | `OBFTF_SCORE_PRECISION`   | `score_precision`   | f32 |
 
 use std::time::Duration;
 
 use anyhow::{bail, Result};
 
 use crate::config::TrainConfig;
+use crate::runtime::ScorePrecision;
 
 /// Which transport carries the inference fleet.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -80,6 +82,8 @@ pub struct PipelineOverrides {
     pub affinity: Option<bool>,
     pub restart_limit: Option<u32>,
     pub timeout_ms: Option<u64>,
+    /// Scoring-forward precision: "f32" | "bf16".
+    pub score_precision: Option<String>,
 }
 
 impl PipelineOverrides {
@@ -114,6 +118,10 @@ pub struct PipelineOptions {
     pub max_age: u64,
     /// Fleet spawn/connect/handshake/await bound.
     pub timeout: Duration,
+    /// Precision of the fleet's scoring forward. `Bf16` is async-only:
+    /// [`PipelineOptions::resolve`] rejects it in sync mode so the
+    /// bit-identical oracle stays bit-identical.
+    pub score_precision: ScorePrecision,
 }
 
 fn env_usize(key: &str) -> Option<usize> {
@@ -214,6 +222,19 @@ impl PipelineOptions {
         } else {
             crate::coordinator::ipc::STALL_TIMEOUT
         };
+        let score_str = ov
+            .score_precision
+            .clone()
+            .or_else(|| env_str("OBFTF_SCORE_PRECISION"))
+            .unwrap_or_else(|| cfg.score_precision.clone());
+        let score_precision = ScorePrecision::parse(score_str.trim())?;
+        if sync && score_precision == ScorePrecision::Bf16 {
+            bail!(
+                "score_precision = bf16 is incompatible with pipeline_sync: sync mode is \
+                 the bit-identical oracle and must score in exact f32 (drop --pipeline-sync \
+                 or use score_precision = f32)"
+            );
+        }
         let max_age = if cfg.loss_max_age > 0 {
             cfg.loss_max_age
         } else {
@@ -229,6 +250,7 @@ impl PipelineOptions {
             restart_limit,
             max_age,
             timeout,
+            score_precision,
         })
     }
 
@@ -250,6 +272,7 @@ impl PipelineOptions {
                 if max_age_auto { "auto".to_string() } else { self.max_age.to_string() }
             ),
             format!("proc_timeout_ms = {}", self.timeout.as_millis()),
+            format!("score_precision = {}", self.score_precision),
         ]
     }
 }
@@ -308,6 +331,31 @@ mod tests {
         assert!(!o.affinity);
         assert_eq!(o.restart_limit, 0);
         assert_eq!(o.timeout, Duration::from_millis(1234));
+        cfg.overrides.score_precision = Some("bf16".into());
+        let o = PipelineOptions::resolve(&cfg, 64, 8).unwrap();
+        assert_eq!(o.score_precision, ScorePrecision::Bf16);
+    }
+
+    /// bf16 scoring is an async-only fast path: the resolver accepts it
+    /// whenever handoffs are asynchronous and rejects it in sync mode
+    /// (the bit-identical oracle), from any source of the knob.
+    #[test]
+    fn bf16_scoring_is_async_only() {
+        let mut cfg = base();
+        cfg.score_precision = "bf16".into();
+        let o = PipelineOptions::resolve(&cfg, 64, 8).unwrap();
+        assert_eq!(o.score_precision, ScorePrecision::Bf16);
+        cfg.pipeline_sync = true;
+        let err = PipelineOptions::resolve(&cfg, 64, 8).unwrap_err().to_string();
+        assert!(err.contains("pipeline_sync"), "err: {err}");
+        // the CLI spelling is validated here too
+        let mut cfg = base();
+        cfg.overrides.score_precision = Some("f64".into());
+        let err = PipelineOptions::resolve(&cfg, 64, 8).unwrap_err().to_string();
+        assert!(err.contains("f32 | bf16"), "err: {err}");
+        // default stays exact
+        let o = PipelineOptions::resolve(&base(), 64, 8).unwrap();
+        assert_eq!(o.score_precision, ScorePrecision::F32);
     }
 
     /// One env-injection test (process env is shared across a test
@@ -341,6 +389,7 @@ mod tests {
             "pipeline_sync",
             "pipeline_restart_limit",
             "proc_timeout_ms",
+            "score_precision",
         ] {
             assert!(lines.iter().any(|l| l.starts_with(key)), "missing {key}");
         }

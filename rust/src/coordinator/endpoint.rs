@@ -66,6 +66,8 @@ pub struct EndpointSpawner {
     pub workers: usize,
     pub capacity: usize,
     pub max_age: u64,
+    /// Scoring-forward precision the worker runs ("f32" | "bf16").
+    pub score_precision: String,
     pub link: LinkMode,
     /// Bound on spawn-side waits (socket bootstrap line, connect).
     pub timeout: Duration,
@@ -152,6 +154,8 @@ impl EndpointSpawner {
             .arg(self.capacity.to_string())
             .arg("--max-age")
             .arg(self.max_age.to_string())
+            .arg("--score-precision")
+            .arg(&self.score_precision)
             .stdin(Stdio::piped())
             .stdout(Stdio::piped());
         if let Some(k) = fail_after {

@@ -62,7 +62,7 @@ use crate::coordinator::loss_cache::{
 use crate::coordinator::proto::{self, Frame, ViewRow, WorkerStats, NO_ID};
 use crate::data::dataset::Batch;
 use crate::data::HostTensor;
-use crate::runtime::{Flavour, Manifest, Session};
+use crate::runtime::{Flavour, Manifest, ScorePrecision, Session};
 
 /// Upper bound on how long the leader waits for fleet progress before
 /// declaring the pipeline wedged (overridable per-transport via spec).
@@ -170,6 +170,9 @@ pub struct InProcSpec {
     /// Ticket-queue bound (lookahead depth + workers + slack).
     pub queue_cap: usize,
     pub stall: Duration,
+    /// Scoring-forward precision for the fleet's `fwd_loss` calls
+    /// (training never sees it — the fleet only scores).
+    pub score_precision: ScorePrecision,
 }
 
 /// The PR-3 thread fleet behind the [`Transport`] trait.
@@ -206,6 +209,7 @@ impl InProcTransport {
                 manifest: spec.manifest.clone(),
                 model: spec.model.clone(),
                 flavour: spec.flavour,
+                score_precision: spec.score_precision,
                 index: w,
                 tickets: ticket_rx.clone(),
                 cache: cache.clone(),
@@ -412,6 +416,7 @@ struct WorkerCtx {
     manifest: Manifest,
     model: String,
     flavour: Flavour,
+    score_precision: ScorePrecision,
     index: usize,
     tickets: SharedTickets,
     cache: Arc<ShardedLossCache>,
@@ -436,6 +441,7 @@ fn inference_worker(ctx: WorkerCtx) {
         Ok(s) => s,
         Err(e) => return record_failure(&ctx.err, "inference worker (session build)", e),
     };
+    session.set_score_precision(ctx.score_precision);
     let mut loaded_version = u64::MAX;
     loop {
         let msg = ctx.tickets.lock().expect("ticket queue").recv();
@@ -473,6 +479,8 @@ pub struct FleetSpec {
     pub capacity: usize,
     pub max_age: u64,
     pub sync: bool,
+    /// Scoring-forward precision the children run (`--score-precision`).
+    pub score_precision: ScorePrecision,
     /// Worker binary; `None` resolves `$OBFTF_WORKER_BIN`, then the
     /// current executable (correct when the leader *is* `obftf`).
     pub worker_bin: Option<PathBuf>,
@@ -615,6 +623,7 @@ impl FleetTransport {
             workers: spec.workers,
             capacity: spec.capacity,
             max_age: spec.max_age,
+            score_precision: spec.score_precision.as_str().to_string(),
             link: spec.link,
             timeout: spec.timeout,
         };
@@ -1253,6 +1262,8 @@ pub struct WorkerConfig {
     /// Stored for symmetry/diagnostics; freshness is classified
     /// leader-side from the stamps in `CacheView`s.
     pub max_age: u64,
+    /// Scoring-forward precision: "f32" | "bf16".
+    pub score_precision: String,
     /// Test-only: crash (exit 17, no handshake) after this many frames.
     pub fail_after: Option<u64>,
 }
@@ -1284,6 +1295,9 @@ pub fn run_worker(cfg: &WorkerConfig, mut input: impl Read, mut output: impl Wri
     let flavour = manifest.resolve_flavour(&cfg.flavour)?;
     let mut session = Session::new(&manifest, &cfg.model, flavour)
         .with_context(|| format!("worker {}: building session for {}", cfg.worker_id, cfg.model))?;
+    let precision = ScorePrecision::parse(cfg.score_precision.trim())
+        .with_context(|| format!("worker {}: --score-precision", cfg.worker_id))?;
+    session.set_score_precision(precision);
     let mut cache = LossCache::new(cfg.capacity, 0);
     let me = cfg.worker_id as u64;
     let n = cfg.n_workers as u64;
@@ -1396,6 +1410,7 @@ mod tests {
             flavour: "native".into(),
             capacity,
             max_age: 0,
+            score_precision: "f32".into(),
             fail_after: None,
         }
     }

@@ -231,6 +231,7 @@ impl PipelineTrainer {
                     sync: self.options.sync,
                     queue_cap,
                     stall: STALL_TIMEOUT,
+                    score_precision: self.options.score_precision,
                 })?));
             }
             TransportKind::Pipes => LinkMode::Pipes,
@@ -244,6 +245,7 @@ impl PipelineTrainer {
             capacity: self.capacity,
             max_age: self.options.max_age,
             sync: self.options.sync,
+            score_precision: self.options.score_precision,
             worker_bin: None,
             timeout: self.options.timeout,
             fail_after: crate::coordinator::ipc::fail_after_from_env(self.options.workers),

@@ -75,6 +75,10 @@ fn with_train_flags(p: ArgParser) -> ArgParser {
             "supervised worker restarts allowed before a death is fatal (0 = fail-fast)",
         )
         .flag("proc-timeout-ms", "fleet spawn/connect/handshake/await bound (0 = 30 s)")
+        .flag(
+            "score-precision",
+            "fleet scoring-forward precision: f32 | bf16 (bf16 = async pipeline only)",
+        )
 }
 
 fn build_config(p: &Parsed) -> Result<TrainConfig> {
@@ -189,6 +193,10 @@ fn build_config(p: &Parsed) -> Result<TrainConfig> {
         cfg.proc_timeout_ms = v;
         cfg.overrides.timeout_ms = Some(v);
     }
+    if let Some(v) = p.get("score-precision") {
+        cfg.score_precision = v.to_string();
+        cfg.overrides.score_precision = Some(v.to_string());
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -214,6 +222,10 @@ fn cmd_config(args: &[String]) -> Result<()> {
     println!("dataset = {:?}", cfg.dataset_name());
     println!("method = {:?}", cfg.method.as_str());
     println!("pipeline = {}", cfg.pipeline);
+    // kernel flavour resolves from the environment, not the TOML layer
+    let kcfg = obftf::runtime::KernelConfig::from_env();
+    println!("native_kernels = {}", kcfg.flavour.as_str());
+    println!("cpu_features = {}", obftf::runtime::kernels::simd::cpu_features());
     // no dataset is materialised here, so the auto max-age window
     // (two epochs' worth of steps) cannot be sized yet
     let options = PipelineOptions::resolve(&cfg, 0, 0)?;
@@ -371,6 +383,7 @@ fn cmd_worker(args: &[String]) -> Result<()> {
         .flag("capacity", "loss-cache capacity = training-set size (required)")
         .flag("max-age", "loss max age in steps (diagnostic; freshness is leader-side)")
         .flag("listen", "serve one leader over a socket: unix:PATH | tcp:HOST:PORT")
+        .flag("score-precision", "scoring-forward precision: f32 | bf16 (default f32)")
         .flag("fail-after", "TEST ONLY: crash after N frames (kill-a-worker regression)");
     let p = parser.parse(args)?;
     let need = |name: &str| -> Result<usize> {
@@ -384,6 +397,7 @@ fn cmd_worker(args: &[String]) -> Result<()> {
         flavour: p.get("flavour").unwrap_or("auto").to_string(),
         capacity: need("capacity")?,
         max_age: p.get_parse::<u64>("max-age")?.unwrap_or(0),
+        score_precision: p.get("score-precision").unwrap_or("f32").to_string(),
         fail_after: p.get_parse::<u64>("fail-after")?,
     };
     if let Some(listen) = p.get("listen") {

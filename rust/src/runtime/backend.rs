@@ -17,6 +17,48 @@ use anyhow::{bail, Result};
 
 use crate::data::tensor::{HostTensor, TensorData};
 
+/// Numeric precision of the *scoring* forward ([`Backend::fwd_loss`]):
+/// the "ten forward" passes whose per-example losses feed selection.
+/// Training (`train_step`/`grads`/`apply`) and eval always run exact
+/// f32 regardless of this setting.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ScorePrecision {
+    /// Exact f32 scoring (the default) — `fwd_loss` stays bit-identical
+    /// to the training forward.
+    #[default]
+    F32,
+    /// bf16 packed weight/activation panels with f32 accumulation —
+    /// roughly half the memory traffic on the bandwidth-bound scoring
+    /// pass, under a relaxed-tolerance accuracy contract. Async
+    /// pipeline only: sync mode rejects it to stay bit-exact to serial.
+    Bf16,
+}
+
+impl ScorePrecision {
+    /// The config/CLI spelling of this precision.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ScorePrecision::F32 => "f32",
+            ScorePrecision::Bf16 => "bf16",
+        }
+    }
+
+    /// Parse the config/CLI spelling (`f32` | `bf16`).
+    pub fn parse(s: &str) -> Result<ScorePrecision> {
+        match s {
+            "f32" => Ok(ScorePrecision::F32),
+            "bf16" => Ok(ScorePrecision::Bf16),
+            other => bail!("unknown score_precision {other:?} (expected f32 | bf16)"),
+        }
+    }
+}
+
+impl std::fmt::Display for ScorePrecision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
 /// Cumulative execution counters for the perf pass.
 ///
 /// `exec_ns` is wall time across all executable calls; `forward_ns` /
@@ -102,6 +144,12 @@ pub trait Backend {
 
     /// Human-readable execution platform (e.g. `"native-cpu"`).
     fn platform_name(&self) -> String;
+
+    /// Select the precision of subsequent [`Backend::fwd_loss`] calls.
+    /// Backends without a reduced-precision scoring path may ignore
+    /// this (the default is a no-op): `ScorePrecision::F32` must always
+    /// be honoured, `Bf16` is a best-effort fast path.
+    fn set_score_precision(&mut self, _precision: ScorePrecision) {}
 }
 
 /// Gather `selected` rows of a batch into a `rows`-row sub-batch,
@@ -152,6 +200,17 @@ pub(crate) fn gather_rows(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn score_precision_round_trips_and_rejects_junk() {
+        assert_eq!(ScorePrecision::default(), ScorePrecision::F32);
+        for p in [ScorePrecision::F32, ScorePrecision::Bf16] {
+            assert_eq!(ScorePrecision::parse(p.as_str()).unwrap(), p);
+            assert_eq!(format!("{p}"), p.as_str());
+        }
+        let err = ScorePrecision::parse("f16").unwrap_err().to_string();
+        assert!(err.contains("f32 | bf16"), "err: {err}");
+    }
 
     #[test]
     fn gather_rows_picks_and_pads() {

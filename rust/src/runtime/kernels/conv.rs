@@ -31,7 +31,7 @@
 //! [`NR`]: super::NR
 
 use super::pool::par_rows;
-use super::{gemm, Arena};
+use super::{gemm, simd, Arena};
 
 /// Geometry of one SAME-padded conv layer (NHWC activations, HWIO
 /// weights), resolved once at backend construction.
@@ -264,6 +264,90 @@ pub fn conv2d_grad_x_blocked(
     gemm::dz_wt(arena, dz, k, &mut dpatch, rows, s.patch_len(), s.cout, threads);
     col2im(&dpatch, n, s, dx, Some(h_in), threads);
     arena.put(dpatch);
+}
+
+/// SIMD `out = act(conv2d(x, k) + b)`: the same im2col unfold routed
+/// through the AVX2 GEMM microkernels ([`super::simd`]) — bit-identical
+/// to [`conv2d_bias_act_blocked`] by the GEMM-level equality.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_bias_act_simd(
+    arena: &mut Arena,
+    x: &[f32],
+    k: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    n: usize,
+    s: &ConvShape,
+    relu: bool,
+    threads: usize,
+) {
+    let rows = n * s.positions();
+    let mut cols = arena.take(rows * s.patch_len());
+    im2col(x, n, s, &mut cols, threads);
+    simd::matmul_bias_act(arena, &cols, k, b, out, rows, s.patch_len(), s.cout, relu, threads);
+    arena.put(cols);
+}
+
+/// SIMD `dk = patchesᵀ · dz`, `db = Σ dz`; bit-identical to
+/// [`conv2d_grad_w_blocked`].
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_grad_w_simd(
+    arena: &mut Arena,
+    x: &[f32],
+    dz: &[f32],
+    dk: &mut [f32],
+    db: &mut [f32],
+    n: usize,
+    s: &ConvShape,
+    threads: usize,
+) {
+    let rows = n * s.positions();
+    let mut cols = arena.take(rows * s.patch_len());
+    im2col(x, n, s, &mut cols, threads);
+    simd::grad_weights(arena, &cols, dz, dk, db, rows, s.patch_len(), s.cout, threads);
+    arena.put(cols);
+}
+
+/// SIMD conv input gradient; bit-identical to
+/// [`conv2d_grad_x_blocked`].
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_grad_x_simd(
+    arena: &mut Arena,
+    dz: &[f32],
+    k: &[f32],
+    h_in: &[f32],
+    dx: &mut [f32],
+    n: usize,
+    s: &ConvShape,
+    threads: usize,
+) {
+    let rows = n * s.positions();
+    let mut dpatch = arena.take(rows * s.patch_len());
+    simd::dz_wt(arena, dz, k, &mut dpatch, rows, s.patch_len(), s.cout, threads);
+    col2im(&dpatch, n, s, dx, Some(h_in), threads);
+    arena.put(dpatch);
+}
+
+/// bf16 fast-scoring conv forward: the f32 im2col unfold feeding the
+/// bf16 packed-panel GEMM ([`super::simd::matmul_bias_act_bf16`]).
+/// Scoring only — relaxed tolerance, never used by training math.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_bias_act_bf16(
+    arena: &mut Arena,
+    x: &[f32],
+    k: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    n: usize,
+    s: &ConvShape,
+    relu: bool,
+    threads: usize,
+) {
+    let rows = n * s.positions();
+    let mut cols = arena.take(rows * s.patch_len());
+    im2col(x, n, s, &mut cols, threads);
+    simd::matmul_bias_act_bf16(arena, &cols, k, b, out, rows, s.patch_len(), s.cout, relu, threads);
+    arena.put(cols);
 }
 
 /// Zero `dst` wherever the matching activation is not strictly

@@ -30,8 +30,9 @@ use super::{Arena, MR, NR};
 /// panels: `dst[p*rows*NR + r*NR + c] = src[r*cols + p*NR + c]`,
 /// zero-padded in the last panel. Used for the forward weight panels
 /// and the backward `dz` panels — both stream contiguous `NR`-wide
-/// lines in the micro-kernels.
-fn pack_panels(src: &[f32], rows: usize, cols: usize, dst: &mut [f32]) {
+/// lines in the micro-kernels ([`super::simd`] packs identically, so
+/// its tiles see bit-for-bit the same operands).
+pub(super) fn pack_panels(src: &[f32], rows: usize, cols: usize, dst: &mut [f32]) {
     let npanels = cols.div_ceil(NR);
     for p in 0..npanels {
         let o0 = p * NR;

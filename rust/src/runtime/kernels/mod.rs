@@ -19,13 +19,19 @@
 //! * [`matmul_dz_wt`]    — plain `dz · Wᵀ` (the linear pooled node);
 //! * [`conv::global_avg_pool`] / [`conv::global_avg_pool_grad`].
 //!
-//! Two implementations sit behind [`KernelConfig`]:
+//! Three implementations sit behind [`KernelConfig`]:
 //!
 //! * [`gemm`] — the blocked path: weights packed into [`NR`]-wide
 //!   column panels (contiguous streaming), [`MR`]×[`NR`] register
 //!   tiles, fused bias + ReLU epilogues, and batch-row sharding across
 //!   a scoped thread pool ([`pool`]); conv lowers onto the same tiles
 //!   via im2col ([`conv`]);
+//! * [`simd`] — the same packing/tiling/sharding with explicit
+//!   AVX2+FMA microkernels, runtime-detected
+//!   (`is_x86_feature_detected!`) and falling back to the blocked path
+//!   on other machines; bit-identical to `blocked` for all f32
+//!   training math, plus the bf16 fast-scoring forward the inference
+//!   fleet uses under a relaxed-tolerance contract;
 //! * [`reference`] — the naive row-major loops (triple loops for
 //!   dense, direct seven-deep loops for conv) the blocked path is
 //!   property-tested against (`tests/kernel_parity.rs`,
@@ -46,7 +52,9 @@
 //!
 //! * `OBFTF_NATIVE_THREADS` — worker threads for the blocked path
 //!   (default: available parallelism; `1` disables threading);
-//! * `OBFTF_NATIVE_KERNELS` — `blocked` (default) or `reference`.
+//! * `OBFTF_NATIVE_KERNELS` — `simd`, `blocked` (default) or
+//!   `reference`; an unrecognized value warns once to stderr and falls
+//!   back to `blocked`.
 
 #![allow(clippy::too_many_arguments)] // kernels take flat slices + dims
 
@@ -54,6 +62,7 @@ pub mod conv;
 pub mod gemm;
 pub mod pool;
 pub mod reference;
+pub mod simd;
 
 pub use conv::ConvShape;
 
@@ -74,11 +83,26 @@ pub const PAR_THRESHOLD_FLOPS: usize = 1 << 18;
 /// Which kernel implementation a backend dispatches onto.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum KernelFlavour {
+    /// Explicit AVX2+FMA microkernels with runtime feature detection;
+    /// bit-identical to [`KernelFlavour::Blocked`] for f32 training
+    /// math, and falls back to it when the CPU lacks AVX2+FMA.
+    Simd,
     /// Blocked/packed register-tiled kernels (the default).
     Blocked,
     /// Naive row-major loops — the property-test oracle, kept
     /// selectable so benches can measure the speedup.
     Reference,
+}
+
+impl KernelFlavour {
+    /// The `OBFTF_NATIVE_KERNELS` spelling of this flavour.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            KernelFlavour::Simd => "simd",
+            KernelFlavour::Blocked => "blocked",
+            KernelFlavour::Reference => "reference",
+        }
+    }
 }
 
 /// Resolved kernel configuration for one backend instance.
@@ -92,11 +116,24 @@ pub struct KernelConfig {
 impl KernelConfig {
     /// Resolve from the environment: `OBFTF_NATIVE_KERNELS` /
     /// `OBFTF_NATIVE_THREADS`, defaulting to blocked kernels on all
-    /// available cores.
+    /// available cores. An unrecognized kernel flavour warns once to
+    /// stderr (instead of silently falling back) and uses `blocked`.
     pub fn from_env() -> KernelConfig {
         let flavour = match std::env::var("OBFTF_NATIVE_KERNELS").as_deref() {
+            Ok("simd") => KernelFlavour::Simd,
+            Ok("blocked") => KernelFlavour::Blocked,
             Ok("reference") | Ok("naive") => KernelFlavour::Reference,
-            _ => KernelFlavour::Blocked,
+            Ok(other) => {
+                static WARN_ONCE: std::sync::Once = std::sync::Once::new();
+                WARN_ONCE.call_once(|| {
+                    eprintln!(
+                        "warning: unrecognized OBFTF_NATIVE_KERNELS value {other:?} \
+                         (expected simd | blocked | reference); using blocked"
+                    );
+                });
+                KernelFlavour::Blocked
+            }
+            Err(_) => KernelFlavour::Blocked,
         };
         let threads = std::env::var("OBFTF_NATIVE_THREADS")
             .ok()
@@ -104,6 +141,12 @@ impl KernelConfig {
             .filter(|&t| t > 0)
             .unwrap_or_else(pool::available_threads);
         KernelConfig { flavour, threads }
+    }
+
+    /// SIMD kernels (AVX2+FMA when the CPU has them, blocked scalar
+    /// otherwise — bit-identical either way).
+    pub fn simd(threads: usize) -> KernelConfig {
+        KernelConfig { flavour: KernelFlavour::Simd, threads: threads.max(1) }
     }
 
     /// Single-threaded blocked kernels (deterministic default for
@@ -125,6 +168,14 @@ impl KernelConfig {
             self.threads
         }
     }
+}
+
+/// Whether this machine can run the AVX2+FMA microkernels — what the
+/// `simd` flavour actually executes (false means it transparently runs
+/// the scalar blocked path). Surfaced by `obftf config
+/// --print-effective`.
+pub fn simd_available() -> bool {
+    simd::available()
 }
 
 /// A free-list of f32 scratch buffers so the per-step working set
@@ -211,6 +262,39 @@ pub fn matmul_bias_act(
             let threads = cfg.threads_for(n * din * dout);
             gemm::matmul_bias_act(arena, h, w, b, out, n, din, dout, relu, threads);
         }
+        KernelFlavour::Simd => {
+            let threads = cfg.threads_for(n * din * dout);
+            simd::matmul_bias_act(arena, h, w, b, out, n, din, dout, relu, threads);
+        }
+    }
+}
+
+/// Forward matmul for the *scoring* pass: with `bf16` set the weights
+/// and activations round to bf16 packed panels (f32 accumulation,
+/// relaxed tolerance — see [`simd::matmul_bias_act_bf16`]) regardless
+/// of the configured flavour; otherwise identical to
+/// [`matmul_bias_act`]. Only `NativeBackend::fwd_loss` routes here —
+/// training and eval math never does.
+pub fn matmul_bias_act_scored(
+    cfg: &KernelConfig,
+    arena: &mut Arena,
+    h: &[f32],
+    w: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    n: usize,
+    din: usize,
+    dout: usize,
+    relu: bool,
+    bf16: bool,
+) {
+    if bf16 {
+        debug_assert_eq!(h.len(), n * din);
+        debug_assert_eq!(w.len(), din * dout);
+        let threads = cfg.threads_for(n * din * dout);
+        simd::matmul_bias_act_bf16(arena, h, w, b, out, n, din, dout, relu, threads);
+    } else {
+        matmul_bias_act(cfg, arena, h, w, b, out, n, din, dout, relu);
     }
 }
 
@@ -237,6 +321,10 @@ pub fn grad_weights(
         KernelFlavour::Blocked => {
             let threads = cfg.threads_for(n * din * dout);
             gemm::grad_weights(arena, h, dz, dw, db, n, din, dout, threads);
+        }
+        KernelFlavour::Simd => {
+            let threads = cfg.threads_for(n * din * dout);
+            simd::grad_weights(arena, h, dz, dw, db, n, din, dout, threads);
         }
     }
 }
@@ -265,6 +353,10 @@ pub fn grad_input(
             let threads = cfg.threads_for(n * din * dout);
             gemm::grad_input(arena, dz, w, h, dh, n, din, dout, threads);
         }
+        KernelFlavour::Simd => {
+            let threads = cfg.threads_for(n * din * dout);
+            simd::grad_input(arena, dz, w, h, dh, n, din, dout, threads);
+        }
     }
 }
 
@@ -289,6 +381,10 @@ pub fn matmul_dz_wt(
         KernelFlavour::Blocked => {
             let threads = cfg.threads_for(n * din * dout);
             gemm::dz_wt(arena, dz, w, dh, n, din, dout, threads);
+        }
+        KernelFlavour::Simd => {
+            let threads = cfg.threads_for(n * din * dout);
+            simd::dz_wt(arena, dz, w, dh, n, din, dout, threads);
         }
     }
 }
@@ -317,6 +413,35 @@ pub fn conv2d_bias_act(
             let threads = cfg.threads_for(n * s.positions() * s.patch_len() * s.cout);
             conv::conv2d_bias_act_blocked(arena, x, k, b, out, n, s, relu, threads);
         }
+        KernelFlavour::Simd => {
+            let threads = cfg.threads_for(n * s.positions() * s.patch_len() * s.cout);
+            conv::conv2d_bias_act_simd(arena, x, k, b, out, n, s, relu, threads);
+        }
+    }
+}
+
+/// Conv forward for the *scoring* pass — the conv analogue of
+/// [`matmul_bias_act_scored`]: with `bf16` set the im2col patches and
+/// weights round to bf16 panels regardless of flavour.
+pub fn conv2d_bias_act_scored(
+    cfg: &KernelConfig,
+    arena: &mut Arena,
+    x: &[f32],
+    k: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    n: usize,
+    s: &ConvShape,
+    relu: bool,
+    bf16: bool,
+) {
+    if bf16 {
+        debug_assert_eq!(x.len(), n * s.in_elems());
+        debug_assert_eq!(out.len(), n * s.out_elems());
+        let threads = cfg.threads_for(n * s.positions() * s.patch_len() * s.cout);
+        conv::conv2d_bias_act_bf16(arena, x, k, b, out, n, s, relu, threads);
+    } else {
+        conv2d_bias_act(cfg, arena, x, k, b, out, n, s, relu);
     }
 }
 
@@ -344,6 +469,10 @@ pub fn conv2d_grad_w(
             let threads = cfg.threads_for(n * s.positions() * s.patch_len() * s.cout);
             conv::conv2d_grad_w_blocked(arena, x, dz, dk, db, n, s, threads);
         }
+        KernelFlavour::Simd => {
+            let threads = cfg.threads_for(n * s.positions() * s.patch_len() * s.cout);
+            conv::conv2d_grad_w_simd(arena, x, dz, dk, db, n, s, threads);
+        }
     }
 }
 
@@ -369,6 +498,10 @@ pub fn conv2d_grad_x(
         KernelFlavour::Blocked => {
             let threads = cfg.threads_for(n * s.positions() * s.patch_len() * s.cout);
             conv::conv2d_grad_x_blocked(arena, dz, k, h_in, dx, n, s, threads);
+        }
+        KernelFlavour::Simd => {
+            let threads = cfg.threads_for(n * s.positions() * s.patch_len() * s.cout);
+            conv::conv2d_grad_x_simd(arena, dz, k, h_in, dx, n, s, threads);
         }
     }
 }
@@ -459,6 +592,12 @@ mod tests {
         let cfg = KernelConfig::blocked(0);
         assert_eq!(cfg.threads, 1);
         assert_eq!(cfg.flavour, KernelFlavour::Blocked);
+        let s = KernelConfig::simd(0);
+        assert_eq!(s.threads, 1);
+        assert_eq!(s.flavour, KernelFlavour::Simd);
+        assert_eq!(s.flavour.as_str(), "simd");
+        assert_eq!(KernelFlavour::Blocked.as_str(), "blocked");
+        assert_eq!(KernelFlavour::Reference.as_str(), "reference");
         let r = KernelConfig::reference();
         assert_eq!(r.threads, 1);
         // tiny calls never thread

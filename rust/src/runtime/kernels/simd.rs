@@ -1,0 +1,833 @@
+//! Explicit AVX2+FMA microkernels for the [`MR`]×[`NR`] register tile,
+//! plus the bf16 fast-scoring GEMM.
+//!
+//! Two families live here, with very different numeric contracts:
+//!
+//! * **f32 training kernels** ([`matmul_bias_act`], [`grad_weights`],
+//!   [`dz_wt`], [`grad_input`]) — the same packing, tiling, sharding
+//!   and per-element reduction order as [`super::gemm`], with the inner
+//!   loops written as explicit 8-lane AVX2 intrinsics. They are
+//!   **bit-identical** to the scalar blocked path: every lane performs
+//!   the same `mul` then `add` (never a fused `fmadd`, whose single
+//!   rounding would diverge), the ReLU epilogue is a `cmp lt` +
+//!   `andnot` (preserving `-0.0` and NaN exactly like the scalar
+//!   `if *v < 0.0`), and remainder columns go through the same stack
+//!   tile copy. The house determinism invariant — fixed per-element
+//!   reduction order, thread-count invariance, gathered == masked —
+//!   therefore holds unchanged, and `tests/kernel_parity.rs` pins
+//!   `simd` bitwise-equal to `blocked`.
+//!
+//! * **bf16 fast-scoring** ([`matmul_bias_act_bf16`]) — the
+//!   inference-fleet forward only. Weights and activations are packed
+//!   as bf16 (round-to-nearest-even, half the memory traffic on a
+//!   bandwidth-bound scoring pass) and accumulated in f32, with FMA
+//!   allowed since the contract is relaxed-tolerance against the f32
+//!   forward, not bitwise. Training math never routes through this
+//!   path.
+//!
+//! Every public entry point checks [`available`] at runtime
+//! (`is_x86_feature_detected!`) and falls back to the scalar blocked
+//! path when AVX2+FMA is missing or the target is not x86_64, so
+//! `OBFTF_NATIVE_KERNELS=simd` is safe on any machine.
+
+#![allow(clippy::too_many_arguments)] // kernels take flat slices + dims
+
+use super::gemm;
+use super::pool::par_rows;
+use super::{Arena, MR, NR};
+
+/// Whether the AVX2+FMA microkernels can run on this machine (the
+/// detection itself is cached by std after the first probe).
+pub fn available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Human-readable CPU feature summary for `obftf config
+/// --print-effective`.
+pub fn cpu_features() -> &'static str {
+    if available() {
+        "avx2+fma"
+    } else {
+        "avx2+fma unavailable (scalar blocked fallback)"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// bf16 conversions (shared by the AVX2 and scalar scoring paths, so the
+// packed operands are identical bits on every machine)
+// ---------------------------------------------------------------------------
+
+/// f32 → bf16 with round-to-nearest-even. NaN is quieted (top mantissa
+/// bit forced) so it cannot round to infinity; ±Inf survives exactly.
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let round = 0x7FFF + ((bits >> 16) & 1);
+    ((bits + round) >> 16) as u16
+}
+
+/// bf16 → f32 (exact: bf16 is the top half of the f32 bit pattern).
+pub fn bf16_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// View the first `len` u16 slots of an f32 arena buffer. bf16 panels
+/// ride the f32 [`Arena`] (alignment 4 ≥ 2, zeroed f32 = bf16 +0.0) so
+/// scoring scratch recycles across steps like every other buffer.
+fn as_u16_mut(buf: &mut [f32], len: usize) -> &mut [u16] {
+    debug_assert!(buf.len() * 2 >= len);
+    unsafe { std::slice::from_raw_parts_mut(buf.as_mut_ptr() as *mut u16, len) }
+}
+
+fn as_u16(buf: &[f32], len: usize) -> &[u16] {
+    debug_assert!(buf.len() * 2 >= len);
+    unsafe { std::slice::from_raw_parts(buf.as_ptr() as *const u16, len) }
+}
+
+/// Pack a `rows×cols` row-major f32 matrix into bf16 `NR`-wide column
+/// panels — the bf16 analogue of [`gemm::pack_panels`], zero-padded.
+fn pack_panels_bf16(src: &[f32], rows: usize, cols: usize, dst: &mut [u16]) {
+    let npanels = cols.div_ceil(NR);
+    for p in 0..npanels {
+        let o0 = p * NR;
+        let valid = NR.min(cols - o0);
+        let panel = &mut dst[p * rows * NR..(p + 1) * rows * NR];
+        for (r, line) in panel.chunks_exact_mut(NR).enumerate() {
+            for (c, slot) in line.iter_mut().enumerate().take(valid) {
+                *slot = f32_to_bf16(src[r * cols + o0 + c]);
+            }
+            line[valid..].fill(0);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 microkernels (x86_64 only; every caller guards on `available()`)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::super::NR;
+    use super::bf16_to_f32;
+    use std::arch::x86_64::*;
+
+    /// Forward microkernel: `M` batch rows × one `NR`-wide panel, bias
+    /// in registers, optional fused ReLU. Bit-identical to the scalar
+    /// tile in [`super::gemm`]: separate `mul`+`add` per lane (no FMA),
+    /// ReLU via `cmp(v, 0, LT_OQ)` + `andnot` (keeps `-0.0` and NaN
+    /// exactly like the scalar `if *v < 0.0 { *v = 0.0 }`).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn mk_forward<const M: usize>(
+        h: &[f32],
+        i0: usize,
+        din: usize,
+        panel: &[f32],
+        bias: &[f32],
+        out: &mut [f32],
+        dout: usize,
+        o0: usize,
+        valid: usize,
+        relu: bool,
+    ) {
+        let mut lo = [_mm256_loadu_ps(bias.as_ptr()); M];
+        let mut hi = [_mm256_loadu_ps(bias.as_ptr().add(8)); M];
+        for (k, line) in panel.chunks_exact(NR).enumerate() {
+            let wlo = _mm256_loadu_ps(line.as_ptr());
+            let whi = _mm256_loadu_ps(line.as_ptr().add(8));
+            for (r, (al, ah)) in lo.iter_mut().zip(hi.iter_mut()).enumerate() {
+                let hv = _mm256_set1_ps(*h.get_unchecked((i0 + r) * din + k));
+                *al = _mm256_add_ps(*al, _mm256_mul_ps(hv, wlo));
+                *ah = _mm256_add_ps(*ah, _mm256_mul_ps(hv, whi));
+            }
+        }
+        let zero = _mm256_setzero_ps();
+        let mut tile = [0.0f32; NR];
+        for (r, (al, ah)) in lo.iter().zip(hi.iter()).enumerate() {
+            let (mut vl, mut vh) = (*al, *ah);
+            if relu {
+                vl = _mm256_andnot_ps(_mm256_cmp_ps::<_CMP_LT_OQ>(vl, zero), vl);
+                vh = _mm256_andnot_ps(_mm256_cmp_ps::<_CMP_LT_OQ>(vh, zero), vh);
+            }
+            _mm256_storeu_ps(tile.as_mut_ptr(), vl);
+            _mm256_storeu_ps(tile.as_mut_ptr().add(8), vh);
+            let at = (i0 + r) * dout + o0;
+            out[at..at + valid].copy_from_slice(&tile[..valid]);
+        }
+    }
+
+    /// Weight-gradient microkernel: `M` rows of `dW` × one `NR`-wide
+    /// `dz` panel, reducing batch rows `0..n` in ascending order — the
+    /// same order and `mul`+`add` lanes as the scalar tile.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn mk_grad_w<const M: usize>(
+        ht: &[f32],
+        n: usize,
+        k0: usize,
+        dzpan: &[f32],
+        chunk: &mut [f32],
+        k0loc: usize,
+        dout: usize,
+        o0: usize,
+        valid: usize,
+    ) {
+        let mut lo = [_mm256_setzero_ps(); M];
+        let mut hi = [_mm256_setzero_ps(); M];
+        for (i, line) in dzpan.chunks_exact(NR).enumerate() {
+            let dlo = _mm256_loadu_ps(line.as_ptr());
+            let dhi = _mm256_loadu_ps(line.as_ptr().add(8));
+            for (r, (al, ah)) in lo.iter_mut().zip(hi.iter_mut()).enumerate() {
+                let hv = _mm256_set1_ps(*ht.get_unchecked((k0 + r) * n + i));
+                *al = _mm256_add_ps(*al, _mm256_mul_ps(hv, dlo));
+                *ah = _mm256_add_ps(*ah, _mm256_mul_ps(hv, dhi));
+            }
+        }
+        let mut tile = [0.0f32; NR];
+        for (r, (al, ah)) in lo.iter().zip(hi.iter()).enumerate() {
+            _mm256_storeu_ps(tile.as_mut_ptr(), *al);
+            _mm256_storeu_ps(tile.as_mut_ptr().add(8), *ah);
+            let at = (k0loc + r) * dout + o0;
+            chunk[at..at + valid].copy_from_slice(&tile[..valid]);
+        }
+    }
+
+    /// `dst[c] += dv * wtline[c]` over a full `din`-wide Wᵀ line — the
+    /// vectorized inner axpy of the `dz·Wᵀ` kernel. The 8-lane body
+    /// plus scalar tail performs the identical `mul`+`add` on each
+    /// element exactly once, in ascending order.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn axpy(dst: &mut [f32], wtline: &[f32], dv: f32) {
+        let din = dst.len();
+        let dvb = _mm256_set1_ps(dv);
+        let mut c = 0;
+        while c + 8 <= din {
+            let a = _mm256_loadu_ps(dst.as_ptr().add(c));
+            let w = _mm256_loadu_ps(wtline.as_ptr().add(c));
+            _mm256_storeu_ps(dst.as_mut_ptr().add(c), _mm256_add_ps(a, _mm256_mul_ps(dvb, w)));
+            c += 8;
+        }
+        for (a, &wv) in dst[c..].iter_mut().zip(&wtline[c..]) {
+            *a += dv * wv;
+        }
+    }
+
+    /// ReLU gate `if hv <= 0.0 { *d = 0.0 }` over one activation row:
+    /// `cmp(hv, 0, LE_OQ)` + `andnot` keeps NaN activations passing
+    /// the gradient exactly like the scalar comparison.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn gate_row(dst: &mut [f32], hrow: &[f32]) {
+        let din = dst.len();
+        let zero = _mm256_setzero_ps();
+        let mut c = 0;
+        while c + 8 <= din {
+            let hv = _mm256_loadu_ps(hrow.as_ptr().add(c));
+            let d = _mm256_loadu_ps(dst.as_ptr().add(c));
+            let keep = _mm256_andnot_ps(_mm256_cmp_ps::<_CMP_LE_OQ>(hv, zero), d);
+            _mm256_storeu_ps(dst.as_mut_ptr().add(c), keep);
+            c += 8;
+        }
+        for (d, &hv) in dst[c..].iter_mut().zip(&hrow[c..]) {
+            if hv <= 0.0 {
+                *d = 0.0;
+            }
+        }
+    }
+
+    /// Expand 8 packed bf16 values to an f32 vector: zero-extend to 32
+    /// bits, shift into the top half, reinterpret.
+    #[inline]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn load_bf16_8(p: *const u16) -> __m256 {
+        let half = _mm_loadu_si128(p as *const __m128i);
+        _mm256_castsi256_ps(_mm256_slli_epi32::<16>(_mm256_cvtepu16_epi32(half)))
+    }
+
+    /// bf16 scoring microkernel: bf16 weight panel × bf16 activations,
+    /// f32 accumulation with FMA (relaxed tolerance — scoring only).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn mk_forward_bf16<const M: usize>(
+        hb: &[u16],
+        i0: usize,
+        din: usize,
+        panel: &[u16],
+        bias: &[f32],
+        out: &mut [f32],
+        dout: usize,
+        o0: usize,
+        valid: usize,
+        relu: bool,
+    ) {
+        let mut lo = [_mm256_loadu_ps(bias.as_ptr()); M];
+        let mut hi = [_mm256_loadu_ps(bias.as_ptr().add(8)); M];
+        for (k, line) in panel.chunks_exact(NR).enumerate() {
+            let wlo = load_bf16_8(line.as_ptr());
+            let whi = load_bf16_8(line.as_ptr().add(8));
+            for (r, (al, ah)) in lo.iter_mut().zip(hi.iter_mut()).enumerate() {
+                let hv = _mm256_set1_ps(bf16_to_f32(*hb.get_unchecked((i0 + r) * din + k)));
+                *al = _mm256_fmadd_ps(hv, wlo, *al);
+                *ah = _mm256_fmadd_ps(hv, whi, *ah);
+            }
+        }
+        let zero = _mm256_setzero_ps();
+        let mut tile = [0.0f32; NR];
+        for (r, (al, ah)) in lo.iter().zip(hi.iter()).enumerate() {
+            let (mut vl, mut vh) = (*al, *ah);
+            if relu {
+                vl = _mm256_andnot_ps(_mm256_cmp_ps::<_CMP_LT_OQ>(vl, zero), vl);
+                vh = _mm256_andnot_ps(_mm256_cmp_ps::<_CMP_LT_OQ>(vh, zero), vh);
+            }
+            _mm256_storeu_ps(tile.as_mut_ptr(), vl);
+            _mm256_storeu_ps(tile.as_mut_ptr().add(8), vh);
+            let at = (i0 + r) * dout + o0;
+            out[at..at + valid].copy_from_slice(&tile[..valid]);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// f32 training kernels (bit-identical to super::gemm)
+// ---------------------------------------------------------------------------
+
+/// Dispatch one `m`-row forward tile onto the AVX2 microkernel.
+#[cfg(target_arch = "x86_64")]
+fn fwd_tile(
+    m: usize,
+    h: &[f32],
+    i: usize,
+    din: usize,
+    panel: &[f32],
+    bias: &[f32],
+    out: &mut [f32],
+    dout: usize,
+    o0: usize,
+    valid: usize,
+    relu: bool,
+) {
+    unsafe {
+        match m {
+            4 => x86::mk_forward::<4>(h, i, din, panel, bias, out, dout, o0, valid, relu),
+            3 => x86::mk_forward::<3>(h, i, din, panel, bias, out, dout, o0, valid, relu),
+            2 => x86::mk_forward::<2>(h, i, din, panel, bias, out, dout, o0, valid, relu),
+            _ => x86::mk_forward::<1>(h, i, din, panel, bias, out, dout, o0, valid, relu),
+        }
+    }
+}
+
+/// SIMD `out = act(h · W + b)`; bit-identical to
+/// [`gemm::matmul_bias_act`], falling back to it when AVX2+FMA is
+/// unavailable.
+pub fn matmul_bias_act(
+    arena: &mut Arena,
+    h: &[f32],
+    w: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    n: usize,
+    din: usize,
+    dout: usize,
+    relu: bool,
+    threads: usize,
+) {
+    #[cfg(target_arch = "x86_64")]
+    if available() {
+        let npanels = dout.div_ceil(NR);
+        let mut wpack = arena.take(npanels * din * NR);
+        gemm::pack_panels(w, din, dout, &mut wpack);
+        let mut bpad = arena.take(npanels * NR);
+        bpad[..dout].copy_from_slice(b);
+        par_rows(out, n, dout, threads, |s, e, chunk| {
+            let rows = e - s;
+            let hloc = &h[s * din..e * din];
+            for p in 0..npanels {
+                let panel = &wpack[p * din * NR..(p + 1) * din * NR];
+                let bias = &bpad[p * NR..(p + 1) * NR];
+                let o0 = p * NR;
+                let valid = NR.min(dout - o0);
+                let mut i = 0;
+                while i < rows {
+                    let m = MR.min(rows - i);
+                    fwd_tile(m, hloc, i, din, panel, bias, chunk, dout, o0, valid, relu);
+                    i += m;
+                }
+            }
+        });
+        arena.put(bpad);
+        arena.put(wpack);
+        return;
+    }
+    gemm::matmul_bias_act(arena, h, w, b, out, n, din, dout, relu, threads);
+}
+
+/// Dispatch one `m`-row weight-gradient tile onto the AVX2 microkernel.
+#[cfg(target_arch = "x86_64")]
+fn gw_tile(
+    m: usize,
+    ht: &[f32],
+    n: usize,
+    k0: usize,
+    dzpan: &[f32],
+    chunk: &mut [f32],
+    kloc: usize,
+    dout: usize,
+    o0: usize,
+    valid: usize,
+) {
+    unsafe {
+        match m {
+            4 => x86::mk_grad_w::<4>(ht, n, k0, dzpan, chunk, kloc, dout, o0, valid),
+            3 => x86::mk_grad_w::<3>(ht, n, k0, dzpan, chunk, kloc, dout, o0, valid),
+            2 => x86::mk_grad_w::<2>(ht, n, k0, dzpan, chunk, kloc, dout, o0, valid),
+            _ => x86::mk_grad_w::<1>(ht, n, k0, dzpan, chunk, kloc, dout, o0, valid),
+        }
+    }
+}
+
+/// SIMD `dw = hᵀ·dz`, `db = Σᵢ dz[i]`; bit-identical to
+/// [`gemm::grad_weights`].
+pub fn grad_weights(
+    arena: &mut Arena,
+    h: &[f32],
+    dz: &[f32],
+    dw: &mut [f32],
+    db: &mut [f32],
+    n: usize,
+    din: usize,
+    dout: usize,
+    threads: usize,
+) {
+    #[cfg(target_arch = "x86_64")]
+    if available() {
+        // db: one sequential pass in batch order, exactly as the scalar
+        // path (its reduction order is thread-count-free)
+        db.fill(0.0);
+        for drow in dz.chunks_exact(dout) {
+            for (d, &v) in db.iter_mut().zip(drow) {
+                *d += v;
+            }
+        }
+        let mut ht = arena.take(din * n);
+        for (i, hrow) in h.chunks_exact(din).enumerate() {
+            for (k, &hv) in hrow.iter().enumerate() {
+                ht[k * n + i] = hv;
+            }
+        }
+        let npanels = dout.div_ceil(NR);
+        let mut dzp = arena.take(npanels * n * NR);
+        gemm::pack_panels(dz, n, dout, &mut dzp);
+        par_rows(dw, din, dout, threads, |k0, k1, chunk| {
+            let rows = k1 - k0;
+            for p in 0..npanels {
+                let dzpan = &dzp[p * n * NR..(p + 1) * n * NR];
+                let o0 = p * NR;
+                let valid = NR.min(dout - o0);
+                let mut k = 0;
+                while k < rows {
+                    let m = MR.min(rows - k);
+                    gw_tile(m, &ht, n, k0 + k, dzpan, chunk, k, dout, o0, valid);
+                    k += m;
+                }
+            }
+        });
+        arena.put(dzp);
+        arena.put(ht);
+        return;
+    }
+    gemm::grad_weights(arena, h, dz, dw, db, n, din, dout, threads);
+}
+
+/// Shared SIMD `dh = dz · Wᵀ` core with the optional fused ReLU gate —
+/// the same structure as the scalar `dz_wt_impl`: Wᵀ lines ascend `o`,
+/// masked-out rows are skipped on the identical `dv == 0.0` test, and
+/// the gate zeroes after accumulation, so results are bit-identical.
+#[cfg(target_arch = "x86_64")]
+fn dz_wt_impl_simd(
+    arena: &mut Arena,
+    dz: &[f32],
+    w: &[f32],
+    gate: Option<&[f32]>,
+    dh: &mut [f32],
+    n: usize,
+    din: usize,
+    dout: usize,
+    threads: usize,
+) {
+    let mut wt = arena.take(dout * din);
+    for (k, wrow) in w.chunks_exact(dout).enumerate() {
+        for (o, &wv) in wrow.iter().enumerate() {
+            wt[o * din + k] = wv;
+        }
+    }
+    par_rows(dh, n, din, threads, |s, e, chunk| {
+        let rows = e - s;
+        let mut i = 0;
+        while i < rows {
+            let m = MR.min(rows - i);
+            chunk[i * din..(i + m) * din].fill(0.0);
+            for (o, wtline) in wt.chunks_exact(din).enumerate() {
+                for r in 0..m {
+                    let dv = dz[(s + i + r) * dout + o];
+                    if dv == 0.0 {
+                        continue; // masked-out rows add exact zeros
+                    }
+                    let dst = &mut chunk[(i + r) * din..(i + r + 1) * din];
+                    unsafe { x86::axpy(dst, wtline, dv) };
+                }
+            }
+            if let Some(h) = gate {
+                for r in 0..m {
+                    let hrow = &h[(s + i + r) * din..(s + i + r + 1) * din];
+                    let dst = &mut chunk[(i + r) * din..(i + r + 1) * din];
+                    unsafe { x86::gate_row(dst, hrow) };
+                }
+            }
+            i += m;
+        }
+    });
+    arena.put(wt);
+}
+
+/// SIMD plain `dh = dz · Wᵀ` (no gate); bit-identical to
+/// [`gemm::dz_wt`].
+pub fn dz_wt(
+    arena: &mut Arena,
+    dz: &[f32],
+    w: &[f32],
+    dh: &mut [f32],
+    n: usize,
+    din: usize,
+    dout: usize,
+    threads: usize,
+) {
+    #[cfg(target_arch = "x86_64")]
+    if available() {
+        dz_wt_impl_simd(arena, dz, w, None, dh, n, din, dout, threads);
+        return;
+    }
+    gemm::dz_wt(arena, dz, w, dh, n, din, dout, threads);
+}
+
+/// SIMD ReLU-gated `dh = dz · Wᵀ`; bit-identical to
+/// [`gemm::grad_input`].
+pub fn grad_input(
+    arena: &mut Arena,
+    dz: &[f32],
+    w: &[f32],
+    h: &[f32],
+    dh: &mut [f32],
+    n: usize,
+    din: usize,
+    dout: usize,
+    threads: usize,
+) {
+    #[cfg(target_arch = "x86_64")]
+    if available() {
+        dz_wt_impl_simd(arena, dz, w, Some(h), dh, n, din, dout, threads);
+        return;
+    }
+    gemm::grad_input(arena, dz, w, h, dh, n, din, dout, threads);
+}
+
+// ---------------------------------------------------------------------------
+// bf16 fast-scoring forward (inference fleet only; relaxed tolerance)
+// ---------------------------------------------------------------------------
+
+/// Scalar bf16 scoring microkernel — the portable fallback. Uses the
+/// identical bf16 conversions as the AVX2 path (the packed operands
+/// are the same bits) but plain mul+add accumulation, so the two paths
+/// agree to the relaxed scoring tolerance, not bitwise.
+fn mk_forward_bf16_scalar<const M: usize>(
+    hb: &[u16],
+    i0: usize,
+    din: usize,
+    panel: &[u16],
+    bias: &[f32],
+    out: &mut [f32],
+    dout: usize,
+    o0: usize,
+    valid: usize,
+    relu: bool,
+) {
+    let mut acc = [[0.0f32; NR]; M];
+    for row in acc.iter_mut() {
+        row.copy_from_slice(bias);
+    }
+    for (k, line) in panel.chunks_exact(NR).enumerate() {
+        for (r, row) in acc.iter_mut().enumerate() {
+            let hv = bf16_to_f32(hb[(i0 + r) * din + k]);
+            for (a, &wv) in row.iter_mut().zip(line) {
+                *a += hv * bf16_to_f32(wv);
+            }
+        }
+    }
+    for (r, row) in acc.iter_mut().enumerate() {
+        if relu {
+            for v in row.iter_mut() {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+        }
+        let at = (i0 + r) * dout + o0;
+        out[at..at + valid].copy_from_slice(&row[..valid]);
+    }
+}
+
+/// Dispatch one `m`-row bf16 tile onto the AVX2 or scalar microkernel.
+fn bf16_tile(
+    use_avx: bool,
+    m: usize,
+    hb: &[u16],
+    i: usize,
+    din: usize,
+    panel: &[u16],
+    bias: &[f32],
+    out: &mut [f32],
+    dout: usize,
+    o0: usize,
+    valid: usize,
+    relu: bool,
+) {
+    #[cfg(target_arch = "x86_64")]
+    if use_avx {
+        unsafe {
+            match m {
+                4 => x86::mk_forward_bf16::<4>(hb, i, din, panel, bias, out, dout, o0, valid, relu),
+                3 => x86::mk_forward_bf16::<3>(hb, i, din, panel, bias, out, dout, o0, valid, relu),
+                2 => x86::mk_forward_bf16::<2>(hb, i, din, panel, bias, out, dout, o0, valid, relu),
+                _ => x86::mk_forward_bf16::<1>(hb, i, din, panel, bias, out, dout, o0, valid, relu),
+            }
+        }
+        return;
+    }
+    let _ = use_avx;
+    match m {
+        4 => mk_forward_bf16_scalar::<4>(hb, i, din, panel, bias, out, dout, o0, valid, relu),
+        3 => mk_forward_bf16_scalar::<3>(hb, i, din, panel, bias, out, dout, o0, valid, relu),
+        2 => mk_forward_bf16_scalar::<2>(hb, i, din, panel, bias, out, dout, o0, valid, relu),
+        _ => mk_forward_bf16_scalar::<1>(hb, i, din, panel, bias, out, dout, o0, valid, relu),
+    }
+}
+
+/// bf16 fast-scoring `out = act(h · W + b)`: weights *and* activations
+/// round to bf16 (RNE), accumulation stays f32, output is f32. Runs
+/// the AVX2+FMA microkernel when available, else the scalar fallback
+/// over the same packed operands. **Scoring only** — per-example
+/// losses feed selection, never the backward — under the relaxed
+/// parity contract pinned in `tests/kernel_parity.rs`. Non-finite
+/// inputs stay non-finite (bf16 keeps ±Inf and quiets NaN), so
+/// poisoned losses still propagate to the selection layer.
+pub fn matmul_bias_act_bf16(
+    arena: &mut Arena,
+    h: &[f32],
+    w: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    n: usize,
+    din: usize,
+    dout: usize,
+    relu: bool,
+    threads: usize,
+) {
+    let npanels = dout.div_ceil(NR);
+    let wlen = npanels * din * NR;
+    let mut wpack = arena.take(wlen.div_ceil(2));
+    pack_panels_bf16(w, din, dout, as_u16_mut(&mut wpack, wlen));
+    let hlen = n * din;
+    let mut hpack = arena.take(hlen.div_ceil(2));
+    {
+        let hb = as_u16_mut(&mut hpack, hlen);
+        for (slot, &v) in hb.iter_mut().zip(h) {
+            *slot = f32_to_bf16(v);
+        }
+    }
+    let mut bpad = arena.take(npanels * NR);
+    bpad[..dout].copy_from_slice(b);
+    let wview = as_u16(&wpack, wlen);
+    let hview = as_u16(&hpack, hlen);
+    let use_avx = available();
+    par_rows(out, n, dout, threads, |s, e, chunk| {
+        let rows = e - s;
+        let hloc = &hview[s * din..e * din];
+        for p in 0..npanels {
+            let panel = &wview[p * din * NR..(p + 1) * din * NR];
+            let bias = &bpad[p * NR..(p + 1) * NR];
+            let o0 = p * NR;
+            let valid = NR.min(dout - o0);
+            let mut i = 0;
+            while i < rows {
+                let m = MR.min(rows - i);
+                bf16_tile(use_avx, m, hloc, i, din, panel, bias, chunk, dout, o0, valid, relu);
+                i += m;
+            }
+        }
+    });
+    arena.put(bpad);
+    arena.put(hpack);
+    arena.put(wpack);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::reference;
+    use super::*;
+    use crate::data::rng::Rng;
+
+    fn fill(rng: &mut Rng, len: usize) -> Vec<f32> {
+        (0..len).map(|_| rng.normal() as f32).collect()
+    }
+
+    /// Same remainder-hitting shapes as the gemm suite.
+    const SHAPES: &[(usize, usize, usize)] = &[
+        (1, 1, 1),
+        (3, 2, 5),
+        (4, 16, 16),
+        (5, 17, 31),
+        (8, 17, 10),
+        (13, 7, 33),
+        (16, 32, 48),
+    ];
+
+    #[test]
+    fn simd_forward_bitwise_equals_blocked() {
+        for &(n, din, dout) in SHAPES {
+            for threads in [1, 3] {
+                for relu in [false, true] {
+                    let mut rng = Rng::seed_from(42);
+                    let h = fill(&mut rng, n * din);
+                    let w = fill(&mut rng, din * dout);
+                    let b = fill(&mut rng, dout);
+                    let mut arena = Arena::new();
+                    let mut want = vec![0.0f32; n * dout];
+                    let t = threads;
+                    gemm::matmul_bias_act(&mut arena, &h, &w, &b, &mut want, n, din, dout, relu, t);
+                    let mut got = vec![0.0f32; n * dout];
+                    matmul_bias_act(&mut arena, &h, &w, &b, &mut got, n, din, dout, relu, t);
+                    assert_eq!(got, want, "fwd {n}x{din}x{dout} t{threads} relu={relu}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_backward_bitwise_equals_blocked() {
+        for &(n, din, dout) in SHAPES {
+            let mut rng = Rng::seed_from(7);
+            let h = fill(&mut rng, n * din);
+            let dz = fill(&mut rng, n * dout);
+            let w = fill(&mut rng, din * dout);
+            let acts: Vec<f32> = fill(&mut rng, n * din).into_iter().map(|v| v.max(0.0)).collect();
+            let mut arena = Arena::new();
+            let (mut w1, mut b1) = (vec![0.0f32; din * dout], vec![0.0f32; dout]);
+            let (mut w2, mut b2) = (vec![0.0f32; din * dout], vec![0.0f32; dout]);
+            gemm::grad_weights(&mut arena, &h, &dz, &mut w1, &mut b1, n, din, dout, 2);
+            grad_weights(&mut arena, &h, &dz, &mut w2, &mut b2, n, din, dout, 2);
+            assert_eq!(w1, w2, "dw {n}x{din}x{dout}");
+            assert_eq!(b1, b2, "db {n}x{din}x{dout}");
+            let (mut g1, mut g2) = (vec![0.0f32; n * din], vec![1.0f32; n * din]);
+            gemm::grad_input(&mut arena, &dz, &w, &acts, &mut g1, n, din, dout, 2);
+            grad_input(&mut arena, &dz, &w, &acts, &mut g2, n, din, dout, 2);
+            assert_eq!(g1, g2, "dh {n}x{din}x{dout}");
+            let (mut p1, mut p2) = (vec![0.0f32; n * din], vec![0.0f32; n * din]);
+            gemm::dz_wt(&mut arena, &dz, &w, &mut p1, n, din, dout, 2);
+            dz_wt(&mut arena, &dz, &w, &mut p2, n, din, dout, 2);
+            assert_eq!(p1, p2, "dz_wt {n}x{din}x{dout}");
+        }
+    }
+
+    #[test]
+    fn bf16_conversions_round_trip_and_preserve_specials() {
+        // exactly-representable values survive the round trip
+        for v in [0.0f32, 1.0, -2.5, 0.15625, -96.0] {
+            assert_eq!(bf16_to_f32(f32_to_bf16(v)), v, "{v} must be exact in bf16");
+        }
+        assert_eq!(bf16_to_f32(f32_to_bf16(-0.0)).to_bits(), (-0.0f32).to_bits());
+        // round-to-nearest-even: an exact tie rounds to the even mantissa
+        let tie = f32::from_bits(0x3F80_8000); // 1.0 + 2^-8
+        assert_eq!(f32_to_bf16(tie) & 1, 0, "ties must round to even");
+        // specials: ±Inf exact, NaN stays NaN (quieted, never Inf)
+        assert_eq!(bf16_to_f32(f32_to_bf16(f32::INFINITY)), f32::INFINITY);
+        assert_eq!(bf16_to_f32(f32_to_bf16(f32::NEG_INFINITY)), f32::NEG_INFINITY);
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+        // rounding error is bounded by 2^-8 relative
+        let mut rng = Rng::seed_from(11);
+        for _ in 0..1000 {
+            let v = rng.normal() as f32;
+            let err = (bf16_to_f32(f32_to_bf16(v)) - v).abs();
+            assert!(err <= v.abs() / 256.0, "bf16 round error too large for {v}");
+        }
+    }
+
+    #[test]
+    fn bf16_forward_tracks_f32_within_scoring_tolerance() {
+        for &(n, din, dout) in SHAPES {
+            for threads in [1, 3] {
+                let mut rng = Rng::seed_from(5);
+                let h = fill(&mut rng, n * din);
+                let w = fill(&mut rng, din * dout);
+                let b = fill(&mut rng, dout);
+                let mut want = vec![0.0f32; n * dout];
+                reference::matmul_bias_act(&h, &w, &b, &mut want, n, din, dout, true);
+                let mut arena = Arena::new();
+                let mut got = vec![0.0f32; n * dout];
+                matmul_bias_act_bf16(&mut arena, &h, &w, &b, &mut got, n, din, dout, true, threads);
+                // per-element bound: bf16 rounds both operands to 2^-8
+                // relative, so the dot product drifts with the term
+                // magnitude sum — ~√din for unit-normal data, doubled
+                // for headroom over the cancellation tail (the tight
+                // ≤1e-2 network-scale contract lives in kernel_parity)
+                let scale: f32 = 2.0 * (1.0 + (din as f32).sqrt());
+                for (i, (g, wv)) in got.iter().zip(&want).enumerate() {
+                    let tol = 1e-2 * wv.abs().max(1.0) * scale;
+                    assert!(
+                        (g - wv).abs() <= tol,
+                        "bf16[{i}] {g} vs f32 {wv} ({n}x{din}x{dout} t{threads})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_forward_is_thread_count_invariant() {
+        let (n, din, dout) = (13, 29, 21);
+        let mut rng = Rng::seed_from(3);
+        let h = fill(&mut rng, n * din);
+        let w = fill(&mut rng, din * dout);
+        let b = fill(&mut rng, dout);
+        let mut arena = Arena::new();
+        let (mut o1, mut o4) = (vec![0.0f32; n * dout], vec![0.0f32; n * dout]);
+        matmul_bias_act_bf16(&mut arena, &h, &w, &b, &mut o1, n, din, dout, false, 1);
+        matmul_bias_act_bf16(&mut arena, &h, &w, &b, &mut o4, n, din, dout, false, 4);
+        assert_eq!(o1, o4, "bf16 forward must be thread-count invariant");
+    }
+
+    #[test]
+    fn bf16_forward_propagates_non_finite_inputs() {
+        let (n, din, dout) = (2, 4, 3);
+        let mut h = vec![0.5f32; n * din];
+        h[1] = f32::NAN; // poison row 0
+        let w = vec![0.25f32; din * dout];
+        let b = vec![0.0f32; dout];
+        let mut arena = Arena::new();
+        let mut out = vec![0.0f32; n * dout];
+        matmul_bias_act_bf16(&mut arena, &h, &w, &b, &mut out, n, din, dout, false, 1);
+        assert!(out[..dout].iter().all(|v| v.is_nan()), "row 0 must stay NaN: {out:?}");
+        assert!(out[dout..].iter().all(|v| v.is_finite()), "row 1 must stay finite");
+    }
+
+    #[test]
+    fn availability_probe_is_stable() {
+        // the value is runner-dependent, but it must not flap and the
+        // feature summary must always render
+        assert_eq!(available(), available());
+        assert!(!cpu_features().is_empty());
+    }
+}

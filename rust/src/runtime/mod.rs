@@ -22,7 +22,7 @@ pub mod native;
 pub mod pjrt;
 pub mod session;
 
-pub use backend::{Backend, SessionStats};
+pub use backend::{Backend, ScorePrecision, SessionStats};
 pub use engine::Engine;
 pub use kernels::{Arena, KernelConfig, KernelFlavour};
 pub use manifest::{Exe, Flavour, Manifest, ModelEntry, ParamEntry, NATIVE_BATCH};

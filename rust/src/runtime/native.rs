@@ -43,7 +43,7 @@
 
 use anyhow::{bail, Result};
 
-use super::backend::{gather_rows, Backend, SessionStats};
+use super::backend::{gather_rows, Backend, ScorePrecision, SessionStats};
 use super::kernels::{self, conv, Arena, ConvShape, KernelConfig};
 use super::manifest::ModelEntry;
 use crate::data::rng::Rng;
@@ -265,6 +265,9 @@ pub struct NativeBackend {
     stats: SessionStats,
     /// Kernel implementation + thread count (resolved once, at build).
     kcfg: KernelConfig,
+    /// Precision of the scoring forward ([`Backend::fwd_loss`]) only —
+    /// training and eval always run exact f32.
+    score_precision: ScorePrecision,
     /// Recycled scratch buffers (activations, packed panels, head
     /// gradients) — see [`Arena`].
     scratch: Arena,
@@ -302,6 +305,7 @@ impl NativeBackend {
             params: vec![],
             stats,
             kcfg,
+            score_precision: ScorePrecision::F32,
             scratch: Arena::new(),
         })
     }
@@ -354,7 +358,8 @@ impl NativeBackend {
         let n = mask.len();
         let xs = x.as_f32()?;
         let c = self.topo.out_width();
-        let acts = forward_topo(&self.topo, &self.params, &self.kcfg, &mut self.scratch, xs, n);
+        let acts =
+            forward_topo(&self.topo, &self.params, &self.kcfg, &mut self.scratch, xs, n, false);
         let logits = acts.last().expect("every topology ends in a head");
         let losses = self.per_example_losses(logits, y, n)?;
         let denom = mask.iter().sum::<f32>().max(1.0);
@@ -441,6 +446,11 @@ impl NativeBackend {
 /// function over the backend's fields so callers can lend
 /// `&mut self.scratch` while the parameters stay borrowed — the arena
 /// is never moved out of the backend, even on error paths.
+///
+/// `bf16` selects the reduced-precision scoring GEMM for every matmul
+/// in the pass (bf16 panels, f32 accumulation). Only `fwd_loss` ever
+/// sets it; the training and eval forwards always pass `false`, so
+/// their math stays exact f32 regardless of the scoring precision.
 fn forward_topo(
     topo: &Topology,
     params: &[HostTensor],
@@ -448,6 +458,7 @@ fn forward_topo(
     arena: &mut Arena,
     x: &[f32],
     n: usize,
+    bf16: bool,
 ) -> Vec<Vec<f32>> {
     match topo {
         Topology::Dense(chain) => {
@@ -460,7 +471,9 @@ fn forward_topo(
                 let h: &[f32] = if l == 0 { x } else { &acts[l - 1] };
                 let mut z = arena.take(n * dout);
                 let relu = l + 1 < nl;
-                kernels::matmul_bias_act(kcfg, arena, h, w, b, &mut z, n, din, dout, relu);
+                kernels::matmul_bias_act_scored(
+                    kcfg, arena, h, w, b, &mut z, n, din, dout, relu, bf16,
+                );
                 acts.push(z);
             }
             acts
@@ -473,7 +486,7 @@ fn forward_topo(
                 let b = params[2 * l + 1].as_f32().expect("parameters are f32");
                 let h: &[f32] = if l == 0 { x } else { &acts[l - 1] };
                 let mut z = arena.take(n * cs.out_elems());
-                kernels::conv2d_bias_act(kcfg, arena, h, k, b, &mut z, n, cs, true);
+                kernels::conv2d_bias_act_scored(kcfg, arena, h, k, b, &mut z, n, cs, true, bf16);
                 acts.push(z);
             }
             let last = &net.convs[nl - 1];
@@ -482,7 +495,7 @@ fn forward_topo(
             let wh = params[2 * nl].as_f32().expect("parameters are f32");
             let bh = params[2 * nl + 1].as_f32().expect("parameters are f32");
             let mut logits = arena.take(n * net.out);
-            kernels::matmul_bias_act(
+            kernels::matmul_bias_act_scored(
                 kcfg,
                 arena,
                 &pooled,
@@ -493,6 +506,7 @@ fn forward_topo(
                 net.head_in,
                 net.out,
                 false,
+                bf16,
             );
             acts.push(pooled);
             acts.push(logits);
@@ -641,7 +655,9 @@ impl Backend for NativeBackend {
         let t0 = std::time::Instant::now();
         let n = self.batch;
         let xs = x.as_f32()?;
-        let acts = forward_topo(&self.topo, &self.params, &self.kcfg, &mut self.scratch, xs, n);
+        let bf16 = self.score_precision == ScorePrecision::Bf16;
+        let acts =
+            forward_topo(&self.topo, &self.params, &self.kcfg, &mut self.scratch, xs, n, bf16);
         let logits = acts.last().expect("every topology ends in a head");
         let losses = self.per_example_losses(logits, y, n);
         for a in acts {
@@ -729,7 +745,8 @@ impl Backend for NativeBackend {
         let n = self.batch;
         let c = self.topo.out_width();
         let xs = x.as_f32()?;
-        let acts = forward_topo(&self.topo, &self.params, &self.kcfg, &mut self.scratch, xs, n);
+        let acts =
+            forward_topo(&self.topo, &self.params, &self.kcfg, &mut self.scratch, xs, n, false);
         let logits = acts.last().expect("every topology ends in a head");
         let losses = self.per_example_losses(logits, y, n)?;
         let mut sums = (0.0f64, 0.0f64, 0.0f64);
@@ -805,6 +822,10 @@ impl Backend for NativeBackend {
 
     fn platform_name(&self) -> String {
         "native-cpu".to_string()
+    }
+
+    fn set_score_precision(&mut self, precision: ScorePrecision) {
+        self.score_precision = precision;
     }
 }
 
@@ -897,7 +918,7 @@ mod tests {
 
     fn forward_acts(b: &NativeBackend, x: &HostTensor, n: usize) -> Vec<Vec<f32>> {
         let mut arena = Arena::new();
-        forward_topo(&b.topo, &b.params, &b.kcfg, &mut arena, x.as_f32().unwrap(), n)
+        forward_topo(&b.topo, &b.params, &b.kcfg, &mut arena, x.as_f32().unwrap(), n, false)
     }
 
     #[test]
@@ -1267,6 +1288,43 @@ mod tests {
                 assert!((va - vb).abs() <= 1e-4 * vb.abs().max(1.0), "{va} vs {vb}");
             }
         }
+    }
+
+    /// bf16 scoring changes only `fwd_loss`: the scores track the exact
+    /// f32 losses within the relaxed tolerance, while training steps
+    /// taken under either precision stay bit-identical.
+    #[test]
+    fn bf16_scoring_tracks_f32_and_leaves_training_exact() {
+        let n = 8;
+        let entry = chain_entry("classification", &[9, 7, 3], 3);
+        let mut exact =
+            NativeBackend::with_kernel_config("t", &entry, n, KernelConfig::blocked(2)).unwrap();
+        let mut fast =
+            NativeBackend::with_kernel_config("t", &entry, n, KernelConfig::blocked(2)).unwrap();
+        exact.init(5).unwrap();
+        fast.init(5).unwrap();
+        fast.set_score_precision(ScorePrecision::Bf16);
+        let (x, y) = toy_batch(&exact, 43);
+        let mask = vec![1.0f32; n];
+        for _ in 0..2 {
+            let lf = exact.fwd_loss(&x, &y).unwrap();
+            let lb = fast.fwd_loss(&x, &y).unwrap();
+            // wide bound: unscaled normal features stress rounding past
+            // the network-realistic ≤1e-2 contract pinned in
+            // tests/kernel_parity.rs — here we only pin "tracks f32"
+            for (a, b) in lf.iter().zip(&lb) {
+                assert!((a - b).abs() <= 2e-2 * a.abs().max(1.0), "score {b} vs exact {a}");
+            }
+            let le = exact.train_step(&x, &y, &mask, 0.1).unwrap();
+            let lt = fast.train_step(&x, &y, &mask, 0.1).unwrap();
+            assert_eq!(le, lt, "training losses must stay bit-identical");
+        }
+        for (a, b) in exact.params.iter().zip(&fast.params) {
+            assert_eq!(a.as_f32().unwrap(), b.as_f32().unwrap(), "params must stay bit-identical");
+        }
+        // and switching back restores bit-exact scoring
+        fast.set_score_precision(ScorePrecision::F32);
+        assert_eq!(exact.fwd_loss(&x, &y).unwrap(), fast.fwd_loss(&x, &y).unwrap());
     }
 
     #[test]

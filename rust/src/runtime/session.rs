@@ -14,7 +14,7 @@
 
 use anyhow::{bail, Context, Result};
 
-use super::backend::{Backend, SessionStats};
+use super::backend::{Backend, ScorePrecision, SessionStats};
 use super::manifest::{Flavour, Manifest, ModelEntry};
 use super::native::NativeBackend;
 use crate::data::tensor::{HostTensor, TensorData};
@@ -119,6 +119,14 @@ impl Session {
     /// Human-readable execution platform of the underlying backend.
     pub fn client_platform(&self) -> String {
         self.backend.platform_name()
+    }
+
+    /// Select the precision of subsequent [`Session::fwd_loss`] calls —
+    /// the inference fleet's fast-scoring knob. Training and eval math
+    /// is unaffected (always exact f32); backends without a
+    /// reduced-precision path ignore this.
+    pub fn set_score_precision(&mut self, precision: ScorePrecision) {
+        self.backend.set_score_precision(precision);
     }
 
     /// Initialize parameters from `seed` (runs the `init` executable).

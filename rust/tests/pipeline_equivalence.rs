@@ -15,7 +15,7 @@
 use obftf::config::TrainConfig;
 use obftf::coordinator::{PipelineTrainer, StreamingTrainer, TrainReport};
 use obftf::data::TensorData;
-use obftf::runtime::Manifest;
+use obftf::runtime::{Manifest, ScorePrecision};
 use obftf::sampling::Method;
 
 fn manifest() -> Manifest {
@@ -301,6 +301,55 @@ fn async_proc_pipeline_trains_and_accounts_cache_traffic() {
         .sum();
     assert!(row_lookups > 0, "row traffic must be attributed to owners");
     assert!(p.frame_bytes() > 0);
+}
+
+/// bf16 fast-scoring in the async pipeline: the fleet scores in bf16
+/// (relaxed tolerance), the leader still selects a valid subset each
+/// step and the budget accounting stays coherent — one counting lookup
+/// per step, every issued batch scored, and a per-step backward count
+/// that tracks the configured sampling ratio.
+#[test]
+fn async_bf16_scoring_pipeline_selects_and_accounts() {
+    let m = manifest();
+    let mut pc = cfg(30);
+    pc.model = "linreg".into();
+    pc.method = Method::MaxProb;
+    pc.lr = 0.01;
+    pc.pipeline = true;
+    pc.pipeline_workers = 3;
+    pc.pipeline_depth = 4;
+    pc.score_precision = "bf16".into();
+    let mut p = PipelineTrainer::with_manifest(&pc, &m).unwrap();
+    assert_eq!(p.options().score_precision, ScorePrecision::Bf16);
+    let report = p.run().unwrap();
+    assert_eq!(report.steps, 30);
+    assert!(report.final_eval.loss.is_finite(), "eval runs exact f32 and must stay finite");
+    let stats = p.cache_stats();
+    assert_eq!(stats.hits + stats.misses, 30);
+    assert!(p.budget.inference_forwards >= 30 * m.batch as u64);
+    // the selected subset tracks the configured ratio (0.25 of the
+    // batch): bf16 perturbs *which* rows win, never how many
+    let per_step = report.backward_examples as f64 / report.steps as f64;
+    let want = pc.sampling_ratio * m.batch as f64;
+    assert!(
+        (per_step - want).abs() <= want * 0.5,
+        "selected {per_step}/step, expected ~{want}"
+    );
+    assert!(report.realized_ratio > 0.0);
+}
+
+/// Sync mode is the bit-identical oracle — it must refuse to score in
+/// bf16 rather than silently weaken the equivalence contract.
+#[test]
+fn sync_pipeline_rejects_bf16_scoring() {
+    let m = manifest();
+    let mut pc = cfg(6);
+    pc.pipeline = true;
+    pc.pipeline_sync = true;
+    pc.score_precision = "bf16".into();
+    let err = PipelineTrainer::with_manifest(&pc, &m).err().expect("sync + bf16 must be rejected");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("pipeline_sync"), "error must name the conflict: {msg}");
 }
 
 #[test]

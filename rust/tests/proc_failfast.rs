@@ -17,7 +17,7 @@ use std::time::{Duration, Instant};
 use obftf::coordinator::{FleetSpec, FleetTransport, LinkMode, Transport};
 use obftf::data::dataset::{Batch, InMemoryDataset};
 use obftf::data::{Rng, Targets};
-use obftf::runtime::{Flavour, Manifest, Session};
+use obftf::runtime::{Flavour, Manifest, ScorePrecision, Session};
 
 /// restart_limit = 0: these tests pin the strict fail-fast behaviour
 /// (the elastic supervised-restart path is pinned in socket_restart.rs).
@@ -29,6 +29,7 @@ fn spec(workers: usize, capacity: usize, fail_after: Vec<Option<u64>>) -> FleetS
         capacity,
         max_age: 0,
         sync: true,
+        score_precision: ScorePrecision::F32,
         worker_bin: Some(env!("CARGO_BIN_EXE_obftf").into()),
         timeout: Duration::from_secs(60),
         fail_after,

@@ -20,7 +20,7 @@ use obftf::coordinator::{
 };
 use obftf::data::dataset::{Batch, InMemoryDataset};
 use obftf::data::{Rng, Targets, TensorData};
-use obftf::runtime::{Flavour, Manifest, Session};
+use obftf::runtime::{Flavour, Manifest, ScorePrecision, Session};
 use obftf::sampling::Method;
 
 fn spec(workers: usize, capacity: usize, fail_after: Vec<Option<u64>>) -> FleetSpec {
@@ -31,6 +31,7 @@ fn spec(workers: usize, capacity: usize, fail_after: Vec<Option<u64>>) -> FleetS
         capacity,
         max_age: 0,
         sync: true,
+        score_precision: ScorePrecision::F32,
         worker_bin: Some(env!("CARGO_BIN_EXE_obftf").into()),
         timeout: Duration::from_secs(60),
         fail_after,
