@@ -11,13 +11,17 @@
 //! Each invocation also runs the **multi-process** fleet (`proc-w1` and
 //! `proc-wN` rows: `obftf worker` children over pipes, distributed
 //! shard ownership) so one JSON carries thread and proc rows from the
-//! same run, including wire traffic as `frame_bytes_per_step`.
+//! same run, including wire traffic as `frame_bytes_per_step` plus the
+//! pooled-codec split (`frames_per_step`, `encode_ns_per_step` and
+//! per-frame-type bytes). A final `socket-wN-bf16` row re-runs the
+//! socket fleet with `param_precision = bf16` so the broadcast saving
+//! is measurable against its f32 twin.
 //!
 //! CI smoke: set `OBFTF_BENCH_BUDGET_MS` / `OBFTF_BENCH_MAX_ITERS` for
 //! a tiny run and `OBFTF_BENCH_JSON` to capture the summary artifact.
 
 use obftf::config::TrainConfig;
-use obftf::coordinator::{PipelineTrainer, StreamingTrainer};
+use obftf::coordinator::{PipelineTrainer, StreamingTrainer, WireStats};
 use obftf::data::rng::Rng;
 use obftf::runtime::Manifest;
 use obftf::sampling::{budget_for, Method};
@@ -25,6 +29,21 @@ use obftf::util::benchkit::{black_box, Bench};
 
 fn env_usize(key: &str) -> Option<usize> {
     std::env::var(key).ok().and_then(|v| v.parse().ok())
+}
+
+/// Attach the leader's wire-path counters to the last bench row:
+/// frames and encode time per step, plus the per-frame-type byte split
+/// (param broadcast / score handoff / routed records / cache lookups /
+/// coalesced envelopes) so a wire-tax regression names its frame type.
+fn annotate_wire(bench: &mut Bench, wire: &WireStats, steps: usize) {
+    let per = |v: u64| v as f64 / steps as f64;
+    bench.annotate_last("frames_per_step", per(wire.frames));
+    bench.annotate_last("encode_ns_per_step", per(wire.encode_ns));
+    bench.annotate_last("param_bytes_per_step", per(wire.param_bytes));
+    bench.annotate_last("score_bytes_per_step", per(wire.score_bytes));
+    bench.annotate_last("route_bytes_per_step", per(wire.route_bytes));
+    bench.annotate_last("lookup_bytes_per_step", per(wire.lookup_bytes));
+    bench.annotate_last("envelope_bytes_per_step", per(wire.envelope_bytes));
 }
 
 /// The shared streaming workload both drivers run: mlp on the mnist
@@ -112,6 +131,7 @@ fn pipeline_bench() {
             let mut stall_ms = 0.0f64;
             let mut fleet_fwd = 0.0f64;
             let mut frame_bytes = 0.0f64;
+            let mut wire = WireStats::default();
             bench.run_throughput(&format!("pipeline/{tag}-w{pw}/mlp"), 0.0, steps as f64, || {
                 let mut p =
                     PipelineTrainer::with_manifest(&ccfg, &manifest).expect("fleet pipeline");
@@ -120,13 +140,59 @@ fn pipeline_bench() {
                 stall_ms = p.eval_stall_ms() as f64;
                 fleet_fwd = p.budget.inference_forwards as f64;
                 frame_bytes = p.frame_bytes() as f64;
+                wire = p.wire_stats();
             });
             bench.annotate_last("inference_workers", pw as f64);
             bench.annotate_last("cache_hit_rate", hit_rate);
             bench.annotate_last("eval_stall_ms", stall_ms);
             bench.annotate_last("inference_forwards", fleet_fwd);
             bench.annotate_last("frame_bytes_per_step", frame_bytes / steps as f64);
+            annotate_wire(&mut bench, &wire, steps);
         }
+    }
+
+    // bf16 param-broadcast row: the socket fleet at the sweep size with
+    // the weight snapshot shipped in bf16 (`socket-wN-bf16`) — compare
+    // frame_bytes_per_step against the f32 `socket-wN` row above for
+    // the broadcast wire-tax saving
+    {
+        let pw = *fleet_sizes.last().unwrap();
+        std::env::set_var("OBFTF_PIPELINE_SOCKET", "unix");
+        std::env::set_var("OBFTF_PIPELINE_WORKERS", pw.to_string());
+        std::env::set_var("OBFTF_PARAM_PRECISION", "bf16");
+        let mut bcfg = cfg.clone();
+        bcfg.pipeline = true;
+        bcfg.pipeline_proc = true;
+        bcfg.pipeline_socket = "unix".to_string();
+        bcfg.pipeline_workers = pw;
+        bcfg.param_precision = "bf16".to_string();
+        let mut hit_rate = 0.0f64;
+        let mut stall_ms = 0.0f64;
+        let mut fleet_fwd = 0.0f64;
+        let mut frame_bytes = 0.0f64;
+        let mut wire = WireStats::default();
+        bench.run_throughput(
+            &format!("pipeline/socket-w{pw}-bf16/mlp"),
+            0.0,
+            steps as f64,
+            || {
+                let mut p =
+                    PipelineTrainer::with_manifest(&bcfg, &manifest).expect("bf16 pipeline");
+                black_box(p.run().expect("bf16 pipeline run"));
+                hit_rate = p.cache_stats().hit_rate();
+                stall_ms = p.eval_stall_ms() as f64;
+                fleet_fwd = p.budget.inference_forwards as f64;
+                frame_bytes = p.frame_bytes() as f64;
+                wire = p.wire_stats();
+            },
+        );
+        bench.annotate_last("inference_workers", pw as f64);
+        bench.annotate_last("cache_hit_rate", hit_rate);
+        bench.annotate_last("eval_stall_ms", stall_ms);
+        bench.annotate_last("inference_forwards", fleet_fwd);
+        bench.annotate_last("frame_bytes_per_step", frame_bytes / steps as f64);
+        annotate_wire(&mut bench, &wire, steps);
+        std::env::remove_var("OBFTF_PARAM_PRECISION");
     }
     std::env::remove_var("OBFTF_PIPELINE_SOCKET");
     std::env::set_var("OBFTF_PIPELINE_WORKERS", workers.to_string());

@@ -66,6 +66,9 @@ impl Checkpoint {
                             f.write_all(&x.to_le_bytes())?;
                         }
                     }
+                    TensorData::Bf16(_) => {
+                        bail!("bf16 tensors are wire-only; checkpoints hold exact f32 params")
+                    }
                 }
             }
             f.flush()?;

@@ -124,6 +124,12 @@ pub struct TrainConfig {
     /// stay bit-identical to the serial trainer).
     /// (`OBFTF_SCORE_PRECISION` overrides.)
     pub score_precision: String,
+    /// Wire precision of the leader's parameter broadcast: "f32"
+    /// (exact, default) or "bf16" (half-size `ParamUpdate` frames;
+    /// workers expand to f32 on receipt — async pipeline only; sync
+    /// mode rejects it to stay bit-identical to the serial trainer).
+    /// (`OBFTF_PARAM_PRECISION` overrides.)
+    pub param_precision: String,
     /// CLI-layer knob overrides (never read from TOML; populated only
     /// by the `obftf` flag parser — a `Some` beats env and config).
     pub overrides: PipelineOverrides,
@@ -166,6 +172,7 @@ impl Default for TrainConfig {
             pipeline_restart_limit: 2,
             proc_timeout_ms: 0,
             score_precision: "f32".to_string(),
+            param_precision: "f32".to_string(),
             overrides: PipelineOverrides::default(),
         }
     }
@@ -228,6 +235,7 @@ impl TrainConfig {
             }
             "proc_timeout_ms" => self.proc_timeout_ms = val.as_u64()?,
             "score_precision" => self.score_precision = val.as_str()?.to_string(),
+            "param_precision" => self.param_precision = val.as_str()?.to_string(),
             other => bail!("unknown config key {other:?}"),
         }
         Ok(())
@@ -284,6 +292,10 @@ impl TrainConfig {
         match self.score_precision.as_str() {
             "f32" | "bf16" => {}
             other => bail!("unknown score_precision {other:?} (expected f32 | bf16)"),
+        }
+        match self.param_precision.as_str() {
+            "f32" | "bf16" => {}
+            other => bail!("unknown param_precision {other:?} (expected f32 | bf16)"),
         }
         match self.flavour.as_str() {
             "auto" | "native" | "pallas" | "jnp" => {}
@@ -424,6 +436,18 @@ epochs = 2
         assert_eq!(cfg.score_precision, "bf16");
         assert_eq!(TrainConfig::default().score_precision, "f32");
         let err = TrainConfig::from_toml_str("score_precision = \"f16\"\n").unwrap_err();
+        assert!(format!("{err:#}").contains("f32 | bf16"), "err: {err:#}");
+    }
+
+    #[test]
+    fn param_precision_parses_and_rejects_junk() {
+        let cfg = TrainConfig::from_toml_str(
+            "epochs = 0\nstream_steps = 50\npipeline = true\nparam_precision = \"bf16\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.param_precision, "bf16");
+        assert_eq!(TrainConfig::default().param_precision, "f32");
+        let err = TrainConfig::from_toml_str("param_precision = \"f16\"\n").unwrap_err();
         assert!(format!("{err:#}").contains("f32 | bf16"), "err: {err:#}");
     }
 

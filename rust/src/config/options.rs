@@ -29,6 +29,7 @@
 //! | restart limit  | `--restart-limit`     | `OBFTF_PIPELINE_RESTART_LIMIT` | `pipeline_restart_limit` | 2 |
 //! | fleet timeout  | (none)                | `OBFTF_PROC_TIMEOUT_MS`   | `proc_timeout_ms`   | 0 = 30 s |
 //! | score precision | `--score-precision`  | `OBFTF_SCORE_PRECISION`   | `score_precision`   | f32 |
+//! | param precision | `--param-precision`  | `OBFTF_PARAM_PRECISION`   | `param_precision`   | f32 |
 
 use std::time::Duration;
 
@@ -84,6 +85,8 @@ pub struct PipelineOverrides {
     pub timeout_ms: Option<u64>,
     /// Scoring-forward precision: "f32" | "bf16".
     pub score_precision: Option<String>,
+    /// Parameter-broadcast wire precision: "f32" | "bf16".
+    pub param_precision: Option<String>,
 }
 
 impl PipelineOverrides {
@@ -122,6 +125,11 @@ pub struct PipelineOptions {
     /// [`PipelineOptions::resolve`] rejects it in sync mode so the
     /// bit-identical oracle stays bit-identical.
     pub score_precision: ScorePrecision,
+    /// Wire precision of the leader's parameter broadcast. `Bf16`
+    /// halves `ParamUpdate` frames (workers expand to f32 on receipt;
+    /// leader training/eval stay exact f32) and is async-only for the
+    /// same reason as `score_precision`.
+    pub param_precision: ScorePrecision,
 }
 
 fn env_usize(key: &str) -> Option<usize> {
@@ -235,6 +243,19 @@ impl PipelineOptions {
                  or use score_precision = f32)"
             );
         }
+        let param_str = ov
+            .param_precision
+            .clone()
+            .or_else(|| env_str("OBFTF_PARAM_PRECISION"))
+            .unwrap_or_else(|| cfg.param_precision.clone());
+        let param_precision = ScorePrecision::parse(param_str.trim())?;
+        if sync && param_precision == ScorePrecision::Bf16 {
+            bail!(
+                "param_precision = bf16 is incompatible with pipeline_sync: sync mode is \
+                 the bit-identical oracle and must broadcast exact f32 params (drop \
+                 --pipeline-sync or use param_precision = f32)"
+            );
+        }
         let max_age = if cfg.loss_max_age > 0 {
             cfg.loss_max_age
         } else {
@@ -251,6 +272,7 @@ impl PipelineOptions {
             max_age,
             timeout,
             score_precision,
+            param_precision,
         })
     }
 
@@ -273,6 +295,7 @@ impl PipelineOptions {
             ),
             format!("proc_timeout_ms = {}", self.timeout.as_millis()),
             format!("score_precision = {}", self.score_precision),
+            format!("param_precision = {}", self.param_precision),
         ]
     }
 }
@@ -358,6 +381,34 @@ mod tests {
         assert_eq!(o.score_precision, ScorePrecision::F32);
     }
 
+    /// bf16 param broadcast mirrors the scoring knob's contract: fine
+    /// async (workers expand on receipt), rejected in sync mode from
+    /// any source, junk spellings rejected at resolve.
+    #[test]
+    fn bf16_param_broadcast_is_async_only() {
+        let mut cfg = base();
+        cfg.param_precision = "bf16".into();
+        let o = PipelineOptions::resolve(&cfg, 64, 8).unwrap();
+        assert_eq!(o.param_precision, ScorePrecision::Bf16);
+        assert_eq!(o.score_precision, ScorePrecision::F32, "knobs are independent");
+        cfg.pipeline_sync = true;
+        let err = PipelineOptions::resolve(&cfg, 64, 8).unwrap_err().to_string();
+        assert!(err.contains("param_precision"), "err: {err}");
+        assert!(err.contains("pipeline_sync"), "err: {err}");
+        // the CLI spelling is validated too, and the override wins
+        let mut cfg = base();
+        cfg.param_precision = "f32".into();
+        cfg.overrides.param_precision = Some("bf16".into());
+        let o = PipelineOptions::resolve(&cfg, 64, 8).unwrap();
+        assert_eq!(o.param_precision, ScorePrecision::Bf16);
+        cfg.overrides.param_precision = Some("f64".into());
+        let err = PipelineOptions::resolve(&cfg, 64, 8).unwrap_err().to_string();
+        assert!(err.contains("f32 | bf16"), "err: {err}");
+        // default stays exact
+        let o = PipelineOptions::resolve(&base(), 64, 8).unwrap();
+        assert_eq!(o.param_precision, ScorePrecision::F32);
+    }
+
     /// One env-injection test (process env is shared across a test
     /// binary's threads, so no other test in this binary asserts on
     /// the depth knob): the env beats config, and the CLI overrides
@@ -390,6 +441,7 @@ mod tests {
             "pipeline_restart_limit",
             "proc_timeout_ms",
             "score_precision",
+            "param_precision",
         ] {
             assert!(lines.iter().any(|l| l.starts_with(key)), "missing {key}");
         }

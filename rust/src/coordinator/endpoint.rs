@@ -67,6 +67,10 @@ pub struct EndpointSpawner {
     pub capacity: usize,
     pub max_age: u64,
     /// Scoring-forward precision the worker runs ("f32" | "bf16").
+    /// The *param broadcast* precision needs no argv twin: workers
+    /// detect a bf16 `ParamUpdate` from the wire dtype and expand on
+    /// receipt, so a respawned worker at any generation stays correct
+    /// whatever the leader's `param_precision`.
     pub score_precision: String,
     pub link: LinkMode,
     /// Bound on spawn-side waits (socket bootstrap line, connect).
@@ -89,7 +93,11 @@ pub struct WorkerEndpoint {
 }
 
 impl WorkerEndpoint {
-    /// Write raw frame bytes to the worker.
+    /// Write raw frame bytes to the worker. The transport hands in a
+    /// slice of its pooled per-connection encode buffer (or the shared
+    /// pre-encoded param broadcast), so this path never copies or
+    /// allocates — the endpoint must not buffer beyond the stream's own
+    /// `BufWriter`.
     pub fn write_all(&mut self, bytes: &[u8]) -> std::io::Result<()> {
         match self.writer.as_mut() {
             Some(w) => w.write_all(bytes),

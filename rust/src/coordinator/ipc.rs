@@ -61,6 +61,7 @@ use crate::coordinator::loss_cache::{
 };
 use crate::coordinator::proto::{self, Frame, ViewRow, WorkerStats, NO_ID};
 use crate::data::dataset::Batch;
+use crate::data::tensor::{bf16_to_f32, f32_to_bf16, TensorData};
 use crate::data::HostTensor;
 use crate::runtime::{Flavour, Manifest, ScorePrecision, Session};
 
@@ -92,6 +93,31 @@ impl ParamStore {
     }
 }
 
+/// Wire-path accounting for the fleet transport: frame count, encode
+/// time, and a per-frame-type byte split of leader→worker traffic
+/// (replies are counted in `frame_bytes` only). Feeds the bench rows
+/// and the per-step `frames_per_step` / `publish_bytes` telemetry.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WireStats {
+    /// Leader→worker frames written (an envelope counts as one).
+    pub frames: u64,
+    /// Nanoseconds spent encoding frames (not writing them).
+    pub encode_ns: u64,
+    /// `ParamUpdate` broadcast bytes.
+    pub param_bytes: u64,
+    /// `ScoreBatch` bytes.
+    pub score_bytes: u64,
+    /// Standalone routed-`LossRecords` bytes (shutdown flushes,
+    /// restart re-warm).
+    pub route_bytes: u64,
+    /// Standalone `CacheLookup` bytes.
+    pub lookup_bytes: u64,
+    /// Coalesced `Batch` envelope bytes (routes + lookup per worker).
+    pub envelope_bytes: u64,
+    /// Everything else (`Shutdown`, …).
+    pub other_bytes: u64,
+}
+
 /// End-of-run aggregate the leader absorbs at [`Transport::shutdown`].
 #[derive(Clone, Debug, Default)]
 pub struct FleetSummary {
@@ -109,6 +135,8 @@ pub struct FleetSummary {
     pub fleet_rows: u64,
     /// Total wire bytes, both directions (in-proc: 0).
     pub frame_bytes: u64,
+    /// Leader→worker wire-path accounting (in-proc: all zero).
+    pub wire: WireStats,
 }
 
 /// The pipeline leader's view of its inference fleet + loss cache.
@@ -140,6 +168,11 @@ pub trait Transport {
     /// Wire traffic so far in bytes (0 for in-process transports).
     fn frame_bytes(&self) -> u64 {
         0
+    }
+    /// Leader→worker wire-path accounting so far (frames, encode time,
+    /// per-frame-type byte split; all zero for in-process transports).
+    fn wire_stats(&self) -> WireStats {
+        WireStats::default()
     }
     /// Graceful shutdown: drain the fleet, join/reap workers, surface
     /// any failure that raced the leader's last check.
@@ -173,6 +206,10 @@ pub struct InProcSpec {
     /// Scoring-forward precision for the fleet's `fwd_loss` calls
     /// (training never sees it — the fleet only scores).
     pub score_precision: ScorePrecision,
+    /// Param-broadcast precision. bf16 round-trips the published
+    /// snapshot through the wire rounding even in-process, so the
+    /// pipeline's scoring semantics are transport-invariant.
+    pub param_precision: ScorePrecision,
 }
 
 /// The PR-3 thread fleet behind the [`Transport`] trait.
@@ -186,6 +223,7 @@ pub struct InProcTransport {
     handles: Vec<JoinHandle<()>>,
     sync: bool,
     stall: Duration,
+    param_precision: ScorePrecision,
 }
 
 impl InProcTransport {
@@ -235,6 +273,7 @@ impl InProcTransport {
             handles,
             sync: spec.sync,
             stall: spec.stall,
+            param_precision: spec.param_precision,
         })
     }
 
@@ -301,6 +340,7 @@ impl InProcTransport {
             shard_rows: (0..self.cache.n_shards()).map(|k| self.cache.shard_stats(k)).collect(),
             fleet_rows: self.fleet_rows_now(),
             frame_bytes: 0,
+            wire: WireStats::default(),
         }
     }
 
@@ -315,7 +355,27 @@ impl Transport for InProcTransport {
     }
 
     fn publish(&mut self, version: u64, weights: &Arc<Vec<HostTensor>>) -> Result<()> {
-        self.params.publish(version, weights.clone());
+        let snapshot = match self.param_precision {
+            ScorePrecision::F32 => weights.clone(),
+            // mirror the wire contract: the fleet scores against the
+            // bf16-rounded snapshot exactly as a socket worker would
+            // expand it on receipt
+            ScorePrecision::Bf16 => Arc::new(
+                weights
+                    .iter()
+                    .map(|t| match &t.data {
+                        TensorData::F32(v) => HostTensor {
+                            shape: t.shape.clone(),
+                            data: TensorData::F32(
+                                v.iter().map(|&x| bf16_to_f32(f32_to_bf16(x))).collect(),
+                            ),
+                        },
+                        _ => t.clone(),
+                    })
+                    .collect(),
+            ),
+        };
+        self.params.publish(version, snapshot);
         Ok(())
     }
 
@@ -481,6 +541,10 @@ pub struct FleetSpec {
     pub sync: bool,
     /// Scoring-forward precision the children run (`--score-precision`).
     pub score_precision: ScorePrecision,
+    /// Param-broadcast precision: bf16 RNE-rounds the published
+    /// snapshot once into a half-size `ParamUpdate`; workers detect the
+    /// wire dtype and expand to f32 on receipt (no worker flag).
+    pub param_precision: ScorePrecision,
     /// Worker binary; `None` resolves `$OBFTF_WORKER_BIN`, then the
     /// current executable (correct when the leader *is* `obftf`).
     pub worker_bin: Option<PathBuf>,
@@ -578,9 +642,25 @@ pub struct FleetTransport {
     /// In-flight `ScoreBatch` work: `seq → (worker, batch)`, retired by
     /// the matching `LossRecords` reply, re-issued on restart.
     outstanding: BTreeMap<u64, (usize, Arc<Batch>)>,
-    /// Last published `ParamUpdate`, pre-encoded, so a replacement
-    /// worker starts from current weights.
-    last_params: Option<Vec<u8>>,
+    /// Last published `ParamUpdate`, pre-encoded once per publish and
+    /// broadcast to every worker from this one buffer (empty = never
+    /// published); also the restart republish source.
+    last_params: Vec<u8>,
+    /// Param-broadcast precision (`encode_param_update_into` dtype).
+    param_precision: ScorePrecision,
+    /// Reusable frame-encode scratch — the steady-state write path
+    /// allocates nothing once this is warm.
+    enc_buf: Vec<u8>,
+    /// Reusable wire-id scratch for `lookup_once`.
+    lookup_ids: Vec<u64>,
+    /// Routed `LossRecords` deferred per owner; they coalesce into the
+    /// next selection-time envelope instead of going out as one write
+    /// per scorer per owner.
+    pending_routes: Vec<Vec<Route>>,
+    /// Recycled `Route` buffers (ids/losses capacity stays warm).
+    route_pool: Vec<Route>,
+    /// Leader→worker wire accounting.
+    wire: WireStats,
     next_seq: u64,
     next_req: u64,
     cur_req: u64,
@@ -599,6 +679,16 @@ pub struct FleetTransport {
     /// reply frame, so without this the leader could block on an event
     /// that never comes after the routed rows already satisfied it.
     progress: bool,
+}
+
+/// One deferred routed-rows write (scorer → shard owner), pooled in
+/// `route_pool` so steady-state routing reuses warm buffers.
+#[derive(Default)]
+struct Route {
+    worker: u32,
+    stamp: u64,
+    ids: Vec<u64>,
+    losses: Vec<f32>,
 }
 
 enum RowClass {
@@ -642,7 +732,13 @@ impl FleetTransport {
             restart_epoch: 0,
             journal: (0..spec.workers).map(|_| HashMap::new()).collect(),
             outstanding: BTreeMap::new(),
-            last_params: None,
+            last_params: Vec::new(),
+            param_precision: spec.param_precision,
+            enc_buf: Vec::new(),
+            lookup_ids: Vec::new(),
+            pending_routes: (0..spec.workers).map(|_| Vec::new()).collect(),
+            route_pool: Vec::new(),
+            wire: WireStats::default(),
             next_seq: 0,
             next_req: 0,
             cur_req: 0,
@@ -679,8 +775,10 @@ impl FleetTransport {
             .name(format!("obftf-fleet-rx-{w}-g{generation}"))
             .spawn(move || {
                 let mut r = BufReader::new(stream);
+                // reused body buffer: framing allocates nothing once warm
+                let mut body = Vec::new();
                 loop {
-                    match proto::read_frame(&mut r) {
+                    match proto::read_frame_into(&mut r, &mut body) {
                         Ok(Some((frame, n))) => {
                             counter.fetch_add(n as u64, Ordering::Relaxed);
                             if tx.send(Event::Frame(w, generation, frame)).is_err() {
@@ -747,8 +845,11 @@ impl FleetTransport {
         // never re-inject --fail-after into a replacement
         self.slots[w] = self.spawn_slot(w, generation, None)?;
         self.await_hello(w)?;
-        if let Some(bytes) = self.last_params.clone() {
-            self.write_raw(w, &bytes, "ParamUpdate")?;
+        self.write_params(w)?;
+        // routes still deferred for this owner are already journaled —
+        // drop them so the re-warm below doesn't get stale duplicates
+        while let Some(r) = self.pending_routes[w].pop() {
+            self.recycle_route(r);
         }
         // re-warm the shard stamp-ascending so the newest stamp wins
         // exactly as it did the first time
@@ -790,13 +891,27 @@ impl FleetTransport {
         )
     }
 
+    /// Attribute one written frame to the per-type byte split.
+    fn account_write(&mut self, name: &'static str, len: u64) {
+        self.bytes_out += len;
+        self.wire.frames += 1;
+        match name {
+            "ParamUpdate" => self.wire.param_bytes += len,
+            "ScoreBatch" => self.wire.score_bytes += len,
+            "LossRecords" => self.wire.route_bytes += len,
+            "CacheLookup" => self.wire.lookup_bytes += len,
+            "Batch" => self.wire.envelope_bytes += len,
+            _ => self.wire.other_bytes += len,
+        }
+    }
+
     fn write_raw(&mut self, w: usize, bytes: &[u8], name: &'static str) -> Result<()> {
         if !self.slots[w].alive {
             return Err(self.dead_error(w, "refusing to write to dead worker"));
         }
         match self.slots[w].ep.write_all(bytes) {
             Ok(()) => {
-                self.bytes_out += bytes.len() as u64;
+                self.account_write(name, bytes.len() as u64);
                 self.slots[w].last_sent = name;
                 Ok(())
             }
@@ -813,7 +928,79 @@ impl FleetTransport {
     }
 
     fn write(&mut self, w: usize, frame: &Frame) -> Result<()> {
-        self.write_raw(w, &frame.encode(), frame.name())
+        // encode into the pooled scratch (taken, not borrowed: a write
+        // failure re-enters through supervise, which writes frames of
+        // its own and then simply warms up a fresh buffer)
+        let mut buf = std::mem::take(&mut self.enc_buf);
+        let t0 = Instant::now();
+        frame.encode_into(&mut buf);
+        self.wire.encode_ns += t0.elapsed().as_nanos() as u64;
+        let res = self.write_raw(w, &buf, frame.name());
+        self.enc_buf = buf;
+        res
+    }
+
+    /// Broadcast the pre-encoded `ParamUpdate` snapshot to worker `w`
+    /// straight from the shared buffer — no per-worker copy. No-op
+    /// before the first publish. (Body duplicates `write_raw` because
+    /// the buffer lives on `self`; the disjoint field borrows keep it
+    /// clone-free.)
+    fn write_params(&mut self, w: usize) -> Result<()> {
+        if self.last_params.is_empty() {
+            return Ok(());
+        }
+        if !self.slots[w].alive {
+            return Err(self.dead_error(w, "refusing to write to dead worker"));
+        }
+        match self.slots[w].ep.write_all(&self.last_params) {
+            Ok(()) => {
+                self.account_write("ParamUpdate", self.last_params.len() as u64);
+                self.slots[w].last_sent = "ParamUpdate";
+                Ok(())
+            }
+            Err(e) => {
+                let reason = format!("write of ParamUpdate frame failed: {e}");
+                self.supervise(w, &reason)
+            }
+        }
+    }
+
+    /// Return a spent route to the pool with its buffers kept warm.
+    fn recycle_route(&mut self, mut r: Route) {
+        r.ids.clear();
+        r.losses.clear();
+        self.route_pool.push(r);
+    }
+
+    /// Write every still-deferred route as a standalone `LossRecords`
+    /// frame — the shutdown path, where no further lookup envelope will
+    /// carry them and worker-side `recorded_rows` accounting must
+    /// complete before the stats handshake. Dead owners' routes are
+    /// dropped (their shard state died with them).
+    fn flush_routes(&mut self) -> Result<()> {
+        for owner in 0..self.slots.len() {
+            let mut routes = std::mem::take(&mut self.pending_routes[owner]);
+            let mut res = Ok(());
+            for route in routes.drain(..) {
+                if res.is_ok() && self.slots[owner].alive {
+                    let mut buf = std::mem::take(&mut self.enc_buf);
+                    proto::encode_loss_records_into(
+                        u64::MAX,
+                        route.worker,
+                        route.stamp,
+                        &route.ids,
+                        &route.losses,
+                        &mut buf,
+                    );
+                    res = self.write_raw(owner, &buf, "LossRecords");
+                    self.enc_buf = buf;
+                }
+                self.recycle_route(route);
+            }
+            self.pending_routes[owner] = routes;
+            res?;
+        }
+        Ok(())
     }
 
     fn handle_event(&mut self, ev: Event) -> Result<()> {
@@ -878,30 +1065,30 @@ impl FleetTransport {
                 if self.shutting_down {
                     return Ok(()); // late score reply: absorb, don't route
                 }
-                // route foreign rows to their shard owners
+                // defer foreign-row routing: each owner's routes coalesce
+                // into its next selection-time lookup envelope (one write
+                // per owner per step instead of one per scorer per owner);
+                // arrival order is preserved, so newest-stamp-wins cache
+                // semantics are unchanged. A crash before the flush is
+                // covered by the journal insert above.
                 for owner in 0..self.slots.len() {
                     if owner == w {
                         continue; // scorer recorded its own rows locally
                     }
-                    let mut oids = Vec::new();
-                    let mut olosses = Vec::new();
+                    let mut route = self.route_pool.pop().unwrap_or_default();
+                    route.worker = w as u32;
+                    route.stamp = stamp;
                     for (&id, &l) in ids.iter().zip(&losses) {
                         if id % n == owner as u64 {
-                            oids.push(id);
-                            olosses.push(l);
+                            route.ids.push(id);
+                            route.losses.push(l);
                         }
                     }
-                    if oids.is_empty() {
-                        continue;
+                    if route.ids.is_empty() {
+                        self.recycle_route(route);
+                    } else {
+                        self.pending_routes[owner].push(route);
                     }
-                    let route = Frame::LossRecords {
-                        seq: u64::MAX,
-                        worker: w as u32,
-                        stamp,
-                        ids: oids,
-                        losses: olosses,
-                    };
-                    self.write(owner, &route)?;
                 }
                 Ok(())
             }
@@ -974,27 +1161,63 @@ impl FleetTransport {
         self.next_req += 1;
         let req = self.next_req;
         self.cur_req = req;
-        let wire_ids: Vec<u64> = batch
-            .ids
-            .iter()
-            .zip(&batch.valid_mask)
-            .map(|(&id, &m)| if m > 0.0 && id != usize::MAX { id as u64 } else { NO_ID })
-            .collect();
+        // pooled wire-id scratch (taken so the fan-out below can borrow
+        // self mutably; restored on every exit path)
+        let mut wire_ids = std::mem::take(&mut self.lookup_ids);
+        wire_ids.clear();
+        wire_ids.extend(
+            batch
+                .ids
+                .iter()
+                .zip(&batch.valid_mask)
+                .map(|(&id, &m)| if m > 0.0 && id != usize::MAX { id as u64 } else { NO_ID }),
+        );
         for v in self.pending_views.iter_mut() {
             *v = None;
         }
-        let lookup = Frame::CacheLookup { req, now, exact: self.sync, ids: wire_ids.clone() };
-        let bytes = lookup.encode();
         for w in 0..n {
-            self.write_raw(w, &bytes, "CacheLookup")?;
+            // coalesce this owner's deferred routes with the lookup into
+            // one envelope frame (routes first, so the lookup answers
+            // over the freshly-routed rows); no routes → a plain lookup
+            let mut buf = std::mem::take(&mut self.enc_buf);
+            let mut routes = std::mem::take(&mut self.pending_routes[w]);
+            let t0 = Instant::now();
+            let name = if routes.is_empty() {
+                proto::encode_cache_lookup_into(req, now, self.sync, &wire_ids, &mut buf);
+                "CacheLookup"
+            } else {
+                let mut enc = proto::EnvelopeEncoder::begin(&mut buf);
+                for r in &routes {
+                    enc.member_loss_records(u64::MAX, r.worker, r.stamp, &r.ids, &r.losses);
+                }
+                enc.member_cache_lookup(req, now, self.sync, &wire_ids);
+                enc.finish();
+                "Batch"
+            };
+            self.wire.encode_ns += t0.elapsed().as_nanos() as u64;
+            for r in routes.drain(..) {
+                self.recycle_route(r);
+            }
+            self.pending_routes[w] = routes; // keep the Vec's capacity
+            let res = self.write_raw(w, &buf, name);
+            self.enc_buf = buf;
+            if let Err(e) = res {
+                self.lookup_ids = wire_ids;
+                return Err(e);
+            }
             if self.restart_epoch != epoch0 {
+                self.lookup_ids = wire_ids;
                 return Ok(RowClass::Retry);
             }
         }
         let deadline = Instant::now() + self.timeout;
         while self.pending_views.iter().any(|v| v.is_none()) {
-            self.recv_deadline(deadline, "cache views")?;
+            if let Err(e) = self.recv_deadline(deadline, "cache views") {
+                self.lookup_ids = wire_ids;
+                return Err(e);
+            }
             if self.restart_epoch != epoch0 {
+                self.lookup_ids = wire_ids;
                 return Ok(RowClass::Retry);
             }
         }
@@ -1053,6 +1276,7 @@ impl FleetTransport {
                 }
             }
         }
+        self.lookup_ids = wire_ids;
         Ok(if missing > 0 {
             RowClass::Incomplete
         } else if stale > 0 {
@@ -1118,13 +1342,22 @@ impl Transport for FleetTransport {
 
     fn publish(&mut self, version: u64, weights: &Arc<Vec<HostTensor>>) -> Result<()> {
         // runs once per training step: encode straight from the
-        // borrowed snapshot instead of cloning it into a Frame
-        let bytes = proto::encode_param_update(version, weights.as_slice());
-        // cache before writing so a restart fired *by* one of these
-        // writes already republishes this snapshot
-        self.last_params = Some(bytes.clone());
+        // borrowed snapshot into the reused broadcast buffer (bf16
+        // param precision halves it here, once, for every worker)
+        let mut buf = std::mem::take(&mut self.last_params);
+        let t0 = Instant::now();
+        proto::encode_param_update_into(
+            version,
+            weights.as_slice(),
+            self.param_precision,
+            &mut buf,
+        );
+        self.wire.encode_ns += t0.elapsed().as_nanos() as u64;
+        // stash before the write loop so a restart fired *by* one of
+        // these writes already republishes this snapshot
+        self.last_params = buf;
         for w in 0..self.slots.len() {
-            self.write_raw(w, &bytes, "ParamUpdate")?;
+            self.write_params(w)?;
         }
         Ok(())
     }
@@ -1195,11 +1428,18 @@ impl Transport for FleetTransport {
         self.bytes_out + self.bytes_in.load(Ordering::Relaxed)
     }
 
+    fn wire_stats(&self) -> WireStats {
+        self.wire
+    }
+
     fn shutdown(&mut self) -> Result<FleetSummary> {
+        // flush still-deferred routed rows first (no further lookup
+        // envelope will carry them, and worker-side recorded_rows
+        // accounting must settle before the stats handshake)
+        let mut first_err: Option<anyhow::Error> = self.flush_routes().err();
         self.shutting_down = true;
         let alive_at_entry = self.workers_alive();
         let n = self.slots.len();
-        let mut first_err: Option<anyhow::Error> = None;
         for w in 0..n {
             if self.slots[w].alive {
                 if let Err(e) = self.write(w, &Frame::Shutdown) {
@@ -1236,6 +1476,7 @@ impl Transport for FleetTransport {
             shard_rows: self.shard_rows.clone(),
             fleet_rows: self.fleet_rows,
             frame_bytes: self.frame_bytes(),
+            wire: self.wire,
         })
     }
 }
@@ -1268,6 +1509,151 @@ pub struct WorkerConfig {
     pub fail_after: Option<u64>,
 }
 
+/// Whether the worker loop continues after a frame or exits.
+enum Flow {
+    Continue,
+    Done,
+}
+
+/// The worker protocol state plus its steady-state scratch buffers:
+/// every per-frame list (wire ids, losses, owned rows, view rows) and
+/// the encoded reply reuse warm buffers, so a steady-state step
+/// performs zero wire-path heap allocations on the worker side.
+struct WorkerLoop {
+    session: Session,
+    cache: LossCache,
+    stats: WorkerStats,
+    version: u64,
+    me: u64,
+    n: u64,
+    ids: Vec<u64>,
+    vals: Vec<f32>,
+    own_ids: Vec<usize>,
+    own_vals: Vec<f32>,
+    own_valid: Vec<f32>,
+    view_rows: Vec<ViewRow>,
+    reply: Vec<u8>,
+}
+
+impl WorkerLoop {
+    fn handle(&mut self, frame: Frame, output: &mut impl Write) -> Result<Flow> {
+        match frame {
+            Frame::ParamUpdate { version: v, weights } => {
+                // a bf16 broadcast is detected from the wire dtype and
+                // expanded to f32 on receipt — no worker-side flag
+                if weights.iter().any(|t| matches!(t.data, TensorData::Bf16(_))) {
+                    let expanded: Vec<HostTensor> =
+                        weights.iter().map(|t| t.expand_to_f32()).collect();
+                    self.session.load_params(&expanded).context("worker weight sync")?;
+                } else {
+                    self.session.load_params(&weights).context("worker weight sync")?;
+                }
+                self.version = v;
+                Ok(Flow::Continue)
+            }
+            Frame::ScoreBatch { seq, batch } => {
+                anyhow::ensure!(self.version != NEVER, "ScoreBatch before any ParamUpdate");
+                let losses =
+                    self.session.fwd_loss(&batch.x, &batch.y).context("worker fwd_loss")?;
+                self.ids.clear();
+                self.vals.clear();
+                self.own_ids.clear();
+                self.own_vals.clear();
+                for ((&id, &m), &l) in batch.ids.iter().zip(&batch.valid_mask).zip(&losses) {
+                    if m <= 0.0 || id == usize::MAX {
+                        continue;
+                    }
+                    self.ids.push(id as u64);
+                    self.vals.push(l);
+                    if id as u64 % self.n == self.me {
+                        self.own_ids.push(id);
+                        self.own_vals.push(l);
+                    }
+                }
+                self.own_valid.clear();
+                self.own_valid.resize(self.own_ids.len(), 1.0);
+                self.cache.record_batch(
+                    &self.own_ids,
+                    &self.own_valid,
+                    &self.own_vals,
+                    self.version,
+                );
+                self.stats.scored_batches += 1;
+                self.stats.scored_rows += self.ids.len() as u64;
+                self.stats.recorded_rows += self.own_ids.len() as u64;
+                proto::encode_loss_records_into(
+                    seq,
+                    self.stats.worker,
+                    self.version,
+                    &self.ids,
+                    &self.vals,
+                    &mut self.reply,
+                );
+                output.write_all(&self.reply).context("writing LossRecords frame")?;
+                output.flush().context("flushing LossRecords")?;
+                Ok(Flow::Continue)
+            }
+            Frame::LossRecords { stamp, ids, losses, .. } => {
+                // rows routed from another scorer; record the owned ones
+                self.own_ids.clear();
+                self.own_vals.clear();
+                for (&id, &l) in ids.iter().zip(&losses) {
+                    if id % self.n == self.me {
+                        self.own_ids.push(id as usize);
+                        self.own_vals.push(l);
+                    }
+                }
+                self.own_valid.clear();
+                self.own_valid.resize(self.own_ids.len(), 1.0);
+                self.cache.record_batch(&self.own_ids, &self.own_valid, &self.own_vals, stamp);
+                self.stats.recorded_rows += self.own_ids.len() as u64;
+                Ok(Flow::Continue)
+            }
+            Frame::CacheLookup { req, ids, .. } => {
+                self.view_rows.clear();
+                for (pos, &wid) in ids.iter().enumerate() {
+                    if wid == NO_ID || wid % self.n != self.me {
+                        continue;
+                    }
+                    let (loss, stamp) = self.cache.entry(wid as usize).unwrap_or((0.0, NEVER));
+                    self.view_rows.push(ViewRow { pos: pos as u32, loss, stamp });
+                }
+                self.stats.lookups += 1;
+                proto::encode_cache_view_into(
+                    req,
+                    self.stats.worker,
+                    &self.view_rows,
+                    &mut self.reply,
+                );
+                output.write_all(&self.reply).context("writing CacheView frame")?;
+                output.flush().context("flushing CacheView")?;
+                Ok(Flow::Continue)
+            }
+            Frame::Shutdown => {
+                proto::write_frame(output, &Frame::WorkerStats(self.stats))?;
+                output.flush().context("flushing WorkerStats")?;
+                Ok(Flow::Done)
+            }
+            Frame::Batch(members) => {
+                // coalesced envelope: handle members in order (decode
+                // already rejected nesting), so routed rows land before
+                // the lookup that rides with them
+                for m in members {
+                    if let Flow::Done = self.handle(m, output)? {
+                        return Ok(Flow::Done);
+                    }
+                }
+                Ok(Flow::Continue)
+            }
+            other => bail!(
+                "worker {}: unexpected {} frame from leader",
+                self.stats.worker,
+                other.name()
+            ),
+        }
+    }
+}
+
 /// The worker protocol loop: read frames from `input`, write replies to
 /// `output`. Owns the loss-cache shards `id % n_workers == worker_id`:
 /// records its own scores and routed rows there, serves `CacheLookup`s
@@ -1298,14 +1684,25 @@ pub fn run_worker(cfg: &WorkerConfig, mut input: impl Read, mut output: impl Wri
     let precision = ScorePrecision::parse(cfg.score_precision.trim())
         .with_context(|| format!("worker {}: --score-precision", cfg.worker_id))?;
     session.set_score_precision(precision);
-    let mut cache = LossCache::new(cfg.capacity, 0);
-    let me = cfg.worker_id as u64;
-    let n = cfg.n_workers as u64;
-    let mut stats = WorkerStats { worker: cfg.worker_id as u32, ..Default::default() };
-    let mut version = NEVER;
+    let mut wl = WorkerLoop {
+        session,
+        cache: LossCache::new(cfg.capacity, 0),
+        stats: WorkerStats { worker: cfg.worker_id as u32, ..Default::default() },
+        version: NEVER,
+        me: cfg.worker_id as u64,
+        n: cfg.n_workers as u64,
+        ids: Vec::new(),
+        vals: Vec::new(),
+        own_ids: Vec::new(),
+        own_vals: Vec::new(),
+        own_valid: Vec::new(),
+        view_rows: Vec::new(),
+        reply: Vec::new(),
+    };
     let mut frames_handled = 0u64;
+    let mut body = Vec::new();
     loop {
-        let Some((frame, _)) = proto::read_frame(&mut input)? else {
+        let Some((frame, _)) = proto::read_frame_into(&mut input, &mut body)? else {
             return Ok(()); // leader closed the pipe: clean shutdown
         };
         if cfg.fail_after.is_some_and(|k| frames_handled >= k) {
@@ -1314,84 +1711,8 @@ pub fn run_worker(cfg: &WorkerConfig, mut input: impl Read, mut output: impl Wri
             std::process::exit(17);
         }
         frames_handled += 1;
-        match frame {
-            Frame::ParamUpdate { version: v, weights } => {
-                session.load_params(&weights).context("worker weight sync")?;
-                version = v;
-            }
-            Frame::ScoreBatch { seq, batch } => {
-                anyhow::ensure!(version != NEVER, "ScoreBatch before any ParamUpdate");
-                let losses = session.fwd_loss(&batch.x, &batch.y).context("worker fwd_loss")?;
-                let mut ids = Vec::with_capacity(batch.real);
-                let mut vals = Vec::with_capacity(batch.real);
-                let mut own_ids = Vec::new();
-                let mut own_vals = Vec::new();
-                for ((&id, &m), &l) in batch.ids.iter().zip(&batch.valid_mask).zip(&losses) {
-                    if m <= 0.0 || id == usize::MAX {
-                        continue;
-                    }
-                    ids.push(id as u64);
-                    vals.push(l);
-                    if id as u64 % n == me {
-                        own_ids.push(id);
-                        own_vals.push(l);
-                    }
-                }
-                let own_valid = vec![1.0f32; own_ids.len()];
-                cache.record_batch(&own_ids, &own_valid, &own_vals, version);
-                stats.scored_batches += 1;
-                stats.scored_rows += ids.len() as u64;
-                stats.recorded_rows += own_ids.len() as u64;
-                let reply = Frame::LossRecords {
-                    seq,
-                    worker: stats.worker,
-                    stamp: version,
-                    ids,
-                    losses: vals,
-                };
-                proto::write_frame(&mut output, &reply)?;
-                output.flush().context("flushing LossRecords")?;
-            }
-            Frame::LossRecords { stamp, ids, losses, .. } => {
-                // rows routed from another scorer; record the owned ones
-                let mut own_ids = Vec::with_capacity(ids.len());
-                let mut own_vals = Vec::with_capacity(ids.len());
-                for (&id, &l) in ids.iter().zip(&losses) {
-                    if id % n == me {
-                        own_ids.push(id as usize);
-                        own_vals.push(l);
-                    }
-                }
-                let own_valid = vec![1.0f32; own_ids.len()];
-                cache.record_batch(&own_ids, &own_valid, &own_vals, stamp);
-                stats.recorded_rows += own_ids.len() as u64;
-            }
-            Frame::CacheLookup { req, ids, .. } => {
-                let mut rows = Vec::new();
-                for (pos, &wid) in ids.iter().enumerate() {
-                    if wid == NO_ID || wid % n != me {
-                        continue;
-                    }
-                    let (loss, stamp) = cache.entry(wid as usize).unwrap_or((0.0, NEVER));
-                    rows.push(ViewRow { pos: pos as u32, loss, stamp });
-                }
-                stats.lookups += 1;
-                proto::write_frame(
-                    &mut output,
-                    &Frame::CacheView { req, worker: stats.worker, rows },
-                )?;
-                output.flush().context("flushing CacheView")?;
-            }
-            Frame::Shutdown => {
-                proto::write_frame(&mut output, &Frame::WorkerStats(stats))?;
-                output.flush().context("flushing WorkerStats")?;
-                return Ok(());
-            }
-            other => bail!(
-                "worker {}: unexpected {} frame from leader",
-                cfg.worker_id,
-                other.name()
-            ),
+        if let Flow::Done = wl.handle(frame, &mut output)? {
+            return Ok(());
         }
     }
 }
@@ -1529,6 +1850,83 @@ mod tests {
         let Frame::WorkerStats(s) = &replies[2] else { panic!("expected stats") };
         assert_eq!(s.recorded_rows, 2, "only the owned routed rows");
         assert_eq!(s.scored_batches, 0);
+    }
+
+    #[test]
+    fn worker_handles_coalesced_envelope() {
+        let (_, session, batch, capacity) = linreg_fixture();
+        let weights = session.snapshot().unwrap();
+        let cfg = worker_cfg(0, 2, capacity);
+        // one coalesced envelope: routed rows ride ahead of the lookup,
+        // so the view already covers them
+        let script = [
+            Frame::ParamUpdate { version: 2, weights },
+            Frame::Batch(vec![
+                Frame::LossRecords {
+                    seq: u64::MAX,
+                    worker: 1,
+                    stamp: 6,
+                    ids: vec![0, 2, 5],
+                    losses: vec![0.125, 0.75, 42.0],
+                },
+                Frame::CacheLookup { req: 9, now: 6, exact: false, ids: vec![0, 2, 4] },
+            ]),
+            Frame::Shutdown,
+        ];
+        let replies = run_script(&cfg, &script);
+        assert_eq!(replies.len(), 3, "Hello + CacheView + WorkerStats");
+        let Frame::CacheView { req, worker, rows } = &replies[1] else {
+            panic!("expected CacheView, got {}", replies[1].name());
+        };
+        assert_eq!((*req, *worker), (9, 0));
+        // the routes in the same envelope landed before the lookup ran
+        assert_eq!(rows.len(), 3);
+        assert_eq!((rows[0].pos, rows[0].stamp), (0, 6));
+        assert_eq!(rows[0].loss, 0.125);
+        assert_eq!((rows[1].pos, rows[1].stamp), (1, 6));
+        assert_eq!(rows[1].loss, 0.75);
+        assert_eq!((rows[2].pos, rows[2].stamp), (2, NEVER));
+        let Frame::WorkerStats(s) = &replies[2] else { panic!("expected stats") };
+        assert_eq!(s.recorded_rows, 2, "ids 0 and 2 are owned; 5 belongs to worker 1");
+        assert_eq!(s.lookups, 1);
+    }
+
+    #[test]
+    fn worker_expands_bf16_param_broadcast() {
+        let (manifest, session, batch, capacity) = linreg_fixture();
+        let weights = session.snapshot().unwrap();
+        // the expected losses come from a local session loaded with the
+        // elementwise bf16-rounded weights
+        let rounded: Vec<HostTensor> = weights
+            .iter()
+            .map(|t| match &t.data {
+                TensorData::F32(v) => HostTensor {
+                    shape: t.shape.clone(),
+                    data: TensorData::F32(
+                        v.iter().map(|&x| bf16_to_f32(f32_to_bf16(x))).collect(),
+                    ),
+                },
+                _ => t.clone(),
+            })
+            .collect();
+        let mut check = Session::new(&manifest, "linreg", Flavour::Native).unwrap();
+        check.load_params(&rounded).unwrap();
+        let expect = check.fwd_loss(&batch.x, &batch.y).unwrap();
+        // ship the broadcast in its bf16 wire form (half-size payload)
+        let enc = proto::encode_param_update(4, &weights, ScorePrecision::Bf16);
+        let f32_enc = proto::encode_param_update(4, &weights, ScorePrecision::F32);
+        assert!(enc.len() < f32_enc.len(), "bf16 broadcast must shrink the frame");
+        let (update, _) = proto::read_frame(&mut enc.as_slice()).unwrap().expect("decodes");
+        let cfg = worker_cfg(0, 1, capacity);
+        let script = [update, Frame::ScoreBatch { seq: 1, batch: batch.clone() }, Frame::Shutdown];
+        let replies = run_script(&cfg, &script);
+        let Frame::LossRecords { stamp, losses, .. } = &replies[1] else {
+            panic!("expected LossRecords, got {}", replies[1].name());
+        };
+        assert_eq!(*stamp, 4);
+        for (i, (&got, &want)) in losses.iter().zip(&expect).enumerate() {
+            assert_eq!(got.to_bits(), want.to_bits(), "loss {i}");
+        }
     }
 
     #[test]

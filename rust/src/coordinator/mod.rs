@@ -40,7 +40,8 @@ pub mod trainer;
 pub use budget::BudgetTracker;
 pub use endpoint::LinkMode;
 pub use ipc::{
-    FleetSpec, FleetSummary, FleetTransport, InProcSpec, InProcTransport, Transport, WorkerConfig,
+    FleetSpec, FleetSummary, FleetTransport, InProcSpec, InProcTransport, Transport, WireStats,
+    WorkerConfig,
 };
 pub use loss_cache::{CacheStats, LossCache, ShardedLossCache};
 pub use parallel::ParallelTrainer;

@@ -67,7 +67,8 @@ use anyhow::{Context, Result};
 use crate::config::{PipelineOptions, TrainConfig, TransportKind};
 use crate::coordinator::endpoint::LinkMode;
 use crate::coordinator::ipc::{
-    FleetSpec, FleetSummary, FleetTransport, InProcSpec, InProcTransport, Transport, STALL_TIMEOUT,
+    FleetSpec, FleetSummary, FleetTransport, InProcSpec, InProcTransport, Transport, WireStats,
+    STALL_TIMEOUT,
 };
 use crate::coordinator::loss_cache::CacheStats;
 use crate::coordinator::service::StatusBoard;
@@ -204,6 +205,13 @@ impl PipelineTrainer {
         self.summary.frame_bytes
     }
 
+    /// Leader-side wire counters: frames sent, encode time and the
+    /// per-frame-type byte split (all zero for the thread fleet).
+    /// Populated when a run completes.
+    pub fn wire_stats(&self) -> WireStats {
+        self.summary.wire
+    }
+
     /// Milliseconds the training stage spent blocked handing snapshots
     /// to the async-eval stage (nonzero = evals arrive faster than the
     /// eval session can score them).
@@ -232,6 +240,7 @@ impl PipelineTrainer {
                     queue_cap,
                     stall: STALL_TIMEOUT,
                     score_precision: self.options.score_precision,
+                    param_precision: self.options.param_precision,
                 })?));
             }
             TransportKind::Pipes => LinkMode::Pipes,
@@ -246,6 +255,7 @@ impl PipelineTrainer {
             max_age: self.options.max_age,
             sync: self.options.sync,
             score_precision: self.options.score_precision,
+            param_precision: self.options.param_precision,
             worker_bin: None,
             timeout: self.options.timeout,
             fail_after: crate::coordinator::ipc::fail_after_from_env(self.options.workers),
@@ -328,6 +338,9 @@ impl PipelineTrainer {
         let depth = if self.options.sync { 0 } else { self.options.depth as u64 };
         let mut pending: VecDeque<Arc<Batch>> = VecDeque::new();
         let mut next_issue: u64 = 0;
+        // per-step wire telemetry is the delta against the last step's
+        // cumulative counters (the initial publish lands in step 0)
+        let mut prev_wire = WireStats::default();
         for s in 0..steps {
             // top up the fleet's lookahead window
             let horizon = (s + depth).min(steps - 1);
@@ -380,6 +393,10 @@ impl PipelineTrainer {
             let cache_stats = fleet.cache_stats();
             let workers_alive = fleet.workers_alive() as u32;
             let worker_restarts = fleet.restarts() as u32;
+            let wire = fleet.wire_stats();
+            let frames_per_step = wire.frames - prev_wire.frames;
+            let publish_bytes = wire.param_bytes - prev_wire.param_bytes;
+            prev_wire = wire;
             let rec = StepRecord {
                 step: self.step,
                 epoch: 0,
@@ -396,6 +413,8 @@ impl PipelineTrainer {
                 sel_hash: selection_hash(&selected),
                 workers_alive,
                 worker_restarts,
+                frames_per_step,
+                publish_bytes,
             };
             self.recorder.record_step(rec);
             self.step += 1;
@@ -433,6 +452,8 @@ impl PipelineTrainer {
                 st.workers_alive = workers_alive as u64;
                 st.worker_restarts = worker_restarts as u64;
                 st.worker_scored = worker_scored;
+                st.frames_per_step = frames_per_step;
+                st.publish_bytes = publish_bytes;
             });
         }
         Ok(())

@@ -40,6 +40,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::data::dataset::Batch;
 use crate::data::tensor::HostTensor;
+use crate::runtime::backend::ScorePrecision;
 
 /// Wire-protocol version carried in the [`Frame::Hello`] handshake.
 /// Bump on any incompatible frame-layout change; the leader refuses a
@@ -133,6 +134,11 @@ pub enum Frame {
     },
     Shutdown,
     WorkerStats(WorkerStats),
+    /// Envelope coalescing several frames into one write/read, so the
+    /// per-step routed `LossRecords` fan-out rides the selection-time
+    /// `CacheLookup` in a single syscall per worker. One level deep
+    /// only — a nested `Batch` member is a protocol error.
+    Batch(Vec<Frame>),
 }
 
 const TAG_SCORE_BATCH: u8 = 1;
@@ -143,6 +149,7 @@ const TAG_CACHE_VIEW: u8 = 5;
 const TAG_SHUTDOWN: u8 = 6;
 const TAG_WORKER_STATS: u8 = 7;
 const TAG_HELLO: u8 = 8;
+const TAG_BATCH: u8 = 9;
 
 impl Frame {
     /// Frame name for diagnostics ("worker 2 died after ScoreBatch").
@@ -156,66 +163,84 @@ impl Frame {
             Frame::CacheView { .. } => "CacheView",
             Frame::Shutdown => "Shutdown",
             Frame::WorkerStats(_) => "WorkerStats",
+            Frame::Batch(_) => "Batch",
         }
     }
 
-    /// Encode as a complete length-prefixed frame.
-    pub fn encode(&self) -> Vec<u8> {
-        let mut body = Vec::with_capacity(64);
+    /// Append this frame's body (tag + payload, no length prefix).
+    fn encode_body(&self, body: &mut Vec<u8>) {
         match self {
             Frame::Hello { proto, worker } => {
                 body.push(TAG_HELLO);
-                put_u32(&mut body, *proto);
-                put_u32(&mut body, *worker);
+                put_u32(body, *proto);
+                put_u32(body, *worker);
             }
             Frame::ScoreBatch { seq, batch } => {
                 body.push(TAG_SCORE_BATCH);
-                put_u64(&mut body, *seq);
-                put_batch(&mut body, batch);
+                put_u64(body, *seq);
+                put_batch(body, batch);
             }
             Frame::LossRecords { seq, worker, stamp, ids, losses } => {
-                body.push(TAG_LOSS_RECORDS);
-                put_u64(&mut body, *seq);
-                put_u32(&mut body, *worker);
-                put_u64(&mut body, *stamp);
-                put_u64s(&mut body, ids);
-                put_f32s(&mut body, losses);
+                put_loss_records_body(body, *seq, *worker, *stamp, ids, losses);
             }
             Frame::ParamUpdate { version, weights } => {
-                return encode_param_update(*version, weights);
+                // count + per-tensor wire form (matches `tensors_to_bytes`);
+                // bf16 tensors carry their own dtype tag, so a decoded bf16
+                // broadcast re-encodes byte-identically
+                body.push(TAG_PARAM_UPDATE);
+                put_u64(body, *version);
+                put_u64(body, weights.len() as u64);
+                for t in weights {
+                    t.encode_into(body);
+                }
             }
             Frame::CacheLookup { req, now, exact, ids } => {
-                body.push(TAG_CACHE_LOOKUP);
-                put_u64(&mut body, *req);
-                put_u64(&mut body, *now);
-                body.push(u8::from(*exact));
-                put_u64s(&mut body, ids);
+                put_cache_lookup_body(body, *req, *now, *exact, ids);
             }
             Frame::CacheView { req, worker, rows } => {
-                body.push(TAG_CACHE_VIEW);
-                put_u64(&mut body, *req);
-                put_u32(&mut body, *worker);
-                put_u64(&mut body, rows.len() as u64);
-                for r in rows {
-                    put_u32(&mut body, r.pos);
-                    body.extend_from_slice(&r.loss.to_le_bytes());
-                    put_u64(&mut body, r.stamp);
-                }
+                put_cache_view_body(body, *req, *worker, rows);
             }
             Frame::Shutdown => body.push(TAG_SHUTDOWN),
             Frame::WorkerStats(s) => {
                 body.push(TAG_WORKER_STATS);
-                put_u32(&mut body, s.worker);
-                put_u64(&mut body, s.scored_batches);
-                put_u64(&mut body, s.scored_rows);
-                put_u64(&mut body, s.recorded_rows);
-                put_u64(&mut body, s.lookups);
+                put_u32(body, s.worker);
+                put_u64(body, s.scored_batches);
+                put_u64(body, s.scored_rows);
+                put_u64(body, s.recorded_rows);
+                put_u64(body, s.lookups);
+            }
+            Frame::Batch(members) => {
+                body.push(TAG_BATCH);
+                put_u64(body, members.len() as u64);
+                for m in members {
+                    debug_assert!(
+                        !matches!(m, Frame::Batch(_)),
+                        "Batch envelopes do not nest"
+                    );
+                    let at = body.len();
+                    body.extend_from_slice(&[0u8; 4]);
+                    m.encode_body(body);
+                    let mlen = body.len() - at - 4;
+                    body[at..at + 4].copy_from_slice(&(mlen as u32).to_le_bytes());
+                }
             }
         }
-        debug_assert!(body.len() <= MAX_FRAME_BYTES);
-        let mut out = Vec::with_capacity(4 + body.len());
-        out.extend_from_slice(&(body.len() as u32).to_le_bytes());
-        out.extend_from_slice(&body);
+    }
+
+    /// Encode as a complete length-prefixed frame into a caller-owned
+    /// buffer (cleared first). The pooled hot path: steady-state writes
+    /// reuse one warm scratch buffer per connection and allocate nothing.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        out.clear();
+        out.extend_from_slice(&[0u8; 4]);
+        self.encode_body(out);
+        patch_frame_len(out);
+    }
+
+    /// Encode as a complete length-prefixed frame.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(64);
+        self.encode_into(&mut out);
         out
     }
 
@@ -277,6 +302,24 @@ impl Frame {
                 recorded_rows: r.u64()?,
                 lookups: r.u64()?,
             }),
+            TAG_BATCH => {
+                // each member needs at least a 4-byte length + 1 tag byte
+                let n = r.len_prefix(5)?;
+                let mut members = Vec::with_capacity(n);
+                for i in 0..n {
+                    let mlen = r.u32()? as usize;
+                    let mbody = r
+                        .take(mlen)
+                        .with_context(|| format!("batch member {i}/{n}"))?;
+                    let m = Frame::decode(mbody)
+                        .with_context(|| format!("batch member {i}/{n}"))?;
+                    if matches!(m, Frame::Batch(_)) {
+                        bail!("nested Batch envelope (member {i}/{n})");
+                    }
+                    members.push(m);
+                }
+                Frame::Batch(members)
+            }
             other => bail!("unknown frame tag {other}"),
         };
         r.done()?;
@@ -284,22 +327,161 @@ impl Frame {
     }
 }
 
+// -- borrowed zero-allocation encoders --------------------------------------
+//
+// Complete length-prefixed frames written into a caller-owned buffer
+// (cleared first) from borrowed payload slices — no `Frame` is built,
+// no `Vec` is returned. These are the steady-state hot paths: once the
+// scratch buffers are warm, encoding allocates nothing. Each delegates
+// to the same `put_*_body` writer as [`Frame::encode`], so the two
+// encodings cannot drift.
+
+/// Start a length-prefixed frame in `out` (cleared, prefix reserved).
+fn begin_frame(out: &mut Vec<u8>) {
+    out.clear();
+    out.extend_from_slice(&[0u8; 4]);
+}
+
+/// Patch the reserved length prefix once the body is complete.
+fn patch_frame_len(out: &mut Vec<u8>) {
+    let len = out.len() - 4;
+    debug_assert!(len <= MAX_FRAME_BYTES);
+    out[..4].copy_from_slice(&(len as u32).to_le_bytes());
+}
+
+/// Encode a complete `LossRecords` frame from borrowed rows (worker
+/// score replies; leader route flushes on shutdown).
+pub fn encode_loss_records_into(
+    seq: u64,
+    worker: u32,
+    stamp: u64,
+    ids: &[u64],
+    losses: &[f32],
+    out: &mut Vec<u8>,
+) {
+    begin_frame(out);
+    put_loss_records_body(out, seq, worker, stamp, ids, losses);
+    patch_frame_len(out);
+}
+
+/// Encode a complete `CacheView` frame from borrowed rows (worker
+/// lookup replies).
+pub fn encode_cache_view_into(req: u64, worker: u32, rows: &[ViewRow], out: &mut Vec<u8>) {
+    begin_frame(out);
+    put_cache_view_body(out, req, worker, rows);
+    patch_frame_len(out);
+}
+
+/// Encode a complete `CacheLookup` frame from borrowed ids (the
+/// leader's selection-time fan-out when no routes are pending).
+pub fn encode_cache_lookup_into(req: u64, now: u64, exact: bool, ids: &[u64], out: &mut Vec<u8>) {
+    begin_frame(out);
+    put_cache_lookup_body(out, req, now, exact, ids);
+    patch_frame_len(out);
+}
+
 /// Encode a complete `ParamUpdate` frame directly from a borrowed
-/// weight snapshot. The leader's publish runs once per training step
-/// per worker; this path avoids cloning the tensors into a [`Frame`]
-/// just to serialize them ([`Frame::encode`] delegates here, so the
-/// two encodings cannot drift).
-pub fn encode_param_update(version: u64, weights: &[HostTensor]) -> Vec<u8> {
-    let tensors = crate::data::tensor::tensors_to_bytes(weights);
-    let mut body = Vec::with_capacity(1 + 8 + tensors.len());
-    body.push(TAG_PARAM_UPDATE);
-    put_u64(&mut body, version);
-    body.extend_from_slice(&tensors);
-    debug_assert!(body.len() <= MAX_FRAME_BYTES);
-    let mut out = Vec::with_capacity(4 + body.len());
-    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
-    out.extend_from_slice(&body);
+/// weight snapshot into a caller-owned buffer. The leader's publish
+/// encodes once per training step and broadcasts the same bytes to
+/// every worker; this path avoids cloning the tensors into a [`Frame`]
+/// just to serialize them. With `precision = bf16` each f32 tensor is
+/// RNE-rounded to the half-size dtype-2 wire form
+/// ([`HostTensor::encode_as_bf16_into`]); workers expand on receipt.
+/// At f32 the bytes are identical to [`Frame::encode`] on the
+/// equivalent `ParamUpdate` (covered by a test, so the encodings
+/// cannot drift).
+pub fn encode_param_update_into(
+    version: u64,
+    weights: &[HostTensor],
+    precision: ScorePrecision,
+    out: &mut Vec<u8>,
+) {
+    begin_frame(out);
+    out.push(TAG_PARAM_UPDATE);
+    put_u64(out, version);
+    put_u64(out, weights.len() as u64);
+    for t in weights {
+        match precision {
+            ScorePrecision::F32 => t.encode_into(out),
+            ScorePrecision::Bf16 => t.encode_as_bf16_into(out),
+        }
+    }
+    patch_frame_len(out);
+}
+
+/// Allocating convenience wrapper around [`encode_param_update_into`].
+pub fn encode_param_update(
+    version: u64,
+    weights: &[HostTensor],
+    precision: ScorePrecision,
+) -> Vec<u8> {
+    let mut out = Vec::new();
+    encode_param_update_into(version, weights, precision, &mut out);
     out
+}
+
+/// Incremental encoder for a [`Frame::Batch`] envelope built from
+/// borrowed payloads — the leader's per-worker coalescing path. Usage:
+/// [`EnvelopeEncoder::begin`] on a (reused) scratch buffer, one
+/// `member_*` call per coalesced frame, then [`EnvelopeEncoder::finish`]
+/// to patch the member count and outer length prefix. Byte-identical to
+/// encoding the equivalent `Frame::Batch`, without building the frames.
+pub struct EnvelopeEncoder<'a> {
+    buf: &'a mut Vec<u8>,
+    count_at: usize,
+    members: u64,
+}
+
+impl<'a> EnvelopeEncoder<'a> {
+    pub fn begin(buf: &'a mut Vec<u8>) -> EnvelopeEncoder<'a> {
+        begin_frame(buf);
+        buf.push(TAG_BATCH);
+        let count_at = buf.len();
+        buf.extend_from_slice(&[0u8; 8]);
+        EnvelopeEncoder { buf, count_at, members: 0 }
+    }
+
+    fn begin_member(&mut self) -> usize {
+        let at = self.buf.len();
+        self.buf.extend_from_slice(&[0u8; 4]);
+        at
+    }
+
+    fn end_member(&mut self, at: usize) {
+        let mlen = self.buf.len() - at - 4;
+        self.buf[at..at + 4].copy_from_slice(&(mlen as u32).to_le_bytes());
+        self.members += 1;
+    }
+
+    pub fn member_loss_records(
+        &mut self,
+        seq: u64,
+        worker: u32,
+        stamp: u64,
+        ids: &[u64],
+        losses: &[f32],
+    ) {
+        let at = self.begin_member();
+        put_loss_records_body(self.buf, seq, worker, stamp, ids, losses);
+        self.end_member(at);
+    }
+
+    pub fn member_cache_lookup(&mut self, req: u64, now: u64, exact: bool, ids: &[u64]) {
+        let at = self.begin_member();
+        put_cache_lookup_body(self.buf, req, now, exact, ids);
+        self.end_member(at);
+    }
+
+    /// Number of members written so far.
+    pub fn members(&self) -> u64 {
+        self.members
+    }
+
+    pub fn finish(self) {
+        self.buf[self.count_at..self.count_at + 8]
+            .copy_from_slice(&self.members.to_le_bytes());
+        patch_frame_len(self.buf);
+    }
 }
 
 /// Write one frame; returns the bytes written (length prefix included).
@@ -310,10 +492,12 @@ pub fn write_frame(w: &mut impl Write, frame: &Frame) -> Result<usize> {
     Ok(bytes.len())
 }
 
-/// Read one frame. `Ok(None)` on clean EOF at a frame boundary;
-/// truncation inside a frame is an error. Returns the frame and its
-/// total wire size (length prefix included).
-pub fn read_frame(r: &mut impl Read) -> Result<Option<(Frame, usize)>> {
+/// Read one frame into a caller-owned (reused) body buffer. `Ok(None)`
+/// on clean EOF at a frame boundary; truncation inside a frame is an
+/// error. Returns the frame and its total wire size (length prefix
+/// included). Once `body` has warmed to the connection's largest frame,
+/// the framing layer itself allocates nothing per frame.
+pub fn read_frame_into(r: &mut impl Read, body: &mut Vec<u8>) -> Result<Option<(Frame, usize)>> {
     let mut len_buf = [0u8; 4];
     // distinguish EOF-at-boundary from EOF-mid-prefix by hand
     let mut got = 0usize;
@@ -333,16 +517,25 @@ pub fn read_frame(r: &mut impl Read) -> Result<Option<(Frame, usize)>> {
     }
     // read incrementally via a bounded take: a garbage length prefix
     // that slipped under the cap fails at the stream's real end instead
-    // of sizing a `len`-byte buffer up front on the peer's say-so
-    let mut body = Vec::with_capacity(len.min(1 << 16));
+    // of sizing a `len`-byte buffer up front on the peer's say-so. The
+    // +1 keeps spare capacity nonzero after a full read, so a warm
+    // buffer never reallocates on `read_to_end`'s final zero-probe.
+    body.clear();
+    body.reserve(len.min(1 << 16) + 1);
     r.take(len as u64)
-        .read_to_end(&mut body)
+        .read_to_end(body)
         .context("reading frame body")?;
     if body.len() != len {
         bail!("frame body truncated (wanted {len} bytes, got {})", body.len());
     }
-    let frame = Frame::decode(&body)?;
+    let frame = Frame::decode(body)?;
     Ok(Some((frame, 4 + len)))
+}
+
+/// [`read_frame_into`] with a throwaway body buffer (tests, handshake).
+pub fn read_frame(r: &mut impl Read) -> Result<Option<(Frame, usize)>> {
+    let mut body = Vec::new();
+    read_frame_into(r, &mut body)
 }
 
 // -- payload primitives ----------------------------------------------------
@@ -369,17 +562,55 @@ fn put_f32s(buf: &mut Vec<u8>, vs: &[f32]) {
     }
 }
 
+// frame-body writers shared by `Frame::encode_body` and the borrowed
+// zero-allocation encoders above, so the encodings cannot drift
+
+fn put_loss_records_body(
+    buf: &mut Vec<u8>,
+    seq: u64,
+    worker: u32,
+    stamp: u64,
+    ids: &[u64],
+    losses: &[f32],
+) {
+    buf.push(TAG_LOSS_RECORDS);
+    put_u64(buf, seq);
+    put_u32(buf, worker);
+    put_u64(buf, stamp);
+    put_u64s(buf, ids);
+    put_f32s(buf, losses);
+}
+
+fn put_cache_lookup_body(buf: &mut Vec<u8>, req: u64, now: u64, exact: bool, ids: &[u64]) {
+    buf.push(TAG_CACHE_LOOKUP);
+    put_u64(buf, req);
+    put_u64(buf, now);
+    buf.push(u8::from(exact));
+    put_u64s(buf, ids);
+}
+
+fn put_cache_view_body(buf: &mut Vec<u8>, req: u64, worker: u32, rows: &[ViewRow]) {
+    buf.push(TAG_CACHE_VIEW);
+    put_u64(buf, req);
+    put_u32(buf, worker);
+    put_u64(buf, rows.len() as u64);
+    for r in rows {
+        put_u32(buf, r.pos);
+        buf.extend_from_slice(&r.loss.to_le_bytes());
+        put_u64(buf, r.stamp);
+    }
+}
+
 fn put_batch(buf: &mut Vec<u8>, b: &Batch) {
     b.x.encode_into(buf);
     b.y.encode_into(buf);
     put_f32s(buf, &b.valid_mask);
     put_u64(buf, b.real as u64);
-    let ids: Vec<u64> = b
-        .ids
-        .iter()
-        .map(|&i| if i == usize::MAX { NO_ID } else { i as u64 })
-        .collect();
-    put_u64s(buf, &ids);
+    put_u64(buf, b.ids.len() as u64);
+    for &i in &b.ids {
+        let wire = if i == usize::MAX { NO_ID } else { i as u64 };
+        buf.extend_from_slice(&wire.to_le_bytes());
+    }
 }
 
 fn get_batch(r: &mut Reader) -> Result<Batch> {
@@ -596,9 +827,171 @@ mod tests {
         assert_eq!(weights.len(), 2);
         // the borrowed hot-path encoder and the Frame encoder agree
         assert_eq!(
-            encode_param_update(12, &ws),
+            encode_param_update(12, &ws, ScorePrecision::F32),
             Frame::ParamUpdate { version: 12, weights: ws }.encode()
         );
+    }
+
+    #[test]
+    fn bf16_param_update_halves_and_reencodes_byte_identically() {
+        let ws = vec![
+            HostTensor::f32(vec![2, 2], vec![1.0, -2.7, f32::NAN, f32::INFINITY]).unwrap(),
+            HostTensor::f32(vec![3], vec![0.1, -0.0, f32::NEG_INFINITY]).unwrap(),
+        ];
+        let f32_bytes = encode_param_update(7, &ws, ScorePrecision::F32);
+        let bf_bytes = encode_param_update(7, &ws, ScorePrecision::Bf16);
+        assert!(bf_bytes.len() < f32_bytes.len());
+        let mut cur = Cursor::new(bf_bytes.clone());
+        let (frame, used) = read_frame(&mut cur).unwrap().expect("one frame");
+        assert_eq!(used, bf_bytes.len());
+        let Frame::ParamUpdate { version, weights } = &frame else { panic!("wrong frame") };
+        assert_eq!(*version, 7);
+        // decoded tensors keep the bf16 dtype → re-encode is byte-identical
+        assert_eq!(frame.encode(), bf_bytes);
+        // expansion is the exact top-half-of-f32 semantics: NaN stays NaN
+        // (quieted), ±Inf exact, finite values RNE-rounded
+        let w0 = weights[0].expand_to_f32();
+        let v0 = w0.as_f32().unwrap();
+        assert_eq!(v0[0], 1.0);
+        assert!(v0[2].is_nan());
+        assert_eq!(v0[3], f32::INFINITY);
+        let w1 = weights[1].expand_to_f32();
+        let v1 = w1.as_f32().unwrap();
+        assert_eq!(v1[1].to_bits(), (-0.0f32).to_bits());
+        assert_eq!(v1[2], f32::NEG_INFINITY);
+        // strict prefixes of the bf16 frame must not decode
+        for cut in 1..bf_bytes.len() {
+            let mut cur = Cursor::new(bf_bytes[..cut].to_vec());
+            assert!(read_frame(&mut cur).is_err(), "prefix {cut} must error");
+        }
+    }
+
+    #[test]
+    fn batch_envelope_roundtrips() {
+        // empty, single and multi-member envelopes all survive
+        roundtrip(&Frame::Batch(vec![]));
+        roundtrip(&Frame::Batch(vec![Frame::Shutdown]));
+        let got = roundtrip(&Frame::Batch(vec![
+            Frame::LossRecords {
+                seq: u64::MAX,
+                worker: 1,
+                stamp: 4,
+                ids: vec![3, 9],
+                losses: vec![0.25, f32::NAN],
+            },
+            Frame::CacheLookup { req: 2, now: 5, exact: true, ids: vec![4, NO_ID] },
+        ]));
+        let Frame::Batch(members) = got else { panic!("wrong frame") };
+        assert_eq!(members.len(), 2);
+        assert_eq!(members[0].name(), "LossRecords");
+        assert_eq!(members[1].name(), "CacheLookup");
+    }
+
+    #[test]
+    fn envelope_encoder_matches_frame_encode() {
+        let ids = [3u64, 9];
+        let losses = [0.25f32, -1.5];
+        let lids = [4u64, NO_ID];
+        let mut buf = Vec::new();
+        let mut enc = EnvelopeEncoder::begin(&mut buf);
+        enc.member_loss_records(u64::MAX, 1, 4, &ids, &losses);
+        enc.member_cache_lookup(2, 5, true, &lids);
+        assert_eq!(enc.members(), 2);
+        enc.finish();
+        let want = Frame::Batch(vec![
+            Frame::LossRecords {
+                seq: u64::MAX,
+                worker: 1,
+                stamp: 4,
+                ids: ids.to_vec(),
+                losses: losses.to_vec(),
+            },
+            Frame::CacheLookup { req: 2, now: 5, exact: true, ids: lids.to_vec() },
+        ])
+        .encode();
+        assert_eq!(buf, want);
+    }
+
+    #[test]
+    fn borrowed_encoders_match_frame_encode() {
+        let mut buf = Vec::new();
+        encode_loss_records_into(7, 2, 9, &[1, 2], &[0.5, f32::NAN], &mut buf);
+        let want = Frame::LossRecords {
+            seq: 7,
+            worker: 2,
+            stamp: 9,
+            ids: vec![1, 2],
+            losses: vec![0.5, f32::NAN],
+        }
+        .encode();
+        assert_eq!(buf, want);
+        encode_cache_lookup_into(3, 11, false, &[NO_ID, 5], &mut buf);
+        let want =
+            Frame::CacheLookup { req: 3, now: 11, exact: false, ids: vec![NO_ID, 5] }.encode();
+        assert_eq!(buf, want);
+        let rows = vec![ViewRow { pos: 1, loss: 0.25, stamp: 8 }];
+        encode_cache_view_into(3, 0, &rows, &mut buf);
+        assert_eq!(buf, Frame::CacheView { req: 3, worker: 0, rows }.encode());
+    }
+
+    #[test]
+    fn batch_envelope_rejections() {
+        // nesting is a protocol error even though it encodes
+        let nested = Frame::Batch(vec![Frame::Shutdown]);
+        let mut body = vec![TAG_BATCH];
+        body.extend_from_slice(&1u64.to_le_bytes());
+        let mut inner = Vec::new();
+        nested.encode_into(&mut inner);
+        body.extend_from_slice(&((inner.len() - 4) as u32).to_le_bytes());
+        body.extend_from_slice(&inner[4..]);
+        let err = Frame::decode(&body).unwrap_err();
+        assert!(format!("{err:#}").contains("nested Batch"), "{err:#}");
+        // a corrupt member rejects the whole envelope
+        let good = Frame::Batch(vec![Frame::Shutdown, Frame::Hello { proto: 1, worker: 0 }]);
+        let enc = good.encode();
+        // flip the second member's tag byte to garbage: layout is
+        // [outer len 4][TAG_BATCH][count 8][mlen 4][SHUTDOWN][mlen 4][tag..]
+        let second_tag_at = 4 + 1 + 8 + 4 + 1 + 4;
+        let mut bad = enc.clone();
+        assert_eq!(bad[second_tag_at], TAG_HELLO);
+        bad[second_tag_at] = 250;
+        assert!(Frame::decode(&bad[4..]).is_err());
+        // member length lying past the envelope end
+        let mut overrun = enc.clone();
+        overrun[4 + 1 + 8] = 200; // first member claims 200 bytes
+        assert!(Frame::decode(&overrun[4..]).is_err());
+        // count exceeding what the remaining bytes could hold
+        let mut overcount = enc;
+        overcount[5..13].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(Frame::decode(&overcount[4..]).is_err());
+        // strict prefixes of a multi-member envelope must not decode
+        let bytes = good.encode();
+        for cut in 1..bytes.len() {
+            let mut cur = Cursor::new(bytes[..cut].to_vec());
+            assert!(read_frame(&mut cur).is_err(), "prefix {cut} must error");
+        }
+    }
+
+    #[test]
+    fn read_frame_into_reuses_the_body_buffer() {
+        let a = Frame::LossRecords {
+            seq: 1,
+            worker: 0,
+            stamp: 2,
+            ids: vec![1, 2, 3],
+            losses: vec![0.1, 0.2, 0.3],
+        };
+        let mut wire = a.encode();
+        wire.extend_from_slice(&Frame::Shutdown.encode());
+        let mut cur = Cursor::new(wire);
+        let mut body = Vec::new();
+        let (f1, _) = read_frame_into(&mut cur, &mut body).unwrap().expect("frame 1");
+        assert_eq!(f1.name(), "LossRecords");
+        let cap = body.capacity();
+        let (f2, _) = read_frame_into(&mut cur, &mut body).unwrap().expect("frame 2");
+        assert_eq!(f2.name(), "Shutdown");
+        assert_eq!(body.capacity(), cap, "warm buffer must not reallocate");
+        assert!(read_frame_into(&mut cur, &mut body).unwrap().is_none());
     }
 
     #[test]

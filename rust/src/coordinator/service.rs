@@ -43,6 +43,12 @@ pub struct Status {
     pub worker_restarts: u64,
     /// Per-worker scored-batch counts (from `WorkerStats` traffic).
     pub worker_scored: Vec<u64>,
+    /// Wire frames the leader sent in the latest step (0 without a
+    /// proc fleet).
+    pub frames_per_step: u64,
+    /// `ParamUpdate` bytes broadcast in the latest step (0 without a
+    /// proc fleet; halved under `param_precision = bf16`).
+    pub publish_bytes: u64,
     pub done: bool,
 }
 
@@ -68,6 +74,8 @@ impl Status {
                 "worker_scored",
                 Json::Arr(self.worker_scored.iter().map(|&c| Json::Num(c as f64)).collect()),
             )
+            .set("frames_per_step", Json::Num(self.frames_per_step as f64))
+            .set("publish_bytes", Json::Num(self.publish_bytes as f64))
             .set("done", Json::Bool(self.done));
         j
     }
@@ -104,6 +112,8 @@ impl Status {
                 .iter()
                 .map(|v| Ok(v.as_f64()? as u64))
                 .collect::<Result<Vec<u64>>>()?,
+            frames_per_step: j.need("frames_per_step")?.as_f64()? as u64,
+            publish_bytes: j.need("publish_bytes")?.as_f64()? as u64,
             done: j.need("done")?.as_bool()?,
         })
     }
@@ -215,6 +225,8 @@ mod tests {
             workers_alive: 3,
             worker_restarts: 1,
             worker_scored: vec![12, 9, 21],
+            frames_per_step: 6,
+            publish_bytes: 2048,
             done: true,
         };
         assert!((s.cache_hit_rate() - 0.75).abs() < 1e-12);
@@ -230,6 +242,8 @@ mod tests {
         assert_eq!(got.workers_alive, 3);
         assert_eq!(got.worker_restarts, 1);
         assert_eq!(got.worker_scored, vec![12, 9, 21]);
+        assert_eq!(got.frames_per_step, 6);
+        assert_eq!(got.publish_bytes, 2048);
         assert!(got.done);
     }
 

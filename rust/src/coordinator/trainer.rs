@@ -258,6 +258,8 @@ impl Trainer {
             sel_hash: crate::sampling::selection_hash(&selected),
             workers_alive: 0,
             worker_restarts: 0,
+            frames_per_step: 0,
+            publish_bytes: 0,
         };
         self.recorder.record_step(rec);
         self.step += 1;

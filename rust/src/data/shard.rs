@@ -37,6 +37,7 @@ fn slice_rows(t: &HostTensor, start: usize, len: usize, total_rows: usize) -> Ho
             out[..len * stride].copy_from_slice(&v[start * stride..(start + len) * stride]);
             HostTensor { shape, data: TensorData::I32(out) }
         }
+        TensorData::Bf16(_) => unreachable!("bf16 tensors are wire-only; batches are f32/i32"),
     }
 }
 

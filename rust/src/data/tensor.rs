@@ -10,11 +10,32 @@
 
 use anyhow::{bail, Context, Result};
 
-/// Element storage for a host tensor (models use f32 data, i32 labels).
+/// f32 → bf16 with round-to-nearest-even. NaN is quieted (top mantissa
+/// bit forced) so it cannot round to infinity; ±Inf survives exactly.
+/// Canonical scalar conversion — the SIMD scoring kernels re-export it,
+/// so packed operands and wire snapshots round identically everywhere.
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let round = 0x7FFF + ((bits >> 16) & 1);
+    ((bits + round) >> 16) as u16
+}
+
+/// bf16 → f32 (exact: bf16 is the top half of the f32 bit pattern).
+pub fn bf16_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// Element storage for a host tensor (models use f32 data, i32 labels;
+/// bf16 exists only as a half-width wire form for param broadcasts —
+/// backends never compute on it directly).
 #[derive(Clone, Debug, PartialEq)]
 pub enum TensorData {
     F32(Vec<f32>),
     I32(Vec<i32>),
+    Bf16(Vec<u16>),
 }
 
 /// A dense host tensor with row-major layout.
@@ -39,6 +60,14 @@ impl HostTensor {
             bail!("shape {shape:?} wants {n} elements, got {}", data.len());
         }
         Ok(HostTensor { shape, data: TensorData::I32(data) })
+    }
+
+    pub fn bf16(shape: Vec<usize>, data: Vec<u16>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {shape:?} wants {n} elements, got {}", data.len());
+        }
+        Ok(HostTensor { shape, data: TensorData::Bf16(data) })
     }
 
     pub fn scalar_f32(v: f32) -> Self {
@@ -67,6 +96,7 @@ impl HostTensor {
         match &self.data {
             TensorData::F32(v) => Ok(v),
             TensorData::I32(_) => bail!("tensor is i32, expected f32"),
+            TensorData::Bf16(_) => bail!("tensor is bf16, expected f32 (expand first)"),
         }
     }
 
@@ -74,6 +104,20 @@ impl HostTensor {
         match &self.data {
             TensorData::I32(v) => Ok(v),
             TensorData::F32(_) => bail!("tensor is f32, expected i32"),
+            TensorData::Bf16(_) => bail!("tensor is bf16, expected i32"),
+        }
+    }
+
+    /// Expand a bf16 wire tensor to exact f32 (the receiving worker's
+    /// side of a half-width param broadcast); f32/i32 tensors pass
+    /// through unchanged.
+    pub fn expand_to_f32(&self) -> HostTensor {
+        match &self.data {
+            TensorData::Bf16(v) => HostTensor {
+                shape: self.shape.clone(),
+                data: TensorData::F32(v.iter().map(|&b| bf16_to_f32(b)).collect()),
+            },
+            _ => self.clone(),
         }
     }
 
@@ -86,9 +130,17 @@ impl HostTensor {
         Ok(v[0])
     }
 
-    /// Size in bytes (all supported dtypes are 4 bytes).
+    /// Per-element width in bytes (f32/i32: 4, bf16: 2).
+    pub fn elem_bytes(&self) -> usize {
+        match self.data {
+            TensorData::F32(_) | TensorData::I32(_) => 4,
+            TensorData::Bf16(_) => 2,
+        }
+    }
+
+    /// Size in bytes.
     pub fn size_bytes(&self) -> usize {
-        self.element_count() * 4
+        self.element_count() * self.elem_bytes()
     }
 
     // -- wire serialization (little-endian, see coordinator::proto) ------
@@ -102,6 +154,7 @@ impl HostTensor {
         buf.push(match self.data {
             TensorData::F32(_) => 0u8,
             TensorData::I32(_) => 1u8,
+            TensorData::Bf16(_) => 2u8,
         });
         buf.push(self.shape.len() as u8);
         for &d in &self.shape {
@@ -118,6 +171,32 @@ impl HostTensor {
                     buf.extend_from_slice(&x.to_le_bytes());
                 }
             }
+            TensorData::Bf16(v) => {
+                for x in v {
+                    buf.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+    }
+
+    /// Append the wire encoding of an f32 tensor *rounded to bf16*
+    /// (RNE via [`f32_to_bf16`]): dtype tag 2, same header, 2-byte
+    /// elements. The half-width leader-side encode of a
+    /// `param_precision = bf16` broadcast — non-f32 tensors encode
+    /// unchanged. Decodes as a [`TensorData::Bf16`] tensor, so
+    /// re-encoding is byte-identical.
+    pub fn encode_as_bf16_into(&self, buf: &mut Vec<u8>) {
+        let TensorData::F32(v) = &self.data else {
+            return self.encode_into(buf);
+        };
+        debug_assert!(self.shape.len() <= u8::MAX as usize);
+        buf.push(2u8);
+        buf.push(self.shape.len() as u8);
+        for &d in &self.shape {
+            buf.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+        for &x in v {
+            buf.extend_from_slice(&f32_to_bf16(x).to_le_bytes());
         }
     }
 
@@ -137,6 +216,11 @@ impl HostTensor {
             bail!("tensor header truncated ({} bytes)", b.len());
         }
         let dtype = b[0];
+        let esize = match dtype {
+            0 | 1 => 4usize,
+            2 => 2usize,
+            other => bail!("unknown tensor dtype tag {other}"),
+        };
         let ndim = b[1] as usize;
         let mut pos = 2usize;
         let mut shape = Vec::with_capacity(ndim);
@@ -155,13 +239,13 @@ impl HostTensor {
         for &d in &shape {
             elems = elems
                 .checked_mul(d)
-                .filter(|n| n.checked_mul(4).is_some())
+                .filter(|n| n.checked_mul(esize).is_some())
                 .ok_or_else(|| anyhow::anyhow!("tensor shape {shape:?} overflows"))?;
         }
-        let Some(data) = b.get(pos..pos + elems * 4) else {
+        let Some(data) = b.get(pos..pos + elems * esize) else {
             bail!(
                 "tensor data truncated: shape {shape:?} wants {} bytes, {} remain",
-                elems * 4,
+                elems * esize,
                 b.len() - pos
             );
         };
@@ -178,9 +262,15 @@ impl HostTensor {
                     .map(|c| i32::from_le_bytes(c.try_into().expect("4-byte chunk")))
                     .collect(),
             )?,
+            2 => HostTensor::bf16(
+                shape,
+                data.chunks_exact(2)
+                    .map(|c| u16::from_le_bytes(c.try_into().expect("2-byte chunk")))
+                    .collect(),
+            )?,
             other => bail!("unknown tensor dtype tag {other}"),
         };
-        Ok((t, pos + elems * 4))
+        Ok((t, pos + elems * esize))
     }
 
     /// Decode exactly one tensor spanning all of `b`.
@@ -316,5 +406,74 @@ mod tests {
         assert_eq!(t.element_count(), 16);
         assert_eq!(t.size_bytes(), 64);
         assert!(t.as_f32().unwrap().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn bf16_conversion_rne_nan_and_inf() {
+        // exactly representable values survive the round trip bit-for-bit
+        for x in [0.0f32, -0.0, 1.0, -2.5, 0.125, f32::INFINITY, f32::NEG_INFINITY] {
+            assert_eq!(
+                bf16_to_f32(f32_to_bf16(x)).to_bits(),
+                x.to_bits(),
+                "{x} must convert exactly"
+            );
+        }
+        // round-to-nearest-even on ties: 1 + 2^-8 (0x3F808000) is exactly
+        // halfway between bf16 0x3F80 and 0x3F81 — the even mantissa wins —
+        // while the next tie up (0x3F818000) rounds *up* to even 0x3F82.
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3F80_8000)), 0x3F80);
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3F81_8000)), 0x3F82);
+        // NaN stays NaN and is quieted (mantissa MSB set)
+        let n = f32_to_bf16(f32::NAN);
+        assert!(bf16_to_f32(n).is_nan());
+        assert_ne!(n & 0x0040, 0);
+        // a signalling-style NaN payload must not collapse to Inf
+        let snan = f32::from_bits(0x7F80_0001);
+        assert!(bf16_to_f32(f32_to_bf16(snan)).is_nan());
+    }
+
+    #[test]
+    fn bf16_wire_roundtrip_and_sizes() {
+        let raw: Vec<u16> = vec![0x3F80, 0x8000, 0x7FC0, 0xFF80, 0x0001];
+        let t = HostTensor::bf16(vec![5], raw.clone()).unwrap();
+        assert_eq!(t.size_bytes(), 10);
+        assert!(HostTensor::bf16(vec![2], raw.clone()).is_err());
+        let bytes = t.to_bytes();
+        assert_eq!(bytes[0], 2, "bf16 wire dtype tag");
+        let back = HostTensor::from_bytes(&bytes).unwrap();
+        assert_eq!(back, t);
+        // re-encode is byte-identical (decoded tensors keep dtype 2)
+        assert_eq!(back.to_bytes(), bytes);
+        for cut in 0..bytes.len() {
+            assert!(
+                HostTensor::from_bytes(&bytes[..cut]).is_err(),
+                "prefix of {cut} bytes must not decode"
+            );
+        }
+        // bf16 tensors refuse the f32 accessor until expanded
+        assert!(t.as_f32().is_err());
+        let exp = t.expand_to_f32();
+        for (b, x) in raw.iter().zip(exp.as_f32().unwrap()) {
+            assert_eq!(x.to_bits(), (*b as u32) << 16);
+        }
+    }
+
+    #[test]
+    fn encode_as_bf16_matches_elementwise_conversion() {
+        let t = HostTensor::f32(vec![2, 2], vec![1.0, -3.7, f32::NAN, 1.0e-40]).unwrap();
+        let mut buf = Vec::new();
+        t.encode_as_bf16_into(&mut buf);
+        let back = HostTensor::from_bytes(&buf).unwrap();
+        assert_eq!(back.shape, t.shape);
+        let TensorData::Bf16(got) = &back.data else {
+            panic!("expected bf16 wire form");
+        };
+        let want: Vec<u16> = t.as_f32().unwrap().iter().map(|&x| f32_to_bf16(x)).collect();
+        assert_eq!(got, &want);
+        // non-f32 tensors pass through unchanged
+        let ti = HostTensor::i32(vec![2], vec![5, -5]).unwrap();
+        let mut bi = Vec::new();
+        ti.encode_as_bf16_into(&mut bi);
+        assert_eq!(bi, ti.to_bytes());
     }
 }

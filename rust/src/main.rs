@@ -79,6 +79,10 @@ fn with_train_flags(p: ArgParser) -> ArgParser {
             "score-precision",
             "fleet scoring-forward precision: f32 | bf16 (bf16 = async pipeline only)",
         )
+        .flag(
+            "param-precision",
+            "param-broadcast wire precision: f32 | bf16 (bf16 = async pipeline only)",
+        )
 }
 
 fn build_config(p: &Parsed) -> Result<TrainConfig> {
@@ -196,6 +200,10 @@ fn build_config(p: &Parsed) -> Result<TrainConfig> {
     if let Some(v) = p.get("score-precision") {
         cfg.score_precision = v.to_string();
         cfg.overrides.score_precision = Some(v.to_string());
+    }
+    if let Some(v) = p.get("param-precision") {
+        cfg.param_precision = v.to_string();
+        cfg.overrides.param_precision = Some(v.to_string());
     }
     cfg.validate()?;
     Ok(cfg)

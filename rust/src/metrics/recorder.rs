@@ -36,6 +36,11 @@ pub struct StepRecord {
     pub workers_alive: u32,
     /// Fleet workers relaunched so far (0 under the fail-fast policy).
     pub worker_restarts: u32,
+    /// Wire frames the leader sent this step (0 without a proc fleet).
+    pub frames_per_step: u64,
+    /// `ParamUpdate` bytes broadcast this step — the number the bf16
+    /// param-precision knob halves (0 without a proc fleet).
+    pub publish_bytes: u64,
 }
 
 /// One evaluation's record.
@@ -104,12 +109,13 @@ impl Recorder {
         writeln!(
             f,
             "step,epoch,sel_loss,batch_loss,n_forward,n_selected,fwd_us,sel_us,bwd_us,\
-             cache_hits,cache_misses,cache_stale,sel_hash,workers_alive,worker_restarts"
+             cache_hits,cache_misses,cache_stale,sel_hash,workers_alive,worker_restarts,\
+             frames_per_step,publish_bytes"
         )?;
         for s in &self.steps {
             writeln!(
                 f,
-                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
                 s.step,
                 s.epoch,
                 s.sel_loss,
@@ -124,7 +130,9 @@ impl Recorder {
                 s.cache_stale,
                 s.sel_hash,
                 s.workers_alive,
-                s.worker_restarts
+                s.worker_restarts,
+                s.frames_per_step,
+                s.publish_bytes
             )?;
         }
         Ok(())
@@ -175,6 +183,8 @@ mod tests {
             sel_hash: 42,
             workers_alive: 4,
             worker_restarts: 0,
+            frames_per_step: 6,
+            publish_bytes: 512,
         }
     }
 
@@ -200,10 +210,11 @@ mod tests {
         r.write_evals_csv(&ep).unwrap();
         let steps = std::fs::read_to_string(&sp).unwrap();
         assert!(steps.lines().count() == 2);
-        assert!(steps.contains("0,0,1,2,128,32,100,10,200,1,2,0,42,4,0"));
+        assert!(steps.contains("0,0,1,2,128,32,100,10,200,1,2,0,42,4,0,6,512"));
         assert!(steps.starts_with(
             "step,epoch,sel_loss,batch_loss,n_forward,n_selected,fwd_us,sel_us,bwd_us,\
-             cache_hits,cache_misses,cache_stale,sel_hash,workers_alive,worker_restarts"
+             cache_hits,cache_misses,cache_stale,sel_hash,workers_alive,worker_restarts,\
+             frames_per_step,publish_bytes"
         ));
         let evals = std::fs::read_to_string(&ep).unwrap();
         assert!(evals.contains("0,0,0.5,0.9"));

@@ -193,6 +193,7 @@ pub(crate) fn gather_rows(
             }
             HostTensor { shape: vec![rows], data: TensorData::I32(out) }
         }
+        TensorData::Bf16(_) => bail!("bf16 tensors are wire-only; expand_to_f32() before gather"),
     };
     Ok((gx, gy))
 }

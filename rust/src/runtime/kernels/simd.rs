@@ -61,24 +61,13 @@ pub fn cpu_features() -> &'static str {
 
 // ---------------------------------------------------------------------------
 // bf16 conversions (shared by the AVX2 and scalar scoring paths, so the
-// packed operands are identical bits on every machine)
+// packed operands are identical bits on every machine). The canonical
+// definitions live in `data::tensor` — the wire codec uses the same
+// rounding for `param_precision = bf16` broadcasts — re-exported here
+// for the kernel call sites.
 // ---------------------------------------------------------------------------
 
-/// f32 → bf16 with round-to-nearest-even. NaN is quieted (top mantissa
-/// bit forced) so it cannot round to infinity; ±Inf survives exactly.
-pub fn f32_to_bf16(x: f32) -> u16 {
-    let bits = x.to_bits();
-    if x.is_nan() {
-        return ((bits >> 16) as u16) | 0x0040;
-    }
-    let round = 0x7FFF + ((bits >> 16) & 1);
-    ((bits + round) >> 16) as u16
-}
-
-/// bf16 → f32 (exact: bf16 is the top half of the f32 bit pattern).
-pub fn bf16_to_f32(b: u16) -> f32 {
-    f32::from_bits((b as u32) << 16)
-}
+pub use crate::data::tensor::{bf16_to_f32, f32_to_bf16};
 
 /// View the first `len` u16 slots of an f32 arena buffer. bf16 panels
 /// ride the f32 [`Arena`] (alignment 4 ≥ 2, zeroed f32 = bf16 +0.0) so

@@ -74,6 +74,9 @@ pub fn to_literal(t: &HostTensor) -> Result<xla::Literal> {
             )
             .map_err(|e| anyhow::anyhow!("literal from i32 {:?}: {e:?}", t.shape))?
         }
+        TensorData::Bf16(_) => {
+            bail!("bf16 tensors are wire-only; expand_to_f32() before device upload")
+        }
     };
     Ok(lit)
 }

@@ -338,6 +338,67 @@ fn async_bf16_scoring_pipeline_selects_and_accounts() {
     assert!(report.realized_ratio > 0.0);
 }
 
+/// bf16 *param broadcast* in the async proc pipeline: the leader ships
+/// half-size `ParamUpdate` frames, workers expand to f32 on receipt,
+/// and the run still selects with coherent accounting — one counting
+/// lookup per step, every issued batch scored, eval (leader-side,
+/// exact f32) finite, and per-step telemetry carrying the broadcast
+/// byte counts the knob is supposed to shrink.
+#[test]
+fn async_bf16_param_broadcast_pipeline_selects_and_accounts() {
+    use_cli_worker_bin();
+    let m = manifest();
+    let mut pc = cfg(20);
+    pc.model = "linreg".into();
+    pc.method = Method::MaxProb;
+    pc.lr = 0.01;
+    pc.pipeline = true;
+    pc.pipeline_proc = true;
+    pc.pipeline_workers = 2;
+    pc.pipeline_depth = 3;
+    pc.param_precision = "bf16".into();
+    let mut p = PipelineTrainer::with_manifest(&pc, &m).unwrap();
+    assert_eq!(p.options().param_precision, ScorePrecision::Bf16);
+    assert_eq!(p.options().score_precision, ScorePrecision::F32, "knobs are independent");
+    let report = p.run().unwrap();
+    assert_eq!(report.steps, 20);
+    assert!(report.final_eval.loss.is_finite(), "leader eval is exact f32");
+    let stats = p.cache_stats();
+    assert_eq!(stats.hits + stats.misses, 20);
+    assert!(p.budget.inference_forwards >= 20 * m.batch as u64);
+    // wire telemetry: frames moved, and the param split is populated
+    let wire = p.wire_stats();
+    assert!(wire.frames > 0, "leader must have sent frames");
+    assert!(wire.param_bytes > 0, "broadcast bytes must be accounted");
+    let last = p.recorder.steps.last().expect("steps recorded");
+    assert!(last.frames_per_step > 0, "per-step frame telemetry populated");
+    assert!(last.publish_bytes > 0, "per-step broadcast bytes populated");
+    // the selected subset still tracks the configured ratio: a bf16
+    // weight broadcast perturbs scores, never the budget
+    let per_step = report.backward_examples as f64 / report.steps as f64;
+    let want = pc.sampling_ratio * m.batch as f64;
+    assert!(
+        (per_step - want).abs() <= want * 0.5,
+        "selected {per_step}/step, expected ~{want}"
+    );
+}
+
+/// Sync mode must refuse a bf16 param broadcast for the same reason it
+/// refuses bf16 scoring: the oracle contract is bit-identity.
+#[test]
+fn sync_pipeline_rejects_bf16_param_broadcast() {
+    let m = manifest();
+    let mut pc = cfg(6);
+    pc.pipeline = true;
+    pc.pipeline_sync = true;
+    pc.param_precision = "bf16".into();
+    let err =
+        PipelineTrainer::with_manifest(&pc, &m).err().expect("sync + bf16 must be rejected");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("param_precision"), "error must name the knob: {msg}");
+    assert!(msg.contains("pipeline_sync"), "error must name the conflict: {msg}");
+}
+
 /// Sync mode is the bit-identical oracle — it must refuse to score in
 /// bf16 rather than silently weaken the equivalence contract.
 #[test]

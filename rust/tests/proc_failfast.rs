@@ -30,6 +30,7 @@ fn spec(workers: usize, capacity: usize, fail_after: Vec<Option<u64>>) -> FleetS
         max_age: 0,
         sync: true,
         score_precision: ScorePrecision::F32,
+        param_precision: ScorePrecision::F32,
         worker_bin: Some(env!("CARGO_BIN_EXE_obftf").into()),
         timeout: Duration::from_secs(60),
         fail_after,

@@ -1,0 +1,207 @@
+//! Allocation-count regression for the pooled wire path.
+//!
+//! The zero-allocation contract: once a connection's scratch buffers
+//! are warm, the *wire path* — frame encoding (borrowed encoders, the
+//! coalescing envelope, the pre-encoded param broadcast) and the
+//! framing layer of `read_frame_into` — performs zero heap allocations
+//! per frame. The documented exception (named in ROADMAP.md) is
+//! decode-side payload materialization: a decoded `LossRecords` still
+//! owns its `ids`/`losses` vectors, so a nonempty decode costs exactly
+//! one allocation per payload vector. Those counts are pinned here too,
+//! so a regression in either direction (new hidden allocations, or an
+//! encoder growing a buffer it should reuse) fails loudly.
+//!
+//! The counter is a test-only counting global allocator with a
+//! per-thread tally (tests in one binary run on separate threads, so
+//! parallel tests cannot disturb each other's counts).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::io::Cursor;
+
+use obftf::coordinator::proto::{
+    self, EnvelopeEncoder, Frame, ViewRow, WorkerStats, NO_ID, PROTO_VERSION,
+};
+use obftf::data::HostTensor;
+use obftf::runtime::ScorePrecision;
+
+struct CountingAlloc;
+
+thread_local! {
+    static ALLOCS: Cell<u64> = Cell::new(0);
+}
+
+fn bump() {
+    // try_with: the TLS slot may already be torn down during thread
+    // exit, and an allocator must never panic
+    let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        bump();
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+/// Heap allocations (alloc + realloc) on this thread during `f`.
+fn allocs_during(f: impl FnOnce()) -> u64 {
+    let before = ALLOCS.with(|c| c.get());
+    f();
+    ALLOCS.with(|c| c.get()) - before
+}
+
+/// Every steady-state leader/worker encode — score replies, view
+/// replies, lookup fan-outs, the coalescing envelope, the param
+/// broadcast at both precisions, and `Frame::encode_into` on a reused
+/// frame — must allocate nothing once its scratch buffer is warm.
+#[test]
+fn warm_encoders_allocate_nothing() {
+    let ids: Vec<u64> = (0..64).collect();
+    let losses: Vec<f32> = (0..64).map(|i| i as f32 * 0.5).collect();
+    let rows: Vec<ViewRow> =
+        (0..64).map(|i| ViewRow { pos: i, loss: i as f32, stamp: 3 }).collect();
+    let weights = vec![
+        HostTensor::f32(vec![8, 4], (0..32).map(|i| i as f32).collect()).unwrap(),
+        HostTensor::f32(vec![4], vec![0.5, -1.5, f32::NAN, 2.0]).unwrap(),
+    ];
+    let shutdown = Frame::Shutdown;
+    let stats = Frame::WorkerStats(WorkerStats {
+        worker: 1,
+        scored_batches: 10,
+        scored_rows: 640,
+        recorded_rows: 320,
+        lookups: 10,
+    });
+    let mut buf = Vec::new();
+    let encode_all = |buf: &mut Vec<u8>| {
+        proto::encode_loss_records_into(7, 1, 5, &ids, &losses, buf);
+        proto::encode_cache_view_into(9, 1, &rows, buf);
+        proto::encode_cache_lookup_into(9, 5, true, &ids, buf);
+        proto::encode_param_update_into(5, &weights, ScorePrecision::F32, buf);
+        proto::encode_param_update_into(5, &weights, ScorePrecision::Bf16, buf);
+        let mut env = EnvelopeEncoder::begin(buf);
+        env.member_loss_records(u64::MAX, 0, 4, &ids, &losses);
+        env.member_loss_records(u64::MAX, 1, 4, &ids, &losses);
+        env.member_cache_lookup(9, 5, true, &ids);
+        env.finish();
+        shutdown.encode_into(buf);
+        stats.encode_into(buf);
+    };
+    encode_all(&mut buf); // warm the scratch buffer
+    let n = allocs_during(|| {
+        for _ in 0..3 {
+            encode_all(&mut buf);
+        }
+    });
+    assert_eq!(n, 0, "warm wire-path encodes must not allocate ({n} allocations)");
+}
+
+/// The framing layer of `read_frame_into` with a warm body buffer
+/// allocates nothing; frames whose decoded payloads are empty (or
+/// payload-free) round the whole read down to zero allocations.
+#[test]
+fn warm_read_frame_into_framing_allocates_nothing() {
+    let mut wire = Vec::new();
+    wire.extend_from_slice(&Frame::Hello { proto: PROTO_VERSION, worker: 0 }.encode());
+    wire.extend_from_slice(&Frame::Shutdown.encode());
+    wire.extend_from_slice(&Frame::WorkerStats(WorkerStats::default()).encode());
+    wire.extend_from_slice(
+        &Frame::LossRecords { seq: 1, worker: 0, stamp: 2, ids: vec![], losses: vec![] }
+            .encode(),
+    );
+    wire.extend_from_slice(
+        &Frame::CacheLookup { req: 3, now: 4, exact: true, ids: vec![] }.encode(),
+    );
+    let mut body = Vec::new();
+    // warm pass: body grows to the connection's largest frame
+    let mut cur = Cursor::new(wire.as_slice());
+    let mut frames = 0;
+    while proto::read_frame_into(&mut cur, &mut body).unwrap().is_some() {
+        frames += 1;
+    }
+    assert_eq!(frames, 5);
+    // steady state: replay the same stream — zero allocations
+    let mut cur = Cursor::new(wire.as_slice());
+    let n = allocs_during(|| {
+        while proto::read_frame_into(&mut cur, &mut body).unwrap().is_some() {}
+    });
+    assert_eq!(n, 0, "warm framing + empty-payload decodes must not allocate ({n})");
+}
+
+/// The documented exception: a nonempty decode materializes its payload
+/// vectors. Pinned exactly — one allocation per owned vector, nothing
+/// else — so hidden per-frame costs cannot creep in behind the label
+/// "payload materialization".
+#[test]
+fn decode_payload_materialization_is_exactly_one_alloc_per_vector() {
+    let enc = Frame::LossRecords {
+        seq: 1,
+        worker: 0,
+        stamp: 2,
+        ids: (0..32).collect(),
+        losses: (0..32).map(|i| i as f32).collect(),
+    }
+    .encode();
+    let lookup = Frame::CacheLookup { req: 3, now: 4, exact: false, ids: vec![NO_ID; 16] }
+        .encode();
+    let view = Frame::CacheView {
+        req: 3,
+        worker: 1,
+        rows: (0..16).map(|i| ViewRow { pos: i, loss: 0.0, stamp: 0 }).collect(),
+    }
+    .encode();
+    let mut body = Vec::with_capacity(enc.len().max(lookup.len()).max(view.len()) + 64);
+    let read = |bytes: &[u8], body: &mut Vec<u8>| {
+        let mut cur = Cursor::new(bytes);
+        let got = proto::read_frame_into(&mut cur, body).unwrap().expect("one frame");
+        drop(got);
+    };
+    read(&enc, &mut body); // warm
+    let n = allocs_during(|| read(&enc, &mut body));
+    assert_eq!(n, 2, "LossRecords decode = ids + losses vectors, got {n}");
+    let n = allocs_during(|| read(&lookup, &mut body));
+    assert_eq!(n, 1, "CacheLookup decode = ids vector, got {n}");
+    let n = allocs_during(|| read(&view, &mut body));
+    assert_eq!(n, 1, "CacheView decode = rows vector, got {n}");
+}
+
+/// A coalesced envelope decodes as its members plus exactly one member
+/// list: the wrapper itself adds a single allocation over the sum of
+/// its members' payload costs.
+#[test]
+fn batch_envelope_decode_adds_exactly_the_member_list() {
+    let env = Frame::Batch(vec![
+        Frame::LossRecords {
+            seq: u64::MAX,
+            worker: 0,
+            stamp: 2,
+            ids: (0..8).collect(),
+            losses: (0..8).map(|i| i as f32).collect(),
+        },
+        Frame::CacheLookup { req: 3, now: 4, exact: true, ids: (0..8).collect() },
+    ])
+    .encode();
+    let mut body = Vec::with_capacity(env.len() + 64);
+    let read = |body: &mut Vec<u8>| {
+        let mut cur = Cursor::new(env.as_slice());
+        let got = proto::read_frame_into(&mut cur, body).unwrap().expect("one frame");
+        drop(got);
+    };
+    read(&mut body); // warm
+    let n = allocs_during(|| read(&mut body));
+    // members vec + (ids + losses) + ids
+    assert_eq!(n, 4, "envelope = member list + member payloads, got {n}");
+}
