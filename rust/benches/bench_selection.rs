@@ -13,9 +13,12 @@
 //! shard ownership) so one JSON carries thread and proc rows from the
 //! same run, including wire traffic as `frame_bytes_per_step` plus the
 //! pooled-codec split (`frames_per_step`, `encode_ns_per_step` and
-//! per-frame-type bytes). A final `socket-wN-bf16` row re-runs the
-//! socket fleet with `param_precision = bf16` so the broadcast saving
-//! is measurable against its f32 twin.
+//! per-frame-type bytes). A `socket-wN-bf16` row re-runs the socket
+//! fleet with `param_precision = bf16` so the broadcast saving is
+//! measurable against its f32 twin, and a final `socket-reshard` row
+//! drives one mid-run worker join plus one permanent leave (retired on
+//! a spent restart budget) to price the elastic ownership transitions,
+//! annotating the `reshards` count.
 //!
 //! CI smoke: set `OBFTF_BENCH_BUDGET_MS` / `OBFTF_BENCH_MAX_ITERS` for
 //! a tiny run and `OBFTF_BENCH_JSON` to capture the summary artifact.
@@ -193,6 +196,54 @@ fn pipeline_bench() {
         bench.annotate_last("frame_bytes_per_step", frame_bytes / steps as f64);
         annotate_wire(&mut bench, &wire, steps);
         std::env::remove_var("OBFTF_PARAM_PRECISION");
+    }
+
+    // elastic resharding row: the socket fleet starting at two workers
+    // with one mid-run join (`pipeline_join`) and one permanent leave
+    // (`--fail-after` injection with a zero restart budget → the dead
+    // worker is retired above the floor) — steps/s *through* both
+    // ownership transitions, with the reshard count annotated so the
+    // row fails loudly if either transition stops happening
+    {
+        std::env::set_var("OBFTF_PIPELINE_SOCKET", "unix");
+        std::env::set_var("OBFTF_PIPELINE_WORKERS", "2");
+        std::env::set_var("OBFTF_PIPELINE_RESTART_LIMIT", "0");
+        // the victim dies a frame-count proportional to the run length
+        // in, so the leave lands mid-run at smoke and full sizes alike
+        std::env::set_var("OBFTF_PROC_FAIL_AFTER", format!("1:{}", steps.max(8)));
+        let mut rcfg = cfg.clone();
+        rcfg.pipeline = true;
+        rcfg.pipeline_proc = true;
+        rcfg.pipeline_socket = "unix".to_string();
+        rcfg.pipeline_workers = 2;
+        rcfg.pipeline_join = format!("{}", (steps / 2).max(1));
+        let mut hit_rate = 0.0f64;
+        let mut fleet_fwd = 0.0f64;
+        let mut frame_bytes = 0.0f64;
+        let mut reshards = 0.0f64;
+        let mut n_workers = 0.0f64;
+        let mut wire = WireStats::default();
+        bench.run_throughput("pipeline/socket-reshard/mlp", 0.0, steps as f64, || {
+            let mut p =
+                PipelineTrainer::with_manifest(&rcfg, &manifest).expect("reshard pipeline");
+            black_box(p.run().expect("reshard pipeline run"));
+            hit_rate = p.cache_stats().hit_rate();
+            fleet_fwd = p.budget.inference_forwards as f64;
+            frame_bytes = p.frame_bytes() as f64;
+            reshards = p.reshards() as f64;
+            n_workers =
+                p.recorder.steps.last().map(|s| s.n_workers as f64).unwrap_or(0.0);
+            wire = p.wire_stats();
+        });
+        bench.annotate_last("inference_workers", 2.0);
+        bench.annotate_last("cache_hit_rate", hit_rate);
+        bench.annotate_last("inference_forwards", fleet_fwd);
+        bench.annotate_last("frame_bytes_per_step", frame_bytes / steps as f64);
+        bench.annotate_last("reshards", reshards);
+        bench.annotate_last("n_workers_final", n_workers);
+        annotate_wire(&mut bench, &wire, steps);
+        std::env::remove_var("OBFTF_PROC_FAIL_AFTER");
+        std::env::remove_var("OBFTF_PIPELINE_RESTART_LIMIT");
     }
     std::env::remove_var("OBFTF_PIPELINE_SOCKET");
     std::env::set_var("OBFTF_PIPELINE_WORKERS", workers.to_string());

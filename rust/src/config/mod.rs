@@ -114,6 +114,20 @@ pub struct TrainConfig {
     /// death becomes fatal; 0 = strict fail-fast
     /// (`OBFTF_PIPELINE_RESTART_LIMIT` overrides).
     pub pipeline_restart_limit: u32,
+    /// Fleet-size floor: a worker whose restart budget is spent is
+    /// retired (its shard migrates to the survivors) instead of
+    /// aborting the run, as long as at least this many workers remain
+    /// (`OBFTF_PIPELINE_MIN_WORKERS` overrides).
+    pub pipeline_min_workers: usize,
+    /// Mid-run admission directive for the process fleet: "" (none),
+    /// "step" (admit one late worker at that step) or "step:count"
+    /// (`OBFTF_PIPELINE_JOIN` overrides; see README "Socket fleet").
+    pub pipeline_join: String,
+    /// Bound on live entries in the sharded loss cache and the
+    /// leader's routed-row journal, evicting oldest-stamp-first when
+    /// exceeded; 0 = unbounded. Async pipeline only — sync mode
+    /// rejects it (`OBFTF_CACHE_MAX_ENTRIES` overrides).
+    pub cache_max_entries: u64,
     /// Fleet spawn/connect/handshake/await bound in milliseconds;
     /// 0 = the built-in 30 s stall timeout (`OBFTF_PROC_TIMEOUT_MS`
     /// overrides).
@@ -170,6 +184,9 @@ impl Default for TrainConfig {
             pipeline_socket: String::new(),
             pipeline_affinity: true,
             pipeline_restart_limit: 2,
+            pipeline_min_workers: 1,
+            pipeline_join: String::new(),
+            cache_max_entries: 0,
             proc_timeout_ms: 0,
             score_precision: "f32".to_string(),
             param_precision: "f32".to_string(),
@@ -233,6 +250,9 @@ impl TrainConfig {
                 self.pipeline_restart_limit = u32::try_from(val.as_u64()?)
                     .map_err(|_| anyhow::anyhow!("pipeline_restart_limit too large"))?
             }
+            "pipeline_min_workers" => self.pipeline_min_workers = val.as_usize()?,
+            "pipeline_join" => self.pipeline_join = val.as_str()?.to_string(),
+            "cache_max_entries" => self.cache_max_entries = val.as_u64()?,
             "proc_timeout_ms" => self.proc_timeout_ms = val.as_u64()?,
             "score_precision" => self.score_precision = val.as_str()?.to_string(),
             "param_precision" => self.param_precision = val.as_str()?.to_string(),
@@ -289,6 +309,13 @@ impl TrainConfig {
             "" | "none" | "pipes" | "unix" | "tcp" => {}
             other => bail!("unknown pipeline_socket {other:?} (want unix | tcp | none)"),
         }
+        if self.pipeline_min_workers == 0 {
+            bail!("pipeline_min_workers must be ≥ 1");
+        }
+        if !self.pipeline_join.is_empty() && !self.pipeline {
+            bail!("pipeline_join requires pipeline = true (it admits fleet workers)");
+        }
+        options::parse_join(&self.pipeline_join)?;
         match self.score_precision.as_str() {
             "f32" | "bf16" => {}
             other => bail!("unknown score_precision {other:?} (expected f32 | bf16)"),
@@ -425,6 +452,33 @@ epochs = 2
             "epochs = 0\nstream_steps = 50\npipeline = true\npipeline_socket = \"smoke\"\n"
         )
         .is_err());
+    }
+
+    #[test]
+    fn reshard_keys_parse_and_validate() {
+        let cfg = TrainConfig::from_toml_str(
+            "epochs = 0\nstream_steps = 50\npipeline = true\npipeline_socket = \"unix\"\n\
+             pipeline_min_workers = 2\npipeline_join = \"10:1\"\ncache_max_entries = 4096\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.pipeline_min_workers, 2);
+        assert_eq!(cfg.pipeline_join, "10:1");
+        assert_eq!(cfg.cache_max_entries, 4096);
+        // defaults: floor 1, no join, unbounded cache
+        let d = TrainConfig::default();
+        assert_eq!(d.pipeline_min_workers, 1);
+        assert!(d.pipeline_join.is_empty());
+        assert_eq!(d.cache_max_entries, 0);
+        // floor 0 and malformed join directives are rejected
+        let mut cfg = TrainConfig::default();
+        cfg.pipeline_min_workers = 0;
+        assert!(cfg.validate().is_err());
+        assert!(TrainConfig::from_toml_str(
+            "epochs = 0\nstream_steps = 50\npipeline = true\npipeline_join = \"soon\"\n"
+        )
+        .is_err());
+        // a join directive without pipeline mode is rejected
+        assert!(TrainConfig::from_toml_str("pipeline_join = \"10\"").is_err());
     }
 
     #[test]

@@ -30,6 +30,9 @@
 //! | fleet timeout  | (none)                | `OBFTF_PROC_TIMEOUT_MS`   | `proc_timeout_ms`   | 0 = 30 s |
 //! | score precision | `--score-precision`  | `OBFTF_SCORE_PRECISION`   | `score_precision`   | f32 |
 //! | param precision | `--param-precision`  | `OBFTF_PARAM_PRECISION`   | `param_precision`   | f32 |
+//! | worker floor   | `--pipeline-min-workers` | `OBFTF_PIPELINE_MIN_WORKERS` | `pipeline_min_workers` | 1 |
+//! | mid-run join   | `--pipeline-join`     | `OBFTF_PIPELINE_JOIN`     | `pipeline_join`     | "" = none |
+//! | cache bound    | `--cache-max-entries` | `OBFTF_CACHE_MAX_ENTRIES` | `cache_max_entries` | 0 = ∞ |
 
 use std::time::Duration;
 
@@ -87,6 +90,12 @@ pub struct PipelineOverrides {
     pub score_precision: Option<String>,
     /// Parameter-broadcast wire precision: "f32" | "bf16".
     pub param_precision: Option<String>,
+    /// Worker-count floor for retire-instead-of-abort.
+    pub min_workers: Option<usize>,
+    /// Mid-run join directive: "step" or "step:count".
+    pub join: Option<String>,
+    /// Bound on live loss-cache + journal entries (0 = unbounded).
+    pub cache_max_entries: Option<u64>,
 }
 
 impl PipelineOverrides {
@@ -130,6 +139,18 @@ pub struct PipelineOptions {
     /// leader training/eval stay exact f32) and is async-only for the
     /// same reason as `score_precision`.
     pub param_precision: ScorePrecision,
+    /// Fleet-size floor: a worker whose restart budget is spent is
+    /// *retired* (shards migrate to the survivors) instead of aborting
+    /// the run, as long as the fleet stays at or above this floor.
+    pub min_workers: usize,
+    /// Mid-run admission: at step `.0`, admit `.1` late workers into
+    /// the fleet (each triggers a reshard). `None` = static fleet.
+    pub join: Option<(u64, usize)>,
+    /// Bound on live entries in the sharded loss cache and the
+    /// leader's routed-row journal (0 = unbounded). Async-only:
+    /// evicting an entry the sync handoff is waiting on would stall
+    /// the bit-identical oracle, so `resolve` rejects the combination.
+    pub cache_max_entries: u64,
 }
 
 fn env_usize(key: &str) -> Option<usize> {
@@ -161,6 +182,22 @@ fn socket_kind(s: &str) -> Result<Option<TransportKind>> {
         "unix" => Ok(Some(TransportKind::UnixSocket)),
         "tcp" => Ok(Some(TransportKind::TcpSocket)),
         other => bail!("unknown pipeline socket mode {other:?} (want unix | tcp | none)"),
+    }
+}
+
+/// Parse a mid-run join directive: `""`/`"none"` → no join, `"step"` →
+/// one worker at `step`, `"step:count"` → `count` workers at `step`.
+pub fn parse_join(s: &str) -> Result<Option<(u64, usize)>> {
+    let s = s.trim();
+    if s.is_empty() || s == "none" {
+        return Ok(None);
+    }
+    let (step_s, count_s) = s.split_once(':').unwrap_or((s, "1"));
+    match (step_s.trim().parse::<u64>(), count_s.trim().parse::<usize>()) {
+        (Ok(step), Ok(count)) if count > 0 => Ok(Some((step, count))),
+        _ => bail!(
+            "bad pipeline_join {s:?} (want \"step\" or \"step:count\" with count ≥ 1)"
+        ),
     }
 }
 
@@ -256,6 +293,39 @@ impl PipelineOptions {
                  --pipeline-sync or use param_precision = f32)"
             );
         }
+        let min_workers = ov
+            .min_workers
+            .or_else(|| env_usize("OBFTF_PIPELINE_MIN_WORKERS"))
+            .unwrap_or(cfg.pipeline_min_workers);
+        if min_workers < 1 || min_workers > workers {
+            bail!(
+                "pipeline_min_workers = {min_workers} must be in 1..={workers} \
+                 (the fleet size)"
+            );
+        }
+        let join_str = ov
+            .join
+            .clone()
+            .or_else(|| env_str("OBFTF_PIPELINE_JOIN"))
+            .unwrap_or_else(|| cfg.pipeline_join.clone());
+        let join = parse_join(&join_str)?;
+        if join.is_some() && !transport.is_fleet() {
+            bail!(
+                "pipeline_join requires a process-fleet transport (--pipeline-proc or \
+                 --pipeline-socket): the in-process threads transport has a fixed pool"
+            );
+        }
+        let cache_max_entries = ov
+            .cache_max_entries
+            .or_else(|| env_u64("OBFTF_CACHE_MAX_ENTRIES"))
+            .unwrap_or(cfg.cache_max_entries);
+        if sync && cache_max_entries > 0 {
+            bail!(
+                "cache_max_entries is incompatible with pipeline_sync: the bit-identical \
+                 oracle's exact-stamp handoff must never lose the entry it is waiting on \
+                 (drop --pipeline-sync or use cache_max_entries = 0)"
+            );
+        }
         let max_age = if cfg.loss_max_age > 0 {
             cfg.loss_max_age
         } else {
@@ -273,6 +343,9 @@ impl PipelineOptions {
             timeout,
             score_precision,
             param_precision,
+            min_workers,
+            join,
+            cache_max_entries,
         })
     }
 
@@ -296,6 +369,15 @@ impl PipelineOptions {
             format!("proc_timeout_ms = {}", self.timeout.as_millis()),
             format!("score_precision = {}", self.score_precision),
             format!("param_precision = {}", self.param_precision),
+            format!("pipeline_min_workers = {}", self.min_workers),
+            format!(
+                "pipeline_join = {}",
+                match self.join {
+                    Some((step, count)) => format!("{step}:{count}"),
+                    None => "none".to_string(),
+                }
+            ),
+            format!("cache_max_entries = {}", self.cache_max_entries),
         ]
     }
 }
@@ -442,8 +524,73 @@ mod tests {
             "proc_timeout_ms",
             "score_precision",
             "param_precision",
+            "pipeline_min_workers",
+            "pipeline_join",
+            "cache_max_entries",
         ] {
             assert!(lines.iter().any(|l| l.starts_with(key)), "missing {key}");
         }
+        assert!(lines.iter().any(|l| l == "pipeline_join = none"));
+    }
+
+    #[test]
+    fn join_directive_parses_and_demands_a_fleet() {
+        assert_eq!(parse_join("").unwrap(), None);
+        assert_eq!(parse_join("none").unwrap(), None);
+        assert_eq!(parse_join("12").unwrap(), Some((12, 1)));
+        assert_eq!(parse_join(" 12 : 3 ").unwrap(), Some((12, 3)));
+        assert!(parse_join("12:0").is_err(), "count 0 is meaningless");
+        assert!(parse_join("early").is_err());
+        // the knob resolves, but only on a fleet transport
+        let mut cfg = base();
+        cfg.pipeline_socket = "unix".into();
+        cfg.pipeline_join = "5:2".into();
+        let o = PipelineOptions::resolve(&cfg, 64, 8).unwrap();
+        assert_eq!(o.join, Some((5, 2)));
+        cfg.pipeline_socket = String::new();
+        let err = PipelineOptions::resolve(&cfg, 64, 8).unwrap_err().to_string();
+        assert!(err.contains("fleet"), "err: {err}");
+        // CLI override beats config
+        cfg.pipeline_socket = "unix".into();
+        cfg.overrides.join = Some("9".into());
+        let o = PipelineOptions::resolve(&cfg, 64, 8).unwrap();
+        assert_eq!(o.join, Some((9, 1)));
+    }
+
+    #[test]
+    fn min_workers_floor_is_validated_against_the_fleet_size() {
+        let o = PipelineOptions::resolve(&base(), 64, 8).unwrap();
+        assert_eq!(o.min_workers, 1, "default floor");
+        let mut cfg = base();
+        cfg.pipeline_workers = 3;
+        cfg.pipeline_min_workers = 3;
+        let o = PipelineOptions::resolve(&cfg, 64, 8).unwrap();
+        assert_eq!(o.min_workers, 3);
+        cfg.pipeline_min_workers = 4;
+        let err = PipelineOptions::resolve(&cfg, 64, 8).unwrap_err().to_string();
+        assert!(err.contains("pipeline_min_workers"), "err: {err}");
+        cfg.pipeline_min_workers = 4;
+        cfg.overrides.min_workers = Some(2);
+        let o = PipelineOptions::resolve(&cfg, 64, 8).unwrap();
+        assert_eq!(o.min_workers, 2, "CLI beats config");
+    }
+
+    /// The cache bound is async-only: evicting the entry a sync
+    /// handoff is waiting on would stall the oracle, so the resolver
+    /// rejects the combination from any knob source.
+    #[test]
+    fn cache_bound_is_async_only() {
+        let mut cfg = base();
+        cfg.cache_max_entries = 4096;
+        let o = PipelineOptions::resolve(&cfg, 64, 8).unwrap();
+        assert_eq!(o.cache_max_entries, 4096);
+        cfg.pipeline_sync = true;
+        let err = PipelineOptions::resolve(&cfg, 64, 8).unwrap_err().to_string();
+        assert!(err.contains("cache_max_entries"), "err: {err}");
+        assert!(err.contains("pipeline_sync"), "err: {err}");
+        // sync with the bound left at 0 stays fine
+        cfg.cache_max_entries = 0;
+        let o = PipelineOptions::resolve(&cfg, 64, 8).unwrap();
+        assert_eq!(o.cache_max_entries, 0);
     }
 }

@@ -21,7 +21,12 @@
 //! [`EndpointSpawner`] captures everything needed to (re)create a
 //! worker's endpoint, which is what makes the supervised-restart policy
 //! in `ipc.rs` possible: respawning worker `w` at generation `g+1` is
-//! one `spawner.spawn(w, g + 1, None)` call.
+//! one `spawner.spawn(w, g + 1, None, false)` call. A *late* worker
+//! admitted mid-run spawns with `join = true`, which adds `--join` to
+//! its argv: it announces [`Frame::Join`] instead of `Hello` and owns
+//! no shard until its first `Reshard`.
+//!
+//! [`Frame::Join`]: crate::coordinator::proto::Frame::Join
 //!
 //! [`Frame::Hello`]: crate::coordinator::proto::Frame::Hello
 
@@ -147,6 +152,7 @@ impl EndpointSpawner {
         worker: usize,
         generation: u64,
         fail_after: Option<u64>,
+        join: bool,
     ) -> Result<(WorkerEndpoint, Box<dyn Read + Send>)> {
         let mut cmd = Command::new(&self.bin);
         cmd.arg("worker")
@@ -168,6 +174,9 @@ impl EndpointSpawner {
             .stdout(Stdio::piped());
         if let Some(k) = fail_after {
             cmd.arg("--fail-after").arg(k.to_string());
+        }
+        if join {
+            cmd.arg("--join");
         }
         let listen = match self.link {
             LinkMode::Pipes => None,

@@ -43,6 +43,20 @@
 //! lowest index), which cuts the routed-`LossRecords` share of
 //! `frame_bytes_per_step`; `affinity = false` restores round-robin.
 //!
+//! The worker *count* itself is elastic: the leader can admit a late
+//! worker (a `Join` handshake instead of `Hello`) or retire a
+//! permanently-dead one (restart budget exhausted, fleet still above
+//! the `min_workers` floor — demote instead of abort). Either way the
+//! fleet **reshards**: the leader quiesces in-flight scoring, re-keys
+//! its routed-row journal to the new shard count, broadcasts an
+//! epoch-tagged `Reshard` ownership map, and migrates each shard's rows
+//! to its new owner as `ShardTransfer` frames (exact stamps, not
+//! counted as recorded rows). Ownership is positional: shard `k` of the
+//! map covers `id % members.len() == k` and belongs to `members[k]`. A
+//! lookup fan-out spanning the transition classifies as `Retry` under
+//! the same epoch guard that covers restarts, so freshness accounting
+//! never mixes ownership maps.
+//!
 //! [`Session`]: crate::runtime::Session
 
 use std::collections::{BTreeMap, HashMap};
@@ -59,7 +73,7 @@ use crate::coordinator::endpoint::{EndpointSpawner, LinkMode, WorkerEndpoint};
 use crate::coordinator::loss_cache::{
     is_fresh, CacheProbe, CacheStats, LossCache, ShardedLossCache, NEVER,
 };
-use crate::coordinator::proto::{self, Frame, ViewRow, WorkerStats, NO_ID};
+use crate::coordinator::proto::{self, Frame, FramePools, ViewRow, WorkerStats, NO_ID};
 use crate::data::dataset::Batch;
 use crate::data::tensor::{bf16_to_f32, f32_to_bf16, TensorData};
 use crate::data::HostTensor;
@@ -127,6 +141,8 @@ pub struct FleetSummary {
     pub workers_alive: usize,
     /// Workers relaunched mid-run by the supervised-restart policy.
     pub restarts: u64,
+    /// Reshard transitions performed mid-run (joins + permanent leaves).
+    pub reshards: u64,
     /// Aggregate lookup-granularity cache counters.
     pub cache: CacheStats,
     /// Row-granularity counters per shard (proc mode: shard == worker).
@@ -165,6 +181,21 @@ pub trait Transport {
     fn restarts(&self) -> u64 {
         0
     }
+    /// Reshard transitions performed so far — worker joins plus
+    /// permanent leaves (0 for transports with a fixed worker count).
+    fn reshards(&self) -> u64 {
+        0
+    }
+    /// Entries evicted so far by the bounded loss-cache/journal policy
+    /// (0 when unbounded or the transport keeps no such state).
+    fn evictions(&self) -> u64 {
+        0
+    }
+    /// Admit one late worker into the fleet (spawn + `Join` handshake +
+    /// reshard). Only the multi-process fleet supports this.
+    fn admit_worker(&mut self) -> Result<()> {
+        bail!("this transport does not support admitting workers mid-run")
+    }
     /// Wire traffic so far in bytes (0 for in-process transports).
     fn frame_bytes(&self) -> u64 {
         0
@@ -199,6 +230,10 @@ pub struct InProcSpec {
     pub capacity: usize,
     pub max_age: u64,
     pub shards: usize,
+    /// Loss-cache entry bound (0 = unbounded): oldest-stamp-first
+    /// eviction keeps the live entry count under this across a long
+    /// stream of distinct ids. Async-only (sync mode rejects it).
+    pub max_entries: u64,
     pub sync: bool,
     /// Ticket-queue bound (lookahead depth + workers + slack).
     pub queue_cap: usize,
@@ -232,7 +267,12 @@ impl InProcTransport {
     ///
     /// [`Session`]: crate::runtime::Session
     pub fn spawn(spec: InProcSpec) -> Result<InProcTransport> {
-        let cache = Arc::new(ShardedLossCache::new(spec.capacity, spec.max_age, spec.shards));
+        let cache = Arc::new(ShardedLossCache::with_max_entries(
+            spec.capacity,
+            spec.max_age,
+            spec.shards,
+            spec.max_entries,
+        ));
         let params = Arc::new(ParamStore::new(Arc::new(Vec::new())));
         let err: Arc<Mutex<Option<String>>> = Arc::new(Mutex::new(None));
         let scored_batches: Arc<Vec<AtomicU64>> =
@@ -336,6 +376,7 @@ impl InProcTransport {
             workers,
             workers_alive,
             restarts: 0,
+            reshards: 0,
             cache: self.cache.stats(),
             shard_rows: (0..self.cache.n_shards()).map(|k| self.cache.shard_stats(k)).collect(),
             fleet_rows: self.fleet_rows_now(),
@@ -441,6 +482,10 @@ impl Transport for InProcTransport {
 
     fn worker_scored(&self) -> Vec<u64> {
         self.scored_batches.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+
+    fn evictions(&self) -> u64 {
+        self.cache.evictions()
     }
 
     fn shutdown(&mut self) -> Result<FleetSummary> {
@@ -563,6 +608,15 @@ pub struct FleetSpec {
     /// Supervised restarts allowed across the fleet before a worker
     /// death becomes fatal (0 = strict fail-fast).
     pub restart_limit: u32,
+    /// Fleet-size floor for the elastic policy: a worker death beyond
+    /// the restart budget retires the worker (permanent leave +
+    /// reshard) instead of aborting, as long as the fleet stays at or
+    /// above this count. At the floor, such a death is fatal.
+    pub min_workers: usize,
+    /// Leader-journal entry bound (0 = unbounded): oldest-stamp-first
+    /// eviction keeps the routed-row journal under this across a long
+    /// stream of distinct ids. Async-only (sync mode rejects it).
+    pub max_entries: u64,
 }
 
 /// Test-only fault injection via the environment:
@@ -629,16 +683,35 @@ pub struct FleetTransport {
     timeout: Duration,
     affinity: bool,
     restart_limit: u32,
+    /// Fleet-size floor: retire-don't-abort only applies above it.
+    min_workers: usize,
+    /// Slot ids currently in the ownership map, ascending. Shard `k`
+    /// covers `id % active.len() == k` and belongs to `active[k]`; a
+    /// join appends a slot, a permanent leave removes one, and either
+    /// transition reshards.
+    active: Vec<usize>,
     /// Supervised restarts performed so far.
     restarts: u64,
-    /// Bumped on every restart; an in-flight `CacheLookup` collect
-    /// aborts (and re-issues) when it observes a bump, since the
-    /// replaced worker will never answer the old request.
+    /// Reshard transitions performed so far (joins + permanent
+    /// leaves); doubles as the wire `Reshard` epoch.
+    reshard_count: u64,
+    /// Bumped on every restart *and* reshard; an in-flight
+    /// `CacheLookup` collect aborts (and re-issues) when it observes a
+    /// bump, since the old fan-out can no longer be answered (replaced
+    /// worker) or classified (changed ownership map).
     restart_epoch: u64,
-    /// Per-owner journal of every routed/recorded row the leader has
+    /// Per-shard journal of every routed/recorded row the leader has
     /// seen (`id → (loss, stamp)`, newest stamp wins) — the re-warm
-    /// source for a restarted owner's shard.
+    /// source for a restarted owner's shard and the migration source
+    /// for a reshard. Indexed by shard *position* `0..active.len()`,
+    /// re-keyed on every reshard.
     journal: Vec<HashMap<u64, (f32, u64)>>,
+    /// Journal entry bound (0 = unbounded) with oldest-stamp-first
+    /// eviction; `journal_entries` is the live count across shards.
+    max_entries: u64,
+    journal_entries: u64,
+    /// Journal entries evicted so far by the bound.
+    evictions: u64,
     /// In-flight `ScoreBatch` work: `seq → (worker, batch)`, retired by
     /// the matching `LossRecords` reply, re-issued on restart.
     outstanding: BTreeMap<u64, (usize, Arc<Batch>)>,
@@ -653,6 +726,17 @@ pub struct FleetTransport {
     enc_buf: Vec<u8>,
     /// Reusable wire-id scratch for `lookup_once`.
     lookup_ids: Vec<u64>,
+    /// Reusable per-row merge scratch for `lookup_once` (the PR-8
+    /// "leader merge vectors" residual: warm lookups allocate only the
+    /// returned losses).
+    per_row: Vec<Option<(f32, u64)>>,
+    /// Reusable per-shard stats scratch for `lookup_once`.
+    per_shard: Vec<CacheStats>,
+    /// Decode-side payload pools shared with the reader threads: they
+    /// decode frames out of the pools (under a short lock, never held
+    /// across a blocking read) and the leader recycles consumed payload
+    /// vectors back, so warm steady-state decodes allocate nothing.
+    pools: Arc<Mutex<FramePools>>,
     /// Routed `LossRecords` deferred per owner; they coalesce into the
     /// next selection-time envelope instead of going out as one write
     /// per scorer per owner.
@@ -705,6 +789,12 @@ impl FleetTransport {
     /// every endpoint's version-checked `Hello` handshake.
     pub fn spawn(spec: FleetSpec) -> Result<FleetTransport> {
         anyhow::ensure!(spec.workers > 0, "fleet transport needs at least one worker");
+        anyhow::ensure!(
+            spec.min_workers >= 1 && spec.min_workers <= spec.workers,
+            "fleet floor min_workers = {} must be in 1..={}",
+            spec.min_workers,
+            spec.workers
+        );
         let bin = spec.resolve_bin()?;
         let spawner = EndpointSpawner {
             bin,
@@ -728,14 +818,23 @@ impl FleetTransport {
             timeout: spec.timeout,
             affinity: spec.affinity,
             restart_limit: spec.restart_limit,
+            min_workers: spec.min_workers,
+            active: (0..spec.workers).collect(),
             restarts: 0,
+            reshard_count: 0,
             restart_epoch: 0,
             journal: (0..spec.workers).map(|_| HashMap::new()).collect(),
+            max_entries: spec.max_entries,
+            journal_entries: 0,
+            evictions: 0,
             outstanding: BTreeMap::new(),
             last_params: Vec::new(),
             param_precision: spec.param_precision,
             enc_buf: Vec::new(),
             lookup_ids: Vec::new(),
+            per_row: Vec::new(),
+            per_shard: Vec::new(),
+            pools: Arc::new(Mutex::new(FramePools::new())),
             pending_routes: (0..spec.workers).map(|_| Vec::new()).collect(),
             route_pool: Vec::new(),
             wire: WireStats::default(),
@@ -755,7 +854,7 @@ impl FleetTransport {
         };
         for w in 0..spec.workers {
             let fail = spec.fail_after.get(w).copied().flatten();
-            let slot = t.spawn_slot(w, 0, fail)?;
+            let slot = t.spawn_slot(w, 0, fail, false)?;
             t.slots.push(slot);
         }
         for w in 0..spec.workers {
@@ -766,23 +865,50 @@ impl FleetTransport {
 
     /// Spawn one worker incarnation: endpoint (process + link) plus the
     /// reader thread that turns its frames into generation-tagged
-    /// events.
-    fn spawn_slot(&self, w: usize, generation: u64, fail_after: Option<u64>) -> Result<Slot> {
-        let (ep, stream) = self.spawner.spawn(w, generation, fail_after)?;
+    /// events. `join` spawns a late worker that announces `Join`
+    /// instead of `Hello` and owns nothing until the first `Reshard`.
+    fn spawn_slot(
+        &self,
+        w: usize,
+        generation: u64,
+        fail_after: Option<u64>,
+        join: bool,
+    ) -> Result<Slot> {
+        let (ep, stream) = self.spawner.spawn(w, generation, fail_after, join)?;
         let tx = self.event_tx.clone();
         let counter = self.bytes_in.clone();
+        let pools = self.pools.clone();
         let reader = std::thread::Builder::new()
             .name(format!("obftf-fleet-rx-{w}-g{generation}"))
             .spawn(move || {
                 let mut r = BufReader::new(stream);
-                // reused body buffer: framing allocates nothing once warm
+                // reused body buffer: framing allocates nothing once
+                // warm. The body is read *before* taking the pools lock
+                // so a blocked read never stalls the other readers or
+                // the leader's recycling.
                 let mut body = Vec::new();
                 loop {
-                    match proto::read_frame_into(&mut r, &mut body) {
-                        Ok(Some((frame, n))) => {
-                            counter.fetch_add(n as u64, Ordering::Relaxed);
-                            if tx.send(Event::Frame(w, generation, frame)).is_err() {
-                                return;
+                    match proto::read_frame_body(&mut r, &mut body) {
+                        Ok(Some(len)) => {
+                            let decoded = {
+                                let mut pools = pools.lock().expect("frame pools");
+                                Frame::decode_pooled(&body, &mut pools)
+                            };
+                            match decoded {
+                                Ok(frame) => {
+                                    counter.fetch_add(4 + len as u64, Ordering::Relaxed);
+                                    if tx.send(Event::Frame(w, generation, frame)).is_err() {
+                                        return;
+                                    }
+                                }
+                                Err(e) => {
+                                    let _ = tx.send(Event::Dead(
+                                        w,
+                                        generation,
+                                        format!("bad frame from worker: {e:#}"),
+                                    ));
+                                    return;
+                                }
                             }
                         }
                         Ok(None) => {
@@ -821,11 +947,20 @@ impl FleetTransport {
     }
 
     /// Supervised-restart policy for a dead worker: within the restart
-    /// budget, respawn → handshake → republish weights → re-warm the
-    /// owned shard from the journal → re-issue in-flight batches.
-    /// Beyond the budget, or during shutdown, the death is fatal.
+    /// budget, respawn → handshake → republish weights → (post-reshard)
+    /// re-announce the ownership map → re-warm the owned shard from the
+    /// journal → re-issue in-flight batches. Beyond the budget the
+    /// worker is *retired* (permanent leave + reshard) while the fleet
+    /// stays above the `min_workers` floor; at the floor, or during
+    /// shutdown, the death is fatal.
     fn supervise(&mut self, w: usize, reason: &str) -> Result<()> {
-        if self.shutting_down || self.restarts >= u64::from(self.restart_limit) {
+        if self.shutting_down {
+            return Err(self.dead_error(w, reason));
+        }
+        if self.restarts >= u64::from(self.restart_limit) {
+            if self.active.len() > self.min_workers && self.active.contains(&w) {
+                return self.retire(w, reason);
+            }
             return Err(self.dead_error(w, reason));
         }
         self.restarts += 1;
@@ -843,25 +978,51 @@ impl FleetTransport {
             let _ = h.join();
         }
         // never re-inject --fail-after into a replacement
-        self.slots[w] = self.spawn_slot(w, generation, None)?;
+        self.slots[w] = self.spawn_slot(w, generation, None, false)?;
         self.await_hello(w)?;
         self.write_params(w)?;
+        // a replacement announces with the *spawn-time* default map
+        // (worker_id of n_workers); after any reshard that map is
+        // stale, so re-announce the current one before the re-warm
+        if self.reshard_count > 0 {
+            let members: Vec<u64> = self.active.iter().map(|&a| a as u64).collect();
+            let mut buf = std::mem::take(&mut self.enc_buf);
+            proto::encode_reshard_into(self.reshard_count, &members, &mut buf);
+            let res = self.write_raw(w, &buf, "Reshard");
+            self.enc_buf = buf;
+            res?;
+        }
         // routes still deferred for this owner are already journaled —
         // drop them so the re-warm below doesn't get stale duplicates
         while let Some(r) = self.pending_routes[w].pop() {
             self.recycle_route(r);
         }
-        // re-warm the shard stamp-ascending so the newest stamp wins
-        // exactly as it did the first time
-        let mut by_stamp: BTreeMap<u64, (Vec<u64>, Vec<f32>)> = BTreeMap::new();
-        for (&id, &(loss, stamp)) in &self.journal[w] {
-            let e = by_stamp.entry(stamp).or_default();
-            e.0.push(id);
-            e.1.push(loss);
-        }
-        for (stamp, (ids, losses)) in by_stamp {
-            let warm = Frame::LossRecords { seq: u64::MAX, worker: w as u32, stamp, ids, losses };
-            self.write(w, &warm)?;
+        // re-warm the shard in (stamp, id) order: stamp-ascending so
+        // the newest stamp wins exactly as it did the first time, and
+        // id-ascending within a stamp so the replayed frame sequence is
+        // identical run-to-run (a HashMap iteration here would not be)
+        if let Some(k) = self.active.iter().position(|&a| a == w) {
+            let mut entries: Vec<(u64, u64, f32)> =
+                self.journal[k].iter().map(|(&id, &(loss, stamp))| (stamp, id, loss)).collect();
+            entries.sort_unstable_by_key(|&(stamp, id, _)| (stamp, id));
+            let mut ids: Vec<u64> = Vec::new();
+            let mut losses: Vec<f32> = Vec::new();
+            let mut i = 0;
+            while i < entries.len() {
+                let stamp = entries[i].0;
+                ids.clear();
+                losses.clear();
+                while i < entries.len() && entries[i].0 == stamp {
+                    ids.push(entries[i].1);
+                    losses.push(entries[i].2);
+                    i += 1;
+                }
+                let mut buf = std::mem::take(&mut self.enc_buf);
+                proto::encode_loss_records_into(u64::MAX, w as u32, stamp, &ids, &losses, &mut buf);
+                let res = self.write_raw(w, &buf, "LossRecords");
+                self.enc_buf = buf;
+                res?;
+            }
         }
         // re-issue the dead incarnation's in-flight scoring work
         let replay: Vec<(u64, Arc<Batch>)> = self
@@ -875,6 +1036,187 @@ impl FleetTransport {
         }
         self.progress = true;
         Ok(())
+    }
+
+    /// Permanent leave: the restart budget is spent, so instead of
+    /// aborting, drop worker `w` from the ownership map. Its in-flight
+    /// scoring work is carried aside (original seqs), the survivors are
+    /// quiesced, ownership reshards over the shrunk fleet, and the
+    /// carried work re-submits under the new map.
+    fn retire(&mut self, w: usize, reason: &str) -> Result<()> {
+        eprintln!(
+            "obftf fleet: {} died ({reason}); restart budget spent — retiring it \
+             (fleet {} → {}, floor {})",
+            self.slots[w].ep.describe,
+            self.active.len(),
+            self.active.len() - 1,
+            self.min_workers
+        );
+        self.slots[w].alive = false;
+        self.slots[w].ep.reap();
+        if let Some(h) = self.slots[w].reader.take() {
+            let _ = h.join();
+        }
+        // its deferred routes died with its shard state; the journal
+        // re-key in do_reshard migrates the rows themselves
+        while let Some(r) = self.pending_routes[w].pop() {
+            self.recycle_route(r);
+        }
+        // carry its in-flight work under the original seqs, past the
+        // quiesce (which can no longer wait on the dead worker)
+        let carried: Vec<(u64, Arc<Batch>)> = self
+            .outstanding
+            .iter()
+            .filter(|(_, (owner, _))| *owner == w)
+            .map(|(&seq, (_, b))| (seq, b.clone()))
+            .collect();
+        for (seq, _) in &carried {
+            self.outstanding.remove(seq);
+        }
+        self.drain_outstanding()?;
+        let next: Vec<usize> = self.active.iter().copied().filter(|&a| a != w).collect();
+        self.do_reshard(next)?;
+        for (seq, batch) in carried {
+            let scorer = self.pick_scorer(&batch);
+            self.outstanding.insert(seq, (scorer, batch.clone()));
+            self.write(scorer, &Frame::ScoreBatch { seq, batch: (*batch).clone() })?;
+        }
+        self.progress = true;
+        Ok(())
+    }
+
+    /// Quiesce: block (bounded by the fleet timeout) until every
+    /// in-flight `ScoreBatch` has been answered. The reshard
+    /// prerequisite — a reply scored under the old ownership map must
+    /// be journaled and routed under that same map, so no score may
+    /// span the transition.
+    fn drain_outstanding(&mut self) -> Result<()> {
+        let deadline = Instant::now() + self.timeout;
+        while !self.outstanding.is_empty() {
+            self.recv_deadline(deadline, "in-flight scores before reshard")?;
+        }
+        Ok(())
+    }
+
+    /// Recompute ownership over `new_active`: re-key the journal to the
+    /// new shard count, drop deferred routes (the full-shard transfer
+    /// below subsumes them), broadcast the epoch-tagged `Reshard` map,
+    /// and migrate every shard's rows to its owner as `(stamp, id)`-
+    /// sorted `ShardTransfer` frames (exact stamps, deterministic
+    /// order, not counted as recorded rows). Caller has quiesced.
+    fn do_reshard(&mut self, new_active: Vec<usize>) -> Result<()> {
+        debug_assert!(self.outstanding.is_empty(), "reshard requires a quiesced fleet");
+        self.reshard_count += 1;
+        // the epoch bump doubles as the lookup guard: a fan-out
+        // spanning this transition classifies as Retry
+        self.restart_epoch += 1;
+        let new_n = new_active.len() as u64;
+        let old = std::mem::take(&mut self.journal);
+        let mut journal: Vec<HashMap<u64, (f32, u64)>> =
+            (0..new_active.len()).map(|_| HashMap::new()).collect();
+        for shard in old {
+            for (id, row) in shard {
+                journal[(id % new_n) as usize].insert(id, row);
+            }
+        }
+        self.journal = journal;
+        for owner in 0..self.pending_routes.len() {
+            while let Some(r) = self.pending_routes[owner].pop() {
+                self.recycle_route(r);
+            }
+        }
+        self.active = new_active;
+        let epoch = self.reshard_count;
+        let members: Vec<u64> = self.active.iter().map(|&a| a as u64).collect();
+        let mut ids: Vec<u64> = Vec::new();
+        let mut losses: Vec<f32> = Vec::new();
+        let mut stamps: Vec<u64> = Vec::new();
+        for k in 0..self.active.len() {
+            let w = self.active[k];
+            let mut buf = std::mem::take(&mut self.enc_buf);
+            proto::encode_reshard_into(epoch, &members, &mut buf);
+            let res = self.write_raw(w, &buf, "Reshard");
+            self.enc_buf = buf;
+            res?;
+            let mut entries: Vec<(u64, u64, f32)> =
+                self.journal[k].iter().map(|(&id, &(loss, stamp))| (stamp, id, loss)).collect();
+            entries.sort_unstable_by_key(|&(stamp, id, _)| (stamp, id));
+            for chunk in entries.chunks(65536) {
+                ids.clear();
+                losses.clear();
+                stamps.clear();
+                for &(stamp, id, loss) in chunk {
+                    ids.push(id);
+                    losses.push(loss);
+                    stamps.push(stamp);
+                }
+                let mut buf = std::mem::take(&mut self.enc_buf);
+                proto::encode_shard_transfer_into(
+                    epoch, w as u32, &ids, &losses, &stamps, &mut buf,
+                );
+                let res = self.write_raw(w, &buf, "ShardTransfer");
+                self.enc_buf = buf;
+                res?;
+            }
+        }
+        self.progress = true;
+        Ok(())
+    }
+
+    /// Admit one late worker: spawn it on the next slot id with a
+    /// `Join` announcement, handshake, publish the current weights,
+    /// quiesce in-flight scoring, then reshard ownership over the
+    /// grown fleet (which transfers the joiner its shard).
+    fn admit(&mut self) -> Result<()> {
+        anyhow::ensure!(!self.shutting_down, "cannot admit a worker during shutdown");
+        let w = self.slots.len();
+        self.spawner.workers = w + 1;
+        let slot = self.spawn_slot(w, 0, None, true)?;
+        self.slots.push(slot);
+        self.scored.push(0);
+        self.shard_rows.push(CacheStats::default());
+        self.pending_views.push(None);
+        self.pending_routes.push(Vec::new());
+        self.final_stats.push(None);
+        self.await_hello(w)?;
+        self.write_params(w)?;
+        self.drain_outstanding()?;
+        let mut next = self.active.clone();
+        next.push(w);
+        next.sort_unstable();
+        self.do_reshard(next)
+    }
+
+    /// Enforce the journal bound: when the live entry count exceeds
+    /// `max_entries`, evict the oldest `(stamp, id)` entries down to
+    /// the bound minus 1/8 slack (so the full scan amortizes), bumping
+    /// `evictions`. Deterministic: the eviction order is a total order
+    /// over entries, independent of hash iteration.
+    fn evict_journal(&mut self) {
+        if self.max_entries == 0 || self.journal_entries <= self.max_entries {
+            return;
+        }
+        let slack = (self.max_entries / 8).max(1).min(self.max_entries - 1);
+        let target = self.max_entries - slack;
+        let excess = self.journal_entries - target;
+        let mut entries: Vec<(u64, u64, usize)> = Vec::with_capacity(self.journal_entries as usize);
+        for (k, shard) in self.journal.iter().enumerate() {
+            for (&id, &(_, stamp)) in shard {
+                entries.push((stamp, id, k));
+            }
+        }
+        entries.sort_unstable();
+        for &(_, id, k) in entries.iter().take(excess as usize) {
+            self.journal[k].remove(&id);
+        }
+        self.journal_entries -= excess;
+        self.evictions += excess;
+    }
+
+    /// Return a dropped (stale-generation / retired-sender) frame's
+    /// payload vectors to the shared decode pools.
+    fn recycle_frame(&mut self, frame: Frame) {
+        self.pools.lock().expect("frame pools").recycle(frame);
     }
 
     /// Contextual error for a dead/failed worker: id, endpoint, child
@@ -1006,14 +1348,20 @@ impl FleetTransport {
     fn handle_event(&mut self, ev: Event) -> Result<()> {
         match ev {
             Event::Frame(w, gen, frame) => {
-                if gen != self.slots[w].ep.generation {
-                    return Ok(()); // trailing frame from a dead incarnation
+                if gen != self.slots[w].ep.generation || !self.slots[w].alive {
+                    // trailing frame from a dead incarnation or a
+                    // retired worker: drop it, keep its payload buffers
+                    self.recycle_frame(frame);
+                    return Ok(());
                 }
                 self.handle_frame(w, frame)
             }
             Event::Dead(w, gen, reason) => {
                 if gen != self.slots[w].ep.generation {
                     return Ok(()); // the predecessor's EOF, already handled
+                }
+                if !self.slots[w].alive {
+                    return Ok(()); // retired worker's queued EOF, already handled
                 }
                 if self.shutting_down && self.final_stats[w].is_some() {
                     // normal EOF after the stats handshake
@@ -1028,7 +1376,7 @@ impl FleetTransport {
 
     fn handle_frame(&mut self, w: usize, frame: Frame) -> Result<()> {
         match frame {
-            Frame::Hello { proto: version, worker } => {
+            Frame::Hello { proto: version, worker } | Frame::Join { proto: version, worker } => {
                 if version != proto::PROTO_VERSION {
                     return Err(self.dead_error(
                         w,
@@ -1053,17 +1401,30 @@ impl FleetTransport {
                 if seq != u64::MAX {
                     self.outstanding.remove(&seq);
                 }
-                // journal every row under its owner (newest stamp wins)
-                // so a restarted owner's shard can be re-warmed
-                let n = self.slots.len() as u64;
+                // journal every row under its shard (newest stamp wins)
+                // so a restarted owner can be re-warmed and a reshard
+                // can migrate the rows
+                let n = self.active.len() as u64;
                 for (&id, &l) in ids.iter().zip(&losses) {
-                    let e = self.journal[(id % n) as usize].entry(id).or_insert((l, stamp));
-                    if stamp >= e.1 {
-                        *e = (l, stamp);
+                    match self.journal[(id % n) as usize].entry(id) {
+                        std::collections::hash_map::Entry::Vacant(e) => {
+                            e.insert((l, stamp));
+                            self.journal_entries += 1;
+                        }
+                        std::collections::hash_map::Entry::Occupied(mut e) => {
+                            if stamp >= e.get().1 {
+                                *e.get_mut() = (l, stamp);
+                            }
+                        }
                     }
                 }
+                self.evict_journal();
                 if self.shutting_down {
-                    return Ok(()); // late score reply: absorb, don't route
+                    // late score reply: absorb, don't route
+                    let mut pools = self.pools.lock().expect("frame pools");
+                    pools.recycle_u64s(ids);
+                    pools.recycle_f32s(losses);
+                    return Ok(());
                 }
                 // defer foreign-row routing: each owner's routes coalesce
                 // into its next selection-time lookup envelope (one write
@@ -1071,7 +1432,8 @@ impl FleetTransport {
                 // arrival order is preserved, so newest-stamp-wins cache
                 // semantics are unchanged. A crash before the flush is
                 // covered by the journal insert above.
-                for owner in 0..self.slots.len() {
+                for k in 0..self.active.len() {
+                    let owner = self.active[k];
                     if owner == w {
                         continue; // scorer recorded its own rows locally
                     }
@@ -1079,7 +1441,7 @@ impl FleetTransport {
                     route.worker = w as u32;
                     route.stamp = stamp;
                     for (&id, &l) in ids.iter().zip(&losses) {
-                        if id % n == owner as u64 {
+                        if (id % n) as usize == k {
                             route.ids.push(id);
                             route.losses.push(l);
                         }
@@ -1090,12 +1452,19 @@ impl FleetTransport {
                         self.pending_routes[owner].push(route);
                     }
                 }
+                let mut pools = self.pools.lock().expect("frame pools");
+                pools.recycle_u64s(ids);
+                pools.recycle_f32s(losses);
                 Ok(())
             }
             Frame::CacheView { req, worker, rows } => {
                 let worker = worker as usize;
                 if req == self.cur_req && worker < self.pending_views.len() {
-                    self.pending_views[worker] = Some(rows);
+                    if let Some(old) = self.pending_views[worker].replace(rows) {
+                        self.pools.lock().expect("frame pools").recycle_views(old);
+                    }
+                } else {
+                    self.pools.lock().expect("frame pools").recycle_views(rows);
                 }
                 Ok(())
             }
@@ -1156,7 +1525,6 @@ impl FleetTransport {
     /// [`RowClass::Retry`] so the caller re-issues it against the new
     /// incarnation instead of waiting out the timeout.
     fn lookup_once(&mut self, batch: &Batch, now: u64, count: bool) -> Result<RowClass> {
-        let n = self.slots.len();
         let epoch0 = self.restart_epoch;
         self.next_req += 1;
         let req = self.next_req;
@@ -1172,10 +1540,16 @@ impl FleetTransport {
                 .zip(&batch.valid_mask)
                 .map(|(&id, &m)| if m > 0.0 && id != usize::MAX { id as u64 } else { NO_ID }),
         );
-        for v in self.pending_views.iter_mut() {
-            *v = None;
+        {
+            let mut pools = self.pools.lock().expect("frame pools");
+            for v in self.pending_views.iter_mut() {
+                if let Some(rows) = v.take() {
+                    pools.recycle_views(rows);
+                }
+            }
         }
-        for w in 0..n {
+        for k in 0..self.active.len() {
+            let w = self.active[k];
             // coalesce this owner's deferred routes with the lookup into
             // one envelope frame (routes first, so the lookup answers
             // over the freshly-routed rows); no routes → a plain lookup
@@ -1211,7 +1585,12 @@ impl FleetTransport {
             }
         }
         let deadline = Instant::now() + self.timeout;
-        while self.pending_views.iter().any(|v| v.is_none()) {
+        loop {
+            let missing_view =
+                self.active.iter().any(|&w| self.pending_views[w].is_none());
+            if !missing_view {
+                break;
+            }
             if let Err(e) = self.recv_deadline(deadline, "cache views") {
                 self.lookup_ids = wire_ids;
                 return Err(e);
@@ -1221,13 +1600,16 @@ impl FleetTransport {
                 return Ok(RowClass::Retry);
             }
         }
-        // merge views into per-row entries
+        // merge views into the reused per-row scratch — a warm lookup
+        // allocates only the returned losses
         let rows = wire_ids.len();
-        let mut per_row: Vec<Option<(f32, u64)>> = vec![None; rows];
+        let n = self.active.len();
+        self.per_row.clear();
+        self.per_row.resize(rows, None);
         for view in self.pending_views.iter().flatten() {
             for r in view {
                 if (r.pos as usize) < rows {
-                    per_row[r.pos as usize] = Some((r.loss, r.stamp));
+                    self.per_row[r.pos as usize] = Some((r.loss, r.stamp));
                 }
             }
         }
@@ -1235,13 +1617,14 @@ impl FleetTransport {
         let mut missing = 0usize;
         let mut stale = 0usize;
         let mut min_stamp = NEVER;
-        let mut per_shard = vec![CacheStats::default(); n];
+        self.per_shard.clear();
+        self.per_shard.resize(self.slots.len(), CacheStats::default());
         for (pos, &wid) in wire_ids.iter().enumerate() {
             if wid == NO_ID {
                 continue;
             }
-            let owner = (wid % n as u64) as usize;
-            let (loss, stamp) = per_row[pos].unwrap_or((0.0, NEVER));
+            let owner = self.active[(wid % n as u64) as usize];
+            let (loss, stamp) = self.per_row[pos].unwrap_or((0.0, NEVER));
             let fresh = if self.sync {
                 stamp == now
             } else {
@@ -1249,20 +1632,20 @@ impl FleetTransport {
             };
             if stamp == NEVER {
                 missing += 1;
-                per_shard[owner].misses += 1;
+                self.per_shard[owner].misses += 1;
             } else if fresh {
                 out[pos] = loss;
                 min_stamp = min_stamp.min(stamp);
-                per_shard[owner].hits += 1;
+                self.per_shard[owner].hits += 1;
             } else {
                 stale += 1;
                 min_stamp = min_stamp.min(stamp);
-                per_shard[owner].misses += 1;
-                per_shard[owner].stale += 1;
+                self.per_shard[owner].misses += 1;
+                self.per_shard[owner].stale += 1;
             }
         }
         if count {
-            for (agg, s) in self.shard_rows.iter_mut().zip(&per_shard) {
+            for (agg, s) in self.shard_rows.iter_mut().zip(&self.per_shard) {
                 agg.hits += s.hits;
                 agg.misses += s.misses;
                 agg.stale += s.stale;
@@ -1292,9 +1675,10 @@ impl FleetTransport {
     /// `LossRecords` re-send traffic. Ties go to the lowest worker
     /// index; batches with no valid ids fall back to round-robin.
     fn pick_scorer(&self, batch: &Batch) -> usize {
-        let n = self.slots.len();
+        let n = self.active.len();
+        let rr = self.active[(self.next_seq % n as u64) as usize];
         if !self.affinity || n == 1 {
-            return (self.next_seq % n as u64) as usize;
+            return rr;
         }
         let mut counts = vec![0u64; n];
         for (&id, &m) in batch.ids.iter().zip(&batch.valid_mask) {
@@ -1302,11 +1686,11 @@ impl FleetTransport {
                 counts[(id as u64 % n as u64) as usize] += 1;
             }
         }
-        let mut best = (self.next_seq % n as u64) as usize;
+        let mut best = rr;
         let mut best_count = 0u64;
-        for (w, &c) in counts.iter().enumerate() {
+        for (k, &c) in counts.iter().enumerate() {
             if c > best_count {
-                best = w;
+                best = self.active[k];
                 best_count = c;
             }
         }
@@ -1337,7 +1721,7 @@ impl FleetTransport {
 
 impl Transport for FleetTransport {
     fn n_workers(&self) -> usize {
-        self.slots.len()
+        self.active.len()
     }
 
     fn publish(&mut self, version: u64, weights: &Arc<Vec<HostTensor>>) -> Result<()> {
@@ -1354,10 +1738,13 @@ impl Transport for FleetTransport {
         );
         self.wire.encode_ns += t0.elapsed().as_nanos() as u64;
         // stash before the write loop so a restart fired *by* one of
-        // these writes already republishes this snapshot
+        // these writes already republishes this snapshot; retired
+        // workers are skipped (they left the fleet permanently)
         self.last_params = buf;
         for w in 0..self.slots.len() {
-            self.write_params(w)?;
+            if self.slots[w].alive {
+                self.write_params(w)?;
+            }
         }
         Ok(())
     }
@@ -1424,6 +1811,19 @@ impl Transport for FleetTransport {
         self.restarts
     }
 
+    fn reshards(&self) -> u64 {
+        self.reshard_count
+    }
+
+    fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    fn admit_worker(&mut self) -> Result<()> {
+        self.drain_events()?;
+        self.admit()
+    }
+
     fn frame_bytes(&self) -> u64 {
         self.bytes_out + self.bytes_in.load(Ordering::Relaxed)
     }
@@ -1472,6 +1872,7 @@ impl Transport for FleetTransport {
             workers,
             workers_alive: alive_at_entry,
             restarts: self.restarts,
+            reshards: self.reshard_count,
             cache: self.agg,
             shard_rows: self.shard_rows.clone(),
             fleet_rows: self.fleet_rows,
@@ -1507,6 +1908,10 @@ pub struct WorkerConfig {
     pub score_precision: String,
     /// Test-only: crash (exit 17, no handshake) after this many frames.
     pub fail_after: Option<u64>,
+    /// Late worker admitted into a running fleet: announce `Join`
+    /// instead of `Hello` and own nothing until the first `Reshard`
+    /// assigns a shard.
+    pub join: bool,
 }
 
 /// Whether the worker loop continues after a frame or exits.
@@ -1524,8 +1929,12 @@ struct WorkerLoop {
     cache: LossCache,
     stats: WorkerStats,
     version: u64,
-    me: u64,
-    n: u64,
+    /// This worker's shard *position* in the current ownership map
+    /// (initially the worker id; repositioned by `Reshard`).
+    shard_ix: u64,
+    /// Shard count of the current map (0 for a joiner that has not
+    /// received its first `Reshard` yet — it owns nothing).
+    n_shards: u64,
     ids: Vec<u64>,
     vals: Vec<f32>,
     own_ids: Vec<usize>,
@@ -1536,7 +1945,16 @@ struct WorkerLoop {
 }
 
 impl WorkerLoop {
-    fn handle(&mut self, frame: Frame, output: &mut impl Write) -> Result<Flow> {
+    /// Positional shard ownership under the current map. A joiner owns
+    /// nothing until its first `Reshard` (`n_shards == 0`).
+    fn owns(&self, id: u64) -> bool {
+        self.n_shards > 0 && id % self.n_shards == self.shard_ix
+    }
+
+    /// Handle one frame by reference: the caller owns the frame and
+    /// recycles its payload vectors into its [`FramePools`] afterwards,
+    /// so a warm steady-state step allocates nothing on the wire path.
+    fn handle(&mut self, frame: &Frame, output: &mut impl Write) -> Result<Flow> {
         match frame {
             Frame::ParamUpdate { version: v, weights } => {
                 // a bf16 broadcast is detected from the wire dtype and
@@ -1546,9 +1964,9 @@ impl WorkerLoop {
                         weights.iter().map(|t| t.expand_to_f32()).collect();
                     self.session.load_params(&expanded).context("worker weight sync")?;
                 } else {
-                    self.session.load_params(&weights).context("worker weight sync")?;
+                    self.session.load_params(weights).context("worker weight sync")?;
                 }
-                self.version = v;
+                self.version = *v;
                 Ok(Flow::Continue)
             }
             Frame::ScoreBatch { seq, batch } => {
@@ -1565,7 +1983,7 @@ impl WorkerLoop {
                     }
                     self.ids.push(id as u64);
                     self.vals.push(l);
-                    if id as u64 % self.n == self.me {
+                    if self.owns(id as u64) {
                         self.own_ids.push(id);
                         self.own_vals.push(l);
                     }
@@ -1582,7 +2000,7 @@ impl WorkerLoop {
                 self.stats.scored_rows += self.ids.len() as u64;
                 self.stats.recorded_rows += self.own_ids.len() as u64;
                 proto::encode_loss_records_into(
-                    seq,
+                    *seq,
                     self.stats.worker,
                     self.version,
                     &self.ids,
@@ -1597,22 +2015,22 @@ impl WorkerLoop {
                 // rows routed from another scorer; record the owned ones
                 self.own_ids.clear();
                 self.own_vals.clear();
-                for (&id, &l) in ids.iter().zip(&losses) {
-                    if id % self.n == self.me {
+                for (&id, &l) in ids.iter().zip(losses) {
+                    if self.owns(id) {
                         self.own_ids.push(id as usize);
                         self.own_vals.push(l);
                     }
                 }
                 self.own_valid.clear();
                 self.own_valid.resize(self.own_ids.len(), 1.0);
-                self.cache.record_batch(&self.own_ids, &self.own_valid, &self.own_vals, stamp);
+                self.cache.record_batch(&self.own_ids, &self.own_valid, &self.own_vals, *stamp);
                 self.stats.recorded_rows += self.own_ids.len() as u64;
                 Ok(Flow::Continue)
             }
             Frame::CacheLookup { req, ids, .. } => {
                 self.view_rows.clear();
                 for (pos, &wid) in ids.iter().enumerate() {
-                    if wid == NO_ID || wid % self.n != self.me {
+                    if wid == NO_ID || !self.owns(wid) {
                         continue;
                     }
                     let (loss, stamp) = self.cache.entry(wid as usize).unwrap_or((0.0, NEVER));
@@ -1620,13 +2038,42 @@ impl WorkerLoop {
                 }
                 self.stats.lookups += 1;
                 proto::encode_cache_view_into(
-                    req,
+                    *req,
                     self.stats.worker,
                     &self.view_rows,
                     &mut self.reply,
                 );
                 output.write_all(&self.reply).context("writing CacheView frame")?;
                 output.flush().context("flushing CacheView")?;
+                Ok(Flow::Continue)
+            }
+            Frame::Reshard { members, .. } => {
+                // reposition under the new ownership map, then drop
+                // rows this worker no longer owns (gained rows arrive
+                // as ShardTransfer frames right behind this one)
+                let me = u64::from(self.stats.worker);
+                let Some(k) = members.iter().position(|&m| m == me) else {
+                    bail!(
+                        "worker {}: Reshard map {:?} omits this worker",
+                        self.stats.worker,
+                        members
+                    );
+                };
+                self.shard_ix = k as u64;
+                self.n_shards = members.len() as u64;
+                let (ix, n) = (self.shard_ix, self.n_shards);
+                self.cache.retain_owned(|id| id as u64 % n == ix);
+                Ok(Flow::Continue)
+            }
+            Frame::ShardTransfer { ids, losses, stamps, .. } => {
+                // migrated rows keep their original stamps: exact
+                // restore, not counted as recorded rows (nothing new
+                // was scored or routed)
+                for ((&id, &l), &s) in ids.iter().zip(losses).zip(stamps) {
+                    if self.owns(id) {
+                        self.cache.restore(id as usize, l, s);
+                    }
+                }
                 Ok(Flow::Continue)
             }
             Frame::Shutdown => {
@@ -1671,12 +2118,15 @@ pub fn run_worker(cfg: &WorkerConfig, mut input: impl Read, mut output: impl Wri
         cfg.n_workers
     );
     // announce first, before the (possibly slow) session build, so the
-    // leader's version-checked handshake completes promptly
-    proto::write_frame(
-        &mut output,
-        &Frame::Hello { proto: proto::PROTO_VERSION, worker: cfg.worker_id as u32 },
-    )?;
-    output.flush().context("flushing Hello")?;
+    // leader's version-checked handshake completes promptly; a late
+    // worker announces Join instead of Hello
+    let announce = if cfg.join {
+        Frame::Join { proto: proto::PROTO_VERSION, worker: cfg.worker_id as u32 }
+    } else {
+        Frame::Hello { proto: proto::PROTO_VERSION, worker: cfg.worker_id as u32 }
+    };
+    proto::write_frame(&mut output, &announce)?;
+    output.flush().context("flushing handshake announcement")?;
     let manifest = Manifest::load_or_native(&crate::artifacts_dir())?;
     let flavour = manifest.resolve_flavour(&cfg.flavour)?;
     let mut session = Session::new(&manifest, &cfg.model, flavour)
@@ -1689,8 +2139,8 @@ pub fn run_worker(cfg: &WorkerConfig, mut input: impl Read, mut output: impl Wri
         cache: LossCache::new(cfg.capacity, 0),
         stats: WorkerStats { worker: cfg.worker_id as u32, ..Default::default() },
         version: NEVER,
-        me: cfg.worker_id as u64,
-        n: cfg.n_workers as u64,
+        shard_ix: cfg.worker_id as u64,
+        n_shards: if cfg.join { 0 } else { cfg.n_workers as u64 },
         ids: Vec::new(),
         vals: Vec::new(),
         own_ids: Vec::new(),
@@ -1701,8 +2151,10 @@ pub fn run_worker(cfg: &WorkerConfig, mut input: impl Read, mut output: impl Wri
     };
     let mut frames_handled = 0u64;
     let mut body = Vec::new();
+    let mut pools = FramePools::new();
     loop {
-        let Some((frame, _)) = proto::read_frame_into(&mut input, &mut body)? else {
+        let Some((frame, _)) = proto::read_frame_pooled(&mut input, &mut body, &mut pools)?
+        else {
             return Ok(()); // leader closed the pipe: clean shutdown
         };
         if cfg.fail_after.is_some_and(|k| frames_handled >= k) {
@@ -1711,7 +2163,9 @@ pub fn run_worker(cfg: &WorkerConfig, mut input: impl Read, mut output: impl Wri
             std::process::exit(17);
         }
         frames_handled += 1;
-        if let Flow::Done = wl.handle(frame, &mut output)? {
+        let flow = wl.handle(&frame, &mut output)?;
+        pools.recycle(frame);
+        if let Flow::Done = flow {
             return Ok(());
         }
     }
@@ -1733,6 +2187,7 @@ mod tests {
             max_age: 0,
             score_precision: "f32".into(),
             fail_after: None,
+            join: false,
         }
     }
 
@@ -1927,6 +2382,131 @@ mod tests {
         for (i, (&got, &want)) in losses.iter().zip(&expect).enumerate() {
             assert_eq!(got.to_bits(), want.to_bits(), "loss {i}");
         }
+    }
+
+    #[test]
+    fn worker_reshard_repositions_ownership_and_restores_transfers() {
+        let (_, session, _, capacity) = linreg_fixture();
+        let weights = session.snapshot().unwrap();
+        // worker 0 of 2 owns the even ids; after the fleet shrinks to
+        // [0] it owns everything, and the migrated odd rows arrive as a
+        // ShardTransfer with their original stamps
+        let cfg = worker_cfg(0, 2, capacity);
+        let script = [
+            Frame::ParamUpdate { version: 7, weights },
+            Frame::LossRecords {
+                seq: u64::MAX,
+                worker: 1,
+                stamp: 6,
+                ids: vec![0, 2],
+                losses: vec![0.25, 0.5],
+            },
+            Frame::Reshard { epoch: 1, members: vec![0] },
+            Frame::ShardTransfer {
+                epoch: 1,
+                worker: 0,
+                ids: vec![1, 3],
+                losses: vec![1.5, 2.5],
+                stamps: vec![4, 5],
+            },
+            Frame::CacheLookup { req: 2, now: 7, exact: false, ids: vec![0, 1, 2, 3, 4] },
+            Frame::Shutdown,
+        ];
+        let replies = run_script(&cfg, &script);
+        assert_eq!(replies.len(), 3, "Hello + CacheView + WorkerStats");
+        let Frame::CacheView { rows, .. } = &replies[1] else {
+            panic!("expected CacheView, got {}", replies[1].name());
+        };
+        // sole owner now: every requested id answers, migrated rows
+        // keep their original stamps, id 4 was never seen anywhere
+        assert_eq!(rows.len(), 5);
+        assert_eq!((rows[0].pos, rows[0].loss, rows[0].stamp), (0, 0.25, 6));
+        assert_eq!((rows[1].pos, rows[1].loss, rows[1].stamp), (1, 1.5, 4));
+        assert_eq!((rows[2].pos, rows[2].loss, rows[2].stamp), (2, 0.5, 6));
+        assert_eq!((rows[3].pos, rows[3].loss, rows[3].stamp), (3, 2.5, 5));
+        assert_eq!((rows[4].pos, rows[4].stamp), (4, NEVER));
+        let Frame::WorkerStats(s) = &replies[2] else { panic!("expected stats") };
+        assert_eq!(s.recorded_rows, 2, "routed rows count; ShardTransfer restores do not");
+    }
+
+    #[test]
+    fn worker_reshard_drops_rows_it_no_longer_owns() {
+        let (_, session, _, capacity) = linreg_fixture();
+        let weights = session.snapshot().unwrap();
+        // worker 0 of 1 owns everything; after the map grows to [0, 1]
+        // it keeps only the even ids
+        let cfg = worker_cfg(0, 1, capacity);
+        let script = [
+            Frame::ParamUpdate { version: 3, weights },
+            Frame::LossRecords {
+                seq: u64::MAX,
+                worker: 0,
+                stamp: 3,
+                ids: vec![0, 1, 2, 3],
+                losses: vec![0.1, 0.2, 0.3, 0.4],
+            },
+            Frame::Reshard { epoch: 1, members: vec![0, 1] },
+            Frame::CacheLookup { req: 5, now: 3, exact: true, ids: vec![0, 1, 2, 3] },
+            Frame::Shutdown,
+        ];
+        let replies = run_script(&cfg, &script);
+        let Frame::CacheView { rows, .. } = &replies[1] else {
+            panic!("expected CacheView, got {}", replies[1].name());
+        };
+        // only the still-owned (even) positions answer, and the handed-
+        // off odd rows were invalidated, not just filtered
+        assert_eq!(rows.len(), 2);
+        assert_eq!((rows[0].pos, rows[0].stamp), (0, 3));
+        assert_eq!((rows[1].pos, rows[1].stamp), (2, 3));
+    }
+
+    #[test]
+    fn joining_worker_announces_join_and_owns_nothing_until_reshard() {
+        let (_, session, _, capacity) = linreg_fixture();
+        let weights = session.snapshot().unwrap();
+        let mut cfg = worker_cfg(2, 3, capacity);
+        cfg.join = true;
+        let script = [
+            Frame::ParamUpdate { version: 1, weights },
+            // before its first Reshard the joiner owns nothing
+            Frame::CacheLookup { req: 1, now: 1, exact: false, ids: vec![0, 1, 2, 5] },
+            Frame::Reshard { epoch: 2, members: vec![0, 1, 2] },
+            Frame::ShardTransfer {
+                epoch: 2,
+                worker: 2,
+                ids: vec![2, 5],
+                losses: vec![0.5, 1.0],
+                stamps: vec![0, 1],
+            },
+            Frame::CacheLookup { req: 2, now: 1, exact: false, ids: vec![0, 1, 2, 5] },
+            Frame::Shutdown,
+        ];
+        let replies = run_script(&cfg, &script);
+        let Frame::Join { proto: version, worker } = &replies[0] else {
+            panic!("expected Join announcement, got {}", replies[0].name());
+        };
+        assert_eq!((*version, *worker), (proto::PROTO_VERSION, 2));
+        let Frame::CacheView { rows, .. } = &replies[1] else { panic!("expected CacheView") };
+        assert!(rows.is_empty(), "joiner owns nothing before its first Reshard");
+        let Frame::CacheView { rows, .. } = &replies[2] else { panic!("expected CacheView") };
+        // shard position 2 of 3: ids 2 and 5, restored with exact stamps
+        assert_eq!(rows.len(), 2);
+        assert_eq!((rows[0].pos, rows[0].loss, rows[0].stamp), (2, 0.5, 0));
+        assert_eq!((rows[1].pos, rows[1].loss, rows[1].stamp), (3, 1.0, 1));
+    }
+
+    #[test]
+    fn worker_rejects_reshard_map_that_omits_it() {
+        let (_, session, _, capacity) = linreg_fixture();
+        let weights = session.snapshot().unwrap();
+        let mut input = Vec::new();
+        input.extend_from_slice(&Frame::ParamUpdate { version: 1, weights }.encode());
+        input.extend_from_slice(&Frame::Reshard { epoch: 1, members: vec![1, 2] }.encode());
+        let mut out = Vec::new();
+        let err = run_worker(&worker_cfg(0, 3, capacity), &mut input.as_slice(), &mut out)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("omits this worker"), "err: {err}");
     }
 
     #[test]

@@ -21,8 +21,16 @@
 //!   and read by the selection stage (`coordinator::pipeline`), with
 //!   per-shard hit/miss/staleness row counters.
 //!
+//! The sharded variant optionally bounds its *live* entry count
+//! ([`ShardedLossCache::with_max_entries`]): when a long stream touches
+//! more distinct ids than the bound, the oldest-stamped entries are
+//! evicted first (deterministically — ties break on the smaller slot),
+//! so an async soak over millions of ids holds steady-state memory
+//! instead of growing without limit.
+//!
 //! [`Trainer`]: crate::coordinator::Trainer
 
+use std::collections::BTreeSet;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
@@ -175,6 +183,30 @@ impl LossCache {
             }
         }
     }
+
+    /// Write one entry at its exact slot with an explicit stamp — the
+    /// shard-migration path (`ShardTransfer` replay). A migrated row
+    /// must keep the stamp its previous owner recorded, or freshness
+    /// accounting would shift across a reshard. Out-of-range ids are
+    /// ignored, exactly like [`LossCache::record_batch`].
+    pub fn restore(&mut self, id: usize, loss: f32, stamp: u64) {
+        if id < self.stamp.len() {
+            self.losses[id] = loss;
+            self.stamp[id] = stamp;
+        }
+    }
+
+    /// Drop every recorded entry whose id fails the ownership
+    /// predicate — applied when a reshard shrinks this worker's shard,
+    /// so rows it no longer owns cannot leak into later `CacheView`
+    /// replies with stale contents.
+    pub fn retain_owned(&mut self, f: impl Fn(usize) -> bool) {
+        for id in 0..self.stamp.len() {
+            if self.stamp[id] != NEVER && !f(id) {
+                self.stamp[id] = NEVER;
+            }
+        }
+    }
 }
 
 /// Outcome of a non-counting [`ShardedLossCache::probe_batch`].
@@ -193,6 +225,11 @@ pub enum CacheProbe {
 struct ShardSlots {
     losses: Vec<f32>,
     stamp: Vec<u64>,
+    /// Live `(stamp, slot)` pairs, oldest first. Maintained only when
+    /// the cache is bounded (`max_entries > 0`): the unbounded path
+    /// stays index-free, and the bounded path evicts the oldest stamp
+    /// in `O(log live)` instead of scanning the whole dense shard.
+    live: BTreeSet<(u64, usize)>,
 }
 
 #[derive(Debug, Default)]
@@ -219,12 +256,32 @@ pub struct ShardedLossCache {
     stale: AtomicU64,
     capacity: usize,
     max_age: u64,
+    /// Bound on live entries across all shards (0 = unbounded). Each
+    /// shard keeps at most `max(1, max_entries / n_shards)` entries.
+    max_entries: u64,
+    evictions: AtomicU64,
 }
 
 impl ShardedLossCache {
     /// `capacity` = training-set size; `max_age` in steps (0 = ∞);
     /// `n_shards` lock stripes (clamped to `[1, max(capacity, 1)]`).
+    /// Unbounded — delegates to [`ShardedLossCache::with_max_entries`]
+    /// with `max_entries = 0`.
     pub fn new(capacity: usize, max_age: u64, n_shards: usize) -> Self {
+        Self::with_max_entries(capacity, max_age, n_shards, 0)
+    }
+
+    /// As [`ShardedLossCache::new`], plus a bound on live entries:
+    /// when `max_entries > 0`, each shard evicts its oldest-stamped
+    /// entries (ties break on the smaller slot, deterministically)
+    /// whenever a `record_batch` pushes it past its share,
+    /// `max(1, max_entries / n_shards)`.
+    pub fn with_max_entries(
+        capacity: usize,
+        max_age: u64,
+        n_shards: usize,
+        max_entries: u64,
+    ) -> Self {
         let n = n_shards.clamp(1, capacity.max(1));
         let shards = (0..n)
             .map(|k| {
@@ -233,6 +290,7 @@ impl ShardedLossCache {
                 Mutex::new(ShardSlots {
                     losses: vec![0.0; slots],
                     stamp: vec![NEVER; slots],
+                    live: BTreeSet::new(),
                 })
             })
             .collect();
@@ -244,7 +302,38 @@ impl ShardedLossCache {
             stale: AtomicU64::new(0),
             capacity,
             max_age,
+            max_entries,
+            evictions: AtomicU64::new(0),
         }
+    }
+
+    /// Per-shard live-entry budget (`usize::MAX` when unbounded).
+    fn shard_budget(&self) -> usize {
+        if self.max_entries == 0 {
+            usize::MAX
+        } else {
+            (self.max_entries / self.shards.len() as u64).max(1) as usize
+        }
+    }
+
+    /// Entries evicted by the `max_entries` bound since construction.
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// Live (recorded, non-evicted) entries across all shards. For the
+    /// unbounded cache this scans every slot — telemetry/test use only.
+    pub fn entries(&self) -> u64 {
+        let mut total = 0u64;
+        for shard in &self.shards {
+            let slots = shard.lock().expect("shard lock");
+            if self.max_entries > 0 {
+                total += slots.live.len() as u64;
+            } else {
+                total += slots.stamp.iter().filter(|&&s| s != NEVER).count() as u64;
+            }
+        }
+        total
     }
 
     pub fn capacity(&self) -> usize {
@@ -317,9 +406,13 @@ impl ShardedLossCache {
 
     /// Record freshly computed losses for a batch (concurrent-safe;
     /// last writer per id wins). Out-of-range ids and padding rows are
-    /// ignored, exactly like [`LossCache::record_batch`].
+    /// ignored, exactly like [`LossCache::record_batch`]. When the
+    /// cache is bounded, a shard pushed past its budget evicts its
+    /// oldest-stamped entries before the lock drops.
     pub fn record_batch(&self, ids: &[usize], valid: &[f32], losses: &[f32], now: u64) {
         let n = self.shards.len();
+        let bounded = self.max_entries > 0;
+        let budget = self.shard_budget();
         let (buckets, _) = self.bucket_rows(ids, valid);
         for (k, rows) in buckets.iter().enumerate() {
             if rows.is_empty() {
@@ -329,8 +422,24 @@ impl ShardedLossCache {
             for &row in rows {
                 let id = ids[row as usize];
                 let i = id / n;
+                if bounded {
+                    let old = slots.stamp[i];
+                    if old != NEVER {
+                        slots.live.remove(&(old, i));
+                    }
+                    slots.live.insert((now, i));
+                }
                 slots.losses[i] = losses[row as usize];
                 slots.stamp[i] = now;
+            }
+            if bounded && slots.live.len() > budget {
+                let mut evicted = 0u64;
+                while slots.live.len() > budget {
+                    let (_, i) = slots.live.pop_first().expect("non-empty live index");
+                    slots.stamp[i] = NEVER;
+                    evicted += 1;
+                }
+                self.evictions.fetch_add(evicted, Ordering::Relaxed);
             }
         }
     }
@@ -618,5 +727,101 @@ mod tests {
         let c = ShardedLossCache::new(0, 0, 4);
         assert_eq!(c.n_shards(), 1);
         assert!(c.lookup_batch(&[], &[], 0).is_some()); // vacuous hit
+    }
+
+    #[test]
+    fn restore_keeps_the_transferred_stamp() {
+        let mut c = LossCache::new(8, 0);
+        c.restore(3, 0.25, 7);
+        assert_eq!(c.entry(3), Some((0.25, 7)));
+        // unlike record_batch, the stamp is the migrated one, not "now"
+        c.record_batch(&[3], &[1.0], &[0.5], 9);
+        assert_eq!(c.entry(3), Some((0.5, 9)));
+        c.restore(99, 1.0, 0); // out of range: silently ignored
+        assert_eq!(c.entry(99), None);
+    }
+
+    #[test]
+    fn retain_owned_drops_exactly_the_disowned_ids() {
+        let mut c = LossCache::new(6, 0);
+        let ids = [0, 1, 2, 3, 4, 5];
+        let valid = [1.0; 6];
+        c.record_batch(&ids, &valid, &[0.0, 0.1, 0.2, 0.3, 0.4, 0.5], 2);
+        // shrink ownership to even ids (a 2-shard reshard, position 0)
+        c.retain_owned(|id| id % 2 == 0);
+        for id in 0..6 {
+            if id % 2 == 0 {
+                assert_eq!(c.entry(id), Some((id as f32 * 0.1, 2)), "id={id}");
+            } else {
+                assert_eq!(c.entry(id), None, "id={id}");
+            }
+        }
+    }
+
+    #[test]
+    fn bounded_cache_evicts_oldest_stamp_first() {
+        let c = ShardedLossCache::with_max_entries(16, 0, 1, 4);
+        for id in 0..8usize {
+            c.record_batch(&[id], &[1.0], &[id as f32], id as u64);
+        }
+        assert_eq!(c.entries(), 4);
+        assert_eq!(c.evictions(), 4);
+        // survivors are the newest stamps, oldest went first
+        for id in 0..4 {
+            assert_eq!(c.entry(id), None, "id={id}");
+        }
+        for id in 4..8 {
+            assert_eq!(c.entry(id), Some((id as f32, id as u64)), "id={id}");
+        }
+        // unbounded default keeps everything
+        let u = ShardedLossCache::new(16, 0, 1);
+        for id in 0..8usize {
+            u.record_batch(&[id], &[1.0], &[id as f32], id as u64);
+        }
+        assert_eq!(u.entries(), 8);
+        assert_eq!(u.evictions(), 0);
+    }
+
+    #[test]
+    fn re_recording_an_entry_does_not_double_count() {
+        let c = ShardedLossCache::with_max_entries(8, 0, 2, 8);
+        for stamp in 0..5u64 {
+            c.record_batch(&[1, 2], &[1.0, 1.0], &[0.1, 0.2], stamp);
+        }
+        assert_eq!(c.entries(), 2);
+        assert_eq!(c.evictions(), 0);
+        // the overwrite re-keyed the live index: the old stamp is gone,
+        // so a later eviction pass orders by the *latest* stamp
+        assert_eq!(c.entry(1), Some((0.1, 4)));
+    }
+
+    /// The eviction-bound property the async soak relies on: streaming
+    /// over ≥1M distinct ids, the live entry count never exceeds the
+    /// configured bound, for any shard count — and every recorded id is
+    /// either still live or accounted for in `evictions`.
+    #[test]
+    fn eviction_bound_holds_over_a_million_distinct_ids() {
+        const N: usize = 1 << 20; // 1,048,576 distinct ids
+        const CHUNK: usize = 256;
+        for (shards, bound) in [(1usize, 512u64), (4, 1024), (7, 333)] {
+            let c = ShardedLossCache::with_max_entries(N, 0, shards, bound);
+            let valid = [1.0f32; CHUNK];
+            let losses = [0.5f32; CHUNK];
+            let mut peak = 0u64;
+            for (stamp, start) in (0..N).step_by(CHUNK).enumerate() {
+                let ids: Vec<usize> = (start..start + CHUNK).collect();
+                c.record_batch(&ids, &valid, &losses, stamp as u64);
+                peak = peak.max(c.entries());
+            }
+            assert!(
+                peak <= bound,
+                "shards={shards} bound={bound}: peak live entries {peak}"
+            );
+            assert_eq!(
+                c.evictions() + c.entries(),
+                N as u64,
+                "shards={shards}: every id must be live or evicted"
+            );
+        }
     }
 }

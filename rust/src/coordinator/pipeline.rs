@@ -31,7 +31,11 @@
 //! to child processes speaking typed frames (`coordinator::proto`) —
 //! over stdio pipes, Unix-domain sockets or loopback TCP — with
 //! distributed loss-cache shard ownership (`id % n_workers`),
-//! shard-owner affinity routing and supervised worker restart.
+//! shard-owner affinity routing, supervised worker restart, and
+//! elastic membership: `pipeline_join` admits late workers mid-run and
+//! `pipeline_min_workers` lets a worker whose restart budget is spent
+//! be retired instead of aborting the run, each transition a reshard
+//! (see README "Socket fleet — elastic resharding").
 //!
 //! **Synchronous oracle mode** (`pipeline_sync` / `OBFTF_PIPELINE_SYNC`):
 //! tickets are issued one step at a time and the selection stage waits
@@ -205,6 +209,12 @@ impl PipelineTrainer {
         self.summary.frame_bytes
     }
 
+    /// Reshard events (mid-run joins + retirements) across the run
+    /// (0 for the thread fleet). Populated when a run completes.
+    pub fn reshards(&self) -> u64 {
+        self.summary.reshards
+    }
+
     /// Leader-side wire counters: frames sent, encode time and the
     /// per-frame-type byte split (all zero for the thread fleet).
     /// Populated when a run completes.
@@ -241,6 +251,7 @@ impl PipelineTrainer {
                     stall: STALL_TIMEOUT,
                     score_precision: self.options.score_precision,
                     param_precision: self.options.param_precision,
+                    max_entries: self.options.cache_max_entries,
                 })?));
             }
             TransportKind::Pipes => LinkMode::Pipes,
@@ -262,6 +273,8 @@ impl PipelineTrainer {
             link,
             affinity: self.options.affinity,
             restart_limit: self.options.restart_limit,
+            min_workers: self.options.min_workers,
+            max_entries: self.options.cache_max_entries,
         })?))
     }
 
@@ -342,6 +355,16 @@ impl PipelineTrainer {
         // cumulative counters (the initial publish lands in step 0)
         let mut prev_wire = WireStats::default();
         for s in 0..steps {
+            // mid-run admission: late workers join at the configured
+            // step, before this step's submissions, so new work routes
+            // under the post-reshard ownership map
+            if let Some((at, count)) = self.options.join {
+                if s == at {
+                    for _ in 0..count {
+                        fleet.admit_worker()?;
+                    }
+                }
+            }
             // top up the fleet's lookahead window
             let horizon = (s + depth).min(steps - 1);
             while next_issue <= horizon {
@@ -393,6 +416,9 @@ impl PipelineTrainer {
             let cache_stats = fleet.cache_stats();
             let workers_alive = fleet.workers_alive() as u32;
             let worker_restarts = fleet.restarts() as u32;
+            let reshards = fleet.reshards();
+            let n_workers = fleet.n_workers() as u32;
+            let evictions = fleet.evictions();
             let wire = fleet.wire_stats();
             let frames_per_step = wire.frames - prev_wire.frames;
             let publish_bytes = wire.param_bytes - prev_wire.param_bytes;
@@ -415,6 +441,8 @@ impl PipelineTrainer {
                 worker_restarts,
                 frames_per_step,
                 publish_bytes,
+                reshards,
+                n_workers,
             };
             self.recorder.record_step(rec);
             self.step += 1;
@@ -454,6 +482,9 @@ impl PipelineTrainer {
                 st.worker_scored = worker_scored;
                 st.frames_per_step = frames_per_step;
                 st.publish_bytes = publish_bytes;
+                st.reshards = reshards;
+                st.n_workers = n_workers as u64;
+                st.evictions = evictions;
             });
         }
         Ok(())

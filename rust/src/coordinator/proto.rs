@@ -32,7 +32,16 @@
 //! * [`Frame::CacheView`]    worker → leader: `(row, loss, stamp)` for
 //!   the owned rows of a lookup;
 //! * [`Frame::Shutdown`]     leader → worker: drain and exit;
-//! * [`Frame::WorkerStats`]  worker → leader: final work counters.
+//! * [`Frame::WorkerStats`]  worker → leader: final work counters;
+//! * [`Frame::Join`]         late worker → leader: the `Hello` of a
+//!   worker spawned into an already-running fleet (`obftf worker
+//!   --join`); the leader folds it in with a reshard;
+//! * [`Frame::Reshard`]      leader → worker: epoch-tagged ownership
+//!   map — the active worker slots in order. Receivers recompute their
+//!   shard index and invalidate rows they no longer own;
+//! * [`Frame::ShardTransfer`] leader → worker: one shard's journal
+//!   rows (`(id, loss, stamp)`, sorted by `(stamp, id)`) migrated to
+//!   their owner after a reshard or a supervised restart.
 
 use std::io::{Read, Write};
 
@@ -134,6 +143,35 @@ pub enum Frame {
     },
     Shutdown,
     WorkerStats(WorkerStats),
+    /// First frame of a worker spawned into a *running* fleet (`obftf
+    /// worker --join`): same contract as [`Frame::Hello`], but the
+    /// leader knows to admit the slot with a reshard instead of
+    /// expecting it in the spawn-time handshake.
+    Join {
+        proto: u32,
+        worker: u32,
+    },
+    /// Epoch-tagged ownership map, leader → every active worker after a
+    /// join/leave reshard (and to a respawned worker whose fleet's
+    /// membership is no longer the spawn-time identity map). `members`
+    /// lists the active worker slots in shard order: member `k` owns
+    /// ids with `id % members.len() == k`.
+    Reshard {
+        epoch: u64,
+        members: Vec<u64>,
+    },
+    /// One shard's rows migrated to their (new) owner: parallel
+    /// `(id, loss, stamp)` triples, sorted by `(stamp, id)` so replay
+    /// order is deterministic. Receivers overwrite exactly (stamps
+    /// included) and do **not** count these toward `recorded_rows` —
+    /// migration is bookkeeping, not new work.
+    ShardTransfer {
+        epoch: u64,
+        worker: u32,
+        ids: Vec<u64>,
+        losses: Vec<f32>,
+        stamps: Vec<u64>,
+    },
     /// Envelope coalescing several frames into one write/read, so the
     /// per-step routed `LossRecords` fan-out rides the selection-time
     /// `CacheLookup` in a single syscall per worker. One level deep
@@ -150,6 +188,9 @@ const TAG_SHUTDOWN: u8 = 6;
 const TAG_WORKER_STATS: u8 = 7;
 const TAG_HELLO: u8 = 8;
 const TAG_BATCH: u8 = 9;
+const TAG_JOIN: u8 = 10;
+const TAG_RESHARD: u8 = 11;
+const TAG_SHARD_TRANSFER: u8 = 12;
 
 impl Frame {
     /// Frame name for diagnostics ("worker 2 died after ScoreBatch").
@@ -163,6 +204,9 @@ impl Frame {
             Frame::CacheView { .. } => "CacheView",
             Frame::Shutdown => "Shutdown",
             Frame::WorkerStats(_) => "WorkerStats",
+            Frame::Join { .. } => "Join",
+            Frame::Reshard { .. } => "Reshard",
+            Frame::ShardTransfer { .. } => "ShardTransfer",
             Frame::Batch(_) => "Batch",
         }
     }
@@ -209,6 +253,17 @@ impl Frame {
                 put_u64(body, s.recorded_rows);
                 put_u64(body, s.lookups);
             }
+            Frame::Join { proto, worker } => {
+                body.push(TAG_JOIN);
+                put_u32(body, *proto);
+                put_u32(body, *worker);
+            }
+            Frame::Reshard { epoch, members } => {
+                put_reshard_body(body, *epoch, members);
+            }
+            Frame::ShardTransfer { epoch, worker, ids, losses, stamps } => {
+                put_shard_transfer_body(body, *epoch, *worker, ids, losses, stamps);
+            }
             Frame::Batch(members) => {
                 body.push(TAG_BATCH);
                 put_u64(body, members.len() as u64);
@@ -245,8 +300,19 @@ impl Frame {
     }
 
     /// Decode a frame body (the bytes after the length prefix). Rejects
-    /// unknown tags, truncation and trailing bytes.
+    /// unknown tags, truncation and trailing bytes. Payload vectors are
+    /// freshly allocated; the steady-state transports use
+    /// [`Frame::decode_pooled`] instead.
     pub fn decode(body: &[u8]) -> Result<Frame> {
+        Frame::decode_pooled(body, &mut FramePools::default())
+    }
+
+    /// [`Frame::decode`] drawing payload vectors (`ids`/`losses`/
+    /// `rows`/envelope member lists) from a reusable pool instead of
+    /// the allocator. Once the pool has warmed to the connection's
+    /// traffic shape, decoding a payload frame allocates nothing —
+    /// callers return vectors via [`FramePools::recycle`] when done.
+    pub fn decode_pooled(body: &[u8], pools: &mut FramePools) -> Result<Frame> {
         let mut r = Reader { b: body, pos: 0 };
         let tag = r.u8().context("frame tag")?;
         let frame = match tag {
@@ -260,8 +326,10 @@ impl Frame {
                 let seq = r.u64()?;
                 let worker = r.u32()?;
                 let stamp = r.u64()?;
-                let ids = r.u64s()?;
-                let losses = r.f32s()?;
+                let mut ids = pools.get_u64s();
+                r.u64s_into(&mut ids)?;
+                let mut losses = pools.get_f32s();
+                r.f32s_into(&mut losses)?;
                 if ids.len() != losses.len() {
                     bail!("LossRecords: {} ids vs {} losses", ids.len(), losses.len());
                 }
@@ -281,14 +349,16 @@ impl Frame {
                     1 => true,
                     other => bail!("CacheLookup: bad bool byte {other}"),
                 };
-                let ids = r.u64s()?;
+                let mut ids = pools.get_u64s();
+                r.u64s_into(&mut ids)?;
                 Frame::CacheLookup { req, now, exact, ids }
             }
             TAG_CACHE_VIEW => {
                 let req = r.u64()?;
                 let worker = r.u32()?;
                 let n = r.len_prefix(4 + 4 + 8)?;
-                let mut rows = Vec::with_capacity(n);
+                let mut rows = pools.get_views();
+                rows.reserve(n);
                 for _ in 0..n {
                     rows.push(ViewRow { pos: r.u32()?, loss: r.f32()?, stamp: r.u64()? });
                 }
@@ -302,16 +372,46 @@ impl Frame {
                 recorded_rows: r.u64()?,
                 lookups: r.u64()?,
             }),
+            TAG_JOIN => Frame::Join { proto: r.u32()?, worker: r.u32()? },
+            TAG_RESHARD => {
+                let epoch = r.u64()?;
+                let mut members = pools.get_u64s();
+                r.u64s_into(&mut members)?;
+                if members.is_empty() {
+                    bail!("Reshard: empty membership");
+                }
+                Frame::Reshard { epoch, members }
+            }
+            TAG_SHARD_TRANSFER => {
+                let epoch = r.u64()?;
+                let worker = r.u32()?;
+                let mut ids = pools.get_u64s();
+                r.u64s_into(&mut ids)?;
+                let mut losses = pools.get_f32s();
+                r.f32s_into(&mut losses)?;
+                let mut stamps = pools.get_u64s();
+                r.u64s_into(&mut stamps)?;
+                if ids.len() != losses.len() || ids.len() != stamps.len() {
+                    bail!(
+                        "ShardTransfer: {} ids vs {} losses vs {} stamps",
+                        ids.len(),
+                        losses.len(),
+                        stamps.len()
+                    );
+                }
+                Frame::ShardTransfer { epoch, worker, ids, losses, stamps }
+            }
             TAG_BATCH => {
                 // each member needs at least a 4-byte length + 1 tag byte
                 let n = r.len_prefix(5)?;
-                let mut members = Vec::with_capacity(n);
+                let mut members = pools.get_frames();
+                members.reserve(n);
                 for i in 0..n {
                     let mlen = r.u32()? as usize;
                     let mbody = r
                         .take(mlen)
                         .with_context(|| format!("batch member {i}/{n}"))?;
-                    let m = Frame::decode(mbody)
+                    let m = Frame::decode_pooled(mbody, pools)
                         .with_context(|| format!("batch member {i}/{n}"))?;
                     if matches!(m, Frame::Batch(_)) {
                         bail!("nested Batch envelope (member {i}/{n})");
@@ -324,6 +424,84 @@ impl Frame {
         };
         r.done()?;
         Ok(frame)
+    }
+}
+
+/// Reusable payload-vector pools for the decode side of the wire path.
+/// A decoded frame's `ids`/`losses`/`rows` vectors and envelope member
+/// lists are drawn from here ([`Frame::decode_pooled`]) and handed back
+/// via [`recycle`](FramePools::recycle) once the frame is handled, so
+/// the steady state allocates nothing per frame — closing the PR-8
+/// residual that pinned decode at one allocation per payload vector.
+#[derive(Default)]
+pub struct FramePools {
+    u64s: Vec<Vec<u64>>,
+    f32s: Vec<Vec<f32>>,
+    views: Vec<Vec<ViewRow>>,
+    frames: Vec<Vec<Frame>>,
+}
+
+impl FramePools {
+    pub fn new() -> FramePools {
+        FramePools::default()
+    }
+
+    fn get_u64s(&mut self) -> Vec<u64> {
+        self.u64s.pop().unwrap_or_default()
+    }
+
+    fn get_f32s(&mut self) -> Vec<f32> {
+        self.f32s.pop().unwrap_or_default()
+    }
+
+    fn get_views(&mut self) -> Vec<ViewRow> {
+        self.views.pop().unwrap_or_default()
+    }
+
+    fn get_frames(&mut self) -> Vec<Frame> {
+        self.frames.pop().unwrap_or_default()
+    }
+
+    pub fn recycle_u64s(&mut self, mut v: Vec<u64>) {
+        v.clear();
+        self.u64s.push(v);
+    }
+
+    pub fn recycle_f32s(&mut self, mut v: Vec<f32>) {
+        v.clear();
+        self.f32s.push(v);
+    }
+
+    pub fn recycle_views(&mut self, mut v: Vec<ViewRow>) {
+        v.clear();
+        self.views.push(v);
+    }
+
+    /// Return every payload vector a handled frame owns to the pools
+    /// (envelope members are recursed). Frames without pooled payloads
+    /// are simply dropped.
+    pub fn recycle(&mut self, frame: Frame) {
+        match frame {
+            Frame::LossRecords { ids, losses, .. } => {
+                self.recycle_u64s(ids);
+                self.recycle_f32s(losses);
+            }
+            Frame::CacheLookup { ids, .. } => self.recycle_u64s(ids),
+            Frame::CacheView { rows, .. } => self.recycle_views(rows),
+            Frame::Reshard { members, .. } => self.recycle_u64s(members),
+            Frame::ShardTransfer { ids, losses, stamps, .. } => {
+                self.recycle_u64s(ids);
+                self.recycle_f32s(losses);
+                self.recycle_u64s(stamps);
+            }
+            Frame::Batch(mut members) => {
+                for m in members.drain(..) {
+                    self.recycle(m);
+                }
+                self.frames.push(members);
+            }
+            _ => {}
+        }
     }
 }
 
@@ -377,6 +555,31 @@ pub fn encode_cache_view_into(req: u64, worker: u32, rows: &[ViewRow], out: &mut
 pub fn encode_cache_lookup_into(req: u64, now: u64, exact: bool, ids: &[u64], out: &mut Vec<u8>) {
     begin_frame(out);
     put_cache_lookup_body(out, req, now, exact, ids);
+    patch_frame_len(out);
+}
+
+/// Encode a complete `Reshard` frame from a borrowed membership list
+/// (the leader's ownership-map broadcast after a join/leave).
+pub fn encode_reshard_into(epoch: u64, members: &[u64], out: &mut Vec<u8>) {
+    begin_frame(out);
+    put_reshard_body(out, epoch, members);
+    patch_frame_len(out);
+}
+
+/// Encode a complete `ShardTransfer` frame from borrowed parallel
+/// `(id, loss, stamp)` columns (the leader's shard migration / re-warm
+/// path; callers pre-sort by `(stamp, id)`).
+pub fn encode_shard_transfer_into(
+    epoch: u64,
+    worker: u32,
+    ids: &[u64],
+    losses: &[f32],
+    stamps: &[u64],
+    out: &mut Vec<u8>,
+) {
+    debug_assert!(ids.len() == losses.len() && ids.len() == stamps.len());
+    begin_frame(out);
+    put_shard_transfer_body(out, epoch, worker, ids, losses, stamps);
     patch_frame_len(out);
 }
 
@@ -498,6 +701,39 @@ pub fn write_frame(w: &mut impl Write, frame: &Frame) -> Result<usize> {
 /// included). Once `body` has warmed to the connection's largest frame,
 /// the framing layer itself allocates nothing per frame.
 pub fn read_frame_into(r: &mut impl Read, body: &mut Vec<u8>) -> Result<Option<(Frame, usize)>> {
+    match read_body(r, body)? {
+        None => Ok(None),
+        Some(len) => Ok(Some((Frame::decode(body)?, 4 + len))),
+    }
+}
+
+/// [`read_frame_into`] decoding payload vectors out of a reusable
+/// [`FramePools`] — the fully pooled steady state: warm framing buffer
+/// + warm pools = zero heap allocations per payload frame.
+pub fn read_frame_pooled(
+    r: &mut impl Read,
+    body: &mut Vec<u8>,
+    pools: &mut FramePools,
+) -> Result<Option<(Frame, usize)>> {
+    match read_body(r, body)? {
+        None => Ok(None),
+        Some(len) => Ok(Some((Frame::decode_pooled(body, pools)?, 4 + len))),
+    }
+}
+
+/// The framing layer alone: read one length-prefixed body into the
+/// reused buffer, returning its length (`None` on clean EOF) without
+/// decoding. Public for callers that must separate the (blocking) body
+/// read from the decode — e.g. a fleet reader thread that decodes under
+/// a shared [`FramePools`] lock but must not hold that lock across a
+/// blocking socket read.
+pub fn read_frame_body(r: &mut impl Read, body: &mut Vec<u8>) -> Result<Option<usize>> {
+    read_body(r, body)
+}
+
+/// The shared framing layer: read one length-prefixed body into the
+/// reused buffer, returning its length (`None` on clean EOF).
+fn read_body(r: &mut impl Read, body: &mut Vec<u8>) -> Result<Option<usize>> {
     let mut len_buf = [0u8; 4];
     // distinguish EOF-at-boundary from EOF-mid-prefix by hand
     let mut got = 0usize;
@@ -528,8 +764,7 @@ pub fn read_frame_into(r: &mut impl Read, body: &mut Vec<u8>) -> Result<Option<(
     if body.len() != len {
         bail!("frame body truncated (wanted {len} bytes, got {})", body.len());
     }
-    let frame = Frame::decode(body)?;
-    Ok(Some((frame, 4 + len)))
+    Ok(Some(len))
 }
 
 /// [`read_frame_into`] with a throwaway body buffer (tests, handshake).
@@ -587,6 +822,28 @@ fn put_cache_lookup_body(buf: &mut Vec<u8>, req: u64, now: u64, exact: bool, ids
     put_u64(buf, now);
     buf.push(u8::from(exact));
     put_u64s(buf, ids);
+}
+
+fn put_reshard_body(buf: &mut Vec<u8>, epoch: u64, members: &[u64]) {
+    buf.push(TAG_RESHARD);
+    put_u64(buf, epoch);
+    put_u64s(buf, members);
+}
+
+fn put_shard_transfer_body(
+    buf: &mut Vec<u8>,
+    epoch: u64,
+    worker: u32,
+    ids: &[u64],
+    losses: &[f32],
+    stamps: &[u64],
+) {
+    buf.push(TAG_SHARD_TRANSFER);
+    put_u64(buf, epoch);
+    put_u32(buf, worker);
+    put_u64s(buf, ids);
+    put_f32s(buf, losses);
+    put_u64s(buf, stamps);
 }
 
 fn put_cache_view_body(buf: &mut Vec<u8>, req: u64, worker: u32, rows: &[ViewRow]) {
@@ -689,21 +946,35 @@ impl<'a> Reader<'a> {
     }
 
     fn u64s(&mut self) -> Result<Vec<u64>> {
-        let n = self.len_prefix(8)?;
-        let mut out = Vec::with_capacity(n);
-        for _ in 0..n {
-            out.push(self.u64()?);
-        }
+        let mut out = Vec::new();
+        self.u64s_into(&mut out)?;
         Ok(out)
     }
 
     fn f32s(&mut self) -> Result<Vec<f32>> {
+        let mut out = Vec::new();
+        self.f32s_into(&mut out)?;
+        Ok(out)
+    }
+
+    /// Length-prefixed u64 run into a caller-owned (pooled) vector.
+    fn u64s_into(&mut self, out: &mut Vec<u64>) -> Result<()> {
+        let n = self.len_prefix(8)?;
+        out.reserve(n);
+        for _ in 0..n {
+            out.push(self.u64()?);
+        }
+        Ok(())
+    }
+
+    /// Length-prefixed f32 run into a caller-owned (pooled) vector.
+    fn f32s_into(&mut self, out: &mut Vec<f32>) -> Result<()> {
         let n = self.len_prefix(4)?;
-        let mut out = Vec::with_capacity(n);
+        out.reserve(n);
         for _ in 0..n {
             out.push(self.f32()?);
         }
-        Ok(out)
+        Ok(())
     }
 
     fn done(&self) -> Result<()> {
@@ -970,6 +1241,128 @@ mod tests {
             let mut cur = Cursor::new(bytes[..cut].to_vec());
             assert!(read_frame(&mut cur).is_err(), "prefix {cut} must error");
         }
+    }
+
+    #[test]
+    fn reshard_frames_roundtrip() {
+        let got = roundtrip(&Frame::Join { proto: PROTO_VERSION, worker: 5 });
+        let Frame::Join { proto, worker } = got else { panic!("wrong frame") };
+        assert_eq!((proto, worker), (PROTO_VERSION, 5));
+
+        let got = roundtrip(&Frame::Reshard { epoch: 3, members: vec![0, 2, 3] });
+        let Frame::Reshard { epoch, members } = got else { panic!("wrong frame") };
+        assert_eq!((epoch, members), (3, vec![0, 2, 3]));
+
+        let got = roundtrip(&Frame::ShardTransfer {
+            epoch: 3,
+            worker: 2,
+            ids: vec![4, 1, 7],
+            losses: vec![0.5, f32::NAN, -0.0],
+            stamps: vec![0, 2, u64::MAX],
+        });
+        let Frame::ShardTransfer { worker, ids, losses, stamps, .. } = got else {
+            panic!("wrong frame")
+        };
+        assert_eq!(worker, 2);
+        assert_eq!(ids, vec![4, 1, 7]);
+        assert!(losses[1].is_nan());
+        assert_eq!(losses[2].to_bits(), (-0.0f32).to_bits());
+        assert_eq!(stamps[2], u64::MAX);
+
+        // the borrowed encoders agree with Frame::encode byte for byte
+        let mut buf = Vec::new();
+        encode_reshard_into(9, &[1, 4], &mut buf);
+        assert_eq!(buf, Frame::Reshard { epoch: 9, members: vec![1, 4] }.encode());
+        encode_shard_transfer_into(9, 1, &[3], &[0.25], &[7], &mut buf);
+        let want = Frame::ShardTransfer {
+            epoch: 9,
+            worker: 1,
+            ids: vec![3],
+            losses: vec![0.25],
+            stamps: vec![7],
+        }
+        .encode();
+        assert_eq!(buf, want);
+    }
+
+    #[test]
+    fn reshard_frames_rejections() {
+        // mismatched ShardTransfer column lengths
+        let f = Frame::ShardTransfer {
+            epoch: 0,
+            worker: 0,
+            ids: vec![1, 2],
+            losses: vec![0.5, 0.5],
+            stamps: vec![3],
+        };
+        let enc = f.encode();
+        assert!(Frame::decode(&enc[4..]).is_err(), "stamp count mismatch must reject");
+        // an empty membership map is meaningless
+        let enc = Frame::Reshard { epoch: 1, members: vec![] }.encode();
+        assert!(Frame::decode(&enc[4..]).is_err(), "empty Reshard must reject");
+        // strict prefixes must not decode
+        let bytes = Frame::ShardTransfer {
+            epoch: 2,
+            worker: 1,
+            ids: vec![5],
+            losses: vec![1.0],
+            stamps: vec![2],
+        }
+        .encode();
+        for cut in 1..bytes.len() {
+            let mut cur = Cursor::new(bytes[..cut].to_vec());
+            assert!(read_frame(&mut cur).is_err(), "prefix {cut} must error");
+        }
+    }
+
+    #[test]
+    fn pooled_decode_matches_plain_and_reuses_vectors() {
+        let frames = [
+            Frame::LossRecords {
+                seq: 1,
+                worker: 0,
+                stamp: 2,
+                ids: (0..16).collect(),
+                losses: (0..16).map(|i| i as f32).collect(),
+            },
+            Frame::CacheLookup { req: 3, now: 4, exact: true, ids: vec![NO_ID, 7] },
+            Frame::CacheView {
+                req: 3,
+                worker: 1,
+                rows: vec![ViewRow { pos: 0, loss: 0.5, stamp: 1 }],
+            },
+            Frame::Batch(vec![Frame::CacheLookup {
+                req: 5,
+                now: 6,
+                exact: false,
+                ids: vec![9],
+            }]),
+            Frame::ShardTransfer {
+                epoch: 1,
+                worker: 0,
+                ids: vec![2, 4],
+                losses: vec![0.5, 1.5],
+                stamps: vec![0, 1],
+            },
+        ];
+        let mut pools = FramePools::new();
+        for f in &frames {
+            let enc = f.encode();
+            // pooled and plain decodes re-encode identically
+            let pooled = Frame::decode_pooled(&enc[4..], &mut pools).unwrap();
+            assert_eq!(pooled.encode(), enc, "{} pooled decode drifts", f.name());
+            pools.recycle(pooled);
+            // a second pooled decode reuses the recycled vectors: ids
+            // capacity survives the round trip
+            let again = Frame::decode_pooled(&enc[4..], &mut pools).unwrap();
+            assert_eq!(again.encode(), enc);
+            pools.recycle(again);
+        }
+        // the pool actually held the vectors between decodes
+        assert!(!pools.u64s.is_empty());
+        assert!(!pools.f32s.is_empty());
+        assert!(!pools.views.is_empty());
+        assert!(!pools.frames.is_empty());
     }
 
     #[test]

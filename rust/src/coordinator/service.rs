@@ -49,6 +49,15 @@ pub struct Status {
     /// `ParamUpdate` bytes broadcast in the latest step (0 without a
     /// proc fleet; halved under `param_precision = bf16`).
     pub publish_bytes: u64,
+    /// Reshard events so far (mid-run worker joins + retirements; 0
+    /// without an elastic proc fleet).
+    pub reshards: u64,
+    /// Fleet members under the current ownership map (0 without a
+    /// fleet; diverges from `workers_alive` only mid-transition).
+    pub n_workers: u64,
+    /// Entries evicted by the `cache_max_entries` bound (loss cache +
+    /// routed-row journal; 0 when unbounded).
+    pub evictions: u64,
     pub done: bool,
 }
 
@@ -76,6 +85,9 @@ impl Status {
             )
             .set("frames_per_step", Json::Num(self.frames_per_step as f64))
             .set("publish_bytes", Json::Num(self.publish_bytes as f64))
+            .set("reshards", Json::Num(self.reshards as f64))
+            .set("n_workers", Json::Num(self.n_workers as f64))
+            .set("evictions", Json::Num(self.evictions as f64))
             .set("done", Json::Bool(self.done));
         j
     }
@@ -114,6 +126,9 @@ impl Status {
                 .collect::<Result<Vec<u64>>>()?,
             frames_per_step: j.need("frames_per_step")?.as_f64()? as u64,
             publish_bytes: j.need("publish_bytes")?.as_f64()? as u64,
+            reshards: j.need("reshards")?.as_f64()? as u64,
+            n_workers: j.need("n_workers")?.as_f64()? as u64,
+            evictions: j.need("evictions")?.as_f64()? as u64,
             done: j.need("done")?.as_bool()?,
         })
     }
@@ -227,6 +242,9 @@ mod tests {
             worker_scored: vec![12, 9, 21],
             frames_per_step: 6,
             publish_bytes: 2048,
+            reshards: 2,
+            n_workers: 3,
+            evictions: 128,
             done: true,
         };
         assert!((s.cache_hit_rate() - 0.75).abs() < 1e-12);
@@ -244,6 +262,9 @@ mod tests {
         assert_eq!(got.worker_scored, vec![12, 9, 21]);
         assert_eq!(got.frames_per_step, 6);
         assert_eq!(got.publish_bytes, 2048);
+        assert_eq!(got.reshards, 2);
+        assert_eq!(got.n_workers, 3);
+        assert_eq!(got.evictions, 128);
         assert!(got.done);
     }
 

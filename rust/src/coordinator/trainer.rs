@@ -260,6 +260,8 @@ impl Trainer {
             worker_restarts: 0,
             frames_per_step: 0,
             publish_bytes: 0,
+            reshards: 0,
+            n_workers: 0,
         };
         self.recorder.record_step(rec);
         self.step += 1;

@@ -74,6 +74,18 @@ fn with_train_flags(p: ArgParser) -> ArgParser {
             "restart-limit",
             "supervised worker restarts allowed before a death is fatal (0 = fail-fast)",
         )
+        .flag(
+            "pipeline-min-workers",
+            "fleet floor: retire (reshard) instead of abort while above it (default 1)",
+        )
+        .flag(
+            "pipeline-join",
+            "admit late fleet workers mid-run: \"step\" or \"step:count\"",
+        )
+        .flag(
+            "cache-max-entries",
+            "bound live loss-cache + journal entries, oldest-stamp eviction (0 = unbounded)",
+        )
         .flag("proc-timeout-ms", "fleet spawn/connect/handshake/await bound (0 = 30 s)")
         .flag(
             "score-precision",
@@ -192,6 +204,18 @@ fn build_config(p: &Parsed) -> Result<TrainConfig> {
     if let Some(v) = p.get_parse::<u32>("restart-limit")? {
         cfg.pipeline_restart_limit = v;
         cfg.overrides.restart_limit = Some(v);
+    }
+    if let Some(v) = p.get_parse::<usize>("pipeline-min-workers")? {
+        cfg.pipeline_min_workers = v;
+        cfg.overrides.min_workers = Some(v);
+    }
+    if let Some(v) = p.get("pipeline-join") {
+        cfg.pipeline_join = v.to_string();
+        cfg.overrides.join = Some(v.to_string());
+    }
+    if let Some(v) = p.get_parse::<u64>("cache-max-entries")? {
+        cfg.cache_max_entries = v;
+        cfg.overrides.cache_max_entries = Some(v);
     }
     if let Some(v) = p.get_parse::<u64>("proc-timeout-ms")? {
         cfg.proc_timeout_ms = v;
@@ -392,6 +416,7 @@ fn cmd_worker(args: &[String]) -> Result<()> {
         .flag("max-age", "loss max age in steps (diagnostic; freshness is leader-side)")
         .flag("listen", "serve one leader over a socket: unix:PATH | tcp:HOST:PORT")
         .flag("score-precision", "scoring-forward precision: f32 | bf16 (default f32)")
+        .bool_flag("join", "late joiner: announce Join and own nothing until resharded")
         .flag("fail-after", "TEST ONLY: crash after N frames (kill-a-worker regression)");
     let p = parser.parse(args)?;
     let need = |name: &str| -> Result<usize> {
@@ -406,6 +431,7 @@ fn cmd_worker(args: &[String]) -> Result<()> {
         capacity: need("capacity")?,
         max_age: p.get_parse::<u64>("max-age")?.unwrap_or(0),
         score_precision: p.get("score-precision").unwrap_or("f32").to_string(),
+        join: p.get_bool("join"),
         fail_after: p.get_parse::<u64>("fail-after")?,
     };
     if let Some(listen) = p.get("listen") {

@@ -41,6 +41,12 @@ pub struct StepRecord {
     /// `ParamUpdate` bytes broadcast this step — the number the bf16
     /// param-precision knob halves (0 without a proc fleet).
     pub publish_bytes: u64,
+    /// Cumulative reshard events (mid-run worker joins + retirements;
+    /// 0 without an elastic proc fleet).
+    pub reshards: u64,
+    /// Fleet members at record time under the current ownership map
+    /// (0 when the driver has no fleet).
+    pub n_workers: u32,
 }
 
 /// One evaluation's record.
@@ -110,12 +116,12 @@ impl Recorder {
             f,
             "step,epoch,sel_loss,batch_loss,n_forward,n_selected,fwd_us,sel_us,bwd_us,\
              cache_hits,cache_misses,cache_stale,sel_hash,workers_alive,worker_restarts,\
-             frames_per_step,publish_bytes"
+             frames_per_step,publish_bytes,reshards,n_workers"
         )?;
         for s in &self.steps {
             writeln!(
                 f,
-                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
                 s.step,
                 s.epoch,
                 s.sel_loss,
@@ -132,7 +138,9 @@ impl Recorder {
                 s.workers_alive,
                 s.worker_restarts,
                 s.frames_per_step,
-                s.publish_bytes
+                s.publish_bytes,
+                s.reshards,
+                s.n_workers
             )?;
         }
         Ok(())
@@ -185,6 +193,8 @@ mod tests {
             worker_restarts: 0,
             frames_per_step: 6,
             publish_bytes: 512,
+            reshards: 1,
+            n_workers: 4,
         }
     }
 
@@ -210,11 +220,11 @@ mod tests {
         r.write_evals_csv(&ep).unwrap();
         let steps = std::fs::read_to_string(&sp).unwrap();
         assert!(steps.lines().count() == 2);
-        assert!(steps.contains("0,0,1,2,128,32,100,10,200,1,2,0,42,4,0,6,512"));
+        assert!(steps.contains("0,0,1,2,128,32,100,10,200,1,2,0,42,4,0,6,512,1,4"));
         assert!(steps.starts_with(
             "step,epoch,sel_loss,batch_loss,n_forward,n_selected,fwd_us,sel_us,bwd_us,\
              cache_hits,cache_misses,cache_stale,sel_hash,workers_alive,worker_restarts,\
-             frames_per_step,publish_bytes"
+             frames_per_step,publish_bytes,reshards,n_workers"
         ));
         let evals = std::fs::read_to_string(&ep).unwrap();
         assert!(evals.contains("0,0,0.5,0.9"));

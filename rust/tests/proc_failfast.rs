@@ -37,6 +37,10 @@ fn spec(workers: usize, capacity: usize, fail_after: Vec<Option<u64>>) -> FleetS
         link: LinkMode::Pipes,
         affinity: true,
         restart_limit: 0,
+        // floor == fleet size: retirement can never kick in, so these
+        // tests keep pinning the strict fail-fast surface
+        min_workers: workers,
+        max_entries: 0,
     }
 }
 
@@ -144,10 +148,12 @@ fn pipeline_run_surfaces_worker_death() {
     // tests here drive FleetTransport directly with explicit fail_after,
     // so the variable cannot leak anywhere it matters
     std::env::set_var("OBFTF_PROC_FAIL_AFTER", "1:2");
-    // zero the restart budget: the default elastic policy would respawn
-    // the crashed worker and heal the run, but this test pins the
-    // fail-fast surface of the trainer
+    // zero the restart budget and pin the worker floor to the fleet
+    // size: the default elastic policy would respawn (or, with a spent
+    // budget and headroom above the floor, retire) the crashed worker
+    // and heal the run, but this test pins the fail-fast surface
     std::env::set_var("OBFTF_PIPELINE_RESTART_LIMIT", "0");
+    std::env::set_var("OBFTF_PIPELINE_MIN_WORKERS", "2");
     let cfg = TrainConfig {
         model: "linreg".to_string(),
         method: Method::MinK,
@@ -169,6 +175,7 @@ fn pipeline_run_surfaces_worker_death() {
     let msg = format!("{err:#}");
     std::env::remove_var("OBFTF_PROC_FAIL_AFTER");
     std::env::remove_var("OBFTF_PIPELINE_RESTART_LIMIT");
+    std::env::remove_var("OBFTF_PIPELINE_MIN_WORKERS");
     assert!(msg.contains("worker 1"), "run error must name the worker: {msg}");
 }
 

@@ -1,0 +1,444 @@
+//! Elastic join/leave resharding pinned against the serial oracle.
+//!
+//! The fleet's worker *count* is dynamic: `pipeline_join` admits late
+//! workers mid-run (Join handshake → quiesce → journal re-key →
+//! epoch-tagged Reshard broadcast → ShardTransfer migration), and a
+//! worker whose restart budget is spent is *retired* instead of
+//! aborting while the fleet stays above `pipeline_min_workers`. Every
+//! transition recomputes `id % n_workers` ownership, so the invariants
+//! pinned here are the strongest the house style has:
+//!
+//! * sync mode stays **bit-identical** to the serial streaming trainer
+//!   across a mid-run join AND a mid-run permanent leave — selection
+//!   hashes, per-step losses, final weights, eval trajectory;
+//! * the async staleness bound and requeue accounting survive a
+//!   reshard;
+//! * at the transport level, the journal re-key + shard migration
+//!   preserve every routed row exactly (a propcheck property: after a
+//!   join, the same lookup answers bit-identically with **zero**
+//!   re-scoring), and the bounded journal evicts instead of growing.
+//!
+//! Env-coupled tests (worker-bin override, `--fail-after` injection,
+//! restart-budget knobs travel by env into the production spawn path)
+//! serialize on a file-local lock: env vars are process-global and the
+//! harness runs tests on parallel threads.
+
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+use obftf::config::TrainConfig;
+use obftf::coordinator::{
+    FleetSpec, FleetTransport, LinkMode, PipelineTrainer, StreamingTrainer, Transport,
+};
+use obftf::data::dataset::{Batch, InMemoryDataset};
+use obftf::data::{Rng, Targets, TensorData};
+use obftf::runtime::{Flavour, Manifest, ScorePrecision, Session};
+use obftf::sampling::Method;
+use obftf::testkit::propcheck;
+
+/// Serializes every test that reads or writes process-global env
+/// (`OBFTF_PROC_FAIL_AFTER`, restart/floor knobs): the pipeline spawn
+/// path consults them, so a concurrent test's injection must never
+/// leak into another's fleet.
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+fn env_guard() -> MutexGuard<'static, ()> {
+    ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn manifest() -> Manifest {
+    Manifest::load_or_native(&obftf::artifacts_dir()).expect("manifest loads")
+}
+
+fn use_cli_worker_bin() {
+    std::env::set_var("OBFTF_WORKER_BIN", env!("CARGO_BIN_EXE_obftf"));
+}
+
+fn cfg(steps: usize) -> TrainConfig {
+    TrainConfig {
+        model: "mlp".to_string(),
+        method: Method::Obftf,
+        sampling_ratio: 0.25,
+        epochs: 0,
+        stream_steps: steps,
+        lr: 0.05,
+        n_train: Some(512),
+        n_test: Some(256),
+        seed: 31,
+        eval_every: 3,
+        prefetch_depth: 3,
+        ..Default::default()
+    }
+}
+
+fn spec(workers: usize, capacity: usize, fail_after: Vec<Option<u64>>) -> FleetSpec {
+    FleetSpec {
+        model: "linreg".into(),
+        flavour: Flavour::Native,
+        workers,
+        capacity,
+        max_age: 0,
+        sync: true,
+        score_precision: ScorePrecision::F32,
+        param_precision: ScorePrecision::F32,
+        worker_bin: Some(env!("CARGO_BIN_EXE_obftf").into()),
+        timeout: Duration::from_secs(60),
+        fail_after,
+        link: LinkMode::Pipes,
+        affinity: true,
+        restart_limit: 0,
+        min_workers: 1,
+        max_entries: 0,
+    }
+}
+
+/// A linreg dataset over `capacity` synthetic rows plus a batch
+/// gathering exactly `ids` (padded to the manifest batch size).
+fn linreg_fixture(capacity: usize, ids: &[usize]) -> (Session, Batch) {
+    let manifest = manifest();
+    let mut rng = Rng::seed_from(61);
+    let xs: Vec<f32> = (0..capacity).map(|_| rng.normal() as f32).collect();
+    let ys: Vec<f32> = xs.iter().map(|x| 2.0 * x + 0.5).collect();
+    let ds = InMemoryDataset::new(vec![1], xs, Targets::F32(ys)).unwrap();
+    let batch = ds.gather_batch(ids, manifest.batch).unwrap();
+    let mut session = Session::new(&manifest, "linreg", Flavour::Native).unwrap();
+    session.init(5).unwrap();
+    (session, batch)
+}
+
+fn assert_params_bit_identical(a: &[obftf::data::HostTensor], b: &[obftf::data::HostTensor]) {
+    assert_eq!(a.len(), b.len());
+    for (i, (ta, tb)) in a.iter().zip(b).enumerate() {
+        match (&ta.data, &tb.data) {
+            (TensorData::F32(va), TensorData::F32(vb)) => {
+                for (j, (x, y)) in va.iter().zip(vb).enumerate() {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "param {i}[{j}]: serial {x} vs pipeline {y}"
+                    );
+                }
+            }
+            _ => panic!("params must be f32"),
+        }
+    }
+}
+
+/// Run the serial oracle for `base`, then the sync Unix-socket
+/// pipeline from `pc`, and assert the full bit-for-bit contract plus
+/// the expected membership trajectory (`n_from` workers at the first
+/// recorded step, `n_to` at the last, exactly `reshards` transitions).
+fn assert_elastic_run_bit_identical(
+    base: &TrainConfig,
+    pc: &TrainConfig,
+    n_from: u32,
+    n_to: u32,
+    reshards: u64,
+) {
+    let m = manifest();
+    let mut serial = StreamingTrainer::with_manifest(base, &m).unwrap();
+    let sreport = serial.run().unwrap();
+    let sparams = serial.trainer().session().params_to_host().unwrap();
+
+    let mut p = PipelineTrainer::with_manifest(pc, &m).unwrap();
+    let preport = p.run().expect("elastic transition must heal, not fail the run");
+    assert_eq!(preport.steps, sreport.steps);
+
+    let srecs = &serial.trainer().recorder.steps;
+    let precs = &p.recorder.steps;
+    assert_eq!(srecs.len(), precs.len());
+    for (a, b) in srecs.iter().zip(precs.iter()) {
+        assert_eq!(a.sel_hash, b.sel_hash, "step {}: selected sets differ", a.step);
+        assert_eq!(
+            a.sel_loss.to_bits(),
+            b.sel_loss.to_bits(),
+            "step {} sel_loss diverged across the reshard",
+            a.step
+        );
+        assert_eq!(a.batch_loss.to_bits(), b.batch_loss.to_bits(), "step {} batch_loss", a.step);
+    }
+
+    // membership telemetry: the trajectory moved n_from → n_to in
+    // exactly the expected number of reshard transitions
+    let first = precs.first().expect("steps recorded");
+    let last = precs.last().expect("steps recorded");
+    assert_eq!(first.n_workers, n_from, "fleet size at the first step");
+    assert_eq!(last.n_workers, n_to, "fleet size at the last step");
+    assert_eq!(last.reshards, reshards, "reshard transitions across the run");
+    assert_eq!(p.reshards(), reshards);
+    for w in precs.windows(2) {
+        assert!(w[0].reshards <= w[1].reshards, "reshard counter is cumulative");
+    }
+
+    let pparams = p.session().params_to_host().unwrap();
+    assert_params_bit_identical(&sparams, &pparams);
+
+    assert_eq!(sreport.evals.len(), preport.evals.len());
+    for (a, b) in sreport.evals.iter().zip(&preport.evals) {
+        assert_eq!(a.step, b.step);
+        assert!(
+            (a.loss - b.loss).abs() <= 1e-12 * a.loss.abs().max(1.0),
+            "eval at step {}: {} vs {}",
+            a.step,
+            a.loss,
+            b.loss
+        );
+    }
+    assert_eq!(preport.forward_examples, sreport.forward_examples);
+    assert_eq!(preport.backward_examples, sreport.backward_examples);
+}
+
+/// Tentpole pin #1: a worker **joins** a sync Unix-socket fleet
+/// mid-run (`pipeline_join = "5"`) and the run stays bit-identical to
+/// serial — the join only re-routes work, never changes results.
+#[test]
+fn sync_unix_pipeline_with_midrun_join_is_bit_identical_to_serial() {
+    let _g = env_guard();
+    use_cli_worker_bin();
+    let base = cfg(12);
+    let mut pc = base.clone();
+    pc.pipeline = true;
+    pc.pipeline_sync = true;
+    pc.pipeline_proc = true;
+    pc.pipeline_socket = "unix".to_string();
+    pc.pipeline_workers = 2;
+    pc.pipeline_join = "5".to_string();
+    assert_elastic_run_bit_identical(&base, &pc, 2, 3, 1);
+}
+
+/// Tentpole pin #2: a worker **leaves permanently** mid-run (killed by
+/// `--fail-after` injection with a spent restart budget, fleet above
+/// the `pipeline_min_workers` floor) — the leader retires it, reshards
+/// ownership onto the survivor, and the run is still bit-identical to
+/// serial with zero restarts on the books.
+#[test]
+fn sync_unix_pipeline_with_permanent_leave_is_bit_identical_to_serial() {
+    let _g = env_guard();
+    use_cli_worker_bin();
+    // worker 1 dies on its 7th frame, a few steps in; budget 0 + floor
+    // 1 (the default) turns the death into retirement, not an abort
+    std::env::set_var("OBFTF_PROC_FAIL_AFTER", "1:6");
+    std::env::set_var("OBFTF_PIPELINE_RESTART_LIMIT", "0");
+    let base = cfg(12);
+    let mut pc = base.clone();
+    pc.pipeline = true;
+    pc.pipeline_sync = true;
+    pc.pipeline_proc = true;
+    pc.pipeline_socket = "unix".to_string();
+    pc.pipeline_workers = 2;
+    assert_elastic_run_bit_identical(&base, &pc, 2, 1, 1);
+    std::env::remove_var("OBFTF_PROC_FAIL_AFTER");
+    std::env::remove_var("OBFTF_PIPELINE_RESTART_LIMIT");
+}
+
+/// Async mode across a reshard: with a tight staleness bound
+/// (`loss_max_age = 1`) and a lookahead deeper than the bound, the
+/// requeue machinery must engage for the run to finish at all — and a
+/// mid-run join must not break it. Accounting stays coherent: one
+/// counting lookup per step, every issued batch scored, membership
+/// telemetry reflecting the grown fleet.
+#[test]
+fn async_proc_pipeline_requeues_and_accounts_across_a_join() {
+    let _g = env_guard();
+    use_cli_worker_bin();
+    let m = manifest();
+    let mut pc = cfg(20);
+    pc.model = "linreg".into();
+    pc.method = Method::MaxProb;
+    pc.lr = 0.01;
+    pc.pipeline = true;
+    pc.pipeline_proc = true;
+    pc.pipeline_workers = 2;
+    pc.pipeline_depth = 6;
+    pc.loss_max_age = 1;
+    pc.pipeline_join = "8".to_string();
+    let mut p = PipelineTrainer::with_manifest(&pc, &m).unwrap();
+    let report = p.run().expect("join must not break the staleness/requeue path");
+    assert_eq!(report.steps, 20);
+    assert!(report.final_eval.loss.is_finite());
+    // one counting lookup per step, reshard-epoch retries excluded
+    let stats = p.cache_stats();
+    assert_eq!(stats.hits + stats.misses, 20);
+    // every issued batch was scored; requeues only add to this
+    assert!(p.budget.inference_forwards >= 20 * m.batch as u64);
+    let scored: u64 = p.worker_stats().iter().map(|w| w.scored_batches).sum();
+    assert!(scored >= 20, "at least one scoring per step, requeues on top");
+    assert_eq!(p.reshards(), 1);
+    let last = p.recorder.steps.last().expect("steps recorded");
+    assert_eq!(last.n_workers, 3, "the joiner is in the ownership map");
+    assert_eq!(last.workers_alive, 3);
+}
+
+/// The journal re-key property, end to end at the transport level:
+/// score a batch, admit a worker (quiesce → re-key → Reshard →
+/// ShardTransfer migration), then re-await the *same* batch without
+/// resubmitting. Sync mode never re-scores on its own, so the second
+/// answer can only come from migrated shard state — it must be
+/// bit-identical, with zero additional scored batches and every real
+/// row recorded exactly once.
+#[test]
+fn journal_rekey_preserves_every_routed_row_across_a_join() {
+    let m = manifest();
+    let batch_size = m.batch;
+    let capacity = batch_size * 4;
+    propcheck(
+        "journal re-key across join",
+        3,
+        |rng| {
+            let workers = 1 + rng.below(3);
+            // a random nonempty set of distinct ids (partial shuffle)
+            let mut pool: Vec<usize> = (0..capacity).collect();
+            let k = 1 + rng.below(batch_size);
+            for i in 0..k {
+                let j = i + rng.below(capacity - i);
+                pool.swap(i, j);
+            }
+            let mut ids = pool[..k].to_vec();
+            ids.sort_unstable();
+            (workers, ids)
+        },
+        |(workers, ids)| {
+            let (mut session, batch) = linreg_fixture(capacity, ids);
+            let expect =
+                session.fwd_loss(&batch.x, &batch.y).map_err(|e| format!("oracle: {e:#}"))?;
+            let mut t = FleetTransport::spawn(spec(*workers, capacity, Vec::new()))
+                .map_err(|e| format!("spawn: {e:#}"))?;
+            t.publish(0, &Arc::new(session.snapshot().unwrap()))
+                .map_err(|e| format!("publish: {e:#}"))?;
+            let batch = Arc::new(batch);
+            t.submit(&batch).map_err(|e| format!("submit: {e:#}"))?;
+            let l1 = t.await_losses(&batch, 0).map_err(|e| format!("first await: {e:#}"))?;
+            for (row, (got, want)) in l1.iter().zip(&expect).enumerate() {
+                if batch.valid_mask[row] > 0.0 && got.to_bits() != want.to_bits() {
+                    return Err(format!("row {row}: fleet {got} vs oracle {want}"));
+                }
+            }
+            let scored_before: u64 = t.worker_scored().iter().sum();
+            t.admit_worker().map_err(|e| format!("admit: {e:#}"))?;
+            if t.reshards() != 1 {
+                return Err(format!("expected 1 reshard, got {}", t.reshards()));
+            }
+            if t.n_workers() != workers + 1 || t.workers_alive() != workers + 1 {
+                return Err(format!(
+                    "fleet must be {} after the join, got {}/{} alive",
+                    workers + 1,
+                    t.n_workers(),
+                    t.workers_alive()
+                ));
+            }
+            // no resubmit: this answer exists only if migration kept
+            // every (id, loss, stamp) exactly
+            let l2 = t.await_losses(&batch, 0).map_err(|e| format!("post-join await: {e:#}"))?;
+            for (row, (a, b)) in l1.iter().zip(&l2).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("row {row}: {a} pre-join vs {b} post-join"));
+                }
+            }
+            let scored_after: u64 = t.worker_scored().iter().sum();
+            if scored_after != scored_before {
+                return Err(format!(
+                    "post-join lookup must not re-score ({scored_before} → {scored_after})"
+                ));
+            }
+            let summary = t.shutdown().map_err(|e| format!("shutdown: {e:#}"))?;
+            let recorded: u64 = summary.workers.iter().map(|w| w.recorded_rows).sum();
+            if recorded != batch.real as u64 {
+                return Err(format!(
+                    "migration must not double-count rows: recorded {recorded}, real {}",
+                    batch.real
+                ));
+            }
+            if summary.reshards != 1 {
+                return Err(format!("summary reshards {} != 1", summary.reshards));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Retirement at the transport level: worker 1 dies mid-handoff with a
+/// spent budget and headroom above the floor. The leader retires it,
+/// reshards onto the survivor, and the *same* `await_losses` call
+/// returns bit-identical losses — zero restarts, one reshard, and the
+/// shrunken fleet keeps serving further batches.
+#[test]
+fn transport_retires_a_budget_spent_worker_and_stays_bit_identical() {
+    let ids: Vec<usize> = (0..manifest().batch).collect();
+    let capacity = ids.len() * 2;
+    let (mut session, batch) = linreg_fixture(capacity, &ids);
+    let expect = session.fwd_loss(&batch.x, &batch.y).unwrap();
+    // worker 1 survives exactly the ParamUpdate, then dies on whatever
+    // arrives next; restart_limit 0 + min_workers 1 → retirement
+    let mut t =
+        FleetTransport::spawn(spec(2, capacity, vec![None, Some(1)])).expect("fleet spawns");
+    t.publish(0, &Arc::new(session.snapshot().unwrap())).unwrap();
+    let batch = Arc::new(batch);
+    t.submit(&batch).unwrap();
+    let losses = t.await_losses(&batch, 0).expect("retirement heals the handoff");
+    for (row, (got, want)) in losses.iter().zip(&expect).enumerate() {
+        if batch.valid_mask[row] > 0.0 {
+            assert_eq!(
+                got.to_bits(),
+                want.to_bits(),
+                "row {row}: retired fleet must stay bit-identical"
+            );
+        }
+    }
+    assert_eq!(t.restarts(), 0, "retirement is not a restart");
+    assert_eq!(t.reshards(), 1, "exactly one shrink transition");
+    assert_eq!(t.n_workers(), 1, "the survivor owns the whole map");
+    assert_eq!(t.workers_alive(), 1);
+    // the shrunken fleet still serves: re-scoring the same batch routes
+    // everything to the survivor under the new map
+    t.submit(&batch).unwrap();
+    let again = t.await_losses(&batch, 0).expect("survivor serves the resubmit");
+    for (a, b) in losses.iter().zip(&again) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    let summary = t.shutdown().expect("clean shutdown");
+    assert_eq!(summary.restarts, 0);
+    assert_eq!(summary.reshards, 1);
+    assert_eq!(summary.workers_alive, 1);
+}
+
+/// The memory-growth fix at the transport level: with
+/// `cache_max_entries` bounding the leader's routed-row journal,
+/// streaming far more distinct ids than the bound evicts
+/// oldest-stamp-first instead of growing without limit — and the run
+/// stays healthy (workers still answer every lookup bit-identically).
+#[test]
+fn bounded_journal_evicts_oldest_and_the_run_stays_healthy() {
+    let m = manifest();
+    let batch_size = m.batch;
+    let capacity = batch_size * 64;
+    let mut rng = Rng::seed_from(71);
+    let xs: Vec<f32> = (0..capacity).map(|_| rng.normal() as f32).collect();
+    let ys: Vec<f32> = xs.iter().map(|x| 2.0 * x + 0.5).collect();
+    let ds = InMemoryDataset::new(vec![1], xs, Targets::F32(ys)).unwrap();
+    let mut session = Session::new(&m, "linreg", Flavour::Native).unwrap();
+    session.init(5).unwrap();
+    let mut s = spec(2, capacity, Vec::new());
+    s.sync = false;
+    s.max_age = 0; // async classification with no staleness bound
+    s.max_entries = 4 * batch_size as u64;
+    let mut t = FleetTransport::spawn(s).expect("fleet spawns");
+    t.publish(0, &Arc::new(session.snapshot().unwrap())).unwrap();
+    // stream every id once: 64 batches of distinct ids — 16× the bound
+    for chunk in 0..(capacity / batch_size) {
+        let ids: Vec<usize> = (chunk * batch_size..(chunk + 1) * batch_size).collect();
+        let batch = Arc::new(ds.gather_batch(&ids, batch_size).unwrap());
+        let expect = session.fwd_loss(&batch.x, &batch.y).unwrap();
+        t.submit(&batch).unwrap();
+        let losses = t.await_losses(&batch, 0).expect("bounded journal must not break scoring");
+        for (row, (got, want)) in losses.iter().zip(&expect).enumerate() {
+            if batch.valid_mask[row] > 0.0 {
+                assert_eq!(got.to_bits(), want.to_bits(), "chunk {chunk} row {row}");
+            }
+        }
+    }
+    assert!(
+        t.evictions() > 0,
+        "16× the bound in distinct ids must have evicted journal entries"
+    );
+    t.shutdown().expect("clean shutdown");
+}

@@ -39,6 +39,8 @@ fn spec(workers: usize, capacity: usize, fail_after: Vec<Option<u64>>) -> FleetS
         link: LinkMode::Unix,
         affinity: true,
         restart_limit: 2,
+        min_workers: 1,
+        max_entries: 0,
     }
 }
 

@@ -2,14 +2,16 @@
 //!
 //! The zero-allocation contract: once a connection's scratch buffers
 //! are warm, the *wire path* — frame encoding (borrowed encoders, the
-//! coalescing envelope, the pre-encoded param broadcast) and the
-//! framing layer of `read_frame_into` — performs zero heap allocations
-//! per frame. The documented exception (named in ROADMAP.md) is
-//! decode-side payload materialization: a decoded `LossRecords` still
-//! owns its `ids`/`losses` vectors, so a nonempty decode costs exactly
-//! one allocation per payload vector. Those counts are pinned here too,
-//! so a regression in either direction (new hidden allocations, or an
-//! encoder growing a buffer it should reuse) fails loudly.
+//! coalescing envelope, the pre-encoded param broadcast), the framing
+//! layer, and pooled decode through [`proto::FramePools`] — performs
+//! zero heap allocations per frame. The formerly documented exception
+//! (decode-side payload materialization, named in ROADMAP.md as the
+//! PR-8 residual) is closed: a warm pool hands recycled `ids`/`losses`/
+//! `rows` vectors back to the decoder, so a nonempty pooled decode
+//! costs nothing. The unpooled `read_frame_into` fallback still pays
+//! exactly one allocation per payload vector; both counts are pinned
+//! here, so a regression in either direction (new hidden allocations,
+//! or an encoder growing a buffer it should reuse) fails loudly.
 //!
 //! The counter is a test-only counting global allocator with a
 //! per-thread tally (tests in one binary run on separate threads, so
@@ -20,7 +22,7 @@ use std::cell::Cell;
 use std::io::Cursor;
 
 use obftf::coordinator::proto::{
-    self, EnvelopeEncoder, Frame, ViewRow, WorkerStats, NO_ID, PROTO_VERSION,
+    self, EnvelopeEncoder, Frame, FramePools, ViewRow, WorkerStats, NO_ID, PROTO_VERSION,
 };
 use obftf::data::HostTensor;
 use obftf::runtime::ScorePrecision;
@@ -92,6 +94,8 @@ fn warm_encoders_allocate_nothing() {
         proto::encode_cache_lookup_into(9, 5, true, &ids, buf);
         proto::encode_param_update_into(5, &weights, ScorePrecision::F32, buf);
         proto::encode_param_update_into(5, &weights, ScorePrecision::Bf16, buf);
+        proto::encode_reshard_into(2, &ids, buf);
+        proto::encode_shard_transfer_into(2, 1, &ids, &losses, &ids, buf);
         let mut env = EnvelopeEncoder::begin(buf);
         env.member_loss_records(u64::MAX, 0, 4, &ids, &losses);
         env.member_loss_records(u64::MAX, 1, 4, &ids, &losses);
@@ -141,12 +145,14 @@ fn warm_read_frame_into_framing_allocates_nothing() {
     assert_eq!(n, 0, "warm framing + empty-payload decodes must not allocate ({n})");
 }
 
-/// The documented exception: a nonempty decode materializes its payload
-/// vectors. Pinned exactly — one allocation per owned vector, nothing
-/// else — so hidden per-frame costs cannot creep in behind the label
-/// "payload materialization".
+/// The PR-8 residual, closed: with a warm [`FramePools`], nonempty
+/// payload decodes draw their `ids`/`losses`/`rows` vectors from
+/// recycled scratch and allocate *nothing*. The unpooled
+/// `read_frame_into` fallback is pinned alongside at exactly one
+/// allocation per owned vector, so hidden per-frame costs cannot creep
+/// into either path.
 #[test]
-fn decode_payload_materialization_is_exactly_one_alloc_per_vector() {
+fn warm_pooled_decode_of_nonempty_payloads_allocates_nothing() {
     let enc = Frame::LossRecords {
         seq: 1,
         worker: 0,
@@ -164,25 +170,47 @@ fn decode_payload_materialization_is_exactly_one_alloc_per_vector() {
     }
     .encode();
     let mut body = Vec::with_capacity(enc.len().max(lookup.len()).max(view.len()) + 64);
-    let read = |bytes: &[u8], body: &mut Vec<u8>| {
+    let mut pools = FramePools::new();
+    let read_pooled = |bytes: &[u8], body: &mut Vec<u8>, pools: &mut FramePools| {
+        let mut cur = Cursor::new(bytes);
+        let (frame, _wire) =
+            proto::read_frame_pooled(&mut cur, body, pools).unwrap().expect("one frame");
+        pools.recycle(frame);
+    };
+    // warm pass: the pool learns one vector of each payload type
+    read_pooled(&enc, &mut body, &mut pools);
+    read_pooled(&lookup, &mut body, &mut pools);
+    read_pooled(&view, &mut body, &mut pools);
+    let n = allocs_during(|| {
+        for _ in 0..3 {
+            read_pooled(&enc, &mut body, &mut pools);
+            read_pooled(&lookup, &mut body, &mut pools);
+            read_pooled(&view, &mut body, &mut pools);
+        }
+    });
+    assert_eq!(n, 0, "warm pooled decodes must not allocate ({n} allocations)");
+    // the unpooled fallback still materializes owned vectors: pinned
+    // exactly so the cost stays one allocation per vector, no more
+    let read_owned = |bytes: &[u8], body: &mut Vec<u8>| {
         let mut cur = Cursor::new(bytes);
         let got = proto::read_frame_into(&mut cur, body).unwrap().expect("one frame");
         drop(got);
     };
-    read(&enc, &mut body); // warm
-    let n = allocs_during(|| read(&enc, &mut body));
-    assert_eq!(n, 2, "LossRecords decode = ids + losses vectors, got {n}");
-    let n = allocs_during(|| read(&lookup, &mut body));
-    assert_eq!(n, 1, "CacheLookup decode = ids vector, got {n}");
-    let n = allocs_during(|| read(&view, &mut body));
-    assert_eq!(n, 1, "CacheView decode = rows vector, got {n}");
+    read_owned(&enc, &mut body); // warm the body buffer only
+    let n = allocs_during(|| read_owned(&enc, &mut body));
+    assert_eq!(n, 2, "unpooled LossRecords decode = ids + losses vectors, got {n}");
+    let n = allocs_during(|| read_owned(&lookup, &mut body));
+    assert_eq!(n, 1, "unpooled CacheLookup decode = ids vector, got {n}");
+    let n = allocs_during(|| read_owned(&view, &mut body));
+    assert_eq!(n, 1, "unpooled CacheView decode = rows vector, got {n}");
 }
 
-/// A coalesced envelope decodes as its members plus exactly one member
-/// list: the wrapper itself adds a single allocation over the sum of
-/// its members' payload costs.
+/// A coalesced envelope decodes for free too once the pool holds its
+/// member list and member payload vectors; unpooled, the wrapper adds
+/// exactly one allocation (the member list) over its members' payload
+/// costs.
 #[test]
-fn batch_envelope_decode_adds_exactly_the_member_list() {
+fn warm_batch_envelope_decode_allocates_nothing() {
     let env = Frame::Batch(vec![
         Frame::LossRecords {
             seq: u64::MAX,
@@ -195,13 +223,25 @@ fn batch_envelope_decode_adds_exactly_the_member_list() {
     ])
     .encode();
     let mut body = Vec::with_capacity(env.len() + 64);
-    let read = |body: &mut Vec<u8>| {
+    let mut pools = FramePools::new();
+    let read_pooled = |body: &mut Vec<u8>, pools: &mut FramePools| {
         let mut cur = Cursor::new(env.as_slice());
-        let got = proto::read_frame_into(&mut cur, body).unwrap().expect("one frame");
-        drop(got);
+        let (frame, _wire) =
+            proto::read_frame_pooled(&mut cur, body, pools).unwrap().expect("one frame");
+        pools.recycle(frame);
     };
-    read(&mut body); // warm
-    let n = allocs_during(|| read(&mut body));
-    // members vec + (ids + losses) + ids
-    assert_eq!(n, 4, "envelope = member list + member payloads, got {n}");
+    read_pooled(&mut body, &mut pools); // warm
+    let n = allocs_during(|| {
+        for _ in 0..3 {
+            read_pooled(&mut body, &mut pools);
+        }
+    });
+    assert_eq!(n, 0, "warm pooled envelope decodes must not allocate ({n})");
+    // unpooled contrast: members vec + (ids + losses) + ids
+    let mut cur = Cursor::new(env.as_slice());
+    let n = allocs_during(|| {
+        let got = proto::read_frame_into(&mut cur, &mut body).unwrap().expect("one frame");
+        drop(got);
+    });
+    assert_eq!(n, 4, "unpooled envelope = member list + member payloads, got {n}");
 }
