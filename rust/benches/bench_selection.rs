@@ -15,7 +15,10 @@
 //! pooled-codec split (`frames_per_step`, `encode_ns_per_step` and
 //! per-frame-type bytes). A `socket-wN-bf16` row re-runs the socket
 //! fleet with `param_precision = bf16` so the broadcast saving is
-//! measurable against its f32 twin, and a final `socket-reshard` row
+//! measurable against its f32 twin, a `socket-wN-overlap` row re-runs
+//! it with the overlapped leader (lookup prefetch + parallel publish
+//! fan-out) annotated with the hidden lookup/publish latencies and the
+//! p50/p99 selection-to-apply, and a final `socket-reshard` row
 //! drives one mid-run worker join plus one permanent leave (retired on
 //! a spent restart budget) to price the elastic ownership transitions,
 //! annotating the `reshards` count.
@@ -196,6 +199,67 @@ fn pipeline_bench() {
         bench.annotate_last("frame_bytes_per_step", frame_bytes / steps as f64);
         annotate_wire(&mut bench, &wire, steps);
         std::env::remove_var("OBFTF_PARAM_PRECISION");
+    }
+
+    // overlapped-leader row: the socket fleet at the sweep size with
+    // `pipeline_overlap` on (`socket-wN-overlap`) — prefetched lookups,
+    // parallel publish fan-out and the off-critical-path recorder
+    // stage. Compare steps/s against the serial-schedule `socket-wN`
+    // row above; the latencies the overlap hides land as
+    // lookup_rtt_us / publish_us means plus the p50/p99
+    // selection-to-apply the knob is supposed to shrink
+    {
+        let pw = *fleet_sizes.last().unwrap();
+        std::env::set_var("OBFTF_PIPELINE_SOCKET", "unix");
+        std::env::set_var("OBFTF_PIPELINE_WORKERS", pw.to_string());
+        std::env::set_var("OBFTF_PIPELINE_OVERLAP", "1");
+        let mut ocfg = cfg.clone();
+        ocfg.pipeline = true;
+        ocfg.pipeline_proc = true;
+        ocfg.pipeline_socket = "unix".to_string();
+        ocfg.pipeline_workers = pw;
+        ocfg.pipeline_overlap = true;
+        let mut hit_rate = 0.0f64;
+        let mut stall_ms = 0.0f64;
+        let mut fleet_fwd = 0.0f64;
+        let mut frame_bytes = 0.0f64;
+        let mut lookup_rtt = 0.0f64;
+        let mut publish_us = 0.0f64;
+        let mut apply_p50 = 0.0f64;
+        let mut apply_p99 = 0.0f64;
+        let mut wire = WireStats::default();
+        bench.run_throughput(
+            &format!("pipeline/socket-w{pw}-overlap/mlp"),
+            0.0,
+            steps as f64,
+            || {
+                let mut p =
+                    PipelineTrainer::with_manifest(&ocfg, &manifest).expect("overlap pipeline");
+                black_box(p.run().expect("overlap pipeline run"));
+                hit_rate = p.cache_stats().hit_rate();
+                stall_ms = p.eval_stall_ms() as f64;
+                fleet_fwd = p.budget.inference_forwards as f64;
+                frame_bytes = p.frame_bytes() as f64;
+                let n = p.recorder.steps.len().max(1) as f64;
+                lookup_rtt =
+                    p.recorder.steps.iter().map(|s| s.lookup_rtt_us as f64).sum::<f64>() / n;
+                publish_us =
+                    p.recorder.steps.iter().map(|s| s.publish_us as f64).sum::<f64>() / n;
+                (apply_p50, apply_p99) = p.recorder.apply_latency_us();
+                wire = p.wire_stats();
+            },
+        );
+        bench.annotate_last("inference_workers", pw as f64);
+        bench.annotate_last("cache_hit_rate", hit_rate);
+        bench.annotate_last("eval_stall_ms", stall_ms);
+        bench.annotate_last("inference_forwards", fleet_fwd);
+        bench.annotate_last("frame_bytes_per_step", frame_bytes / steps as f64);
+        bench.annotate_last("lookup_rtt_us_mean", lookup_rtt);
+        bench.annotate_last("publish_us_mean", publish_us);
+        bench.annotate_last("sel_to_apply_p50_us", apply_p50);
+        bench.annotate_last("sel_to_apply_p99_us", apply_p99);
+        annotate_wire(&mut bench, &wire, steps);
+        std::env::remove_var("OBFTF_PIPELINE_OVERLAP");
     }
 
     // elastic resharding row: the socket fleet starting at two workers

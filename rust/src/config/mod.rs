@@ -144,6 +144,13 @@ pub struct TrainConfig {
     /// mode rejects it to stay bit-identical to the serial trainer).
     /// (`OBFTF_PARAM_PRECISION` overrides.)
     pub param_precision: String,
+    /// Overlapped-step leader: prefetch the next step's cache lookup
+    /// during backward, fan the parameter broadcast out over all
+    /// worker links concurrently, and record step telemetry off the
+    /// hot loop. Async pipeline only — sync mode rejects it to keep
+    /// the bit-identical oracle byte-for-byte serial
+    /// (`OBFTF_PIPELINE_OVERLAP` overrides).
+    pub pipeline_overlap: bool,
     /// CLI-layer knob overrides (never read from TOML; populated only
     /// by the `obftf` flag parser — a `Some` beats env and config).
     pub overrides: PipelineOverrides,
@@ -190,6 +197,7 @@ impl Default for TrainConfig {
             proc_timeout_ms: 0,
             score_precision: "f32".to_string(),
             param_precision: "f32".to_string(),
+            pipeline_overlap: false,
             overrides: PipelineOverrides::default(),
         }
     }
@@ -256,6 +264,7 @@ impl TrainConfig {
             "proc_timeout_ms" => self.proc_timeout_ms = val.as_u64()?,
             "score_precision" => self.score_precision = val.as_str()?.to_string(),
             "param_precision" => self.param_precision = val.as_str()?.to_string(),
+            "pipeline_overlap" => self.pipeline_overlap = val.as_bool()?,
             other => bail!("unknown config key {other:?}"),
         }
         Ok(())
@@ -314,6 +323,9 @@ impl TrainConfig {
         }
         if !self.pipeline_join.is_empty() && !self.pipeline {
             bail!("pipeline_join requires pipeline = true (it admits fleet workers)");
+        }
+        if self.pipeline_overlap && !self.pipeline {
+            bail!("pipeline_overlap requires pipeline = true (it overlaps the leader loop)");
         }
         options::parse_join(&self.pipeline_join)?;
         match self.score_precision.as_str() {
@@ -503,6 +515,17 @@ epochs = 2
         assert_eq!(TrainConfig::default().param_precision, "f32");
         let err = TrainConfig::from_toml_str("param_precision = \"f16\"\n").unwrap_err();
         assert!(format!("{err:#}").contains("f32 | bf16"), "err: {err:#}");
+    }
+
+    #[test]
+    fn pipeline_overlap_parses_and_demands_pipeline_mode() {
+        let cfg = TrainConfig::from_toml_str(
+            "epochs = 0\nstream_steps = 50\npipeline = true\npipeline_overlap = true\n",
+        )
+        .unwrap();
+        assert!(cfg.pipeline_overlap);
+        assert!(!TrainConfig::default().pipeline_overlap, "defaults off");
+        assert!(TrainConfig::from_toml_str("pipeline_overlap = true").is_err());
     }
 
     #[test]

@@ -33,6 +33,7 @@
 //! | worker floor   | `--pipeline-min-workers` | `OBFTF_PIPELINE_MIN_WORKERS` | `pipeline_min_workers` | 1 |
 //! | mid-run join   | `--pipeline-join`     | `OBFTF_PIPELINE_JOIN`     | `pipeline_join`     | "" = none |
 //! | cache bound    | `--cache-max-entries` | `OBFTF_CACHE_MAX_ENTRIES` | `cache_max_entries` | 0 = ∞ |
+//! | overlap        | `--pipeline-overlap`  | `OBFTF_PIPELINE_OVERLAP`  | `pipeline_overlap`  | false |
 
 use std::time::Duration;
 
@@ -96,6 +97,9 @@ pub struct PipelineOverrides {
     pub join: Option<String>,
     /// Bound on live loss-cache + journal entries (0 = unbounded).
     pub cache_max_entries: Option<u64>,
+    /// Overlapped-step leader (prefetch + parallel publish + async
+    /// epilogue).
+    pub overlap: Option<bool>,
 }
 
 impl PipelineOverrides {
@@ -151,6 +155,13 @@ pub struct PipelineOptions {
     /// evicting an entry the sync handoff is waiting on would stall
     /// the bit-identical oracle, so `resolve` rejects the combination.
     pub cache_max_entries: u64,
+    /// Overlapped-step leader: prefetch the next step's `CacheLookup`
+    /// fan-out during backward, broadcast `ParamUpdate` over all worker
+    /// links concurrently via per-endpoint writer threads, and move
+    /// the recording epilogue off the hot loop. Async-only: the sync
+    /// oracle's byte-for-byte serial schedule is the whole point of
+    /// sync mode, so `resolve` rejects the combination.
+    pub overlap: bool,
 }
 
 fn env_usize(key: &str) -> Option<usize> {
@@ -326,6 +337,24 @@ impl PipelineOptions {
                  (drop --pipeline-sync or use cache_max_entries = 0)"
             );
         }
+        // CLI or config asking for overlap under sync is a hard error;
+        // the *env* source alone is advisory and silently stays off, so
+        // a fleet-wide OBFTF_PIPELINE_OVERLAP=1 default (e.g. the CI
+        // overlap test leg running the whole suite, sync oracles
+        // included) cannot invalidate an explicitly synchronous run.
+        if sync && ov.overlap.unwrap_or(cfg.pipeline_overlap) {
+            bail!(
+                "pipeline_overlap is incompatible with pipeline_sync: sync mode is the \
+                 bit-identical oracle and must keep the leader's lookup → select → backward \
+                 → publish schedule byte-for-byte serial (drop --pipeline-sync or \
+                 pipeline_overlap)"
+            );
+        }
+        let overlap = !sync
+            && ov
+                .overlap
+                .or_else(|| env_bool("OBFTF_PIPELINE_OVERLAP"))
+                .unwrap_or(cfg.pipeline_overlap);
         let max_age = if cfg.loss_max_age > 0 {
             cfg.loss_max_age
         } else {
@@ -346,6 +375,7 @@ impl PipelineOptions {
             min_workers,
             join,
             cache_max_entries,
+            overlap,
         })
     }
 
@@ -378,6 +408,7 @@ impl PipelineOptions {
                 }
             ),
             format!("cache_max_entries = {}", self.cache_max_entries),
+            format!("pipeline_overlap = {}", self.overlap),
         ]
     }
 }
@@ -527,6 +558,7 @@ mod tests {
             "pipeline_min_workers",
             "pipeline_join",
             "cache_max_entries",
+            "pipeline_overlap",
         ] {
             assert!(lines.iter().any(|l| l.starts_with(key)), "missing {key}");
         }
@@ -592,5 +624,51 @@ mod tests {
         cfg.cache_max_entries = 0;
         let o = PipelineOptions::resolve(&cfg, 64, 8).unwrap();
         assert_eq!(o.cache_max_entries, 0);
+    }
+
+    /// The overlapped leader is async-only: sync mode's value *is* the
+    /// byte-for-byte serial schedule, so the resolver rejects a CLI or
+    /// config request for the combination and the error names both
+    /// knobs. The *env* source alone is advisory — under sync it
+    /// silently stays off, so a fleet-wide `OBFTF_PIPELINE_OVERLAP=1`
+    /// default (e.g. a CI leg running the whole suite, sync oracles
+    /// included) cannot invalidate an explicitly synchronous run.
+    /// (Process env is shared across the test binary's threads; no
+    /// other test in this binary asserts on the overlap knob, and the
+    /// leading remove_var keeps this one hermetic when CI's overlap
+    /// leg exports the variable suite-wide.)
+    #[test]
+    fn overlap_is_async_only() {
+        std::env::remove_var("OBFTF_PIPELINE_OVERLAP");
+        let o = PipelineOptions::resolve(&base(), 64, 8).unwrap();
+        assert!(!o.overlap, "defaults off");
+        let mut cfg = base();
+        cfg.pipeline_overlap = true;
+        let o = PipelineOptions::resolve(&cfg, 64, 8).unwrap();
+        assert!(o.overlap);
+        cfg.pipeline_sync = true;
+        let err = PipelineOptions::resolve(&cfg, 64, 8).unwrap_err().to_string();
+        assert!(err.contains("pipeline_overlap"), "err: {err}");
+        assert!(err.contains("pipeline_sync"), "err: {err}");
+        // the CLI override wins over config
+        let mut cfg = base();
+        cfg.pipeline_overlap = true;
+        cfg.overrides.overlap = Some(false);
+        let o = PipelineOptions::resolve(&cfg, 64, 8).unwrap();
+        assert!(!o.overlap, "CLI beats config");
+        // env turns async runs on...
+        std::env::set_var("OBFTF_PIPELINE_OVERLAP", "1");
+        let o = PipelineOptions::resolve(&base(), 64, 8).unwrap();
+        assert!(o.overlap, "env beats config default");
+        // ...but under sync it is advisory: resolves fine, overlap off
+        let mut cfg = base();
+        cfg.pipeline_sync = true;
+        let o = PipelineOptions::resolve(&cfg, 64, 8).unwrap();
+        assert!(o.sync && !o.overlap, "env overlap is advisory under sync");
+        // an explicit CLI ask still errors even with the env set
+        cfg.overrides.overlap = Some(true);
+        let err = PipelineOptions::resolve(&cfg, 64, 8).unwrap_err().to_string();
+        assert!(err.contains("pipeline_overlap"), "err: {err}");
+        std::env::remove_var("OBFTF_PIPELINE_OVERLAP");
     }
 }

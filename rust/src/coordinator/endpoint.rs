@@ -118,6 +118,14 @@ impl WorkerEndpoint {
         self.writer.take();
     }
 
+    /// Hand the write half to a dedicated writer thread (the overlapped
+    /// leader's per-endpoint fan-out). Subsequent `write_all` calls on
+    /// the endpoint itself fail `BrokenPipe`, so a stray serial-path
+    /// write can never interleave with the thread's frames.
+    pub fn take_writer(&mut self) -> Option<Box<dyn Write + Send>> {
+        self.writer.take()
+    }
+
     /// The child's exit status, for error context.
     pub fn status_string(&mut self) -> String {
         match self.child.try_wait() {

@@ -205,6 +205,30 @@ pub trait Transport {
     fn wire_stats(&self) -> WireStats {
         WireStats::default()
     }
+    /// Overlapped-leader hook: issue the *next* step's lookup as soon
+    /// as the current step's backward starts, so its round trip hides
+    /// behind compute the leader was going to do anyway. Freshness is
+    /// still classified at use time, inside [`Transport::await_losses`],
+    /// under the normal `max_age`/epoch-retry rules — the prefetch only
+    /// moves the fan-out, never the decision. Default: no-op (serial
+    /// transports, or overlap off).
+    fn prefetch(&mut self, _batch: &Arc<Batch>, _now: u64) -> Result<()> {
+        Ok(())
+    }
+    /// Issue-to-merge round-trip time (µs) of the lookup fan-out that
+    /// most recently completed a collect. Under prefetch the clock
+    /// starts during the previous step's backward, so this reports the
+    /// *hidden* latency (0 for transports without a wire).
+    fn lookup_rtt_us(&self) -> u64 {
+        0
+    }
+    /// Wall time (µs) of the most recent completed parameter broadcast:
+    /// the serial write loop, or — under the overlapped leader — the
+    /// slowest writer thread's write of the shared `ParamUpdate` buffer
+    /// (0 for transports without a wire).
+    fn publish_us(&self) -> u64 {
+        0
+    }
     /// Graceful shutdown: drain the fleet, join/reap workers, surface
     /// any failure that raced the leader's last check.
     fn shutdown(&mut self) -> Result<FleetSummary>;
@@ -245,6 +269,11 @@ pub struct InProcSpec {
     /// snapshot through the wire rounding even in-process, so the
     /// pipeline's scoring semantics are transport-invariant.
     pub param_precision: ScorePrecision,
+    /// Overlapped-leader mode: [`Transport::prefetch`] runs the step's
+    /// counting lookup early (against prefetch-time cache state, the
+    /// shared-memory analogue of the socket fleet's prefetched views)
+    /// and parks the classification for `await_losses`. Async-only.
+    pub overlap: bool,
 }
 
 /// The PR-3 thread fleet behind the [`Transport`] trait.
@@ -259,6 +288,11 @@ pub struct InProcTransport {
     sync: bool,
     stall: Duration,
     param_precision: ScorePrecision,
+    overlap: bool,
+    /// Parked prefetch result: `(now, counted lookup outcome)`. The
+    /// counting `lookup_batch` already ran at prefetch time, so the
+    /// await consumes this instead of counting again.
+    prefetched: Option<(u64, Option<Vec<f32>>)>,
 }
 
 impl InProcTransport {
@@ -314,6 +348,8 @@ impl InProcTransport {
             sync: spec.sync,
             stall: spec.stall,
             param_precision: spec.param_precision,
+            overlap: spec.overlap,
+            prefetched: None,
         })
     }
 
@@ -359,6 +395,29 @@ impl InProcTransport {
                     bail!("pipeline inference stage terminated unexpectedly");
                 }
             }
+        }
+    }
+
+    /// Non-counting poll until the batch classifies fresh: requeue a
+    /// fully-scored-but-stale batch once per staleness watermark so a
+    /// worker re-scores it with current weights. (The counting lookup
+    /// has already happened — at await entry, or at prefetch time.)
+    fn probe_loop(&mut self, batch: &Arc<Batch>, now: u64, t0: Instant) -> Result<Vec<f32>> {
+        let mut requeued_for: Option<u64> = None;
+        loop {
+            self.check_err()?;
+            match self.cache.probe_batch(&batch.ids, &batch.valid_mask, now) {
+                CacheProbe::Fresh(l) => return Ok(l),
+                CacheProbe::Stale { min_stamp } => {
+                    if requeued_for != Some(min_stamp) {
+                        self.send_ticket(Ticket { batch: batch.clone() })?;
+                        requeued_for = Some(min_stamp);
+                    }
+                }
+                CacheProbe::Incomplete => {}
+            }
+            self.check_stall(now, t0)?;
+            std::thread::sleep(Duration::from_micros(30));
         }
     }
 
@@ -448,25 +507,37 @@ impl Transport for InProcTransport {
                 std::thread::sleep(Duration::from_micros(30));
             }
         }
+        // overlap mode: a parked prefetch already ran this step's
+        // counting lookup (against prefetch-time cache state, mirroring
+        // the socket fleet's prefetched views) — a parked hit returns
+        // directly, a parked miss skips straight to the probe loop
+        if let Some((pnow, parked)) = self.prefetched.take() {
+            if pnow == now {
+                if let Some(l) = parked {
+                    return Ok(l);
+                }
+                return self.probe_loop(batch, now, t0);
+            }
+        }
         if let Some(l) = self.cache.lookup_batch(&batch.ids, &batch.valid_mask, now) {
             return Ok(l);
         }
-        let mut requeued_for: Option<u64> = None;
-        loop {
-            self.check_err()?;
-            match self.cache.probe_batch(&batch.ids, &batch.valid_mask, now) {
-                CacheProbe::Fresh(l) => return Ok(l),
-                CacheProbe::Stale { min_stamp } => {
-                    if requeued_for != Some(min_stamp) {
-                        self.send_ticket(Ticket { batch: batch.clone() })?;
-                        requeued_for = Some(min_stamp);
-                    }
-                }
-                CacheProbe::Incomplete => {}
-            }
-            self.check_stall(now, t0)?;
-            std::thread::sleep(Duration::from_micros(30));
+        self.probe_loop(batch, now, t0)
+    }
+
+    /// Shared-memory prefetch analogue: run the step's counting lookup
+    /// now, while the leader's backward still has the previous step in
+    /// flight, and park the outcome for `await_losses`. One counted
+    /// lookup per step either way — the overlap knob moves *when* it
+    /// runs, never how often.
+    fn prefetch(&mut self, batch: &Arc<Batch>, now: u64) -> Result<()> {
+        if !self.overlap || self.sync {
+            return Ok(());
         }
+        self.check_err()?;
+        let parked = self.cache.lookup_batch(&batch.ids, &batch.valid_mask, now);
+        self.prefetched = Some((now, parked));
+        Ok(())
     }
 
     fn cache_stats(&self) -> CacheStats {
@@ -617,6 +688,11 @@ pub struct FleetSpec {
     /// eviction keeps the routed-row journal under this across a long
     /// stream of distinct ids. Async-only (sync mode rejects it).
     pub max_entries: u64,
+    /// Overlapped-leader mode: per-endpoint writer threads fan the
+    /// param broadcast out over every link concurrently, and
+    /// [`Transport::prefetch`] issues the next step's lookup during the
+    /// current backward. Async-only (sync mode rejects it at resolve).
+    pub overlap: bool,
 }
 
 /// Test-only fault injection via the environment:
@@ -666,6 +742,113 @@ struct Slot {
     /// Version-checked `Hello` received from this incarnation.
     hello: bool,
     last_sent: &'static str,
+}
+
+/// Bound on each writer thread's outbox (overlap mode). Deep enough
+/// that a steady-state step (params + routes/lookup envelope) never
+/// blocks; shallow enough that a wedged link exerts backpressure
+/// instead of buffering unboundedly.
+const OUTBOX_CAP: usize = 64;
+
+/// One pre-encoded frame queued to a writer thread. The param
+/// broadcast shares a single encoded buffer across the whole fleet via
+/// `Arc`; every other frame carries its own copy.
+struct WriteJob {
+    buf: JobBuf,
+    name: &'static str,
+}
+
+enum JobBuf {
+    Shared(Arc<Vec<u8>>),
+    Owned(Vec<u8>),
+}
+
+impl WriteJob {
+    fn bytes(&self) -> &[u8] {
+        match &self.buf {
+            JobBuf::Shared(b) => b,
+            JobBuf::Owned(b) => b,
+        }
+    }
+}
+
+/// One worker's dedicated writer thread (overlap mode): a bounded
+/// outbox drained FIFO onto the endpoint's write half, so the param
+/// broadcast — and every other leader→worker frame — goes out over all
+/// links concurrently instead of one socket at a time. Per-connection
+/// frame order is exactly the enqueue order, which is exactly the
+/// order the serial path would have written.
+struct Writer {
+    tx: mpsc::SyncSender<WriteJob>,
+    handle: JoinHandle<()>,
+    /// write_all nanoseconds of the most recent `ParamUpdate` this
+    /// writer completed (the fleet's publish_us = slowest writer).
+    publish_ns: Arc<AtomicU64>,
+}
+
+impl Writer {
+    /// Close the outbox and join the thread. Jobs still queued for a
+    /// dead incarnation are dropped by the drain-and-discard loop —
+    /// the outbox analogue of dropping a dead reader's stale events.
+    fn join(self) {
+        let Writer { tx, handle, .. } = self;
+        drop(tx);
+        let _ = handle.join();
+    }
+}
+
+/// Writer-thread body: drain the outbox onto the write half. A write
+/// error surfaces as a generation-tagged [`Event::Dead`] — the same
+/// path a reader-side EOF takes — after which the thread keeps
+/// draining and *discarding* jobs, so the leader can never block on a
+/// dead worker's outbox. The endpoint write halves are unbuffered
+/// (raw pipe / socket clones), so no flush step is needed here.
+fn writer_loop(
+    mut out: Box<dyn Write + Send>,
+    rx: mpsc::Receiver<WriteJob>,
+    w: usize,
+    generation: u64,
+    tx: mpsc::Sender<Event>,
+    publish_ns: Arc<AtomicU64>,
+) {
+    let mut dead = false;
+    while let Ok(job) = rx.recv() {
+        if dead {
+            continue;
+        }
+        let t0 = Instant::now();
+        match out.write_all(job.bytes()) {
+            Ok(()) => {
+                if job.name == "ParamUpdate" {
+                    publish_ns.store(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                }
+            }
+            Err(e) => {
+                dead = true;
+                let _ = tx.send(Event::Dead(
+                    w,
+                    generation,
+                    format!("write of {} frame failed: {e}", job.name),
+                ));
+            }
+        }
+    }
+    // rx disconnected: the leader dropped the outbox (restart, retire
+    // or shutdown); dropping `out` closes the stream's write half
+}
+
+/// An issued-but-uncollected `CacheLookup` fan-out (overlap mode):
+/// step s+1's lookup goes out as soon as step s's backward starts, its
+/// views park in `pending_views` as they arrive, and the merge +
+/// freshness classification run at use time under use-time rules.
+struct Prefetch {
+    req: u64,
+    now: u64,
+    /// `restart_epoch` at issue: a bump since voids the fan-out (the
+    /// replacement worker never saw the request / the ownership map
+    /// changed), exactly like the mid-collect epoch guard.
+    epoch: u64,
+    issued: Instant,
 }
 
 /// The multi-process fleet: `obftf worker` children (pipes or sockets)
@@ -763,6 +946,22 @@ pub struct FleetTransport {
     /// reply frame, so without this the leader could block on an event
     /// that never comes after the routed rows already satisfied it.
     progress: bool,
+    /// Overlapped-leader mode: writer threads + lookup prefetch.
+    overlap: bool,
+    /// Per-slot writer threads (overlap mode only; `None` per slot
+    /// otherwise). Torn down and respawned with the slot, exactly like
+    /// the reader threads.
+    writers: Vec<Option<Writer>>,
+    /// Overlap-mode twin of `last_params`: the broadcast buffer shared
+    /// by `Arc` across every writer thread, reclaimed for reuse at the
+    /// next publish once the last writer has dropped its handle.
+    last_params_shared: Option<Arc<Vec<u8>>>,
+    /// The in-flight prefetched lookup, if any (overlap mode).
+    prefetched: Option<Prefetch>,
+    /// Wall time of the most recent serial-path param broadcast.
+    last_publish_ns: u64,
+    /// Issue-to-merge RTT of the most recent completed lookup collect.
+    last_lookup_rtt_ns: u64,
 }
 
 /// One deferred routed-rows write (scorer → shard owner), pooled in
@@ -851,11 +1050,18 @@ impl FleetTransport {
             final_stats: vec![None; spec.workers],
             shutting_down: false,
             progress: false,
+            overlap: spec.overlap,
+            writers: Vec::with_capacity(spec.workers),
+            last_params_shared: None,
+            prefetched: None,
+            last_publish_ns: 0,
+            last_lookup_rtt_ns: 0,
         };
         for w in 0..spec.workers {
             let fail = spec.fail_after.get(w).copied().flatten();
-            let slot = t.spawn_slot(w, 0, fail, false)?;
+            let (slot, writer) = t.spawn_slot(w, 0, fail, false)?;
             t.slots.push(slot);
+            t.writers.push(writer);
         }
         for w in 0..spec.workers {
             t.await_hello(w)?;
@@ -865,16 +1071,18 @@ impl FleetTransport {
 
     /// Spawn one worker incarnation: endpoint (process + link) plus the
     /// reader thread that turns its frames into generation-tagged
-    /// events. `join` spawns a late worker that announces `Join`
-    /// instead of `Hello` and owns nothing until the first `Reshard`.
+    /// events — and, in overlap mode, the writer thread that owns the
+    /// endpoint's write half. `join` spawns a late worker that
+    /// announces `Join` instead of `Hello` and owns nothing until the
+    /// first `Reshard`.
     fn spawn_slot(
         &self,
         w: usize,
         generation: u64,
         fail_after: Option<u64>,
         join: bool,
-    ) -> Result<Slot> {
-        let (ep, stream) = self.spawner.spawn(w, generation, fail_after, join)?;
+    ) -> Result<(Slot, Option<Writer>)> {
+        let (mut ep, stream) = self.spawner.spawn(w, generation, fail_after, join)?;
         let tx = self.event_tx.clone();
         let counter = self.bytes_in.clone();
         let pools = self.pools.clone();
@@ -931,7 +1139,23 @@ impl FleetTransport {
                 }
             })
             .context("spawn fleet reader thread")?;
-        Ok(Slot { ep, reader: Some(reader), alive: true, hello: false, last_sent: "none" })
+        let writer = if self.overlap {
+            let out = ep
+                .take_writer()
+                .context("endpoint write half already taken (overlap writer)")?;
+            let (jtx, jrx) = mpsc::sync_channel::<WriteJob>(OUTBOX_CAP);
+            let etx = self.event_tx.clone();
+            let publish_ns = Arc::new(AtomicU64::new(0));
+            let pns = publish_ns.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("obftf-fleet-tx-{w}-g{generation}"))
+                .spawn(move || writer_loop(out, jrx, w, generation, etx, pns))
+                .context("spawn fleet writer thread")?;
+            Some(Writer { tx: jtx, handle, publish_ns })
+        } else {
+            None
+        };
+        Ok((Slot { ep, reader: Some(reader), alive: true, hello: false, last_sent: "none" }, writer))
     }
 
     /// Block (bounded by the fleet timeout) until worker `w`'s current
@@ -970,15 +1194,22 @@ impl FleetTransport {
             self.slots[w].ep.describe, self.restarts, self.restart_limit
         );
         let generation = self.slots[w].ep.generation + 1;
-        // reap the dead incarnation; its reader exits on EOF, and any
-        // trailing events it already queued carry the old generation
+        // reap the dead incarnation; its reader exits on EOF, its
+        // writer (overlap mode) drains-and-discards then exits on
+        // outbox close, and any trailing events either already queued
+        // carry the old generation
         self.slots[w].alive = false;
+        if let Some(wr) = self.writers[w].take() {
+            wr.join();
+        }
         self.slots[w].ep.reap();
         if let Some(h) = self.slots[w].reader.take() {
             let _ = h.join();
         }
         // never re-inject --fail-after into a replacement
-        self.slots[w] = self.spawn_slot(w, generation, None, false)?;
+        let (slot, writer) = self.spawn_slot(w, generation, None, false)?;
+        self.slots[w] = slot;
+        self.writers[w] = writer;
         self.await_hello(w)?;
         self.write_params(w)?;
         // a replacement announces with the *spawn-time* default map
@@ -1053,6 +1284,9 @@ impl FleetTransport {
             self.min_workers
         );
         self.slots[w].alive = false;
+        if let Some(wr) = self.writers[w].take() {
+            wr.join();
+        }
         self.slots[w].ep.reap();
         if let Some(h) = self.slots[w].reader.take() {
             let _ = h.join();
@@ -1171,8 +1405,9 @@ impl FleetTransport {
         anyhow::ensure!(!self.shutting_down, "cannot admit a worker during shutdown");
         let w = self.slots.len();
         self.spawner.workers = w + 1;
-        let slot = self.spawn_slot(w, 0, None, true)?;
+        let (slot, writer) = self.spawn_slot(w, 0, None, true)?;
         self.slots.push(slot);
+        self.writers.push(writer);
         self.scored.push(0);
         self.shard_rows.push(CacheStats::default());
         self.pending_views.push(None);
@@ -1247,9 +1482,38 @@ impl FleetTransport {
         }
     }
 
+    /// Overlap mode: queue one pre-encoded frame on worker `w`'s
+    /// outbox. Blocks only when the bounded outbox is full
+    /// (backpressure). Accounting and `last_sent` update at enqueue —
+    /// the frame leaves the leader's schedule here; a write that later
+    /// fails comes back as a generation-tagged `Dead` event.
+    fn enqueue(&mut self, w: usize, job: WriteJob) -> Result<()> {
+        let name = job.name;
+        let len = job.bytes().len() as u64;
+        let sent = match &self.writers[w] {
+            Some(wr) => wr.tx.send(job).is_ok(),
+            None => false,
+        };
+        if sent {
+            self.account_write(name, len);
+            self.slots[w].last_sent = name;
+            Ok(())
+        } else {
+            // the writer thread is gone (panicked) or was never
+            // spawned: same policy as a failed serial write
+            let reason = format!("write of {name} frame failed: writer outbox closed");
+            self.supervise(w, &reason)
+        }
+    }
+
     fn write_raw(&mut self, w: usize, bytes: &[u8], name: &'static str) -> Result<()> {
         if !self.slots[w].alive {
             return Err(self.dead_error(w, "refusing to write to dead worker"));
+        }
+        if self.overlap {
+            // copied into an owned job; the Arc-shared fast path is
+            // publish-only (see `write_params`)
+            return self.enqueue(w, WriteJob { buf: JobBuf::Owned(bytes.to_vec()), name });
         }
         match self.slots[w].ep.write_all(bytes) {
             Ok(()) => {
@@ -1288,6 +1552,19 @@ impl FleetTransport {
     /// the buffer lives on `self`; the disjoint field borrows keep it
     /// clone-free.)
     fn write_params(&mut self, w: usize) -> Result<()> {
+        if self.overlap {
+            // share the one pre-encoded broadcast buffer by Arc; the
+            // slot's writer thread pushes it concurrently with every
+            // other slot's (and with the leader's next hot-loop work)
+            let Some(shared) = self.last_params_shared.clone() else {
+                return Ok(()); // never published
+            };
+            if !self.slots[w].alive {
+                return Err(self.dead_error(w, "refusing to write to dead worker"));
+            }
+            return self
+                .enqueue(w, WriteJob { buf: JobBuf::Shared(shared), name: "ParamUpdate" });
+        }
         if self.last_params.is_empty() {
             return Ok(());
         }
@@ -1517,20 +1794,20 @@ impl FleetTransport {
         }
     }
 
-    /// One `CacheLookup` fan-out + merged-view freshness classification
-    /// (the distributed analogue of `ShardedLossCache::scan`).
-    ///
-    /// If a supervised restart fires mid-collect (the respawned worker
-    /// never saw this request), the lookup aborts with
-    /// [`RowClass::Retry`] so the caller re-issues it against the new
-    /// incarnation instead of waiting out the timeout.
-    fn lookup_once(&mut self, batch: &Batch, now: u64, count: bool) -> Result<RowClass> {
+    /// Send-phase of a lookup fan-out: allocate a request id, recycle
+    /// parked views, and write (or, in overlap mode, enqueue) every
+    /// owner's `CacheLookup` — with its deferred routes coalesced into
+    /// one envelope, exactly as before. Returns `Ok(false)` when a
+    /// supervised restart or reshard fired mid-send: the fan-out is
+    /// void and nothing was recorded or counted.
+    fn issue_lookup(&mut self, batch: &Batch, now: u64) -> Result<bool> {
         let epoch0 = self.restart_epoch;
         self.next_req += 1;
         let req = self.next_req;
         self.cur_req = req;
         // pooled wire-id scratch (taken so the fan-out below can borrow
-        // self mutably; restored on every exit path)
+        // self mutably; restored on every exit path — `collect_lookup`
+        // re-takes it for the merge)
         let mut wire_ids = std::mem::take(&mut self.lookup_ids);
         wire_ids.clear();
         wire_ids.extend(
@@ -1581,9 +1858,26 @@ impl FleetTransport {
             }
             if self.restart_epoch != epoch0 {
                 self.lookup_ids = wire_ids;
-                return Ok(RowClass::Retry);
+                return Ok(false);
             }
         }
+        self.lookup_ids = wire_ids;
+        Ok(true)
+    }
+
+    /// Collect-phase: wait for the current fan-out's outstanding views,
+    /// then merge and classify under *use-time* freshness rules.
+    /// `epoch0` is the epoch the fan-out was issued under — a bump
+    /// mid-collect voids it ([`RowClass::Retry`]); `issued` is when the
+    /// fan-out left, so the recorded RTT spans issue-to-merge even when
+    /// the issue happened during the previous step's backward.
+    fn collect_lookup(
+        &mut self,
+        now: u64,
+        count: bool,
+        epoch0: u64,
+        issued: Instant,
+    ) -> Result<RowClass> {
         let deadline = Instant::now() + self.timeout;
         loop {
             let missing_view =
@@ -1591,17 +1885,15 @@ impl FleetTransport {
             if !missing_view {
                 break;
             }
-            if let Err(e) = self.recv_deadline(deadline, "cache views") {
-                self.lookup_ids = wire_ids;
-                return Err(e);
-            }
+            self.recv_deadline(deadline, "cache views")?;
             if self.restart_epoch != epoch0 {
-                self.lookup_ids = wire_ids;
                 return Ok(RowClass::Retry);
             }
         }
+        self.last_lookup_rtt_ns = issued.elapsed().as_nanos() as u64;
         // merge views into the reused per-row scratch — a warm lookup
         // allocates only the returned losses
+        let wire_ids = std::mem::take(&mut self.lookup_ids);
         let rows = wire_ids.len();
         let n = self.active.len();
         self.per_row.clear();
@@ -1669,6 +1961,34 @@ impl FleetTransport {
         })
     }
 
+    /// One `CacheLookup` fan-out + merged-view freshness classification
+    /// (the distributed analogue of `ShardedLossCache::scan`).
+    ///
+    /// A matching prefetched fan-out is consumed instead of issuing a
+    /// new one: its views may already be parked, the rest are collected
+    /// here, and classification (and hit/miss counting) runs at *use*
+    /// time — the prefetch moved the wire round trip, not the decision.
+    ///
+    /// If a supervised restart fires mid-collect (the respawned worker
+    /// never saw this request), the lookup aborts with
+    /// [`RowClass::Retry`] so the caller re-issues it against the new
+    /// incarnation instead of waiting out the timeout. A prefetch the
+    /// same way voided is simply discarded — the fresh fan-out below
+    /// recycles its parked views.
+    fn lookup_once(&mut self, batch: &Batch, now: u64, count: bool) -> Result<RowClass> {
+        if let Some(p) = self.prefetched.take() {
+            if p.now == now && p.req == self.cur_req && p.epoch == self.restart_epoch {
+                return self.collect_lookup(now, count, p.epoch, p.issued);
+            }
+        }
+        let issued = Instant::now();
+        if !self.issue_lookup(batch, now)? {
+            return Ok(RowClass::Retry);
+        }
+        let epoch0 = self.restart_epoch;
+        self.collect_lookup(now, count, epoch0, issued)
+    }
+
     /// Pick the scorer for a batch. With affinity routing (the
     /// default), that is the shard owner of the most batch ids —
     /// its rows are recorded locally instead of routed, cutting
@@ -1709,6 +2029,11 @@ impl FleetTransport {
 
     fn reap(&mut self) {
         self.shutting_down = true;
+        // writers first: closing the outbox drops the write half, so a
+        // still-healthy worker sees EOF and exits before the kill
+        for wr in self.writers.iter_mut().filter_map(Option::take) {
+            wr.join();
+        }
         for s in &mut self.slots {
             s.ep.reap();
             if let Some(h) = s.reader.take() {
@@ -1725,6 +2050,35 @@ impl Transport for FleetTransport {
     }
 
     fn publish(&mut self, version: u64, weights: &Arc<Vec<HostTensor>>) -> Result<()> {
+        if self.overlap {
+            // overlapped fan-out: encode once, share the buffer by
+            // Arc, and let every slot's writer thread push it in
+            // parallel. The previous broadcast's buffer is reclaimed
+            // (try_unwrap) once the last writer finished with it, so
+            // the steady state still reuses one warm buffer.
+            let mut buf = self
+                .last_params_shared
+                .take()
+                .and_then(|a| Arc::try_unwrap(a).ok())
+                .unwrap_or_default();
+            let t0 = Instant::now();
+            proto::encode_param_update_into(
+                version,
+                weights.as_slice(),
+                self.param_precision,
+                &mut buf,
+            );
+            self.wire.encode_ns += t0.elapsed().as_nanos() as u64;
+            // stash before the enqueue loop so a restart fired by a
+            // closed outbox already republishes this snapshot
+            self.last_params_shared = Some(Arc::new(buf));
+            for w in 0..self.slots.len() {
+                if self.slots[w].alive {
+                    self.write_params(w)?;
+                }
+            }
+            return Ok(());
+        }
         // runs once per training step: encode straight from the
         // borrowed snapshot into the reused broadcast buffer (bf16
         // param precision halves it here, once, for every worker)
@@ -1741,11 +2095,13 @@ impl Transport for FleetTransport {
         // these writes already republishes this snapshot; retired
         // workers are skipped (they left the fleet permanently)
         self.last_params = buf;
+        let t1 = Instant::now();
         for w in 0..self.slots.len() {
             if self.slots[w].alive {
                 self.write_params(w)?;
             }
         }
+        self.last_publish_ns = t1.elapsed().as_nanos() as u64;
         Ok(())
     }
 
@@ -1830,6 +2186,41 @@ impl Transport for FleetTransport {
 
     fn wire_stats(&self) -> WireStats {
         self.wire
+    }
+
+    /// Issue step `now`'s lookup fan-out immediately (overlap mode) so
+    /// its round trip runs under the leader's current backward. The
+    /// views park in `pending_views` as reader threads deliver them;
+    /// `await_losses` collects and classifies at use time.
+    fn prefetch(&mut self, batch: &Arc<Batch>, now: u64) -> Result<()> {
+        if !self.overlap || self.sync {
+            return Ok(());
+        }
+        self.drain_events()?;
+        let issued = Instant::now();
+        if self.issue_lookup(batch, now)? {
+            self.prefetched =
+                Some(Prefetch { req: self.cur_req, now, epoch: self.restart_epoch, issued });
+        }
+        Ok(())
+    }
+
+    fn lookup_rtt_us(&self) -> u64 {
+        self.last_lookup_rtt_ns / 1000
+    }
+
+    fn publish_us(&self) -> u64 {
+        if self.overlap {
+            // slowest writer's most recent completed ParamUpdate write;
+            // read off the critical path, never waited on
+            let mut ns = 0;
+            for wr in self.writers.iter().flatten() {
+                ns = ns.max(wr.publish_ns.load(Ordering::Relaxed));
+            }
+            ns / 1000
+        } else {
+            self.last_publish_ns / 1000
+        }
     }
 
     fn shutdown(&mut self) -> Result<FleetSummary> {
@@ -2008,7 +2399,6 @@ impl WorkerLoop {
                     &mut self.reply,
                 );
                 output.write_all(&self.reply).context("writing LossRecords frame")?;
-                output.flush().context("flushing LossRecords")?;
                 Ok(Flow::Continue)
             }
             Frame::LossRecords { stamp, ids, losses, .. } => {
@@ -2044,7 +2434,6 @@ impl WorkerLoop {
                     &mut self.reply,
                 );
                 output.write_all(&self.reply).context("writing CacheView frame")?;
-                output.flush().context("flushing CacheView")?;
                 Ok(Flow::Continue)
             }
             Frame::Reshard { members, .. } => {
@@ -2164,6 +2553,12 @@ pub fn run_worker(cfg: &WorkerConfig, mut input: impl Read, mut output: impl Wri
         }
         frames_handled += 1;
         let flow = wl.handle(&frame, &mut output)?;
+        // one flush per *top-level* frame: a coalesced envelope's
+        // replies (routed-row acks, the view) leave in a single
+        // syscall instead of one flush per member reply. Shutdown's
+        // stats handshake keeps its own flush inside `handle`, since
+        // it must reach the leader even mid-envelope.
+        output.flush().context("flushing replies")?;
         pools.recycle(frame);
         if let Flow::Done = flow {
             return Ok(());
@@ -2344,6 +2739,61 @@ mod tests {
         let Frame::WorkerStats(s) = &replies[2] else { panic!("expected stats") };
         assert_eq!(s.recorded_rows, 2, "ids 0 and 2 are owned; 5 belongs to worker 1");
         assert_eq!(s.lookups, 1);
+    }
+
+    /// The worker flushes once per *top-level* frame (reply
+    /// coalescing), which is only sound if a burst's replies still
+    /// leave in request order. Pin that order across a mixed burst:
+    /// two scores, a bare lookup, and a coalesced envelope whose
+    /// member replies share one flush.
+    #[test]
+    fn worker_burst_replies_stay_in_request_order() {
+        let (_, session, batch, capacity) = linreg_fixture();
+        let weights = session.snapshot().unwrap();
+        let cfg = worker_cfg(0, 1, capacity);
+        let ids: Vec<u64> = batch.ids.iter().map(|&i| i as u64).collect();
+        let script = [
+            Frame::ParamUpdate { version: 1, weights },
+            Frame::ScoreBatch { seq: 1, batch: batch.clone() },
+            Frame::ScoreBatch { seq: 2, batch: batch.clone() },
+            Frame::CacheLookup { req: 3, now: 1, exact: false, ids: ids.clone() },
+            Frame::Batch(vec![
+                // routed records are silent; only the lookup replies
+                Frame::LossRecords {
+                    seq: u64::MAX,
+                    worker: 0,
+                    stamp: 1,
+                    ids: vec![0],
+                    losses: vec![0.5],
+                },
+                Frame::CacheLookup { req: 4, now: 1, exact: false, ids },
+            ]),
+            Frame::Shutdown,
+        ];
+        let replies = run_script(&cfg, &script);
+        let got: Vec<String> = replies
+            .iter()
+            .map(|f| match f {
+                Frame::Hello { .. } => "Hello".into(),
+                Frame::LossRecords { seq, .. } => format!("LossRecords#{seq}"),
+                Frame::CacheView { req, .. } => format!("CacheView#{req}"),
+                Frame::WorkerStats(_) => "WorkerStats".into(),
+                other => other.name().into(),
+            })
+            .collect();
+        assert_eq!(
+            got,
+            [
+                "Hello",
+                "LossRecords#1",
+                "LossRecords#2",
+                "CacheView#3",
+                "CacheView#4",
+                "WorkerStats",
+            ]
+            .map(String::from),
+            "replies must keep request order with one flush per burst frame"
+        );
     }
 
     #[test]

@@ -119,6 +119,22 @@ pub fn selection_rng(cfg: &TrainConfig) -> Rng {
     rng
 }
 
+/// Masked mean of per-instance losses: padding rows carry mask 0 and
+/// drop out of both the sum and the count. Every trainer variant
+/// (serial, parallel, pipeline leader — including its off-critical-path
+/// recorder thread) reports `batch_loss` through this one helper, with
+/// a fixed per-element f64 accumulation order, so the oracle and the
+/// pipeline cannot silently diverge bitwise.
+pub fn masked_mean_loss(losses: &[f32], valid_mask: &[f32]) -> f32 {
+    let mut sum = 0.0f64;
+    let mut cnt = 0.0f64;
+    for (l, m) in losses.iter().zip(valid_mask) {
+        sum += (*l as f64) * (*m as f64);
+        cnt += *m as f64;
+    }
+    (sum / cnt.max(1.0)) as f32
+}
+
 /// The streaming-mode batch source for a config: resamples `train`
 /// (with optional concept drift) under a seed derived from `cfg.seed`.
 /// Shared by the serial streaming trainer and the staged pipeline so

@@ -49,6 +49,19 @@
 //! epochs' worth of steps; fully-scored-but-stale batches are
 //! re-enqueued for re-scoring with current weights).
 //!
+//! **Overlapped leader** (`pipeline_overlap` / `OBFTF_PIPELINE_OVERLAP`,
+//! async-only): three latency hidings stacked on async mode. The next
+//! step's `CacheLookup` fan-out is issued the moment this step's
+//! backward starts ([`Transport::prefetch`]; the parked answer is
+//! re-judged for freshness at use time under the usual
+//! `loss_max_age`/restart-epoch rules, so an early reply can only cost
+//! a re-issue, never staleness). The param broadcast leaves over
+//! per-endpoint writer threads concurrently instead of a serial write
+//! loop. And the step epilogue — masked-mean `batch_loss` reduction,
+//! `StepRecord`, status-board publish — moves to a recorder stage fed
+//! over a bounded channel. Sync mode rejects the knob at resolve time:
+//! its guarantee *is* the serialised schedule.
+//!
 //! Every knob (worker count, depth, shards, sync, transport kind,
 //! affinity, restart budget, timeouts) resolves through
 //! [`PipelineOptions`] with CLI > env > config > default precedence —
@@ -69,6 +82,7 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use crate::config::{PipelineOptions, TrainConfig, TransportKind};
+use crate::coordinator::budget::BudgetTracker;
 use crate::coordinator::endpoint::LinkMode;
 use crate::coordinator::ipc::{
     FleetSpec, FleetSummary, FleetTransport, InProcSpec, InProcTransport, Transport, WireStats,
@@ -89,6 +103,68 @@ use crate::sampling::{budget_for, selection_hash, selection_mask, Sampler};
 struct EvalJob {
     step: u64,
     params: Arc<Vec<HostTensor>>,
+}
+
+/// Everything a step's epilogue needs: the record skeleton
+/// (`batch_loss` still unset), the raw losses to reduce, and the
+/// status-board fields sampled on the leader. Under the overlapped
+/// leader this crosses a bounded channel to the recorder stage;
+/// otherwise the leader finishes it inline, exactly where the work
+/// used to run.
+struct StepEpilogue {
+    rec: StepRecord,
+    losses: Vec<f32>,
+    batch: Arc<Batch>,
+    worker_scored: Vec<u64>,
+    realized_ratio: f64,
+    steps_per_sec: f64,
+    producer_blocked_ms: u64,
+    eval_stall_ms: u64,
+    evictions: u64,
+}
+
+impl StepEpilogue {
+    /// Finish the step off the hot path: reduce the masked batch loss
+    /// (same helper — and therefore bitwise the same value — as the
+    /// serial trainers) and publish the completed record to the status
+    /// board. Returns the record; the caller owns recording order.
+    fn finish(self, board: &StatusBoard) -> StepRecord {
+        let StepEpilogue {
+            mut rec,
+            losses,
+            batch,
+            worker_scored,
+            realized_ratio,
+            steps_per_sec,
+            producer_blocked_ms,
+            eval_stall_ms,
+            evictions,
+        } = self;
+        rec.batch_loss = super::masked_mean_loss(&losses, &batch.valid_mask);
+        board.update(|st| {
+            st.step = rec.step + 1;
+            st.sel_loss = rec.sel_loss;
+            st.batch_loss = rec.batch_loss;
+            st.realized_ratio = realized_ratio;
+            st.steps_per_sec = steps_per_sec;
+            st.producer_blocked_ms = producer_blocked_ms;
+            st.cache_hits = rec.cache_hits;
+            st.cache_misses = rec.cache_misses;
+            st.cache_stale = rec.cache_stale;
+            st.eval_stall_ms = eval_stall_ms;
+            st.workers_alive = rec.workers_alive as u64;
+            st.worker_restarts = rec.worker_restarts as u64;
+            st.worker_scored = worker_scored;
+            st.frames_per_step = rec.frames_per_step;
+            st.publish_bytes = rec.publish_bytes;
+            st.reshards = rec.reshards;
+            st.n_workers = rec.n_workers as u64;
+            st.evictions = evictions;
+            st.publish_us = rec.publish_us;
+            st.lookup_rtt_us = rec.lookup_rtt_us;
+        });
+        rec
+    }
 }
 
 /// The staged continuous-training driver (see module docs).
@@ -252,6 +328,7 @@ impl PipelineTrainer {
                     score_precision: self.options.score_precision,
                     param_precision: self.options.param_precision,
                     max_entries: self.options.cache_max_entries,
+                    overlap: self.options.overlap,
                 })?));
             }
             TransportKind::Pipes => LinkMode::Pipes,
@@ -275,6 +352,7 @@ impl PipelineTrainer {
             restart_limit: self.options.restart_limit,
             min_workers: self.options.min_workers,
             max_entries: self.options.cache_max_entries,
+            overlap: self.options.overlap,
         })?))
     }
 
@@ -312,10 +390,51 @@ impl PipelineTrainer {
             .spawn(move || eval_worker(ectx))
             .context("spawn eval worker")?;
 
-        let led = self.leader(board, fleet.as_mut(), &eval_tx, &eval_err, t0);
+        // off-critical-path recorder stage (overlapped leader only):
+        // the leader hands each step's epilogue — loss reduction,
+        // record, status publish — over a bounded channel instead of
+        // running it between backward passes. The channel is FIFO and
+        // the stage single-threaded, so records accumulate in step
+        // order and merge back after the loop. Nothing in the stage is
+        // fallible, so unlike eval it needs no error slot.
+        let mut rec_stage = None;
+        if self.options.overlap {
+            let (tx, rx) = mpsc::sync_channel::<StepEpilogue>(self.options.depth + 2);
+            let out: Arc<Mutex<Vec<StepRecord>>> = Arc::new(Mutex::new(Vec::new()));
+            let tout = out.clone();
+            let tboard = board.clone();
+            let handle = std::thread::Builder::new()
+                .name("obftf-recorder".into())
+                .spawn(move || {
+                    while let Ok(job) = rx.recv() {
+                        let rec = job.finish(&tboard);
+                        tout.lock().expect("recorder out").push(rec);
+                    }
+                })
+                .context("spawn recorder stage")?;
+            rec_stage = Some((tx, handle, out));
+        }
+
+        let led = self.leader(
+            board,
+            fleet.as_mut(),
+            &eval_tx,
+            &eval_err,
+            rec_stage.as_ref().map(|(tx, _, _)| tx),
+            t0,
+        );
         // close the eval queue so the stage drains and exits
         drop(eval_tx);
         let _ = eval_handle.join();
+        // drain the recorder stage and merge its records (even on a
+        // failed run, so partial telemetry survives)
+        if let Some((tx, handle, out)) = rec_stage {
+            drop(tx);
+            let _ = handle.join();
+            for rec in std::mem::take(&mut *out.lock().expect("recorder out")) {
+                self.recorder.record_step(rec);
+            }
+        }
         let shut = fleet.shutdown();
         led?;
         // a stage may have failed after the leader's last check (e.g.
@@ -338,13 +457,16 @@ impl PipelineTrainer {
 
     /// Selection + training stages (the leader loop). Issues inference
     /// work up to the lookahead horizon, waits on the transport's cache
-    /// handoff, selects, runs the backward, publishes weights.
+    /// handoff, selects, runs the backward, publishes weights. With
+    /// `epilogues` set (overlapped leader), the per-step bookkeeping
+    /// tail is handed to the recorder stage instead of running here.
     fn leader(
         &mut self,
         board: &StatusBoard,
         fleet: &mut dyn Transport,
         evals: &mpsc::SyncSender<EvalJob>,
         eval_err: &Mutex<Option<String>>,
+        epilogues: Option<&mpsc::SyncSender<StepEpilogue>>,
         t0: Instant,
     ) -> Result<()> {
         let steps = self.steps as u64;
@@ -388,6 +510,16 @@ impl PipelineTrainer {
                 .select(&losses, &batch.valid_mask, b, &mut self.rng);
             let sel_us = t1.elapsed().as_micros() as u64;
 
+            // ---- overlapped lookup prefetch: issue step s+1's
+            // fan-out before this step's backward occupies the leader,
+            // so the fleet round-trip hides behind it (a no-op unless
+            // async overlap is on). Freshness is re-judged at
+            // await_losses(s+1) under the usual max_age/restart-epoch
+            // rules, so an early answer can only cost a re-issue.
+            if let Some(next) = pending.front() {
+                fleet.prefetch(next, s + 1)?;
+            }
+
             // ---- training stage: backward + apply only ----
             let t2 = Instant::now();
             let sel_loss = if self.cfg.masked_backward {
@@ -401,16 +533,6 @@ impl PipelineTrainer {
 
             let new_params = Arc::new(self.session.snapshot()?);
             fleet.publish(s + 1, &new_params)?;
-
-            let batch_loss = {
-                let mut sum = 0.0f64;
-                let mut cnt = 0.0f64;
-                for (l, m) in losses.iter().zip(&batch.valid_mask) {
-                    sum += (*l as f64) * (*m as f64);
-                    cnt += *m as f64;
-                }
-                (sum / cnt.max(1.0)) as f32
-            };
 
             self.budget.record_step(batch.real, selected.len());
             let cache_stats = fleet.cache_stats();
@@ -427,7 +549,8 @@ impl PipelineTrainer {
                 step: self.step,
                 epoch: 0,
                 sel_loss,
-                batch_loss,
+                // reduced in the epilogue (masked_mean_loss)
+                batch_loss: 0.0,
                 n_forward: batch.real,
                 n_selected: selected.len(),
                 fwd_us,
@@ -443,8 +566,9 @@ impl PipelineTrainer {
                 publish_bytes,
                 reshards,
                 n_workers,
+                publish_us: fleet.publish_us(),
+                lookup_rtt_us: fleet.lookup_rtt_us(),
             };
-            self.recorder.record_step(rec);
             self.step += 1;
 
             // ---- async eval stage ----
@@ -462,30 +586,32 @@ impl PipelineTrainer {
                 self.eval_stall_ns += t3.elapsed().as_nanos() as u64;
             }
 
-            let blocked_ms = self.producer_blocked_ns() / 1_000_000;
-            let ratio = self.budget.realized_ratio();
-            let eval_stall_ms = self.eval_stall_ms();
-            let worker_scored = fleet.worker_scored();
-            board.update(|st| {
-                st.step = rec.step + 1;
-                st.sel_loss = rec.sel_loss;
-                st.batch_loss = rec.batch_loss;
-                st.realized_ratio = ratio;
-                st.steps_per_sec = (s + 1) as f64 / t0.elapsed().as_secs_f64();
-                st.producer_blocked_ms = blocked_ms;
-                st.cache_hits = cache_stats.hits;
-                st.cache_misses = cache_stats.misses;
-                st.cache_stale = cache_stats.stale;
-                st.eval_stall_ms = eval_stall_ms;
-                st.workers_alive = workers_alive as u64;
-                st.worker_restarts = worker_restarts as u64;
-                st.worker_scored = worker_scored;
-                st.frames_per_step = frames_per_step;
-                st.publish_bytes = publish_bytes;
-                st.reshards = reshards;
-                st.n_workers = n_workers as u64;
-                st.evictions = evictions;
-            });
+            // ---- step epilogue: loss reduction, record, status ----
+            let job = StepEpilogue {
+                rec,
+                losses,
+                batch,
+                worker_scored: fleet.worker_scored(),
+                realized_ratio: self.budget.realized_ratio(),
+                steps_per_sec: (s + 1) as f64 / t0.elapsed().as_secs_f64(),
+                producer_blocked_ms: self.producer_blocked_ns() / 1_000_000,
+                eval_stall_ms: self.eval_stall_ms(),
+                evictions,
+            };
+            match epilogues {
+                // overlapped leader: the recorder stage finishes the
+                // step off the critical path; records merge back into
+                // `self.recorder` after the loop
+                Some(tx) => {
+                    if tx.send(job).is_err() {
+                        anyhow::bail!("pipeline recorder stage terminated unexpectedly");
+                    }
+                }
+                None => {
+                    let rec = job.finish(board);
+                    self.recorder.record_step(rec);
+                }
+            }
         }
         Ok(())
     }

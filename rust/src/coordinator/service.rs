@@ -58,6 +58,13 @@ pub struct Status {
     /// Entries evicted by the `cache_max_entries` bound (loss cache +
     /// routed-row journal; 0 when unbounded).
     pub evictions: u64,
+    /// Wall time of the latest step's parameter publish (slowest
+    /// writer under the overlapped leader; 0 without a proc fleet).
+    pub publish_us: u64,
+    /// Round-trip time of the `CacheLookup` fan-out serving the latest
+    /// step (issue-to-merge, so prefetched lookups report the hidden
+    /// RTT; 0 without a proc fleet).
+    pub lookup_rtt_us: u64,
     pub done: bool,
 }
 
@@ -88,6 +95,8 @@ impl Status {
             .set("reshards", Json::Num(self.reshards as f64))
             .set("n_workers", Json::Num(self.n_workers as f64))
             .set("evictions", Json::Num(self.evictions as f64))
+            .set("publish_us", Json::Num(self.publish_us as f64))
+            .set("lookup_rtt_us", Json::Num(self.lookup_rtt_us as f64))
             .set("done", Json::Bool(self.done));
         j
     }
@@ -129,6 +138,8 @@ impl Status {
             reshards: j.need("reshards")?.as_f64()? as u64,
             n_workers: j.need("n_workers")?.as_f64()? as u64,
             evictions: j.need("evictions")?.as_f64()? as u64,
+            publish_us: j.need("publish_us")?.as_f64()? as u64,
+            lookup_rtt_us: j.need("lookup_rtt_us")?.as_f64()? as u64,
             done: j.need("done")?.as_bool()?,
         })
     }
@@ -245,6 +256,8 @@ mod tests {
             reshards: 2,
             n_workers: 3,
             evictions: 128,
+            publish_us: 45,
+            lookup_rtt_us: 260,
             done: true,
         };
         assert!((s.cache_hit_rate() - 0.75).abs() < 1e-12);
@@ -265,6 +278,8 @@ mod tests {
         assert_eq!(got.reshards, 2);
         assert_eq!(got.n_workers, 3);
         assert_eq!(got.evictions, 128);
+        assert_eq!(got.publish_us, 45);
+        assert_eq!(got.lookup_rtt_us, 260);
         assert!(got.done);
     }
 

@@ -230,15 +230,7 @@ impl Trainer {
         };
         let bwd_us = t2.elapsed().as_micros() as u64;
 
-        let batch_loss = {
-            let mut s = 0.0f64;
-            let mut c = 0.0f64;
-            for (l, m) in losses.iter().zip(&batch.valid_mask) {
-                s += (*l as f64) * (*m as f64);
-                c += *m as f64;
-            }
-            (s / c.max(1.0)) as f32
-        };
+        let batch_loss = super::masked_mean_loss(&losses, &batch.valid_mask);
 
         self.budget.record_step(batch.real, selected.len());
         let cache_counters = self.cache_counters();
@@ -262,6 +254,8 @@ impl Trainer {
             publish_bytes: 0,
             reshards: 0,
             n_workers: 0,
+            publish_us: 0,
+            lookup_rtt_us: 0,
         };
         self.recorder.record_step(rec);
         self.step += 1;

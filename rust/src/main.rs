@@ -95,6 +95,10 @@ fn with_train_flags(p: ArgParser) -> ArgParser {
             "param-precision",
             "param-broadcast wire precision: f32 | bf16 (bf16 = async pipeline only)",
         )
+        .bool_flag(
+            "pipeline-overlap",
+            "overlapped-step leader: lookup prefetch + parallel publish fan-out + async epilogue (async pipeline only)",
+        )
 }
 
 fn build_config(p: &Parsed) -> Result<TrainConfig> {
@@ -228,6 +232,10 @@ fn build_config(p: &Parsed) -> Result<TrainConfig> {
     if let Some(v) = p.get("param-precision") {
         cfg.param_precision = v.to_string();
         cfg.overrides.param_precision = Some(v.to_string());
+    }
+    if p.get_bool("pipeline-overlap") {
+        cfg.pipeline_overlap = true;
+        cfg.overrides.overlap = Some(true);
     }
     cfg.validate()?;
     Ok(cfg)

@@ -47,6 +47,16 @@ pub struct StepRecord {
     /// Fleet members at record time under the current ownership map
     /// (0 when the driver has no fleet).
     pub n_workers: u32,
+    /// Wall time the leader spent publishing the parameter snapshot
+    /// this step. Under the overlapped leader this is the slowest
+    /// writer thread's enqueue-to-flushed time, not hot-loop time
+    /// (0 without a proc fleet).
+    pub publish_us: u64,
+    /// Round-trip time of the `CacheLookup` fan-out that served this
+    /// step's losses. Under prefetch the clock starts at issue (during
+    /// the previous backward), so this can exceed the hot-loop
+    /// `fwd_us` it was hidden behind (0 without a proc fleet).
+    pub lookup_rtt_us: u64,
 }
 
 /// One evaluation's record.
@@ -67,6 +77,9 @@ pub struct Recorder {
     pub fwd_hist: Histogram,
     pub sel_hist: Histogram,
     pub bwd_hist: Histogram,
+    /// Selection-to-apply latency: selection + backward + publish per
+    /// step — the SLO axis of the production-soak roadmap item.
+    pub apply_hist: Histogram,
     start: Option<std::time::Instant>,
 }
 
@@ -79,6 +92,7 @@ impl Recorder {
         self.fwd_hist.record_ns(rec.fwd_us * 1000);
         self.sel_hist.record_ns(rec.sel_us * 1000);
         self.bwd_hist.record_ns(rec.bwd_us * 1000);
+        self.apply_hist.record_ns((rec.sel_us + rec.bwd_us + rec.publish_us) * 1000);
         self.steps.push(rec);
     }
 
@@ -116,12 +130,12 @@ impl Recorder {
             f,
             "step,epoch,sel_loss,batch_loss,n_forward,n_selected,fwd_us,sel_us,bwd_us,\
              cache_hits,cache_misses,cache_stale,sel_hash,workers_alive,worker_restarts,\
-             frames_per_step,publish_bytes,reshards,n_workers"
+             frames_per_step,publish_bytes,reshards,n_workers,publish_us,lookup_rtt_us"
         )?;
         for s in &self.steps {
             writeln!(
                 f,
-                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
                 s.step,
                 s.epoch,
                 s.sel_loss,
@@ -140,7 +154,9 @@ impl Recorder {
                 s.frames_per_step,
                 s.publish_bytes,
                 s.reshards,
-                s.n_workers
+                s.n_workers,
+                s.publish_us,
+                s.lookup_rtt_us
             )?;
         }
         Ok(())
@@ -162,11 +178,19 @@ impl Recorder {
         let (f50, f90, f99) = self.fwd_hist.summary_us();
         let (s50, s90, s99) = self.sel_hist.summary_us();
         let (b50, b90, b99) = self.bwd_hist.summary_us();
+        let (a50, _, a99) = self.apply_hist.summary_us();
         format!(
             "fwd p50/p90/p99 {f50:.0}/{f90:.0}/{f99:.0}µs  \
              sel {s50:.0}/{s90:.0}/{s99:.0}µs  \
-             bwd {b50:.0}/{b90:.0}/{b99:.0}µs"
+             bwd {b50:.0}/{b90:.0}/{b99:.0}µs  \
+             sel→apply p50/p99 {a50:.0}/{a99:.0}µs"
         )
+    }
+
+    /// Selection-to-apply latency quantiles in µs: (p50, p99).
+    pub fn apply_latency_us(&self) -> (f64, f64) {
+        let (p50, _, p99) = self.apply_hist.summary_us();
+        (p50, p99)
     }
 }
 
@@ -195,6 +219,8 @@ mod tests {
             publish_bytes: 512,
             reshards: 1,
             n_workers: 4,
+            publish_us: 30,
+            lookup_rtt_us: 90,
         }
     }
 
@@ -220,11 +246,11 @@ mod tests {
         r.write_evals_csv(&ep).unwrap();
         let steps = std::fs::read_to_string(&sp).unwrap();
         assert!(steps.lines().count() == 2);
-        assert!(steps.contains("0,0,1,2,128,32,100,10,200,1,2,0,42,4,0,6,512,1,4"));
+        assert!(steps.contains("0,0,1,2,128,32,100,10,200,1,2,0,42,4,0,6,512,1,4,30,90"));
         assert!(steps.starts_with(
             "step,epoch,sel_loss,batch_loss,n_forward,n_selected,fwd_us,sel_us,bwd_us,\
              cache_hits,cache_misses,cache_stale,sel_hash,workers_alive,worker_restarts,\
-             frames_per_step,publish_bytes,reshards,n_workers"
+             frames_per_step,publish_bytes,reshards,n_workers,publish_us,lookup_rtt_us"
         ));
         let evals = std::fs::read_to_string(&ep).unwrap();
         assert!(evals.contains("0,0,0.5,0.9"));
@@ -236,5 +262,17 @@ mod tests {
         r.record_step(step(0));
         let s = r.latency_summary();
         assert!(s.contains("fwd") && s.contains("sel") && s.contains("bwd"));
+        assert!(s.contains("sel→apply"), "summary: {s}");
+    }
+
+    /// Selection-to-apply aggregates sel + bwd + publish per step, so
+    /// a single recorded step's quantiles bracket that sum.
+    #[test]
+    fn apply_latency_tracks_sel_bwd_publish() {
+        let mut r = Recorder::new();
+        r.record_step(step(0)); // 10 + 200 + 30 = 240 µs
+        let (p50, p99) = r.apply_latency_us();
+        assert!(p50 > 0.0 && p99 >= p50, "p50 {p50} p99 {p99}");
+        assert_eq!(r.apply_hist.count(), 1);
     }
 }

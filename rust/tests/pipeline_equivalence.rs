@@ -439,3 +439,172 @@ fn pipeline_requires_streaming_mode() {
     pc.pipeline = false; // validate() would reject pipeline+no-stream
     assert!(PipelineTrainer::with_manifest(&pc, &m).is_err());
 }
+
+/// Sync mode must refuse the overlapped leader outright: prefetch,
+/// parallel publish fan-out and the recorder stage all reorder work
+/// around the serial lookup → select → backward → publish schedule
+/// that *is* the oracle's contract.
+#[test]
+fn sync_pipeline_rejects_overlap() {
+    let m = manifest();
+    let mut pc = cfg(6);
+    pc.pipeline = true;
+    pc.pipeline_sync = true;
+    pc.pipeline_overlap = true;
+    let err =
+        PipelineTrainer::with_manifest(&pc, &m).err().expect("sync + overlap must be rejected");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("pipeline_overlap"), "error must name the knob: {msg}");
+    assert!(msg.contains("pipeline_sync"), "error must name the conflict: {msg}");
+}
+
+/// The overlap machinery compiled in but resolved *off* (config asks,
+/// the CLI override declines) must leave the sync socket fleet exactly
+/// where it was: bit-identical to the serial trainer at 1 and 2 worker
+/// processes. This pins that the overlap plumbing — spec field, writer
+/// scaffolding, prefetch hooks, epilogue struct — is genuinely inert
+/// unless the knob resolves on.
+#[test]
+fn sync_socket_pipeline_with_overlap_declined_stays_bit_identical() {
+    use_cli_worker_bin();
+    let mut base = cfg(8);
+    base.pipeline = true;
+    base.pipeline_overlap = true;
+    base.overrides.overlap = Some(false);
+    assert_sync_pipeline_equivalent(&base, &[1, 2], "unix");
+}
+
+/// The overlapped leader under staleness pressure: lookahead deeper
+/// than `loss_max_age`, so prefetched views classified at *use* time
+/// must land in the requeue path for the run to finish. The counting
+/// contract survives — prefetch moves *when* the counting lookup runs,
+/// never how often — so hits + misses still equals steps exactly.
+#[test]
+fn async_overlap_pipeline_respects_staleness_bound() {
+    let m = manifest();
+    let mut pc = cfg(20);
+    pc.model = "linreg".into();
+    pc.method = Method::MaxProb;
+    pc.lr = 0.01;
+    pc.pipeline = true;
+    pc.pipeline_overlap = true;
+    pc.pipeline_workers = 2;
+    pc.pipeline_depth = 6;
+    pc.loss_max_age = 1;
+    let mut p = PipelineTrainer::with_manifest(&pc, &m).unwrap();
+    assert!(p.options().overlap);
+    let report = p.run().unwrap();
+    assert_eq!(report.steps, 20);
+    assert!(report.final_eval.loss.is_finite());
+    let stats = p.cache_stats();
+    assert_eq!(stats.hits + stats.misses, 20, "one counting lookup per step, overlap or not");
+    assert!(p.budget.inference_forwards >= 20 * m.batch as u64);
+}
+
+/// The overlapped leader over the socket fleet: prefetched lookups
+/// cross the wire under the leader's backward, the per-endpoint writer
+/// threads carry the broadcast, and the run still trains with coherent
+/// accounting. The lookup round trip is measured issue-to-merge, so
+/// the per-step telemetry column must be populated.
+#[test]
+fn async_overlap_socket_pipeline_trains_with_prefetch_telemetry() {
+    use_cli_worker_bin();
+    let m = manifest();
+    let mut pc = cfg(20);
+    pc.model = "linreg".into();
+    pc.method = Method::MaxProb;
+    pc.lr = 0.01;
+    pc.pipeline = true;
+    pc.pipeline_proc = true;
+    pc.pipeline_socket = "unix".into();
+    pc.pipeline_overlap = true;
+    pc.pipeline_workers = 2;
+    pc.pipeline_depth = 3;
+    let mut p = PipelineTrainer::with_manifest(&pc, &m).unwrap();
+    assert!(p.options().overlap);
+    assert!(p.options().transport.is_fleet());
+    let report = p.run().unwrap();
+    assert_eq!(report.steps, 20);
+    assert!(report.final_eval.loss.is_finite());
+    let stats = p.cache_stats();
+    assert_eq!(stats.hits + stats.misses, 20);
+    assert!(p.budget.inference_forwards >= 20 * m.batch as u64);
+    assert!(p.frame_bytes() > 0);
+    assert!(
+        p.recorder.steps.iter().any(|r| r.lookup_rtt_us > 0),
+        "issue-to-merge lookup RTT must reach the per-step telemetry"
+    );
+}
+
+/// Transport-level crash injection under an in-flight prefetch: worker
+/// 1 survives exactly the `ParamUpdate`, then dies on the prefetched
+/// `CacheLookup` fan-out. The supervised restart bumps the epoch, the
+/// parked prefetch is voided (never collected against the wrong
+/// incarnation), and `await_losses` re-issues against the healed fleet
+/// — journal re-warm included, so the routed rows the dead incarnation
+/// lost still answer bit-identically.
+#[test]
+fn worker_death_mid_prefetch_retries_against_the_healed_fleet() {
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    use obftf::coordinator::{FleetSpec, FleetTransport, LinkMode, Transport};
+    use obftf::data::dataset::{Batch, InMemoryDataset};
+    use obftf::data::{Rng, Targets};
+    use obftf::runtime::{Flavour, Session};
+
+    let m = manifest();
+    let batch_size = m.batch;
+    let capacity = batch_size * 2;
+    let mut rng = Rng::seed_from(47);
+    let xs: Vec<f32> = (0..capacity).map(|_| rng.normal() as f32).collect();
+    let ys: Vec<f32> = xs.iter().map(|x| 2.0 * x + 0.5).collect();
+    let ds = InMemoryDataset::new(vec![1], xs, Targets::F32(ys)).unwrap();
+    let ids: Vec<usize> = (0..batch_size).collect();
+    let batch: Arc<Batch> = Arc::new(ds.gather_batch(&ids, batch_size).unwrap());
+    let mut session = Session::new(&m, "linreg", Flavour::Native).unwrap();
+    session.init(5).unwrap();
+    let expect = session.fwd_loss(&batch.x, &batch.y).unwrap();
+
+    let spec = FleetSpec {
+        model: "linreg".into(),
+        flavour: Flavour::Native,
+        workers: 2,
+        capacity,
+        max_age: 4,
+        sync: false,
+        score_precision: ScorePrecision::F32,
+        param_precision: ScorePrecision::F32,
+        worker_bin: Some(env!("CARGO_BIN_EXE_obftf").into()),
+        timeout: Duration::from_secs(60),
+        // worker 1 handles the ParamUpdate, then crashes on the next
+        // frame — which the prefetch below puts on the wire
+        fail_after: vec![None, Some(1)],
+        link: LinkMode::Unix,
+        affinity: true,
+        restart_limit: 2,
+        min_workers: 1,
+        max_entries: 0,
+        overlap: true,
+    };
+    let mut t = FleetTransport::spawn(spec).expect("fleet spawns");
+    t.publish(0, &Arc::new(session.snapshot().unwrap())).unwrap();
+    t.submit(&batch).unwrap();
+    t.prefetch(&batch, 0).expect("prefetch issues");
+    let losses = t.await_losses(&batch, 0).expect("losses arrive after the restart");
+    for (row, (got, want)) in losses.iter().zip(&expect).enumerate() {
+        if batch.valid_mask[row] > 0.0 {
+            assert_eq!(
+                got.to_bits(),
+                want.to_bits(),
+                "row {row}: healed fleet must still score bit-identically"
+            );
+        }
+    }
+    assert_eq!(t.restarts(), 1, "exactly one supervised restart");
+    assert_eq!(t.workers_alive(), 2, "the crashed worker was respawned");
+    assert!(t.lookup_rtt_us() > 0, "the collected lookup stamps its RTT");
+    let summary = t.shutdown().expect("clean shutdown");
+    assert_eq!(summary.restarts, 1);
+    assert_eq!(summary.workers_alive, 2);
+}

@@ -41,6 +41,7 @@ fn spec(workers: usize, capacity: usize, fail_after: Vec<Option<u64>>) -> FleetS
         // tests keep pinning the strict fail-fast surface
         min_workers: workers,
         max_entries: 0,
+        overlap: false,
     }
 }
 

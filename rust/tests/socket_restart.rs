@@ -41,6 +41,7 @@ fn spec(workers: usize, capacity: usize, fail_after: Vec<Option<u64>>) -> FleetS
         restart_limit: 2,
         min_workers: 1,
         max_entries: 0,
+        overlap: false,
     }
 }
 
